@@ -1,0 +1,62 @@
+//! The deployment-shaped path: a wall-clock coordinator serving a stream
+//! of approximate-multiplication requests over a thread pool of workers
+//! with injected straggler delays (paper Fig. 2 as a running service).
+//!
+//! `cargo run --release --example coded_service`
+
+use uepmm::coding::{CodeKind, CodeSpec, WindowPolynomial};
+use uepmm::config::SyntheticSpec;
+use uepmm::coordinator::{run_service, Plan, ServiceConfig};
+use uepmm::latency::LatencyModel;
+use uepmm::rng::Pcg64;
+use uepmm::util::pool::available_parallelism;
+
+fn main() -> anyhow::Result<()> {
+    let spec = SyntheticSpec::fig9_rxc().scaled(10);
+    let mut rng = Pcg64::seed_from(3);
+    let cfg = ServiceConfig {
+        latency: LatencyModel::exp(1.0),
+        omega: spec.omega(),
+        t_max: 1.0,
+        time_scale: 0.01, // 1 virtual time unit = 10 ms wall
+        threads: available_parallelism().min(8),
+    };
+    println!(
+        "coded matmul service: {} workers on {} threads, virtual deadline {}, Ω={:.2}",
+        spec.workers, cfg.threads, cfg.t_max, cfg.omega
+    );
+    let mut total_loss = 0.0;
+    let mut total_recovered = 0usize;
+    const REQUESTS: usize = 8;
+    for req in 0..REQUESTS {
+        let (a, b) = spec.sample_matrices(&mut rng);
+        let code = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
+        let plan = Plan::build_with_classes(
+            &spec.part,
+            code,
+            spec.class_map(),
+            spec.workers,
+            &a,
+            &b,
+            &mut rng,
+        )?;
+        let out = run_service(&plan, &cfg, &mut rng)?;
+        total_loss += out.outcome.normalized_loss;
+        total_recovered += out.outcome.recovered;
+        println!(
+            "req {req}: {:>2} arrivals ({} late) → recovered {}/9, norm-loss {:.4}, wall {:?}",
+            out.outcome.received,
+            out.late,
+            out.outcome.recovered,
+            out.outcome.normalized_loss,
+            out.wall,
+        );
+    }
+    println!(
+        "\nmean normalized loss {:.4}, mean recovery {:.1}/9 — the PS never \
+         waited past its deadline; stragglers were simply cut off.",
+        total_loss / REQUESTS as f64,
+        total_recovered as f64 / REQUESTS as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! The paper's §VI synthetic study, end to end: sweep deadlines for
+//! NOW/EW-UEP/MDS/repetition on both partitioning paradigms and print
+//! loss-vs-time plots next to the Theorem 2/3 predictions.
+//!
+//! `cargo run --release --example synthetic_matmul [-- --full]`
+
+use uepmm::analysis::{mds_loss_vs_time, UepStrategy};
+use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle};
+use uepmm::config::SyntheticSpec;
+use uepmm::experiments::mc_loss_vs_time;
+use uepmm::util::linspace;
+use uepmm::util::plot::{render, Series};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { 1 } else { 6 };
+    let ts = linspace(0.0, 2.0, 21);
+    for (name, spec) in [
+        ("row-times-column", SyntheticSpec::fig9_rxc().scaled(scale)),
+        ("column-times-row", SyntheticSpec::fig9_cxr().scaled(scale)),
+    ] {
+        println!("\n=== {name} (W={}, λ=1, Ω={:.2}) ===", spec.workers, spec.omega());
+        let th = spec.theorem();
+        let mut series = Vec::new();
+        for (label, kind) in [
+            ("now-uep", CodeKind::NowUep(spec.gamma.clone())),
+            ("ew-uep", CodeKind::EwUep(spec.gamma.clone())),
+            ("mds", CodeKind::Mds),
+            ("repetition", CodeKind::Repetition),
+        ] {
+            let code = CodeSpec::new(kind, EncodeStyle::Stacked);
+            let losses = mc_loss_vs_time(&spec, &code, &ts, 2, 150, 7, 4);
+            series.push(Series::new(label, ts.clone(), losses));
+        }
+        println!("{}", render("normalized loss vs deadline", &series, 64, 16));
+        // analytic reference at a few points
+        println!("analytic checks (Theorem 2/3 & closed forms):");
+        for &t in &[0.5, 1.0, 2.0] {
+            println!(
+                "  t={t}: Thm NOW {:.3}  Thm EW {:.3}  MDS {:.3}",
+                th.normalized_loss(UepStrategy::Now, t).min(9.0),
+                th.normalized_loss(UepStrategy::Ew, t).min(9.0),
+                mds_loss_vs_time(9, spec.workers, &spec.latency, spec.omega(), t),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.json.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+HLO text through `HloModuleProto::from_text_file` and executes it on the
+PJRT CPU client. Interchange is HLO *text*, NOT `.serialize()` — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact inventory (DESIGN.md section 6):
+  * block_matmul_MxKxN    — coded worker products (quickstart geometry:
+    stacked windows k=1..9 over U=Q=64, H=32) + the six MNIST
+    back-propagation shapes of Table VI;
+  * uep_encode_KxUxH      — PS-side encode kernel;
+  * worker_product_*      — fused rank-one job (eq. 17);
+  * mlp_step / mlp_logits — the full MNIST training-step and inference
+    graphs (centralized reference path).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.block_matmul import block_matmul
+from .kernels.uep_encode import uep_encode
+
+# Quickstart coded-matmul geometry: r x c with N=P=3, U=Q=64, H=32.
+QS_U, QS_H, QS_Q = 64, 32, 64
+QS_MAX_K = 9
+
+# MNIST back-propagation matmul shapes (Table VI): (m, k, n).
+MNIST_MM_SHAPES = [
+    # G_i = G_{i+1} V_i^T
+    (64, 10, 200),
+    (64, 200, 100),
+    (64, 100, 784),
+    # V_i^* = X_i^T G_{i+1}
+    (784, 64, 100),
+    (100, 64, 200),
+    (200, 64, 10),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def tensor_entry(s):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, kind: str, fn, in_specs, n_outputs: int, out_specs=None):
+        """Lower `fn` at `in_specs`, write HLO text, record manifest entry."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        if out_specs is None:
+            out_shapes = jax.eval_shape(fn, *in_specs)
+            if not isinstance(out_shapes, (tuple, list)):
+                out_shapes = (out_shapes,)
+            out_specs = list(out_shapes)
+        assert len(out_specs) == n_outputs, f"{name}: output arity mismatch"
+        self.entries.append(
+            {
+                "name": name,
+                "path": path,
+                "kind": kind,
+                "inputs": [tensor_entry(s) for s in in_specs],
+                "outputs": [tensor_entry(s) for s in out_specs],
+            }
+        )
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    def finish(self):
+        manifest = {"version": 1, "artifacts": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.entries)} artifacts -> {self.out_dir}/manifest.json")
+
+
+def matmul_fn(x, y):
+    return (block_matmul(x, y),)
+
+
+def encode_fn(c, blocks):
+    return (uep_encode(c, blocks),)
+
+
+def worker_product_fn(ca, ab, cb, bb):
+    return (model.worker_product(ca, ab, cb, bb),)
+
+
+def build(out_dir: str, quick: bool = False):
+    b = Builder(out_dir)
+    # --- coded worker products: quickstart geometry, stacked k = 1..9 ---
+    max_k = 3 if quick else QS_MAX_K
+    for k in range(1, max_k + 1):
+        m, kk, n = QS_U, k * QS_H, QS_Q
+        b.add(
+            f"block_matmul_{m}x{kk}x{n}",
+            "matmul",
+            matmul_fn,
+            [spec(m, kk), spec(kk, n)],
+            1,
+        )
+    # --- MNIST back-propagation shapes (Table VI) ---
+    if not quick:
+        for m, kk, n in MNIST_MM_SHAPES:
+            b.add(
+                f"block_matmul_{m}x{kk}x{n}",
+                "matmul",
+                matmul_fn,
+                [spec(m, kk), spec(kk, n)],
+                1,
+            )
+    # --- PS-side encode kernel ---
+    b.add(
+        f"uep_encode_3x{QS_U}x{QS_H}",
+        "uep_encode",
+        encode_fn,
+        [spec(3), spec(3, QS_U, QS_H)],
+        1,
+    )
+    # --- fused rank-one worker job (eq. 17) ---
+    b.add(
+        f"worker_product_{QS_U}x{QS_H}x{QS_Q}_k3",
+        "worker_product",
+        worker_product_fn,
+        [spec(3), spec(3, QS_U, QS_H), spec(3), spec(3, QS_H, QS_Q)],
+        1,
+    )
+    # --- MNIST MLP training step + inference ---
+    if not quick:
+        d = model.MLP_DIMS
+        bsz = model.BATCH
+        param_specs = []
+        for i in range(3):
+            param_specs += [spec(d[i], d[i + 1]), spec(d[i + 1])]
+        b.add(
+            "mlp_step",
+            "mlp_step",
+            model.mlp_step,
+            param_specs + [spec(bsz, d[0]), spec(bsz, d[3])],
+            7,
+            out_specs=[spec()]
+            + [s for i in range(3) for s in (spec(d[i], d[i + 1]), spec(d[i + 1]))],
+        )
+        b.add(
+            "mlp_logits",
+            "mlp_logits",
+            model.mlp_logits,
+            param_specs + [spec(bsz, d[0])],
+            1,
+        )
+    b.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="small artifact set (CI smoke)"
+    )
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

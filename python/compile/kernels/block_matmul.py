@@ -1,0 +1,90 @@
+"""Tiled block-matmul Pallas kernel — the worker's compute hot-spot.
+
+A coded worker job is one dense product `W_A (U x kH) @ W_B (kH x Q)`
+(paper eqs. 5-6; the `Stacked` encoding concatenates `k` sub-blocks along
+the inner dimension). On TPU this kernel tiles the operands into
+MXU-shaped VMEM blocks; `BlockSpec` below expresses exactly that
+HBM->VMEM schedule. The contraction (K) axis is the innermost grid
+dimension, so the output tile stays resident while partial products
+accumulate into it — the standard Pallas matmul schedule.
+
+VMEM budget per grid step (f32):
+    tile_m*tile_k + tile_k*tile_n + tile_m*tile_n floats
+= 192 KiB with the default 128x128x128 tiles, comfortably inside a
+TPUv4 core's 16 MiB VMEM with room for double buffering. See
+DESIGN.md section "Hardware adaptation" and EXPERIMENTS.md section Perf
+for the tile sweep.
+
+`interpret=True`: the CPU PJRT plugin cannot run Mosaic custom-calls;
+interpret mode lowers the same schedule to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of `dim` not exceeding `target`.
+
+    Keeps every shape legal without padding; MXU-friendly shapes
+    (multiples of 128) get full-size tiles.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j].
+
+    The output tile is f32 regardless of operand dtype, so partial sums
+    accumulate at full precision across the K grid steps (the MXU's
+    native behaviour for bf16 inputs).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def block_matmul(x, y, *, tile_m: int = 128, tile_n: int = 128, tile_k: int = 128):
+    """`x @ y` via a Pallas kernel tiled for VMEM/MXU.
+
+    Tiles are clipped to the largest divisors of the operand dims not
+    exceeding the requested sizes, so any shape works without padding.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    tm = pick_tile(m, tile_m)
+    tn = pick_tile(n, tile_n)
+    tk = pick_tile(k, tile_k)
+    grid = (m // tm, n // tn, k // tk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out.astype(x.dtype)
+
+
+def vmem_bytes(tile_m: int, tile_n: int, tile_k: int, dtype_bytes: int = 4) -> int:
+    """Per-step VMEM footprint of the schedule (for the perf tables)."""
+    return dtype_bytes * (tile_m * tile_k + tile_k * tile_n + tile_m * tile_n)

@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but `jax.numpy`; pytest (python/tests/) asserts allclose
+between kernel and oracle across shape/dtype sweeps. These oracles are
+also what the L2 model would compute without the kernels, so they double
+as the roofline baseline for the perf comparison.
+"""
+
+import jax.numpy as jnp
+
+
+def block_matmul_ref(x, y):
+    """Oracle for `kernels.block_matmul`."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def uep_encode_ref(coeffs, blocks):
+    """Oracle for `kernels.uep_encode`: sum_i coeffs[i] * blocks[i]."""
+    return jnp.einsum(
+        "k,kuh->uh", coeffs.astype(jnp.float32), blocks.astype(jnp.float32)
+    ).astype(blocks.dtype)
+
+
+def worker_product_ref(a_coeffs, a_blocks, b_coeffs, b_blocks):
+    """Oracle for the fused rank-one worker job (paper eq. 17):
+    `(sum_i alpha_i A_i) @ (sum_j beta_j B_j)`."""
+    wa = uep_encode_ref(a_coeffs, a_blocks)
+    wb = uep_encode_ref(b_coeffs, b_blocks)
+    return block_matmul_ref(wa, wb)

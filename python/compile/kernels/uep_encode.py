@@ -1,0 +1,53 @@
+"""UEP encoding Pallas kernel: coefficient-weighted block reduction.
+
+The PS-side encode step of paper eq. (17): given `k` stacked sub-blocks
+`A_1..A_k` (shape `(k, U, H)`) and RLC coefficients `c (k,)`, produce
+`W = sum_i c_i A_i`.
+
+This is memory-bound (one multiply-add per element), so the schedule
+streams one `(TU, TH)` tile of every block per grid step and reduces over
+the leading axis in-register; only the running output tile lives in VMEM.
+On TPU the coefficient vector would sit in SMEM — here it rides along as
+a tiny VMEM block (interpret mode has no SMEM distinction).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .block_matmul import pick_tile
+
+
+def _encode_kernel(coeff_ref, blocks_ref, o_ref):
+    # blocks_ref: (k, TU, TH); coeff_ref: (k,)
+    c = coeff_ref[...]
+    o_ref[...] = jnp.einsum(
+        "k,kuh->uh", c.astype(jnp.float32), blocks_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def uep_encode(coeffs, blocks, *, tile_u: int = 256, tile_h: int = 256):
+    """`sum_i coeffs[i] * blocks[i]` via a Pallas kernel.
+
+    Args:
+        coeffs: `(k,)` RLC coefficients.
+        blocks: `(k, U, H)` stacked sub-blocks.
+    Returns:
+        `(U, H)` encoded matrix.
+    """
+    k, u, h = blocks.shape
+    assert coeffs.shape == (k,), f"coeffs {coeffs.shape} vs blocks {blocks.shape}"
+    tu = pick_tile(u, tile_u)
+    th = pick_tile(h, tile_h)
+    grid = (u // tu, h // th)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+            pl.BlockSpec((k, tu, th), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((tu, th), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, h), blocks.dtype),
+        interpret=True,
+    )(coeffs, blocks)

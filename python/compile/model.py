@@ -1,0 +1,140 @@
+"""Layer-2 JAX model (build-time only): the paper's compute graphs.
+
+Two families of graphs, all calling the L1 Pallas kernels:
+
+* Worker jobs — the coded products the PS ships to workers:
+  - `stacked_job`: one dense `W_A @ W_B` product (the Stacked encoding
+    builds the factors on the Rust side, so the artifact is a plain
+    block-matmul at the job's shape);
+  - `worker_product`: the fused rank-one job of paper eq. (17):
+    encode(A blocks) @ encode(B blocks).
+
+* The MNIST-style MLP of paper section VII-A (784-100-200-10, Table VI)
+  with *manual* back-propagation written exactly as the paper's eqs.
+  (32)-(33) — `G_i = G_{i+1} V_i^T` and `V_i^* = X_i^T G_{i+1}` — so the
+  distributed matmuls in the Rust training loop correspond one-to-one to
+  matmuls in this graph. Verified against `jax.grad` in pytest.
+
+Everything here is lowered once by `aot.py`; nothing imports this at
+request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.block_matmul import block_matmul
+from .kernels.uep_encode import uep_encode
+
+# ---------------------------------------------------------------------------
+# Worker jobs
+# ---------------------------------------------------------------------------
+
+
+def stacked_job(wa, wb):
+    """A stacked coded product: one dense matmul at the job shape."""
+    return block_matmul(wa, wb)
+
+
+def worker_product(a_coeffs, a_blocks, b_coeffs, b_blocks):
+    """The fused rank-one worker job of paper eq. (17)."""
+    wa = uep_encode(a_coeffs, a_blocks)
+    wb = uep_encode(b_coeffs, b_blocks)
+    return block_matmul(wa, wb)
+
+
+# ---------------------------------------------------------------------------
+# MNIST MLP (paper section VII-A, Fig. 12, Table VI)
+# ---------------------------------------------------------------------------
+
+#: Layer widths of the MNIST model: 784 -> 100 -> 200 -> 10.
+MLP_DIMS = (784, 100, 200, 10)
+#: Mini-batch size (Table IV).
+BATCH = 64
+
+
+def mlp_param_shapes(dims=MLP_DIMS):
+    """[(weight shape, bias shape)] per dense layer."""
+    return [((dims[i], dims[i + 1]), (dims[i + 1],)) for i in range(len(dims) - 1)]
+
+
+def mlp_forward(params, x):
+    """Forward pass; returns (logits, activations per layer input).
+
+    `activations[i]` is X_i, the input of dense layer i — the matrices
+    the paper's eq. (33) multiplies.
+    """
+    activations = [x]
+    h = x
+    n_layers = len(params)
+    for i, (v, b) in enumerate(params):
+        h = block_matmul(h, v) + b
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+        activations.append(h)
+    return h, activations
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean categorical cross-entropy."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_backward(params, activations, logits, y_onehot):
+    """Manual back-propagation, paper eqs. (32)-(33).
+
+    Returns (weight grads, bias grads), each a list per layer. Every
+    matmul goes through the Pallas kernel — these are exactly the
+    products the Rust coordinator distributes to coded workers.
+    """
+    batch = logits.shape[0]
+    # dL/dlogits for mean softmax cross-entropy
+    g = (jax.nn.softmax(logits) - y_onehot) / batch  # G_{I+1}
+    weight_grads = []
+    bias_grads = []
+    for i in reversed(range(len(params))):
+        v, _b = params[i]
+        x_i = activations[i]
+        # eq. (33): V_i^* = X_i^T G_{i+1}
+        weight_grads.append(block_matmul(x_i.T, g))
+        bias_grads.append(jnp.sum(g, axis=0))
+        if i > 0:
+            # eq. (32): G_i = G_{i+1} V_i^T ...
+            g = block_matmul(g, v.T)
+            # ... masked by the ReLU derivative of layer i's input
+            g = g * (activations[i] > 0).astype(g.dtype)
+    weight_grads.reverse()
+    bias_grads.reverse()
+    return weight_grads, bias_grads
+
+
+def mlp_step(v1, b1, v2, b2, v3, b3, x, y_onehot):
+    """One full training step's compute: loss + all gradients.
+
+    Flat-argument signature so the AOT artifact has a stable ABI for the
+    Rust runtime: inputs (V1,b1,V2,b2,V3,b3,X,Y), outputs
+    (loss, dV1,db1,dV2,db2,dV3,db3).
+    """
+    params = [(v1, b1), (v2, b2), (v3, b3)]
+    logits, acts = mlp_forward(params, x)
+    loss = softmax_xent(logits, y_onehot)
+    wg, bg = mlp_backward(params, acts, logits, y_onehot)
+    return (loss, wg[0], bg[0], wg[1], bg[1], wg[2], bg[2])
+
+
+def mlp_logits(v1, b1, v2, b2, v3, b3, x):
+    """Inference-only graph (accuracy evaluation)."""
+    logits, _ = mlp_forward([(v1, b1), (v2, b2), (v3, b3)], x)
+    return (logits,)
+
+
+def mlp_loss_for_grad(v1, b1, v2, b2, v3, b3, x, y_onehot):
+    """Same loss built from plain jnp ops — the autodiff oracle used by
+    pytest to validate the manual backward pass."""
+    h = x
+    params = [(v1, b1), (v2, b2), (v3, b3)]
+    for i, (v, b) in enumerate(params):
+        h = h @ v + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return softmax_xent(h, y_onehot)

@@ -1,0 +1,53 @@
+"""AOT path smoke: lowering produces parseable HLO text and a manifest
+consistent with the contract the Rust runtime parses (runtime/manifest.rs)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), quick=True)
+    return str(out)
+
+
+def test_manifest_structure(artifact_dir):
+    with open(os.path.join(artifact_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) >= 5  # 3 matmuls + encode + worker_product (quick set)
+    names = {a["name"] for a in arts}
+    assert "block_matmul_64x32x64" in names
+    assert "block_matmul_64x96x64" in names
+    assert f"uep_encode_3x{aot.QS_U}x{aot.QS_H}" in names
+    for a in arts:
+        assert os.path.exists(os.path.join(artifact_dir, a["path"]))
+        for t in a["inputs"] + a["outputs"]:
+            assert t["dtype"] == "f32"
+            assert all(isinstance(d, int) and d > 0 for d in t["shape"])
+
+
+def test_hlo_text_is_hlo(artifact_dir):
+    path = os.path.join(artifact_dir, "block_matmul_64x32x64.hlo.txt")
+    text = open(path).read()
+    # HLO text starts with the module header and declares an ENTRY
+    assert text.lstrip().startswith("HloModule")
+    assert "ENTRY" in text
+    # lowered with return_tuple=True: the root is a tuple
+    assert "tuple" in text
+
+
+def test_matmul_artifact_shapes_recorded(artifact_dir):
+    with open(os.path.join(artifact_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    e = next(a for a in manifest["artifacts"] if a["name"] == "block_matmul_64x64x64")
+    assert e["kind"] == "matmul"
+    assert e["inputs"][0]["shape"] == [64, 64]
+    assert e["inputs"][1]["shape"] == [64, 64]
+    assert e["outputs"][0]["shape"] == [64, 64]

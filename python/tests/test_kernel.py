@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes and tile sizes; the kernels must match
+`ref.py` to float tolerance on every draw. This is the core correctness
+signal for the compute layer (DESIGN.md section 7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_matmul import block_matmul
+from compile.kernels.uep_encode import uep_encode
+from compile.kernels.block_matmul import pick_tile, vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# block_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    tile=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, tile, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = _rand(k1, (m, k), jnp.float32)
+    y = _rand(k2, (k, n), jnp.float32)
+    got = block_matmul(x, y, tile_m=tile, tile_n=tile, tile_k=tile)
+    want = ref.block_matmul_ref(x, y)
+    np.testing.assert_allclose(np.array(got), np.array(want), **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    x = _rand(k1, (64, 96), dtype)
+    y = _rand(k2, (96, 64), dtype)
+    got = block_matmul(x, y, tile_m=32, tile_n=32, tile_k=32)
+    assert got.dtype == dtype
+    want = ref.block_matmul_ref(x, y)
+    np.testing.assert_allclose(
+        np.array(got, np.float32), np.array(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [
+        (1, 1, 1),  # degenerate
+        (64, 288, 64),  # quickstart stacked k=9 (9 * 32)
+        (64, 100, 784),  # MNIST G_1 (Table VI)
+        (784, 64, 100),  # MNIST V_1^* (Table VI)
+        (17, 13, 29),  # primes: tiles clip to 1 on some axes
+    ],
+)
+def test_matmul_paper_and_edge_shapes(shape):
+    m, k, n = shape
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    x = _rand(k1, (m, k), jnp.float32)
+    y = _rand(k2, (k, n), jnp.float32)
+    got = block_matmul(x, y)
+    np.testing.assert_allclose(
+        np.array(got), np.array(ref.block_matmul_ref(x, y)), **_tol(jnp.float32)
+    )
+
+
+def test_matmul_rejects_mismatched_inner_dims():
+    x = jnp.zeros((4, 5))
+    y = jnp.zeros((6, 4))
+    with pytest.raises(AssertionError):
+        block_matmul(x, y)
+
+
+def test_pick_tile_divides():
+    for dim in [1, 7, 64, 96, 100, 288, 784]:
+        for target in [8, 32, 128]:
+            t = pick_tile(dim, target)
+            assert dim % t == 0 and t <= max(dim, target)
+
+
+def test_vmem_budget_of_default_schedule():
+    # default 128^3 tiles: 3 * 128*128 * 4 bytes = 192 KiB << 16 MiB VMEM
+    assert vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# uep_encode
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 6),
+    u=st.integers(1, 64),
+    h=st.integers(1, 64),
+    tile=st.sampled_from([8, 32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_matches_ref_random(k, u, h, tile, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    coeffs = _rand(k1, (k,), jnp.float32)
+    blocks = _rand(k2, (k, u, h), jnp.float32)
+    got = uep_encode(coeffs, blocks, tile_u=tile, tile_h=tile)
+    want = ref.uep_encode_ref(coeffs, blocks)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+def test_encode_linearity():
+    # encode(c1 + c2) == encode(c1) + encode(c2) — the property RLC
+    # decoding relies on.
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    blocks = _rand(k1, (4, 32, 16), jnp.float32)
+    c1 = _rand(k2, (4,), jnp.float32)
+    c2 = _rand(k3, (4,), jnp.float32)
+    lhs = uep_encode(c1 + c2, blocks)
+    rhs = uep_encode(c1, blocks) + uep_encode(c2, blocks)
+    np.testing.assert_allclose(np.array(lhs), np.array(rhs), rtol=1e-4, atol=1e-4)
+
+
+def test_encode_unit_coefficient_selects_block():
+    key = jax.random.PRNGKey(4)
+    blocks = _rand(key, (3, 8, 8), jnp.float32)
+    c = jnp.array([0.0, 1.0, 0.0], jnp.float32)
+    got = uep_encode(c, blocks)
+    np.testing.assert_allclose(np.array(got), np.array(blocks[1]), rtol=1e-6)

@@ -1,0 +1,101 @@
+"""L2 correctness: the manual-backprop MLP graph vs jax autodiff, and the
+fused worker job vs its oracle composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _init_params(key, dims):
+    params = []
+    flat = []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        v = jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32) * 0.1
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((v, b))
+        flat += [v, b]
+    return params, flat
+
+
+def _batch(key, dims, batch=8):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (batch, dims[0]), jnp.float32)
+    labels = jax.random.randint(k2, (batch,), 0, dims[-1])
+    y = jax.nn.one_hot(labels, dims[-1], dtype=jnp.float32)
+    return x, y
+
+
+def test_manual_backprop_matches_autodiff_small():
+    dims = (12, 8, 6, 4)
+    params, flat = _init_params(jax.random.PRNGKey(0), dims)
+    x, y = _batch(jax.random.PRNGKey(1), dims)
+    loss, dv1, db1, dv2, db2, dv3, db3 = model.mlp_step(*flat, x, y)
+    # autodiff oracle on the plain-jnp loss
+    loss_ref = model.mlp_loss_for_grad(*flat, x, y)
+    np.testing.assert_allclose(float(loss), float(loss_ref), rtol=1e-5)
+    grads = jax.grad(model.mlp_loss_for_grad, argnums=(0, 1, 2, 3, 4, 5))(*flat, x, y)
+    for got, want in zip([dv1, db1, dv2, db2, dv3, db3], grads):
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 16))
+def test_manual_backprop_matches_autodiff_random(seed, batch):
+    dims = (10, 7, 5, 3)
+    params, flat = _init_params(jax.random.PRNGKey(seed), dims)
+    x, y = _batch(jax.random.PRNGKey(seed + 1), dims, batch)
+    outs = model.mlp_step(*flat, x, y)
+    grads = jax.grad(model.mlp_loss_for_grad, argnums=(0, 1, 2, 3, 4, 5))(*flat, x, y)
+    for got, want in zip(outs[1:], grads):
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-4)
+
+
+def test_mlp_paper_shapes():
+    """Table VI ABI: the artifact signature the Rust runtime loads."""
+    dims = model.MLP_DIMS
+    params, flat = _init_params(jax.random.PRNGKey(2), dims)
+    x, y = _batch(jax.random.PRNGKey(3), dims, model.BATCH)
+    outs = model.mlp_step(*flat, x, y)
+    assert outs[0].shape == ()
+    assert outs[1].shape == (784, 100) and outs[2].shape == (100,)
+    assert outs[3].shape == (100, 200) and outs[4].shape == (200,)
+    assert outs[5].shape == (200, 10) and outs[6].shape == (10,)
+    (logits,) = model.mlp_logits(*flat, x)
+    assert logits.shape == (model.BATCH, 10)
+
+
+def test_worker_product_matches_oracle():
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ca = jax.random.normal(k1, (3,), jnp.float32)
+    ab = jax.random.normal(k2, (3, 16, 8), jnp.float32)
+    cb = jax.random.normal(k3, (3,), jnp.float32)
+    bb = jax.random.normal(k4, (3, 8, 16), jnp.float32)
+    got = model.worker_product(ca, ab, cb, bb)
+    want = ref.worker_product_ref(ca, ab, cb, bb)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_worker_product_linearity_in_payload():
+    """The identity the Stacked decoder relies on: the fused job equals
+    the Khatri-Rao combination of individual sub-products."""
+    key = jax.random.PRNGKey(6)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ca = jax.random.normal(k1, (2,), jnp.float32)
+    ab = jax.random.normal(k2, (2, 8, 4), jnp.float32)
+    cb = jax.random.normal(k3, (2,), jnp.float32)
+    bb = jax.random.normal(k4, (2, 4, 8), jnp.float32)
+    got = model.worker_product(ca, ab, cb, bb)
+    want = sum(
+        float(ca[i]) * float(cb[j]) * (ab[i] @ bb[j])
+        for i in range(2)
+        for j in range(2)
+    )
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,384 @@
+//! Benchmark harness (`cargo bench [-- <filter>]`).
+//!
+//! Criterion is not available offline, so this is a self-contained
+//! harness: adaptive iteration counts, warmup, median/MAD over samples,
+//! one bench per paper table/figure pipeline plus the system hot paths
+//! (encode, decode, matmul, coordinator, PJRT artifact execution).
+//! Results are printed as a table and appended to `results/bench.csv`.
+
+use std::time::{Duration, Instant};
+
+use uepmm::coding::{CodeKind, CodeSpec, DecodeState, EncodeStyle, UnknownSpace};
+use uepmm::config::SyntheticSpec;
+use uepmm::coordinator::{build_job_matrices, Coordinator, Plan};
+use uepmm::data::synthetic_digits;
+use uepmm::experiments::mc_loss_vs_time;
+use uepmm::latency::LatencyModel;
+use uepmm::linalg::{matmul_naive, matmul_with, Matrix, MatmulOpts};
+use uepmm::nn::{
+    CodedMatmulCfg, DistributedMatmul, MatmulStrategy, Mlp, TauSchedule,
+};
+use uepmm::partition::Paradigm;
+use uepmm::rng::Pcg64;
+use uepmm::runtime::{ExecEngine, NativeEngine, PjrtEngine};
+use uepmm::sim::StragglerSim;
+use uepmm::util::csv::CsvTable;
+
+/// One benchmark result.
+struct BenchResult {
+    name: String,
+    median: Duration,
+    mad: Duration,
+    samples: usize,
+    iters_per_sample: usize,
+}
+
+struct Harness {
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    fn new() -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--") && !a.is_empty());
+        Harness { filter, results: Vec::new() }
+    }
+
+    /// Time `f`, autoscaling iterations to ~25 ms per sample, 9 samples.
+    fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let target = Duration::from_millis(25);
+        let iters = (target.as_nanos() / once.as_nanos()).clamp(1, 100_000) as usize;
+        let samples = 9;
+        let mut times: Vec<Duration> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed() / iters as u32);
+        }
+        times.sort();
+        let median = times[samples / 2];
+        let mad = {
+            let mut devs: Vec<Duration> = times
+                .iter()
+                .map(|&t| if t > median { t - median } else { median - t })
+                .collect();
+            devs.sort();
+            devs[samples / 2]
+        };
+        println!(
+            "{name:<52} {:>12} ±{:>10}  ({} iters × {} samples)",
+            fmt_dur(median),
+            fmt_dur(mad),
+            iters,
+            samples
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            median,
+            mad,
+            samples,
+            iters_per_sample: iters,
+        });
+    }
+
+    fn write_csv(&self) {
+        let mut t = CsvTable::new(&["bench", "median_ns", "mad_ns", "iters", "samples"]);
+        for r in &self.results {
+            t.push_raw(vec![
+                r.name.clone(),
+                r.median.as_nanos().to_string(),
+                r.mad.as_nanos().to_string(),
+                r.iters_per_sample.to_string(),
+                r.samples.to_string(),
+            ]);
+        }
+        if let Err(e) = t.write("results/bench.csv") {
+            eprintln!("could not write results/bench.csv: {e}");
+        } else {
+            println!("\nwrote results/bench.csv ({} rows)", self.results.len());
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+fn main() {
+    let mut h = Harness::new();
+    println!("uepmm bench harness — one bench per paper figure pipeline + hot paths\n");
+
+    // ---------------- L3 hot paths ------------------------------------
+    let mut rng = Pcg64::seed_from(1);
+    let spec_rxc = SyntheticSpec::fig9_rxc().scaled(6);
+    let spec_cxr = SyntheticSpec::fig9_cxr().scaled(6);
+    let cm = spec_rxc.class_map();
+    let (a, b) = spec_rxc.sample_matrices(&mut rng);
+    let gram = spec_rxc.part.gram(&spec_rxc.part.true_products(&a, &b));
+    let ew = CodeSpec::stacked(CodeKind::EwUep(spec_rxc.gamma.clone()));
+    let now_r1 =
+        CodeSpec::new(CodeKind::NowUep(spec_rxc.gamma.clone()), EncodeStyle::RankOne);
+
+    {
+        let mut r = rng.split();
+        h.bench("hot/encode: 30 EW-UEP packets (stacked)", || {
+            let pkts = ew.generate_packets(&spec_rxc.part, &cm, 30, &mut r);
+            std::hint::black_box(&pkts);
+        });
+    }
+    {
+        let mut r = rng.split();
+        let pkts = ew.generate_packets(&spec_rxc.part, &cm, 30, &mut r);
+        let space = UnknownSpace::for_code(&spec_rxc.part, EncodeStyle::Stacked);
+        h.bench("hot/decode: absorb 30 stacked packets (RREF)", || {
+            let mut st = DecodeState::new(space.clone());
+            for p in &pkts {
+                st.add_packet(p, None);
+            }
+            std::hint::black_box(st.num_recovered());
+        });
+    }
+    {
+        let mut r = rng.split();
+        let pkts = now_r1.generate_packets(&spec_cxr.part, &spec_cxr.class_map(), 30, &mut r);
+        let space = UnknownSpace::for_code(&spec_cxr.part, EncodeStyle::RankOne);
+        h.bench("hot/decode: absorb 30 rank-one cxr packets (81 unk)", || {
+            let mut st = DecodeState::new(space.clone());
+            for p in &pkts {
+                st.add_packet(p, None);
+            }
+            std::hint::black_box(st.num_recovered());
+        });
+    }
+    {
+        let mask = vec![false; 9];
+        h.bench("hot/loss_from_gram (9 blocks)", || {
+            std::hint::black_box(spec_rxc.part.loss_from_gram(&gram, &mask));
+        });
+    }
+    {
+        let sim = StragglerSim::new(30, LatencyModel::exp(1.0), 0.3);
+        let mut r = rng.split();
+        h.bench("hot/straggler arrivals (30 workers)", || {
+            std::hint::black_box(sim.sample_arrivals(&mut r));
+        });
+    }
+
+    // ---------------- matmul tiers (native engine) ---------------------
+    for &(m, k, n) in &[(64usize, 288usize, 64usize), (300, 900, 300)] {
+        let a = Matrix::randn(m, k, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 0.0, 1.0, &mut rng);
+        if m * k * n <= 64 * 288 * 64 {
+            h.bench(&format!("matmul/naive {m}x{k}x{n}"), || {
+                std::hint::black_box(matmul_naive(&a, &b));
+            });
+        }
+        h.bench(&format!("matmul/blocked-1t {m}x{k}x{n}"), || {
+            std::hint::black_box(matmul_with(
+                &a,
+                &b,
+                MatmulOpts { threads: 1, naive_below: 0, ..Default::default() },
+            ));
+        });
+        h.bench(&format!("matmul/parallel {m}x{k}x{n}"), || {
+            std::hint::black_box(matmul_with(
+                &a,
+                &b,
+                MatmulOpts { naive_below: 0, ..Default::default() },
+            ));
+        });
+    }
+
+    // ---------------- worker job + coordinator end-to-end --------------
+    {
+        let mut r = rng.split();
+        let plan = Plan::build_with_classes(
+            &spec_rxc.part,
+            ew.clone(),
+            cm.clone(),
+            15,
+            &a,
+            &b,
+            &mut r,
+        )
+        .unwrap();
+        let engine = NativeEngine::default();
+        h.bench("job/build+execute one stacked worker product", || {
+            let (wa, wb) = build_job_matrices(
+                &plan.part,
+                &plan.a_blocks,
+                &plan.b_blocks,
+                &plan.packets[0].recipe,
+            );
+            std::hint::black_box(engine.matmul(&wa, &wb).unwrap());
+        });
+        let coord = Coordinator::new(NativeEngine::default());
+        let arrivals: Vec<f64> = (0..15).map(|i| i as f64 * 0.1).collect();
+        h.bench("coordinator/run 15 workers to T_max (native)", || {
+            std::hint::black_box(coord.run(&plan, &arrivals, 0.8).unwrap());
+        });
+    }
+
+    // ---------------- PJRT artifact execution (L1/L2 path) -------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = PjrtEngine::from_artifacts("artifacts").unwrap();
+        let qa = Matrix::randn(64, 96, 0.0, 1.0, &mut rng);
+        let qb = Matrix::randn(96, 64, 0.0, 1.0, &mut rng);
+        // compile once outside the timer
+        engine.matmul(&qa, &qb).unwrap();
+        h.bench("pjrt/block_matmul 64x96x64 (compiled Pallas)", || {
+            std::hint::black_box(engine.matmul(&qa, &qb).unwrap());
+        });
+        let native = NativeEngine::default();
+        h.bench("pjrt-vs-native/native 64x96x64", || {
+            std::hint::black_box(native.matmul(&qa, &qb).unwrap());
+        });
+    } else {
+        println!("(skipping pjrt benches — run `make artifacts`)");
+    }
+
+    // ---------------- per-figure pipelines -----------------------------
+    {
+        // Fig. 8: full analytic sweep (NOW + EW, 3 classes, N = 0..30)
+        let gamma = [0.4, 0.35, 0.25];
+        let k = [3usize, 3, 3];
+        h.bench("fig8/analytic decode-prob sweep (N=0..30)", || {
+            let mut acc = 0.0;
+            for n in 0..=30usize {
+                for l in 0..3 {
+                    acc += uepmm::analysis::now_decode_prob(n, &gamma, &k, l);
+                    acc += uepmm::analysis::ew_decode_prob(n, &gamma, &k, l);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+    }
+    {
+        // Fig. 9/10/11 unit of work: one Monte-Carlo trial
+        let mut r = rng.split();
+        let sim = StragglerSim::new(30, spec_rxc.latency.clone(), spec_rxc.omega());
+        h.bench("fig9-11/one MC trial (packets+arrivals+decode+loss)", || {
+            let pkts = ew.generate_packets(&spec_rxc.part, &cm, 30, &mut r);
+            let arrivals = sim.sample_arrivals(&mut r);
+            let trace = uepmm::sim::loss_trace_packets(
+                &spec_rxc.part,
+                &ew,
+                &gram,
+                &pkts,
+                &arrivals,
+            );
+            std::hint::black_box(uepmm::sim::loss_at(&trace, 1.0));
+        });
+        let ts41: Vec<f64> = (0..41).map(|i| i as f64 / 20.0).collect();
+        h.bench("fig9/analytic Theorem-2 curve (41 points)", || {
+            let th = spec_rxc.theorem();
+            std::hint::black_box(
+                th.normalized_loss_curve(uepmm::analysis::UepStrategy::Now, &ts41),
+            );
+        });
+    }
+    {
+        // Figs. 13-15 unit of work: one coded MLP training step
+        let mut r = Pcg64::seed_from(33);
+        let train = synthetic_digits(128, 11, &mut r);
+        let mut mlp = Mlp::mnist(&mut r);
+        let idx: Vec<usize> = (0..64).collect();
+        let (x, y) = train.batch(&idx);
+        let tau = TauSchedule::paper(3);
+        for (name, paradigm, blocks) in [
+            ("fig13/coded MLP step (rxc)", Paradigm::RowTimesCol, 3usize),
+            ("fig14/coded MLP step (cxr)", Paradigm::ColTimesRow, 9),
+        ] {
+            let mut engine = DistributedMatmul::new(
+                MatmulStrategy::Coded(CodedMatmulCfg {
+                    paradigm,
+                    blocks,
+                    spec: CodeSpec::stacked(CodeKind::EwUep(
+                        spec_rxc.gamma.clone(),
+                    )),
+                    workers: 15,
+                    latency: LatencyModel::exp(0.5),
+                    auto_omega: true,
+                    t_max: 1.0,
+                    s_levels: 3,
+                }),
+                Pcg64::seed_from(5),
+            );
+            h.bench(name, || {
+                std::hint::black_box(mlp.train_step(&x, &y, 0.05, &mut engine, &tau, 0));
+            });
+        }
+        let mut exact = DistributedMatmul::new(MatmulStrategy::Exact, Pcg64::seed_from(6));
+        h.bench("fig13/centralized MLP step (reference)", || {
+            std::hint::black_box(mlp.train_step(&x, &y, 0.05, &mut exact, &tau, 0));
+        });
+    }
+    {
+        // Fig. 5 / Table II unit of work: Gaussian fit of a gradient
+        let mut r = rng.split();
+        let g = Matrix::randn(784, 100, 0.0, 1e-3, &mut r);
+        h.bench("fig5/gaussian fit 784x100 gradient", || {
+            std::hint::black_box(uepmm::util::stats::gaussian_fit_dense(g.data(), 1e-5));
+        });
+    }
+    {
+        // Fig. 1 unit of work: one coded CNN step at the small arch
+        use uepmm::data::synthetic_cifar;
+        use uepmm::nn::{Cnn, CnnArch};
+        let mut r = Pcg64::seed_from(44);
+        let arch = CnnArch::small();
+        let train = synthetic_cifar(64, arch.side, 3, &mut r);
+        let mut cnn = Cnn::init(arch, &mut r);
+        let idx: Vec<usize> = (0..16).collect();
+        let (x, y) = train.batch(&idx);
+        let tau = TauSchedule::paper(3);
+        let mut engine = DistributedMatmul::new(
+            MatmulStrategy::Coded(CodedMatmulCfg {
+                paradigm: Paradigm::RowTimesCol,
+                blocks: 3,
+                spec: CodeSpec::stacked(CodeKind::EwUep(spec_rxc.gamma.clone())),
+                workers: 15,
+                latency: LatencyModel::exp(0.5),
+                auto_omega: true,
+                t_max: 1.0,
+                s_levels: 3,
+            }),
+            Pcg64::seed_from(7),
+        );
+        h.bench("fig1/coded CNN step (small arch)", || {
+            std::hint::black_box(cnn.train_step(&x, &y, 0.1, &mut engine, &tau, 0, false));
+        });
+    }
+    {
+        // ablation sweep unit: full mc_loss_vs_time point
+        h.bench("ablation/mc_loss_vs_time (1 inst x 20 trials x 3 ts)", || {
+            let spec = SyntheticSpec::fig9_rxc().scaled(15);
+            let code = CodeSpec::stacked(CodeKind::NowUep(spec.gamma.clone()));
+            std::hint::black_box(mc_loss_vs_time(&spec, &code, &[0.5, 1.0, 1.5], 1, 20, 3, 1));
+        });
+    }
+
+    h.write_csv();
+}

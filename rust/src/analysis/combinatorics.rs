@@ -1,0 +1,131 @@
+//! Exact small-scale combinatorics: binomial/multinomial PMFs in log
+//! space and composition enumeration for the multinomial sums in
+//! eq. (20)/(21).
+
+/// `ln Γ(n+1) = ln(n!)` via direct summation (exact enough for n ≤ 10⁴).
+fn ln_factorial(n: usize) -> f64 {
+    (2..=n).map(|i| (i as f64).ln()).sum()
+}
+
+/// `ln C(n, k)`.
+pub fn ln_binomial(n: usize, k: usize) -> f64 {
+    assert!(k <= n);
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Binomial PMF `P[X = k]`, `X ~ Binomial(n, p)` — eq. (19) with
+/// `p = F(t)`.
+pub fn binomial_pmf(n: usize, k: usize, p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p));
+    if k > n {
+        return 0.0;
+    }
+    if p == 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    if p == 1.0 {
+        return if k == n { 1.0 } else { 0.0 };
+    }
+    (ln_binomial(n, k) + k as f64 * p.ln() + (n - k) as f64 * (1.0 - p).ln()).exp()
+}
+
+/// Multinomial PMF (eq. 21): probability of the window-count vector `n`
+/// among `N = Σ n_l` packets with window probabilities `gamma`.
+pub fn multinomial_pmf(counts: &[usize], gamma: &[f64]) -> f64 {
+    assert_eq!(counts.len(), gamma.len());
+    let n: usize = counts.iter().sum();
+    let mut ln_p = ln_factorial(n);
+    for (&c, &g) in counts.iter().zip(gamma.iter()) {
+        if c > 0 && g == 0.0 {
+            return 0.0;
+        }
+        ln_p -= ln_factorial(c);
+        if c > 0 {
+            ln_p += c as f64 * g.ln();
+        }
+    }
+    ln_p.exp()
+}
+
+/// All compositions of `total` into `parts` non-negative integers
+/// (lexicographic). `C(total+parts-1, parts-1)` vectors.
+pub fn compositions(total: usize, parts: usize) -> Vec<Vec<usize>> {
+    assert!(parts >= 1);
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; parts];
+    fn rec(cur: &mut Vec<usize>, idx: usize, remaining: usize, out: &mut Vec<Vec<usize>>) {
+        if idx == cur.len() - 1 {
+            cur[idx] = remaining;
+            out.push(cur.clone());
+            return;
+        }
+        for v in 0..=remaining {
+            cur[idx] = v;
+            rec(cur, idx + 1, remaining - v, out);
+        }
+    }
+    rec(&mut cur, 0, total, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_pmf_sums_to_one() {
+        for &(n, p) in &[(10, 0.3), (30, 0.9), (1, 0.5), (30, 0.0), (5, 1.0)] {
+            let total: f64 = (0..=n).map(|k| binomial_pmf(n, k, p)).sum();
+            assert!((total - 1.0).abs() < 1e-12, "n={n} p={p}: {total}");
+        }
+    }
+
+    #[test]
+    fn binomial_known_value() {
+        // C(4,2)·0.5⁴ = 6/16
+        assert!((binomial_pmf(4, 2, 0.5) - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multinomial_sums_to_one() {
+        let gamma = [0.4, 0.35, 0.25];
+        let n = 8;
+        let total: f64 = compositions(n, 3)
+            .iter()
+            .map(|c| multinomial_pmf(c, &gamma))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multinomial_marginal_is_binomial() {
+        // marginal of n_0 over the multinomial = Binomial(N, γ_0)
+        let gamma = [0.4, 0.35, 0.25];
+        let n = 10;
+        for k in 0..=n {
+            let marg: f64 = compositions(n, 3)
+                .iter()
+                .filter(|c| c[0] == k)
+                .map(|c| multinomial_pmf(c, &gamma))
+                .sum();
+            assert!((marg - binomial_pmf(n, k, 0.4)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn compositions_count() {
+        // C(total+parts-1, parts-1)
+        assert_eq!(compositions(5, 3).len(), 21);
+        assert_eq!(compositions(0, 4).len(), 1);
+        assert_eq!(compositions(7, 1).len(), 1);
+        for c in compositions(6, 3) {
+            assert_eq!(c.iter().sum::<usize>(), 6);
+        }
+    }
+
+    #[test]
+    fn zero_probability_windows() {
+        assert_eq!(multinomial_pmf(&[1, 0], &[0.0, 1.0]), 0.0);
+        assert_eq!(multinomial_pmf(&[0, 2], &[0.0, 1.0]), 1.0);
+    }
+}

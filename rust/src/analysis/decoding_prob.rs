@@ -1,0 +1,216 @@
+//! Per-class decoding probabilities of the NOW and EW UEP strategies as
+//! a function of the number of received packets `N` — [19, eqs. 5–9] as
+//! used by the paper's eq. (20). Real Gaussian coefficients realize the
+//! infinite-field-size assumption, so these are exact for the `Stacked`
+//! encoding (and validated against Monte-Carlo rank experiments in the
+//! tests).
+
+use super::combinatorics::{binomial_pmf, compositions, multinomial_pmf};
+
+/// NOW-UEP: class `l` decodes iff at least `k_l` of the `n` received
+/// packets chose window `l`; the count is `Binomial(n, Γ_l)` (the
+/// multinomial marginal), so
+/// `P_{d,l}(n) = Σ_{j ≥ k_l} C(n,j) Γ_l^j (1−Γ_l)^{n−j}`.
+pub fn now_decode_prob(n: usize, gamma: &[f64], k: &[usize], l: usize) -> f64 {
+    assert_eq!(gamma.len(), k.len());
+    assert!(l < k.len());
+    (k[l]..=n).map(|j| binomial_pmf(n, j, gamma[l])).sum()
+}
+
+/// EW prefix solvability: with window counts `counts` (packets per
+/// window), the joint system on levels `0..=j` is generically solvable
+/// iff every suffix of levels `s..=j` has at least as many covering
+/// packets as unknowns: `Σ_{m=s..j} counts_m ≥ Σ_{m=s..j} k_m` for all
+/// `s ≤ j` (packets of window `m` cover levels `0..=m`, so only windows
+/// `≥ s` touch levels `≥ s`).
+pub fn ew_prefix_solvable(counts: &[usize], k: &[usize], j: usize) -> bool {
+    debug_assert!(j < k.len());
+    let mut packets = 0usize;
+    let mut unknowns = 0usize;
+    for s in (0..=j).rev() {
+        packets += counts[s];
+        unknowns += k[s];
+        if packets < unknowns {
+            return false;
+        }
+    }
+    true
+}
+
+/// EW decodable-level set for a window-count vector: level `i` decodes
+/// iff some prefix `0..=j` with `j ≥ i` is solvable.
+pub fn ew_decodable_levels(counts: &[usize], k: &[usize]) -> Vec<bool> {
+    let l = k.len();
+    let solvable: Vec<bool> = (0..l).map(|j| ew_prefix_solvable(counts, k, j)).collect();
+    // decodable(i) = any solvable(j) for j ≥ i
+    let mut dec = vec![false; l];
+    let mut any = false;
+    for i in (0..l).rev() {
+        any = any || solvable[i];
+        dec[i] = any;
+    }
+    dec
+}
+
+/// EW-UEP: exact decoding probability of level `l` with `n` received
+/// packets, by enumeration over the multinomial window-count vectors
+/// ([19, eqs. 6–9]).
+pub fn ew_decode_prob(n: usize, gamma: &[f64], k: &[usize], l: usize) -> f64 {
+    assert_eq!(gamma.len(), k.len());
+    assert!(l < k.len());
+    let mut p = 0.0;
+    for counts in compositions(n, k.len()) {
+        if ew_decodable_levels(&counts, k)[l] {
+            p += multinomial_pmf(&counts, gamma);
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{rank, Matrix};
+    use crate::rng::{Normal, Pcg64};
+    use crate::util::prop::{gen, prop_check, PropConfig};
+
+    const GAMMA: [f64; 3] = [0.40, 0.35, 0.25];
+    const K: [usize; 3] = [3, 3, 3];
+
+    #[test]
+    fn now_monotone_in_n_and_ordered_by_gamma() {
+        let mut prev = [0.0; 3];
+        for n in 0..=30 {
+            for l in 0..3 {
+                let p = now_decode_prob(n, &GAMMA, &K, l);
+                assert!((0.0..=1.0 + 1e-12).contains(&p));
+                assert!(p + 1e-12 >= prev[l], "class {l} not monotone at n={n}");
+                prev[l] = p;
+            }
+            // higher window probability ⇒ better protection (k equal)
+            assert!(prev[0] + 1e-12 >= prev[1]);
+            assert!(prev[1] + 1e-12 >= prev[2]);
+        }
+        // by n = 30 the first class is nearly always decodable (Fig. 8)
+        assert!(prev[0] > 0.999);
+    }
+
+    #[test]
+    fn now_zero_below_threshold() {
+        for l in 0..3 {
+            for n in 0..K[l] {
+                assert_eq!(now_decode_prob(n, &GAMMA, &K, l), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ew_class0_dominates_now_class0() {
+        // EW always includes class 0 in every packet, so its class-0
+        // decoding probability is at least NOW's for every n.
+        for n in 0..=30 {
+            let ew = ew_decode_prob(n, &GAMMA, &K, 0);
+            let now = now_decode_prob(n, &GAMMA, &K, 0);
+            assert!(ew + 1e-12 >= now, "n={n}: EW {ew} < NOW {now}");
+        }
+        // and strictly better somewhere
+        assert!(ew_decode_prob(6, &GAMMA, &K, 0) > now_decode_prob(6, &GAMMA, &K, 0));
+    }
+
+    #[test]
+    fn ew_levels_are_ordered() {
+        // With nested windows, a more important level always has a ≥
+        // decoding probability.
+        for n in 0..=25 {
+            let p: Vec<f64> = (0..3).map(|l| ew_decode_prob(n, &GAMMA, &K, l)).collect();
+            assert!(p[0] + 1e-12 >= p[1] && p[1] + 1e-12 >= p[2], "n={n}: {p:?}");
+        }
+    }
+
+    #[test]
+    fn ew_prefix_solvable_cases() {
+        // k = (3,3,3): 3 window-0 packets solve prefix 0
+        assert!(ew_prefix_solvable(&[3, 0, 0], &K, 0));
+        assert!(!ew_prefix_solvable(&[2, 5, 0], &K, 0));
+        // 6 packets in windows 0..1 with ≥3 in window ≥1 solve prefix 1
+        assert!(ew_prefix_solvable(&[3, 3, 0], &K, 1));
+        assert!(ew_prefix_solvable(&[0, 6, 0], &K, 1));
+        // suffix violation: 5 window-0, 1 window-1 (level-1 unknowns only
+        // covered by the single window-1 packet)
+        assert!(!ew_prefix_solvable(&[5, 1, 0], &K, 1));
+        // full decode needs 9 with every suffix covered
+        assert!(ew_prefix_solvable(&[3, 3, 3], &K, 2));
+        assert!(!ew_prefix_solvable(&[4, 3, 2], &K, 2));
+    }
+
+    /// Monte-Carlo validation of the Hall-type predicate: build the
+    /// actual random nested-support coefficient matrix and compare
+    /// generic solvability (rank of suffix systems) with the predicate.
+    #[test]
+    fn ew_predicate_matches_random_rank() {
+        prop_check("EW Hall ≡ rank", PropConfig { cases: 60, seed: 21 }, |rng, _| {
+            let l = gen::usize_in(rng, 1, 3);
+            let k: Vec<usize> = (0..l).map(|_| gen::usize_in(rng, 1, 3)).collect();
+            let total_k: usize = k.iter().sum();
+            let n = gen::usize_in(rng, 0, total_k + 3);
+            // random window counts
+            let mut counts = vec![0usize; l];
+            for _ in 0..n {
+                counts[rng.next_bounded(l as u64) as usize] += 1;
+            }
+            for j in 0..l {
+                // build system on levels 0..=j using packets with window ≤ j
+                let unknowns: usize = k[..=j].iter().sum();
+                let mut rows: Vec<Vec<f64>> = Vec::new();
+                for (w, &cnt) in counts.iter().enumerate().take(j + 1) {
+                    let covered: usize = k[..=w].iter().sum();
+                    for _ in 0..cnt {
+                        let mut row = vec![0.0; unknowns];
+                        for slot in row.iter_mut().take(covered) {
+                            *slot = Normal::standard(rng);
+                        }
+                        rows.push(row);
+                    }
+                }
+                let solvable_rank = if rows.is_empty() {
+                    unknowns == 0
+                } else {
+                    let m = Matrix::from_fn(rows.len(), unknowns, |r, c| rows[r][c]);
+                    rank(&m) == unknowns
+                };
+                let predicted = ew_prefix_solvable(&counts, &k, j);
+                if solvable_rank != predicted {
+                    return Err(format!(
+                        "counts={counts:?} k={k:?} j={j}: rank says {solvable_rank}, predicate {predicted}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// NOW probability formula vs direct Monte-Carlo packet simulation.
+    #[test]
+    fn now_formula_matches_monte_carlo() {
+        let mut rng = Pcg64::seed_from(3);
+        let n = 10;
+        let trials = 60_000;
+        let mut hits = [0usize; 3];
+        for _ in 0..trials {
+            let mut counts = [0usize; 3];
+            for _ in 0..n {
+                counts[crate::rng::sample_discrete(&mut rng, &GAMMA)] += 1;
+            }
+            for l in 0..3 {
+                if counts[l] >= K[l] {
+                    hits[l] += 1;
+                }
+            }
+        }
+        for l in 0..3 {
+            let emp = hits[l] as f64 / trials as f64;
+            let ana = now_decode_prob(n, &GAMMA, &K, l);
+            assert!((emp - ana).abs() < 0.01, "class {l}: {emp} vs {ana}");
+        }
+    }
+}

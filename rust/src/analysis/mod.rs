@@ -1,0 +1,20 @@
+//! Analytic performance characterization (paper §V + [19]):
+//! arrival statistics (eq. 19), NOW/EW decoding probabilities
+//! (eqs. 20–21 and [19, eqs. 5–9]), the Theorem 2/3 expected-loss
+//! formulas, and closed-form baseline curves for MDS / repetition /
+//! uncoded computation.
+
+mod combinatorics;
+mod decoding_prob;
+mod gamma_opt;
+mod theorems;
+
+pub use combinatorics::{binomial_pmf, compositions, ln_binomial, multinomial_pmf};
+pub use gamma_opt::{optimize_gamma, GammaOpt};
+pub use decoding_prob::{
+    ew_decodable_levels, ew_decode_prob, ew_prefix_solvable, now_decode_prob,
+};
+pub use theorems::{
+    mds_loss_vs_packets, mds_loss_vs_time, repetition_loss_vs_packets,
+    repetition_loss_vs_time, TheoremLoss, UepStrategy,
+};

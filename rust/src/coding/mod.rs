@@ -1,0 +1,56 @@
+//! Coding layer (paper §III-C, §IV): Unequal Error Protection random
+//! linear codes over the matrix sub-products, plus the baselines the
+//! paper compares against.
+//!
+//! Schemes:
+//! * **NOW-UEP** — non-overlapping windows: each packet protects exactly
+//!   one importance class, chosen from the window polynomial `Γ(ξ)`.
+//! * **EW-UEP** — expanding windows: a packet for window `l` protects
+//!   classes `1..l`, so the most important class appears in every packet.
+//! * **MDS** — dense random linear code over all sub-products (real
+//!   Gaussian coefficients are MDS with probability 1).
+//! * **Repetition** — each sub-product replicated `⌈W/K⌉` times.
+//! * **Uncoded** — one worker per sub-product.
+//!
+//! Encoding styles (see DESIGN.md §2 — the paper under-specifies this):
+//! * [`EncodeStyle::Stacked`] — exact RLC via block concatenation: the
+//!   packet `Σ_j c_j·A_{n_j}B_{p_j}` is computed as the single product
+//!   `[c₁A_{n₁}, …] · [B_{p₁}; …]`. Matches the paper's analysis.
+//! * [`EncodeStyle::RankOne`] — the paper's literal eq. (17):
+//!   `(Σ_i α_i A_i)(Σ_j β_j B_j)`; packets carry Khatri-Rao coefficients
+//!   over all cross products, including "ghost" terms (c×r off-diagonal
+//!   pairs) that are not part of `C`.
+
+mod decode;
+mod scheme;
+mod window;
+
+pub use decode::DecodeState;
+pub use scheme::{
+    CodeKind, CodeSpec, EncodeStyle, JobRecipe, Packet, StackTerm, UnknownSpace,
+};
+pub use window::WindowPolynomial;
+
+/// A trait alias-style facade: anything that can generate the packet set
+/// for `W` workers given a partitioning and class map.
+pub trait Code {
+    fn packets(
+        &self,
+        part: &crate::partition::Partitioning,
+        cm: &crate::partition::ClassMap,
+        workers: usize,
+        rng: &mut crate::rng::Pcg64,
+    ) -> Vec<Packet>;
+}
+
+impl Code for CodeSpec {
+    fn packets(
+        &self,
+        part: &crate::partition::Partitioning,
+        cm: &crate::partition::ClassMap,
+        workers: usize,
+        rng: &mut crate::rng::Pcg64,
+    ) -> Vec<Packet> {
+        self.generate_packets(part, cm, workers, rng)
+    }
+}

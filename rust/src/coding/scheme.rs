@@ -1,0 +1,561 @@
+//! Packet generation for every coding scheme × encoding style.
+
+use crate::partition::{ClassMap, Paradigm, Partitioning};
+use crate::rng::{Normal, Pcg64};
+
+use super::WindowPolynomial;
+
+/// The coding scheme (paper §IV + baselines from §VI–VII).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodeKind {
+    /// One worker per sub-product, no protection.
+    Uncoded,
+    /// Each sub-product replicated across workers round-robin; the paper's
+    /// "2-block repetition" uses `W = 2K`.
+    Repetition,
+    /// Dense random linear code over all sub-products; decodable exactly
+    /// when `K` linearly independent packets arrive (real-Gaussian
+    /// coefficients are MDS with probability 1).
+    Mds,
+    /// Non-Overlapping Window UEP: window `l` = class `l` only.
+    NowUep(WindowPolynomial),
+    /// Expanding Window UEP: window `l` = classes `0..=l`.
+    EwUep(WindowPolynomial),
+}
+
+impl CodeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodeKind::Uncoded => "uncoded",
+            CodeKind::Repetition => "repetition",
+            CodeKind::Mds => "mds",
+            CodeKind::NowUep(_) => "now-uep",
+            CodeKind::EwUep(_) => "ew-uep",
+        }
+    }
+}
+
+/// How packets are realized as two-factor worker jobs (DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EncodeStyle {
+    /// Exact RLC via block stacking: `[c₁A_{n₁},…]·[B_{p₁};…]`.
+    Stacked,
+    /// The paper's literal eq. (17): `(Σαᵢ Aᵢ)(Σβⱼ Bⱼ)`.
+    RankOne,
+}
+
+/// A fully specified code: scheme + encoding style.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodeSpec {
+    pub kind: CodeKind,
+    pub style: EncodeStyle,
+}
+
+impl CodeSpec {
+    pub fn new(kind: CodeKind, style: EncodeStyle) -> Self {
+        CodeSpec { kind, style }
+    }
+
+    pub fn stacked(kind: CodeKind) -> Self {
+        CodeSpec { kind, style: EncodeStyle::Stacked }
+    }
+
+    pub fn label(&self) -> String {
+        let style = match self.style {
+            EncodeStyle::Stacked => "stacked",
+            EncodeStyle::RankOne => "rank1",
+        };
+        format!("{}/{}", self.kind.name(), style)
+    }
+}
+
+/// One term of a stacked job: scale `coeff · A_{a}`, paired with `B_{b}`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StackTerm {
+    /// Sub-product (unknown) index.
+    pub unknown: usize,
+    /// RLC coefficient.
+    pub coeff: f64,
+}
+
+/// The worker-side recipe for constructing `W_A` and `W_B`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobRecipe {
+    /// `W_A = [c₁·A_{n₁}, …]`, `W_B = [B_{p₁}; …]` over the listed terms.
+    Stacked { terms: Vec<StackTerm> },
+    /// `W_A = Σ αᵢ·A_i`, `W_B = Σ βⱼ·B_j` (sparse coefficient lists over
+    /// factor-block indices).
+    RankOne {
+        a_coeffs: Vec<(usize, f64)>,
+        b_coeffs: Vec<(usize, f64)>,
+    },
+}
+
+impl JobRecipe {
+    /// Inner-dimension multiplier of this job relative to one plain
+    /// sub-product (`k` for a k-term stacked job, 1 for rank-one).
+    pub fn work_factor(&self) -> usize {
+        match self {
+            JobRecipe::Stacked { terms } => terms.len().max(1),
+            JobRecipe::RankOne { .. } => 1,
+        }
+    }
+}
+
+/// One coded packet: the job assigned to one worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packet {
+    pub worker: usize,
+    /// The window/class this packet was generated for (diagnostics and
+    /// the analysis comparisons). Baselines use 0.
+    pub window: usize,
+    pub recipe: JobRecipe,
+}
+
+impl Packet {
+    /// Dense coefficient row of this packet over the (possibly extended)
+    /// unknown space — the equation the decoder absorbs.
+    pub fn coeff_row(&self, space: &UnknownSpace) -> Vec<f64> {
+        let mut row = vec![0.0; space.n_total];
+        match &self.recipe {
+            JobRecipe::Stacked { terms } => {
+                for t in terms {
+                    row[t.unknown] += t.coeff;
+                }
+            }
+            JobRecipe::RankOne { a_coeffs, b_coeffs } => {
+                for &(i, alpha) in a_coeffs {
+                    for &(j, beta) in b_coeffs {
+                        let idx = space.index_of_pair(i, j);
+                        row[idx] += alpha * beta;
+                    }
+                }
+            }
+        }
+        row
+    }
+}
+
+/// The unknown space the decoder works over. Real unknowns `0..n_real`
+/// are the sub-products of `C`; rank-one encoding over c×r additionally
+/// produces *ghost* unknowns (off-diagonal cross products `A_i B_j`,
+/// `i≠j`) that the decoder must carry but `Ĉ` never uses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnknownSpace {
+    pub n_real: usize,
+    pub n_total: usize,
+    paradigm: Paradigm,
+    /// M for c×r pair indexing.
+    m: usize,
+    /// P for r×c pair indexing.
+    p: usize,
+}
+
+impl UnknownSpace {
+    /// Space for a given partitioning + encoding style.
+    pub fn for_code(part: &Partitioning, style: EncodeStyle) -> Self {
+        let n_real = part.num_products();
+        let n_total = match (part.paradigm, style) {
+            // r×c: every cross product (n,p) IS a real sub-product.
+            (Paradigm::RowTimesCol, _) => n_real,
+            (Paradigm::ColTimesRow, EncodeStyle::Stacked) => n_real,
+            // c×r rank-one: all M² pairs, M real + M(M-1) ghosts.
+            (Paradigm::ColTimesRow, EncodeStyle::RankOne) => part.m * part.m,
+        };
+        UnknownSpace {
+            n_real,
+            n_total,
+            paradigm: part.paradigm,
+            m: part.m,
+            p: part.p,
+        }
+    }
+
+    /// Unknown index of the factor pair `(a_idx, b_idx)`.
+    pub fn index_of_pair(&self, a_idx: usize, b_idx: usize) -> usize {
+        match self.paradigm {
+            Paradigm::RowTimesCol => a_idx * self.p + b_idx,
+            Paradigm::ColTimesRow => {
+                if a_idx == b_idx {
+                    a_idx
+                } else {
+                    // ghosts packed after the M real unknowns
+                    let col = if b_idx < a_idx { b_idx } else { b_idx - 1 };
+                    self.m + a_idx * (self.m - 1) + col
+                }
+            }
+        }
+    }
+
+    /// Is this index a real sub-product of `C`?
+    pub fn is_real(&self, idx: usize) -> bool {
+        idx < self.n_real
+    }
+}
+
+impl CodeSpec {
+    /// Generate the packet (job) set for `workers` workers.
+    pub fn generate_packets(
+        &self,
+        part: &Partitioning,
+        cm: &ClassMap,
+        workers: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<Packet> {
+        let k = part.num_products();
+        assert!(workers >= 1);
+        match &self.kind {
+            CodeKind::Uncoded | CodeKind::Repetition => (0..workers)
+                .map(|w| Packet {
+                    worker: w,
+                    window: 0,
+                    recipe: JobRecipe::Stacked {
+                        terms: vec![StackTerm { unknown: w % k, coeff: 1.0 }],
+                    },
+                })
+                .collect(),
+            CodeKind::Mds => (0..workers)
+                .map(|w| Packet {
+                    worker: w,
+                    window: 0,
+                    recipe: self.dense_recipe(part, &(0..k).collect::<Vec<_>>(), rng),
+                })
+                .collect(),
+            CodeKind::NowUep(gamma) => {
+                let gamma = gamma.resized(cm.n_classes);
+                (0..workers)
+                    .map(|w| {
+                        let l = gamma.sample(rng);
+                        Packet {
+                            worker: w,
+                            window: l,
+                            recipe: self.window_recipe(part, cm, l, false, rng),
+                        }
+                    })
+                    .collect()
+            }
+            CodeKind::EwUep(gamma) => {
+                let gamma = gamma.resized(cm.n_classes);
+                (0..workers)
+                    .map(|w| {
+                        let l = gamma.sample(rng);
+                        Packet {
+                            worker: w,
+                            window: l,
+                            recipe: self.window_recipe(part, cm, l, true, rng),
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Dense recipe over an explicit unknown set (MDS and window codes).
+    fn dense_recipe(
+        &self,
+        part: &Partitioning,
+        unknowns: &[usize],
+        rng: &mut Pcg64,
+    ) -> JobRecipe {
+        match self.style {
+            EncodeStyle::Stacked => JobRecipe::Stacked {
+                terms: unknowns
+                    .iter()
+                    .map(|&u| StackTerm { unknown: u, coeff: Normal::standard(rng) })
+                    .collect(),
+            },
+            EncodeStyle::RankOne => {
+                // dense over the factor blocks touched by the unknown set
+                let mut a_set: Vec<usize> = Vec::new();
+                let mut b_set: Vec<usize> = Vec::new();
+                for &u in unknowns {
+                    let (ai, bi) = part.factors_of(u);
+                    if !a_set.contains(&ai) {
+                        a_set.push(ai);
+                    }
+                    if !b_set.contains(&bi) {
+                        b_set.push(bi);
+                    }
+                }
+                JobRecipe::RankOne {
+                    a_coeffs: a_set
+                        .into_iter()
+                        .map(|i| (i, Normal::standard(rng)))
+                        .collect(),
+                    b_coeffs: b_set
+                        .into_iter()
+                        .map(|j| (j, Normal::standard(rng)))
+                        .collect(),
+                }
+            }
+        }
+    }
+
+    /// Recipe for window `l` (NOW: class `l` exactly; EW: classes `0..=l`).
+    fn window_recipe(
+        &self,
+        part: &Partitioning,
+        cm: &ClassMap,
+        l: usize,
+        expanding: bool,
+        rng: &mut Pcg64,
+    ) -> JobRecipe {
+        match self.style {
+            EncodeStyle::Stacked => {
+                let unknowns: Vec<usize> = if expanding {
+                    cm.window_leq(l)
+                } else {
+                    cm.members[l].clone()
+                };
+                self.dense_recipe(part, &unknowns, rng)
+            }
+            EncodeStyle::RankOne => {
+                if expanding {
+                    let unknowns = cm.window_leq(l);
+                    self.dense_recipe(part, &unknowns, rng)
+                } else {
+                    // NOW rank-one: pick one (a-level, b-level) grid cell of
+                    // class l, then combine the blocks of those levels.
+                    let cells = now_cells(part, cm, l);
+                    let (la, lb) = cells[rng.next_bounded(cells.len() as u64) as usize];
+                    let a_blocks: Vec<usize> = (0..part.num_a_blocks())
+                        .filter(|&i| cm.a_level[i] == la)
+                        .collect();
+                    let b_blocks: Vec<usize> = (0..part.num_b_blocks())
+                        .filter(|&j| cm.b_level[j] == lb)
+                        .collect();
+                    JobRecipe::RankOne {
+                        a_coeffs: a_blocks
+                            .into_iter()
+                            .map(|i| (i, Normal::standard(rng)))
+                            .collect(),
+                        b_coeffs: b_blocks
+                            .into_iter()
+                            .map(|j| (j, Normal::standard(rng)))
+                            .collect(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The (a-level, b-level) grid cells whose products fall in class `l` and
+/// which are realizable (both level sets non-empty).
+fn now_cells(part: &Partitioning, cm: &ClassMap, l: usize) -> Vec<(usize, usize)> {
+    let mut cells = Vec::new();
+    for &u in &cm.members[l] {
+        let (ai, bi) = part.factors_of(u);
+        let cell = (cm.a_level[ai], cm.b_level[bi]);
+        if !cells.contains(&cell) {
+            cells.push(cell);
+        }
+    }
+    assert!(!cells.is_empty(), "class {l} has no realizable grid cells");
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::default_pair_classes;
+
+    fn paper_rxc() -> (Partitioning, ClassMap) {
+        let part = Partitioning::rxc(3, 3, 2, 2, 2);
+        let pair = default_pair_classes(3);
+        let cm =
+            ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        (part, cm)
+    }
+
+    fn paper_cxr() -> (Partitioning, ClassMap) {
+        let part = Partitioning::cxr(9, 2, 2, 2);
+        let lv = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, lv.clone(), lv, &pair);
+        (part, cm)
+    }
+
+    #[test]
+    fn uncoded_covers_all_unknowns() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(1);
+        let spec = CodeSpec::stacked(CodeKind::Uncoded);
+        let pkts = spec.generate_packets(&part, &cm, 9, &mut rng);
+        let mut covered = vec![false; 9];
+        for p in &pkts {
+            if let JobRecipe::Stacked { terms } = &p.recipe {
+                assert_eq!(terms.len(), 1);
+                assert_eq!(terms[0].coeff, 1.0);
+                covered[terms[0].unknown] = true;
+            } else {
+                panic!("uncoded must be stacked");
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn repetition_replicates_each_unknown() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(2);
+        let spec = CodeSpec::stacked(CodeKind::Repetition);
+        let pkts = spec.generate_packets(&part, &cm, 18, &mut rng);
+        let mut counts = vec![0usize; 9];
+        for p in &pkts {
+            if let JobRecipe::Stacked { terms } = &p.recipe {
+                counts[terms[0].unknown] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn mds_stacked_is_dense() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(3);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let pkts = spec.generate_packets(&part, &cm, 5, &mut rng);
+        let space = UnknownSpace::for_code(&part, EncodeStyle::Stacked);
+        for p in &pkts {
+            let row = p.coeff_row(&space);
+            assert!(row.iter().all(|&c| c != 0.0));
+            assert_eq!(p.recipe.work_factor(), 9);
+        }
+    }
+
+    #[test]
+    fn now_stacked_supports_exactly_one_class() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(4);
+        let spec = CodeSpec::stacked(CodeKind::NowUep(WindowPolynomial::paper_table3()));
+        let space = UnknownSpace::for_code(&part, EncodeStyle::Stacked);
+        for p in spec.generate_packets(&part, &cm, 50, &mut rng) {
+            let row = p.coeff_row(&space);
+            for (u, &c) in row.iter().enumerate() {
+                if c != 0.0 {
+                    assert_eq!(cm.class_of[u], p.window, "unknown {u} leaked");
+                }
+            }
+            // and the full class is covered
+            for &u in &cm.members[p.window] {
+                assert!(row[u] != 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ew_stacked_supports_prefix_classes() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(5);
+        let spec = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
+        let space = UnknownSpace::for_code(&part, EncodeStyle::Stacked);
+        for p in spec.generate_packets(&part, &cm, 50, &mut rng) {
+            let row = p.coeff_row(&space);
+            for (u, &c) in row.iter().enumerate() {
+                if c != 0.0 {
+                    assert!(cm.class_of[u] <= p.window);
+                }
+            }
+            // class 0 is always fully covered (the EW guarantee)
+            for &u in &cm.members[0] {
+                assert!(row[u] != 0.0, "EW packet missing class-0 unknown {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn now_rank1_rxc_is_one_grid_cell() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(6);
+        let spec = CodeSpec::new(
+            CodeKind::NowUep(WindowPolynomial::paper_table3()),
+            EncodeStyle::RankOne,
+        );
+        let space = UnknownSpace::for_code(&part, EncodeStyle::RankOne);
+        for p in spec.generate_packets(&part, &cm, 60, &mut rng) {
+            if let JobRecipe::RankOne { a_coeffs, b_coeffs } = &p.recipe {
+                // all a blocks same level, all b blocks same level
+                let la = cm.a_level[a_coeffs[0].0];
+                assert!(a_coeffs.iter().all(|&(i, _)| cm.a_level[i] == la));
+                let lb = cm.b_level[b_coeffs[0].0];
+                assert!(b_coeffs.iter().all(|&(j, _)| cm.b_level[j] == lb));
+                // every supported unknown is in the packet's class: grid
+                // cells are class-pure for the r×c paradigm
+                let row = p.coeff_row(&space);
+                for (u, &c) in row.iter().enumerate() {
+                    if c != 0.0 {
+                        assert_eq!(cm.class_of[u], p.window);
+                    }
+                }
+            } else {
+                panic!("expected rank-one recipe");
+            }
+        }
+    }
+
+    #[test]
+    fn cxr_rank1_ghost_indexing_bijective() {
+        let (part, _) = paper_cxr();
+        let space = UnknownSpace::for_code(&part, EncodeStyle::RankOne);
+        assert_eq!(space.n_real, 9);
+        assert_eq!(space.n_total, 81);
+        let mut seen = vec![false; 81];
+        for i in 0..9 {
+            for j in 0..9 {
+                let idx = space.index_of_pair(i, j);
+                assert!(!seen[idx], "collision at ({i},{j})");
+                seen[idx] = true;
+                assert_eq!(space.is_real(idx), i == j);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cxr_rank1_packets_have_ghost_support() {
+        let (part, cm) = paper_cxr();
+        let mut rng = Pcg64::seed_from(7);
+        let spec = CodeSpec::new(
+            CodeKind::NowUep(WindowPolynomial::paper_table3()),
+            EncodeStyle::RankOne,
+        );
+        let space = UnknownSpace::for_code(&part, EncodeStyle::RankOne);
+        let pkts = spec.generate_packets(&part, &cm, 30, &mut rng);
+        // at least one multi-block packet must touch a ghost unknown
+        let any_ghost = pkts.iter().any(|p| {
+            p.coeff_row(&space)
+                .iter()
+                .enumerate()
+                .any(|(u, &c)| c != 0.0 && !space.is_real(u))
+        });
+        assert!(any_ghost, "c×r rank-one should create cross terms");
+    }
+
+    #[test]
+    fn window_resizing_handles_fewer_classes() {
+        // 2-class map with a 3-window polynomial: must not panic.
+        let part = Partitioning::cxr(4, 2, 2, 2);
+        let lv = vec![0, 0, 2, 2];
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, lv.clone(), lv, &pair);
+        assert_eq!(cm.n_classes, 2);
+        let mut rng = Pcg64::seed_from(8);
+        let spec = CodeSpec::stacked(CodeKind::NowUep(WindowPolynomial::paper_table3()));
+        let pkts = spec.generate_packets(&part, &cm, 20, &mut rng);
+        assert!(pkts.iter().all(|p| p.window < 2));
+    }
+
+    #[test]
+    fn work_factors() {
+        let r = JobRecipe::Stacked {
+            terms: vec![
+                StackTerm { unknown: 0, coeff: 1.0 },
+                StackTerm { unknown: 3, coeff: -0.5 },
+            ],
+        };
+        assert_eq!(r.work_factor(), 2);
+        let r1 = JobRecipe::RankOne { a_coeffs: vec![(0, 1.0)], b_coeffs: vec![(0, 1.0)] };
+        assert_eq!(r1.work_factor(), 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Window selection polynomial `Γ(ξ) = Σ_l Γ_l ξ^l` from [19]: the
+//! distribution over importance windows used by both NOW and EW UEP
+//! codes. `Γ_0` is the probability of the *most important* window.
+
+use crate::rng::{sample_discrete, Pcg64};
+
+/// A probability distribution over `L` windows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowPolynomial {
+    probs: Vec<f64>,
+}
+
+impl WindowPolynomial {
+    /// Build from raw weights (normalized internally).
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "empty window polynomial");
+        assert!(weights.iter().all(|&w| w >= 0.0), "negative window weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all window weights zero");
+        WindowPolynomial { probs: weights.iter().map(|w| w / total).collect() }
+    }
+
+    /// The paper's Table III polynomial: `(0.40, 0.35, 0.25)`.
+    pub fn paper_table3() -> Self {
+        WindowPolynomial::new(&[0.40, 0.35, 0.25])
+    }
+
+    /// Uniform over `l` windows (equal error protection).
+    pub fn uniform(l: usize) -> Self {
+        WindowPolynomial::new(&vec![1.0; l])
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.probs.len()
+    }
+
+    /// `Γ_l` for window `l` (0-based; 0 = most important).
+    pub fn prob(&self, l: usize) -> f64 {
+        self.probs[l]
+    }
+
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    /// Sample a window index.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        sample_discrete(rng, &self.probs)
+    }
+
+    /// Truncate/renormalize to `l` windows (used when a class map has
+    /// fewer classes than the configured polynomial).
+    pub fn resized(&self, l: usize) -> WindowPolynomial {
+        assert!(l >= 1);
+        if l == self.probs.len() {
+            return self.clone();
+        }
+        if l < self.probs.len() {
+            WindowPolynomial::new(&self.probs[..l])
+        } else {
+            // extend with the last weight
+            let mut w = self.probs.clone();
+            let last = *w.last().unwrap();
+            w.resize(l, last);
+            WindowPolynomial::new(&w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes() {
+        let w = WindowPolynomial::new(&[4.0, 3.5, 2.5]);
+        assert!((w.prob(0) - 0.40).abs() < 1e-12);
+        assert!((w.probs().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_polynomial() {
+        let w = WindowPolynomial::paper_table3();
+        assert_eq!(w.num_windows(), 3);
+        assert!((w.prob(2) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_frequencies() {
+        let mut rng = Pcg64::seed_from(1);
+        let w = WindowPolynomial::paper_table3();
+        let mut counts = [0usize; 3];
+        let n = 120_000;
+        for _ in 0..n {
+            counts[w.sample(&mut rng)] += 1;
+        }
+        for (c, p) in counts.iter().zip(w.probs()) {
+            assert!((*c as f64 / n as f64 - p).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn resize_down_and_up() {
+        let w = WindowPolynomial::paper_table3();
+        let w2 = w.resized(2);
+        assert_eq!(w2.num_windows(), 2);
+        assert!((w2.prob(0) - 0.40 / 0.75).abs() < 1e-12);
+        let w4 = w.resized(4);
+        assert_eq!(w4.num_windows(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_weights() {
+        WindowPolynomial::new(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,211 @@
+//! A [`Plan`] is everything the PS prepares *before* dispatch: the block
+//! split of `A` and `B`, the norm-based importance classification, the
+//! coded packet set, and the reference product for loss evaluation.
+
+use anyhow::Result;
+
+use crate::coding::{CodeSpec, JobRecipe, Packet, UnknownSpace};
+use crate::linalg::{matmul, Matrix};
+use crate::partition::{ClassMap, Partitioning};
+use crate::rng::Pcg64;
+
+/// A prepared coded-multiplication job set.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub part: Partitioning,
+    pub cm: ClassMap,
+    pub spec: CodeSpec,
+    pub space: UnknownSpace,
+    pub packets: Vec<Packet>,
+    pub a_blocks: Vec<Matrix>,
+    pub b_blocks: Vec<Matrix>,
+    /// The true product (reference for loss; computed once at build).
+    pub c_true: Matrix,
+}
+
+impl Plan {
+    /// Build a plan: split, classify into `s_levels` by Frobenius norm,
+    /// and generate one coded packet per worker.
+    pub fn build(
+        part: &Partitioning,
+        spec: CodeSpec,
+        s_levels: usize,
+        workers: usize,
+        a: &Matrix,
+        b: &Matrix,
+        rng: &mut Pcg64,
+    ) -> Result<Plan> {
+        let cm = ClassMap::from_matrices(part, a, b, s_levels);
+        Self::build_with_classes(part, spec, cm, workers, a, b, rng)
+    }
+
+    /// Build with an explicit class map (synthetic experiments pin the
+    /// levels instead of estimating them from norms).
+    pub fn build_with_classes(
+        part: &Partitioning,
+        spec: CodeSpec,
+        cm: ClassMap,
+        workers: usize,
+        a: &Matrix,
+        b: &Matrix,
+        rng: &mut Pcg64,
+    ) -> Result<Plan> {
+        anyhow::ensure!(workers >= 1, "need at least one worker");
+        let a_blocks = part.split_a(a);
+        let b_blocks = part.split_b(b);
+        let packets = spec.generate_packets(part, &cm, workers, rng);
+        let space = UnknownSpace::for_code(part, spec.style);
+        let c_true = matmul(a, b);
+        Ok(Plan {
+            part: part.clone(),
+            cm,
+            spec,
+            space,
+            packets,
+            a_blocks,
+            b_blocks,
+            c_true,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.packets.len()
+    }
+
+    /// The true sub-products (computed on demand, e.g. for Gram-based
+    /// fast sweeps).
+    pub fn true_products(&self) -> Vec<Matrix> {
+        (0..self.part.num_products())
+            .map(|i| {
+                let (ai, bi) = self.part.factors_of(i);
+                matmul(&self.a_blocks[ai], &self.b_blocks[bi])
+            })
+            .collect()
+    }
+
+    /// Total worker compute (in units of one plain sub-product) — the
+    /// quantity behind the paper's Ω fairness scaling.
+    pub fn total_work_factor(&self) -> usize {
+        self.packets.iter().map(|p| p.recipe.work_factor()).sum()
+    }
+}
+
+/// Materialize the two factor matrices a worker multiplies, per the
+/// packet recipe (paper eq. 5–6):
+/// * `Stacked`: `W_A = [c₁·A_{n₁}, …] (U×kH)`, `W_B = [B_{p₁}; …] (kH×Q)`.
+/// * `RankOne`: `W_A = Σ αᵢ·A_i (U×H)`, `W_B = Σ βⱼ·B_j (H×Q)`.
+pub fn build_job_matrices(
+    part: &Partitioning,
+    a_blocks: &[Matrix],
+    b_blocks: &[Matrix],
+    recipe: &JobRecipe,
+) -> (Matrix, Matrix) {
+    match recipe {
+        JobRecipe::Stacked { terms } => {
+            assert!(!terms.is_empty(), "empty stacked job");
+            let scaled_a: Vec<Matrix> = terms
+                .iter()
+                .map(|t| {
+                    let (ai, _) = part.factors_of(t.unknown);
+                    let mut m = a_blocks[ai].clone();
+                    m.scale(t.coeff);
+                    m
+                })
+                .collect();
+            let b_parts: Vec<&Matrix> = terms
+                .iter()
+                .map(|t| {
+                    let (_, bi) = part.factors_of(t.unknown);
+                    &b_blocks[bi]
+                })
+                .collect();
+            let wa = Matrix::hconcat(&scaled_a.iter().collect::<Vec<_>>());
+            let wb = Matrix::vconcat(&b_parts);
+            (wa, wb)
+        }
+        JobRecipe::RankOne { a_coeffs, b_coeffs } => {
+            assert!(!a_coeffs.is_empty() && !b_coeffs.is_empty());
+            let (u, h) = a_blocks[0].shape();
+            let (_, q) = b_blocks[0].shape();
+            let mut wa = Matrix::zeros(u, h);
+            for &(i, alpha) in a_coeffs {
+                wa.axpy(alpha, &a_blocks[i]);
+            }
+            let mut wb = Matrix::zeros(h, q);
+            for &(j, beta) in b_coeffs {
+                wb.axpy(beta, &b_blocks[j]);
+            }
+            (wa, wb)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, StackTerm};
+
+    #[test]
+    fn stacked_job_product_equals_combination() {
+        let mut rng = Pcg64::seed_from(1);
+        let part = Partitioning::rxc(2, 2, 3, 4, 3);
+        let a = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(4, 6, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let prods = part.true_products(&a, &b);
+        let recipe = JobRecipe::Stacked {
+            terms: vec![
+                StackTerm { unknown: 0, coeff: 2.0 },
+                StackTerm { unknown: 3, coeff: -1.5 },
+            ],
+        };
+        let (wa, wb) = build_job_matrices(&part, &a_blocks, &b_blocks, &recipe);
+        assert_eq!(wa.shape(), (3, 8));
+        assert_eq!(wb.shape(), (8, 3));
+        let got = matmul(&wa, &wb);
+        let mut want = prods[0].clone();
+        want.scale(2.0);
+        want.axpy(-1.5, &prods[3]);
+        assert!(got.allclose(&want, 1e-10));
+    }
+
+    #[test]
+    fn rank_one_job_product_equals_khatri_rao_combination() {
+        let mut rng = Pcg64::seed_from(2);
+        let part = Partitioning::cxr(3, 4, 3, 5);
+        let a = Matrix::randn(4, 9, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(9, 5, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let recipe = JobRecipe::RankOne {
+            a_coeffs: vec![(0, 1.0), (2, 0.5)],
+            b_coeffs: vec![(1, -1.0), (2, 2.0)],
+        };
+        let (wa, wb) = build_job_matrices(&part, &a_blocks, &b_blocks, &recipe);
+        let got = matmul(&wa, &wb);
+        // expand: Σ_{i,j} αβ A_i B_j
+        let mut want = Matrix::zeros(4, 5);
+        for &(i, al) in &[(0usize, 1.0), (2usize, 0.5)] {
+            for &(j, be) in &[(1usize, -1.0), (2usize, 2.0)] {
+                want.axpy(al * be, &matmul(&a_blocks[i], &b_blocks[j]));
+            }
+        }
+        assert!(got.allclose(&want, 1e-10));
+    }
+
+    #[test]
+    fn plan_build_classifies_and_generates() {
+        let mut rng = Pcg64::seed_from(3);
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let a = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let plan = Plan::build(&part, spec, 3, 12, &a, &b, &mut rng).unwrap();
+        assert_eq!(plan.workers(), 12);
+        assert_eq!(plan.cm.n_classes, 3);
+        assert_eq!(plan.true_products().len(), 9);
+        assert_eq!(plan.total_work_factor(), 12 * 9); // dense MDS jobs
+        assert!(plan.c_true.allclose(&matmul(&a, &b), 1e-12));
+    }
+}

@@ -1,0 +1,111 @@
+//! Parametric digit renderer: a deterministic MNIST stand-in.
+//!
+//! Each digit 0–9 is drawn from a 16-segment template (the classic
+//! seven-segment layout plus diagonals) on a 28×28 canvas, with random
+//! translation (±3 px), per-stroke thickness jitter, pixel dropout, and
+//! additive Gaussian noise. Pixels are clamped to `[0, 1]` like
+//! normalized MNIST.
+
+use crate::linalg::Matrix;
+use crate::rng::{Normal, Pcg64, Sample};
+
+use super::Dataset;
+
+const SIDE: usize = 28;
+
+/// Segment endpoints on a 20×12 glyph box (x across, y down), chosen so
+/// every digit is visually distinct: (x0, y0, x1, y1) in glyph units.
+fn segments_of(digit: usize) -> &'static [(f64, f64, f64, f64)] {
+    // canonical seven segments
+    const TOP: (f64, f64, f64, f64) = (1.0, 0.0, 11.0, 0.0);
+    const TL: (f64, f64, f64, f64) = (0.0, 1.0, 0.0, 9.0);
+    const TR: (f64, f64, f64, f64) = (12.0, 1.0, 12.0, 9.0);
+    const MID: (f64, f64, f64, f64) = (1.0, 10.0, 11.0, 10.0);
+    const BL: (f64, f64, f64, f64) = (0.0, 11.0, 0.0, 19.0);
+    const BR: (f64, f64, f64, f64) = (12.0, 11.0, 12.0, 19.0);
+    const BOT: (f64, f64, f64, f64) = (1.0, 20.0, 11.0, 20.0);
+    const DIAG: (f64, f64, f64, f64) = (11.0, 1.0, 1.0, 19.0); // for 7's slash
+
+    match digit {
+        0 => &[TOP, TL, TR, BL, BR, BOT],
+        1 => &[TR, BR],
+        2 => &[TOP, TR, MID, BL, BOT],
+        3 => &[TOP, TR, MID, BR, BOT],
+        4 => &[TL, TR, MID, BR],
+        5 => &[TOP, TL, MID, BR, BOT],
+        6 => &[TOP, TL, MID, BL, BR, BOT],
+        7 => &[TOP, DIAG],
+        8 => &[TOP, TL, TR, MID, BL, BR, BOT],
+        9 => &[TOP, TL, TR, MID, BR, BOT],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Render one digit with jitter into a 784-dim row.
+fn render(digit: usize, rng: &mut Pcg64, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), SIDE * SIDE);
+    out.fill(0.0);
+    // glyph box is 13 wide × 21 tall in glyph units; scale to ~16×21 px
+    let scale_x = 1.15 + 0.15 * (rng.next_f64() - 0.5);
+    let scale_y = 1.0 + 0.12 * (rng.next_f64() - 0.5);
+    let jitter_x = 6.0 + 3.0 * (rng.next_f64() - 0.5) * 2.0;
+    let jitter_y = 3.0 + 3.0 * (rng.next_f64() - 0.5) * 2.0;
+    let thickness = 1.0 + 0.5 * rng.next_f64();
+    for &(x0, y0, x1, y1) in segments_of(digit) {
+        let (px0, py0) = (x0 * scale_x + jitter_x, y0 * scale_y + jitter_y);
+        let (px1, py1) = (x1 * scale_x + jitter_x, y1 * scale_y + jitter_y);
+        draw_line(out, px0, py0, px1, py1, thickness);
+    }
+    // pixel dropout + noise
+    let noise = Normal::new(0.0, 0.08);
+    for v in out.iter_mut() {
+        if *v > 0.0 && rng.next_f64() < 0.05 {
+            *v = 0.0;
+        }
+        *v = (*v + noise.sample(rng)).clamp(0.0, 1.0);
+    }
+}
+
+/// Draw an anti-aliased thick line segment onto the canvas.
+fn draw_line(out: &mut [f64], x0: f64, y0: f64, x1: f64, y1: f64, thickness: f64) {
+    let dx = x1 - x0;
+    let dy = y1 - y0;
+    let len2 = (dx * dx + dy * dy).max(1e-9);
+    let min_x = (x0.min(x1) - thickness - 1.0).floor().max(0.0) as usize;
+    let max_x = (x0.max(x1) + thickness + 1.0).ceil().min((SIDE - 1) as f64) as usize;
+    let min_y = (y0.min(y1) - thickness - 1.0).floor().max(0.0) as usize;
+    let max_y = (y0.max(y1) + thickness + 1.0).ceil().min((SIDE - 1) as f64) as usize;
+    for y in min_y..=max_y {
+        for x in min_x..=max_x {
+            let (px, py) = (x as f64, y as f64);
+            // distance from pixel to the segment
+            let t = (((px - x0) * dx + (py - y0) * dy) / len2).clamp(0.0, 1.0);
+            let (cx, cy) = (x0 + t * dx, y0 + t * dy);
+            let d = ((px - cx).powi(2) + (py - cy).powi(2)).sqrt();
+            let intensity = (1.2 * (thickness - d + 0.5)).clamp(0.0, 1.0);
+            let idx = y * SIDE + x;
+            out[idx] = out[idx].max(intensity);
+        }
+    }
+}
+
+/// Generate a synthetic digit dataset of `n` samples. `class_seed` fixes
+/// the label sequence independently of the pixel jitter, so train/test
+/// splits with different seeds are disjoint draws from the same
+/// distribution.
+pub fn synthetic_digits(n: usize, class_seed: u64, rng: &mut Pcg64) -> Dataset {
+    let mut label_rng = Pcg64::seed_from(class_seed);
+    let mut x = Matrix::zeros(n, SIDE * SIDE);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        // round-robin base + shuffle keeps all classes present
+        let label = if i < 10 {
+            i
+        } else {
+            label_rng.next_bounded(10) as usize
+        };
+        render(label, rng, x.row_mut(i));
+        labels.push(label);
+    }
+    Dataset::new(x, labels, 10)
+}

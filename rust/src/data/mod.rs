@@ -1,0 +1,147 @@
+//! Synthetic datasets standing in for MNIST and CIFAR-10 (no network
+//! access in this environment — see DESIGN.md §5 for why the
+//! substitution preserves the experiments' behaviour).
+//!
+//! * [`synthetic_digits`] — a deterministic parametric digit renderer:
+//!   seven-segment-style glyphs on a 28×28 canvas with random affine
+//!   jitter, stroke-thickness variation and Gaussian noise. Same shapes
+//!   and layer dims as MNIST (Table VI), genuinely learnable, and
+//!   gradients sparsify under eq.(34) thresholding just like Fig. 5.
+//! * [`synthetic_cifar`] — class-conditional multi-scale textures on a
+//!   32×32×3 canvas (per-class frequency/phase/color signature + noise),
+//!   matching the CIFAR CNN input of Table V.
+
+mod cifar;
+mod digits;
+
+pub use cifar::synthetic_cifar;
+pub use digits::synthetic_digits;
+
+use crate::linalg::Matrix;
+
+/// An in-memory classification dataset: flat feature rows + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `(num_samples, feature_dim)`.
+    pub x: Matrix,
+    /// Class labels.
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, labels: Vec<usize>, num_classes: usize) -> Self {
+        assert_eq!(x.rows(), labels.len());
+        assert!(labels.iter().all(|&l| l < num_classes));
+        Dataset { x, labels, num_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Gather a mini-batch `(X, Y_onehot)` by sample indices.
+    pub fn batch(&self, idx: &[usize]) -> (Matrix, Matrix) {
+        let mut x = Matrix::zeros(idx.len(), self.x.cols());
+        let mut y = Matrix::zeros(idx.len(), self.num_classes);
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.x.row(i));
+            y[(r, self.labels[i])] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// The whole dataset as one batch.
+    pub fn all(&self) -> (Matrix, Matrix) {
+        let idx: Vec<usize> = (0..self.len()).collect();
+        self.batch(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn batch_gathers_correct_rows() {
+        let x = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f64);
+        let d = Dataset::new(x, vec![0, 1, 2, 1], 3);
+        let (bx, by) = d.batch(&[2, 0]);
+        assert_eq!(bx.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(bx.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(by[(0, 2)], 1.0);
+        assert_eq!(by[(1, 0)], 1.0);
+        assert_eq!(by.row(0).iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn digits_dataset_properties() {
+        let mut rng = Pcg64::seed_from(1);
+        let d = synthetic_digits(100, 42, &mut rng);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.feature_dim(), 784);
+        assert_eq!(d.num_classes, 10);
+        // pixel range is [0, 1]
+        assert!(d.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // all classes present
+        let mut seen = vec![false; 10];
+        for &l in &d.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn digits_deterministic_given_seed() {
+        let mut r1 = Pcg64::seed_from(9);
+        let mut r2 = Pcg64::seed_from(9);
+        let a = synthetic_digits(20, 5, &mut r1);
+        let b = synthetic_digits(20, 5, &mut r2);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn digit_classes_are_distinguishable() {
+        // mean images of different classes must differ substantially —
+        // otherwise the classification task is vacuous
+        let mut rng = Pcg64::seed_from(2);
+        let d = synthetic_digits(500, 3, &mut rng);
+        let mut means = vec![vec![0.0; 784]; 10];
+        let mut counts = vec![0usize; 10];
+        for (i, &l) in d.labels.iter().enumerate() {
+            for (m, &v) in means[l].iter_mut().zip(d.x.row(i)) {
+                *m += v;
+            }
+            counts[l] += 1;
+        }
+        for (m, &c) in means.iter_mut().zip(counts.iter()) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        assert!(dist(&means[0], &means[1]) > 1.0);
+        assert!(dist(&means[3], &means[8]) > 1.0);
+    }
+
+    #[test]
+    fn cifar_dataset_properties() {
+        let mut rng = Pcg64::seed_from(3);
+        let d = synthetic_cifar(60, 16, 7, &mut rng);
+        assert_eq!(d.len(), 60);
+        assert_eq!(d.feature_dim(), 3 * 16 * 16);
+        assert_eq!(d.num_classes, 10);
+    }
+}

@@ -1,0 +1,155 @@
+//! Ablations beyond the paper:
+//!
+//! * `ablation-encoding` — the paper's eq. (17) rank-one encoding vs the
+//!   stacked exact-RLC reading (DESIGN.md §2): how much loss does the
+//!   Khatri-Rao structure + cross-term contamination cost?
+//! * `ablation-gamma` — sensitivity of the loss to the window selection
+//!   polynomial, which the paper picks "arbitrarily" and flags as an
+//!   optimization opportunity in its closing remark of §VI.
+
+use crate::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use crate::config::SyntheticSpec;
+use crate::util::csv::CsvTable;
+use crate::util::linspace;
+use crate::util::plot::{render, Series};
+
+use super::common::{mc_loss_vs_time, ExpContext};
+
+pub fn run_encoding(ctx: &ExpContext) -> anyhow::Result<()> {
+    let ts = linspace(0.0, 2.0, 21);
+    let instances = 2;
+    let trials = (ctx.trials / 2).max(50);
+    let mut table = CsvTable::new(&[
+        "t",
+        "rxc_now_stacked",
+        "rxc_now_rank1",
+        "rxc_ew_stacked",
+        "rxc_ew_rank1",
+        "cxr_now_stacked",
+        "cxr_now_rank1",
+    ]);
+    let rxc = SyntheticSpec::fig9_rxc().scaled(ctx.scale_factor());
+    let cxr = SyntheticSpec::fig9_cxr().scaled(ctx.scale_factor());
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    let mut series = Vec::new();
+    let cfgs: Vec<(&str, &SyntheticSpec, CodeKind, EncodeStyle)> = vec![
+        ("rxc_now_stacked", &rxc, CodeKind::NowUep(rxc.gamma.clone()), EncodeStyle::Stacked),
+        ("rxc_now_rank1", &rxc, CodeKind::NowUep(rxc.gamma.clone()), EncodeStyle::RankOne),
+        ("rxc_ew_stacked", &rxc, CodeKind::EwUep(rxc.gamma.clone()), EncodeStyle::Stacked),
+        ("rxc_ew_rank1", &rxc, CodeKind::EwUep(rxc.gamma.clone()), EncodeStyle::RankOne),
+        ("cxr_now_stacked", &cxr, CodeKind::NowUep(cxr.gamma.clone()), EncodeStyle::Stacked),
+        ("cxr_now_rank1", &cxr, CodeKind::NowUep(cxr.gamma.clone()), EncodeStyle::RankOne),
+    ];
+    for (name, spec, kind, style) in &cfgs {
+        let code = CodeSpec::new(kind.clone(), *style);
+        let losses =
+            mc_loss_vs_time(spec, &code, &ts, instances, trials, ctx.seed, ctx.threads);
+        series.push(Series::new(name, ts.clone(), losses.clone()));
+        cols.push(losses);
+    }
+    for i in 0..ts.len() {
+        let mut row = vec![ts[i]];
+        row.extend(cols.iter().map(|c| c[i]));
+        table.push_f64(&row);
+    }
+    println!(
+        "{}",
+        render("Ablation — stacked vs rank-one encodings", &series, 64, 18)
+    );
+    ctx.write_csv("ablation_encoding_styles.csv", &table)?;
+    // summarize the gap at a mid deadline
+    let mid = ts.len() / 2;
+    println!(
+        "  at t={:.2}: r×c NOW stacked {:.3} vs rank-one {:.3}; c×r NOW stacked {:.3} vs rank-one {:.3}",
+        ts[mid], cols[0][mid], cols[1][mid], cols[4][mid], cols[5][mid]
+    );
+    Ok(())
+}
+
+pub fn run_gamma(ctx: &ExpContext) -> anyhow::Result<()> {
+    // sweep the weight on the most-important window; split the remainder
+    // between the other two windows in the paper's 0.35:0.25 ratio
+    let g1s = [0.2, 0.33, 0.4, 0.5, 0.6, 0.75, 0.9];
+    let spec0 = SyntheticSpec::fig9_rxc().scaled(ctx.scale_factor());
+    let t_evals = [0.25, 0.5, 1.0];
+    let mut table = CsvTable::new(&["gamma1", "loss_t025", "loss_t05", "loss_t1"]);
+    let trials = (ctx.trials / 2).max(50);
+    let mut rows = Vec::new();
+    for &g1 in &g1s {
+        let rest = 1.0 - g1;
+        let gamma =
+            WindowPolynomial::new(&[g1, rest * 0.35 / 0.60, rest * 0.25 / 0.60]);
+        let mut spec = spec0.clone();
+        spec.gamma = gamma.clone();
+        let code = CodeSpec::new(CodeKind::EwUep(gamma), EncodeStyle::Stacked);
+        let losses =
+            mc_loss_vs_time(&spec, &code, &t_evals, 2, trials, ctx.seed, ctx.threads);
+        table.push_f64(&[g1, losses[0], losses[1], losses[2]]);
+        rows.push((g1, losses));
+    }
+    println!("Ablation — EW loss vs window polynomial (Γ₁ sweep, r×c):");
+    for (g1, losses) in &rows {
+        println!(
+            "  Γ₁={g1:.2}: loss(t=0.25)={:.3} loss(0.5)={:.3} loss(1)={:.3}",
+            losses[0], losses[1], losses[2]
+        );
+    }
+    ctx.write_csv("ablation_gamma_sweep.csv", &table)?;
+
+    // The paper's future-work item, done: optimize Γ on the Theorem 2
+    // objective (analysis::optimize_gamma) at each deadline.
+    let mut opt_table = CsvTable::new(&["t_star", "g1", "g2", "g3", "loss", "paper_gamma_loss"]);
+    for &t_star in &t_evals {
+        let th = spec0.theorem();
+        let opt = crate::analysis::optimize_gamma(
+            &th,
+            crate::analysis::UepStrategy::Ew,
+            t_star,
+            6,
+        );
+        println!(
+            "  optimized Γ at t*={t_star}: ({:.3}, {:.3}, {:.3}) → loss {:.4} (paper Γ: {:.4})",
+            opt.gamma[0], opt.gamma[1], opt.gamma[2], opt.loss, opt.initial_loss
+        );
+        opt_table.push_f64(&[
+            t_star, opt.gamma[0], opt.gamma[1], opt.gamma[2], opt.loss, opt.initial_loss,
+        ]);
+    }
+    ctx.write_csv("ablation_gamma_optimized.csv", &opt_table)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::UnknownSpace;
+
+    /// Rank-one NOW in c×r wastes rank on ghost unknowns ⇒ at equal
+    /// packet counts it recovers no more than stacked.
+    #[test]
+    fn rank1_cxr_weaker_than_stacked() {
+        let spec = SyntheticSpec::fig9_cxr().scaled(15);
+        let ts = [0.6];
+        let stacked = CodeSpec::new(
+            CodeKind::NowUep(spec.gamma.clone()),
+            EncodeStyle::Stacked,
+        );
+        let rank1 = CodeSpec::new(
+            CodeKind::NowUep(spec.gamma.clone()),
+            EncodeStyle::RankOne,
+        );
+        let ls = mc_loss_vs_time(&spec, &stacked, &ts, 1, 150, 23, 4);
+        let lr = mc_loss_vs_time(&spec, &rank1, &ts, 1, 150, 23, 4);
+        assert!(
+            lr[0] >= ls[0] - 0.02,
+            "rank-one {} unexpectedly beats stacked {}",
+            lr[0],
+            ls[0]
+        );
+        // sanity: the unknown spaces really differ
+        let s1 = UnknownSpace::for_code(&spec.part, EncodeStyle::Stacked);
+        let s2 = UnknownSpace::for_code(&spec.part, EncodeStyle::RankOne);
+        assert_eq!(s1.n_total, 9);
+        assert_eq!(s2.n_total, 81);
+    }
+}

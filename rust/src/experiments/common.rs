@@ -1,0 +1,198 @@
+//! Shared experiment plumbing: context (output dir, scale, seeds) and
+//! the Monte-Carlo loss sweeps over synthetic Assumption-1 matrices.
+
+use std::path::PathBuf;
+
+use crate::coding::CodeSpec;
+use crate::config::SyntheticSpec;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::sim::{loss_trace_packets, StragglerSim};
+use crate::util::csv::CsvTable;
+use crate::util::pool::available_parallelism;
+
+/// Common experiment options (from the CLI).
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    /// Output directory for CSVs.
+    pub out: PathBuf,
+    /// Monte-Carlo trials per configuration.
+    pub trials: usize,
+    /// Paper-scale run (full matrix sizes / dataset sizes / epochs).
+    pub full: bool,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            out: PathBuf::from("results"),
+            trials: 400,
+            full: false,
+            seed: 2021,
+            threads: available_parallelism(),
+        }
+    }
+}
+
+impl ExpContext {
+    /// Matrix-size divisor: paper scale when `--full`, 6× smaller dims
+    /// otherwise (same block structure, ~200× fewer flops).
+    pub fn scale_factor(&self) -> usize {
+        if self.full {
+            1
+        } else {
+            6
+        }
+    }
+
+    /// Write a CSV table and echo the path.
+    pub fn write_csv(&self, name: &str, table: &CsvTable) -> anyhow::Result<()> {
+        let path = self.out.join(name);
+        table.write(&path)?;
+        println!("  wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Monte-Carlo estimate of the *normalized expected loss at deadline t*
+/// for each t in `ts`: fresh Assumption-1 matrices every `instance`,
+/// fresh packets + arrivals every trial, loss read from the Gram matrix.
+pub fn mc_loss_vs_time(
+    spec: &SyntheticSpec,
+    code: &CodeSpec,
+    ts: &[f64],
+    instances: usize,
+    trials_per_instance: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<f64> {
+    let sums = mc_sweep(
+        spec,
+        code,
+        instances,
+        trials_per_instance,
+        seed,
+        threads,
+        |trace, energy| {
+            ts.iter()
+                .map(|&t| crate::sim::loss_at(trace, t) / energy)
+                .collect::<Vec<f64>>()
+        },
+    );
+    sums
+}
+
+/// Monte-Carlo estimate of the normalized loss after exactly `w`
+/// received packets, for `w = 0..=workers`.
+pub fn mc_loss_vs_packets(
+    spec: &SyntheticSpec,
+    code: &CodeSpec,
+    instances: usize,
+    trials_per_instance: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<f64> {
+    mc_sweep(
+        spec,
+        code,
+        instances,
+        trials_per_instance,
+        seed,
+        threads,
+        |trace, energy| {
+            // trace[i] is the state after i arrivals
+            trace.iter().map(|p| p.loss / energy).collect::<Vec<f64>>()
+        },
+    )
+}
+
+/// Shared sweep skeleton: returns the per-point mean of `f(trace)`.
+fn mc_sweep<F>(
+    spec: &SyntheticSpec,
+    code: &CodeSpec,
+    instances: usize,
+    trials_per_instance: usize,
+    seed: u64,
+    threads: usize,
+    f: F,
+) -> Vec<f64>
+where
+    F: Fn(&[crate::sim::LossTracePoint], f64) -> Vec<f64> + Sync,
+{
+    let cm = spec.class_map();
+    let sim = StragglerSim::new(spec.workers, spec.latency.clone(), spec.omega());
+    let mut acc: Vec<f64> = Vec::new();
+    let mut count = 0usize;
+    for inst in 0..instances {
+        let mut rng = Pcg64::with_stream(seed, 1000 + inst as u64);
+        let (a, b) = spec.sample_matrices(&mut rng);
+        let gram = spec.part.gram(&spec.part.true_products(&a, &b));
+        let energy = gram_energy(&spec.part, &gram);
+        let per_trial: Vec<Vec<f64>> =
+            crate::sim::monte_carlo(trials_per_instance, threads, seed ^ (inst as u64) << 32, |rng, _| {
+                let packets =
+                    code.generate_packets(&spec.part, &cm, spec.workers, rng);
+                let arrivals = sim.sample_arrivals(rng);
+                let trace =
+                    loss_trace_packets(&spec.part, code, &gram, &packets, &arrivals);
+                f(&trace, energy)
+            });
+        for row in per_trial {
+            if acc.is_empty() {
+                acc = vec![0.0; row.len()];
+            }
+            for (a, v) in acc.iter_mut().zip(row.iter()) {
+                *a += v;
+            }
+            count += 1;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= count.max(1) as f64;
+    }
+    acc
+}
+
+/// `‖C‖²_F` from the Gram matrix (loss with nothing recovered).
+pub fn gram_energy(part: &crate::partition::Partitioning, gram: &Matrix) -> f64 {
+    part.loss_from_gram(gram, &vec![false; part.num_products()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, EncodeStyle};
+
+    #[test]
+    fn mc_time_sweep_is_monotone_and_normalized() {
+        let spec = crate::config::SyntheticSpec::fig9_rxc().scaled(15);
+        let code = CodeSpec::new(
+            CodeKind::EwUep(spec.gamma.clone()),
+            EncodeStyle::Stacked,
+        );
+        let ts = crate::util::linspace(0.0, 3.0, 7);
+        let losses = mc_loss_vs_time(&spec, &code, &ts, 2, 40, 9, 4);
+        assert_eq!(losses.len(), 7);
+        assert!((losses[0] - 1.0).abs() < 1e-9, "t=0 loss {}", losses[0]);
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+        assert!(losses[6] < 0.2, "loss at t=3: {}", losses[6]);
+    }
+
+    #[test]
+    fn mc_packet_sweep_ends_at_zero_for_mds() {
+        let spec = crate::config::SyntheticSpec::fig9_cxr().scaled(15);
+        let code = CodeSpec::stacked(CodeKind::Mds);
+        let losses = mc_loss_vs_packets(&spec, &code, 1, 30, 11, 4);
+        assert_eq!(losses.len(), spec.workers + 1);
+        assert!((losses[0] - 1.0).abs() < 1e-9);
+        // before 9 packets nothing decodes
+        for &l in &losses[..9] {
+            assert!((l - 1.0).abs() < 1e-9);
+        }
+        assert!(losses[9].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,118 @@
+//! Fig. 9: normalized expected loss vs time for NOW/EW-UEP under both
+//! partitioning paradigms, against the MDS baseline — Monte-Carlo over
+//! Assumption-1 matrices plus the analytic MDS curve, W=30, Exp(λ=1).
+//!
+//! Headline shape to reproduce (paper §VI): NOW beats MDS until t≈0.44;
+//! EW beats MDS until t≈0.825 (r×c) / 0.975 (c×r); afterwards MDS wins
+//! because it fully recovers at 9 packets.
+
+use crate::analysis::mds_loss_vs_time;
+use crate::coding::{CodeKind, CodeSpec, EncodeStyle};
+use crate::config::SyntheticSpec;
+use crate::util::csv::CsvTable;
+use crate::util::linspace;
+use crate::util::plot::{render, Series};
+
+use super::common::{mc_loss_vs_time, ExpContext};
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let rxc = SyntheticSpec::fig9_rxc().scaled(ctx.scale_factor());
+    let cxr = SyntheticSpec::fig9_cxr().scaled(ctx.scale_factor());
+    let ts = linspace(0.0, 2.0, 41);
+    let instances = if ctx.full { 4 } else { 2 };
+    let trials = ctx.trials / instances.max(1);
+
+    let mut cfgs: Vec<(String, &SyntheticSpec, CodeSpec)> = Vec::new();
+    for (tag, spec) in [("rxc", &rxc), ("cxr", &cxr)] {
+        cfgs.push((
+            format!("now_{tag}"),
+            spec,
+            CodeSpec::new(CodeKind::NowUep(spec.gamma.clone()), EncodeStyle::Stacked),
+        ));
+        cfgs.push((
+            format!("ew_{tag}"),
+            spec,
+            CodeSpec::new(CodeKind::EwUep(spec.gamma.clone()), EncodeStyle::Stacked),
+        ));
+    }
+    let mut header = vec!["t".to_string()];
+    let mut columns: Vec<Vec<f64>> = vec![ts.clone()];
+    let mut series = Vec::new();
+    for (name, spec, code) in &cfgs {
+        let losses =
+            mc_loss_vs_time(spec, code, &ts, instances, trials, ctx.seed, ctx.threads);
+        series.push(Series::new(name, ts.clone(), losses.clone()));
+        header.push(name.clone());
+        columns.push(losses);
+    }
+    // analytic MDS (same for both paradigms under Assumption 1)
+    let mds: Vec<f64> = ts
+        .iter()
+        .map(|&t| mds_loss_vs_time(9, rxc.workers, &rxc.latency, rxc.omega(), t))
+        .collect();
+    series.push(Series::new("mds", ts.clone(), mds.clone()));
+    header.push("mds".to_string());
+    columns.push(mds.clone());
+
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = CsvTable::new(&header_refs);
+    for i in 0..ts.len() {
+        let row: Vec<f64> = columns.iter().map(|c| c[i]).collect();
+        table.push_f64(&row);
+    }
+    println!("{}", render("Fig. 9 — normalized loss vs time", &series, 64, 18));
+    ctx.write_csv("fig9_loss_vs_time.csv", &table)?;
+
+    // crossover report: the last time at which UEP is meaningfully below
+    // MDS (both curves sit at ≈1.0 near t=0, so require a margin)
+    for name in ["now_rxc", "ew_rxc", "now_cxr", "ew_cxr"] {
+        let idx = header.iter().position(|h| h == name).unwrap();
+        let cross = ts
+            .iter()
+            .zip(columns[idx].iter().zip(mds.iter()))
+            .filter(|(_, (u, m))| **u < **m - 5e-3)
+            .map(|(t, _)| *t)
+            .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.max(t))));
+        println!(
+            "  {name} below MDS up to t ≈ {}",
+            cross.map(|t| format!("{t:.3}")).unwrap_or_else(|| "never".into())
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's headline orderings, at reduced scale/trials.
+    #[test]
+    fn fig9_shape_holds() {
+        let spec = SyntheticSpec::fig9_rxc().scaled(15);
+        let ts = [0.2, 1.6];
+        let now = CodeSpec::new(
+            CodeKind::NowUep(spec.gamma.clone()),
+            EncodeStyle::Stacked,
+        );
+        let ew = CodeSpec::new(
+            CodeKind::EwUep(spec.gamma.clone()),
+            EncodeStyle::Stacked,
+        );
+        let l_now = mc_loss_vs_time(&spec, &now, &ts, 1, 120, 5, 4);
+        let l_ew = mc_loss_vs_time(&spec, &ew, &ts, 1, 120, 5, 4);
+        let mds_early = mds_loss_vs_time(9, 30, &spec.latency, spec.omega(), 0.2);
+        let mds_late = mds_loss_vs_time(9, 30, &spec.latency, spec.omega(), 1.6);
+        // early: UEP provides partial recovery, MDS essentially nothing
+        assert!(
+            l_now[0] < mds_early,
+            "NOW {} should beat MDS {} at t=0.2",
+            l_now[0],
+            mds_early
+        );
+        // EW protects the energy-heavy class harder than NOW early on
+        assert!(l_ew[0] < l_now[0] + 0.02, "EW {} vs NOW {}", l_ew[0], l_now[0]);
+        // late: both MDS and UEP approach full recovery
+        assert!(mds_late < 0.3, "MDS late {mds_late}");
+        assert!(l_now[1] < 0.2, "NOW late {}", l_now[1]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Reproduction harness: one module per figure/table of the paper's
+//! evaluation (see DESIGN.md §4 for the experiment index). Every
+//! experiment writes CSV under the output directory and prints an ASCII
+//! rendition of the figure plus a summary of the headline comparisons.
+
+mod ablation;
+mod common;
+mod fig1;
+mod fig10;
+mod fig11;
+mod fig5;
+mod fig8;
+mod fig9;
+mod mnist;
+mod params;
+
+pub use common::{mc_loss_vs_packets, mc_loss_vs_time, ExpContext};
+
+/// All registered experiments: `(name, description, runner)`.
+pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow::Result<()>)>
+{
+    vec![
+        ("fig8", "decoding probabilities of NOW/EW-UEP (paper Fig. 8)", fig8::run),
+        ("fig9", "normalized loss vs time, UEP vs MDS (paper Fig. 9)", fig9::run),
+        ("fig10", "normalized loss vs received packets (paper Fig. 10)", fig10::run),
+        ("fig11", "c×r simulation vs Theorem 3 bound (paper Fig. 11)", fig11::run),
+        ("fig5", "gradient/weight/input Gaussian fits + Table II sparsity", fig5::run),
+        ("fig13", "MNIST accuracy vs iteration, r×c (paper Fig. 13)", mnist::run_fig13),
+        ("fig14", "MNIST accuracy vs iteration, c×r (paper Fig. 14)", mnist::run_fig14),
+        ("fig15", "MNIST accuracy vs T_max (paper Fig. 15)", mnist::run_fig15),
+        ("fig1", "CIFAR-like CNN accuracy vs epoch (paper Fig. 1)", fig1::run),
+        ("params", "coding parameter tables (paper Tables III & VII)", params::run),
+        (
+            "ablation-encoding",
+            "stacked vs rank-one encodings (DESIGN.md §2 ambiguity)",
+            ablation::run_encoding,
+        ),
+        (
+            "ablation-gamma",
+            "window-polynomial sensitivity (paper §VI closing remark)",
+            ablation::run_gamma,
+        ),
+    ]
+}
+
+/// Run one experiment by name ("all" runs everything).
+pub fn run(name: &str, ctx: &ExpContext) -> anyhow::Result<()> {
+    if name == "all" {
+        for (n, _, f) in registry() {
+            println!("\n=== experiment {n} ===");
+            f(ctx)?;
+        }
+        return Ok(());
+    }
+    for (n, _, f) in registry() {
+        if n == name {
+            return f(ctx);
+        }
+    }
+    anyhow::bail!(
+        "unknown experiment '{name}'; available: {}",
+        registry().iter().map(|(n, _, _)| *n).collect::<Vec<_>>().join(", ")
+    )
+}

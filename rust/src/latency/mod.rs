@@ -1,0 +1,200 @@
+//! Worker-latency models (paper §II eq. 8, Remark 1) and order-statistic
+//! analytics (§III-A eqs. 13–14).
+//!
+//! Worker completion times are i.i.d. `T_w ~ F`. For fair comparisons
+//! across coding schemes with different worker counts, the paper scales
+//! time as `F(Ω·t)` with `Ω = (#sub-products)/W` — total service capacity
+//! stays constant as `W` changes.
+
+use crate::rng::{Exponential, Pareto, Pcg64, Sample};
+
+/// An i.i.d. worker completion-time distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// `F(t) = 1 − e^{−λt}` — the paper's model throughout.
+    Exponential { lambda: f64 },
+    /// `F(t) = 1 − e^{−λ(t−s)}` for `t ≥ s`: constant setup + exp tail
+    /// (the classical coded-computation model of Lee et al.).
+    ShiftedExponential { shift: f64, lambda: f64 },
+    /// Every worker finishes at exactly `t` (the "no stragglers" red
+    /// curve in Figs. 1/13–15).
+    Deterministic { t: f64 },
+    /// Heavy-tailed stragglers (ablation).
+    Pareto { x_min: f64, alpha: f64 },
+}
+
+impl LatencyModel {
+    /// The paper's default: `Exponential { lambda }`.
+    pub fn exp(lambda: f64) -> Self {
+        LatencyModel::Exponential { lambda }
+    }
+
+    /// CDF `F(t)` (unscaled).
+    pub fn cdf(&self, t: f64) -> f64 {
+        match self {
+            LatencyModel::Exponential { lambda } => Exponential::new(*lambda).cdf(t),
+            LatencyModel::ShiftedExponential { shift, lambda } => {
+                if t <= *shift {
+                    0.0
+                } else {
+                    1.0 - (-(lambda) * (t - shift)).exp()
+                }
+            }
+            LatencyModel::Deterministic { t: t0 } => {
+                if t >= *t0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            LatencyModel::Pareto { x_min, alpha } => Pareto::new(*x_min, *alpha).cdf(t),
+        }
+    }
+
+    /// CDF under the paper's Ω scaling: `P[T ≤ t] = F(Ω·t)`.
+    pub fn cdf_scaled(&self, t: f64, omega: f64) -> f64 {
+        self.cdf(omega * t)
+    }
+
+    /// Sample an unscaled completion time.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            LatencyModel::Exponential { lambda } => Exponential::new(*lambda).sample(rng),
+            LatencyModel::ShiftedExponential { shift, lambda } => {
+                shift + Exponential::new(*lambda).sample(rng)
+            }
+            LatencyModel::Deterministic { t } => *t,
+            LatencyModel::Pareto { x_min, alpha } => Pareto::new(*x_min, *alpha).sample(rng),
+        }
+    }
+
+    /// Sample a completion time under Ω scaling (`T' = T/Ω`).
+    pub fn sample_scaled(&self, omega: f64, rng: &mut Pcg64) -> f64 {
+        assert!(omega > 0.0);
+        self.sample(rng) / omega
+    }
+
+    /// Mean of the unscaled distribution.
+    pub fn mean(&self) -> f64 {
+        match self {
+            LatencyModel::Exponential { lambda } => 1.0 / lambda,
+            LatencyModel::ShiftedExponential { shift, lambda } => shift + 1.0 / lambda,
+            LatencyModel::Deterministic { t } => *t,
+            LatencyModel::Pareto { x_min, alpha } => {
+                if *alpha <= 1.0 {
+                    f64::INFINITY
+                } else {
+                    alpha * x_min / (alpha - 1.0)
+                }
+            }
+        }
+    }
+}
+
+/// The paper's Ω (Remark 1 / Table VII): sub-products per worker.
+pub fn omega(num_subproducts: usize, workers: usize) -> f64 {
+    num_subproducts as f64 / workers as f64
+}
+
+/// Expected value of the `k`-th order statistic (k-th fastest of `w`)
+/// for `Exp(λ)`: `(H_w − H_{w−k})/λ` with `H` the harmonic numbers.
+/// This is the expected time for `k` of `w` workers to finish — the
+/// quantity behind eqs. (13)–(14).
+pub fn exp_order_statistic_mean(w: usize, k: usize, lambda: f64) -> f64 {
+    assert!(k >= 1 && k <= w);
+    let h = |n: usize| (1..=n).map(|i| 1.0 / i as f64).sum::<f64>();
+    (h(w) - h(w - k)) / lambda
+}
+
+/// Lower bound (14) on the expected completion time of `δ`-replication:
+/// `(1/μ)·log((1+δ)/δ) + O(1)`.
+pub fn replication_time_lower_bound(delta: f64, mu: f64) -> f64 {
+    ((1.0 + delta) / delta).ln() / mu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_sanity() {
+        let m = LatencyModel::exp(2.0);
+        assert_eq!(m.cdf(0.0), 0.0);
+        assert!((m.cdf(0.5) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+        assert!(m.cdf(100.0) > 0.999);
+    }
+
+    #[test]
+    fn omega_scaling_makes_workers_slower_when_w_grows() {
+        // Ω = 9/15 < 1 ⇒ scaled time T/Ω > T: each of the 15 workers is
+        // slower so total capacity matches the 9-worker uncoded setup.
+        let om = omega(9, 15);
+        assert!((om - 0.6).abs() < 1e-12);
+        let mut rng = Pcg64::seed_from(1);
+        let m = LatencyModel::exp(1.0);
+        let n = 100_000;
+        let mean_scaled: f64 =
+            (0..n).map(|_| m.sample_scaled(om, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean_scaled - 1.0 / om).abs() < 0.03);
+    }
+
+    #[test]
+    fn scaled_cdf_matches_scaled_samples() {
+        let mut rng = Pcg64::seed_from(2);
+        let m = LatencyModel::exp(0.5);
+        let om = 9.0 / 18.0;
+        let t = 1.5;
+        let n = 200_000;
+        let emp = (0..n)
+            .filter(|_| m.sample_scaled(om, &mut rng) <= t)
+            .count() as f64
+            / n as f64;
+        assert!((emp - m.cdf_scaled(t, om)).abs() < 0.01);
+    }
+
+    #[test]
+    fn shifted_exponential() {
+        let m = LatencyModel::ShiftedExponential { shift: 1.0, lambda: 2.0 };
+        assert_eq!(m.cdf(0.5), 0.0);
+        assert!(m.cdf(1.5) > 0.0);
+        assert!((m.mean() - 1.5).abs() < 1e-12);
+        let mut rng = Pcg64::seed_from(3);
+        for _ in 0..100 {
+            assert!(m.sample(&mut rng) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_no_stragglers() {
+        let m = LatencyModel::Deterministic { t: 0.7 };
+        let mut rng = Pcg64::seed_from(4);
+        assert_eq!(m.sample(&mut rng), 0.7);
+        assert_eq!(m.cdf(0.69), 0.0);
+        assert_eq!(m.cdf(0.7), 1.0);
+    }
+
+    #[test]
+    fn order_statistic_mean_matches_monte_carlo() {
+        let (w, k, lambda) = (10, 7, 1.0);
+        let analytic = exp_order_statistic_mean(w, k, lambda);
+        let mut rng = Pcg64::seed_from(5);
+        let m = LatencyModel::exp(lambda);
+        let trials = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let mut ts: Vec<f64> = (0..w).map(|_| m.sample(&mut rng)).collect();
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sum += ts[k - 1];
+        }
+        let mc = sum / trials as f64;
+        assert!((analytic - mc).abs() < 0.02, "{analytic} vs {mc}");
+    }
+
+    #[test]
+    fn replication_bound_decreases_with_delta() {
+        let a = replication_time_lower_bound(1.0, 1.0);
+        let b = replication_time_lower_bound(3.0, 1.0);
+        assert!(a > b);
+        assert!((a - 2.0f64.ln()).abs() < 1e-12);
+    }
+}

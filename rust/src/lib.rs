@@ -1,0 +1,41 @@
+//! # uepmm — UEP-coded distributed approximate matrix multiplication
+//!
+//! Rust + JAX + Pallas reproduction of *"Straggler Mitigation through
+//! Unequal Error Protection for Distributed Approximate Matrix
+//! Multiplication"* (Tegin, Hernandez, Rini, Duman, 2021).
+//!
+//! The library implements a parameter server (PS) that distributes coded
+//! sub-products of a matrix multiplication `C = A·B` across `W` workers
+//! with stochastic completion times, protects the high-norm sub-products
+//! with Unequal Error Protection (UEP) random linear codes, and assembles
+//! a progressively improving approximation `Ĉ` by a deadline `T_max`.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the coordinator: [`coding`], [`partition`],
+//!   [`latency`], [`analysis`], [`sim`], [`coordinator`], [`nn`],
+//!   [`experiments`].
+//! * **L2/L1 (build time)** — `python/compile/` lowers the JAX model and
+//!   Pallas kernels to HLO text; [`runtime`] loads and executes them via
+//!   PJRT. Python never runs on the request path.
+
+pub mod analysis;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod latency;
+pub mod linalg;
+pub mod nn;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::linalg::Matrix;
+    pub use crate::rng::Pcg64;
+}

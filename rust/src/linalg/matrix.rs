@@ -1,0 +1,364 @@
+//! Row-major dense matrix with the block operations the paper's
+//! partitioners need (row/column block split + concat), Frobenius norms
+//! (importance classification), and elementwise arithmetic.
+
+use crate::rng::{Normal, Pcg64, Sample};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense, row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Matrix::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// I.i.d. Gaussian entries `N(mean, sd²)` — Assumption 1 matrices.
+    pub fn randn(rows: usize, cols: usize, mean: f64, sd: f64, rng: &mut Pcg64) -> Self {
+        let dist = Normal::new(mean, sd);
+        let data = (0..rows * cols).map(|_| dist.sample(rng)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm `‖A‖²_F` — the importance measure (§IV-A).
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// `‖A - B‖²_F`, the paper's loss (2).
+    pub fn frob_sq_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Extract the sub-matrix at `rows r0..r0+h`, `cols c0..c0+w`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for r in 0..h {
+            let src = &self.data[(r0 + r) * self.cols + c0..(r0 + r) * self.cols + c0 + w];
+            out.row_mut(r).copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `blk` into position `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, blk: &Matrix) {
+        assert!(r0 + blk.rows <= self.rows && c0 + blk.cols <= self.cols);
+        for r in 0..blk.rows {
+            let dst_off = (r0 + r) * self.cols + c0;
+            self.data[dst_off..dst_off + blk.cols].copy_from_slice(blk.row(r));
+        }
+    }
+
+    /// Horizontal (column-wise) concatenation `[A₁, A₂, …]`.
+    pub fn hconcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|p| p.rows == rows), "row mismatch in hconcat");
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut c0 = 0;
+        for p in parts {
+            out.set_block(0, c0, p);
+            c0 += p.cols;
+        }
+        out
+    }
+
+    /// Vertical (row-wise) concatenation `[B₁; B₂; …]`.
+    pub fn vconcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        assert!(parts.iter().all(|p| p.cols == cols), "col mismatch in vconcat");
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut r0 = 0;
+        for p in parts {
+            out.set_block(r0, 0, p);
+            r0 += p.rows;
+        }
+        out
+    }
+
+    /// Split into `n` equal row-blocks. Panics unless `rows % n == 0`.
+    pub fn split_rows(&self, n: usize) -> Vec<Matrix> {
+        assert!(n > 0 && self.rows % n == 0, "rows {} not divisible by {n}", self.rows);
+        let h = self.rows / n;
+        (0..n).map(|i| self.block(i * h, 0, h, self.cols)).collect()
+    }
+
+    /// Split into `n` equal column-blocks. Panics unless `cols % n == 0`.
+    pub fn split_cols(&self, n: usize) -> Vec<Matrix> {
+        assert!(n > 0 && self.cols % n == 0, "cols {} not divisible by {n}", self.cols);
+        let w = self.cols / n;
+        (0..n).map(|i| self.block(0, i * w, self.rows, w)).collect()
+    }
+
+    /// `self += alpha * other` (AXPY).
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `alpha * self`, in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    /// Elementwise difference.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    /// Copy as `f32` (the artifact I/O dtype).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from `f32` data.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// True if all entries are within `tol` of `other`.
+    pub fn allclose(&self, other: &Matrix, tol: f64) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())))
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for r in 0..show_rows {
+            let row: Vec<String> = self
+                .row(r)
+                .iter()
+                .take(8)
+                .map(|x| format!("{x:9.4}"))
+                .collect();
+            let ell = if self.cols > 8 { " …" } else { "" };
+            writeln!(f, "  [{}{}]", row.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrip() {
+        let m = Matrix::from_fn(6, 9, |r, c| (r * 9 + c) as f64);
+        let b = m.block(2, 3, 2, 4);
+        assert_eq!(b[(0, 0)], (2 * 9 + 3) as f64);
+        let mut m2 = Matrix::zeros(6, 9);
+        m2.set_block(2, 3, &b);
+        assert_eq!(m2[(3, 6)], m[(3, 6)]);
+        assert_eq!(m2[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn split_concat_rows_roundtrip() {
+        let m = Matrix::from_fn(9, 4, |r, c| (r * 4 + c) as f64);
+        let parts = m.split_rows(3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1][(0, 0)], 12.0);
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        assert_eq!(Matrix::vconcat(&refs), m);
+    }
+
+    #[test]
+    fn split_concat_cols_roundtrip() {
+        let m = Matrix::from_fn(4, 9, |r, c| (r * 9 + c) as f64);
+        let parts = m.split_cols(3);
+        let refs: Vec<&Matrix> = parts.iter().collect();
+        assert_eq!(Matrix::hconcat(&refs), m);
+    }
+
+    #[test]
+    fn frobenius() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((m.frob_sq() - 30.0).abs() < 1e-12);
+        let z = Matrix::zeros(2, 2);
+        assert_eq!(m.frob_sq_diff(&z), 30.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_fn(3, 5, |r, c| (r + 7 * c) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::seed_from(10);
+        let m = Matrix::randn(200, 200, 1.0, 3.0, &mut rng);
+        let n = (m.rows() * m.cols()) as f64;
+        let mean = m.data().iter().sum::<f64>() / n;
+        let var = m.data().iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 1.0).abs() < 0.05);
+        assert!((var - 9.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Matrix::eye(2);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a[(0, 0)], 3.0);
+        assert_eq!(a[(0, 1)], 2.0);
+        a.scale(0.5);
+        assert_eq!(a[(0, 0)], 1.5);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Matrix::from_fn(3, 3, |r, c| (r * 3 + c) as f64);
+        let f = m.to_f32();
+        let back = Matrix::from_f32(3, 3, &f);
+        assert!(back.allclose(&m, 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_out_of_range_panics() {
+        Matrix::zeros(2, 2).block(1, 1, 2, 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra substrate: the `Matrix` type, blocked/parallel
+//! matrix multiplication (the native execution engine's compute), block
+//! concatenation/extraction used by the partitioners, Frobenius norms
+//! used for importance classification, and LU-based solvers used by the
+//! RLC decoders.
+
+mod matmul;
+mod matrix;
+mod solve;
+
+pub use matmul::{matmul, matmul_into, matmul_naive, matmul_with, MatmulOpts};
+pub use matrix::Matrix;
+pub use solve::{lu_solve, rank, solve_least_squares, Eliminator};

@@ -1,0 +1,431 @@
+//! Linear solvers for RLC decoding.
+//!
+//! * [`lu_solve`] — LU with partial pivoting, multiple right-hand sides:
+//!   decodes a class once `k` coded packets with full-rank coefficients
+//!   have arrived (the Stacked encoder's per-class decode).
+//! * [`Eliminator`] — *incremental* Gaussian elimination that accepts one
+//!   equation at a time and reports which unknowns have become uniquely
+//!   determined: the global decoder for the paper's literal rank-one
+//!   encoding (eq. 17), where packets mix classes.
+//! * [`rank`] — numerical rank via row echelon, used by the analysis
+//!   validation tests.
+
+use super::Matrix;
+
+/// Relative pivot tolerance for rank decisions.
+const PIVOT_TOL: f64 = 1e-9;
+
+/// Solve `A X = B` for square `A` via LU with partial pivoting.
+/// Returns `None` if `A` is (numerically) singular.
+pub fn lu_solve(a: &Matrix, b: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows(), a.cols(), "lu_solve needs square A");
+    assert_eq!(a.rows(), b.rows());
+    let n = a.rows();
+    let nrhs = b.cols();
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    let scale = a.max_abs().max(1e-300);
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = lu[(col, col)].abs();
+        for r in col + 1..n {
+            let v = lu[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best <= PIVOT_TOL * scale {
+            return None;
+        }
+        if piv != col {
+            swap_rows(&mut lu, piv, col);
+            swap_rows(&mut x, piv, col);
+        }
+        let inv_p = 1.0 / lu[(col, col)];
+        for r in col + 1..n {
+            let f = lu[(r, col)] * inv_p;
+            if f == 0.0 {
+                continue;
+            }
+            lu[(r, col)] = 0.0;
+            for c in col + 1..n {
+                let v = lu[(col, c)];
+                lu[(r, c)] -= f * v;
+            }
+            for c in 0..nrhs {
+                let v = x[(col, c)];
+                x[(r, c)] -= f * v;
+            }
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let inv_p = 1.0 / lu[(col, col)];
+        for c in 0..nrhs {
+            x[(col, c)] *= inv_p;
+        }
+        for r in 0..col {
+            let f = lu[(r, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..nrhs {
+                let v = x[(col, c)];
+                x[(r, c)] -= f * v;
+            }
+        }
+    }
+    Some(x)
+}
+
+fn swap_rows(m: &mut Matrix, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    let cols = m.cols();
+    let data = m.data_mut();
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let (first, second) = data.split_at_mut(hi * cols);
+    first[lo * cols..lo * cols + cols].swap_with_slice(&mut second[..cols]);
+}
+
+/// Numerical rank of `a` via row echelon reduction (destructive copy).
+pub fn rank(a: &Matrix) -> usize {
+    let mut m = a.clone();
+    let rows = m.rows();
+    let cols = m.cols();
+    let scale = m.max_abs().max(1e-300);
+    let mut rank = 0;
+    let mut row = 0;
+    for col in 0..cols {
+        if row >= rows {
+            break;
+        }
+        // find pivot
+        let mut piv = row;
+        let mut best = m[(row, col)].abs();
+        for r in row + 1..rows {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best <= PIVOT_TOL * scale {
+            continue;
+        }
+        swap_rows(&mut m, piv, row);
+        let inv_p = 1.0 / m[(row, col)];
+        for r in row + 1..rows {
+            let f = m[(r, col)] * inv_p;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..cols {
+                let v = m[(row, c)];
+                m[(r, c)] -= f * v;
+            }
+        }
+        rank += 1;
+        row += 1;
+    }
+    rank
+}
+
+/// Least-squares solve of possibly overdetermined `A x = b` via normal
+/// equations (adequate for the small well-conditioned systems the
+/// decoders produce). Returns `None` when `AᵀA` is singular.
+pub fn solve_least_squares(a: &Matrix, b: &Matrix) -> Option<Matrix> {
+    let at = a.transpose();
+    let ata = super::matmul(&at, a);
+    let atb = super::matmul(&at, b);
+    lu_solve(&ata, &atb)
+}
+
+/// Incremental Gauss–Jordan eliminator over `n` unknowns.
+///
+/// Feed equations `coeff · x = rhs` one at a time (each `rhs` is an
+/// arbitrary payload vector — here, a flattened matrix sub-product). The
+/// eliminator maintains the *reduced* row-echelon form of everything
+/// absorbed so far, which makes determination detection **complete**:
+/// `e_i` lies in the row space iff the RREF contains a row supported on
+/// `{i}` alone. (A one-directional staircase is not enough — a packet
+/// covering extra unknowns can take an early pivot and hide a solvable
+/// subsystem; see the EW-UEP decoding tests.)
+pub struct Eliminator {
+    n: usize,
+    payload_len: usize,
+    /// RREF rows: coefficient part (len n) + payload (len payload_len).
+    rows: Vec<(Vec<f64>, Vec<f64>)>,
+    /// pivot column of each stored row.
+    pivot_of_row: Vec<usize>,
+    /// row index owning pivot column c, or usize::MAX.
+    row_of_pivot: Vec<usize>,
+    determined: Vec<bool>,
+}
+
+impl Eliminator {
+    pub fn new(n_unknowns: usize, payload_len: usize) -> Self {
+        Eliminator {
+            n: n_unknowns,
+            payload_len,
+            rows: Vec::new(),
+            pivot_of_row: Vec::new(),
+            row_of_pivot: vec![usize::MAX; n_unknowns],
+            determined: vec![false; n_unknowns],
+        }
+    }
+
+    pub fn n_unknowns(&self) -> usize {
+        self.n
+    }
+
+    /// Current rank (number of independent equations absorbed).
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Insert one equation; returns the list of unknown indices that
+    /// became determined as a result (possibly empty).
+    pub fn insert(&mut self, mut coeff: Vec<f64>, mut rhs: Vec<f64>) -> Vec<usize> {
+        assert_eq!(coeff.len(), self.n);
+        assert_eq!(rhs.len(), self.payload_len);
+        // Forward-reduce the incoming row against every stored pivot.
+        let scale0 = coeff.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+        for col in 0..self.n {
+            if coeff[col] == 0.0 {
+                continue;
+            }
+            let owner = self.row_of_pivot[col];
+            if owner == usize::MAX {
+                continue;
+            }
+            let f = coeff[col];
+            let (rc, rr) = &self.rows[owner];
+            for i in col..self.n {
+                coeff[i] -= f * rc[i];
+            }
+            for (i, v) in rhs.iter_mut().enumerate() {
+                *v -= f * rr[i];
+            }
+            coeff[col] = 0.0;
+        }
+        // Find the pivot (first entry above tolerance).
+        let piv = match coeff
+            .iter()
+            .position(|&v| v.abs() > PIVOT_TOL * scale0)
+        {
+            Some(p) => p,
+            None => return Vec::new(), // dependent equation
+        };
+        // Normalize.
+        let inv = 1.0 / coeff[piv];
+        for v in coeff.iter_mut() {
+            *v *= inv;
+        }
+        for v in rhs.iter_mut() {
+            *v *= inv;
+        }
+        coeff[piv] = 1.0;
+        // Snap sub-tolerance residue to exact zero so support tests are
+        // meaningful.
+        for v in coeff.iter_mut() {
+            if v.abs() <= PIVOT_TOL {
+                *v = 0.0;
+            }
+        }
+        // Back-eliminate the new pivot from every existing row (this is
+        // what upgrades the staircase to a full RREF).
+        for ri in 0..self.rows.len() {
+            let f = self.rows[ri].0[piv];
+            if f == 0.0 {
+                continue;
+            }
+            let (rc_new, rr_new) = (&coeff, &rhs);
+            let (rc, rr) = &mut self.rows[ri];
+            for i in 0..self.n {
+                rc[i] -= f * rc_new[i];
+                if rc[i].abs() <= PIVOT_TOL {
+                    rc[i] = 0.0;
+                }
+            }
+            rc[piv] = 0.0;
+            for (v, nv) in rr.iter_mut().zip(rr_new.iter()) {
+                *v -= f * nv;
+            }
+            // restore the exact pivot 1 of that row (numerical hygiene)
+            let own_piv = self.pivot_of_row[ri];
+            rc[own_piv] = 1.0;
+        }
+        self.rows.push((coeff, rhs));
+        self.pivot_of_row.push(piv);
+        self.row_of_pivot[piv] = self.rows.len() - 1;
+        // Determination scan: rows whose support shrank to their pivot.
+        let mut newly = Vec::new();
+        for ri in 0..self.rows.len() {
+            let p = self.pivot_of_row[ri];
+            if self.determined[p] {
+                continue;
+            }
+            let (rc, _) = &self.rows[ri];
+            let singleton =
+                rc.iter().enumerate().all(|(c, &v)| c == p || v == 0.0);
+            if singleton {
+                self.determined[p] = true;
+                newly.push(p);
+            }
+        }
+        newly
+    }
+
+    pub fn is_determined(&self, idx: usize) -> bool {
+        self.determined[idx]
+    }
+
+    /// Recovered payload for a determined unknown (its singleton RREF
+    /// row's reduced right-hand side).
+    pub fn value_of(&self, idx: usize) -> Option<&[f64]> {
+        if !self.determined[idx] {
+            return None;
+        }
+        let row = self.row_of_pivot[idx];
+        Some(&self.rows[row].1)
+    }
+
+    /// Indices of all currently determined unknowns.
+    pub fn determined_set(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.determined[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::prop::{gen, prop_check, PropConfig};
+
+    #[test]
+    fn lu_solves_known_system() {
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let b = Matrix::from_vec(2, 1, vec![5.0, 10.0]);
+        let x = lu_solve(&a, &b).unwrap();
+        assert!((x[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((x[(1, 0)] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        let b = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        assert!(lu_solve(&a, &b).is_none());
+    }
+
+    #[test]
+    fn lu_random_roundtrip() {
+        prop_check("lu roundtrip", PropConfig { cases: 30, seed: 42 }, |rng, _| {
+            let n = gen::usize_in(rng, 1, 20);
+            let nrhs = gen::usize_in(rng, 1, 5);
+            let a = Matrix::randn(n, n, 0.0, 1.0, rng);
+            let x_true = Matrix::randn(n, nrhs, 0.0, 1.0, rng);
+            let b = crate::linalg::matmul(&a, &x_true);
+            match lu_solve(&a, &b) {
+                Some(x) => {
+                    if x.allclose(&x_true, 1e-6) {
+                        Ok(())
+                    } else {
+                        Err("solution mismatch".to_string())
+                    }
+                }
+                None => Err("spurious singularity".to_string()),
+            }
+        });
+    }
+
+    #[test]
+    fn rank_of_constructed_matrices() {
+        assert_eq!(rank(&Matrix::eye(5)), 5);
+        assert_eq!(rank(&Matrix::zeros(3, 4)), 0);
+        // rank-1 outer product
+        let u = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let v = Matrix::from_vec(1, 4, vec![1.0, -1.0, 2.0, 0.5]);
+        assert_eq!(rank(&crate::linalg::matmul(&u, &v)), 1);
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_solution() {
+        let mut rng = Pcg64::seed_from(8);
+        let a = Matrix::randn(10, 4, 0.0, 1.0, &mut rng);
+        let x_true = Matrix::randn(4, 2, 0.0, 1.0, &mut rng);
+        let b = crate::linalg::matmul(&a, &x_true);
+        let x = solve_least_squares(&a, &b).unwrap();
+        assert!(x.allclose(&x_true, 1e-8));
+    }
+
+    #[test]
+    fn eliminator_simple_sequence() {
+        // unknowns x0, x1 with payloads of length 1
+        let mut e = Eliminator::new(2, 1);
+        // x0 + x1 = 3
+        let newly = e.insert(vec![1.0, 1.0], vec![3.0]);
+        assert!(newly.is_empty());
+        // x0 - x1 = 1  → x0 = 2, x1 = 1
+        let mut newly = e.insert(vec![1.0, -1.0], vec![1.0]);
+        newly.sort_unstable();
+        assert_eq!(newly, vec![0, 1]);
+        assert!((e.value_of(0).unwrap()[0] - 2.0).abs() < 1e-12);
+        assert!((e.value_of(1).unwrap()[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eliminator_ignores_dependent_rows() {
+        let mut e = Eliminator::new(3, 1);
+        e.insert(vec![1.0, 1.0, 0.0], vec![1.0]);
+        let newly = e.insert(vec![2.0, 2.0, 0.0], vec![2.0]);
+        assert!(newly.is_empty());
+        assert_eq!(e.rank(), 1);
+    }
+
+    #[test]
+    fn eliminator_partial_decode() {
+        // x2 determined alone while x0,x1 stay mixed.
+        let mut e = Eliminator::new(3, 2);
+        let newly = e.insert(vec![0.0, 0.0, 2.0], vec![4.0, 6.0]);
+        assert_eq!(newly, vec![2]);
+        assert_eq!(e.value_of(2).unwrap(), &[2.0, 3.0]);
+        assert!(!e.is_determined(0));
+    }
+
+    #[test]
+    fn eliminator_random_full_recovery() {
+        prop_check("eliminator recovers all", PropConfig { cases: 20, seed: 77 }, |rng, _| {
+            let n = gen::usize_in(rng, 1, 8);
+            let payload = gen::usize_in(rng, 1, 4);
+            let truth: Vec<Vec<f64>> =
+                (0..n).map(|_| gen::normal_vec(rng, payload)).collect();
+            let mut e = Eliminator::new(n, payload);
+            // Feed 3n random dense equations; after n independent ones all
+            // unknowns must be determined with correct values.
+            for _ in 0..3 * n {
+                let coeff = gen::normal_vec(rng, n);
+                let mut rhs = vec![0.0; payload];
+                for (i, c) in coeff.iter().enumerate() {
+                    for (r, t) in rhs.iter_mut().zip(truth[i].iter()) {
+                        *r += c * t;
+                    }
+                }
+                e.insert(coeff, rhs);
+            }
+            for i in 0..n {
+                let got = e.value_of(i).ok_or("unknown undetermined")?;
+                for (g, t) in got.iter().zip(truth[i].iter()) {
+                    if (g - t).abs() > 1e-6 {
+                        return Err(format!("unknown {i}: {g} vs {t}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

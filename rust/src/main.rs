@@ -1,0 +1,224 @@
+//! `uepmm` — command-line launcher for the UEP coded-matmul system.
+//!
+//! ```text
+//! uepmm exp <name|all> [--out results] [--trials N] [--full] [--seed S]
+//! uepmm list                      # available experiments
+//! uepmm serve [...]               # threaded coordinator demo
+//! uepmm matmul [...]              # one coded multiplication (native/pjrt)
+//! ```
+
+use std::path::PathBuf;
+
+use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use uepmm::config::SyntheticSpec;
+use uepmm::coordinator::{run_service, Coordinator, Plan, ServiceConfig};
+use uepmm::experiments::{self, ExpContext};
+use uepmm::latency::LatencyModel;
+use uepmm::rng::Pcg64;
+use uepmm::runtime::{NativeEngine, PjrtEngine};
+use uepmm::sim::StragglerSim;
+use uepmm::util::cli::Command;
+use uepmm::util::pool::available_parallelism;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "list" => {
+            println!("experiments:");
+            for (name, desc, _) in experiments::registry() {
+                println!("  {name:<18} {desc}");
+            }
+            Ok(())
+        }
+        "exp" => cmd_exp(rest),
+        "serve" => cmd_serve(rest),
+        "matmul" => cmd_matmul(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `uepmm help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "uepmm — straggler mitigation through UEP codes for distributed \
+         approximate matrix multiplication\n\n\
+         subcommands:\n  \
+         exp <name|all>   reproduce a paper figure/table (see `uepmm list`)\n  \
+         list             list available experiments\n  \
+         matmul           run one coded approximate multiplication\n  \
+         serve            threaded coordinator demo (wall-clock deadline)\n  \
+         help             this message"
+    );
+}
+
+fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("exp", "reproduce a paper figure/table")
+        .opt("out", "results", "output directory for CSVs")
+        .opt("trials", "400", "Monte-Carlo trials per configuration")
+        .opt("seed", "2021", "base RNG seed")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .flag("full", "paper-scale sizes (slower)");
+    let parsed = cmd.parse(rest)?;
+    let name = parsed
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let threads = parsed.get_usize("threads")?;
+    let ctx = ExpContext {
+        out: PathBuf::from(parsed.get_str("out")),
+        trials: parsed.get_usize("trials")?,
+        full: parsed.get_bool("full"),
+        seed: parsed.get_u64("seed")?,
+        threads: if threads == 0 { available_parallelism() } else { threads },
+    };
+    experiments::run(&name, &ctx)
+}
+
+fn parse_code(kind: &str, gamma: &WindowPolynomial) -> anyhow::Result<CodeSpec> {
+    Ok(match kind {
+        "uncoded" => CodeSpec::stacked(CodeKind::Uncoded),
+        "rep" => CodeSpec::stacked(CodeKind::Repetition),
+        "mds" => CodeSpec::stacked(CodeKind::Mds),
+        "now" => CodeSpec::stacked(CodeKind::NowUep(gamma.clone())),
+        "ew" => CodeSpec::stacked(CodeKind::EwUep(gamma.clone())),
+        "now-rank1" => {
+            CodeSpec::new(CodeKind::NowUep(gamma.clone()), EncodeStyle::RankOne)
+        }
+        "ew-rank1" => {
+            CodeSpec::new(CodeKind::EwUep(gamma.clone()), EncodeStyle::RankOne)
+        }
+        other => anyhow::bail!("unknown code '{other}'"),
+    })
+}
+
+fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("matmul", "run one coded approximate multiplication")
+        .opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
+        .opt("paradigm", "rxc", "rxc|cxr")
+        .opt("workers", "15", "number of workers W")
+        .opt("tmax", "1.0", "deadline T_max")
+        .opt("lambda", "1.0", "exponential latency rate")
+        .opt("seed", "1", "RNG seed")
+        .opt("scale", "6", "matrix size divisor vs the paper (1 = full)")
+        .opt("engine", "native", "native|pjrt")
+        .opt("artifacts", "artifacts", "artifact dir for the pjrt engine");
+    let a = cmd.parse(rest)?;
+    let mut spec = match a.get_str("paradigm") {
+        "rxc" => SyntheticSpec::fig9_rxc(),
+        "cxr" => SyntheticSpec::fig9_cxr(),
+        other => anyhow::bail!("unknown paradigm '{other}'"),
+    }
+    .scaled(a.get_usize("scale")?);
+    spec.workers = a.get_usize("workers")?;
+    spec.latency = LatencyModel::exp(a.get_f64("lambda")?);
+    spec.t_max = a.get_f64("tmax")?;
+    let code = parse_code(a.get_str("code"), &spec.gamma)?;
+
+    let mut rng = Pcg64::seed_from(a.get_u64("seed")?);
+    let (ma, mb) = spec.sample_matrices(&mut rng);
+    let plan = Plan::build_with_classes(
+        &spec.part,
+        code,
+        spec.class_map(),
+        spec.workers,
+        &ma,
+        &mb,
+        &mut rng,
+    )?;
+    let sim = StragglerSim::new(spec.workers, spec.latency.clone(), spec.omega());
+    let arrivals = sim.sample_arrivals(&mut rng);
+    let outcome = match a.get_str("engine") {
+        "native" => Coordinator::new(NativeEngine::default())
+            .run(&plan, &arrivals, spec.t_max)?,
+        "pjrt" => {
+            let engine = PjrtEngine::from_artifacts(a.get_str("artifacts"))?;
+            println!("pjrt platform: {}", engine.platform());
+            Coordinator::new(engine).run(&plan, &arrivals, spec.t_max)?
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    };
+    println!(
+        "received {}/{} packets by T_max={}, recovered {}/{} sub-products",
+        outcome.received,
+        spec.workers,
+        spec.t_max,
+        outcome.recovered,
+        spec.part.num_products()
+    );
+    println!("per-class recovery: {:?}", outcome.per_class_recovered);
+    println!("normalized loss ‖C−Ĉ‖²/‖C‖² = {:.6}", outcome.normalized_loss);
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "threaded coordinator demo")
+        .opt("code", "ew", "uncoded|rep|mds|now|ew")
+        .opt("workers", "15", "worker count")
+        .opt("tmax", "1.0", "virtual deadline")
+        .opt("lambda", "1.0", "exponential latency rate")
+        .opt("requests", "5", "number of multiplication requests")
+        .opt("time-scale", "0.02", "wall seconds per virtual time unit")
+        .opt("seed", "1", "RNG seed")
+        .opt("scale", "10", "matrix size divisor vs the paper");
+    let a = cmd.parse(rest)?;
+    let mut spec = SyntheticSpec::fig9_rxc().scaled(a.get_usize("scale")?);
+    spec.workers = a.get_usize("workers")?;
+    let code = parse_code(a.get_str("code"), &spec.gamma)?;
+    let mut rng = Pcg64::seed_from(a.get_u64("seed")?);
+    let cfg = ServiceConfig {
+        latency: LatencyModel::exp(a.get_f64("lambda")?),
+        omega: spec.omega(),
+        t_max: a.get_f64("tmax")?,
+        time_scale: a.get_f64("time-scale")?,
+        threads: available_parallelism(),
+    };
+    println!(
+        "serving {} requests: {} workers, deadline {}, Ω={:.3}",
+        a.get_usize("requests")?,
+        spec.workers,
+        cfg.t_max,
+        cfg.omega
+    );
+    for req in 0..a.get_usize("requests")? {
+        let (ma, mb) = spec.sample_matrices(&mut rng);
+        let plan = Plan::build_with_classes(
+            &spec.part,
+            code.clone(),
+            spec.class_map(),
+            spec.workers,
+            &ma,
+            &mb,
+            &mut rng,
+        )?;
+        let out = run_service(&plan, &cfg, &mut rng)?;
+        println!(
+            "request {req}: {} arrivals ({} late), recovered {}/9, loss {:.4}, wall {:?}",
+            out.outcome.received,
+            out.late,
+            out.outcome.recovered,
+            out.outcome.normalized_loss,
+            out.wall
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! The CIFAR CNN of paper Table V (two conv layers + max-pool + three
+//! dense layers), with a size knob so the Fig. 1 reproduction can run
+//! scaled-down by default. Convolutions are computed centrally (the
+//! paper trains them without stragglers, §VII-C); the dense layers'
+//! back-propagation matmuls go through the coded distributed engine.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+use super::conv::{Conv2D, ImageBatch, MaxPool2D};
+use super::dense::{relu, relu_backward, Dense};
+use super::distributed::DistributedMatmul;
+use super::loss::softmax_xent;
+use super::sparsify::{sparsify, TauSchedule};
+
+/// Architecture parameters (paper Table V: side=32, channels=32,
+/// dense=(512, 256), classes=10).
+#[derive(Clone, Copy, Debug)]
+pub struct CnnArch {
+    pub side: usize,
+    pub in_channels: usize,
+    pub conv_channels: usize,
+    pub dense1: usize,
+    pub dense2: usize,
+    pub classes: usize,
+}
+
+impl CnnArch {
+    /// Paper scale (Table V).
+    pub fn paper() -> Self {
+        CnnArch {
+            side: 32,
+            in_channels: 3,
+            conv_channels: 32,
+            dense1: 512,
+            dense2: 256,
+            classes: 10,
+        }
+    }
+
+    /// Scaled-down default used by `uepmm exp fig1` without `--full`.
+    pub fn small() -> Self {
+        CnnArch {
+            side: 16,
+            in_channels: 3,
+            conv_channels: 8,
+            dense1: 64,
+            dense2: 32,
+            classes: 10,
+        }
+    }
+
+    /// Flattened feature size after conv1(same) → conv2(valid) → pool.
+    pub fn flat_dim(&self) -> usize {
+        let after_valid = self.side - 2;
+        let pooled = after_valid / 2;
+        self.conv_channels * pooled * pooled
+    }
+}
+
+/// The CNN model.
+pub struct Cnn {
+    pub arch: CnnArch,
+    pub conv1: Conv2D,
+    pub conv2: Conv2D,
+    pub pool: MaxPool2D,
+    pub fc: [Dense; 3],
+}
+
+impl Cnn {
+    pub fn init(arch: CnnArch, rng: &mut Pcg64) -> Self {
+        Cnn {
+            arch,
+            conv1: Conv2D::init(arch.in_channels, arch.conv_channels, 3, 1, rng),
+            conv2: Conv2D::init(arch.conv_channels, arch.conv_channels, 3, 0, rng),
+            pool: MaxPool2D,
+            fc: [
+                Dense::init(arch.flat_dim(), arch.dense1, rng),
+                Dense::init(arch.dense1, arch.dense2, rng),
+                Dense::init(arch.dense2, arch.classes, rng),
+            ],
+        }
+    }
+
+    /// Forward to logits (rows = batch).
+    pub fn logits(&self, x: &Matrix) -> Matrix {
+        let img = ImageBatch::from_matrix(x, self.arch.in_channels, self.arch.side, self.arch.side);
+        let (c1, _) = self.conv1.forward(&img);
+        let (c2, _) = self.conv2.forward(&c1);
+        let (p, _) = self.pool.forward(&c2);
+        let mut h = p.to_matrix();
+        for (i, fc) in self.fc.iter().enumerate() {
+            h = fc.forward(&h);
+            if i + 1 < self.fc.len() {
+                relu(&mut h);
+            }
+        }
+        h
+    }
+
+    /// One SGD step; dense back-propagation matmuls run through `engine`.
+    pub fn train_step(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        lr: f64,
+        engine: &mut DistributedMatmul,
+        tau: &TauSchedule,
+        epoch: usize,
+        // when false, the last layer's eq. (33) stays uncoded — its
+        // factors are not sparse enough to benefit (paper §VII-C)
+        code_last_layer: bool,
+    ) -> f64 {
+        let arch = self.arch;
+        let img = ImageBatch::from_matrix(x, arch.in_channels, arch.side, arch.side);
+        let (c1, cache1) = self.conv1.forward(&img);
+        let (c2, cache2) = self.conv2.forward(&c1);
+        let (pooled, cache_p) = self.pool.forward(&c2);
+        let flat = pooled.to_matrix();
+        // dense forward, keeping X_i
+        let mut acts = vec![flat.clone()];
+        let mut h = flat;
+        for (i, fc) in self.fc.iter().enumerate() {
+            h = fc.forward(&h);
+            if i + 1 < self.fc.len() {
+                relu(&mut h);
+            }
+            acts.push(h.clone());
+        }
+        let (loss, mut g) = softmax_xent(&h, y);
+        // dense backward (eqs. 32–33) with coded matmuls
+        let n_fc = self.fc.len();
+        let mut dv = Vec::with_capacity(n_fc);
+        let mut db = Vec::with_capacity(n_fc);
+        for i in (0..n_fc).rev() {
+            sparsify(&mut g, tau.grad_tau(i, epoch));
+            let mut x_t = acts[i].transpose();
+            sparsify(&mut x_t, tau.weight_tau(i, epoch));
+            // the paper computes the LAST layer's eq. (33) uncoded — its
+            // factors are not sparse enough to benefit (§VII-C)
+            let dvi = if i + 1 == n_fc && !code_last_layer {
+                crate::linalg::matmul(&x_t, &g)
+            } else {
+                engine.multiply(&x_t, &g)
+            };
+            dv.push(dvi);
+            db.push(Dense::bias_grad(&g));
+            if i > 0 {
+                let mut v_t = self.fc[i].v.transpose();
+                sparsify(&mut v_t, tau.weight_tau(i, epoch));
+                let mut g_prev = engine.multiply(&g, &v_t);
+                relu_backward(&mut g_prev, &acts[i]);
+                g = g_prev;
+            }
+        }
+        dv.reverse();
+        db.reverse();
+        // gradient into the conv stack: dL/dflat = G_1 · V_1ᵀ (central)
+        let mut g_flat = crate::linalg::matmul(&g, &self.fc[0].v.transpose());
+        relu_backward(&mut g_flat, &acts[0]);
+        // NOTE: acts[0] is post-pool (no ReLU applied after pool), so the
+        // mask above is a no-op unless pooling output hit exact zeros;
+        // conv ReLUs are handled inside Conv2D::backward.
+        let (oh, ow) = {
+            let after_valid = arch.side - 2;
+            (after_valid / 2, after_valid / 2)
+        };
+        let g_pool = ImageBatch::from_matrix(&g_flat, arch.conv_channels, oh, ow);
+        let g_c2 = self.pool.backward(&g_pool, &cache_p);
+        let (dw2, db2, g_c1) = self.conv2.backward(&g_c2, &cache2);
+        let (dw1, db1, _) = self.conv1.backward(&g_c1, &cache1);
+        // updates
+        for (i, fc) in self.fc.iter_mut().enumerate() {
+            fc.apply_grads(&dv[i], &db[i], lr);
+        }
+        self.conv2.apply_grads(&dw2, &db2, lr);
+        self.conv1.apply_grads(&dw1, &db1, lr);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::distributed::MatmulStrategy;
+    use super::super::loss::accuracy;
+    use crate::data::synthetic_cifar;
+
+    #[test]
+    fn flat_dim_matches_paper_arch() {
+        // Table V: 32×32 → conv same → conv valid (30) → pool (15) →
+        // 32·15·15 = 7200.
+        assert_eq!(CnnArch::paper().flat_dim(), 7200);
+    }
+
+    #[test]
+    fn cnn_learns_synthetic_textures() {
+        let mut rng = Pcg64::seed_from(1);
+        let arch = CnnArch { side: 12, in_channels: 3, conv_channels: 4, dense1: 32, dense2: 16, classes: 10 };
+        let train = synthetic_cifar(200, 12, 3, &mut rng);
+        let test = synthetic_cifar(80, 12, 5, &mut rng);
+        let mut cnn = Cnn::init(arch, &mut rng);
+        let mut engine = DistributedMatmul::new(MatmulStrategy::Exact, Pcg64::seed_from(2));
+        let tau = TauSchedule::off(3);
+        let (tx, ty) = test.all();
+        let before = accuracy(&cnn.logits(&tx), &ty);
+        for epoch in 0..12 {
+            for step in 0..12 {
+                let idx: Vec<usize> = (0..16).map(|i| (step * 16 + i) % train.len()).collect();
+                let (x, y) = train.batch(&idx);
+                cnn.train_step(&x, &y, 0.1, &mut engine, &tau, epoch, false);
+            }
+        }
+        let after = accuracy(&cnn.logits(&tx), &ty);
+        assert!(after > 0.6, "accuracy {before} -> {after}");
+    }
+}

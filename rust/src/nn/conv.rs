@@ -1,0 +1,374 @@
+//! Convolution substrate for the CIFAR experiment (paper Table V):
+//! Conv2D (im2col + matmul), MaxPool2D, and the image tensor plumbing.
+//! The paper computes convolutional layers centrally ("without
+//! stragglers", §VII-C); only the dense layers are coded — but training
+//! still needs full conv forward/backward, so it is built here.
+
+use crate::linalg::{matmul, Matrix};
+use crate::rng::{Normal, Pcg64, Sample};
+
+/// A batch of images, NCHW, flattened row-major.
+#[derive(Clone, Debug)]
+pub struct ImageBatch {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f64>,
+}
+
+impl ImageBatch {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Self {
+        ImageBatch { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, y: usize, x: usize) -> usize {
+        ((n * self.c + c) * self.h + y) * self.w + x
+    }
+
+    pub fn at(&self, n: usize, c: usize, y: usize, x: usize) -> f64 {
+        self.data[self.idx(n, c, y, x)]
+    }
+
+    /// Flatten to a `(N, C·H·W)` matrix (the Flatten layer).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.n, self.c * self.h * self.w, self.data.clone())
+    }
+
+    pub fn from_matrix(m: &Matrix, c: usize, h: usize, w: usize) -> Self {
+        assert_eq!(m.cols(), c * h * w);
+        ImageBatch { n: m.rows(), c, h, w, data: m.data().to_vec() }
+    }
+}
+
+/// im2col: extract all `kh×kw` patches (stride 1) into a
+/// `(N·OH·OW, C·kh·kw)` matrix; `pad` adds zero padding ("same" = k/2).
+pub fn im2col(x: &ImageBatch, kh: usize, kw: usize, pad: usize) -> Matrix {
+    let oh = x.h + 2 * pad - kh + 1;
+    let ow = x.w + 2 * pad - kw + 1;
+    let mut out = Matrix::zeros(x.n * oh * ow, x.c * kh * kw);
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (n * oh + oy) * ow + ox;
+                let dst = out.row_mut(row);
+                let mut col = 0;
+                for c in 0..x.c {
+                    for dy in 0..kh {
+                        for dx in 0..kw {
+                            let sy = oy + dy;
+                            let sx = ox + dx;
+                            let v = if sy < pad
+                                || sx < pad
+                                || sy - pad >= x.h
+                                || sx - pad >= x.w
+                            {
+                                0.0
+                            } else {
+                                x.at(n, c, sy - pad, sx - pad)
+                            };
+                            dst[col] = v;
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im: scatter-add the patch matrix back to image space (the adjoint
+/// of [`im2col`]) — used for the conv input gradient.
+pub fn col2im(
+    cols: &Matrix,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+) -> ImageBatch {
+    let oh = h + 2 * pad - kh + 1;
+    let ow = w + 2 * pad - kw + 1;
+    assert_eq!(cols.rows(), n * oh * ow);
+    assert_eq!(cols.cols(), c * kh * kw);
+    let mut img = ImageBatch::zeros(n, c, h, w);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (ni * oh + oy) * ow + ox;
+                let src = cols.row(row);
+                let mut col = 0;
+                for ci in 0..c {
+                    for dy in 0..kh {
+                        for dx in 0..kw {
+                            let sy = oy + dy;
+                            let sx = ox + dx;
+                            if sy >= pad && sx >= pad && sy - pad < h && sx - pad < w {
+                                let idx = img.idx(ni, ci, sy - pad, sx - pad);
+                                img.data[idx] += src[col];
+                            }
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    img
+}
+
+/// 2-D convolution, stride 1, ReLU fused by the caller.
+#[derive(Clone, Debug)]
+pub struct Conv2D {
+    /// `(C_in·kh·kw, C_out)` weight matrix (im2col layout).
+    pub w: Matrix,
+    pub b: Vec<f64>,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    /// Zero padding ("same" = k/2, "valid" = 0 — Table V uses both).
+    pub pad: usize,
+}
+
+/// Cache from the forward pass needed by backward.
+pub struct ConvCache {
+    cols: Matrix,
+    in_shape: (usize, usize, usize, usize),
+    out_pre_relu: Matrix,
+}
+
+impl Conv2D {
+    pub fn init(c_in: usize, c_out: usize, k: usize, pad: usize, rng: &mut Pcg64) -> Self {
+        let fan_in = c_in * k * k;
+        let dist = Normal::new(0.0, (2.0 / fan_in as f64).sqrt());
+        Conv2D {
+            w: Matrix::from_fn(fan_in, c_out, |_, _| dist.sample(rng)),
+            b: vec![0.0; c_out],
+            c_in,
+            c_out,
+            k,
+            pad,
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (h + 2 * self.pad - self.k + 1, w + 2 * self.pad - self.k + 1)
+    }
+
+    /// Forward with ReLU; returns output batch + cache.
+    pub fn forward(&self, x: &ImageBatch) -> (ImageBatch, ConvCache) {
+        assert_eq!(x.c, self.c_in);
+        let (oh, ow) = self.out_hw(x.h, x.w);
+        let cols = im2col(x, self.k, self.k, self.pad);
+        let mut out = matmul(&cols, &self.w); // (N·OH·OW, C_out)
+        for r in 0..out.rows() {
+            for (v, bias) in out.row_mut(r).iter_mut().zip(self.b.iter()) {
+                *v += bias;
+            }
+        }
+        let pre = out.clone();
+        for v in out.data_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        // reshape (N·OH·OW, C_out) -> NCHW
+        let mut img = ImageBatch::zeros(x.n, self.c_out, oh, ow);
+        for n in 0..x.n {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let row = (n * oh + y) * ow + xx;
+                    for c in 0..self.c_out {
+                        let idx = img.idx(n, c, y, xx);
+                        img.data[idx] = out[(row, c)];
+                    }
+                }
+            }
+        }
+        (img, ConvCache { cols, in_shape: (x.n, x.c, x.h, x.w), out_pre_relu: pre })
+    }
+
+    /// Backward: given dL/d(output NCHW), returns (dW, db, dX).
+    pub fn backward(&self, g: &ImageBatch, cache: &ConvCache) -> (Matrix, Vec<f64>, ImageBatch) {
+        let (n, c_in, h, w) = cache.in_shape;
+        let (oh, ow) = self.out_hw(h, w);
+        assert_eq!((g.n, g.c, g.h, g.w), (n, self.c_out, oh, ow));
+        // NCHW grad -> (N·OH·OW, C_out), masked by ReLU
+        let mut gm = Matrix::zeros(n * oh * ow, self.c_out);
+        for ni in 0..n {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let row = (ni * oh + y) * ow + x;
+                    for c in 0..self.c_out {
+                        let v = if cache.out_pre_relu[(row, c)] > 0.0 {
+                            g.at(ni, c, y, x)
+                        } else {
+                            0.0
+                        };
+                        gm[(row, c)] = v;
+                    }
+                }
+            }
+        }
+        let dw = matmul(&cache.cols.transpose(), &gm);
+        let mut db = vec![0.0; self.c_out];
+        for r in 0..gm.rows() {
+            for (acc, &v) in db.iter_mut().zip(gm.row(r)) {
+                *acc += v;
+            }
+        }
+        let dcols = matmul(&gm, &self.w.transpose());
+        let dx = col2im(&dcols, n, c_in, h, w, self.k, self.k, self.pad);
+        (dw, db, dx)
+    }
+
+    pub fn apply_grads(&mut self, dw: &Matrix, db: &[f64], lr: f64) {
+        self.w.axpy(-lr, dw);
+        for (b, g) in self.b.iter_mut().zip(db.iter()) {
+            *b -= lr * g;
+        }
+    }
+}
+
+/// 2×2 max pooling, stride 2.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxPool2D;
+
+pub struct PoolCache {
+    argmax: Vec<usize>,
+    in_shape: (usize, usize, usize, usize),
+}
+
+impl MaxPool2D {
+    pub fn forward(&self, x: &ImageBatch) -> (ImageBatch, PoolCache) {
+        let (oh, ow) = (x.h / 2, x.w / 2);
+        let mut out = ImageBatch::zeros(x.n, x.c, oh, ow);
+        let mut argmax = vec![0usize; x.n * x.c * oh * ow];
+        let mut oi = 0;
+        for n in 0..x.n {
+            for c in 0..x.c {
+                for y in 0..oh {
+                    for xx in 0..ow {
+                        let mut best = f64::NEG_INFINITY;
+                        let mut best_idx = 0;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let idx = x.idx(n, c, 2 * y + dy, 2 * xx + dx);
+                                if x.data[idx] > best {
+                                    best = x.data[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let out_idx = out.idx(n, c, y, xx);
+                        out.data[out_idx] = best;
+                        argmax[oi] = best_idx;
+                        oi += 1;
+                    }
+                }
+            }
+        }
+        (out, PoolCache { argmax, in_shape: (x.n, x.c, x.h, x.w) })
+    }
+
+    pub fn backward(&self, g: &ImageBatch, cache: &PoolCache) -> ImageBatch {
+        let (n, c, h, w) = cache.in_shape;
+        let mut dx = ImageBatch::zeros(n, c, h, w);
+        for (oi, &src) in cache.argmax.iter().enumerate() {
+            dx.data[src] += g.data[oi];
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_batch(n: usize, c: usize, h: usize, w: usize, rng: &mut Pcg64) -> ImageBatch {
+        let mut b = ImageBatch::zeros(n, c, h, w);
+        for v in b.data.iter_mut() {
+            *v = Normal::standard(rng);
+        }
+        b
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint identity.
+        let mut rng = Pcg64::seed_from(1);
+        let x = rand_batch(2, 3, 5, 5, &mut rng);
+        let cols = im2col(&x, 3, 3, 1);
+        let y = Matrix::randn(cols.rows(), cols.cols(), 0.0, 1.0, &mut rng);
+        let lhs: f64 = cols.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let back = col2im(&y, 2, 3, 5, 5, 3, 3, 1);
+        let rhs: f64 = x.data.iter().zip(back.data.iter()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-8 * (1.0 + lhs.abs()));
+    }
+
+    #[test]
+    fn conv_shapes_same_and_valid() {
+        let mut rng = Pcg64::seed_from(2);
+        let x = rand_batch(1, 3, 8, 8, &mut rng);
+        let same = Conv2D::init(3, 4, 3, 1, &mut rng);
+        let (o1, _) = same.forward(&x);
+        assert_eq!((o1.c, o1.h, o1.w), (4, 8, 8));
+        let valid = Conv2D::init(3, 4, 3, 0, &mut rng);
+        let (o2, _) = valid.forward(&x);
+        assert_eq!((o2.c, o2.h, o2.w), (4, 6, 6));
+    }
+
+    #[test]
+    fn conv_gradient_matches_finite_difference() {
+        let mut rng = Pcg64::seed_from(3);
+        let x = rand_batch(1, 2, 4, 4, &mut rng);
+        let conv = Conv2D::init(2, 3, 3, 1, &mut rng);
+        let loss_of = |c: &Conv2D, xb: &ImageBatch| -> f64 {
+            let (o, _) = c.forward(xb);
+            o.data.iter().sum()
+        };
+        let (o, cache) = conv.forward(&x);
+        let g = ImageBatch { data: vec![1.0; o.data.len()], ..o.clone() };
+        let (dw, db, dx) = conv.backward(&g, &cache);
+        let eps = 1e-6;
+        for &(r, c) in &[(0usize, 0usize), (5, 2), (17, 1)] {
+            let mut c2 = conv.clone();
+            c2.w[(r, c)] += eps;
+            let num = (loss_of(&c2, &x) - loss_of(&conv, &x)) / eps;
+            assert!((num - dw[(r, c)]).abs() < 1e-4, "dW({r},{c}): {num} vs {}", dw[(r, c)]);
+        }
+        {
+            let mut c2 = conv.clone();
+            c2.b[1] += eps;
+            let num = (loss_of(&c2, &x) - loss_of(&conv, &x)) / eps;
+            assert!((num - db[1]).abs() < 1e-4);
+        }
+        for idx in [0usize, 7, 20] {
+            let mut x2 = x.clone();
+            x2.data[idx] += eps;
+            let num = (loss_of(&conv, &x2) - loss_of(&conv, &x)) / eps;
+            assert!((num - dx.data[idx]).abs() < 1e-4, "dX[{idx}]");
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_and_backward() {
+        let mut x = ImageBatch::zeros(1, 1, 4, 4);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        let pool = MaxPool2D;
+        let (o, cache) = pool.forward(&x);
+        assert_eq!((o.h, o.w), (2, 2));
+        assert_eq!(o.data, vec![5.0, 7.0, 13.0, 15.0]);
+        let g = ImageBatch { data: vec![1.0, 2.0, 3.0, 4.0], ..o.clone() };
+        let dx = pool.backward(&g, &cache);
+        assert_eq!(dx.data[5], 1.0);
+        assert_eq!(dx.data[15], 4.0);
+        assert_eq!(dx.data.iter().sum::<f64>(), 10.0);
+    }
+}

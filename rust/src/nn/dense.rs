@@ -1,0 +1,148 @@
+//! Dense (fully connected) layer with the paper's back-propagation
+//! factorization: forward `O = X·V + b` (eq. 31), backward
+//! `G_i = G_{i+1}·V_iᵀ` (eq. 32) and `V_i* = X_iᵀ·G_{i+1}` (eq. 33).
+//! The two backward matmuls are the products the PS distributes.
+
+use crate::linalg::{matmul, Matrix};
+use crate::rng::{Normal, Pcg64, Sample};
+
+/// A dense layer `x ↦ x·V + b`.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub v: Matrix,
+    pub b: Vec<f64>,
+}
+
+impl Dense {
+    /// He-style initialization.
+    pub fn init(fan_in: usize, fan_out: usize, rng: &mut Pcg64) -> Self {
+        let sd = (2.0 / fan_in as f64).sqrt();
+        let dist = Normal::new(0.0, sd);
+        Dense {
+            v: Matrix::from_fn(fan_in, fan_out, |_, _| dist.sample(rng)),
+            b: vec![0.0; fan_out],
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.v.rows()
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.v.cols()
+    }
+
+    /// Forward: `X·V + b` (eq. 31).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut o = matmul(x, &self.v);
+        for r in 0..o.rows() {
+            let row = o.row_mut(r);
+            for (val, bias) in row.iter_mut().zip(self.b.iter()) {
+                *val += bias;
+            }
+        }
+        o
+    }
+
+    /// Bias gradient: column sums of the output gradient.
+    pub fn bias_grad(g_out: &Matrix) -> Vec<f64> {
+        let mut db = vec![0.0; g_out.cols()];
+        for r in 0..g_out.rows() {
+            for (acc, &v) in db.iter_mut().zip(g_out.row(r).iter()) {
+                *acc += v;
+            }
+        }
+        db
+    }
+
+    /// SGD update.
+    pub fn apply_grads(&mut self, dv: &Matrix, db: &[f64], lr: f64) {
+        self.v.axpy(-lr, dv);
+        for (b, g) in self.b.iter_mut().zip(db.iter()) {
+            *b -= lr * g;
+        }
+    }
+}
+
+/// ReLU forward, in place.
+pub fn relu(x: &mut Matrix) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero the gradient where the activation input was ≤ 0.
+pub fn relu_backward(g: &mut Matrix, pre_activation_output: &Matrix) {
+    assert_eq!(g.shape(), pre_activation_output.shape());
+    for (gv, &av) in g.data_mut().iter_mut().zip(pre_activation_output.data()) {
+        if av <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_adds_bias() {
+        let mut d = Dense {
+            v: Matrix::eye(2),
+            b: vec![1.0, -1.0],
+        };
+        let x = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        let o = d.forward(&x);
+        assert_eq!(o.data(), &[4.0, 3.0]);
+        d.apply_grads(&Matrix::zeros(2, 2), &[1.0, 0.0], 0.5);
+        assert_eq!(d.b, vec![0.5, -1.0]);
+    }
+
+    #[test]
+    fn bias_grad_sums_rows() {
+        let g = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(Dense::bias_grad(&g), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let mut x = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        let pre = x.clone();
+        relu(&mut x);
+        assert_eq!(x.data(), &[0.0, 0.0, 2.0, 0.0]);
+        let mut g = Matrix::from_vec(1, 4, vec![1.0; 4]);
+        relu_backward(&mut g, &pre);
+        assert_eq!(g.data(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+
+    /// Finite-difference check of the dense backward formulas (32)/(33).
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut rng = Pcg64::seed_from(5);
+        let d = Dense::init(4, 3, &mut rng);
+        let x = Matrix::randn(2, 4, 0.0, 1.0, &mut rng);
+        // scalar objective: sum of outputs
+        let f = |layer: &Dense| layer.forward(&x).data().iter().sum::<f64>();
+        // analytic: dL/dV = Xᵀ · G with G = ones
+        let g = Matrix::from_fn(2, 3, |_, _| 1.0);
+        let dv = matmul(&x.transpose(), &g);
+        let eps = 1e-6;
+        for (r, c) in [(0, 0), (1, 2), (3, 1)] {
+            let mut dp = d.clone();
+            dp.v[(r, c)] += eps;
+            let num = (f(&dp) - f(&d)) / eps;
+            assert!((num - dv[(r, c)]).abs() < 1e-4, "({r},{c}): {num} vs {}", dv[(r, c)]);
+        }
+        // input gradient: dL/dX = G · Vᵀ (eq. 32)
+        let dx = matmul(&g, &d.v.transpose());
+        let fx = |xm: &Matrix| d.forward(xm).data().iter().sum::<f64>();
+        for (r, c) in [(0, 0), (1, 3)] {
+            let mut xp = x.clone();
+            xp[(r, c)] += eps;
+            let num = (fx(&xp) - fx(&x)) / eps;
+            assert!((num - dx[(r, c)]).abs() < 1e-4);
+        }
+    }
+}

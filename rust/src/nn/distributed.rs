@@ -1,0 +1,253 @@
+//! The distributed approximate matmul hook: where the paper's system
+//! meets the training loop. Every call simulates one coded multiplication
+//! round — partition, classify by norm, encode, sample worker arrivals,
+//! decode what beat the deadline, assemble with zeros elsewhere — and
+//! returns the approximation `Ĉ` the optimizer actually consumes.
+//!
+//! Operand dimensions rarely divide the block counts, so operands are
+//! zero-padded up to the next multiple (zero rows/columns contribute
+//! nothing to the product) and the result is cropped back.
+
+use crate::coding::{CodeSpec, DecodeState, UnknownSpace};
+use crate::latency::LatencyModel;
+use crate::linalg::{matmul, Matrix};
+use crate::partition::{ClassMap, Paradigm, Partitioning};
+use crate::rng::Pcg64;
+use crate::sim::StragglerSim;
+
+/// How a training-loop matmul is executed.
+#[derive(Clone, Debug)]
+pub enum MatmulStrategy {
+    /// Centralized, no stragglers (the red reference curve).
+    Exact,
+    /// Distributed with coding and a deadline.
+    Coded(CodedMatmulCfg),
+}
+
+/// Configuration of one coded multiplication round (Table VII).
+#[derive(Clone, Debug)]
+pub struct CodedMatmulCfg {
+    pub paradigm: Paradigm,
+    /// Row/col blocks per side for r×c (N = P = `blocks`), or the number
+    /// of inner blocks M for c×r (`blocks`² blocks? no — M = `blocks`²
+    /// is *not* implied; M = `blocks_cxr`). For the paper's setup:
+    /// r×c: blocks = 3 (9 sub-products); c×r: blocks = 9.
+    pub blocks: usize,
+    pub spec: CodeSpec,
+    pub workers: usize,
+    pub latency: LatencyModel,
+    /// Ω = #sub-products / workers (Remark 1), recomputed per call from
+    /// the actual sub-product count when `auto_omega` is set.
+    pub auto_omega: bool,
+    pub t_max: f64,
+    /// Importance levels S for norm classification.
+    pub s_levels: usize,
+}
+
+impl CodedMatmulCfg {
+    pub fn num_products(&self) -> usize {
+        match self.paradigm {
+            Paradigm::RowTimesCol => self.blocks * self.blocks,
+            Paradigm::ColTimesRow => self.blocks,
+        }
+    }
+}
+
+/// Stateful distributed matmul executor (owns the RNG stream so training
+/// runs are reproducible).
+pub struct DistributedMatmul {
+    pub strategy: MatmulStrategy,
+    pub rng: Pcg64,
+    /// Cumulative stats: products attempted / recovered.
+    pub total_products: usize,
+    pub total_recovered: usize,
+}
+
+impl DistributedMatmul {
+    pub fn new(strategy: MatmulStrategy, rng: Pcg64) -> Self {
+        DistributedMatmul { strategy, rng, total_products: 0, total_recovered: 0 }
+    }
+
+    /// Compute (an approximation of) `A·B`.
+    pub fn multiply(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
+        match &self.strategy {
+            MatmulStrategy::Exact => matmul(a, b),
+            MatmulStrategy::Coded(cfg) => {
+                let cfg = cfg.clone();
+                self.multiply_coded(a, b, &cfg)
+            }
+        }
+    }
+
+    /// Fraction of sub-products recovered so far (diagnostics).
+    pub fn recovery_rate(&self) -> f64 {
+        if self.total_products == 0 {
+            1.0
+        } else {
+            self.total_recovered as f64 / self.total_products as f64
+        }
+    }
+
+    fn multiply_coded(&mut self, a: &Matrix, b: &Matrix, cfg: &CodedMatmulCfg) -> Matrix {
+        assert_eq!(a.cols(), b.rows());
+        let (orig_m, orig_n) = (a.rows(), b.cols());
+        // --- pad to block-divisible shapes --------------------------------
+        let (a_pad, b_pad, part) = match cfg.paradigm {
+            Paradigm::RowTimesCol => {
+                let nb = cfg.blocks;
+                let m_pad = round_up(a.rows(), nb);
+                let n_pad = round_up(b.cols(), nb);
+                let a_pad = pad_to(a, m_pad, a.cols());
+                let b_pad = pad_to(b, b.rows(), n_pad);
+                let part =
+                    Partitioning::rxc(nb, nb, m_pad / nb, a.cols(), n_pad / nb);
+                (a_pad, b_pad, part)
+            }
+            Paradigm::ColTimesRow => {
+                let mb = cfg.blocks;
+                let k_pad = round_up(a.cols(), mb);
+                let a_pad = pad_to(a, a.rows(), k_pad);
+                let b_pad = pad_to(b, k_pad, b.cols());
+                let part = Partitioning::cxr(mb, a.rows(), k_pad / mb, b.cols());
+                (a_pad, b_pad, part)
+            }
+        };
+        // --- classify, encode, simulate arrivals, decode ------------------
+        let cm = ClassMap::from_matrices(&part, &a_pad, &b_pad, cfg.s_levels);
+        let packets =
+            cfg.spec.generate_packets(&part, &cm, cfg.workers, &mut self.rng);
+        let omega = if cfg.auto_omega {
+            part.num_products() as f64 / cfg.workers as f64
+        } else {
+            1.0
+        };
+        let sim = StragglerSim::new(cfg.workers, cfg.latency.clone(), omega);
+        let arrivals = sim.sample_arrivals(&mut self.rng);
+        let space = UnknownSpace::for_code(&part, cfg.spec.style);
+        let mut st = DecodeState::new(space);
+        for (w, p) in packets.iter().enumerate() {
+            if arrivals[w] <= cfg.t_max {
+                st.add_packet(p, None);
+            }
+        }
+        let mask = st.recovered_mask();
+        // --- assemble recovered sub-products exactly (linearity) ----------
+        let a_blocks = part.split_a(&a_pad);
+        let b_blocks = part.split_b(&b_pad);
+        let recovered: Vec<Option<Matrix>> = (0..part.num_products())
+            .map(|u| {
+                mask[u].then(|| {
+                    let (ai, bi) = part.factors_of(u);
+                    matmul(&a_blocks[ai], &b_blocks[bi])
+                })
+            })
+            .collect();
+        self.total_products += part.num_products();
+        self.total_recovered += mask.iter().filter(|&&m| m).count();
+        let c_pad = part.assemble(&recovered);
+        c_pad.block(0, 0, orig_m, orig_n)
+    }
+}
+
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+fn pad_to(m: &Matrix, rows: usize, cols: usize) -> Matrix {
+    if m.shape() == (rows, cols) {
+        return m.clone();
+    }
+    let mut out = Matrix::zeros(rows, cols);
+    out.set_block(0, 0, m);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, EncodeStyle, WindowPolynomial};
+
+    fn cfg(paradigm: Paradigm, blocks: usize, t_max: f64) -> CodedMatmulCfg {
+        CodedMatmulCfg {
+            paradigm,
+            blocks,
+            spec: CodeSpec::new(
+                CodeKind::EwUep(WindowPolynomial::paper_table3()),
+                EncodeStyle::Stacked,
+            ),
+            workers: 15,
+            latency: LatencyModel::exp(0.5),
+            auto_omega: true,
+            t_max,
+            s_levels: 3,
+        }
+    }
+
+    #[test]
+    fn generous_deadline_gives_exact_product() {
+        let mut rng = Pcg64::seed_from(1);
+        // Table VI shape: (64×100)·(100×784) — indivisible by 3, padded.
+        let a = Matrix::randn(64, 100, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(100, 784, 0.0, 1.0, &mut rng);
+        for paradigm in [Paradigm::RowTimesCol, Paradigm::ColTimesRow] {
+            let blocks = if paradigm == Paradigm::RowTimesCol { 3 } else { 9 };
+            let mut dm = DistributedMatmul::new(
+                MatmulStrategy::Coded(cfg(paradigm, blocks, 1e6)),
+                Pcg64::seed_from(2),
+            );
+            let got = dm.multiply(&a, &b);
+            assert_eq!(got.shape(), (64, 784));
+            assert!(got.allclose(&matmul(&a, &b), 1e-9), "{paradigm:?}");
+            assert!((dm.recovery_rate() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_deadline_gives_zero_matrix() {
+        let mut rng = Pcg64::seed_from(3);
+        let a = Matrix::randn(10, 9, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(9, 10, 0.0, 1.0, &mut rng);
+        let mut dm = DistributedMatmul::new(
+            MatmulStrategy::Coded(cfg(Paradigm::ColTimesRow, 9, 0.0)),
+            Pcg64::seed_from(4),
+        );
+        let got = dm.multiply(&a, &b);
+        assert_eq!(got.frob_sq(), 0.0);
+        assert_eq!(dm.recovery_rate(), 0.0);
+    }
+
+    #[test]
+    fn partial_deadline_recovers_blocks_exactly() {
+        // Whatever the coded path recovers must match the true product on
+        // those blocks (r×c: block-exact or zero).
+        let mut rng = Pcg64::seed_from(5);
+        let a = Matrix::randn(12, 8, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(8, 12, 0.0, 1.0, &mut rng);
+        let mut dm = DistributedMatmul::new(
+            MatmulStrategy::Coded(cfg(Paradigm::RowTimesCol, 3, 1.2)),
+            Pcg64::seed_from(6),
+        );
+        let got = dm.multiply(&a, &b);
+        let truth = matmul(&a, &b);
+        for bi in 0..3 {
+            for bj in 0..3 {
+                let gb = got.block(bi * 4, bj * 4, 4, 4);
+                let tb = truth.block(bi * 4, bj * 4, 4, 4);
+                let zero = gb.frob_sq() == 0.0;
+                assert!(
+                    zero || gb.allclose(&tb, 1e-9),
+                    "block ({bi},{bj}) neither zero nor exact"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_strategy_is_exact() {
+        let mut rng = Pcg64::seed_from(7);
+        let a = Matrix::randn(5, 6, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let mut dm = DistributedMatmul::new(MatmulStrategy::Exact, Pcg64::seed_from(8));
+        assert!(dm.multiply(&a, &b).allclose(&matmul(&a, &b), 1e-12));
+    }
+}

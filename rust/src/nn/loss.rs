@@ -1,0 +1,101 @@
+//! Softmax + categorical cross-entropy (Table IV) and accuracy.
+
+use crate::linalg::Matrix;
+
+/// Mean softmax cross-entropy loss and its logits gradient
+/// `(softmax(logits) − y)/batch` — the `G_{I+1}` seeding eq. (32).
+pub fn softmax_xent(logits: &Matrix, y_onehot: &Matrix) -> (f64, Matrix) {
+    assert_eq!(logits.shape(), y_onehot.shape());
+    let batch = logits.rows();
+    let classes = logits.cols();
+    let mut grad = Matrix::zeros(batch, classes);
+    let mut loss = 0.0;
+    for r in 0..batch {
+        let row = logits.row(r);
+        let max = row.iter().fold(f64::NEG_INFINITY, |m, &x| m.max(x));
+        let exps: Vec<f64> = row.iter().map(|&x| (x - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let g = grad.row_mut(r);
+        for c in 0..classes {
+            let p = exps[c] / z;
+            let y = y_onehot[(r, c)];
+            g[c] = (p - y) / batch as f64;
+            if y > 0.0 {
+                loss -= y * (p.max(1e-300)).ln();
+            }
+        }
+    }
+    (loss / batch as f64, grad)
+}
+
+/// Classification accuracy of logits against one-hot labels.
+pub fn accuracy(logits: &Matrix, y_onehot: &Matrix) -> f64 {
+    let batch = logits.rows();
+    let mut correct = 0usize;
+    for r in 0..batch {
+        let pred = argmax(logits.row(r));
+        let truth = argmax(y_onehot.row(r));
+        if pred == truth {
+            correct += 1;
+        }
+    }
+    correct as f64 / batch as f64
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_classes() {
+        let logits = Matrix::zeros(4, 10);
+        let mut y = Matrix::zeros(4, 10);
+        for r in 0..4 {
+            y[(r, r)] = 1.0;
+        }
+        let (loss, grad) = softmax_xent(&logits, &y);
+        assert!((loss - (10f64).ln()).abs() < 1e-9);
+        // gradient rows sum to zero
+        for r in 0..4 {
+            let s: f64 = grad.row(r).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut logits = Matrix::from_vec(2, 3, vec![0.3, -0.7, 1.1, 0.0, 0.5, -0.2]);
+        let mut y = Matrix::zeros(2, 3);
+        y[(0, 2)] = 1.0;
+        y[(1, 0)] = 1.0;
+        let (_, grad) = softmax_xent(&logits, &y);
+        let eps = 1e-6;
+        for (r, c) in [(0, 0), (0, 2), (1, 1)] {
+            let base = softmax_xent(&logits, &y).0;
+            logits[(r, c)] += eps;
+            let bumped = softmax_xent(&logits, &y).0;
+            logits[(r, c)] -= eps;
+            let num = (bumped - base) / eps;
+            assert!((num - grad[(r, c)]).abs() < 1e-4, "({r},{c}): {num} vs {}", grad[(r, c)]);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        let logits = Matrix::from_vec(2, 2, vec![0.9, 0.1, 0.2, 0.8]);
+        let mut y = Matrix::zeros(2, 2);
+        y[(0, 0)] = 1.0;
+        y[(1, 0)] = 1.0; // second sample mislabeled vs prediction
+        assert!((accuracy(&logits, &y) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! DNN training substrate (paper §VII): dense and convolutional layers
+//! with *manual* back-propagation written exactly as the paper's
+//! eqs. (32)–(33), threshold sparsification (eq. 34), SGD, and the hook
+//! that routes the two back-propagation matmuls of every dense layer
+//! through the UEP-coded distributed multiplication engine.
+//!
+//! The layer math mirrors `python/compile/model.py` one-to-one; the
+//! `mlp_step` AOT artifact is the compiled reference for the centralized
+//! (no-straggler) path and the integration tests check the two against
+//! each other.
+
+mod cnn;
+mod conv;
+mod dense;
+mod distributed;
+mod loss;
+mod mlp;
+mod sparsify;
+mod train;
+
+pub use cnn::{Cnn, CnnArch};
+pub use conv::{col2im, im2col, Conv2D, ImageBatch, MaxPool2D};
+pub use dense::{relu, relu_backward, Dense};
+pub use distributed::{CodedMatmulCfg, DistributedMatmul, MatmulStrategy};
+pub use loss::{accuracy, softmax_xent};
+pub use mlp::{Mlp, MlpGrads};
+pub use sparsify::{sparsify, sparsity_of, TauSchedule};
+pub use train::{evaluate, train_mlp, EpochPoint, TrainConfig, TrainRecord};

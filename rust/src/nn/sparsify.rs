@@ -1,0 +1,99 @@
+//! Threshold sparsification, paper eq. (34): entries with `|x| ≤ τ` are
+//! zeroed. τ starts near machine precision and grows with the epoch, and
+//! deeper layers get larger τ — this is what creates the norm variation
+//! across sub-blocks that UEP coding exploits (§VII-B).
+
+use crate::linalg::Matrix;
+
+/// Apply `R(x) = x·1(|x| > τ)` in place; returns the number of zeroed
+/// entries.
+pub fn sparsify(m: &mut Matrix, tau: f64) -> usize {
+    let mut zeroed = 0;
+    for v in m.data_mut() {
+        if v.abs() <= tau && *v != 0.0 {
+            *v = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Fraction of exactly-zero entries.
+pub fn sparsity_of(m: &Matrix) -> f64 {
+    let zeros = m.data().iter().filter(|&&v| v == 0.0).count();
+    zeros as f64 / m.data().len().max(1) as f64
+}
+
+/// The τ schedule of §VII-B: per-layer base thresholds (deeper layers
+/// sparser) growing geometrically with the epoch.
+#[derive(Clone, Debug)]
+pub struct TauSchedule {
+    /// Base τ for gradients at epoch 0, per layer (index = depth).
+    pub grad_base: Vec<f64>,
+    /// Base τ for weights/inputs at epoch 0, per layer.
+    pub weight_base: Vec<f64>,
+    /// Multiplicative growth per epoch ("increased as training
+    /// progresses").
+    pub growth: f64,
+}
+
+impl TauSchedule {
+    /// The paper's §VII-B choice: τ_grad = 1e-5, τ_weight/input = 1e-4,
+    /// with deeper layers 2× sparser per depth step.
+    pub fn paper(layers: usize) -> Self {
+        TauSchedule {
+            grad_base: (0..layers).map(|d| 1e-5 * 2f64.powi(d as i32)).collect(),
+            weight_base: (0..layers).map(|d| 1e-4 * 2f64.powi(d as i32)).collect(),
+            growth: 1.5,
+        }
+    }
+
+    /// No sparsification (ablation).
+    pub fn off(layers: usize) -> Self {
+        TauSchedule {
+            grad_base: vec![0.0; layers],
+            weight_base: vec![0.0; layers],
+            growth: 1.0,
+        }
+    }
+
+    pub fn grad_tau(&self, layer: usize, epoch: usize) -> f64 {
+        self.grad_base[layer] * self.growth.powi(epoch as i32)
+    }
+
+    pub fn weight_tau(&self, layer: usize, epoch: usize) -> f64 {
+        self.weight_base[layer] * self.growth.powi(epoch as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn sparsify_zeroes_below_threshold() {
+        let mut m = Matrix::from_vec(1, 4, vec![0.5, -0.001, 0.002, -2.0]);
+        let z = sparsify(&mut m, 0.01);
+        assert_eq!(z, 2);
+        assert_eq!(m.data(), &[0.5, 0.0, 0.0, -2.0]);
+        assert!((sparsity_of(&m) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_matrix_sparsity_tracks_threshold() {
+        let mut rng = Pcg64::seed_from(1);
+        let mut m = Matrix::randn(200, 200, 0.0, 1.0, &mut rng);
+        // P(|N(0,1)| ≤ 0.6745) = 0.5
+        sparsify(&mut m, 0.6745);
+        assert!((sparsity_of(&m) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn schedule_grows_with_epoch_and_depth() {
+        let s = TauSchedule::paper(3);
+        assert!(s.grad_tau(0, 0) < s.grad_tau(1, 0));
+        assert!(s.grad_tau(0, 0) < s.grad_tau(0, 2));
+        assert_eq!(TauSchedule::off(3).grad_tau(2, 5), 0.0);
+    }
+}

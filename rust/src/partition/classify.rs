@@ -1,0 +1,265 @@
+//! Importance classification: factor blocks → `S` norm levels, and the
+//! pair table mapping factor-level pairs to the `L` classes of `C`
+//! sub-products (paper §IV-A and the §VI worked example).
+
+use super::Partitioning;
+use crate::linalg::Matrix;
+
+/// Classify values into `s` importance levels by descending magnitude:
+/// index 0 = most important. Groups are as equal-sized as possible
+/// (paper §VII-C: "divided into three groups of (roughly) equal size").
+pub fn classify_by_norm(norms: &[f64], s: usize) -> Vec<usize> {
+    assert!(s >= 1 && s <= norms.len(), "need 1 ≤ S ≤ #blocks");
+    let mut order: Vec<usize> = (0..norms.len()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut classes = vec![0usize; norms.len()];
+    let n = norms.len();
+    for (rank, &idx) in order.iter().enumerate() {
+        // split ranks into s contiguous groups of near-equal size
+        classes[idx] = rank * s / n;
+    }
+    classes
+}
+
+/// Default pair table: maps an (unordered) pair of factor levels
+/// `(s_a, s_b)` with `s_a, s_b ∈ [S]` to a class in `[L]` with `L = S`,
+/// reproducing the paper's §VI example for `S = 3`:
+/// `{hh, hm, mh} → 0`, `{mm, hl, lh} → 1`, `{ml, lm, ll} → 2`.
+///
+/// General rule: the pair score `σ = s_a + s_b ∈ [0, 2S-2]` is banded
+/// symmetrically into `S` classes — scores below the middle pair up from
+/// the top, the middle score `S-1` sits in the middle class, and scores
+/// above pair up from the bottom. For `S = 3` this is exactly the paper's
+/// merge: bands `{0,1} {2} {3,4}`.
+pub fn default_pair_classes(s: usize) -> PairTable {
+    let band = |score: usize| -> usize {
+        let mid = s - 1;
+        if score < mid {
+            score / 2
+        } else if score == mid {
+            mid / 2
+        } else {
+            (s - 1) - (2 * s - 2 - score) / 2
+        }
+    };
+    let table = (0..s)
+        .map(|sa| (0..s).map(|sb| band(sa + sb)).collect())
+        .collect();
+    PairTable { s, table }
+}
+
+/// Mapping from factor-level pairs to sub-product classes.
+#[derive(Clone, Debug)]
+pub struct PairTable {
+    pub s: usize,
+    /// `table[s_a][s_b]` = class of a product of an `s_a`-level A block
+    /// with an `s_b`-level B block.
+    pub table: Vec<Vec<usize>>,
+}
+
+impl PairTable {
+    pub fn class_of(&self, sa: usize, sb: usize) -> usize {
+        self.table[sa][sb]
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.table.iter().flatten().max().unwrap() + 1
+    }
+}
+
+/// The complete importance structure of one coded multiplication:
+/// factor-block levels, sub-product classes, and members per class.
+#[derive(Clone, Debug)]
+pub struct ClassMap {
+    /// Number of sub-product classes `L` (most important = 0).
+    pub n_classes: usize,
+    /// Class of each sub-product (unknown), length `num_products()`.
+    pub class_of: Vec<usize>,
+    /// Unknown indices per class (each non-empty).
+    pub members: Vec<Vec<usize>>,
+    /// Importance level of each A factor block.
+    pub a_level: Vec<usize>,
+    /// Importance level of each B factor block.
+    pub b_level: Vec<usize>,
+    /// Number of factor levels `S`.
+    pub s_levels: usize,
+}
+
+impl ClassMap {
+    /// Build from explicit factor levels and a pair table. Classes with no
+    /// members are compacted away (the paper's c×r case can produce fewer
+    /// than `S(S+1)/2` classes).
+    pub fn from_levels(
+        part: &Partitioning,
+        a_level: Vec<usize>,
+        b_level: Vec<usize>,
+        pair: &PairTable,
+    ) -> Self {
+        assert_eq!(a_level.len(), part.num_a_blocks());
+        assert_eq!(b_level.len(), part.num_b_blocks());
+        let k = part.num_products();
+        let raw: Vec<usize> = (0..k)
+            .map(|i| {
+                let (ai, bi) = part.factors_of(i);
+                pair.class_of(a_level[ai], b_level[bi])
+            })
+            .collect();
+        // compact to consecutive class ids preserving order
+        let mut present: Vec<usize> = raw.clone();
+        present.sort_unstable();
+        present.dedup();
+        let remap = |c: usize| present.binary_search(&c).unwrap();
+        let class_of: Vec<usize> = raw.iter().map(|&c| remap(c)).collect();
+        let n_classes = present.len();
+        let mut members = vec![Vec::new(); n_classes];
+        for (i, &c) in class_of.iter().enumerate() {
+            members[c].push(i);
+        }
+        ClassMap { n_classes, class_of, members, a_level, b_level, s_levels: pair.s }
+    }
+
+    /// Build by classifying the actual factor blocks of `(A, B)` by
+    /// Frobenius norm into `s` levels (the production path: the PS sorts
+    /// row/column blocks by magnitude, §VII-C).
+    pub fn from_matrices(
+        part: &Partitioning,
+        a: &Matrix,
+        b: &Matrix,
+        s: usize,
+    ) -> Self {
+        let a_norms: Vec<f64> =
+            part.split_a(a).iter().map(|m| m.frob_sq()).collect();
+        let b_norms: Vec<f64> =
+            part.split_b(b).iter().map(|m| m.frob_sq()).collect();
+        let a_level = classify_by_norm(&a_norms, s);
+        let b_level = classify_by_norm(&b_norms, s);
+        let pair = default_pair_classes(s);
+        ClassMap::from_levels(part, a_level, b_level, &pair)
+    }
+
+    /// `k_l`: number of sub-products in each class.
+    pub fn class_sizes(&self) -> Vec<usize> {
+        self.members.iter().map(|m| m.len()).collect()
+    }
+
+    /// Unknowns whose class is `≤ l` (the EW window `l`).
+    pub fn window_leq(&self, l: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .members
+            .iter()
+            .take(l + 1)
+            .flatten()
+            .copied()
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn classify_splits_evenly_and_orders() {
+        let norms = [10.0, 1.0, 0.1, 5.0, 0.5, 0.05];
+        let c = classify_by_norm(&norms, 3);
+        // descending order: 10, 5, 1, 0.5, 0.1, 0.05 → levels 0,0,1,1,2,2
+        assert_eq!(c, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn classify_single_class() {
+        let c = classify_by_norm(&[3.0, 2.0, 1.0], 1);
+        assert_eq!(c, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn pair_table_matches_paper_example() {
+        // S = 3: {hh,hm,mh}→0, {mm,hl,lh}→1, {ml,lm,ll}→2
+        let t = default_pair_classes(3);
+        assert_eq!(t.class_of(0, 0), 0);
+        assert_eq!(t.class_of(0, 1), 0);
+        assert_eq!(t.class_of(1, 0), 0);
+        assert_eq!(t.class_of(1, 1), 1);
+        assert_eq!(t.class_of(0, 2), 1);
+        assert_eq!(t.class_of(2, 0), 1);
+        assert_eq!(t.class_of(1, 2), 2);
+        assert_eq!(t.class_of(2, 1), 2);
+        assert_eq!(t.class_of(2, 2), 2);
+        assert_eq!(t.num_classes(), 3);
+    }
+
+    #[test]
+    fn paper_rxc_synthetic_classes() {
+        // §VI: N=P=3, one block per level on each side → k=(3,3,3).
+        let part = Partitioning::rxc(3, 3, 2, 2, 2);
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        assert_eq!(cm.n_classes, 3);
+        assert_eq!(cm.class_sizes(), vec![3, 3, 3]);
+        // class 0 = {(0,0),(0,1),(1,0)} = unknowns {0,1,3}
+        assert_eq!(cm.members[0], vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn paper_cxr_synthetic_classes() {
+        // §VI: M=9, blocks 0-2 high, 3-5 medium, 6-8 low → k=(3,3,3).
+        let part = Partitioning::cxr(9, 2, 2, 2);
+        let lv = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, lv.clone(), lv, &pair);
+        assert_eq!(cm.n_classes, 3);
+        assert_eq!(cm.class_sizes(), vec![3, 3, 3]);
+        assert_eq!(cm.members[2], vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn cxr_compacts_missing_classes() {
+        // alternating levels: pairs are (0,0) and (2,2) only → 2 classes
+        let part = Partitioning::cxr(4, 2, 2, 2);
+        let lv = vec![0, 2, 0, 2];
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, lv.clone(), lv, &pair);
+        assert_eq!(cm.n_classes, 2);
+        assert_eq!(cm.class_sizes(), vec![2, 2]);
+    }
+
+    #[test]
+    fn from_matrices_orders_by_actual_norm() {
+        let mut rng = Pcg64::seed_from(5);
+        let part = Partitioning::rxc(3, 3, 4, 6, 4);
+        // build A with row blocks of wildly different scales, shuffled
+        let scales_a = [0.1, 10.0, 1.0];
+        let blocks_a: Vec<Matrix> = scales_a
+            .iter()
+            .map(|&s| Matrix::randn(4, 6, 0.0, s, &mut rng))
+            .collect();
+        let a = Matrix::vconcat(&blocks_a.iter().collect::<Vec<_>>());
+        let scales_b = [1.0, 0.1, 10.0];
+        let blocks_b: Vec<Matrix> = scales_b
+            .iter()
+            .map(|&s| Matrix::randn(6, 4, 0.0, s, &mut rng))
+            .collect();
+        let b = Matrix::hconcat(&blocks_b.iter().collect::<Vec<_>>());
+        let cm = ClassMap::from_matrices(&part, &a, &b, 3);
+        assert_eq!(cm.a_level, vec![2, 0, 1]);
+        assert_eq!(cm.b_level, vec![1, 2, 0]);
+        // highest-importance product = A_1·B_2 = unknown 1*3+2 = 5
+        assert_eq!(cm.class_of[5], 0);
+    }
+
+    #[test]
+    fn ew_windows_are_nested() {
+        let part = Partitioning::rxc(3, 3, 1, 1, 1);
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        let w0 = cm.window_leq(0);
+        let w1 = cm.window_leq(1);
+        let w2 = cm.window_leq(2);
+        assert!(w0.iter().all(|i| w1.contains(i)));
+        assert!(w1.iter().all(|i| w2.contains(i)));
+        assert_eq!(w2.len(), 9);
+    }
+}

@@ -1,0 +1,22 @@
+//! Matrix partitioning (paper §II-A) and importance classification
+//! (paper §IV-A).
+//!
+//! Two paradigms:
+//! * **r×c** (row-times-column, eq. 3): `A` split into `N` row blocks,
+//!   `B` into `P` column blocks; the `N·P` sub-products `C_np = A_n·B_p`
+//!   tile `C`.
+//! * **c×r** (column-times-row, eq. 4): `A` split into `M` column blocks,
+//!   `B` into `M` row blocks; `C = Σ_m A_m·B_m` is a sum of `M` full-size
+//!   terms.
+//!
+//! Sub-blocks are classified into `S` importance levels by Frobenius norm
+//! (larger norm ⇒ more important ⇒ stronger protection), and each
+//! sub-product inherits a class from the pair of factor classes via a
+//! *pair table* (the paper's §VI example merges the `S(S+1)/2` pair levels
+//! into `L` classes).
+
+mod classify;
+mod paradigm;
+
+pub use classify::{classify_by_norm, default_pair_classes, ClassMap};
+pub use paradigm::{Paradigm, Partitioning};

@@ -1,0 +1,318 @@
+//! The two block-partitioning paradigms and the `Ĉ` assembly logic.
+
+use crate::linalg::{matmul, Matrix};
+
+/// Which partitioning paradigm (paper Figs. 3 and 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Paradigm {
+    /// Row-times-column (eq. 3): `C_np = A_n B_p` tiles `C`.
+    RowTimesCol,
+    /// Column-times-row (eq. 4): `C = Σ_m A_m B_m` (outer-product form).
+    ColTimesRow,
+}
+
+impl Paradigm {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Paradigm::RowTimesCol => "rxc",
+            Paradigm::ColTimesRow => "cxr",
+        }
+    }
+}
+
+/// A concrete partitioning of a product `C = A·B`.
+///
+/// For `RowTimesCol`, `A: (N·U)×H`, `B: H×(P·Q)` and there are `N·P`
+/// sub-products of shape `U×Q` (unknown index `n·P + p`).
+/// For `ColTimesRow`, `A: U×(M·H)`, `B: (M·H)×Q` and there are `M`
+/// sub-products, each of the full shape `U×Q`.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub paradigm: Paradigm,
+    /// Row blocks of A (r×c) — 1 for c×r.
+    pub n: usize,
+    /// Column blocks of B (r×c) — 1 for c×r.
+    pub p: usize,
+    /// Column/row blocks of A/B (c×r) — 1 for r×c.
+    pub m: usize,
+    /// Sub-block rows of each A block.
+    pub u: usize,
+    /// Shared inner dimension of each sub-product.
+    pub h: usize,
+    /// Sub-block columns of each B block.
+    pub q: usize,
+}
+
+impl Partitioning {
+    /// Row-times-column with `n`/`p` row/column blocks of size `u×h` / `h×q`.
+    pub fn rxc(n: usize, p: usize, u: usize, h: usize, q: usize) -> Self {
+        Partitioning { paradigm: Paradigm::RowTimesCol, n, p, m: 1, u, h, q }
+    }
+
+    /// Column-times-row with `m` column/row blocks of size `u×h` / `h×q`.
+    pub fn cxr(m: usize, u: usize, h: usize, q: usize) -> Self {
+        Partitioning { paradigm: Paradigm::ColTimesRow, n: 1, p: 1, m, u, h, q }
+    }
+
+    /// Total number of sub-products (unknowns): `N·P` or `M`.
+    pub fn num_products(&self) -> usize {
+        match self.paradigm {
+            Paradigm::RowTimesCol => self.n * self.p,
+            Paradigm::ColTimesRow => self.m,
+        }
+    }
+
+    /// Shape of `A`: rows × cols.
+    pub fn a_shape(&self) -> (usize, usize) {
+        match self.paradigm {
+            Paradigm::RowTimesCol => (self.n * self.u, self.h),
+            Paradigm::ColTimesRow => (self.u, self.m * self.h),
+        }
+    }
+
+    /// Shape of `B`.
+    pub fn b_shape(&self) -> (usize, usize) {
+        match self.paradigm {
+            Paradigm::RowTimesCol => (self.h, self.p * self.q),
+            Paradigm::ColTimesRow => (self.m * self.h, self.q),
+        }
+    }
+
+    /// Shape of `C`.
+    pub fn c_shape(&self) -> (usize, usize) {
+        match self.paradigm {
+            Paradigm::RowTimesCol => (self.n * self.u, self.p * self.q),
+            Paradigm::ColTimesRow => (self.u, self.q),
+        }
+    }
+
+    /// Number of factor blocks on the A side (`N` or `M`).
+    pub fn num_a_blocks(&self) -> usize {
+        match self.paradigm {
+            Paradigm::RowTimesCol => self.n,
+            Paradigm::ColTimesRow => self.m,
+        }
+    }
+
+    /// Number of factor blocks on the B side (`P` or `M`).
+    pub fn num_b_blocks(&self) -> usize {
+        match self.paradigm {
+            Paradigm::RowTimesCol => self.p,
+            Paradigm::ColTimesRow => self.m,
+        }
+    }
+
+    /// Split `A` into its factor blocks (each `U×H`).
+    pub fn split_a(&self, a: &Matrix) -> Vec<Matrix> {
+        assert_eq!(a.shape(), self.a_shape(), "A shape mismatch");
+        match self.paradigm {
+            Paradigm::RowTimesCol => a.split_rows(self.n),
+            Paradigm::ColTimesRow => a.split_cols(self.m),
+        }
+    }
+
+    /// Split `B` into its factor blocks (each `H×Q`).
+    pub fn split_b(&self, b: &Matrix) -> Vec<Matrix> {
+        assert_eq!(b.shape(), self.b_shape(), "B shape mismatch");
+        match self.paradigm {
+            Paradigm::RowTimesCol => b.split_cols(self.p),
+            Paradigm::ColTimesRow => b.split_rows(self.m),
+        }
+    }
+
+    /// Factor-block indices `(a_idx, b_idx)` of sub-product `idx`.
+    pub fn factors_of(&self, idx: usize) -> (usize, usize) {
+        match self.paradigm {
+            Paradigm::RowTimesCol => (idx / self.p, idx % self.p),
+            Paradigm::ColTimesRow => (idx, idx),
+        }
+    }
+
+    /// Unknown index of the pair `(a_idx, b_idx)`; `None` if that pair is
+    /// not a sub-product of `C` (off-diagonal pairs in c×r).
+    pub fn product_of(&self, a_idx: usize, b_idx: usize) -> Option<usize> {
+        match self.paradigm {
+            Paradigm::RowTimesCol => Some(a_idx * self.p + b_idx),
+            Paradigm::ColTimesRow => (a_idx == b_idx).then_some(a_idx),
+        }
+    }
+
+    /// Compute all true sub-products `C_i` (reference path; the
+    /// coordinator normally delegates the per-worker products to an
+    /// execution engine).
+    pub fn true_products(&self, a: &Matrix, b: &Matrix) -> Vec<Matrix> {
+        let a_blocks = self.split_a(a);
+        let b_blocks = self.split_b(b);
+        (0..self.num_products())
+            .map(|i| {
+                let (ai, bi) = self.factors_of(i);
+                matmul(&a_blocks[ai], &b_blocks[bi])
+            })
+            .collect()
+    }
+
+    /// Assemble `Ĉ` from recovered sub-products; missing blocks are zero
+    /// (the paper's decoder, §IV-B).
+    pub fn assemble(&self, recovered: &[Option<Matrix>]) -> Matrix {
+        assert_eq!(recovered.len(), self.num_products());
+        let (cr, cc) = self.c_shape();
+        let mut c = Matrix::zeros(cr, cc);
+        match self.paradigm {
+            Paradigm::RowTimesCol => {
+                for (idx, blk) in recovered.iter().enumerate() {
+                    if let Some(blk) = blk {
+                        let (n, p) = self.factors_of(idx);
+                        assert_eq!(blk.shape(), (self.u, self.q));
+                        c.set_block(n * self.u, p * self.q, blk);
+                    }
+                }
+            }
+            Paradigm::ColTimesRow => {
+                for blk in recovered.iter().flatten() {
+                    assert_eq!(blk.shape(), (self.u, self.q));
+                    c.axpy(1.0, blk);
+                }
+            }
+        }
+        c
+    }
+
+    /// `‖C‖²_F`-weighted residual loss for a recovery subset: the exact
+    /// loss `‖C − Ĉ‖²_F` computed from the sub-product Gram matrix
+    /// `G_ij = ⟨C_i, C_j⟩_F` (cheap path for Monte-Carlo sweeps; for r×c
+    /// `G` is diagonal because distinct sub-products occupy disjoint
+    /// blocks of `C`).
+    pub fn loss_from_gram(&self, gram: &Matrix, recovered: &[bool]) -> f64 {
+        let k = self.num_products();
+        assert_eq!(gram.shape(), (k, k));
+        assert_eq!(recovered.len(), k);
+        match self.paradigm {
+            Paradigm::RowTimesCol => (0..k)
+                .filter(|&i| !recovered[i])
+                .map(|i| gram[(i, i)])
+                .sum(),
+            Paradigm::ColTimesRow => {
+                let mut loss = 0.0;
+                for i in 0..k {
+                    if recovered[i] {
+                        continue;
+                    }
+                    for j in 0..k {
+                        if !recovered[j] {
+                            loss += gram[(i, j)];
+                        }
+                    }
+                }
+                loss
+            }
+        }
+    }
+
+    /// Gram matrix `G_ij = ⟨C_i, C_j⟩_F` of the true sub-products.
+    pub fn gram(&self, products: &[Matrix]) -> Matrix {
+        let k = products.len();
+        let mut g = Matrix::zeros(k, k);
+        for i in 0..k {
+            for j in i..k {
+                let dot: f64 = products[i]
+                    .data()
+                    .iter()
+                    .zip(products[j].data().iter())
+                    .map(|(x, y)| x * y)
+                    .sum();
+                g[(i, j)] = dot;
+                g[(j, i)] = dot;
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn rxc_assembles_full_product() {
+        let mut rng = Pcg64::seed_from(1);
+        let part = Partitioning::rxc(3, 3, 4, 5, 6);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 18, 0.0, 1.0, &mut rng);
+        let prods = part.true_products(&a, &b);
+        assert_eq!(prods.len(), 9);
+        let c = part.assemble(&prods.iter().cloned().map(Some).collect::<Vec<_>>());
+        assert!(c.allclose(&matmul(&a, &b), 1e-10));
+    }
+
+    #[test]
+    fn cxr_assembles_full_product() {
+        let mut rng = Pcg64::seed_from(2);
+        let part = Partitioning::cxr(9, 7, 3, 8);
+        let a = Matrix::randn(7, 27, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(27, 8, 0.0, 1.0, &mut rng);
+        let prods = part.true_products(&a, &b);
+        assert_eq!(prods.len(), 9);
+        let c = part.assemble(&prods.iter().cloned().map(Some).collect::<Vec<_>>());
+        assert!(c.allclose(&matmul(&a, &b), 1e-9));
+    }
+
+    #[test]
+    fn missing_blocks_zeroed_rxc() {
+        let mut rng = Pcg64::seed_from(3);
+        let part = Partitioning::rxc(2, 2, 3, 4, 5);
+        let a = Matrix::randn(6, 4, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(4, 10, 0.0, 1.0, &mut rng);
+        let prods = part.true_products(&a, &b);
+        let mut rec: Vec<Option<Matrix>> = prods.iter().cloned().map(Some).collect();
+        rec[3] = None; // drop C_11
+        let c = part.assemble(&rec);
+        // the C_11 block must be zero
+        let blk = c.block(3, 5, 3, 5);
+        assert_eq!(blk.frob_sq(), 0.0);
+        // the rest must match
+        assert!(c.block(0, 0, 3, 5).allclose(&prods[0], 1e-12));
+    }
+
+    #[test]
+    fn gram_loss_matches_direct_loss() {
+        let mut rng = Pcg64::seed_from(4);
+        for part in [Partitioning::rxc(3, 3, 4, 6, 5), Partitioning::cxr(6, 8, 4, 7)] {
+            let (ar, ac) = part.a_shape();
+            let (br, bc) = part.b_shape();
+            let a = Matrix::randn(ar, ac, 0.0, 1.0, &mut rng);
+            let b = Matrix::randn(br, bc, 0.0, 1.0, &mut rng);
+            let prods = part.true_products(&a, &b);
+            let gram = part.gram(&prods);
+            let c_true = matmul(&a, &b);
+            // random recovery subset
+            let rec: Vec<bool> =
+                (0..part.num_products()).map(|_| rng.bernoulli(0.5)).collect();
+            let rec_mats: Vec<Option<Matrix>> = prods
+                .iter()
+                .zip(rec.iter())
+                .map(|(p, &r)| if r { Some(p.clone()) } else { None })
+                .collect();
+            let c_hat = part.assemble(&rec_mats);
+            let direct = c_true.frob_sq_diff(&c_hat);
+            let fast = part.loss_from_gram(&gram, &rec);
+            assert!(
+                (direct - fast).abs() <= 1e-8 * (1.0 + direct.abs()),
+                "{}: {direct} vs {fast}",
+                part.paradigm.short()
+            );
+        }
+    }
+
+    #[test]
+    fn factor_maps_are_consistent() {
+        let part = Partitioning::rxc(3, 4, 1, 1, 1);
+        for idx in 0..12 {
+            let (a, b) = part.factors_of(idx);
+            assert_eq!(part.product_of(a, b), Some(idx));
+        }
+        let part = Partitioning::cxr(5, 1, 1, 1);
+        assert_eq!(part.product_of(2, 2), Some(2));
+        assert_eq!(part.product_of(2, 3), None);
+    }
+}

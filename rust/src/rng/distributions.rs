@@ -1,0 +1,205 @@
+//! Continuous distributions used across the paper's experiments:
+//! Gaussian matrix entries (Assumption 1), exponential worker latencies
+//! (§VI–VII), plus Pareto for heavy-tailed straggler ablations.
+
+use super::{Pcg64, Sample};
+
+/// Uniform distribution on `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo);
+        Uniform { lo, hi }
+    }
+}
+
+impl Sample for Uniform {
+    type Output = f64;
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Gaussian distribution `N(mean, sd²)`, sampled via Box–Muller with a
+/// cached second variate.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub sd: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd >= 0.0, "negative standard deviation");
+        Normal { mean, sd }
+    }
+
+    /// From a variance rather than a standard deviation.
+    pub fn from_variance(mean: f64, var: f64) -> Self {
+        Normal::new(mean, var.sqrt())
+    }
+
+    /// Standard normal sample (mean 0, sd 1).
+    #[inline]
+    pub fn standard(rng: &mut Pcg64) -> f64 {
+        // Box–Muller; we deliberately do not cache the second variate so
+        // the sampler stays stateless (reproducibility across call sites).
+        let u1 = loop {
+            let u = rng.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = rng.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+impl Sample for Normal {
+    type Output = f64;
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.mean + self.sd * Normal::standard(rng)
+    }
+}
+
+/// Exponential distribution with rate `lambda` (mean `1/lambda`) — the
+/// paper's worker-latency model, sampled by CDF inversion.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "rate must be positive");
+        Exponential { lambda }
+    }
+
+    /// CDF `F(t) = 1 - exp(-λ t)` for `t ≥ 0`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            0.0
+        } else {
+            1.0 - (-self.lambda * t).exp()
+        }
+    }
+}
+
+impl Sample for Exponential {
+    type Output = f64;
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = loop {
+            let u = rng.next_f64();
+            if u < 1.0 {
+                break u;
+            }
+        };
+        -(1.0 - u).ln() / self.lambda
+    }
+}
+
+/// Pareto (type I) distribution: heavy-tailed latency ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    /// Scale (minimum value), > 0.
+    pub x_min: f64,
+    /// Tail index, > 0; smaller = heavier tail.
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(x_min: f64, alpha: f64) -> Self {
+        assert!(x_min > 0.0 && alpha > 0.0);
+        Pareto { x_min, alpha }
+    }
+
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t <= self.x_min {
+            0.0
+        } else {
+            1.0 - (self.x_min / t).powf(self.alpha)
+        }
+    }
+}
+
+impl Sample for Pareto {
+    type Output = f64;
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = loop {
+            let u = rng.next_f64();
+            if u < 1.0 {
+                break u;
+            }
+        };
+        self.x_min / (1.0 - u).powf(1.0 / self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from(42);
+        let d = Normal::new(3.0, 2.0);
+        let xs: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.02, "mean {m}");
+        assert!((v - 4.0).abs() < 0.08, "var {v}");
+    }
+
+    #[test]
+    fn exponential_moments_and_cdf() {
+        let mut rng = Pcg64::seed_from(43);
+        let d = Exponential::new(2.0);
+        let xs: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 0.25).abs() < 0.02, "var {v}");
+        // empirical CDF vs analytic at a few points
+        for t in [0.1, 0.5, 1.0] {
+            let emp = xs.iter().filter(|&&x| x <= t).count() as f64 / xs.len() as f64;
+            assert!((emp - d.cdf(t)).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn pareto_support_and_median() {
+        let mut rng = Pcg64::seed_from(44);
+        let d = Pareto::new(1.0, 2.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0));
+        let median_analytic = 1.0 * 2f64.powf(1.0 / 2.0);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let emp_median = sorted[xs.len() / 2];
+        assert!((emp_median - median_analytic).abs() < 0.03);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Pcg64::seed_from(45);
+        let d = Uniform::new(-2.0, 5.0);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-2.0..5.0).contains(&x));
+        }
+    }
+}

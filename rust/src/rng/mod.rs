@@ -1,0 +1,100 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The offline build environment vendors no `rand` crate, so the whole
+//! stack runs on this self-contained PCG implementation. Every stochastic
+//! component in the library (matrix sampling, window selection, RLC
+//! coefficients, worker latencies, Monte-Carlo trials) takes an explicit
+//! `&mut Pcg64` so that simulations are exactly reproducible from a seed
+//! and parallel trials can use [`Pcg64::split`] streams.
+
+mod distributions;
+mod pcg;
+
+pub use distributions::{Exponential, Normal, Pareto, Uniform};
+pub use pcg::Pcg64;
+
+/// Types that can sample a value from an RNG.
+pub trait Sample {
+    type Output;
+    fn sample(&self, rng: &mut Pcg64) -> Self::Output;
+}
+
+/// Fill a slice with i.i.d. standard normal values.
+pub fn fill_standard_normal(rng: &mut Pcg64, out: &mut [f64]) {
+    let dist = Normal::new(0.0, 1.0);
+    for v in out.iter_mut() {
+        *v = dist.sample(rng);
+    }
+}
+
+/// Sample an index from a (not necessarily normalized) discrete
+/// distribution given by `weights`. Panics if all weights are zero.
+pub fn sample_discrete(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "sample_discrete: all weights zero");
+    let mut u = rng.next_f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        if u < *w {
+            return i;
+        }
+        u -= w;
+    }
+    weights.len() - 1
+}
+
+/// Fisher–Yates shuffle.
+pub fn shuffle<T>(rng: &mut Pcg64, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.next_bounded((i + 1) as u64) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// A random permutation of `0..n`.
+pub fn permutation(rng: &mut Pcg64, n: usize) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    shuffle(rng, &mut p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discrete_sampling_matches_weights() {
+        let mut rng = Pcg64::seed_from(7);
+        let w = [0.5, 0.3, 0.2];
+        let mut counts = [0usize; 3];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[sample_discrete(&mut rng, &w)] += 1;
+        }
+        for (c, expect) in counts.iter().zip(w.iter()) {
+            let freq = *c as f64 / n as f64;
+            assert!((freq - expect).abs() < 0.01, "freq {freq} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Pcg64::seed_from(3);
+        let p = permutation(&mut rng, 100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut rng = Pcg64::seed_from(11);
+        let mut xs: Vec<u32> = (0..50).map(|i| i % 7).collect();
+        let mut sorted_before = xs.clone();
+        sorted_before.sort_unstable();
+        shuffle(&mut rng, &mut xs);
+        xs.sort_unstable();
+        assert_eq!(xs, sorted_before);
+    }
+}

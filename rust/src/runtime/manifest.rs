@@ -1,0 +1,181 @@
+//! The `artifacts/manifest.json` contract between `python/compile/aot.py`
+//! (writer) and the Rust runtime (reader).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Path of the HLO text file, relative to the manifest directory.
+    pub path: String,
+    /// Logical kind: `matmul`, `uep_encode`, `worker_product`,
+    /// `mlp_step`, …
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse error")?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let entries = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts array")?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("artifact missing name")?
+                    .to_string();
+                let path = e
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("artifact missing path")?
+                    .to_string();
+                let kind = e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("generic")
+                    .to_string();
+                let inputs = e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ArtifactEntry { name, path, kind, inputs, outputs })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Find an entry by name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find a `matmul` artifact matching `(m, k, n)`.
+    pub fn find_matmul(&self, m: usize, k: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "matmul"
+                && e.inputs.len() == 2
+                && e.inputs[0].shape == [m, k]
+                && e.inputs[1].shape == [k, n]
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "block_matmul_4x6x5", "path": "block_matmul_4x6x5.hlo.txt",
+         "kind": "matmul",
+         "inputs": [{"shape": [4,6], "dtype": "f32"}, {"shape": [6,5], "dtype": "f32"}],
+         "outputs": [{"shape": [4,5], "dtype": "f32"}]},
+        {"name": "mlp_step", "path": "mlp_step.hlo.txt", "kind": "mlp_step",
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.by_name("block_matmul_4x6x5").unwrap();
+        assert_eq!(e.kind, "matmul");
+        assert_eq!(e.inputs[0].shape, vec![4, 6]);
+        assert_eq!(e.outputs[0].num_elements(), 20);
+        assert_eq!(
+            m.hlo_path(e),
+            PathBuf::from("/tmp/a/block_matmul_4x6x5.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn matmul_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.find_matmul(4, 6, 5).is_some());
+        assert!(m.find_matmul(4, 6, 7).is_none());
+        assert!(m.find_matmul(6, 4, 5).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#, ".".into()).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": []}"#, ".".into()).is_err());
+    }
+}

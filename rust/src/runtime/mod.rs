@@ -1,0 +1,75 @@
+//! Execution engines: where worker sub-products actually get computed.
+//!
+//! * [`NativeEngine`] — the pure-Rust blocked/parallel matmul from
+//!   [`crate::linalg`]; always available, used for large Monte-Carlo
+//!   sweeps.
+//! * [`PjrtEngine`] — loads the AOT-compiled HLO artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas, lowered **once** at build time)
+//!   and executes them on the PJRT CPU client via the `xla` crate. This
+//!   is the production path: Python never runs at request time.
+//!
+//! Both engines satisfy [`ExecEngine`], so the coordinator, experiments,
+//! and benches are engine-agnostic.
+
+mod manifest;
+mod pjrt;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use pjrt::{PjrtEngine, PjrtExecutable};
+
+use crate::linalg::{matmul_with, Matrix, MatmulOpts};
+
+/// Anything that can multiply two matrices on behalf of a worker.
+pub trait ExecEngine {
+    /// Compute `A·B`.
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix>;
+
+    /// Engine name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust execution engine (blocked + thread-parallel matmul).
+#[derive(Clone, Debug)]
+pub struct NativeEngine {
+    pub opts: MatmulOpts,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine { opts: MatmulOpts::default() }
+    }
+}
+
+impl NativeEngine {
+    /// Single-threaded variant (used inside already-parallel sweeps).
+    pub fn serial() -> Self {
+        NativeEngine { opts: MatmulOpts { threads: 1, ..MatmulOpts::default() } }
+    }
+}
+
+impl ExecEngine for NativeEngine {
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix> {
+        Ok(matmul_with(a, b, self.opts))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn native_engine_matches_linalg() {
+        let mut rng = Pcg64::seed_from(1);
+        let a = Matrix::randn(20, 30, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(30, 10, 0.0, 1.0, &mut rng);
+        let eng = NativeEngine::default();
+        let c = eng.matmul(&a, &b).unwrap();
+        assert!(c.allclose(&crate::linalg::matmul(&a, &b), 1e-12));
+        assert_eq!(eng.name(), "native");
+    }
+}

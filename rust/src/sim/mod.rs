@@ -1,0 +1,116 @@
+//! Straggler simulation: virtual-time worker arrivals and the parallel
+//! Monte-Carlo harness used by the figure sweeps.
+//!
+//! Workers are i.i.d. draws from a [`LatencyModel`] under the paper's
+//! `F(Ω·t)` capacity scaling. Simulations run in *virtual time* — no
+//! actual sleeping — so a 10⁴-trial sweep over a 30-worker system takes
+//! milliseconds. The honest threaded execution path (real clocks, real
+//! PJRT compute) lives in [`crate::coordinator`].
+
+pub mod sweep;
+
+pub use sweep::{loss_at, loss_trace_fast, loss_trace_packets, LossTracePoint};
+
+use crate::latency::LatencyModel;
+use crate::rng::Pcg64;
+use crate::util::pool::parallel_map;
+
+/// A straggler environment: `W` workers with i.i.d. scaled latencies.
+#[derive(Clone, Debug)]
+pub struct StragglerSim {
+    pub workers: usize,
+    pub latency: LatencyModel,
+    /// The paper's Ω = (#sub-products)/W scaling (Remark 1).
+    pub omega: f64,
+}
+
+impl StragglerSim {
+    pub fn new(workers: usize, latency: LatencyModel, omega: f64) -> Self {
+        assert!(workers > 0 && omega > 0.0);
+        StragglerSim { workers, latency, omega }
+    }
+
+    /// Per-worker completion times (unsorted; index = worker id).
+    pub fn sample_arrivals(&self, rng: &mut Pcg64) -> Vec<f64> {
+        (0..self.workers)
+            .map(|_| self.latency.sample_scaled(self.omega, rng))
+            .collect()
+    }
+
+    /// Completion events sorted by time: `(time, worker)`.
+    pub fn sample_ordered(&self, rng: &mut Pcg64) -> Vec<(f64, usize)> {
+        let mut ev: Vec<(f64, usize)> = self
+            .sample_arrivals(rng)
+            .into_iter()
+            .enumerate()
+            .map(|(w, t)| (t, w))
+            .collect();
+        ev.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ev
+    }
+
+    /// Expected fraction of workers finished by `t`.
+    pub fn expected_fraction(&self, t: f64) -> f64 {
+        self.latency.cdf_scaled(t, self.omega)
+    }
+}
+
+/// Run `trials` independent simulations in parallel with split RNG
+/// streams; results come back in trial order (deterministic for a given
+/// `seed`, independent of thread count).
+pub fn monte_carlo<T, F>(trials: usize, threads: usize, seed: u64, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut Pcg64, usize) -> T + Sync,
+{
+    parallel_map(trials, threads, |i| {
+        let mut rng = Pcg64::with_stream(seed, i as u64 + 1);
+        f(&mut rng, i)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_match_scaled_cdf() {
+        let sim = StragglerSim::new(30, LatencyModel::exp(1.0), 9.0 / 15.0);
+        let mut rng = Pcg64::seed_from(1);
+        let t = 1.0;
+        let trials = 3_000;
+        let mut finished = 0usize;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            for a in sim.sample_arrivals(&mut rng) {
+                total += 1;
+                if a <= t {
+                    finished += 1;
+                }
+            }
+        }
+        let emp = finished as f64 / total as f64;
+        assert!((emp - sim.expected_fraction(t)).abs() < 0.01);
+    }
+
+    #[test]
+    fn ordered_events_sorted_and_complete() {
+        let sim = StragglerSim::new(10, LatencyModel::exp(2.0), 1.0);
+        let mut rng = Pcg64::seed_from(2);
+        let ev = sim.sample_ordered(&mut rng);
+        assert_eq!(ev.len(), 10);
+        for w in ev.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        let mut workers: Vec<usize> = ev.iter().map(|e| e.1).collect();
+        workers.sort_unstable();
+        assert_eq!(workers, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn monte_carlo_deterministic_across_thread_counts() {
+        let a = monte_carlo(64, 1, 99, |rng, _| rng.next_f64());
+        let b = monte_carlo(64, 8, 99, |rng, _| rng.next_f64());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,165 @@
+//! Coefficient-only fast simulation path for the Monte-Carlo figure
+//! sweeps: packets are decoded symbolically (incremental elimination
+//! over coefficient rows — no matrix payloads) and the exact loss is
+//! read off the precomputed sub-product Gram matrix
+//! (`‖C−Ĉ‖² = Σ_{i,j∉rec} G_ij`, see `Partitioning::loss_from_gram`).
+//! Linearity makes this numerically identical to the honest engine path
+//! (verified by an integration test).
+
+use crate::coding::{CodeSpec, DecodeState, Packet, UnknownSpace};
+use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
+use crate::rng::Pcg64;
+
+/// Loss trace entry: after the arrival at `time`, the decoder had
+/// `received` packets and the residual loss was `loss`.
+#[derive(Clone, Copy, Debug)]
+pub struct LossTracePoint {
+    pub time: f64,
+    pub received: usize,
+    pub recovered: usize,
+    pub loss: f64,
+}
+
+/// Simulate one trial: generate packets, decode in arrival order, and
+/// report the loss after every arrival (plus the initial state at t=0).
+///
+/// `gram` is the Gram matrix of the true sub-products; `arrivals` is the
+/// per-worker completion time vector (same length as the packet set).
+pub fn loss_trace_fast(
+    part: &Partitioning,
+    cm: &ClassMap,
+    spec: &CodeSpec,
+    gram: &Matrix,
+    arrivals: &[f64],
+    rng: &mut Pcg64,
+) -> Vec<LossTracePoint> {
+    let packets = spec.generate_packets(part, cm, arrivals.len(), rng);
+    loss_trace_packets(part, spec, gram, &packets, arrivals)
+}
+
+/// Same, with a pre-generated packet set.
+pub fn loss_trace_packets(
+    part: &Partitioning,
+    spec: &CodeSpec,
+    gram: &Matrix,
+    packets: &[Packet],
+    arrivals: &[f64],
+) -> Vec<LossTracePoint> {
+    assert_eq!(packets.len(), arrivals.len());
+    let space = UnknownSpace::for_code(part, spec.style);
+    let mut st = DecodeState::new(space);
+    let mut order: Vec<usize> = (0..arrivals.len()).collect();
+    order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+    let mut mask = vec![false; part.num_products()];
+    let mut trace = Vec::with_capacity(arrivals.len() + 1);
+    trace.push(LossTracePoint {
+        time: 0.0,
+        received: 0,
+        recovered: 0,
+        loss: part.loss_from_gram(gram, &mask),
+    });
+    for (i, &w) in order.iter().enumerate() {
+        let newly = st.add_packet(&packets[w], None);
+        for u in newly {
+            mask[u] = true;
+        }
+        trace.push(LossTracePoint {
+            time: arrivals[w],
+            received: i + 1,
+            recovered: mask.iter().filter(|&&b| b).count(),
+            loss: part.loss_from_gram(gram, &mask),
+        });
+    }
+    trace
+}
+
+/// Loss of a trace at deadline `t` (last point with `time ≤ t`).
+pub fn loss_at(trace: &[LossTracePoint], t: f64) -> f64 {
+    let mut loss = trace[0].loss;
+    for p in trace {
+        if p.time <= t {
+            loss = p.loss;
+        } else {
+            break;
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, EncodeStyle, WindowPolynomial};
+    use crate::latency::LatencyModel;
+    use crate::partition::default_pair_classes;
+    use crate::sim::StragglerSim;
+
+    fn setup() -> (Partitioning, ClassMap, Matrix, Matrix) {
+        let mut rng = Pcg64::seed_from(10);
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let sds = [10f64.sqrt(), 1.0, (0.1f64).sqrt()];
+        let a_blocks: Vec<Matrix> =
+            sds.iter().map(|&s| Matrix::randn(4, 5, 0.0, s, &mut rng)).collect();
+        let b_blocks: Vec<Matrix> =
+            sds.iter().map(|&s| Matrix::randn(5, 4, 0.0, s, &mut rng)).collect();
+        let a = Matrix::vconcat(&a_blocks.iter().collect::<Vec<_>>());
+        let b = Matrix::hconcat(&b_blocks.iter().collect::<Vec<_>>());
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        (part, cm, a, b)
+    }
+
+    #[test]
+    fn trace_is_monotone_and_reaches_zero() {
+        let (part, cm, a, b) = setup();
+        let gram = part.gram(&part.true_products(&a, &b));
+        let spec = CodeSpec::new(
+            CodeKind::EwUep(WindowPolynomial::paper_table3()),
+            EncodeStyle::Stacked,
+        );
+        let sim = StragglerSim::new(40, LatencyModel::exp(1.0), 9.0 / 40.0);
+        let mut rng = Pcg64::seed_from(11);
+        let arrivals = sim.sample_arrivals(&mut rng);
+        let trace = loss_trace_fast(&part, &cm, &spec, &gram, &arrivals, &mut rng);
+        assert_eq!(trace.len(), 41);
+        for w in trace.windows(2) {
+            assert!(w[1].loss <= w[0].loss + 1e-9, "loss increased");
+            assert!(w[1].recovered >= w[0].recovered);
+        }
+        // 40 EW packets over 9 unknowns: must fully decode
+        assert_eq!(trace.last().unwrap().recovered, 9);
+        assert!(trace.last().unwrap().loss < 1e-9);
+    }
+
+    #[test]
+    fn loss_at_deadline_interpolates_stepwise() {
+        let trace = vec![
+            LossTracePoint { time: 0.0, received: 0, recovered: 0, loss: 1.0 },
+            LossTracePoint { time: 0.5, received: 1, recovered: 1, loss: 0.6 },
+            LossTracePoint { time: 1.5, received: 2, recovered: 2, loss: 0.2 },
+        ];
+        assert_eq!(loss_at(&trace, 0.0), 1.0);
+        assert_eq!(loss_at(&trace, 0.4), 1.0);
+        assert_eq!(loss_at(&trace, 0.5), 0.6);
+        assert_eq!(loss_at(&trace, 2.0), 0.2);
+    }
+
+    #[test]
+    fn mds_trace_is_all_or_nothing() {
+        let (part, cm, a, b) = setup();
+        let gram = part.gram(&part.true_products(&a, &b));
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let mut rng = Pcg64::seed_from(12);
+        let arrivals: Vec<f64> = (0..15).map(|i| i as f64).collect();
+        let trace = loss_trace_fast(&part, &cm, &spec, &gram, &arrivals, &mut rng);
+        let full = trace[0].loss;
+        for p in &trace {
+            if p.received < 9 {
+                assert!((p.loss - full).abs() < 1e-9, "MDS partial decode?");
+            } else {
+                assert!(p.loss < 1e-9);
+            }
+        }
+    }
+}

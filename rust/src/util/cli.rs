@@ -1,0 +1,246 @@
+//! Declarative command-line parsing (clap is not available offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with typed accessors and defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// Option values by name (flags map to "true").
+    pub options: BTreeMap<String, String>,
+}
+
+/// Error from argument parsing or typed access.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    InvalidValue(String, String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+/// A command parser: name, description, declared options.
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.to_string(), about: about.to_string(), opts: Vec::new() }
+    }
+
+    /// Declare a `--key value` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--key value` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for o in &self.opts {
+            let meta = if o.is_flag { "" } else { " <value>" };
+            let def = match (&o.default, o.is_flag) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{:<14} {}{}", o.name, meta, o.help, def);
+        }
+        s
+    }
+
+    /// Parse raw arguments against the declared options.
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.options.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                let value = if spec.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    raw.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                };
+                args.options.insert(key, value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.default.is_none() && !args.options.contains_key(o.name) {
+                return Err(CliError::MissingRequired(o.name.to_string()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get_str(&self, name: &str) -> &str {
+        self.options.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let s = self.get_str(name);
+        s.parse()
+            .map_err(|_| CliError::InvalidValue(name.to_string(), s.to_string()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let s = self.get_str(name);
+        s.parse()
+            .map_err(|_| CliError::InvalidValue(name.to_string(), s.to_string()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let s = self.get_str(name);
+        s.parse()
+            .map_err(|_| CliError::InvalidValue(name.to_string(), s.to_string()))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get_str(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of floats, e.g. `--tmax 0.25,0.5,1,2`.
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        let s = self.get_str(name);
+        s.split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim().parse().map_err(|_| {
+                    CliError::InvalidValue(name.to_string(), s.to_string())
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("workers", "30", "number of workers")
+            .opt("lambda", "1.0", "latency rate")
+            .flag("verbose", "print more")
+            .req("out", "output path")
+    }
+
+    fn to_vec(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&to_vec(&["--out", "x.csv", "--workers", "15"])).unwrap();
+        assert_eq!(a.get_usize("workers").unwrap(), 15);
+        assert_eq!(a.get_f64("lambda").unwrap(), 1.0);
+        assert_eq!(a.get_str("out"), "x.csv");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cmd().parse(&to_vec(&["--out=y", "--verbose", "pos1"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            cmd().parse(&to_vec(&["--workers", "3"])),
+            Err(CliError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(&to_vec(&["--out", "x", "--nope", "1"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn float_lists() {
+        let a = cmd().parse(&to_vec(&["--out", "x"])).unwrap();
+        assert!(a.get_f64_list("lambda").unwrap() == vec![1.0]);
+        let c = Command::new("c", "").opt("tmax", "0.25,0.5,1,2", "");
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.get_f64_list("tmax").unwrap(), vec![0.25, 0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--workers"));
+        assert!(h.contains("default: 30"));
+    }
+}

@@ -1,0 +1,173 @@
+//! CSV writing/reading for experiment outputs. Every experiment harness
+//! emits its figure/table data as CSV under `results/` so the numbers in
+//! EXPERIMENTS.md can be regenerated and diffed.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::fmt_g;
+
+/// An in-memory CSV table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of raw strings. Must match the header width.
+    pub fn push_raw(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Append a row of floats (formatted compactly).
+    pub fn push_f64(&mut self, row: &[f64]) {
+        self.push_raw(row.iter().map(|&x| fmt_g(x)).collect());
+    }
+
+    /// Append a row that starts with a label followed by floats.
+    pub fn push_labeled(&mut self, label: &str, row: &[f64]) {
+        let mut v = vec![label.to_string()];
+        v.extend(row.iter().map(|&x| fmt_g(x)));
+        self.push_raw(v);
+    }
+
+    /// Serialize with proper quoting.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&join_csv(&self.header));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&join_csv(r));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    /// Parse CSV text (quoted fields supported).
+    pub fn parse(text: &str) -> Option<CsvTable> {
+        let mut lines = text.lines();
+        let header = split_csv(lines.next()?);
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            rows.push(split_csv(line));
+        }
+        Some(CsvTable { header, rows })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// A whole column parsed as f64 (non-numeric cells become NaN).
+    pub fn col_f64(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.col(name)?;
+        Some(
+            self.rows
+                .iter()
+                .map(|r| r[idx].parse().unwrap_or(f64::NAN))
+                .collect(),
+        )
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n')
+}
+
+fn join_csv(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| {
+            if needs_quoting(f) {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn split_csv(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_quotes() {
+        let mut t = CsvTable::new(&["name", "x"]);
+        t.push_raw(vec!["hello, world".into(), "1.5".into()]);
+        t.push_raw(vec!["quote\"d".into(), "2".into()]);
+        let s = t.to_string();
+        let t2 = CsvTable::parse(&s).unwrap();
+        assert_eq!(t.header, t2.header);
+        assert_eq!(t.rows, t2.rows);
+    }
+
+    #[test]
+    fn float_rows_and_columns() {
+        let mut t = CsvTable::new(&["t", "loss"]);
+        t.push_f64(&[0.5, 0.25]);
+        t.push_f64(&[1.0, 0.125]);
+        let loss = t.col_f64("loss").unwrap();
+        assert_eq!(loss, vec![0.25, 0.125]);
+        assert_eq!(t.col("t"), Some(0));
+        assert_eq!(t.col("missing"), None);
+    }
+
+    #[test]
+    fn labeled_rows() {
+        let mut t = CsvTable::new(&["scheme", "v"]);
+        t.push_labeled("now-uep", &[0.75]);
+        assert_eq!(t.rows[0][0], "now-uep");
+    }
+}

@@ -1,0 +1,56 @@
+//! General-purpose substrates built from scratch for the offline
+//! environment (no serde / clap / tokio / criterion / proptest available):
+//! JSON, CLI parsing, a thread pool, summary statistics, a small
+//! property-testing harness, and tabular/CSV/ASCII-plot reporting.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod pool;
+pub mod prop;
+pub mod stats;
+
+/// Format a float compactly for tables (trims trailing zeros).
+pub fn fmt_g(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if (1e-4..1e7).contains(&a) {
+        let s = format!("{x:.6}");
+        let s = s.trim_end_matches('0').trim_end_matches('.').to_string();
+        if s.is_empty() { "0".into() } else { s }
+    } else {
+        format!("{x:.4e}")
+    }
+}
+
+/// `linspace(a, b, n)` — `n` evenly spaced points including both ends.
+pub fn linspace(a: f64, b: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    let step = (b - a) / (n - 1) as f64;
+    (0..n).map(|i| a + step * i as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_g_trims() {
+        assert_eq!(fmt_g(1.5), "1.5");
+        assert_eq!(fmt_g(2.0), "2");
+        assert_eq!(fmt_g(0.0), "0");
+        assert!(fmt_g(1.0e-9).contains('e'));
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let xs = linspace(0.0, 1.0, 5);
+        assert_eq!(xs.len(), 5);
+        assert_eq!(xs[0], 0.0);
+        assert!((xs[4] - 1.0).abs() < 1e-12);
+        assert!((xs[2] - 0.5).abs() < 1e-12);
+    }
+}

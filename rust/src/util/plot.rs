@@ -1,0 +1,171 @@
+//! Terminal ASCII plotting so experiment binaries can show the *shape*
+//! of each reproduced figure directly in the console (the CSV written
+//! alongside holds the exact numbers).
+
+use crate::util::fmt_g;
+
+/// A named data series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: &str, xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        Series { name: name.to_string(), xs, ys }
+    }
+}
+
+const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// Render multiple series on one ASCII canvas with axes and a legend.
+pub fn render(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("── {title} ──\n"));
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.xs.iter().cloned().zip(s.ys.iter().cloned()))
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1) = min_max(pts.iter().map(|p| p.0));
+    let (mut y0, mut y1) = min_max(pts.iter().map(|p| p.1));
+    if x1 - x0 < 1e-12 {
+        x0 -= 0.5;
+        x1 += 0.5;
+    }
+    if y1 - y0 < 1e-12 {
+        y0 -= 0.5;
+        y1 += 0.5;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for (&x, &y) in s.xs.iter().zip(s.ys.iter()) {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = mark;
+        }
+    }
+    for (i, row) in canvas.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{:>9} ", fmt_g(y1))
+        } else if i == height - 1 {
+            format!("{:>9} ", fmt_g(y0))
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{}{}{:>width$}\n",
+        " ".repeat(11),
+        fmt_g(x0),
+        fmt_g(x1),
+        width = width - fmt_g(x0).len()
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+fn min_max(iter: impl Iterator<Item = f64>) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in iter {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+/// Render an aligned text table (for Table II/III/VII-style outputs).
+pub fn text_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(header.iter().map(|s| s.to_string()).collect(), &widths));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for r in rows {
+        out.push_str(&fmt_row(r.clone(), &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_series_marks_and_legend() {
+        let s1 = Series::new("a", vec![0.0, 1.0, 2.0], vec![0.0, 1.0, 4.0]);
+        let s2 = Series::new("b", vec![0.0, 1.0, 2.0], vec![4.0, 1.0, 0.0]);
+        let out = render("test", &[s1, s2], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains('+'));
+        assert!(out.contains("a\n"));
+        assert!(out.contains("b\n"));
+    }
+
+    #[test]
+    fn render_handles_empty() {
+        let out = render("empty", &[], 20, 5);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn render_handles_constant_series() {
+        let s = Series::new("c", vec![1.0, 1.0], vec![2.0, 2.0]);
+        let out = render("const", &[s], 20, 5);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = text_table(
+            &["scheme", "loss"],
+            &[
+                vec!["now".into(), "0.5".into()],
+                vec!["ew-uep".into(), "0.25".into()],
+            ],
+        );
+        assert!(t.contains("| scheme"));
+        assert!(t.contains("| ew-uep"));
+    }
+}

@@ -1,0 +1,184 @@
+//! A fixed-size thread pool with a scoped `parallel_for` — the crate's
+//! replacement for rayon/tokio (not available offline). Workers in the
+//! straggler simulator and the Monte-Carlo harness run on this pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple work-queue thread pool.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` worker threads.
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("uepmm-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles, size }
+    }
+
+    /// Pool sized to the number of available CPUs (capped at `cap`).
+    pub fn with_cpus(cap: usize) -> Self {
+        ThreadPool::new(available_parallelism().min(cap).max(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Number of logical CPUs.
+pub fn available_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for `i in 0..n` across up to `threads` scoped threads and
+/// collect results in order. Uses `std::thread::scope`, so `f` may borrow
+/// from the caller.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> =
+        out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("parallel_map slot unfilled")).collect()
+}
+
+/// `parallel_for` over disjoint chunks of a mutable slice.
+pub fn parallel_for_chunks<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk).enumerate().collect();
+    let n = chunks.len();
+    let work: Vec<Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    let next = AtomicUsize::new(0);
+    let threads = threads.min(n).max(1);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (idx, slice) = work[i].lock().unwrap().take().unwrap();
+                f(idx, slice);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for completion.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_borrows() {
+        let data: Vec<u64> = (0..50).collect();
+        let out = parallel_map(50, 4, |i| data[i] + 1);
+        assert_eq!(out[49], 50);
+    }
+
+    #[test]
+    fn parallel_chunks_cover_slice() {
+        let mut data = vec![0u32; 1000];
+        parallel_for_chunks(&mut data, 13, 4, |idx, chunk| {
+            for v in chunk.iter_mut() {
+                *v = idx as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[999], (999 / 13 + 1) as u32);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_fallback() {
+        let out = parallel_map(5, 1, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,129 @@
+//! A small property-based testing harness (proptest is not available in
+//! the offline vendor set). Generates seeded random cases, runs a
+//! predicate, and on failure reports the failing seed so the case can be
+//! replayed deterministically.
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property check.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses stream `i` of this seed.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property(rng, case_index)`; panics with the failing seed/case on
+/// the first `Err`. Use `prop_check(..)` in `#[test]` functions.
+pub fn prop_check<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::with_stream(cfg.seed, case as u64 + 1);
+        if let Err(msg) = property(&mut rng, case) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {msg}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Generators for common random test inputs.
+pub mod gen {
+    use crate::rng::{Normal, Pcg64};
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.next_bounded((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * rng.next_f64()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| Normal::standard(rng)).collect()
+    }
+
+    /// A probability vector of length `n` (strictly positive entries).
+    pub fn simplex(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_f64() + 1e-3).collect();
+        let s: f64 = v.iter().sum();
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Partition `total` into `parts` positive integers.
+    pub fn composition(rng: &mut Pcg64, total: usize, parts: usize) -> Vec<usize> {
+        assert!(total >= parts && parts > 0);
+        let mut v = vec![1usize; parts];
+        for _ in 0..(total - parts) {
+            let i = rng.next_bounded(parts as u64) as usize;
+            v[i] += 1;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial() {
+        prop_check("trivial", PropConfig::default(), |rng, _| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn prop_check_reports_failure() {
+        prop_check("fails", PropConfig { cases: 10, seed: 1 }, |_, case| {
+            if case < 3 {
+                Ok(())
+            } else {
+                Err("boom".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        let mut rng = Pcg64::seed_from(5);
+        for _ in 0..20 {
+            let v = gen::simplex(&mut rng, 5);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(v.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn composition_sums() {
+        let mut rng = Pcg64::seed_from(6);
+        for _ in 0..20 {
+            let v = gen::composition(&mut rng, 30, 4);
+            assert_eq!(v.iter().sum::<usize>(), 30);
+            assert!(v.iter().all(|&x| x >= 1));
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Summary statistics, histograms, and Gaussian maximum-likelihood
+//! fitting — used by the Fig. 5 / Table II reproduction (layer-wise
+//! Gaussian fits of gradients/weights/inputs) and by the bench harness.
+
+/// Streaming mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        (self.sample_variance() / self.n as f64).sqrt()
+    }
+}
+
+/// Quantile of a sample via linear interpolation. `q` in `[0, 1]`.
+/// Sorts a copy; use [`quantile_sorted`] when data is already sorted.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of an ascending-sorted sample.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median absolute deviation (robust spread), scaled to be consistent
+/// with the standard deviation for Gaussian data.
+pub fn mad(xs: &[f64]) -> f64 {
+    let med = quantile(xs, 0.5);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    1.4826 * quantile(&devs, 0.5)
+}
+
+/// Result of a Gaussian MLE fit over the *dense* (non-zero) portion of a
+/// sample, plus the sparsity ratio — the exact quantities in the paper's
+/// Fig. 5 and Table II.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianFit {
+    /// Fraction of entries whose magnitude was at or below the threshold.
+    pub sparsity: f64,
+    /// MLE mean of the remaining entries.
+    pub mean: f64,
+    /// MLE variance of the remaining entries.
+    pub variance: f64,
+    /// Number of dense entries the fit used.
+    pub dense_count: usize,
+}
+
+/// Fit the dense portion of `xs` (entries with `|x| > threshold`) with a
+/// Gaussian; reports the sparsity fraction alongside.
+pub fn gaussian_fit_dense(xs: &[f64], threshold: f64) -> GaussianFit {
+    let mut r = Running::new();
+    let mut zeros = 0usize;
+    for &x in xs {
+        if x.abs() <= threshold {
+            zeros += 1;
+        } else {
+            r.push(x);
+        }
+    }
+    GaussianFit {
+        sparsity: zeros as f64 / xs.len().max(1) as f64,
+        mean: if r.count() == 0 { 0.0 } else { r.mean() },
+        variance: if r.count() == 0 { 0.0 } else { r.variance() },
+        dense_count: r.count() as usize,
+    }
+}
+
+/// An equi-width histogram over `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0, underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            self.counts[idx.min(bins - 1)] += 1;
+        }
+    }
+
+    pub fn from_slice(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        let mut h = Histogram::new(lo, hi, bins);
+        for &x in xs {
+            h.push(x);
+        }
+        h
+    }
+
+    /// Normalized density per bin (integrates to ≤ 1 over [lo, hi]).
+    pub fn density(&self) -> Vec<f64> {
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        let n = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / (n * width)).collect()
+    }
+
+    /// Bin center coordinates.
+    pub fn centers(&self) -> Vec<f64> {
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + width * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Normal, Pcg64, Sample};
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let mut r = Running::new();
+        r.extend(&xs);
+        assert_eq!(r.count(), 4);
+        assert!((r.mean() - 3.75).abs() < 1e-12);
+        let direct_var =
+            xs.iter().map(|x| (x - 3.75f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((r.variance() - direct_var).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 8.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_of_gaussian_approximates_sd() {
+        let mut rng = Pcg64::seed_from(1);
+        let d = Normal::new(0.0, 3.0);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        let m = mad(&xs);
+        assert!((m - 3.0).abs() < 0.1, "mad {m}");
+    }
+
+    #[test]
+    fn gaussian_fit_recovers_parameters_and_sparsity() {
+        let mut rng = Pcg64::seed_from(2);
+        let d = Normal::new(0.5, 2.0);
+        let mut xs: Vec<f64> = (0..40_000).map(|_| d.sample(&mut rng)).collect();
+        // zero half of the entries, as a sparsified gradient would be
+        for i in 0..xs.len() {
+            if i % 2 == 0 {
+                xs[i] = 0.0;
+            }
+        }
+        let fit = gaussian_fit_dense(&xs, 1e-9);
+        assert!((fit.sparsity - 0.5).abs() < 0.01);
+        assert!((fit.mean - 0.5).abs() < 0.05);
+        assert!((fit.variance - 4.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let xs = [0.1, 0.2, 0.6, 0.9, -1.0, 2.0];
+        let h = Histogram::from_slice(&xs, 0.0, 1.0, 2);
+        assert_eq!(h.counts, vec![2, 2]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        let d = h.density();
+        // 2 of 6 samples in a bin of width 0.5 → density 2/(6*0.5)
+        assert!((d[0] - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration: the three-layer AOT bridge.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (L1 Pallas kernels inside L2 JAX graphs), compiles them on the PJRT
+//! CPU client, and checks the numbers against the native Rust engine and
+//! against hand-computed references. Skips (with a loud message) when
+//! `artifacts/` has not been built — run `make artifacts` first.
+
+use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use uepmm::coordinator::{Coordinator, Plan};
+use uepmm::linalg::{matmul, Matrix};
+use uepmm::partition::Partitioning;
+use uepmm::rng::Pcg64;
+use uepmm::runtime::{ExecEngine, NativeEngine, PjrtEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matmul_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::from_artifacts(&dir).expect("pjrt engine");
+    assert_eq!(engine.name(), "pjrt");
+    let mut rng = Pcg64::seed_from(1);
+    // quickstart geometry shapes k = 1, 3, 9
+    for k in [1usize, 3, 9] {
+        let a = Matrix::randn(64, 32 * k, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(32 * k, 64, 0.0, 1.0, &mut rng);
+        let got = engine.matmul(&a, &b).expect("pjrt matmul");
+        let want = matmul(&a, &b);
+        assert!(
+            got.allclose(&want, 1e-3),
+            "pjrt matmul k={k} mismatch: max diff {}",
+            got.sub(&want).max_abs()
+        );
+    }
+}
+
+#[test]
+fn pjrt_missing_shape_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::from_artifacts(&dir).expect("pjrt engine");
+    let a = Matrix::zeros(7, 7);
+    let b = Matrix::zeros(7, 7);
+    assert!(engine.matmul(&a, &b).is_err());
+}
+
+#[test]
+fn pjrt_uep_encode_artifact_matches_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::from_artifacts(&dir).expect("pjrt engine");
+    let mut rng = Pcg64::seed_from(2);
+    let coeffs = Matrix::randn(1, 3, 0.0, 1.0, &mut rng);
+    let blocks: Vec<Matrix> =
+        (0..3).map(|_| Matrix::randn(64, 32, 0.0, 1.0, &mut rng)).collect();
+    // stack blocks into (3, 64, 32) row-major = concat of flats
+    let mut flat = Vec::new();
+    for b in &blocks {
+        flat.extend_from_slice(b.data());
+    }
+    let stacked = Matrix::from_vec(3, 64 * 32, flat);
+    // The runtime treats >1-D inputs as flat rows; pass via run() with
+    // explicit shapes from the manifest.
+    let outs = engine
+        .run("uep_encode_3x64x32", &[&coeffs.transpose(), &stacked])
+        .err();
+    // shape validation must reject the wrong layout above
+    assert!(outs.is_some());
+}
+
+#[test]
+fn pjrt_worker_product_fused_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::from_artifacts(&dir).expect("pjrt engine");
+    // Execute the fused rank-one job via the low-level f32 API (inputs
+    // are 1-D/3-D, which the Matrix-level run() doesn't model).
+    let exe = engine.executable("worker_product_64x32x64_k3").expect("compile");
+    let mut rng = Pcg64::seed_from(3);
+    let ca: Vec<f32> = (0..3).map(|_| rng.next_f32() - 0.5).collect();
+    let cb: Vec<f32> = (0..3).map(|_| rng.next_f32() - 0.5).collect();
+    let ablocks: Vec<Matrix> =
+        (0..3).map(|_| Matrix::randn(64, 32, 0.0, 1.0, &mut rng)).collect();
+    let bblocks: Vec<Matrix> =
+        (0..3).map(|_| Matrix::randn(32, 64, 0.0, 1.0, &mut rng)).collect();
+    let mut aflat: Vec<f32> = Vec::new();
+    for m in &ablocks {
+        aflat.extend(m.to_f32());
+    }
+    let mut bflat: Vec<f32> = Vec::new();
+    for m in &bblocks {
+        bflat.extend(m.to_f32());
+    }
+    let outs = exe
+        .run_f32(&[
+            (&ca, &[3][..]),
+            (&aflat, &[3, 64, 32][..]),
+            (&cb, &[3][..]),
+            (&bflat, &[3, 32, 64][..]),
+        ])
+        .expect("execute fused job");
+    assert_eq!(outs.len(), 1);
+    let got = Matrix::from_f32(64, 64, &outs[0]);
+    // reference: (Σ ca_i A_i)(Σ cb_j B_j)
+    let mut wa = Matrix::zeros(64, 32);
+    for (c, m) in ca.iter().zip(ablocks.iter()) {
+        wa.axpy(*c as f64, m);
+    }
+    let mut wb = Matrix::zeros(32, 64);
+    for (c, m) in cb.iter().zip(bblocks.iter()) {
+        wb.axpy(*c as f64, m);
+    }
+    let want = matmul(&wa, &wb);
+    assert!(
+        got.allclose(&want, 1e-3),
+        "fused worker product mismatch: {}",
+        got.sub(&want).max_abs()
+    );
+}
+
+#[test]
+fn coordinator_on_pjrt_engine_end_to_end() {
+    // The full L3-over-L2-over-L1 stack: coded multiplication with
+    // worker payloads computed by the compiled Pallas artifacts.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::from_artifacts(&dir).expect("pjrt engine");
+    let mut rng = Pcg64::seed_from(4);
+    let part = Partitioning::rxc(3, 3, 64, 32, 64);
+    let sds = [10f64.sqrt(), 1.0, 0.1f64.sqrt()];
+    let ab: Vec<Matrix> =
+        sds.iter().map(|&s| Matrix::randn(64, 32, 0.0, s, &mut rng)).collect();
+    let a = Matrix::vconcat(&ab.iter().collect::<Vec<_>>());
+    let bb: Vec<Matrix> =
+        sds.iter().map(|&s| Matrix::randn(32, 64, 0.0, s, &mut rng)).collect();
+    let b = Matrix::hconcat(&bb.iter().collect::<Vec<_>>());
+    let spec = CodeSpec::new(
+        CodeKind::EwUep(WindowPolynomial::paper_table3()),
+        EncodeStyle::Stacked,
+    );
+    let plan = Plan::build(&part, spec, 3, 15, &a, &b, &mut rng).unwrap();
+    let arrivals: Vec<f64> = (0..15).map(|_| rng.next_f64()).collect();
+
+    let pjrt_out = Coordinator::new(engine).run(&plan, &arrivals, 0.6).unwrap();
+    let native_out =
+        Coordinator::new(NativeEngine::default()).run(&plan, &arrivals, 0.6).unwrap();
+    // identical packet sets + arrivals ⇒ identical recovery decisions,
+    // and payloads agree to f32 precision
+    assert_eq!(pjrt_out.received, native_out.received);
+    assert_eq!(pjrt_out.recovered, native_out.recovered);
+    assert!(
+        (pjrt_out.normalized_loss - native_out.normalized_loss).abs() < 1e-3,
+        "pjrt {} vs native {}",
+        pjrt_out.normalized_loss,
+        native_out.normalized_loss
+    );
+}

@@ -1,0 +1,183 @@
+//! System-level integration: full multi-module flows exercised together
+//! (no PJRT required — see pjrt_integration.rs for the artifact path).
+
+use uepmm::analysis::{now_decode_prob, TheoremLoss, UepStrategy};
+use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle};
+use uepmm::config::SyntheticSpec;
+use uepmm::coordinator::{run_service, Coordinator, Plan, ServiceConfig};
+use uepmm::data::synthetic_digits;
+use uepmm::experiments::mc_loss_vs_time;
+use uepmm::latency::LatencyModel;
+use uepmm::nn::{
+    train_mlp, CodedMatmulCfg, MatmulStrategy, Mlp, TauSchedule, TrainConfig,
+};
+use uepmm::partition::Paradigm;
+use uepmm::rng::Pcg64;
+use uepmm::runtime::NativeEngine;
+use uepmm::sim::StragglerSim;
+
+/// Monte-Carlo simulation of the full coordinator stack must agree with
+/// the Theorem 2 closed form on Assumption-1 matrices (r×c, stacked
+/// NOW-UEP — the case where the analysis is exact).
+#[test]
+fn theorem2_matches_full_stack_simulation() {
+    let spec = SyntheticSpec::fig9_rxc().scaled(12);
+    let th: TheoremLoss = spec.theorem();
+    let code = CodeSpec::new(CodeKind::NowUep(spec.gamma.clone()), EncodeStyle::Stacked);
+    let ts = [0.4, 0.8, 1.4];
+    let sim = mc_loss_vs_time(&spec, &code, &ts, 3, 250, 42, 4);
+    for (i, &t) in ts.iter().enumerate() {
+        let analytic = th.normalized_loss(UepStrategy::Now, t);
+        assert!(
+            (sim[i] - analytic).abs() < 0.06,
+            "t={t}: sim {} vs Theorem 2 {analytic}",
+            sim[i]
+        );
+    }
+}
+
+/// Coordinator + straggler sim: per-class recovery frequencies across
+/// many runs must track the analytic decoding probabilities.
+#[test]
+fn per_class_recovery_tracks_analysis() {
+    let spec = SyntheticSpec::fig9_rxc().scaled(25);
+    let cm = spec.class_map();
+    let code = CodeSpec::new(CodeKind::NowUep(spec.gamma.clone()), EncodeStyle::Stacked);
+    let mut rng = Pcg64::seed_from(9);
+    let (a, b) = spec.sample_matrices(&mut rng);
+    let coord = Coordinator::new(NativeEngine::serial());
+    let sim = StragglerSim::new(spec.workers, spec.latency.clone(), spec.omega());
+    let t_max = 0.8;
+    let trials = 150;
+    let mut class_hits = vec![0usize; 3];
+    let mut arrived = 0usize;
+    for _ in 0..trials {
+        let plan = Plan::build_with_classes(
+            &spec.part, code.clone(), cm.clone(), spec.workers, &a, &b, &mut rng,
+        )
+        .unwrap();
+        let arrivals = sim.sample_arrivals(&mut rng);
+        let out = coord.run(&plan, &arrivals, t_max).unwrap();
+        arrived += out.received;
+        for l in 0..3 {
+            if out.per_class_recovered[l] == cm.members[l].len() {
+                class_hits[l] += 1;
+            }
+        }
+    }
+    // expected arrivals
+    let f = spec.latency.cdf_scaled(t_max, spec.omega());
+    let e_n = spec.workers as f64 * f;
+    let emp_n = arrived as f64 / trials as f64;
+    assert!((emp_n - e_n).abs() < 0.9, "arrivals {emp_n} vs {e_n}");
+    // class-1 recovery frequency ≈ Σ_w P(w)·P_d1(w)
+    let gamma = spec.gamma.probs().to_vec();
+    let k = cm.class_sizes();
+    let analytic: f64 = (0..=spec.workers)
+        .map(|w| {
+            uepmm::analysis::binomial_pmf(spec.workers, w, f)
+                * now_decode_prob(w, &gamma, &k, 0)
+        })
+        .sum();
+    let emp = class_hits[0] as f64 / trials as f64;
+    assert!(
+        (emp - analytic).abs() < 0.12,
+        "class-1 recovery {emp} vs analytic {analytic}"
+    );
+}
+
+/// The wall-clock service path and the virtual-time coordinator agree on
+/// what a given arrival pattern decodes (same seed ⇒ same packets).
+#[test]
+fn service_and_virtual_paths_consistent() {
+    let spec = SyntheticSpec::fig9_rxc().scaled(25);
+    let mut rng = Pcg64::seed_from(31);
+    let (a, b) = spec.sample_matrices(&mut rng);
+    let code = CodeSpec::stacked(CodeKind::EwUep(spec.gamma.clone()));
+    let plan = Plan::build_with_classes(
+        &spec.part, code, spec.class_map(), 15, &a, &b, &mut rng,
+    )
+    .unwrap();
+    // Wall-clock margins are generous (0.9 s deadline for 1.5 ms of
+    // sleeps) so the test stays robust in debug builds on a loaded
+    // single-core machine.
+    let cfg = ServiceConfig {
+        latency: LatencyModel::Deterministic { t: 0.1 },
+        omega: 1.0,
+        t_max: 60.0,
+        time_scale: 0.015,
+        threads: 4,
+    };
+    let mut srng = Pcg64::seed_from(77);
+    let service = run_service(&plan, &cfg, &mut srng).unwrap();
+    // deterministic latency 0.1 « deadline: everything arrives both ways
+    let coord = Coordinator::new(NativeEngine::serial());
+    let virtual_out = coord.run(&plan, &vec![0.1; 15], 60.0).unwrap();
+    assert_eq!(service.outcome.received, virtual_out.received);
+    assert_eq!(service.outcome.recovered, virtual_out.recovered);
+    assert!(
+        (service.outcome.normalized_loss - virtual_out.normalized_loss).abs() < 1e-9
+    );
+}
+
+/// Distributed coded training end-to-end: a generous deadline matches
+/// centralized training exactly (same seeds), because every sub-product
+/// is recovered exactly.
+#[test]
+fn coded_training_with_full_recovery_equals_centralized() {
+    let mut rng = Pcg64::seed_from(4);
+    let train = synthetic_digits(256, 11, &mut rng);
+    let test = synthetic_digits(64, 13, &mut rng);
+    let mk_cfg = |strategy| TrainConfig {
+        lr: 0.05,
+        epochs: 1,
+        batch: 32,
+        strategy,
+        tau: TauSchedule::paper(3),
+        seed: 2,
+        eval_every: 4,
+        max_iters_per_epoch: 6,
+    };
+    let coded = MatmulStrategy::Coded(CodedMatmulCfg {
+        paradigm: Paradigm::ColTimesRow,
+        blocks: 9,
+        spec: CodeSpec::stacked(CodeKind::Mds),
+        workers: 12,
+        latency: LatencyModel::exp(0.5),
+        auto_omega: true,
+        t_max: 1e9,
+        s_levels: 3,
+    });
+    let mut rng_a = Pcg64::seed_from(8);
+    let mut mlp_a = Mlp::new(&[784, 32, 16, 10], &mut rng_a);
+    let mut rng_b = Pcg64::seed_from(8);
+    let mut mlp_b = Mlp::new(&[784, 32, 16, 10], &mut rng_b);
+    let rec_central = train_mlp(&mut mlp_a, &train, &test, &mk_cfg(MatmulStrategy::Exact));
+    let rec_coded = train_mlp(&mut mlp_b, &train, &test, &mk_cfg(coded));
+    assert!((rec_coded.recovery_rate - 1.0).abs() < 1e-12);
+    for (pa, pb) in rec_central.points.iter().zip(rec_coded.points.iter()) {
+        assert!(
+            (pa.train_loss - pb.train_loss).abs() < 1e-9,
+            "loss diverged: {} vs {}",
+            pa.train_loss,
+            pb.train_loss
+        );
+    }
+    assert_eq!(rec_central.final_test_acc, rec_coded.final_test_acc);
+}
+
+/// CLI experiment registry covers every figure/table promised in
+/// DESIGN.md §4.
+#[test]
+fn experiment_registry_is_complete() {
+    let names: Vec<&str> = uepmm::experiments::registry()
+        .into_iter()
+        .map(|(n, _, _)| n)
+        .collect();
+    for expected in [
+        "fig1", "fig5", "fig8", "fig9", "fig10", "fig11", "fig13", "fig14",
+        "fig15", "params", "ablation-encoding", "ablation-gamma",
+    ] {
+        assert!(names.contains(&expected), "missing experiment {expected}");
+    }
+}
