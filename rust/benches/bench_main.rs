@@ -18,11 +18,15 @@ use uepmm::linalg::{matmul_naive, matmul_with, Matrix, MatmulOpts};
 use uepmm::nn::{
     CodedMatmulCfg, DistributedMatmul, MatmulStrategy, Mlp, TauSchedule,
 };
-use uepmm::partition::Paradigm;
+use uepmm::partition::{Paradigm, Partitioning};
 use uepmm::rng::Pcg64;
 use uepmm::runtime::{ExecEngine, NativeEngine, PjrtEngine};
-use uepmm::sim::StragglerSim;
+use uepmm::sim::{
+    loss_trace_packets_scratch, LossTracePoint, StragglerSim, SweepScratch,
+};
 use uepmm::util::csv::CsvTable;
+use uepmm::util::json::Json;
+use uepmm::util::pool::available_parallelism;
 
 /// One benchmark result.
 struct BenchResult {
@@ -34,24 +38,29 @@ struct BenchResult {
 }
 
 struct Harness {
-    filter: Option<String>,
+    /// Substring filters; a bench runs when any filter matches (or none
+    /// were given). Multiple filters let one invocation cover several
+    /// groups — e.g. `cargo bench -- hot sweep` — so results/BENCH.json
+    /// holds them all instead of the last run clobbering the file.
+    filters: Vec<String>,
     results: Vec<BenchResult>,
 }
 
 impl Harness {
     fn new() -> Self {
-        let filter = std::env::args()
+        let filters: Vec<String> = std::env::args()
             .skip(1)
-            .find(|a| !a.starts_with("--") && !a.is_empty());
-        Harness { filter, results: Vec::new() }
+            .filter(|a| !a.starts_with("--") && !a.is_empty())
+            .collect();
+        Harness { filters, results: Vec::new() }
     }
 
     /// Time `f`, autoscaling iterations to ~25 ms per sample, 9 samples.
     fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
-        if let Some(filt) = &self.filter {
-            if !name.contains(filt.as_str()) {
-                return;
-            }
+        if !self.filters.is_empty()
+            && !self.filters.iter().any(|filt| name.contains(filt.as_str()))
+        {
+            return;
         }
         // warmup + calibration
         let t0 = Instant::now();
@@ -111,6 +120,60 @@ impl Harness {
             println!("\nwrote results/bench.csv ({} rows)", self.results.len());
         }
     }
+
+    /// Machine-readable perf trajectory: `{"<bench name>": median_ns}`.
+    /// Consumed by CI and EXPERIMENTS.md to diff perf across PRs.
+    fn write_json(&self) {
+        let pairs: Vec<(&str, Json)> = self
+            .results
+            .iter()
+            .map(|r| (r.name.as_str(), Json::Num(r.median.as_nanos() as f64)))
+            .collect();
+        let s = format!("{}\n", Json::obj(pairs));
+        if let Err(e) =
+            std::fs::create_dir_all("results").and_then(|_| std::fs::write("results/BENCH.json", s))
+        {
+            eprintln!("could not write results/BENCH.json: {e}");
+        } else {
+            println!("wrote results/BENCH.json ({} entries)", self.results.len());
+        }
+    }
+}
+
+/// The pre-refactor sweep inner loop, kept verbatim as the baseline the
+/// `sweep/` benches compare against: per-arrival full-mask recount and
+/// full `Σ_{i,j∉rec} G_ij` Gram recompute (no scratch reuse, fresh
+/// decode allocations every call).
+fn loss_trace_reference(
+    part: &Partitioning,
+    spec: &CodeSpec,
+    gram: &uepmm::linalg::Matrix,
+    packets: &[uepmm::coding::Packet],
+    arrivals: &[f64],
+) -> Vec<LossTracePoint> {
+    let space = UnknownSpace::for_code(part, spec.style);
+    let mut st = DecodeState::new(space);
+    let mut order: Vec<usize> = (0..arrivals.len()).collect();
+    order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+    let mut mask = vec![false; part.num_products()];
+    let mut trace = vec![LossTracePoint {
+        time: 0.0,
+        received: 0,
+        recovered: 0,
+        loss: part.loss_from_gram(gram, &mask),
+    }];
+    for (i, &w) in order.iter().enumerate() {
+        for u in st.add_packet(&packets[w], None) {
+            mask[u] = true;
+        }
+        trace.push(LossTracePoint {
+            time: arrivals[w],
+            received: i + 1,
+            recovered: mask.iter().filter(|&&b| b).count(),
+            loss: part.loss_from_gram(gram, &mask),
+        });
+    }
+    trace
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -184,6 +247,66 @@ fn main() {
         h.bench("hot/straggler arrivals (30 workers)", || {
             std::hint::black_box(sim.sample_arrivals(&mut r));
         });
+    }
+
+    // ---------------- sweep hot path: incremental vs pre-refactor ------
+    {
+        // one r×c trial (9 unknowns, diagonal Gram)
+        let mut r = rng.split();
+        let pkts = ew.generate_packets(&spec_rxc.part, &cm, 30, &mut r);
+        let arrivals: Vec<f64> = (0..30).map(|i| (i as f64 * 0.37) % 2.0).collect();
+        let mut scratch = SweepScratch::new();
+        h.bench("sweep/loss_trace rxc 30pkts incremental+scratch", || {
+            let trace = loss_trace_packets_scratch(
+                &spec_rxc.part, &ew, &gram, &pkts, &arrivals, &mut scratch,
+            );
+            std::hint::black_box(trace.last().map(|p| p.loss));
+        });
+        h.bench("sweep/loss_trace rxc 30pkts reference (pre-refactor)", || {
+            let trace =
+                loss_trace_reference(&spec_rxc.part, &ew, &gram, &pkts, &arrivals);
+            std::hint::black_box(trace.last().map(|p| p.loss));
+        });
+        // one c×r rank-one trial (81 unknowns incl. ghosts, dense Gram) —
+        // the case where flat-row elimination and O(k) loss deltas pay most
+        let cm_cxr = spec_cxr.class_map();
+        let gram_cxr = {
+            let mut r2 = rng.split();
+            let (a2, b2) = spec_cxr.sample_matrices(&mut r2);
+            spec_cxr.part.gram(&spec_cxr.part.true_products(&a2, &b2))
+        };
+        let pkts_r1 = now_r1.generate_packets(&spec_cxr.part, &cm_cxr, 30, &mut r);
+        let mut scratch_r1 = SweepScratch::new();
+        h.bench("sweep/loss_trace cxr-rank1 30pkts incremental+scratch", || {
+            let trace = loss_trace_packets_scratch(
+                &spec_cxr.part, &now_r1, &gram_cxr, &pkts_r1, &arrivals, &mut scratch_r1,
+            );
+            std::hint::black_box(trace.last().map(|p| p.loss));
+        });
+        h.bench("sweep/loss_trace cxr-rank1 30pkts reference (pre-refactor)", || {
+            let trace = loss_trace_reference(
+                &spec_cxr.part, &now_r1, &gram_cxr, &pkts_r1, &arrivals,
+            );
+            std::hint::black_box(trace.last().map(|p| p.loss));
+        });
+    }
+    {
+        // fig9-style Monte-Carlo sweep throughput: full mc_loss_vs_time
+        // unit at 1 thread and at all cores (the tentpole's ≥5× target
+        // reads off sweep/mc… (pre-refactor 1t) vs sweep/mc… (Nt))
+        let spec = SyntheticSpec::fig9_rxc().scaled(15);
+        let code = CodeSpec::stacked(CodeKind::EwUep(spec.gamma.clone()));
+        let ts = [0.5, 1.0, 1.5];
+        h.bench("sweep/mc_loss_vs_time 2x100 trials (1 thread)", || {
+            std::hint::black_box(mc_loss_vs_time(&spec, &code, &ts, 2, 100, 3, 1));
+        });
+        let cores = available_parallelism();
+        h.bench(
+            &format!("sweep/mc_loss_vs_time 2x100 trials ({cores} threads)"),
+            || {
+                std::hint::black_box(mc_loss_vs_time(&spec, &code, &ts, 2, 100, 3, cores));
+            },
+        );
     }
 
     // ---------------- matmul tiers (native engine) ---------------------
@@ -381,4 +504,5 @@ fn main() {
     }
 
     h.write_csv();
+    h.write_json();
 }

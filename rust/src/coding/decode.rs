@@ -2,13 +2,17 @@
 //!
 //! Packets arrive one at a time (ordered by worker completion). Each is
 //! one linear equation over the unknown sub-products; [`DecodeState`]
-//! absorbs it into an incremental Gaussian elimination and reports which
-//! *real* unknowns became uniquely determined. Values are recovered
-//! lazily from the stored rank-increasing packets by solving the
-//! (consistent) system `Rᵀx = e_i` and combining payloads — so
-//! coefficient-only simulation sweeps never touch matrix payloads at all.
+//! absorbs it into an incremental Gauss–Jordan elimination and reports
+//! which *real* unknowns became uniquely determined. Payloads (when
+//! present) ride through the same row operations, so the value of a
+//! determined unknown is read off its singleton RREF row — per-pivot
+//! back-substitution instead of a batch `RᵀX = E` least-squares solve.
+//! Coefficient-only simulation sweeps never touch matrix payloads at
+//! all, and the decoder performs no per-packet row clone: the equation
+//! buffer passes into the eliminator and comes back (absorbed or
+//! rejected) for reuse by the next packet.
 
-use crate::linalg::{solve_least_squares, Eliminator, Matrix};
+use crate::linalg::{Absorption, Eliminator, Matrix};
 
 use super::{Packet, UnknownSpace};
 
@@ -16,12 +20,15 @@ use super::{Packet, UnknownSpace};
 pub struct DecodeState {
     space: UnknownSpace,
     elim: Eliminator,
-    /// Original coefficient rows of rank-increasing packets.
-    rows: Vec<Vec<f64>>,
-    /// Payloads aligned with `rows` (None in coefficient-only mode).
-    payloads: Vec<Option<Matrix>>,
+    /// Shape of packet payload matrices, set by the first packet that
+    /// carries one (payloads are flattened into the eliminator).
+    payload_shape: Option<(usize, usize)>,
     /// Count of all packets offered (including dependent ones).
     offered: usize,
+    /// Maintained count of determined *real* unknowns.
+    recovered_real: usize,
+    /// Spare coefficient buffer recycled across packets.
+    spare_row: Vec<f64>,
 }
 
 impl DecodeState {
@@ -30,10 +37,20 @@ impl DecodeState {
         DecodeState {
             space,
             elim: Eliminator::new(n, 0),
-            rows: Vec::new(),
-            payloads: Vec::new(),
+            payload_shape: None,
             offered: 0,
+            recovered_real: 0,
+            spare_row: Vec::new(),
         }
+    }
+
+    /// Reset to an empty decode over the same unknown space, keeping all
+    /// backing allocations (scratch reuse across Monte-Carlo trials).
+    pub fn reset(&mut self) {
+        self.elim.reset(self.space.n_total, 0);
+        self.payload_shape = None;
+        self.offered = 0;
+        self.recovered_real = 0;
     }
 
     pub fn space(&self) -> &UnknownSpace {
@@ -54,20 +71,53 @@ impl DecodeState {
     /// coefficient-only mode). Returns the newly determined *real*
     /// unknown indices.
     pub fn add_packet(&mut self, packet: &Packet, payload: Option<Matrix>) -> Vec<usize> {
-        let row = packet.coeff_row(&self.space);
+        let mut row = std::mem::take(&mut self.spare_row);
+        packet.coeff_row_into(&self.space, &mut row);
         self.add_equation(row, payload)
     }
 
-    /// Absorb a raw equation row.
+    /// Absorb a raw equation row (ownership passes to the eliminator; on
+    /// a rank-deficient row the buffer is reclaimed for the next packet).
     pub fn add_equation(&mut self, row: Vec<f64>, payload: Option<Matrix>) -> Vec<usize> {
         self.offered += 1;
-        let rank_before = self.elim.rank();
-        let newly = self.elim.insert(row.clone(), Vec::new());
-        if self.elim.rank() > rank_before {
-            self.rows.push(row);
-            self.payloads.push(payload);
+        let rhs = match payload {
+            Some(m) => {
+                let shape = m.shape();
+                match self.payload_shape {
+                    None => {
+                        assert_eq!(
+                            self.elim.rank(),
+                            0,
+                            "packets must carry payloads from the first arrival on"
+                        );
+                        self.payload_shape = Some(shape);
+                        self.elim.set_payload_len(shape.0 * shape.1);
+                    }
+                    Some(s) => assert_eq!(s, shape, "payload shape changed mid-decode"),
+                }
+                m.into_vec()
+            }
+            None => {
+                assert!(
+                    self.payload_shape.is_none(),
+                    "coefficient-only packet after payload-carrying packets"
+                );
+                Vec::new()
+            }
+        };
+        match self.elim.insert(row, rhs) {
+            Absorption::Absorbed { newly, coeff, rhs: _ } => {
+                self.spare_row = coeff;
+                let real: Vec<usize> =
+                    newly.into_iter().filter(|&u| self.space.is_real(u)).collect();
+                self.recovered_real += real.len();
+                real
+            }
+            Absorption::Rejected { coeff, rhs: _ } => {
+                self.spare_row = coeff;
+                Vec::new()
+            }
         }
-        newly.into_iter().filter(|&u| self.space.is_real(u)).collect()
     }
 
     /// Which real unknowns are currently determined.
@@ -75,67 +125,30 @@ impl DecodeState {
         (0..self.space.n_real).map(|u| self.elim.is_determined(u)).collect()
     }
 
-    /// Number of determined real unknowns.
+    /// Number of determined real unknowns (maintained, O(1)).
     pub fn num_recovered(&self) -> usize {
-        self.recovered_mask().iter().filter(|&&b| b).count()
+        self.recovered_real
     }
 
     /// All real unknowns determined?
     pub fn is_complete(&self) -> bool {
-        self.num_recovered() == self.space.n_real
+        self.recovered_real == self.space.n_real
     }
 
-    /// Recover the payload of every determined real unknown by solving
-    /// `Rᵀ·X = E_D` over the stored rank-increasing packets. Requires all
-    /// stored packets to carry payloads. Missing/undetermined unknowns
-    /// come back as `None`.
+    /// Recovered payload of every determined real unknown, read directly
+    /// off the eliminator's reduced right-hand sides (the incremental
+    /// back-substitution maintained on every arrival). Undetermined
+    /// unknowns come back as `None`.
     pub fn recover_values(&self) -> Vec<Option<Matrix>> {
-        let recovered = self.recovered_mask();
-        let determined: Vec<usize> = (0..self.space.n_real)
-            .filter(|&u| recovered[u])
-            .collect();
         let mut out: Vec<Option<Matrix>> = vec![None; self.space.n_real];
-        if determined.is_empty() {
+        if self.recovered_real == 0 {
             return out;
         }
-        let r = self.rows.len();
-        let n = self.space.n_total;
-        // A = Rᵀ (n × r): columns are packet rows.
-        let a = Matrix::from_fn(n, r, |i, w| self.rows[w][i]);
-        // E (n × d): unit columns of the determined unknowns.
-        let d = determined.len();
-        let e = Matrix::from_fn(n, d, |i, c| {
-            if i == determined[c] {
-                1.0
-            } else {
-                0.0
+        let (pr, pc) = self.payload_shape.expect("recover_values needs payloads");
+        for (u, slot) in out.iter_mut().enumerate() {
+            if let Some(v) = self.elim.value_of(u) {
+                *slot = Some(Matrix::from_vec(pr, pc, v.to_vec()));
             }
-        });
-        // Consistent by construction (determined ⇒ e_i ∈ rowspace(R));
-        // the stored rows are linearly independent so RRᵀ is invertible.
-        let x = solve_least_squares(&a, &e)
-            .expect("value recovery: RRᵀ unexpectedly singular");
-        // payload_i = Σ_w x[w, c] · payload_w
-        let (pr, pc) = self
-            .payloads
-            .iter()
-            .flatten()
-            .next()
-            .expect("recover_values needs payloads")
-            .shape();
-        for (c, &u) in determined.iter().enumerate() {
-            let mut acc = Matrix::zeros(pr, pc);
-            for w in 0..r {
-                let coef = x[(w, c)];
-                if coef.abs() < 1e-14 {
-                    continue;
-                }
-                let payload = self.payloads[w]
-                    .as_ref()
-                    .expect("recover_values: packet stored without payload");
-                acc.axpy(coef, payload);
-            }
-            out[u] = Some(acc);
         }
         out
     }
@@ -378,6 +391,118 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Pre-refactor batch recovery oracle: solve `RᵀX = E_D` over the
+    /// rank-increasing packet rows via least squares and combine the
+    /// original payloads — the exact algorithm `recover_values` replaced
+    /// with incremental per-pivot back-substitution.
+    fn batch_recover(
+        rows: &[Vec<f64>],
+        payloads: &[Matrix],
+        n_total: usize,
+        determined: &[usize],
+    ) -> Vec<Matrix> {
+        let r = rows.len();
+        let a = Matrix::from_fn(n_total, r, |i, w| rows[w][i]);
+        let d = determined.len();
+        let e = Matrix::from_fn(n_total, d, |i, c| {
+            if i == determined[c] {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let x = crate::linalg::solve_least_squares(&a, &e)
+            .expect("batch oracle: RRᵀ singular");
+        let (pr, pc) = payloads[0].shape();
+        determined
+            .iter()
+            .enumerate()
+            .map(|(c, _)| {
+                let mut acc = Matrix::zeros(pr, pc);
+                for w in 0..r {
+                    let coef = x[(w, c)];
+                    if coef.abs() >= 1e-14 {
+                        acc.axpy(coef, &payloads[w]);
+                    }
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Equivalence: the incremental value-recovery path must match the
+    /// old batch least-squares solve (and the true sub-products) on
+    /// randomized schemes, paradigms, and arrival orders — and the
+    /// maintained `num_recovered` must match a mask recount after every
+    /// single arrival.
+    #[test]
+    fn incremental_recovery_matches_batch_least_squares() {
+        prop_check(
+            "incremental vs batch recovery",
+            PropConfig { cases: 12, seed: 2024 },
+            |rng, case| {
+                let setups = setups();
+                let (part, cm) = &setups[case % setups.len()];
+                let specs = all_specs(false);
+                let spec = &specs[case % specs.len()];
+                let a = Matrix::randn(part.a_shape().0, part.a_shape().1, 0.0, 1.0, rng);
+                let b = Matrix::randn(part.b_shape().0, part.b_shape().1, 0.0, 1.0, rng);
+                let a_blocks = part.split_a(&a);
+                let b_blocks = part.split_b(&b);
+                let truth = part.true_products(&a, &b);
+                let workers = gen::usize_in(rng, 5, 45);
+                let mut pkts = spec.generate_packets(part, cm, workers, rng);
+                gen::shuffle(rng, &mut pkts);
+                let space = crate::coding::UnknownSpace::for_code(part, spec.style);
+                let n_total = space.n_total;
+                let mut st = DecodeState::new(space);
+                // the oracle's book-keeping: original rows + payloads of
+                // rank-increasing packets
+                let mut rows: Vec<Vec<f64>> = Vec::new();
+                let mut payloads: Vec<Matrix> = Vec::new();
+                for p in &pkts {
+                    let payload = worker_payload(part, &a_blocks, &b_blocks, p);
+                    let row = p.coeff_row(st.space());
+                    let rank_before = st.rank();
+                    st.add_packet(p, Some(payload.clone()));
+                    if st.rank() > rank_before {
+                        rows.push(row);
+                        payloads.push(payload);
+                    }
+                    let recount =
+                        st.recovered_mask().iter().filter(|&&m| m).count();
+                    if recount != st.num_recovered() {
+                        return Err(format!(
+                            "maintained count {} vs recount {recount}",
+                            st.num_recovered()
+                        ));
+                    }
+                }
+                let mask = st.recovered_mask();
+                let determined: Vec<usize> = (0..mask.len())
+                    .filter(|&u| mask[u])
+                    .collect();
+                let incremental = st.recover_values();
+                if determined.is_empty() {
+                    return Ok(());
+                }
+                let batch = batch_recover(&rows, &payloads, n_total, &determined);
+                for (bi, &u) in determined.iter().enumerate() {
+                    let inc = incremental[u]
+                        .as_ref()
+                        .ok_or("determined unknown missing incremental value")?;
+                    if !inc.allclose(&batch[bi], 1e-6) {
+                        return Err(format!("unknown {u}: incremental ≠ batch"));
+                    }
+                    if !inc.allclose(&truth[u], 1e-6) {
+                        return Err(format!("unknown {u}: incremental ≠ truth"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

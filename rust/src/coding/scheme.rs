@@ -116,7 +116,16 @@ impl Packet {
     /// Dense coefficient row of this packet over the (possibly extended)
     /// unknown space — the equation the decoder absorbs.
     pub fn coeff_row(&self, space: &UnknownSpace) -> Vec<f64> {
-        let mut row = vec![0.0; space.n_total];
+        let mut row = Vec::new();
+        self.coeff_row_into(space, &mut row);
+        row
+    }
+
+    /// Fill a caller-owned buffer with the coefficient row, reusing its
+    /// allocation (the decoder's per-packet hot path).
+    pub fn coeff_row_into(&self, space: &UnknownSpace, row: &mut Vec<f64>) {
+        row.clear();
+        row.resize(space.n_total, 0.0);
         match &self.recipe {
             JobRecipe::Stacked { terms } => {
                 for t in terms {
@@ -132,7 +141,6 @@ impl Packet {
                 }
             }
         }
-        row
     }
 }
 

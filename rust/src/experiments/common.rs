@@ -7,9 +7,9 @@ use crate::coding::CodeSpec;
 use crate::config::SyntheticSpec;
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
-use crate::sim::{loss_trace_packets, StragglerSim};
+use crate::sim::{loss_trace_packets_scratch, StragglerSim, SweepScratch};
 use crate::util::csv::CsvTable;
-use crate::util::pool::available_parallelism;
+use crate::util::pool::{available_parallelism, parallel_map_scratch};
 
 /// Common experiment options (from the CLI).
 #[derive(Clone, Debug)]
@@ -109,6 +109,14 @@ pub fn mc_loss_vs_packets(
 }
 
 /// Shared sweep skeleton: returns the per-point mean of `f(trace)`.
+///
+/// The whole `instances × trials_per_instance` grid fans out across the
+/// pool in one flat work list with per-thread [`SweepScratch`] reuse —
+/// an incoming trial only allocates its packet set, arrival vector, and
+/// trace. Trial `(inst, t)` draws from stream `t+1` of
+/// `seed ^ (inst << 32)` (the historical per-instance seeding) and the
+/// accumulation runs in trial order, so sweep outputs are bit-identical
+/// at any thread count.
 fn mc_sweep<F>(
     spec: &SyntheticSpec,
     code: &CodeSpec,
@@ -123,31 +131,45 @@ where
 {
     let cm = spec.class_map();
     let sim = StragglerSim::new(spec.workers, spec.latency.clone(), spec.omega());
+    // per-instance Assumption-1 draws (cheap next to the trial fan-out)
+    let insts: Vec<(Matrix, f64)> = (0..instances)
+        .map(|inst| {
+            let mut rng = Pcg64::with_stream(seed, 1000 + inst as u64);
+            let (a, b) = spec.sample_matrices(&mut rng);
+            let gram = spec.part.gram(&spec.part.true_products(&a, &b));
+            let energy = gram_energy(&spec.part, &gram);
+            (gram, energy)
+        })
+        .collect();
+    let total = instances * trials_per_instance;
+    let per_trial: Vec<Vec<f64>> = parallel_map_scratch(
+        total,
+        threads,
+        SweepScratch::new,
+        |idx, scratch| {
+            let inst = idx / trials_per_instance;
+            let trial = idx % trials_per_instance;
+            let (gram, energy) = &insts[inst];
+            let mut rng =
+                Pcg64::with_stream(seed ^ ((inst as u64) << 32), trial as u64 + 1);
+            let packets = code.generate_packets(&spec.part, &cm, spec.workers, &mut rng);
+            let arrivals = sim.sample_arrivals(&mut rng);
+            let trace = loss_trace_packets_scratch(
+                &spec.part, code, gram, &packets, &arrivals, scratch,
+            );
+            f(&trace, *energy)
+        },
+    );
     let mut acc: Vec<f64> = Vec::new();
     let mut count = 0usize;
-    for inst in 0..instances {
-        let mut rng = Pcg64::with_stream(seed, 1000 + inst as u64);
-        let (a, b) = spec.sample_matrices(&mut rng);
-        let gram = spec.part.gram(&spec.part.true_products(&a, &b));
-        let energy = gram_energy(&spec.part, &gram);
-        let per_trial: Vec<Vec<f64>> =
-            crate::sim::monte_carlo(trials_per_instance, threads, seed ^ (inst as u64) << 32, |rng, _| {
-                let packets =
-                    code.generate_packets(&spec.part, &cm, spec.workers, rng);
-                let arrivals = sim.sample_arrivals(rng);
-                let trace =
-                    loss_trace_packets(&spec.part, code, &gram, &packets, &arrivals);
-                f(&trace, energy)
-            });
-        for row in per_trial {
-            if acc.is_empty() {
-                acc = vec![0.0; row.len()];
-            }
-            for (a, v) in acc.iter_mut().zip(row.iter()) {
-                *a += v;
-            }
-            count += 1;
+    for row in per_trial {
+        if acc.is_empty() {
+            acc = vec![0.0; row.len()];
         }
+        for (a, v) in acc.iter_mut().zip(row.iter()) {
+            *a += v;
+        }
+        count += 1;
     }
     for a in acc.iter_mut() {
         *a /= count.max(1) as f64;
@@ -180,6 +202,23 @@ mod tests {
             assert!(w[1] <= w[0] + 1e-9);
         }
         assert!(losses[6] < 0.2, "loss at t=3: {}", losses[6]);
+    }
+
+    /// Determinism pin: the parallel scratch-reusing sweep must produce
+    /// bit-identical results at 1 thread and N threads.
+    #[test]
+    fn mc_sweep_bit_identical_across_thread_counts() {
+        let spec = crate::config::SyntheticSpec::fig9_rxc().scaled(15);
+        let code = CodeSpec::new(
+            CodeKind::EwUep(spec.gamma.clone()),
+            EncodeStyle::Stacked,
+        );
+        let ts = [0.3, 0.9, 1.5];
+        let serial = mc_loss_vs_time(&spec, &code, &ts, 2, 25, 7, 1);
+        for threads in [2usize, 8] {
+            let parallel = mc_loss_vs_time(&spec, &code, &ts, 2, 25, 7, threads);
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
     }
 
     #[test]

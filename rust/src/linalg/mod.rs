@@ -10,4 +10,4 @@ mod solve;
 
 pub use matmul::{matmul, matmul_into, matmul_naive, matmul_with, MatmulOpts};
 pub use matrix::Matrix;
-pub use solve::{lu_solve, rank, solve_least_squares, Eliminator};
+pub use solve::{lu_solve, rank, solve_least_squares, Absorption, Eliminator};

@@ -144,6 +144,19 @@ pub fn solve_least_squares(a: &Matrix, b: &Matrix) -> Option<Matrix> {
     lu_solve(&ata, &atb)
 }
 
+/// Outcome of feeding one equation to the [`Eliminator`]. Both variants
+/// hand the caller's buffers back (the eliminator copies into its flat
+/// storage), so a decoder can run with zero steady-state allocation;
+/// their contents are the reduced row, not the original equation.
+#[derive(Debug)]
+pub enum Absorption {
+    /// The equation increased the rank; the listed unknown indices became
+    /// uniquely determined as a result (possibly none).
+    Absorbed { newly: Vec<usize>, coeff: Vec<f64>, rhs: Vec<f64> },
+    /// The equation was linearly dependent on the rows already absorbed.
+    Rejected { coeff: Vec<f64>, rhs: Vec<f64> },
+}
+
 /// Incremental Gauss–Jordan eliminator over `n` unknowns.
 ///
 /// Feed equations `coeff · x = rhs` one at a time (each `rhs` is an
@@ -154,16 +167,28 @@ pub fn solve_least_squares(a: &Matrix, b: &Matrix) -> Option<Matrix> {
 /// `{i}` alone. (A one-directional staircase is not enough — a packet
 /// covering extra unknowns can take an early pivot and hide a solvable
 /// subsystem; see the EW-UEP decoding tests.)
+///
+/// Because payloads ride through the same row operations, the reduced
+/// right-hand side of a singleton row *is* the recovered value: value
+/// recovery is per-pivot back-substitution, never a batch re-solve.
+///
+/// Storage is flat and contiguous (`rank × n` coefficients, `rank ×
+/// payload_len` payloads) — one allocation each that grows amortized,
+/// rather than two heap cells per absorbed row.
 pub struct Eliminator {
     n: usize,
     payload_len: usize,
-    /// RREF rows: coefficient part (len n) + payload (len payload_len).
-    rows: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Flat row-major RREF coefficient storage (`rank` rows × `n`).
+    coeffs: Vec<f64>,
+    /// Flat payload storage aligned with `coeffs` (`rank` × `payload_len`).
+    payloads: Vec<f64>,
     /// pivot column of each stored row.
     pivot_of_row: Vec<usize>,
     /// row index owning pivot column c, or usize::MAX.
     row_of_pivot: Vec<usize>,
     determined: Vec<bool>,
+    /// Maintained count of `true` entries in `determined`.
+    n_determined: usize,
 }
 
 impl Eliminator {
@@ -171,10 +196,12 @@ impl Eliminator {
         Eliminator {
             n: n_unknowns,
             payload_len,
-            rows: Vec::new(),
+            coeffs: Vec::new(),
+            payloads: Vec::new(),
             pivot_of_row: Vec::new(),
             row_of_pivot: vec![usize::MAX; n_unknowns],
             determined: vec![false; n_unknowns],
+            n_determined: 0,
         }
     }
 
@@ -182,19 +209,54 @@ impl Eliminator {
         self.n
     }
 
-    /// Current rank (number of independent equations absorbed).
-    pub fn rank(&self) -> usize {
-        self.rows.len()
+    pub fn payload_len(&self) -> usize {
+        self.payload_len
     }
 
-    /// Insert one equation; returns the list of unknown indices that
-    /// became determined as a result (possibly empty).
-    pub fn insert(&mut self, mut coeff: Vec<f64>, mut rhs: Vec<f64>) -> Vec<usize> {
+    /// Current rank (number of independent equations absorbed).
+    pub fn rank(&self) -> usize {
+        self.pivot_of_row.len()
+    }
+
+    /// Number of determined unknowns (maintained incrementally, O(1)).
+    pub fn determined_count(&self) -> usize {
+        self.n_determined
+    }
+
+    /// Clear all absorbed state and re-dimension, keeping the backing
+    /// allocations (scratch reuse across Monte-Carlo trials).
+    pub fn reset(&mut self, n_unknowns: usize, payload_len: usize) {
+        self.n = n_unknowns;
+        self.payload_len = payload_len;
+        self.coeffs.clear();
+        self.payloads.clear();
+        self.pivot_of_row.clear();
+        self.row_of_pivot.clear();
+        self.row_of_pivot.resize(n_unknowns, usize::MAX);
+        self.determined.clear();
+        self.determined.resize(n_unknowns, false);
+        self.n_determined = 0;
+    }
+
+    /// Fix the payload width after construction. Only legal while no row
+    /// has been absorbed (the flat payload storage is strided by it).
+    pub fn set_payload_len(&mut self, len: usize) {
+        assert_eq!(self.rank(), 0, "payload width is fixed after the first absorbed row");
+        self.payload_len = len;
+    }
+
+    /// Insert one equation, taking ownership of its buffers. Dependent
+    /// equations are rejected and the buffers handed back for reuse.
+    pub fn insert(&mut self, mut coeff: Vec<f64>, mut rhs: Vec<f64>) -> Absorption {
         assert_eq!(coeff.len(), self.n);
         assert_eq!(rhs.len(), self.payload_len);
+        let n = self.n;
+        let pl = self.payload_len;
         // Forward-reduce the incoming row against every stored pivot.
+        // (Stored rows have no support left of their own pivot — the
+        // RREF invariant — so reduction from `col` onward is complete.)
         let scale0 = coeff.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
-        for col in 0..self.n {
+        for col in 0..n {
             if coeff[col] == 0.0 {
                 continue;
             }
@@ -203,12 +265,13 @@ impl Eliminator {
                 continue;
             }
             let f = coeff[col];
-            let (rc, rr) = &self.rows[owner];
-            for i in col..self.n {
+            let rc = &self.coeffs[owner * n..(owner + 1) * n];
+            for i in col..n {
                 coeff[i] -= f * rc[i];
             }
-            for (i, v) in rhs.iter_mut().enumerate() {
-                *v -= f * rr[i];
+            let rr = &self.payloads[owner * pl..(owner + 1) * pl];
+            for (v, p) in rhs.iter_mut().zip(rr.iter()) {
+                *v -= f * p;
             }
             coeff[col] = 0.0;
         }
@@ -218,7 +281,7 @@ impl Eliminator {
             .position(|&v| v.abs() > PIVOT_TOL * scale0)
         {
             Some(p) => p,
-            None => return Vec::new(), // dependent equation
+            None => return Absorption::Rejected { coeff, rhs },
         };
         // Normalize.
         let inv = 1.0 / coeff[piv];
@@ -237,47 +300,60 @@ impl Eliminator {
             }
         }
         // Back-eliminate the new pivot from every existing row (this is
-        // what upgrades the staircase to a full RREF).
-        for ri in 0..self.rows.len() {
-            let f = self.rows[ri].0[piv];
+        // what upgrades the staircase to a full RREF). Rows whose support
+        // shrinks to their pivot alone become determined — detected here,
+        // in the same pass, instead of a full O(rank·n) rescan.
+        let n_rows = self.pivot_of_row.len();
+        let mut newly = Vec::new();
+        for ri in 0..n_rows {
+            let base = ri * n;
+            let f = self.coeffs[base + piv];
             if f == 0.0 {
                 continue;
             }
-            let (rc_new, rr_new) = (&coeff, &rhs);
-            let (rc, rr) = &mut self.rows[ri];
-            for i in 0..self.n {
-                rc[i] -= f * rc_new[i];
-                if rc[i].abs() <= PIVOT_TOL {
-                    rc[i] = 0.0;
+            let own_piv = self.pivot_of_row[ri];
+            let rc = &mut self.coeffs[base..base + n];
+            for (v, nv) in rc.iter_mut().zip(coeff.iter()) {
+                *v -= f * nv;
+                if v.abs() <= PIVOT_TOL {
+                    *v = 0.0;
                 }
             }
             rc[piv] = 0.0;
-            for (v, nv) in rr.iter_mut().zip(rr_new.iter()) {
+            // restore the exact pivot 1 of that row (numerical hygiene)
+            rc[own_piv] = 1.0;
+            let support = rc.iter().filter(|&&v| v != 0.0).count();
+            let rr = &mut self.payloads[ri * pl..(ri + 1) * pl];
+            for (v, nv) in rr.iter_mut().zip(rhs.iter()) {
                 *v -= f * nv;
             }
-            // restore the exact pivot 1 of that row (numerical hygiene)
-            let own_piv = self.pivot_of_row[ri];
-            rc[own_piv] = 1.0;
+            if support == 1 && !self.determined[own_piv] {
+                self.determined[own_piv] = true;
+                self.n_determined += 1;
+                newly.push(own_piv);
+            }
         }
-        self.rows.push((coeff, rhs));
+        // Append the new row to the flat storage.
+        self.coeffs.extend_from_slice(&coeff);
+        self.payloads.extend_from_slice(&rhs);
         self.pivot_of_row.push(piv);
-        self.row_of_pivot[piv] = self.rows.len() - 1;
-        // Determination scan: rows whose support shrank to their pivot.
-        let mut newly = Vec::new();
-        for ri in 0..self.rows.len() {
-            let p = self.pivot_of_row[ri];
-            if self.determined[p] {
-                continue;
-            }
-            let (rc, _) = &self.rows[ri];
-            let singleton =
-                rc.iter().enumerate().all(|(c, &v)| c == p || v == 0.0);
-            if singleton {
-                self.determined[p] = true;
-                newly.push(p);
-            }
+        self.row_of_pivot[piv] = n_rows;
+        let support = coeff.iter().filter(|&&v| v != 0.0).count();
+        if support == 1 && !self.determined[piv] {
+            self.determined[piv] = true;
+            self.n_determined += 1;
+            newly.push(piv);
         }
-        newly
+        Absorption::Absorbed { newly, coeff, rhs }
+    }
+
+    /// Insert, discarding the returned buffers: returns the newly
+    /// determined unknowns (empty for dependent equations).
+    pub fn absorb(&mut self, coeff: Vec<f64>, rhs: Vec<f64>) -> Vec<usize> {
+        match self.insert(coeff, rhs) {
+            Absorption::Absorbed { newly, .. } => newly,
+            Absorption::Rejected { .. } => Vec::new(),
+        }
     }
 
     pub fn is_determined(&self, idx: usize) -> bool {
@@ -291,7 +367,7 @@ impl Eliminator {
             return None;
         }
         let row = self.row_of_pivot[idx];
-        Some(&self.rows[row].1)
+        Some(&self.payloads[row * self.payload_len..(row + 1) * self.payload_len])
     }
 
     /// Indices of all currently determined unknowns.
@@ -368,33 +444,57 @@ mod tests {
         // unknowns x0, x1 with payloads of length 1
         let mut e = Eliminator::new(2, 1);
         // x0 + x1 = 3
-        let newly = e.insert(vec![1.0, 1.0], vec![3.0]);
+        let newly = e.absorb(vec![1.0, 1.0], vec![3.0]);
         assert!(newly.is_empty());
         // x0 - x1 = 1  → x0 = 2, x1 = 1
-        let mut newly = e.insert(vec![1.0, -1.0], vec![1.0]);
+        let mut newly = e.absorb(vec![1.0, -1.0], vec![1.0]);
         newly.sort_unstable();
         assert_eq!(newly, vec![0, 1]);
+        assert_eq!(e.determined_count(), 2);
         assert!((e.value_of(0).unwrap()[0] - 2.0).abs() < 1e-12);
         assert!((e.value_of(1).unwrap()[0] - 1.0).abs() < 1e-12);
     }
 
     #[test]
-    fn eliminator_ignores_dependent_rows() {
+    fn eliminator_rejects_dependent_rows_with_buffers() {
         let mut e = Eliminator::new(3, 1);
-        e.insert(vec![1.0, 1.0, 0.0], vec![1.0]);
-        let newly = e.insert(vec![2.0, 2.0, 0.0], vec![2.0]);
-        assert!(newly.is_empty());
+        e.absorb(vec![1.0, 1.0, 0.0], vec![1.0]);
+        // dependent: ownership of the buffers comes back
+        match e.insert(vec![2.0, 2.0, 0.0], vec![2.0]) {
+            Absorption::Rejected { coeff, rhs } => {
+                assert_eq!(coeff.len(), 3);
+                assert_eq!(rhs.len(), 1);
+            }
+            Absorption::Absorbed { .. } => panic!("dependent row absorbed"),
+        }
         assert_eq!(e.rank(), 1);
+        assert_eq!(e.determined_count(), 0);
     }
 
     #[test]
     fn eliminator_partial_decode() {
         // x2 determined alone while x0,x1 stay mixed.
         let mut e = Eliminator::new(3, 2);
-        let newly = e.insert(vec![0.0, 0.0, 2.0], vec![4.0, 6.0]);
+        let newly = e.absorb(vec![0.0, 0.0, 2.0], vec![4.0, 6.0]);
         assert_eq!(newly, vec![2]);
         assert_eq!(e.value_of(2).unwrap(), &[2.0, 3.0]);
         assert!(!e.is_determined(0));
+        assert_eq!(e.determined_count(), 1);
+    }
+
+    #[test]
+    fn eliminator_reset_reuses_allocations() {
+        let mut e = Eliminator::new(3, 1);
+        e.absorb(vec![1.0, 0.5, 0.0], vec![1.0]);
+        e.absorb(vec![0.0, 1.0, 2.0], vec![2.0]);
+        assert_eq!(e.rank(), 2);
+        e.reset(4, 0);
+        assert_eq!(e.rank(), 0);
+        assert_eq!(e.n_unknowns(), 4);
+        assert_eq!(e.payload_len(), 0);
+        assert_eq!(e.determined_count(), 0);
+        let newly = e.absorb(vec![0.0, 0.0, 0.0, 3.0], vec![]);
+        assert_eq!(newly, vec![3]);
     }
 
     #[test]
@@ -415,7 +515,7 @@ mod tests {
                         *r += c * t;
                     }
                 }
-                e.insert(coeff, rhs);
+                e.absorb(coeff, rhs);
             }
             for i in 0..n {
                 let got = e.value_of(i).ok_or("unknown undetermined")?;

@@ -208,6 +208,29 @@ impl Partitioning {
         }
     }
 
+    /// Decrease of [`Self::loss_from_gram`] caused by unknown `u` flipping
+    /// from missing to recovered — the incremental-sweep update: O(1) for
+    /// r×c (diagonal Gram), O(K) for c×r, instead of an O(K²) recompute.
+    /// `recovered` must already have `recovered[u] == true`.
+    pub fn loss_delta_on_recover(&self, gram: &Matrix, recovered: &[bool], u: usize) -> f64 {
+        debug_assert!(recovered[u], "mark the unknown recovered before the delta");
+        match self.paradigm {
+            Paradigm::RowTimesCol => gram[(u, u)],
+            Paradigm::ColTimesRow => {
+                // removing u from the unrecovered set U drops G_uu plus
+                // both cross strips: Σ_{j∈U\{u}} (G_uj + G_ju) = 2·Σ G_uj
+                let k = self.num_products();
+                let mut delta = gram[(u, u)];
+                for j in 0..k {
+                    if !recovered[j] {
+                        delta += 2.0 * gram[(u, j)];
+                    }
+                }
+                delta
+            }
+        }
+    }
+
     /// Gram matrix `G_ij = ⟨C_i, C_j⟩_F` of the true sub-products.
     pub fn gram(&self, products: &[Matrix]) -> Matrix {
         let k = products.len();
@@ -301,6 +324,36 @@ mod tests {
                 "{}: {direct} vs {fast}",
                 part.paradigm.short()
             );
+        }
+    }
+
+    #[test]
+    fn loss_delta_tracks_full_recompute() {
+        // Recover unknowns one by one in random order: the running sum of
+        // deltas must agree with a fresh loss_from_gram at every step.
+        let mut rng = Pcg64::seed_from(5);
+        for part in [Partitioning::rxc(3, 3, 4, 6, 5), Partitioning::cxr(6, 8, 4, 7)] {
+            let (ar, ac) = part.a_shape();
+            let (br, bc) = part.b_shape();
+            let a = Matrix::randn(ar, ac, 0.0, 1.0, &mut rng);
+            let b = Matrix::randn(br, bc, 0.0, 1.0, &mut rng);
+            let gram = part.gram(&part.true_products(&a, &b));
+            let k = part.num_products();
+            let mut order: Vec<usize> = (0..k).collect();
+            crate::util::prop::gen::shuffle(&mut rng, &mut order);
+            let mut mask = vec![false; k];
+            let mut running = part.loss_from_gram(&gram, &mask);
+            for &u in &order {
+                mask[u] = true;
+                running -= part.loss_delta_on_recover(&gram, &mask, u);
+                let full = part.loss_from_gram(&gram, &mask);
+                assert!(
+                    (running - full).abs() <= 1e-9 * (1.0 + full.abs()),
+                    "{}: running {running} vs full {full}",
+                    part.paradigm.short()
+                );
+            }
+            assert!(running.abs() < 1e-9);
         }
     }
 

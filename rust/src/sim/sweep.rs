@@ -5,6 +5,14 @@
 //! (`‖C−Ĉ‖² = Σ_{i,j∉rec} G_ij`, see `Partitioning::loss_from_gram`).
 //! Linearity makes this numerically identical to the honest engine path
 //! (verified by an integration test).
+//!
+//! The per-arrival accounting is fully incremental: the residual loss is
+//! a running sum updated only by newly-recovered unknowns (O(k) per
+//! recovery via `Partitioning::loss_delta_on_recover`, instead of an
+//! O(k²) Gram recompute per arrival), and the recovered count is
+//! maintained rather than recounted. [`SweepScratch`] carries the decode
+//! state and index buffers across trials so a Monte-Carlo worker thread
+//! allocates only its output trace in steady state.
 
 use crate::coding::{CodeSpec, DecodeState, Packet, UnknownSpace};
 use crate::linalg::Matrix;
@@ -19,6 +27,22 @@ pub struct LossTracePoint {
     pub received: usize,
     pub recovered: usize,
     pub loss: f64,
+}
+
+/// Reusable per-thread buffers for the trial hot loop: the decode state
+/// (eliminator storage), the arrival-order permutation, and the recovery
+/// mask. One per Monte-Carlo worker thread.
+#[derive(Default)]
+pub struct SweepScratch {
+    decode: Option<DecodeState>,
+    order: Vec<usize>,
+    mask: Vec<bool>,
+}
+
+impl SweepScratch {
+    pub fn new() -> Self {
+        SweepScratch::default()
+    }
 }
 
 /// Simulate one trial: generate packets, decode in arrival order, and
@@ -46,29 +70,57 @@ pub fn loss_trace_packets(
     packets: &[Packet],
     arrivals: &[f64],
 ) -> Vec<LossTracePoint> {
+    let mut scratch = SweepScratch::new();
+    loss_trace_packets_scratch(part, spec, gram, packets, arrivals, &mut scratch)
+}
+
+/// Same, with caller-owned scratch (the Monte-Carlo hot path: reuse one
+/// [`SweepScratch`] per worker thread across all its trials).
+pub fn loss_trace_packets_scratch(
+    part: &Partitioning,
+    spec: &CodeSpec,
+    gram: &Matrix,
+    packets: &[Packet],
+    arrivals: &[f64],
+    scratch: &mut SweepScratch,
+) -> Vec<LossTracePoint> {
     assert_eq!(packets.len(), arrivals.len());
     let space = UnknownSpace::for_code(part, spec.style);
-    let mut st = DecodeState::new(space);
-    let mut order: Vec<usize> = (0..arrivals.len()).collect();
-    order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
-    let mut mask = vec![false; part.num_products()];
+    match &mut scratch.decode {
+        Some(st) if *st.space() == space => st.reset(),
+        slot => *slot = Some(DecodeState::new(space)),
+    }
+    let st = scratch.decode.as_mut().expect("decode state just installed");
+    scratch.order.clear();
+    scratch.order.extend(0..arrivals.len());
+    scratch
+        .order
+        .sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+    let k = part.num_products();
+    scratch.mask.clear();
+    scratch.mask.resize(k, false);
+    let mut recovered = 0usize;
+    // full Gram sum once per trial; afterwards only deltas
+    let mut loss = part.loss_from_gram(gram, &scratch.mask);
     let mut trace = Vec::with_capacity(arrivals.len() + 1);
-    trace.push(LossTracePoint {
-        time: 0.0,
-        received: 0,
-        recovered: 0,
-        loss: part.loss_from_gram(gram, &mask),
-    });
-    for (i, &w) in order.iter().enumerate() {
+    trace.push(LossTracePoint { time: 0.0, received: 0, recovered: 0, loss });
+    for (i, &w) in scratch.order.iter().enumerate() {
         let newly = st.add_packet(&packets[w], None);
         for u in newly {
-            mask[u] = true;
+            scratch.mask[u] = true;
+            recovered += 1;
+            loss -= part.loss_delta_on_recover(gram, &scratch.mask, u);
+        }
+        if recovered == k {
+            // pin the fully-decoded endpoint to exactly zero (the batch
+            // recompute's empty sum), shedding running-sum rounding
+            loss = 0.0;
         }
         trace.push(LossTracePoint {
             time: arrivals[w],
             received: i + 1,
-            recovered: mask.iter().filter(|&&b| b).count(),
-            loss: part.loss_from_gram(gram, &mask),
+            recovered,
+            loss,
         });
     }
     trace
@@ -143,6 +195,107 @@ mod tests {
         assert_eq!(loss_at(&trace, 0.4), 1.0);
         assert_eq!(loss_at(&trace, 0.5), 0.6);
         assert_eq!(loss_at(&trace, 2.0), 0.2);
+    }
+
+    /// Pre-refactor reference: recompute the recovered count and the full
+    /// `Σ_{i,j∉rec} G_ij` residual from scratch after every arrival.
+    fn loss_trace_bruteforce(
+        part: &Partitioning,
+        spec: &CodeSpec,
+        gram: &Matrix,
+        packets: &[crate::coding::Packet],
+        arrivals: &[f64],
+    ) -> Vec<LossTracePoint> {
+        let space = UnknownSpace::for_code(part, spec.style);
+        let mut st = DecodeState::new(space);
+        let mut order: Vec<usize> = (0..arrivals.len()).collect();
+        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        let mut mask = vec![false; part.num_products()];
+        let mut trace = vec![LossTracePoint {
+            time: 0.0,
+            received: 0,
+            recovered: 0,
+            loss: part.loss_from_gram(gram, &mask),
+        }];
+        for (i, &w) in order.iter().enumerate() {
+            for u in st.add_packet(&packets[w], None) {
+                mask[u] = true;
+            }
+            trace.push(LossTracePoint {
+                time: arrivals[w],
+                received: i + 1,
+                recovered: mask.iter().filter(|&&b| b).count(),
+                loss: part.loss_from_gram(gram, &mask),
+            });
+        }
+        trace
+    }
+
+    /// The incremental running-sum loss/recovery path must match the
+    /// brute-force per-arrival recompute point-for-point, on randomized
+    /// schemes, paradigms, packet streams, and a reused scratch.
+    #[test]
+    fn incremental_trace_matches_bruteforce() {
+        use crate::coding::CodeKind;
+        use crate::util::prop::{gen, prop_check, PropConfig};
+        let (part_rxc, cm_rxc, a1, b1) = setup();
+        let gram_rxc = part_rxc.gram(&part_rxc.true_products(&a1, &b1));
+        // a c×r setup so the dense-Gram delta path is exercised too
+        let part_cxr = Partitioning::cxr(9, 6, 3, 5);
+        let lv = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let pair = crate::partition::default_pair_classes(3);
+        let cm_cxr =
+            crate::partition::ClassMap::from_levels(&part_cxr, lv.clone(), lv, &pair);
+        let mut rng0 = Pcg64::seed_from(40);
+        let a2 = Matrix::randn(part_cxr.a_shape().0, part_cxr.a_shape().1, 0.0, 1.0, &mut rng0);
+        let b2 = Matrix::randn(part_cxr.b_shape().0, part_cxr.b_shape().1, 0.0, 1.0, &mut rng0);
+        let gram_cxr = part_cxr.gram(&part_cxr.true_products(&a2, &b2));
+        let gamma = WindowPolynomial::paper_table3();
+        let mut scratch = SweepScratch::new();
+        prop_check(
+            "incremental trace vs brute force",
+            PropConfig { cases: 16, seed: 99 },
+            |rng, case| {
+                let (part, cm, gram) = if case % 2 == 0 {
+                    (&part_rxc, &cm_rxc, &gram_rxc)
+                } else {
+                    (&part_cxr, &cm_cxr, &gram_cxr)
+                };
+                let specs = [
+                    CodeSpec::stacked(CodeKind::Mds),
+                    CodeSpec::stacked(CodeKind::NowUep(gamma.clone())),
+                    CodeSpec::stacked(CodeKind::EwUep(gamma.clone())),
+                    CodeSpec::new(CodeKind::EwUep(gamma.clone()), EncodeStyle::RankOne),
+                ];
+                let spec = &specs[case % specs.len()];
+                let w = gen::usize_in(rng, 3, 40);
+                let packets = spec.generate_packets(part, cm, w, rng);
+                let arrivals: Vec<f64> =
+                    (0..w).map(|_| gen::f64_in(rng, 0.0, 3.0)).collect();
+                let fast = loss_trace_packets_scratch(
+                    part, spec, gram, &packets, &arrivals, &mut scratch,
+                );
+                let slow = loss_trace_bruteforce(part, spec, gram, &packets, &arrivals);
+                if fast.len() != slow.len() {
+                    return Err("trace length mismatch".into());
+                }
+                for (f, s) in fast.iter().zip(slow.iter()) {
+                    if f.received != s.received || f.recovered != s.recovered {
+                        return Err(format!(
+                            "counts diverge at received {}: {} vs {}",
+                            f.received, f.recovered, s.recovered
+                        ));
+                    }
+                    if (f.loss - s.loss).abs() > 1e-9 * (1.0 + s.loss.abs()) {
+                        return Err(format!(
+                            "loss diverges at received {}: {} vs {}",
+                            f.received, f.loss, s.loss
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

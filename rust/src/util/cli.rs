@@ -25,17 +25,26 @@ pub struct Args {
 }
 
 /// Error from argument parsing or typed access.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     InvalidValue(String, String),
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::InvalidValue(n, v) => write!(f, "invalid value for --{n}: {v}"),
+            CliError::MissingRequired(n) => write!(f, "missing required option --{n}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// A command parser: name, description, declared options.
 pub struct Command {

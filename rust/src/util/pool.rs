@@ -76,9 +76,26 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_scratch(n, threads, || (), move |i, _scratch| f(i))
+}
+
+/// [`parallel_map`] with per-thread scratch: every worker thread calls
+/// `init()` exactly once and threads the resulting value mutably through
+/// all items it processes. This is the Monte-Carlo fan-out primitive —
+/// decode states, order buffers, and masks live in the scratch and are
+/// reused across trials instead of being reallocated per trial. Results
+/// come back in index order, so the output is independent of the thread
+/// count and of which thread ran which item.
+pub fn parallel_map_scratch<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
     let threads = threads.min(n).max(1);
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut scratch = init();
+        return (0..n).map(|i| f(i, &mut scratch)).collect();
     }
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -86,17 +103,22 @@ where
         out.iter_mut().map(Mutex::new).collect();
     thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i, &mut scratch);
+                    **slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
-    out.into_iter().map(|v| v.expect("parallel_map slot unfilled")).collect()
+    out.into_iter()
+        .map(|v| v.expect("parallel_map_scratch slot unfilled"))
+        .collect()
 }
 
 /// `parallel_for` over disjoint chunks of a mutable slice.
@@ -180,5 +202,32 @@ mod tests {
     fn parallel_map_single_thread_fallback() {
         let out = parallel_map(5, 1, |i| i);
         assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_scratch_reuses_per_thread_state() {
+        let inits = Arc::new(AtomicU64::new(0));
+        let threads = 4;
+        let out = parallel_map_scratch(
+            64,
+            threads,
+            {
+                let inits = Arc::clone(&inits);
+                move || {
+                    inits.fetch_add(1, Ordering::SeqCst);
+                    Vec::<u64>::new()
+                }
+            },
+            |i, scratch: &mut Vec<u64>| {
+                // the scratch grows monotonically within a thread: reuse
+                scratch.push(i as u64);
+                i * 2
+            },
+        );
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+        let n_inits = inits.load(Ordering::SeqCst);
+        assert!(n_inits >= 1 && n_inits <= threads as u64, "{n_inits} inits");
     }
 }

@@ -76,6 +76,14 @@ pub mod gen {
         }
         v
     }
+
+    /// Fisher–Yates shuffle in place (uniform over permutations).
+    pub fn shuffle<T>(rng: &mut Pcg64, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = rng.next_bounded(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +133,16 @@ mod tests {
             assert_eq!(v.iter().sum::<usize>(), 30);
             assert!(v.iter().all(|&x| x >= 1));
         }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg64::seed_from(7);
+        let mut xs: Vec<usize> = (0..50).collect();
+        gen::shuffle(&mut rng, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, sorted, "50 elements left in place — shuffle broken");
     }
 }

@@ -1,0 +1,201 @@
+//! Offline stand-in for the `anyhow` crate (the real one is not in the
+//! hermetic vendor set). Implements exactly the API subset this
+//! workspace uses — [`Error`], [`Result`], the [`Context`] extension on
+//! `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!` macros — with
+//! upstream-compatible formatting: `{}` prints the outermost message,
+//! `{:#}` the full colon-joined cause chain, and `{:?}` the message plus
+//! a "Caused by:" list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error carrying a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: StdError>(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement std::error::Error, so this
+// blanket impl cannot overlap the reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(err)
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_outermost_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+    }
+
+    #[test]
+    fn debug_prints_cause_list() {
+        let e: Error = Error::from(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("0: missing thing"));
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        let e = none.context("was none").unwrap_err();
+        assert_eq!(format!("{e}"), "was none");
+        let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("op {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "op 7: missing thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!("n = {}", 4);
+        assert_eq!(format!("{e}"), "n = 4");
+    }
+}
