@@ -309,6 +309,53 @@ fn main() {
         );
     }
 
+    // ---------------- cluster runtime hot paths ------------------------
+    {
+        use uepmm::cluster::wire::{self, Msg, ResultMsg};
+        use uepmm::cluster::{CacheKey, EncodedBlockCache};
+        use uepmm::coordinator::EncodedA;
+
+        // wire codec: one result frame at the fig9/6 payload size
+        let mut r = rng.split();
+        let payload = Matrix::randn(50, 50, 0.0, 1.0, &mut r);
+        let msg = Msg::Result(ResultMsg {
+            request_id: 1,
+            slot: 0,
+            delay: 0.5,
+            payload,
+        });
+        h.bench("cluster/wire: encode+decode 50x50 result frame", || {
+            let bytes = wire::encode(&msg);
+            std::hint::black_box(wire::decode_frame(&bytes).unwrap());
+        });
+
+        // encoded-block cache: the per-request A-side cost a miss pays
+        // (split + packet draw + every W_A) vs the hit's lookup
+        let (a2, _) = spec_rxc.sample_matrices(&mut r);
+        h.bench("cluster/encode-cache miss: EncodedA::encode 30 pkts", || {
+            let mut rr = Pcg64::seed_from(5);
+            std::hint::black_box(
+                EncodedA::encode(&spec_rxc.part, ew.clone(), &cm, 30, &a2, &mut rr)
+                    .unwrap(),
+            );
+        });
+        let mut cache = EncodedBlockCache::new(4);
+        let key = CacheKey::new(0, &spec_rxc.part, &ew, &cm, 30);
+        let mut rr = Pcg64::seed_from(5);
+        cache
+            .get_or_insert_with(key.clone(), || {
+                EncodedA::encode(&spec_rxc.part, ew.clone(), &cm, 30, &a2, &mut rr)
+            })
+            .unwrap();
+        h.bench("cluster/encode-cache hit: lookup", || {
+            let (enc, hit) = cache
+                .get_or_insert_with(key.clone(), || unreachable!("cached"))
+                .unwrap();
+            assert!(hit);
+            std::hint::black_box(enc.workers());
+        });
+    }
+
     // ---------------- matmul tiers (native engine) ---------------------
     for &(m, k, n) in &[(64usize, 288usize, 64usize), (300, 900, 300)] {
         let a = Matrix::randn(m, k, 0.0, 1.0, &mut rng);

@@ -1,0 +1,298 @@
+//! The encoded-block cache: reuse the `A`-side of plan preparation
+//! across a request stream.
+//!
+//! The DNN-training workload (paper §VII) multiplies the *same* weight
+//! matrix `A` against a fresh activation matrix `B` on every request.
+//! Splitting `A`, drawing the coded packet set, and materializing every
+//! worker's left factor `W_A` are all `B`-independent, so the cluster
+//! server caches that work ([`crate::coordinator::EncodedA`]) keyed by
+//! `(matrix id, partitioning, code spec, class map, worker count)` and only the
+//! `B`-side (split + `W_B`) is rebuilt per request. Hit/miss/eviction
+//! counters are surfaced through [`CacheStats`] in the server's
+//! per-request stats.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::coding::CodeSpec;
+use crate::coordinator::EncodedA;
+use crate::partition::{ClassMap, Paradigm, Partitioning};
+
+/// Cache identity of one encoding. Two requests share an entry only if
+/// they multiply the same logical `A` (caller-assigned `matrix_id`)
+/// under the same partition geometry, the same fully-specified code
+/// (including the window polynomial), the same importance-class
+/// assignment (the window draw in `generate_packets` depends on it),
+/// and the same worker count.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub matrix_id: u64,
+    paradigm: u8,
+    n: usize,
+    p: usize,
+    m: usize,
+    u: usize,
+    h: usize,
+    q: usize,
+    /// Full code spec rendered to text (captures kind, style, and the
+    /// window polynomial's probabilities).
+    code: String,
+    /// The class structure the packets were drawn under: sub-product
+    /// classes plus factor-block levels (rank-one NOW packets combine
+    /// blocks by level).
+    classes: String,
+    workers: usize,
+}
+
+impl CacheKey {
+    pub fn new(
+        matrix_id: u64,
+        part: &Partitioning,
+        spec: &CodeSpec,
+        cm: &ClassMap,
+        workers: usize,
+    ) -> CacheKey {
+        CacheKey {
+            matrix_id,
+            paradigm: match part.paradigm {
+                Paradigm::RowTimesCol => 0,
+                Paradigm::ColTimesRow => 1,
+            },
+            n: part.n,
+            p: part.p,
+            m: part.m,
+            u: part.u,
+            h: part.h,
+            q: part.q,
+            code: format!("{spec:?}"),
+            classes: format!(
+                "{:?}|{:?}|{:?}",
+                cm.class_of, cm.a_level, cm.b_level
+            ),
+            workers,
+        }
+    }
+}
+
+/// Monotone hit/miss/eviction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// An LRU cache of encoded `A`-sides. Capacity 0 disables caching (every
+/// lookup is a miss and nothing is stored).
+pub struct EncodedBlockCache {
+    map: HashMap<CacheKey, Arc<EncodedA>>,
+    /// Keys from least- to most-recently used.
+    order: VecDeque<CacheKey>,
+    capacity: usize,
+    stats: CacheStats,
+}
+
+impl EncodedBlockCache {
+    pub fn new(capacity: usize) -> Self {
+        EncodedBlockCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            capacity,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+
+    /// Fetch the encoding for `key`, building (and storing) it on a
+    /// miss. Returns the entry and whether it was a hit.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: CacheKey,
+        build: impl FnOnce() -> anyhow::Result<EncodedA>,
+    ) -> anyhow::Result<(Arc<EncodedA>, bool)> {
+        if let Some(entry) = self.map.get(&key) {
+            self.stats.hits += 1;
+            let entry = Arc::clone(entry);
+            self.touch(&key);
+            return Ok((entry, true));
+        }
+        self.stats.misses += 1;
+        let entry = Arc::new(build()?);
+        if self.capacity == 0 {
+            return Ok((entry, false));
+        }
+        while self.map.len() >= self.capacity {
+            match self.order.pop_front() {
+                Some(oldest) => {
+                    self.map.remove(&oldest);
+                    self.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        self.map.insert(key.clone(), Arc::clone(&entry));
+        self.order.push_back(key);
+        Ok((entry, false))
+    }
+
+    /// Move `key` to the most-recently-used end.
+    fn touch(&mut self, key: &CacheKey) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos).unwrap();
+            self.order.push_back(k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, WindowPolynomial};
+    use crate::linalg::Matrix;
+    use crate::partition::ClassMap;
+    use crate::rng::Pcg64;
+
+    fn setup() -> (Partitioning, ClassMap, Matrix) {
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let mut rng = Pcg64::seed_from(5);
+        let a = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let cm = ClassMap::from_matrices(&part, &a, &b, 3);
+        (part, cm, a)
+    }
+
+    fn encode(
+        part: &Partitioning,
+        cm: &ClassMap,
+        a: &Matrix,
+        seed: u64,
+    ) -> EncodedA {
+        let mut rng = Pcg64::seed_from(seed);
+        EncodedA::encode(
+            part,
+            CodeSpec::stacked(CodeKind::Mds),
+            cm,
+            6,
+            a,
+            &mut rng,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hit_miss_accounting_and_reuse() {
+        let (part, cm, a) = setup();
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let mut cache = EncodedBlockCache::new(4);
+        let k0 = CacheKey::new(0, &part, &spec, &cm, 6);
+
+        let (e0, hit) =
+            cache.get_or_insert_with(k0.clone(), || Ok(encode(&part, &cm, &a, 1))).unwrap();
+        assert!(!hit);
+        let (e1, hit) = cache
+            .get_or_insert_with(k0.clone(), || panic!("must not rebuild on hit"))
+            .unwrap();
+        assert!(hit);
+        // the hit returns the *same* encoding (packets identical)
+        assert_eq!(e0.packets, e1.packets);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+
+        // a different matrix id is a different entry
+        let k1 = CacheKey::new(1, &part, &spec, &cm, 6);
+        let (_, hit) =
+            cache.get_or_insert_with(k1, || Ok(encode(&part, &cm, &a, 2))).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, evictions: 0 });
+    }
+
+    #[test]
+    fn key_distinguishes_code_geometry_classes_and_workers() {
+        let (part, cm, _) = setup();
+        let mds = CodeSpec::stacked(CodeKind::Mds);
+        let ew = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
+        let key = |part: &Partitioning, spec: &CodeSpec, cm: &ClassMap, w: usize| {
+            CacheKey::new(0, part, spec, cm, w)
+        };
+        assert_ne!(key(&part, &mds, &cm, 6), key(&part, &ew, &cm, 6));
+        assert_ne!(key(&part, &mds, &cm, 6), key(&part, &mds, &cm, 9));
+        let other = Partitioning::rxc(3, 3, 2, 4, 2);
+        assert_ne!(key(&part, &mds, &cm, 6), key(&other, &mds, &cm, 6));
+        // different window polynomials must not collide even though the
+        // code kind label is the same
+        let gamma = WindowPolynomial::new(&[0.5, 0.3, 0.2]);
+        let ew2 = CodeSpec::stacked(CodeKind::EwUep(gamma));
+        assert_ne!(key(&part, &ew, &cm, 6), key(&part, &ew2, &cm, 6));
+        // and neither may two class maps: the packet draw depends on the
+        // class assignment, so reusing across maps would be incoherent
+        let pair = crate::partition::default_pair_classes(3);
+        let cm2 = ClassMap::from_levels(
+            &part,
+            vec![2, 1, 0],
+            vec![2, 1, 0],
+            &pair,
+        );
+        assert_ne!(key(&part, &ew, &cm, 6), key(&part, &ew, &cm2, 6));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let (part, cm, a) = setup();
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let mut cache = EncodedBlockCache::new(2);
+        let key = |id| CacheKey::new(id, &part, &spec, &cm, 6);
+        for id in 0..2 {
+            cache
+                .get_or_insert_with(key(id), || Ok(encode(&part, &cm, &a, id)))
+                .unwrap();
+        }
+        // touch id 0 so id 1 is the LRU entry
+        let (_, hit) = cache
+            .get_or_insert_with(key(0), || panic!("0 is cached"))
+            .unwrap();
+        assert!(hit);
+        cache.get_or_insert_with(key(2), || Ok(encode(&part, &cm, &a, 2))).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // id 1 was evicted; id 0 survived
+        let (_, hit) = cache
+            .get_or_insert_with(key(0), || panic!("0 must have survived"))
+            .unwrap();
+        assert!(hit);
+        let (_, hit) =
+            cache.get_or_insert_with(key(1), || Ok(encode(&part, &cm, &a, 1))).unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let (part, cm, a) = setup();
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let mut cache = EncodedBlockCache::new(0);
+        let key = CacheKey::new(0, &part, &spec, &cm, 6);
+        for _ in 0..3 {
+            let (_, hit) = cache
+                .get_or_insert_with(key.clone(), || Ok(encode(&part, &cm, &a, 1)))
+                .unwrap();
+            assert!(!hit);
+        }
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 3);
+    }
+}

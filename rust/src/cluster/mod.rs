@@ -1,0 +1,45 @@
+//! The networked coordinator/worker runtime: the paper's protocol
+//! (Fig. 2) across process and socket boundaries.
+//!
+//! The virtual-time simulator ([`crate::sim`]) and the threaded service
+//! ([`crate::coordinator::run_service`]) model stragglers; this
+//! subsystem *has* them: workers are separate agents behind a
+//! transport, results arrive when they arrive, connections drop, and
+//! the coordinator decodes whatever made it by the deadline.
+//!
+//! Layers:
+//! * [`wire`] — length-prefixed binary frames (versioned header, f64
+//!   matrix payloads bit-exact on the wire);
+//! * [`transport`] — [`Transport`]/[`Connection`] over TCP
+//!   ([`TcpTransport`]) or deterministic in-process channels
+//!   ([`LoopbackTransport`]), both carrying identical bytes;
+//! * [`worker`] — the worker agent loop computing coded sub-products
+//!   through any [`crate::runtime::ExecEngine`];
+//! * [`server`] — the coordinator: worker registry with
+//!   heartbeat/eviction, round-robin dispatch with failover, per-request
+//!   deadlines, progressive decode, scoring;
+//! * [`cache`] — the encoded-block cache reusing the `B`-independent
+//!   half of plan preparation across a request stream (the DNN-training
+//!   shape: same weights `A`, fresh activations `B`).
+//!
+//! Entry points: `uepmm serve` / `uepmm worker` (see `main.rs`) for the
+//! TCP deployment, [`ClusterServer`] + [`spawn_loopback_workers`] for
+//! embedded/loopback use.
+
+pub mod cache;
+pub mod server;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use cache::{CacheKey, CacheStats, EncodedBlockCache};
+pub use server::{
+    ClusterConfig, ClusterOutcome, ClusterServer, CodingConfig, DeadlineMode,
+    MatmulRequest, WorkerInfo,
+};
+pub use transport::{
+    loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,
+    TcpConn, TcpTransport, Transport,
+};
+pub use wire::{JobMsg, Msg, ResultMsg, WireError};
+pub use worker::{run_worker, spawn_loopback_workers, WorkerConfig, WorkerStats};

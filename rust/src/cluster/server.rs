@@ -1,0 +1,986 @@
+//! The coordinator server: the parameter server of paper Fig. 2 running
+//! against remote worker agents.
+//!
+//! Responsibilities:
+//! * **registry** — accept worker connections (any [`Transport`]),
+//!   handshake, track liveness, evict workers that stop answering
+//!   heartbeats or whose connections fail;
+//! * **request pipeline** — serve a stream of multiplication requests,
+//!   each with its own deadline: dispatch coded jobs round-robin across
+//!   live workers (failing over when a send hits a dead connection),
+//!   feed arriving results into the incremental
+//!   [`DecodeState`], stop at the deadline, and score the decoded
+//!   approximation;
+//! * **encoded-block cache** — reuse the `B`-independent half of plan
+//!   preparation across requests that multiply the same `A`
+//!   (see [`super::cache`]).
+//!
+//! Two deadline disciplines:
+//! * [`DeadlineMode::Virtual`] — every result carries a virtual
+//!   completion time (injected by the coordinator from a seeded latency
+//!   model, or self-sampled by the worker); the coordinator collects all
+//!   results, absorbs them in `(delay, slot)` order, and accepts those
+//!   with `delay ≤ T_max`. Deterministic: same seed ⇒ bit-identical
+//!   outcome, which is what the loopback test suite runs.
+//! * [`DeadlineMode::Wall`] — the deadline is `T_max · time_scale` wall
+//!   seconds; whatever physically arrives in time is decoded
+//!   progressively and stragglers are cut off, exactly the paper's
+//!   protocol. This is the TCP deployment discipline.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coding::{CodeSpec, DecodeState, Packet, UnknownSpace};
+use crate::coordinator::{
+    assemble_outcome, build_job_matrices, score_outcome, EncodedA, Outcome, Plan,
+};
+use crate::latency::LatencyModel;
+use crate::linalg::{matmul, Matrix};
+use crate::partition::{ClassMap, Partitioning};
+use crate::rng::Pcg64;
+
+use super::cache::{CacheKey, CacheStats, EncodedBlockCache};
+use super::transport::{Connection, Transport};
+use super::wire::{JobMsg, Msg, ResultMsg};
+
+/// Per-connection poll slice while multiplexing receives.
+const POLL_SLICE: Duration = Duration::from_millis(1);
+/// Workers pace a paced (injected-delay) reply by at most this factor of
+/// the request deadline — sleeping much past the deadline only wastes
+/// wall time on results that will be counted late anyway.
+const SLEEP_CAP_FACTOR: f64 = 1.05;
+
+/// How request deadlines are enforced (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlineMode {
+    Virtual,
+    Wall,
+}
+
+/// Coordinator server configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub deadline: DeadlineMode,
+    /// Wall seconds per virtual time unit: the wall deadline in `Wall`
+    /// mode (must be > 0 there), and the pacing of injected delays in
+    /// `Virtual` mode (0 = no pacing, run as fast as possible).
+    pub time_scale: f64,
+    /// How long a worker may take to answer a heartbeat before eviction.
+    pub heartbeat_timeout: Duration,
+    /// Hard stop for `Virtual`-mode collection (guards against a hung
+    /// worker stalling a deterministic run forever).
+    pub collect_timeout: Duration,
+    /// Post-deadline grace period in `Wall` mode for counting (and
+    /// draining) late results.
+    pub late_drain: Duration,
+    /// Encoded-block cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            deadline: DeadlineMode::Virtual,
+            time_scale: 0.0,
+            heartbeat_timeout: Duration::from_secs(2),
+            collect_timeout: Duration::from_secs(60),
+            late_drain: Duration::from_millis(50),
+            cache_capacity: 16,
+        }
+    }
+}
+
+/// The coding setup a request stream is served under. Classes are pinned
+/// (`cm`) so the packet draw — and therefore the cache — is coherent
+/// across requests.
+#[derive(Clone, Debug)]
+pub struct CodingConfig {
+    pub part: Partitioning,
+    pub spec: CodeSpec,
+    pub cm: ClassMap,
+    /// Coded packets (= jobs) per request.
+    pub workers: usize,
+    /// Coordinator-injected straggle model for `Virtual`-mode runs
+    /// (sampled per job from the request stream's seeded RNG). `None`
+    /// leaves timing to the workers/transport.
+    pub latency: Option<LatencyModel>,
+}
+
+impl CodingConfig {
+    /// The paper's Ω fairness scaling (Remark 1).
+    pub fn omega(&self) -> f64 {
+        crate::latency::omega(self.part.num_products(), self.workers)
+    }
+}
+
+/// One multiplication request in a stream. `a_id` is the caller's stable
+/// identity for `A` (e.g. "layer-3 weights"): requests sharing an
+/// `a_id` share cached encodings.
+#[derive(Clone, Debug)]
+pub struct MatmulRequest {
+    pub a_id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+    /// Per-request deadline, in virtual time units.
+    pub t_max: f64,
+    /// Compute the exact product locally and score the approximation
+    /// against it. Evaluation only: at scale the local `A·B` dwarfs
+    /// dispatch + decode, so production streams should pass `false`
+    /// (the outcome's loss fields come back NaN).
+    pub score: bool,
+}
+
+/// Outcome of one served request, with cluster accounting on top of the
+/// decode [`Outcome`].
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    pub outcome: Outcome,
+    /// Results that arrived but missed the deadline.
+    pub late: usize,
+    /// Jobs successfully handed to a worker connection.
+    pub dispatched: usize,
+    /// Wall time the request took end to end.
+    pub wall: Duration,
+    /// `Some(hit)` when served through the encoded-block cache.
+    pub cache_hit: Option<bool>,
+}
+
+impl ClusterOutcome {
+    /// Dispatched jobs whose results were never seen for this request:
+    /// dead workers and lost connections, but in `Wall` mode also any
+    /// straggler result arriving after the post-deadline grace window
+    /// (the worker may be perfectly healthy — its result is simply
+    /// counted against the request it missed).
+    pub fn missing(&self) -> usize {
+        self.dispatched - self.outcome.received - self.late
+    }
+}
+
+/// Registry view of one worker (for logs and stats).
+#[derive(Clone, Debug)]
+pub struct WorkerInfo {
+    pub id: u64,
+    pub name: String,
+    pub alive: bool,
+    pub jobs_done: u64,
+}
+
+struct WorkerSlot {
+    id: u64,
+    name: String,
+    conn: Box<dyn Connection>,
+    /// Liveness is decided actively: send/recv failures and missed
+    /// heartbeat acks flip this; there is no passive staleness timer.
+    alive: bool,
+    jobs_done: u64,
+    /// In-flight jobs of the *current* request.
+    pending: usize,
+}
+
+enum Poll {
+    Result(ResultMsg),
+    Idle,
+    Dead,
+}
+
+struct Core {
+    st: DecodeState,
+    received: usize,
+    late: usize,
+    dispatched: usize,
+    wall: Duration,
+}
+
+/// The coordinator server. See module docs.
+pub struct ClusterServer {
+    cfg: ClusterConfig,
+    workers: Vec<WorkerSlot>,
+    cache: EncodedBlockCache,
+    next_request_id: u64,
+    next_worker_id: u64,
+    next_nonce: u64,
+}
+
+impl ClusterServer {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let cache = EncodedBlockCache::new(cfg.cache_capacity);
+        ClusterServer {
+            cfg,
+            workers: Vec::new(),
+            cache,
+            next_request_id: 1,
+            next_worker_id: 1,
+            next_nonce: 1,
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Number of workers currently considered alive.
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    pub fn worker_info(&self) -> Vec<WorkerInfo> {
+        self.workers
+            .iter()
+            .map(|w| WorkerInfo {
+                id: w.id,
+                name: w.name.clone(),
+                alive: w.alive,
+                jobs_done: w.jobs_done,
+            })
+            .collect()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Handshake one incoming connection into the registry.
+    pub fn register(
+        &mut self,
+        mut conn: Box<dyn Connection>,
+        timeout: Duration,
+    ) -> Result<u64> {
+        match conn.recv_timeout(Some(timeout)) {
+            Ok(Some(Msg::Hello { agent })) => {
+                let id = self.next_worker_id;
+                self.next_worker_id += 1;
+                conn.send(&Msg::Welcome { worker_id: id })
+                    .map_err(|e| anyhow::anyhow!("welcome to {agent} failed: {e}"))?;
+                self.workers.push(WorkerSlot {
+                    id,
+                    name: agent,
+                    conn,
+                    alive: true,
+                    jobs_done: 0,
+                    pending: 0,
+                });
+                Ok(id)
+            }
+            Ok(Some(other)) => {
+                anyhow::bail!("expected hello from {}, got {}", conn.peer(), other.name())
+            }
+            Ok(None) => anyhow::bail!("registration from {} timed out", conn.peer()),
+            Err(e) => anyhow::bail!("registration from {} failed: {e}", conn.peer()),
+        }
+    }
+
+    /// Accept and register up to `n` workers within `timeout`. Returns
+    /// how many joined. A connection that fails the handshake (e.g. a
+    /// stray non-worker hitting the port) is dropped and accepting
+    /// continues; only transport-level failures abort.
+    pub fn accept_workers(
+        &mut self,
+        transport: &mut dyn Transport,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let deadline = Instant::now() + timeout;
+        let mut accepted = 0;
+        while accepted < n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let slice = (deadline - now).min(Duration::from_millis(100));
+            match transport.accept_timeout(slice) {
+                Ok(Some(conn)) => {
+                    // the handshake may not overrun the caller's accept
+                    // deadline (a silent stray connection would otherwise
+                    // stall registration for its full grace period)
+                    let handshake = Duration::from_secs(10)
+                        .min(deadline.saturating_duration_since(Instant::now()))
+                        .max(Duration::from_millis(100));
+                    match self.register(conn, handshake) {
+                        Ok(_) => accepted += 1,
+                        Err(e) => eprintln!("rejected connection: {e}"),
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => anyhow::bail!("accept failed: {e}"),
+            }
+        }
+        Ok(accepted)
+    }
+
+    /// Ping every live worker and evict the ones that do not ack within
+    /// the heartbeat timeout (or whose connection fails). Returns the
+    /// evicted worker ids.
+    pub fn heartbeat(&mut self) -> Vec<u64> {
+        let alive_at_entry: Vec<usize> = (0..self.workers.len())
+            .filter(|&wi| self.workers[wi].alive)
+            .collect();
+        let nonce = self.next_nonce;
+        self.next_nonce += 1;
+        let mut waiting = Vec::new();
+        for &wi in &alive_at_entry {
+            match self.workers[wi].conn.send(&Msg::Heartbeat { nonce }) {
+                Ok(()) => waiting.push(wi),
+                Err(_) => self.workers[wi].alive = false,
+            }
+        }
+        let deadline = Instant::now() + self.cfg.heartbeat_timeout;
+        let mut acked = vec![false; self.workers.len()];
+        loop {
+            let outstanding = waiting
+                .iter()
+                .any(|&wi| !acked[wi] && self.workers[wi].alive);
+            if !outstanding || Instant::now() >= deadline {
+                break;
+            }
+            for &wi in &waiting {
+                if acked[wi] || !self.workers[wi].alive {
+                    continue;
+                }
+                match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
+                    Ok(Some(Msg::HeartbeatAck { nonce: n })) if n == nonce => {
+                        acked[wi] = true;
+                    }
+                    // any frame from the worker proves it is alive and
+                    // making progress — a paced straggler's ack can sit
+                    // behind its whole job backlog, and evicting it for
+                    // that would throw away healthy capacity
+                    Ok(Some(Msg::Result(_))) | Ok(Some(Msg::HeartbeatAck { .. })) => {
+                        acked[wi] = true;
+                    }
+                    Ok(Some(_)) => self.workers[wi].alive = false,
+                    Ok(None) => {}
+                    Err(_) => self.workers[wi].alive = false,
+                }
+            }
+        }
+        let mut evicted = Vec::new();
+        for &wi in &alive_at_entry {
+            if self.workers[wi].alive && !acked[wi] && waiting.contains(&wi) {
+                self.workers[wi].alive = false;
+            }
+            if !self.workers[wi].alive {
+                evicted.push(self.workers[wi].id);
+            }
+        }
+        evicted
+    }
+
+    /// Send every worker a shutdown (best effort, including evicted
+    /// ones — a worker evicted for slowness rather than death still
+    /// deserves an orderly exit) and close the registry.
+    ///
+    /// Connections stay open (the server object holds them); callers
+    /// that exit the process right afterwards should use
+    /// [`Self::shutdown_graceful`] so a backlogged straggler still gets
+    /// the queued shutdown frame instead of a connection reset.
+    pub fn shutdown(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.conn.send(&Msg::Shutdown);
+            w.alive = false;
+        }
+    }
+
+    /// [`Self::shutdown`], then drain every connection until the peer
+    /// closes it or `timeout` elapses. A worker still sleeping through
+    /// its job backlog keeps writing results; if the coordinator process
+    /// simply exited, those writes would trigger a TCP reset that
+    /// discards the worker's unread receive buffer — including the
+    /// shutdown frame — and turn a clean exit into a connection loss.
+    pub fn shutdown_graceful(&mut self, timeout: Duration) {
+        self.shutdown();
+        let deadline = Instant::now() + timeout;
+        let mut open: Vec<bool> = self.workers.iter().map(|_| true).collect();
+        while open.iter().any(|&o| o) && Instant::now() < deadline {
+            for (wi, w) in self.workers.iter_mut().enumerate() {
+                if !open[wi] {
+                    continue;
+                }
+                match w.conn.recv_timeout(Some(POLL_SLICE)) {
+                    Ok(Some(_)) => {} // drain backlog results quietly
+                    Ok(None) => {}
+                    Err(_) => open[wi] = false, // peer closed: fully drained
+                }
+            }
+        }
+    }
+
+    /// Serve one pre-built [`Plan`] (no cache involvement): dispatch its
+    /// packets, collect to the deadline, decode, score. `delays` are
+    /// optional coordinator-injected virtual completion times, one per
+    /// packet.
+    pub fn serve_plan(
+        &mut self,
+        plan: &Plan,
+        t_max: f64,
+        delays: Option<&[f64]>,
+    ) -> Result<ClusterOutcome> {
+        let jobs: Vec<(Arc<Matrix>, Matrix)> = plan
+            .packets
+            .iter()
+            .map(|p| {
+                let (wa, wb) = build_job_matrices(
+                    &plan.part,
+                    &plan.a_blocks,
+                    &plan.b_blocks,
+                    &p.recipe,
+                );
+                (Arc::new(wa), wb)
+            })
+            .collect();
+        let core = self.serve_core(&plan.space, &plan.packets, jobs, delays, t_max)?;
+        let outcome =
+            score_outcome(&plan.part, &plan.cm, &plan.c_true, &core.st, core.received);
+        Ok(ClusterOutcome {
+            outcome,
+            late: core.late,
+            dispatched: core.dispatched,
+            wall: core.wall,
+            cache_hit: None,
+        })
+    }
+
+    /// Serve one request of a stream through the encoded-block cache:
+    /// on a hit the `A`-side (split + packet draw + every `W_A`) is
+    /// reused and only the `B`-side is built.
+    pub fn serve_request(
+        &mut self,
+        coding: &CodingConfig,
+        req: &MatmulRequest,
+        rng: &mut Pcg64,
+    ) -> Result<ClusterOutcome> {
+        let key = CacheKey::new(
+            req.a_id,
+            &coding.part,
+            &coding.spec,
+            &coding.cm,
+            coding.workers,
+        );
+        let (enc, hit) = self.cache.get_or_insert_with(key, || {
+            EncodedA::encode(
+                &coding.part,
+                coding.spec.clone(),
+                &coding.cm,
+                coding.workers,
+                &req.a,
+                rng,
+            )
+        })?;
+        let delays: Option<Vec<f64>> = coding.latency.as_ref().map(|m| {
+            let omega = coding.omega();
+            (0..enc.workers()).map(|_| m.sample_scaled(omega, rng)).collect()
+        });
+        let b_blocks = coding.part.split_b(&req.b);
+        // cache hits hand out Arc handles: no W_A deep copy per request
+        let jobs: Vec<(Arc<Matrix>, Matrix)> = (0..enc.workers())
+            .map(|w| (Arc::clone(&enc.wa[w]), enc.job_b(&b_blocks, w)))
+            .collect();
+        let core =
+            self.serve_core(&enc.space, &enc.packets, jobs, delays.as_deref(), req.t_max)?;
+        let outcome = if req.score {
+            let c_true = matmul(&req.a, &req.b);
+            score_outcome(&coding.part, &coding.cm, &c_true, &core.st, core.received)
+        } else {
+            assemble_outcome(&coding.part, &coding.cm, &core.st, core.received)
+        };
+        Ok(ClusterOutcome {
+            outcome,
+            late: core.late,
+            dispatched: core.dispatched,
+            wall: core.wall,
+            cache_hit: Some(hit),
+        })
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Dispatch + collect + decode for one request.
+    fn serve_core(
+        &mut self,
+        space: &UnknownSpace,
+        packets: &[Packet],
+        jobs: Vec<(Arc<Matrix>, Matrix)>,
+        delays: Option<&[f64]>,
+        t_max: f64,
+    ) -> Result<Core> {
+        anyhow::ensure!(
+            self.live_workers() > 0,
+            "no live workers registered with the coordinator"
+        );
+        anyhow::ensure!(jobs.len() == packets.len(), "one job per packet");
+        if let Some(d) = delays {
+            anyhow::ensure!(d.len() == jobs.len(), "one injected delay per job");
+        }
+        if self.cfg.deadline == DeadlineMode::Wall {
+            anyhow::ensure!(
+                self.cfg.time_scale > 0.0,
+                "Wall deadline mode needs time_scale > 0"
+            );
+        }
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        // in-flight tracking is per request
+        for w in &mut self.workers {
+            w.pending = 0;
+        }
+        let start = Instant::now();
+
+        // ---- dispatch round-robin with failover --------------------------
+        let pace = self.cfg.time_scale;
+        let mut dispatched = 0usize;
+        let mut rr = 0usize;
+        for (slot, (wa, wb)) in jobs.into_iter().enumerate() {
+            let injected = delays.map(|d| d[slot]);
+            let sleep_secs = match injected {
+                Some(d) if pace > 0.0 => d.min(t_max * SLEEP_CAP_FACTOR) * pace,
+                _ => 0.0,
+            };
+            let msg = Msg::Job(JobMsg {
+                request_id,
+                slot: slot as u32,
+                injected_delay: injected,
+                sleep_secs,
+                wa,
+                wb,
+            });
+            let mut sent = false;
+            for _ in 0..self.workers.len() {
+                let wi = rr % self.workers.len();
+                rr += 1;
+                if !self.workers[wi].alive {
+                    continue;
+                }
+                match self.workers[wi].conn.send(&msg) {
+                    Ok(()) => {
+                        self.workers[wi].pending += 1;
+                        dispatched += 1;
+                        sent = true;
+                        break;
+                    }
+                    Err(_) => self.workers[wi].alive = false,
+                }
+            }
+            if !sent {
+                // every worker died mid-dispatch; whatever already went
+                // out may still decode something
+                break;
+            }
+        }
+
+        // ---- collect -----------------------------------------------------
+        // Jobs stranded on workers that died *during* dispatch (accepted
+        // an earlier send, then failed a later one) will never arrive:
+        // write them off now or the collect loop would wait for them
+        // until the hard timeout.
+        let mut outstanding = dispatched;
+        for w in &mut self.workers {
+            if !w.alive && w.pending > 0 {
+                outstanding -= w.pending;
+                w.pending = 0;
+            }
+        }
+        let mut st = DecodeState::new(space.clone());
+        let mut received = 0usize;
+        let mut late = 0usize;
+        match self.cfg.deadline {
+            DeadlineMode::Virtual => {
+                // deterministic: gather everything, then absorb in
+                // (delay, slot) order and apply the virtual deadline
+                let hard = start + self.cfg.collect_timeout;
+                let mut results: Vec<ResultMsg> = Vec::with_capacity(outstanding);
+                while outstanding > 0 && Instant::now() < hard {
+                    let polled = self.poll_round(request_id, &mut outstanding, &mut |r| {
+                        results.push(r)
+                    });
+                    if polled == 0 {
+                        break; // nothing left that could deliver
+                    }
+                }
+                results.sort_by(|x, y| {
+                    x.delay.total_cmp(&y.delay).then(x.slot.cmp(&y.slot))
+                });
+                for r in results {
+                    if (r.slot as usize) >= packets.len() {
+                        continue; // corrupt slot from a broken worker
+                    }
+                    if r.delay <= t_max {
+                        st.add_packet(&packets[r.slot as usize], Some(r.payload));
+                        received += 1;
+                    } else {
+                        late += 1;
+                    }
+                }
+            }
+            DeadlineMode::Wall => {
+                // the paper's protocol: decode whatever arrives by the
+                // wall deadline, cut off the rest
+                let deadline = start + Duration::from_secs_f64(t_max * pace);
+                while outstanding > 0 && Instant::now() < deadline {
+                    let polled = self.poll_round(request_id, &mut outstanding, &mut |r| {
+                        if (r.slot as usize) < packets.len() {
+                            st.add_packet(&packets[r.slot as usize], Some(r.payload));
+                            received += 1;
+                        }
+                    });
+                    if polled == 0 {
+                        break; // nothing left that could deliver
+                    }
+                }
+                // grace drain: count (and discard) stragglers so they do
+                // not pollute the next request's collection
+                let grace = Instant::now() + self.cfg.late_drain;
+                while outstanding > 0 && Instant::now() < grace {
+                    let polled =
+                        self.poll_round(request_id, &mut outstanding, &mut |_| late += 1);
+                    if polled == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(Core { st, received, late, dispatched, wall: start.elapsed() })
+    }
+
+    /// One poll pass over all workers with current-request jobs in
+    /// flight. Results for this request are handed to `on_result`;
+    /// `outstanding` is decremented per delivered result and per job
+    /// stranded on a worker that died. Returns how many workers were
+    /// pollable — 0 means nothing outstanding can ever arrive.
+    fn poll_round(
+        &mut self,
+        request_id: u64,
+        outstanding: &mut usize,
+        on_result: &mut dyn FnMut(ResultMsg),
+    ) -> usize {
+        let mut pollable = 0;
+        for wi in 0..self.workers.len() {
+            if !self.workers[wi].alive || self.workers[wi].pending == 0 {
+                continue;
+            }
+            pollable += 1;
+            match self.poll_worker(wi, request_id) {
+                Poll::Result(r) => {
+                    *outstanding -= 1;
+                    on_result(r);
+                }
+                Poll::Idle => {}
+                Poll::Dead => {
+                    *outstanding -= self.workers[wi].pending;
+                    self.workers[wi].pending = 0;
+                }
+            }
+        }
+        pollable
+    }
+
+    fn poll_worker(&mut self, wi: usize, request_id: u64) -> Poll {
+        let w = &mut self.workers[wi];
+        match w.conn.recv_timeout(Some(POLL_SLICE)) {
+            Ok(Some(Msg::Result(r))) => {
+                if r.request_id == request_id && w.pending > 0 {
+                    w.pending -= 1;
+                    w.jobs_done += 1;
+                    Poll::Result(r)
+                } else {
+                    // straggler from an earlier request: drop
+                    Poll::Idle
+                }
+            }
+            Ok(Some(Msg::HeartbeatAck { .. })) => Poll::Idle,
+            Ok(Some(_)) => {
+                // protocol violation: only workers speak here
+                w.alive = false;
+                Poll::Dead
+            }
+            Ok(None) => Poll::Idle,
+            Err(_) => {
+                w.alive = false;
+                Poll::Dead
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::{LoopbackDialer, LoopbackTransport};
+    use crate::cluster::worker::{spawn_loopback_workers, WorkerConfig, WorkerStats};
+    use crate::coding::CodeKind;
+    use crate::coordinator::Coordinator;
+    use crate::runtime::NativeEngine;
+    use std::thread::JoinHandle;
+
+    // MDS keeps full-decode assertions seed-independent: any ≥ 9
+    // received packets recover all 9 sub-products.
+    fn small_plan(workers: usize, seed: u64) -> Plan {
+        let mut rng = Pcg64::seed_from(seed);
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        Plan::build(&part, spec, 3, workers, &a, &b, &mut rng).unwrap()
+    }
+
+    fn start_cluster(
+        threads: usize,
+        cfg: ClusterConfig,
+    ) -> (ClusterServer, LoopbackDialer, Vec<JoinHandle<anyhow::Result<WorkerStats>>>)
+    {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "t".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, threads, &wcfg);
+        let mut server = ClusterServer::new(cfg);
+        let n = server
+            .accept_workers(&mut transport, threads, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(n, threads);
+        (server, dialer, handles)
+    }
+
+    fn finish(
+        mut server: ClusterServer,
+        handles: Vec<JoinHandle<anyhow::Result<WorkerStats>>>,
+    ) {
+        server.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn virtual_mode_is_deterministic_and_thread_count_independent() {
+        let plan = small_plan(18, 7);
+        let mut drng = Pcg64::seed_from(13);
+        let delays: Vec<f64> = (0..18)
+            .map(|_| LatencyModel::exp(1.0).sample_scaled(0.5, &mut drng))
+            .collect();
+        let t_max = 0.8;
+        let run = |threads: usize| {
+            let (mut server, _dialer, handles) =
+                start_cluster(threads, ClusterConfig::default());
+            let out = server.serve_plan(&plan, t_max, Some(&delays)).unwrap();
+            finish(server, handles);
+            out
+        };
+        let o1 = run(3);
+        let o2 = run(5);
+        assert_eq!(o1.outcome.received, o2.outcome.received);
+        assert_eq!(o1.outcome.recovered, o2.outcome.recovered);
+        assert_eq!(o1.late, o2.late);
+        // bit-identical decode regardless of worker thread count
+        assert_eq!(o1.outcome.c_hat.data(), o2.outcome.c_hat.data());
+        assert_eq!(o1.outcome.loss.to_bits(), o2.outcome.loss.to_bits());
+
+        // and it matches the virtual-time honest coordinator on the same
+        // arrivals bit for bit (same serial engine, same absorb order)
+        let coord = Coordinator::new(NativeEngine::serial());
+        let honest = coord.run(&plan, &delays, t_max).unwrap();
+        assert_eq!(honest.received, o1.outcome.received);
+        assert_eq!(honest.recovered, o1.outcome.recovered);
+        assert_eq!(honest.c_hat.data(), o1.outcome.c_hat.data());
+    }
+
+    #[test]
+    fn late_results_are_counted_not_decoded() {
+        let plan = small_plan(12, 3);
+        // half the workers miss the virtual deadline by construction
+        let delays: Vec<f64> =
+            (0..12).map(|w| if w % 2 == 0 { 0.1 } else { 9.0 }).collect();
+        let (mut server, _dialer, handles) =
+            start_cluster(3, ClusterConfig::default());
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        finish(server, handles);
+        assert_eq!(out.dispatched, 12);
+        assert_eq!(out.outcome.received, 6);
+        assert_eq!(out.late, 6);
+        assert_eq!(out.missing(), 0);
+        assert!(out.outcome.normalized_loss <= 1.0 + 1e-12);
+    }
+
+    fn coding_config(latency: Option<LatencyModel>, workers: usize) -> CodingConfig {
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let pair = crate::partition::default_pair_classes(3);
+        let cm = ClassMap::from_levels(
+            &part,
+            vec![0, 1, 2],
+            vec![0, 1, 2],
+            &pair,
+        );
+        CodingConfig {
+            part,
+            spec: CodeSpec::stacked(CodeKind::Mds),
+            cm,
+            workers,
+            latency,
+        }
+    }
+
+    #[test]
+    fn request_stream_reuses_cached_encodings() {
+        let coding = coding_config(Some(LatencyModel::exp(1.0)), 14);
+        let (mut server, _dialer, handles) =
+            start_cluster(3, ClusterConfig::default());
+        let mut rng = Pcg64::seed_from(31);
+        let mut mats = Pcg64::seed_from(32);
+        let a0 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+        let a1 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+        // the DNN-training shape: same A, fresh B every request
+        let stream = [(0u64, &a0), (0, &a0), (1, &a1), (0, &a0)];
+        let mut hits = Vec::new();
+        for &(a_id, a) in &stream {
+            let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+            let req =
+                MatmulRequest { a_id, a: a.clone(), b, t_max: 50.0, score: true };
+            let out = server.serve_request(&coding, &req, &mut rng).unwrap();
+            hits.push(out.cache_hit.unwrap());
+            // the deadline is generous: cached and fresh encodings alike
+            // must fully decode — a corrupted cached W_A could not
+            assert_eq!(out.outcome.recovered, 9);
+            assert!(out.outcome.normalized_loss < 1e-9);
+        }
+        assert_eq!(hits, vec![false, true, false, true]);
+        let stats = server.cache_stats();
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.misses, 2);
+        finish(server, handles);
+    }
+
+    #[test]
+    fn unscored_requests_skip_the_reference_product() {
+        // production shape: decode and assemble without ever computing
+        // the exact A·B locally — loss fields come back NaN
+        let coding = coding_config(Some(LatencyModel::exp(1.0)), 14);
+        let (mut server, _dialer, handles) =
+            start_cluster(2, ClusterConfig::default());
+        let mut rng = Pcg64::seed_from(41);
+        let mut mats = Pcg64::seed_from(42);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        let req = MatmulRequest { a_id: 0, a, b, t_max: 50.0, score: false };
+        let out = server.serve_request(&coding, &req, &mut rng).unwrap();
+        assert_eq!(out.outcome.recovered, 9);
+        assert!(out.outcome.loss.is_nan());
+        assert!(out.outcome.normalized_loss.is_nan());
+        finish(server, handles);
+    }
+
+    #[test]
+    fn dispatch_fails_over_when_a_worker_dies() {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        // a worker that registers and immediately vanishes
+        let mut ghost = dialer.dial("ghost").unwrap();
+        ghost.send(&Msg::Hello { agent: "ghost".to_string() }).unwrap();
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        let n = server
+            .accept_workers(&mut transport, 2, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(n, 2);
+        drop(ghost);
+
+        let plan = small_plan(10, 5);
+        let delays = vec![0.1; 10];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        // every job must have failed over to the live worker
+        assert_eq!(out.dispatched, 10);
+        assert_eq!(out.outcome.received, 10);
+        assert_eq!(out.outcome.recovered, 9);
+        assert!(out.outcome.normalized_loss < 1e-9);
+        assert_eq!(server.live_workers(), 1);
+        finish(server, handles);
+    }
+
+    #[test]
+    fn jobs_stranded_on_a_mid_dispatch_death_are_written_off() {
+        // A worker that accepts at least one job and then vanishes must
+        // not stall collection until the hard timeout: its in-flight
+        // jobs are written off (at dispatch or on the recv error) and
+        // the request finishes promptly with consistent accounting.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let ghost_conn = dialer.dial("ghost").unwrap();
+        let ghost = std::thread::spawn(move || {
+            let mut conn = ghost_conn;
+            conn.send(&Msg::Hello { agent: "ghost".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            // accept exactly one job, then die without replying
+            loop {
+                match conn.recv().unwrap() {
+                    Msg::Job(_) => break,
+                    _ => continue,
+                }
+            }
+        });
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        let n = server
+            .accept_workers(&mut transport, 2, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(n, 2);
+
+        let plan = small_plan(12, 6);
+        let delays = vec![0.1; 12];
+        let t0 = Instant::now();
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        ghost.join().unwrap();
+        // far below the 60 s collect_timeout: no spin on stranded jobs
+        assert!(t0.elapsed() < Duration::from_secs(10), "{:?}", t0.elapsed());
+        assert!(out.missing() > 0, "ghost jobs must be written off: {out:?}");
+        assert_eq!(
+            out.outcome.received + out.late + out.missing(),
+            out.dispatched
+        );
+        assert_eq!(server.live_workers(), 1);
+        finish(server, handles);
+    }
+
+    #[test]
+    fn heartbeat_evicts_silent_workers_and_service_continues() {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        // a worker that registers but never answers anything again (its
+        // connection stays open, so only the heartbeat can catch it)
+        let mut silent = dialer.dial("silent").unwrap();
+        silent.send(&Msg::Hello { agent: "silent".to_string() }).unwrap();
+        let cfg = ClusterConfig {
+            heartbeat_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let mut server = ClusterServer::new(cfg);
+        let n = server
+            .accept_workers(&mut transport, 2, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(n, 2);
+
+        let silent_id = server
+            .worker_info()
+            .iter()
+            .find(|w| w.name == "silent")
+            .unwrap()
+            .id;
+        let evicted = server.heartbeat();
+        assert_eq!(evicted, vec![silent_id]);
+        assert_eq!(server.live_workers(), 1);
+
+        // the stream keeps serving on the survivor
+        let plan = small_plan(8, 9);
+        let delays = vec![0.2; 8];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert_eq!(out.outcome.received, 8);
+        assert!(out.outcome.normalized_loss <= 1.0 + 1e-12);
+        // keep the silent connection alive until the end of the test
+        let _ = silent.send(&Msg::HeartbeatAck { nonce: 0 });
+        finish(server, handles);
+    }
+
+    #[test]
+    fn serving_with_no_workers_is_an_error() {
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        let plan = small_plan(4, 2);
+        assert!(server.serve_plan(&plan, 1.0, None).is_err());
+    }
+}

@@ -1,0 +1,442 @@
+//! Transports: how coordinator and workers exchange [`Msg`] frames.
+//!
+//! Two implementations of the same pair of abstractions:
+//!
+//! * [`TcpTransport`] / [`TcpConn`] — real sockets over `std::net`, the
+//!   deployment path (`uepmm serve` + `uepmm worker` processes). Here
+//!   straggling is a property of the transport and the host: scheduling,
+//!   the network stack, and worker load all show up as arrival jitter.
+//! * [`LoopbackTransport`] / [`LoopbackConn`] — in-process channels that
+//!   carry the *same encoded frames*, so every cluster test runs the
+//!   production byte format seeded and toolchain-only. Stragglers are
+//!   injected deterministically through per-job delays sampled from a
+//!   seeded [`crate::latency::LatencyModel`] (see
+//!   [`super::server::ClusterServer`]) instead of wall-clock races, which
+//!   is what makes loopback runs bit-identical across repetitions.
+//!
+//! A [`Connection`] is one bidirectional framed message stream; a
+//! [`Transport`] accepts incoming connections on the coordinator side.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Msg, WireError};
+
+/// Floor for socket read timeouts: `set_read_timeout(Some(ZERO))` is an
+/// error on every platform, and sub-millisecond timeouts burn CPU.
+const MIN_IO_WAIT: Duration = Duration::from_millis(1);
+
+/// Normalize "the peer went away" I/O errors to [`WireError::Closed`] so
+/// callers can tell an orderly departure from a real fault.
+fn io_to_wire(e: std::io::Error) -> WireError {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        BrokenPipe | ConnectionReset | ConnectionAborted | UnexpectedEof
+        | NotConnected => WireError::Closed,
+        _ => WireError::Io(e),
+    }
+}
+
+/// One bidirectional framed message stream between two cluster agents.
+///
+/// Known limitation: `send` blocks until the frame is handed to the
+/// transport. A TCP worker that stops draining its socket while its OS
+/// receive buffer is full can therefore stall the sender — at the
+/// current demo/test scales frames are far smaller than socket buffers,
+/// but very large jobs would want a write deadline (std `TcpStream` has
+/// no portable write timeout; this is the documented integration point
+/// for a nonblocking-writer upgrade).
+pub trait Connection: Send {
+    /// Send one message (blocking until the frame is written out).
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError>;
+
+    /// Receive the next message. `timeout = None` blocks until a message
+    /// arrives or the peer closes; `Some(d)` returns `Ok(None)` if no
+    /// complete frame arrived within `d`.
+    fn recv_timeout(&mut self, timeout: Option<Duration>)
+        -> Result<Option<Msg>, WireError>;
+
+    /// Peer label for logs.
+    fn peer(&self) -> &str;
+
+    /// Block until the next message (a closed peer is an error here).
+    fn recv(&mut self) -> Result<Msg, WireError> {
+        match self.recv_timeout(None)? {
+            Some(m) => Ok(m),
+            None => Err(WireError::Closed),
+        }
+    }
+}
+
+/// Coordinator-side listener: yields worker connections as they dial in.
+pub trait Transport {
+    /// Wait up to `timeout` for one incoming connection.
+    fn accept_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Box<dyn Connection>>, WireError>;
+
+    /// The address workers should dial (e.g. `127.0.0.1:7077`).
+    fn local_addr(&self) -> String;
+}
+
+// ------------------------------------------------------------------ TCP
+
+/// A framed connection over a TCP socket, with an internal receive
+/// buffer so a timeout mid-frame never loses bytes or framing sync.
+pub struct TcpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    peer: String,
+    /// The timeout currently programmed on the socket (avoids a syscall
+    /// per poll when the wait does not change).
+    current_timeout: Option<Duration>,
+}
+
+impl TcpConn {
+    /// Dial a coordinator at `addr`.
+    pub fn connect(addr: &str) -> Result<TcpConn, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(stream)
+    }
+
+    /// Wrap an accepted or connected stream.
+    pub fn from_stream(stream: TcpStream) -> Result<TcpConn, WireError> {
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(false)?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp-peer".to_string());
+        Ok(TcpConn { stream, buf: Vec::new(), peer, current_timeout: None })
+    }
+
+    fn set_io_timeout(&mut self, t: Option<Duration>) -> Result<(), WireError> {
+        if self.current_timeout != t {
+            self.stream.set_read_timeout(t)?;
+            self.current_timeout = t;
+        }
+        Ok(())
+    }
+}
+
+impl Connection for TcpConn {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        let frame = wire::encode(msg);
+        self.stream.write_all(&frame).map_err(io_to_wire)?;
+        Ok(())
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Msg>, WireError> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some((msg, used)) = wire::try_decode(&self.buf)? {
+                self.buf.drain(..used);
+                return Ok(Some(msg));
+            }
+            match deadline {
+                None => self.set_io_timeout(None)?,
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(None);
+                    }
+                    self.set_io_timeout(Some((d - now).max(MIN_IO_WAIT)))?;
+                }
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(WireError::Closed),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+                        return Ok(None);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(io_to_wire(e)),
+            }
+        }
+    }
+
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+}
+
+/// TCP listener on the coordinator side.
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: String,
+}
+
+impl TcpTransport {
+    /// Bind `addr` (use port 0 for an ephemeral port; the bound address
+    /// is reported by [`Transport::local_addr`]).
+    pub fn bind(addr: &str) -> Result<TcpTransport, WireError> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok(TcpTransport { listener, addr })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn accept_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Box<dyn Connection>>, WireError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    return Ok(Some(Box::new(TcpConn::from_stream(stream)?)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(MIN_IO_WAIT);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+// ------------------------------------------------------------- loopback
+
+/// In-process framed connection: encoded frames over a channel pair.
+pub struct LoopbackConn {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    peer: String,
+}
+
+/// Create a connected pair of loopback endpoints.
+pub fn loopback_pair(a: &str, b: &str) -> (LoopbackConn, LoopbackConn) {
+    let (tx_ab, rx_ab) = mpsc::channel();
+    let (tx_ba, rx_ba) = mpsc::channel();
+    (
+        LoopbackConn { tx: tx_ab, rx: rx_ba, peer: b.to_string() },
+        LoopbackConn { tx: tx_ba, rx: rx_ab, peer: a.to_string() },
+    )
+}
+
+impl LoopbackConn {
+    fn decode_one(bytes: Vec<u8>) -> Result<Msg, WireError> {
+        let (msg, used) = wire::decode_frame(&bytes)?;
+        if used != bytes.len() {
+            return Err(WireError::Malformed("loopback frame with trailing bytes"));
+        }
+        Ok(msg)
+    }
+}
+
+impl Connection for LoopbackConn {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        self.tx.send(wire::encode(msg)).map_err(|_| WireError::Closed)
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Msg>, WireError> {
+        let bytes = match timeout {
+            None => self.rx.recv().map_err(|_| WireError::Closed)?,
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(b) => b,
+                Err(mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(WireError::Closed)
+                }
+            },
+        };
+        Ok(Some(Self::decode_one(bytes)?))
+    }
+
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+}
+
+/// Coordinator side of the loopback transport: a queue of dialed-in
+/// connections.
+pub struct LoopbackTransport {
+    rx: mpsc::Receiver<LoopbackConn>,
+}
+
+/// Worker-side handle for dialing a [`LoopbackTransport`]. Clone one per
+/// worker thread.
+#[derive(Clone)]
+pub struct LoopbackDialer {
+    tx: mpsc::Sender<LoopbackConn>,
+}
+
+impl LoopbackTransport {
+    /// A fresh transport plus the dialer workers use to connect to it.
+    pub fn new() -> (LoopbackTransport, LoopbackDialer) {
+        let (tx, rx) = mpsc::channel();
+        (LoopbackTransport { rx }, LoopbackDialer { tx })
+    }
+}
+
+impl Default for LoopbackTransport {
+    fn default() -> Self {
+        Self::new().0
+    }
+}
+
+impl LoopbackDialer {
+    /// Open a connection to the transport's coordinator.
+    pub fn dial(&self, name: &str) -> Result<LoopbackConn, WireError> {
+        let (client, server) = loopback_pair("coordinator", name);
+        self.tx.send(server).map_err(|_| WireError::Closed)?;
+        Ok(client)
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn accept_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Box<dyn Connection>>, WireError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(conn) => Ok(Some(Box::new(conn))),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(WireError::Closed),
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        "loopback".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_round_trip_and_timeout() {
+        let (mut a, mut b) = loopback_pair("a", "b");
+        assert!(a.recv_timeout(Some(Duration::from_millis(1))).unwrap().is_none());
+        a.send(&Msg::Heartbeat { nonce: 9 }).unwrap();
+        match b.recv().unwrap() {
+            Msg::Heartbeat { nonce } => assert_eq!(nonce, 9),
+            other => panic!("unexpected {other:?}"),
+        }
+        b.send(&Msg::HeartbeatAck { nonce: 9 }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Msg::HeartbeatAck { nonce: 9 }));
+    }
+
+    #[test]
+    fn loopback_detects_closed_peer() {
+        let (mut a, b) = loopback_pair("a", "b");
+        drop(b);
+        assert!(matches!(a.send(&Msg::Shutdown), Err(WireError::Closed)));
+        assert!(matches!(a.recv_timeout(None), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn loopback_transport_accepts_dialed_connections() {
+        let (mut t, dialer) = LoopbackTransport::new();
+        assert!(t.accept_timeout(Duration::from_millis(1)).unwrap().is_none());
+        let mut client = dialer.dial("w0").unwrap();
+        let mut server = t.accept_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        client.send(&Msg::Hello { agent: "w0".to_string() }).unwrap();
+        match server.recv().unwrap() {
+            Msg::Hello { agent } => assert_eq!(agent, "w0"),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.send(&Msg::Welcome { worker_id: 1 }).unwrap();
+        assert!(matches!(client.recv().unwrap(), Msg::Welcome { worker_id: 1 }));
+    }
+
+    #[test]
+    fn tcp_round_trip_on_localhost() {
+        let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = transport.local_addr();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpConn::connect(&addr).unwrap();
+            conn.send(&Msg::Hello { agent: "tcp-w".to_string() }).unwrap();
+            // echo protocol: expect a welcome back
+            match conn.recv().unwrap() {
+                Msg::Welcome { worker_id } => worker_id,
+                other => panic!("unexpected {other:?}"),
+            }
+        });
+        let mut server =
+            transport.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        match server.recv().unwrap() {
+            Msg::Hello { agent } => assert_eq!(agent, "tcp-w"),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.send(&Msg::Welcome { worker_id: 17 }).unwrap();
+        assert_eq!(handle.join().unwrap(), 17);
+    }
+
+    #[test]
+    fn tcp_recv_timeout_returns_none_without_traffic() {
+        let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = transport.local_addr();
+        let _client = TcpConn::connect(&addr).unwrap();
+        let mut server =
+            transport.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let t0 = Instant::now();
+        let got = server.recv_timeout(Some(Duration::from_millis(20))).unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn tcp_split_frames_reassemble() {
+        // a frame delivered in two TCP segments must decode once complete
+        let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = transport.local_addr();
+        let frame = wire::encode(&Msg::Welcome { worker_id: 3 });
+        let (first, rest) = frame.split_at(5);
+        let (first, rest) = (first.to_vec(), rest.to_vec());
+        let handle = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(&first).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+            s.write_all(&rest).unwrap();
+            s.flush().unwrap();
+            // keep the socket open until the reader is done
+            std::thread::sleep(Duration::from_millis(50));
+        });
+        let mut server =
+            transport.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        // first poll may time out while only the partial frame arrived;
+        // the buffered bytes must survive into the next poll
+        let mut got = None;
+        for _ in 0..100 {
+            if let Some(m) =
+                server.recv_timeout(Some(Duration::from_millis(5))).unwrap()
+            {
+                got = Some(m);
+                break;
+            }
+        }
+        assert!(matches!(got, Some(Msg::Welcome { worker_id: 3 })));
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,565 @@
+//! The cluster wire protocol: a dependency-free, length-prefixed binary
+//! framing with a versioned header, used verbatim over TCP sockets and
+//! over in-process loopback channels (so loopback tests exercise the
+//! exact byte format the network sees).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "UEPW"
+//!      4     2  protocol version (currently 1)
+//!      6     1  message type tag
+//!      7     1  reserved (0)
+//!      8     4  payload length in bytes
+//!     12     n  payload (per-type encoding below)
+//! ```
+//!
+//! Matrix payloads are `rows: u32, cols: u32, rows·cols × f64` — raw
+//! little-endian bit patterns, so values survive the wire bit-identically
+//! (JSON is reserved for configuration; bulk data never goes through
+//! text). Strings are `len: u32 + UTF-8 bytes`; optional floats are a
+//! one-byte presence tag followed by the value when present.
+
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+
+/// Frame magic: distinguishes the protocol from stray TCP traffic.
+pub const MAGIC: [u8; 4] = *b"UEPW";
+/// Protocol version carried in every frame header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Hard ceiling on a single frame's payload (guards against a corrupt
+/// or hostile length field allocating unbounded memory).
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Message type tags (byte 6 of the header).
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_JOB: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_HEARTBEAT: u8 = 5;
+const TAG_HEARTBEAT_ACK: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+/// A coded job dispatched to one worker: the two factor matrices it must
+/// multiply, plus straggle bookkeeping. `injected_delay` is the virtual
+/// completion time pre-sampled by the coordinator (deterministic seeded
+/// runs); when absent the worker models its own latency or reports real
+/// elapsed time. `sleep_secs` is how long the worker should pace the
+/// reply in wall time (0 = reply immediately).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobMsg {
+    pub request_id: u64,
+    /// Packet slot in the request's job set (indexes `plan.packets`).
+    pub slot: u32,
+    pub injected_delay: Option<f64>,
+    pub sleep_secs: f64,
+    /// Shared left factor: on the coordinator this is usually a handle
+    /// into the encoded-block cache, so building a `JobMsg` never
+    /// deep-copies `W_A` (the wire codec serializes straight from the
+    /// shared buffer).
+    pub wa: Arc<Matrix>,
+    pub wb: Matrix,
+}
+
+/// A computed sub-product streaming back to the coordinator. `delay` is
+/// the worker's virtual completion time (injected, self-sampled, or
+/// measured), which the coordinator checks against the request deadline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultMsg {
+    pub request_id: u64,
+    pub slot: u32,
+    pub delay: f64,
+    pub payload: Matrix,
+}
+
+/// Every message that crosses a cluster connection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: register under a human-readable name.
+    Hello { agent: String },
+    /// Coordinator → worker: registration accepted, id assigned.
+    Welcome { worker_id: u64 },
+    /// Coordinator → worker: compute one coded sub-product.
+    Job(JobMsg),
+    /// Worker → coordinator: the computed payload.
+    Result(ResultMsg),
+    /// Coordinator → worker: liveness probe.
+    Heartbeat { nonce: u64 },
+    /// Worker → coordinator: liveness reply (echoes the nonce).
+    HeartbeatAck { nonce: u64 },
+    /// Coordinator → worker: drain and exit cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => TAG_HELLO,
+            Msg::Welcome { .. } => TAG_WELCOME,
+            Msg::Job(_) => TAG_JOB,
+            Msg::Result(_) => TAG_RESULT,
+            Msg::Heartbeat { .. } => TAG_HEARTBEAT,
+            Msg::HeartbeatAck { .. } => TAG_HEARTBEAT_ACK,
+            Msg::Shutdown => TAG_SHUTDOWN,
+        }
+    }
+
+    /// Short name for logs and protocol errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Welcome { .. } => "welcome",
+            Msg::Job(_) => "job",
+            Msg::Result(_) => "result",
+            Msg::Heartbeat { .. } => "heartbeat",
+            Msg::HeartbeatAck { .. } => "heartbeat-ack",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Everything that can go wrong on the wire.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    UnknownType(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized { len: usize, max: usize },
+    /// The buffer ends before the frame does.
+    Truncated { need: usize, have: usize },
+    /// Structurally invalid payload (bad lengths, trailing bytes, …).
+    Malformed(&'static str),
+    /// The peer closed the connection.
+    Closed,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (speak {VERSION})")
+            }
+            WireError::UnknownType(t) => write!(f, "unknown message type {t}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds cap {max}")
+            }
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            WireError::Closed => write!(f, "connection closed by peer"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_f64(out, x);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows() as u32);
+    put_u32(out, m.cols() as u32);
+    out.reserve(m.data().len() * 8);
+    for &x in m.data() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Wire size of a matrix payload (shape header + elements).
+fn matrix_wire_len(m: &Matrix) -> usize {
+    8 + m.data().len() * 8
+}
+
+/// Serialize one message as a complete frame (header + payload).
+/// Job/result frames carry megabytes at paper scale and encoding sits
+/// inside the request's deadline budget, so the payload buffer is sized
+/// exactly upfront — no doubling reallocations on the dispatch path.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let capacity = match msg {
+        Msg::Hello { agent } => 4 + agent.len(),
+        // 8 request_id + 4 slot + 9 option tag+f64 + 8 sleep_secs
+        Msg::Job(j) => 29 + matrix_wire_len(&j.wa) + matrix_wire_len(&j.wb),
+        Msg::Result(r) => 20 + matrix_wire_len(&r.payload),
+        _ => 8,
+    };
+    let mut payload = Vec::with_capacity(capacity);
+    match msg {
+        Msg::Hello { agent } => put_str(&mut payload, agent),
+        Msg::Welcome { worker_id } => put_u64(&mut payload, *worker_id),
+        Msg::Job(j) => {
+            put_u64(&mut payload, j.request_id);
+            put_u32(&mut payload, j.slot);
+            put_opt_f64(&mut payload, j.injected_delay);
+            put_f64(&mut payload, j.sleep_secs);
+            put_matrix(&mut payload, &j.wa);
+            put_matrix(&mut payload, &j.wb);
+        }
+        Msg::Result(r) => {
+            put_u64(&mut payload, r.request_id);
+            put_u32(&mut payload, r.slot);
+            put_f64(&mut payload, r.delay);
+            put_matrix(&mut payload, &r.payload);
+        }
+        Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => {
+            put_u64(&mut payload, *nonce)
+        }
+        Msg::Shutdown => {}
+    }
+    assert!(payload.len() <= MAX_PAYLOAD, "outgoing frame exceeds MAX_PAYLOAD");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(msg.tag());
+    out.push(0); // reserved
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated { need: end, have: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            _ => Err(WireError::Malformed("bad option tag")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("non-UTF-8 string"))
+    }
+
+    fn matrix(&mut self) -> Result<Matrix, WireError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or(WireError::Malformed("matrix shape overflow"))?;
+        // size sanity before allocating: the elements must fit in what is
+        // actually present
+        let bytes = n
+            .checked_mul(8)
+            .ok_or(WireError::Malformed("matrix shape overflow"))?;
+        let raw = self.take(bytes)?;
+        let mut data = Vec::with_capacity(n);
+        for chunk in raw.chunks_exact(8) {
+            data.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes after payload"))
+        }
+    }
+}
+
+/// Decode one complete frame from the front of `buf`. Returns the message
+/// and the number of bytes consumed. An incomplete frame reports
+/// [`WireError::Truncated`]; corrupt headers report their specific error.
+pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated { need: HEADER_LEN, have: buf.len() });
+    }
+    let magic = [buf[0], buf[1], buf[2], buf[3]];
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let tag = buf[6];
+    let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    let total = HEADER_LEN + len;
+    if buf.len() < total {
+        return Err(WireError::Truncated { need: total, have: buf.len() });
+    }
+    let mut rd = Rd::new(&buf[HEADER_LEN..total]);
+    let msg = match tag {
+        TAG_HELLO => Msg::Hello { agent: rd.string()? },
+        TAG_WELCOME => Msg::Welcome { worker_id: rd.u64()? },
+        TAG_JOB => Msg::Job(JobMsg {
+            request_id: rd.u64()?,
+            slot: rd.u32()?,
+            injected_delay: rd.opt_f64()?,
+            sleep_secs: rd.f64()?,
+            wa: Arc::new(rd.matrix()?),
+            wb: rd.matrix()?,
+        }),
+        TAG_RESULT => Msg::Result(ResultMsg {
+            request_id: rd.u64()?,
+            slot: rd.u32()?,
+            delay: rd.f64()?,
+            payload: rd.matrix()?,
+        }),
+        TAG_HEARTBEAT => Msg::Heartbeat { nonce: rd.u64()? },
+        TAG_HEARTBEAT_ACK => Msg::HeartbeatAck { nonce: rd.u64()? },
+        TAG_SHUTDOWN => Msg::Shutdown,
+        other => return Err(WireError::UnknownType(other)),
+    };
+    rd.finish()?;
+    Ok((msg, total))
+}
+
+/// Streaming variant of [`decode_frame`]: `Ok(None)` when the buffer
+/// simply does not hold a complete frame yet (keep reading), `Err` for
+/// anything unrecoverable.
+pub fn try_decode(buf: &[u8]) -> Result<Option<(Msg, usize)>, WireError> {
+    match decode_frame(buf) {
+        Ok(hit) => Ok(Some(hit)),
+        Err(WireError::Truncated { .. }) => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn sample_matrix(seed: u64, r: usize, c: usize) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        Matrix::randn(r, c, 0.0, 1.0, &mut rng)
+    }
+
+    fn all_messages() -> Vec<Msg> {
+        vec![
+            Msg::Hello { agent: "worker-α".to_string() },
+            Msg::Welcome { worker_id: 42 },
+            Msg::Job(JobMsg {
+                request_id: 7,
+                slot: 3,
+                injected_delay: Some(0.25),
+                sleep_secs: 0.001,
+                wa: Arc::new(sample_matrix(1, 4, 6)),
+                wb: sample_matrix(2, 6, 5),
+            }),
+            Msg::Job(JobMsg {
+                request_id: 8,
+                slot: 0,
+                injected_delay: None,
+                sleep_secs: 0.0,
+                wa: Arc::new(sample_matrix(3, 1, 1)),
+                wb: sample_matrix(4, 1, 1),
+            }),
+            Msg::Result(ResultMsg {
+                request_id: 7,
+                slot: 3,
+                delay: 1.75,
+                payload: sample_matrix(5, 4, 5),
+            }),
+            Msg::Heartbeat { nonce: u64::MAX },
+            Msg::HeartbeatAck { nonce: 0 },
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips_bit_identically() {
+        for msg in all_messages() {
+            let bytes = encode(&msg);
+            let (back, used) = decode_frame(&bytes).unwrap();
+            assert_eq!(used, bytes.len(), "{}", msg.name());
+            assert_eq!(back, msg, "{}", msg.name());
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_and_split_cleanly() {
+        let msgs = all_messages();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode(m));
+        }
+        let mut at = 0;
+        for want in &msgs {
+            let (got, used) = decode_frame(&stream[at..]).unwrap();
+            assert_eq!(&got, want);
+            at += used;
+        }
+        assert_eq!(at, stream.len());
+    }
+
+    #[test]
+    fn truncated_frames_report_truncated_and_try_decode_waits() {
+        let full = encode(&Msg::Result(ResultMsg {
+            request_id: 1,
+            slot: 0,
+            delay: 0.5,
+            payload: sample_matrix(6, 3, 3),
+        }));
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN, full.len() - 1] {
+            match decode_frame(&full[..cut]) {
+                Err(WireError::Truncated { need, have }) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut);
+                }
+                other => panic!("cut={cut}: expected Truncated, got {other:?}"),
+            }
+            assert!(try_decode(&full[..cut]).unwrap().is_none(), "cut={cut}");
+        }
+        assert!(try_decode(&full).unwrap().is_some());
+    }
+
+    #[test]
+    fn oversized_length_field_is_rejected_before_allocation() {
+        let mut frame = encode(&Msg::Shutdown);
+        let huge = (MAX_PAYLOAD as u32) + 1;
+        frame[8..12].copy_from_slice(&huge.to_le_bytes());
+        match decode_frame(&frame) {
+            Err(WireError::Oversized { len, max }) => {
+                assert_eq!(len, MAX_PAYLOAD + 1);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // try_decode must surface it too (it is not recoverable by waiting)
+        assert!(try_decode(&frame).is_err());
+    }
+
+    #[test]
+    fn bad_magic_version_and_type_are_rejected() {
+        let good = encode(&Msg::Heartbeat { nonce: 5 });
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadMagic(_))));
+
+        let mut bad = good.clone();
+        bad[4..6].copy_from_slice(&99u16.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadVersion(99))));
+
+        let mut bad = good.clone();
+        bad[6] = 200;
+        assert!(matches!(decode_frame(&bad), Err(WireError::UnknownType(200))));
+    }
+
+    #[test]
+    fn trailing_bytes_inside_payload_are_malformed() {
+        // declare a payload one byte longer than the heartbeat body
+        let mut frame = encode(&Msg::Heartbeat { nonce: 1 });
+        frame.push(0xEE);
+        let len = 9u32; // 8-byte nonce + 1 junk byte
+        frame[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(decode_frame(&frame), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn matrix_payload_preserves_exact_bits() {
+        let m = Matrix::from_vec(
+            2,
+            2,
+            vec![f64::MIN_POSITIVE, -0.0, 1.0 / 3.0, f64::MAX],
+        );
+        let msg =
+            Msg::Result(ResultMsg { request_id: 0, slot: 0, delay: 0.0, payload: m });
+        let (back, _) = decode_frame(&encode(&msg)).unwrap();
+        if let Msg::Result(r) = back {
+            if let Msg::Result(orig) = &msg {
+                for (a, b) in r.payload.data().iter().zip(orig.payload.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        } else {
+            panic!("wrong variant");
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! The worker agent: registers with a coordinator, computes coded
+//! sub-products through an [`ExecEngine`], and streams results back.
+//!
+//! One loop serves every transport. Straggle modelling is layered:
+//!
+//! * **coordinator-injected** — a job can carry a pre-sampled virtual
+//!   completion time (`injected_delay`) plus a wall pacing budget
+//!   (`sleep_secs`); this is how seeded deterministic runs work.
+//! * **self-injected** — a worker configured with a
+//!   [`LatencyModel`] samples its own completion time per job from its
+//!   seeded RNG (the `uepmm worker --latency exp:1.0` path).
+//! * **natural** — with neither, the reported delay is the measured
+//!   wall time of the computation: straggling is whatever the host and
+//!   transport actually do.
+
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::latency::LatencyModel;
+use crate::rng::Pcg64;
+use crate::runtime::{ExecEngine, NativeEngine};
+
+use super::transport::{Connection, LoopbackDialer};
+use super::wire::{Msg, ResultMsg, WireError};
+
+/// Configuration of one worker agent.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Name announced in the registration handshake (logs/registry).
+    pub name: String,
+    /// Self-injected straggle model (`None` = coordinator-injected or
+    /// natural timing only).
+    pub latency: Option<LatencyModel>,
+    /// Capacity scaling for self-sampled delays (paper Remark 1).
+    pub omega: f64,
+    /// Wall seconds per virtual time unit for self-injected sleeps and
+    /// for converting measured wall time back to virtual time. `0`
+    /// disables sleeping.
+    pub time_scale: f64,
+    /// Seed of the worker's private delay-sampling RNG.
+    pub seed: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            name: "worker".to_string(),
+            latency: None,
+            omega: 1.0,
+            time_scale: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// What a worker did over its lifetime, reported when the loop exits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub worker_id: u64,
+    pub jobs: u64,
+    pub heartbeats: u64,
+    /// `true` when the coordinator sent an explicit shutdown (clean
+    /// exit), `false` when the connection dropped.
+    pub clean_shutdown: bool,
+}
+
+/// Run the worker loop until shutdown or disconnect. Registers, then
+/// serves jobs and heartbeats.
+pub fn run_worker<E: ExecEngine>(
+    conn: &mut dyn Connection,
+    engine: &E,
+    cfg: &WorkerConfig,
+) -> Result<WorkerStats> {
+    conn.send(&Msg::Hello { agent: cfg.name.clone() })
+        .map_err(|e| anyhow::anyhow!("{}: hello failed: {e}", cfg.name))?;
+    let worker_id = match conn.recv() {
+        Ok(Msg::Welcome { worker_id }) => worker_id,
+        Ok(other) => anyhow::bail!("{}: expected welcome, got {}", cfg.name, other.name()),
+        Err(e) => anyhow::bail!("{}: registration failed: {e}", cfg.name),
+    };
+    let mut rng = Pcg64::seed_from(cfg.seed);
+    let mut stats = WorkerStats {
+        worker_id,
+        jobs: 0,
+        heartbeats: 0,
+        clean_shutdown: false,
+    };
+    // Set once a send hits a closed peer: the coordinator stopped
+    // listening (it may still have queued a Shutdown behind the job
+    // backlog), so stop computing and drain the receive side looking for
+    // the orderly goodbye.
+    let mut sink_closed = false;
+    loop {
+        let msg = match conn.recv_timeout(None) {
+            Ok(Some(m)) => m,
+            Ok(None) => continue,
+            Err(WireError::Closed) => break,
+            Err(e) => return Err(anyhow::anyhow!("{}: receive failed: {e}", cfg.name)),
+        };
+        match msg {
+            Msg::Job(job) => {
+                if sink_closed {
+                    continue;
+                }
+                let t0 = Instant::now();
+                let payload = engine.matmul(&job.wa, &job.wb)?;
+                let elapsed = t0.elapsed().as_secs_f64();
+                // completion time and pacing, per the layering above
+                let (delay, sleep_secs) = match (job.injected_delay, &cfg.latency) {
+                    (Some(d), _) => (d, job.sleep_secs),
+                    (None, Some(model)) => {
+                        let d = model.sample_scaled(cfg.omega, &mut rng);
+                        (d, d * cfg.time_scale)
+                    }
+                    (None, None) => {
+                        let d = if cfg.time_scale > 0.0 {
+                            elapsed / cfg.time_scale
+                        } else {
+                            elapsed
+                        };
+                        (d, 0.0)
+                    }
+                };
+                if sleep_secs > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(sleep_secs - elapsed));
+                }
+                let reply = Msg::Result(ResultMsg {
+                    request_id: job.request_id,
+                    slot: job.slot,
+                    delay,
+                    payload,
+                });
+                match conn.send(&reply) {
+                    Ok(()) => stats.jobs += 1,
+                    Err(WireError::Closed) => sink_closed = true,
+                    Err(e) => {
+                        return Err(anyhow::anyhow!("{}: send failed: {e}", cfg.name))
+                    }
+                }
+            }
+            Msg::Heartbeat { nonce } => {
+                if sink_closed {
+                    continue;
+                }
+                match conn.send(&Msg::HeartbeatAck { nonce }) {
+                    Ok(()) => stats.heartbeats += 1,
+                    Err(WireError::Closed) => sink_closed = true,
+                    Err(e) => {
+                        return Err(anyhow::anyhow!("{}: send failed: {e}", cfg.name))
+                    }
+                }
+            }
+            Msg::Shutdown => {
+                stats.clean_shutdown = true;
+                break;
+            }
+            // coordinator-only messages arriving here are a protocol
+            // violation; drop the connection rather than guessing
+            other => {
+                anyhow::bail!("{}: unexpected {} from coordinator", cfg.name, other.name())
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Spawn `n` loopback worker threads dialed into `dialer`, each with its
+/// own serial [`NativeEngine`] (the threads themselves are the
+/// parallelism, exactly like the thread-pool service path).
+pub fn spawn_loopback_workers(
+    dialer: &LoopbackDialer,
+    n: usize,
+    base: &WorkerConfig,
+) -> Vec<JoinHandle<Result<WorkerStats>>> {
+    (0..n)
+        .map(|i| {
+            let dialer = dialer.clone();
+            let mut cfg = base.clone();
+            cfg.name = format!("{}-{i}", base.name);
+            cfg.seed = base.seed.wrapping_add(i as u64);
+            std::thread::Builder::new()
+                .name(format!("uepmm-cluster-{}", cfg.name))
+                .spawn(move || {
+                    let mut conn = dialer
+                        .dial(&cfg.name)
+                        .map_err(|e| anyhow::anyhow!("{}: dial failed: {e}", cfg.name))?;
+                    run_worker(&mut conn, &NativeEngine::serial(), &cfg)
+                })
+                .expect("spawn cluster worker thread")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::loopback_pair;
+    use crate::cluster::wire::JobMsg;
+    use crate::linalg::{matmul, Matrix};
+
+    #[test]
+    fn worker_registers_computes_and_shuts_down() {
+        let (mut ps, mut wk) = loopback_pair("ps", "wk");
+        let handle = std::thread::spawn(move || {
+            let cfg = WorkerConfig { name: "t0".to_string(), ..Default::default() };
+            run_worker(&mut wk, &NativeEngine::serial(), &cfg).unwrap()
+        });
+        match ps.recv().unwrap() {
+            Msg::Hello { agent } => assert_eq!(agent, "t0"),
+            other => panic!("unexpected {other:?}"),
+        }
+        ps.send(&Msg::Welcome { worker_id: 4 }).unwrap();
+
+        let mut rng = Pcg64::seed_from(1);
+        let wa = Matrix::randn(3, 5, 0.0, 1.0, &mut rng);
+        let wb = Matrix::randn(5, 2, 0.0, 1.0, &mut rng);
+        ps.send(&Msg::Job(JobMsg {
+            request_id: 9,
+            slot: 2,
+            injected_delay: Some(0.75),
+            sleep_secs: 0.0,
+            wa: std::sync::Arc::new(wa.clone()),
+            wb: wb.clone(),
+        }))
+        .unwrap();
+        match ps.recv().unwrap() {
+            Msg::Result(r) => {
+                assert_eq!(r.request_id, 9);
+                assert_eq!(r.slot, 2);
+                assert_eq!(r.delay, 0.75);
+                assert!(r.payload.allclose(&matmul(&wa, &wb), 1e-12));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        ps.send(&Msg::Heartbeat { nonce: 6 }).unwrap();
+        assert!(matches!(ps.recv().unwrap(), Msg::HeartbeatAck { nonce: 6 }));
+
+        ps.send(&Msg::Shutdown).unwrap();
+        let stats = handle.join().unwrap();
+        assert_eq!(
+            stats,
+            WorkerStats { worker_id: 4, jobs: 1, heartbeats: 1, clean_shutdown: true }
+        );
+    }
+
+    #[test]
+    fn worker_exits_quietly_when_coordinator_vanishes() {
+        let (mut ps, mut wk) = loopback_pair("ps", "wk");
+        let handle = std::thread::spawn(move || {
+            let cfg = WorkerConfig::default();
+            run_worker(&mut wk, &NativeEngine::serial(), &cfg)
+        });
+        assert!(matches!(ps.recv().unwrap(), Msg::Hello { .. }));
+        ps.send(&Msg::Welcome { worker_id: 1 }).unwrap();
+        drop(ps);
+        let stats = handle.join().unwrap().unwrap();
+        assert!(!stats.clean_shutdown);
+        assert_eq!(stats.jobs, 0);
+    }
+
+    #[test]
+    fn self_injected_latency_reports_sampled_delays() {
+        let (mut ps, mut wk) = loopback_pair("ps", "wk");
+        let seed = 42;
+        let handle = std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                latency: Some(LatencyModel::exp(1.0)),
+                omega: 0.5,
+                time_scale: 0.0, // no sleeping in tests
+                seed,
+                ..Default::default()
+            };
+            run_worker(&mut wk, &NativeEngine::serial(), &cfg).unwrap()
+        });
+        assert!(matches!(ps.recv().unwrap(), Msg::Hello { .. }));
+        ps.send(&Msg::Welcome { worker_id: 0 }).unwrap();
+        let mut expect_rng = Pcg64::seed_from(seed);
+        let model = LatencyModel::exp(1.0);
+        let m = Matrix::from_vec(1, 1, vec![2.0]);
+        for slot in 0..3u32 {
+            ps.send(&Msg::Job(JobMsg {
+                request_id: 1,
+                slot,
+                injected_delay: None,
+                sleep_secs: 0.0,
+                wa: std::sync::Arc::new(m.clone()),
+                wb: m.clone(),
+            }))
+            .unwrap();
+            let want = model.sample_scaled(0.5, &mut expect_rng);
+            match ps.recv().unwrap() {
+                Msg::Result(r) => assert_eq!(r.delay, want, "slot {slot}"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        ps.send(&Msg::Shutdown).unwrap();
+        assert_eq!(handle.join().unwrap().jobs, 3);
+    }
+}

@@ -79,8 +79,8 @@ impl SyntheticSpec {
         ClassMap::from_levels(&self.part, self.a_levels.clone(), self.b_levels.clone(), &pair)
     }
 
-    /// Sample `(A, B)` with i.i.d. `N(0, σ²_level)` blocks (Assumption 1).
-    pub fn sample_matrices(&self, rng: &mut Pcg64) -> (Matrix, Matrix) {
+    /// Sample `A` alone with i.i.d. `N(0, σ²_level)` blocks (Assumption 1).
+    pub fn sample_a(&self, rng: &mut Pcg64) -> Matrix {
         let a_blocks: Vec<Matrix> = self
             .a_levels
             .iter()
@@ -88,6 +88,16 @@ impl SyntheticSpec {
                 Matrix::randn(self.part.u, self.part.h, 0.0, self.level_sds[lv], rng)
             })
             .collect();
+        let refs_a: Vec<&Matrix> = a_blocks.iter().collect();
+        match self.part.paradigm {
+            Paradigm::RowTimesCol => Matrix::vconcat(&refs_a),
+            Paradigm::ColTimesRow => Matrix::hconcat(&refs_a),
+        }
+    }
+
+    /// Sample `B` alone — the per-request side of a cluster stream that
+    /// reuses a cached `A` (fresh activations against fixed weights).
+    pub fn sample_b(&self, rng: &mut Pcg64) -> Matrix {
         let b_blocks: Vec<Matrix> = self
             .b_levels
             .iter()
@@ -95,16 +105,20 @@ impl SyntheticSpec {
                 Matrix::randn(self.part.h, self.part.q, 0.0, self.level_sds[lv], rng)
             })
             .collect();
-        let refs_a: Vec<&Matrix> = a_blocks.iter().collect();
         let refs_b: Vec<&Matrix> = b_blocks.iter().collect();
         match self.part.paradigm {
-            Paradigm::RowTimesCol => {
-                (Matrix::vconcat(&refs_a), Matrix::hconcat(&refs_b))
-            }
-            Paradigm::ColTimesRow => {
-                (Matrix::hconcat(&refs_a), Matrix::vconcat(&refs_b))
-            }
+            Paradigm::RowTimesCol => Matrix::hconcat(&refs_b),
+            Paradigm::ColTimesRow => Matrix::vconcat(&refs_b),
         }
+    }
+
+    /// Sample `(A, B)` with i.i.d. `N(0, σ²_level)` blocks (Assumption 1).
+    /// Consumes the RNG in the same order as [`Self::sample_a`] followed
+    /// by [`Self::sample_b`].
+    pub fn sample_matrices(&self, rng: &mut Pcg64) -> (Matrix, Matrix) {
+        let a = self.sample_a(rng);
+        let b = self.sample_b(rng);
+        (a, b)
     }
 
     /// Per-class mean variance products `σ²_{l,A}·σ²_{l,B}` for the

@@ -2,24 +2,36 @@
 //! dispatches to workers, collects results until the deadline `T_max`,
 //! decodes progressively, and assembles the approximation `Ĉ`.
 //!
-//! Two execution paths:
+//! Three execution paths, one protocol:
 //! * [`Coordinator::run`] — *virtual-time honest* path: every worker
 //!   payload is actually computed through the [`ExecEngine`] (PJRT
 //!   artifacts or native matmul), arrival times come from the straggler
-//!   simulator, and `Ĉ` is decoded from the payloads.
-//! * [`Coordinator::run_service`] — *wall-clock threaded* path: workers
-//!   run on a thread pool with injected delays and stream results back
-//!   over a channel; the PS stops collecting at the deadline. This is
-//!   the shape of a production deployment.
+//!   simulator, and `Ĉ` is decoded from the payloads. The reference
+//!   semantics every other path is checked against.
+//! * [`run_service`] — *in-process threaded* path: worker agents run on
+//!   threads and stream results back over the cluster loopback
+//!   transport with seeded injected delays; a thin adapter over
+//!   [`crate::cluster::ClusterServer`] kept for its simple
+//!   one-call API. Deterministic: same plan + seed ⇒ bit-identical
+//!   outcome.
+//! * [`crate::cluster`] — *networked* path: `uepmm serve` coordinates
+//!   `uepmm worker` processes over TCP with the same wire protocol the
+//!   loopback path uses; straggling is a property of the transport and
+//!   the worker hosts, deadlines are wall-clock, and partial failures
+//!   (dead workers, dropped connections) are survived rather than
+//!   simulated.
 
 mod plan;
 mod service;
 
-pub use plan::{build_job_matrices, Plan};
+pub use plan::{
+    build_job_a, build_job_b, build_job_matrices, EncodedA, Plan,
+};
 pub use service::{run_service, ServiceConfig, ServiceOutcome};
 
 use crate::coding::DecodeState;
 use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
 use crate::runtime::ExecEngine;
 
 /// Result of one coordinated approximate multiplication.
@@ -87,31 +99,58 @@ impl<E: ExecEngine> Coordinator<E> {
         st: DecodeState,
         received: usize,
     ) -> anyhow::Result<Outcome> {
-        let values = if received > 0 {
-            st.recover_values()
-        } else {
-            vec![None; plan.part.num_products()]
-        };
-        let mask = st.recovered_mask();
-        let mut per_class = vec![0usize; plan.cm.n_classes];
-        for (u, &rec) in mask.iter().enumerate() {
-            if rec {
-                per_class[plan.cm.class_of[u]] += 1;
-            }
-        }
-        let c_hat = plan.part.assemble(&values);
-        let c_true = &plan.c_true;
-        let loss = c_true.frob_sq_diff(&c_hat);
-        let energy = c_true.frob_sq();
-        Ok(Outcome {
-            received,
-            recovered: mask.iter().filter(|&&b| b).count(),
-            per_class_recovered: per_class,
-            c_hat,
-            loss,
-            normalized_loss: if energy > 0.0 { loss / energy } else { 0.0 },
-        })
+        Ok(score_outcome(&plan.part, &plan.cm, &plan.c_true, &st, received))
     }
+}
+
+/// Decode and assemble `Ĉ` without a reference product: the production
+/// tail, where the true `A·B` is exactly what nobody computed. The loss
+/// fields come back as NaN — use [`score_outcome`] when a reference is
+/// available.
+pub fn assemble_outcome(
+    part: &Partitioning,
+    cm: &ClassMap,
+    st: &DecodeState,
+    received: usize,
+) -> Outcome {
+    let values = if received > 0 {
+        st.recover_values()
+    } else {
+        vec![None; part.num_products()]
+    };
+    let mask = st.recovered_mask();
+    let mut per_class = vec![0usize; cm.n_classes];
+    for (u, &rec) in mask.iter().enumerate() {
+        if rec {
+            per_class[cm.class_of[u]] += 1;
+        }
+    }
+    let c_hat = part.assemble(&values);
+    Outcome {
+        received,
+        recovered: mask.iter().filter(|&&b| b).count(),
+        per_class_recovered: per_class,
+        c_hat,
+        loss: f64::NAN,
+        normalized_loss: f64::NAN,
+    }
+}
+
+/// Decode, assemble `Ĉ`, and score it against the true product: the
+/// common tail of every *evaluation* path (virtual-time, threaded
+/// loopback, and scored cluster requests).
+pub fn score_outcome(
+    part: &Partitioning,
+    cm: &ClassMap,
+    c_true: &Matrix,
+    st: &DecodeState,
+    received: usize,
+) -> Outcome {
+    let mut out = assemble_outcome(part, cm, st, received);
+    out.loss = c_true.frob_sq_diff(&out.c_hat);
+    let energy = c_true.frob_sq();
+    out.normalized_loss = if energy > 0.0 { out.loss / energy } else { 0.0 };
+    out
 }
 
 #[cfg(test)]

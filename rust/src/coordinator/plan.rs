@@ -1,6 +1,21 @@
 //! A [`Plan`] is everything the PS prepares *before* dispatch: the block
 //! split of `A` and `B`, the norm-based importance classification, the
 //! coded packet set, and the reference product for loss evaluation.
+//!
+//! Plan preparation is deliberately separable into three stages so the
+//! cluster runtime can cache the expensive `A`-side work across a
+//! request stream (the DNN-training shape: same weights `A`, fresh
+//! activations `B` every request):
+//!
+//! 1. **encode** — split `A`, draw the coded packet set, and materialize
+//!    every worker's left factor `W_A` ([`EncodedA::encode`]);
+//! 2. **bind** — split the per-request `B` and build the right factors
+//!    `W_B` ([`build_job_b`]);
+//! 3. **dispatch** — hand `(W_A, W_B)` pairs to whatever executes them
+//!    (virtual-time [`super::Coordinator::run`], the threaded
+//!    [`super::run_service`], or a [`crate::cluster::ClusterServer`]).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -90,16 +105,70 @@ impl Plan {
     }
 }
 
-/// Materialize the two factor matrices a worker multiplies, per the
-/// packet recipe (paper eq. 5–6):
-/// * `Stacked`: `W_A = [c₁·A_{n₁}, …] (U×kH)`, `W_B = [B_{p₁}; …] (kH×Q)`.
-/// * `RankOne`: `W_A = Σ αᵢ·A_i (U×H)`, `W_B = Σ βⱼ·B_j (H×Q)`.
-pub fn build_job_matrices(
+/// The cachable, `B`-independent half of a coded job set: the packet
+/// (coefficient) draw, the decode space, and every worker's
+/// materialized left factor `W_A`. Keyed by
+/// `(matrix id, partitioning, code spec, class map, workers)` in
+/// [`crate::cluster::EncodedBlockCache`], one `EncodedA` serves an
+/// entire stream of requests that reuse the same `A`.
+#[derive(Clone, Debug)]
+pub struct EncodedA {
+    pub part: Partitioning,
+    pub space: UnknownSpace,
+    pub packets: Vec<Packet>,
+    /// `wa[w]` is worker `w`'s left factor, prebuilt from the split of
+    /// `A` and `packets[w].recipe`. Shared so dispatching a cached
+    /// encoding clones a handle, not the matrix. The raw `A` blocks are
+    /// deliberately *not* retained: once every `W_A` exists they are
+    /// dead weight, and cache entries are long-lived.
+    pub wa: Vec<Arc<Matrix>>,
+}
+
+impl EncodedA {
+    /// Run the `A`-side of plan preparation: split, draw one coded packet
+    /// per worker, and materialize every `W_A`.
+    pub fn encode(
+        part: &Partitioning,
+        spec: CodeSpec,
+        cm: &ClassMap,
+        workers: usize,
+        a: &Matrix,
+        rng: &mut Pcg64,
+    ) -> Result<EncodedA> {
+        anyhow::ensure!(workers >= 1, "need at least one worker");
+        let a_blocks = part.split_a(a);
+        let packets = spec.generate_packets(part, cm, workers, rng);
+        let space = UnknownSpace::for_code(part, spec.style);
+        let wa = packets
+            .iter()
+            .map(|p| Arc::new(build_job_a(part, &a_blocks, &p.recipe)))
+            .collect();
+        Ok(EncodedA { part: part.clone(), space, packets, wa })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.packets.len()
+    }
+
+    /// Bind this encoding to one request's `B` blocks: worker `w`'s right
+    /// factor.
+    pub fn job_b(&self, b_blocks: &[Matrix], w: usize) -> Matrix {
+        build_job_b(&self.part, b_blocks, &self.packets[w].recipe)
+    }
+}
+
+/// Materialize the left factor a worker multiplies, per the packet
+/// recipe (paper eq. 5–6):
+/// * `Stacked`: `W_A = [c₁·A_{n₁}, …] (U×kH)`.
+/// * `RankOne`: `W_A = Σ αᵢ·A_i (U×H)`.
+///
+/// Depends only on `A` and the packet — this is the half the encoded
+/// block cache reuses across requests.
+pub fn build_job_a(
     part: &Partitioning,
     a_blocks: &[Matrix],
-    b_blocks: &[Matrix],
     recipe: &JobRecipe,
-) -> (Matrix, Matrix) {
+) -> Matrix {
     match recipe {
         JobRecipe::Stacked { terms } => {
             assert!(!terms.is_empty(), "empty stacked job");
@@ -112,6 +181,32 @@ pub fn build_job_matrices(
                     m
                 })
                 .collect();
+            Matrix::hconcat(&scaled_a.iter().collect::<Vec<_>>())
+        }
+        JobRecipe::RankOne { a_coeffs, .. } => {
+            assert!(!a_coeffs.is_empty());
+            let (u, h) = a_blocks[0].shape();
+            let mut wa = Matrix::zeros(u, h);
+            for &(i, alpha) in a_coeffs {
+                wa.axpy(alpha, &a_blocks[i]);
+            }
+            wa
+        }
+    }
+}
+
+/// Materialize the right factor a worker multiplies, per the packet
+/// recipe (paper eq. 5–6):
+/// * `Stacked`: `W_B = [B_{p₁}; …] (kH×Q)`.
+/// * `RankOne`: `W_B = Σ βⱼ·B_j (H×Q)`.
+pub fn build_job_b(
+    part: &Partitioning,
+    b_blocks: &[Matrix],
+    recipe: &JobRecipe,
+) -> Matrix {
+    match recipe {
+        JobRecipe::Stacked { terms } => {
+            assert!(!terms.is_empty(), "empty stacked job");
             let b_parts: Vec<&Matrix> = terms
                 .iter()
                 .map(|t| {
@@ -119,25 +214,29 @@ pub fn build_job_matrices(
                     &b_blocks[bi]
                 })
                 .collect();
-            let wa = Matrix::hconcat(&scaled_a.iter().collect::<Vec<_>>());
-            let wb = Matrix::vconcat(&b_parts);
-            (wa, wb)
+            Matrix::vconcat(&b_parts)
         }
-        JobRecipe::RankOne { a_coeffs, b_coeffs } => {
-            assert!(!a_coeffs.is_empty() && !b_coeffs.is_empty());
-            let (u, h) = a_blocks[0].shape();
-            let (_, q) = b_blocks[0].shape();
-            let mut wa = Matrix::zeros(u, h);
-            for &(i, alpha) in a_coeffs {
-                wa.axpy(alpha, &a_blocks[i]);
-            }
+        JobRecipe::RankOne { b_coeffs, .. } => {
+            assert!(!b_coeffs.is_empty());
+            let (h, q) = b_blocks[0].shape();
             let mut wb = Matrix::zeros(h, q);
             for &(j, beta) in b_coeffs {
                 wb.axpy(beta, &b_blocks[j]);
             }
-            (wa, wb)
+            wb
         }
     }
+}
+
+/// Materialize both factor matrices of one job (see [`build_job_a`] and
+/// [`build_job_b`]).
+pub fn build_job_matrices(
+    part: &Partitioning,
+    a_blocks: &[Matrix],
+    b_blocks: &[Matrix],
+    recipe: &JobRecipe,
+) -> (Matrix, Matrix) {
+    (build_job_a(part, a_blocks, recipe), build_job_b(part, b_blocks, recipe))
 }
 
 #[cfg(test)]
@@ -192,6 +291,59 @@ mod tests {
             }
         }
         assert!(got.allclose(&want, 1e-10));
+    }
+
+    #[test]
+    fn job_factor_halves_compose_to_the_full_job() {
+        let mut rng = Pcg64::seed_from(11);
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let a = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let cm = crate::partition::ClassMap::from_matrices(&part, &a, &b, 3);
+        for p in spec.generate_packets(&part, &cm, 6, &mut rng) {
+            let (wa, wb) = build_job_matrices(&part, &a_blocks, &b_blocks, &p.recipe);
+            let ha = build_job_a(&part, &a_blocks, &p.recipe);
+            let hb = build_job_b(&part, &b_blocks, &p.recipe);
+            assert!(wa.allclose(&ha, 0.0), "W_A halves must be identical");
+            assert!(wb.allclose(&hb, 0.0), "W_B halves must be identical");
+        }
+    }
+
+    #[test]
+    fn encoded_a_matches_plan_construction() {
+        // Same seed through EncodedA::encode and Plan::build_with_classes
+        // must give the same packets and the same worker jobs: the cache
+        // path is a pure refactoring of plan construction.
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let mut rng = Pcg64::seed_from(21);
+        let a = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let cm = crate::partition::ClassMap::from_matrices(&part, &a, &b, 3);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+
+        let mut r1 = Pcg64::seed_from(77);
+        let enc =
+            EncodedA::encode(&part, spec.clone(), &cm, 8, &a, &mut r1).unwrap();
+        let mut r2 = Pcg64::seed_from(77);
+        let plan =
+            Plan::build_with_classes(&part, spec, cm, 8, &a, &b, &mut r2).unwrap();
+
+        assert_eq!(enc.packets, plan.packets);
+        assert_eq!(enc.workers(), 8);
+        let b_blocks = part.split_b(&b);
+        for w in 0..8 {
+            let (wa, wb) = build_job_matrices(
+                &part,
+                &plan.a_blocks,
+                &plan.b_blocks,
+                &plan.packets[w].recipe,
+            );
+            assert!(enc.wa[w].allclose(&wa, 0.0));
+            assert!(enc.job_b(&b_blocks, w).allclose(&wb, 0.0));
+        }
     }
 
     #[test]

@@ -1,28 +1,35 @@
-//! Wall-clock threaded coordinator: the deployment-shaped path.
+//! The in-process threaded service: a thin adapter over the cluster
+//! loopback runtime.
 //!
-//! Workers run as jobs on a thread pool; each computes its coded product
-//! through a (thread-safe) execution engine, sleeps out its injected
-//! straggler delay, and streams the result to the PS over a channel. The
-//! PS decodes arrivals until the wall-clock deadline, then returns
-//! whatever approximation it has — exactly the paper's protocol, but
-//! with real threads and real time instead of the virtual-time
-//! simulator.
+//! Worker agents run on threads behind a
+//! [`LoopbackTransport`], each computing its coded product through a
+//! serial native engine and streaming the result back over the cluster
+//! wire protocol. The PS pre-samples every worker's virtual completion
+//! time from the seeded latency model, injects it into the job, and
+//! accepts exactly the results whose delay meets the virtual deadline —
+//! so a run is a pure function of `(plan, config, seed)`: bit-identical
+//! across repetitions and across thread counts. Injected delays are
+//! paced in wall time by `time_scale` (capped just past the deadline),
+//! which keeps demos lifelike and tests fast.
 //!
-//! Delays are scaled by `time_scale` so experiments with `T_max ≈ 1`
-//! finish in tens of milliseconds of wall time.
+//! This used to be a hand-rolled thread-pool + channel loop; it now
+//! delegates to [`crate::cluster::ClusterServer`] in
+//! [`DeadlineMode::Virtual`], so the threaded path and the networked
+//! path exercise the same dispatch/collect/decode machinery.
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coding::DecodeState;
+use crate::cluster::{
+    spawn_loopback_workers, ClusterConfig, ClusterServer, DeadlineMode,
+    LoopbackTransport, WorkerConfig,
+};
 use crate::latency::LatencyModel;
-use crate::linalg::{matmul_with, Matrix, MatmulOpts};
 use crate::rng::Pcg64;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::available_parallelism;
 
-use super::{build_job_matrices, Outcome, Plan};
+use super::{Outcome, Plan};
 
 /// Configuration of a threaded service run.
 #[derive(Clone, Debug)]
@@ -45,7 +52,7 @@ impl Default for ServiceConfig {
             omega: 1.0,
             t_max: 1.0,
             time_scale: 0.02,
-            threads: 8,
+            threads: available_parallelism(),
         }
     }
 }
@@ -54,115 +61,60 @@ impl Default for ServiceConfig {
 #[derive(Clone, Debug)]
 pub struct ServiceOutcome {
     pub outcome: Outcome,
-    /// Worker results that arrived after the deadline (discarded).
+    /// Worker results whose virtual completion missed the deadline
+    /// (computed, streamed back, discarded).
     pub late: usize,
     /// Wall time the PS actually waited.
     pub wall: Duration,
 }
 
-/// Run the plan as a real threaded service (native engine compute inside
-/// the worker threads; the PJRT engine is thread-confined, so the
+/// Run the plan as a threaded loopback cluster (native engine compute
+/// inside the worker threads; the PJRT engine is thread-confined, so the
 /// service path keeps compute native — the honest PJRT path is
 /// [`super::Coordinator::run`]).
 pub fn run_service(plan: &Plan, cfg: &ServiceConfig, rng: &mut Pcg64) -> Result<ServiceOutcome> {
-    let (tx, rx) = mpsc::channel::<(usize, f64, Matrix)>();
-    let pool = ThreadPool::new(cfg.threads.max(1));
-    let start = Instant::now();
     // Pre-sample delays so the run is reproducible from the seed.
     let delays: Vec<f64> = (0..plan.packets.len())
         .map(|_| cfg.latency.sample_scaled(cfg.omega, rng))
         .collect();
-    for (w, packet) in plan.packets.iter().enumerate() {
-        let tx = tx.clone();
-        let delay = delays[w];
-        let (wa, wb) = build_job_matrices(
-            &plan.part,
-            &plan.a_blocks,
-            &plan.b_blocks,
-            &packet.recipe,
-        );
-        let scale = cfg.time_scale;
-        pool.execute(move || {
-            // compute first (a real worker), then model the residual
-            // straggle as sleep up to the sampled completion time
-            let payload = matmul_with(
-                &wa,
-                &wb,
-                MatmulOpts { threads: 1, ..MatmulOpts::default() },
-            );
-            let target = Duration::from_secs_f64(delay * scale);
-            let elapsed = start.elapsed();
-            if target > elapsed {
-                std::thread::sleep(target - elapsed);
-            }
-            let _ = tx.send((w, delay, payload));
-        });
-    }
-    drop(tx);
-
-    let deadline = Duration::from_secs_f64(cfg.t_max * cfg.time_scale);
-    let mut st = DecodeState::new(plan.space.clone());
-    let mut received = 0usize;
-    let mut late = 0usize;
-    loop {
-        let elapsed = start.elapsed();
-        if elapsed >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - elapsed) {
-            Ok((w, delay, payload)) => {
-                // enforce the *virtual* deadline too: a worker whose
-                // sampled completion exceeds T_max is late even if the
-                // wall clock raced ahead
-                if delay <= cfg.t_max {
-                    st.add_packet(&plan.packets[w], Some(payload));
-                    received += 1;
-                } else {
-                    late += 1;
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => break,
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    let wall = start.elapsed();
-    // drain (count) late arrivals without blocking the deadline path
-    drop(rx);
-    drop(pool);
-
-    let values = if received > 0 {
-        st.recover_values()
-    } else {
-        vec![None; plan.part.num_products()]
+    let threads = cfg.threads.max(1);
+    let (mut transport, dialer) = LoopbackTransport::new();
+    let wcfg = WorkerConfig {
+        name: "svc".to_string(),
+        latency: None,
+        omega: cfg.omega,
+        time_scale: cfg.time_scale,
+        seed: 0,
     };
-    let mask = st.recovered_mask();
-    let mut per_class = vec![0usize; plan.cm.n_classes];
-    for (u, &rec) in mask.iter().enumerate() {
-        if rec {
-            per_class[plan.cm.class_of[u]] += 1;
+    let handles = spawn_loopback_workers(&dialer, threads, &wcfg);
+    drop(dialer);
+    let mut server = ClusterServer::new(ClusterConfig {
+        deadline: DeadlineMode::Virtual,
+        time_scale: cfg.time_scale,
+        ..ClusterConfig::default()
+    });
+    let joined =
+        server.accept_workers(&mut transport, threads, Duration::from_secs(30))?;
+    anyhow::ensure!(joined == threads, "only {joined}/{threads} workers joined");
+    let served = server.serve_plan(plan, cfg.t_max, Some(&delays));
+    server.shutdown();
+    for h in handles {
+        match h.join() {
+            Ok(r) => {
+                r?;
+            }
+            Err(_) => anyhow::bail!("service worker thread panicked"),
         }
     }
-    let c_hat = plan.part.assemble(&values);
-    let loss = plan.c_true.frob_sq_diff(&c_hat);
-    let energy = plan.c_true.frob_sq();
-    Ok(ServiceOutcome {
-        outcome: Outcome {
-            received,
-            recovered: mask.iter().filter(|&&b| b).count(),
-            per_class_recovered: per_class,
-            c_hat,
-            loss,
-            normalized_loss: if energy > 0.0 { loss / energy } else { 0.0 },
-        },
-        late,
-        wall,
-    })
+    let out = served?;
+    Ok(ServiceOutcome { outcome: out.outcome, late: out.late, wall: out.wall })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coding::{CodeKind, CodeSpec, WindowPolynomial};
+    use crate::linalg::Matrix;
     use crate::partition::Partitioning;
 
     fn small_plan(workers: usize, seed: u64) -> Plan {
@@ -207,5 +159,79 @@ mod tests {
         // workers miss it
         assert!(out.outcome.received < 20);
         assert!(out.outcome.normalized_loss <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn service_is_bit_identical_across_runs_and_thread_counts() {
+        let plan = small_plan(16, 6);
+        let run = |threads: usize| {
+            let cfg = ServiceConfig {
+                latency: LatencyModel::exp(1.0),
+                omega: 9.0 / 16.0,
+                t_max: 0.9,
+                time_scale: 0.002,
+                threads,
+            };
+            let mut rng = Pcg64::seed_from(11);
+            run_service(&plan, &cfg, &mut rng).unwrap()
+        };
+        let a = run(4);
+        let b = run(4);
+        let c = run(2);
+        for other in [&b, &c] {
+            assert_eq!(a.outcome.received, other.outcome.received);
+            assert_eq!(a.outcome.recovered, other.outcome.recovered);
+            assert_eq!(a.late, other.late);
+            assert_eq!(a.outcome.c_hat.data(), other.outcome.c_hat.data());
+            assert_eq!(a.outcome.loss.to_bits(), other.outcome.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn service_matches_direct_cluster_serve_plan() {
+        // run_service is a thin adapter: replaying its delay sampling and
+        // driving the cluster server directly must reproduce it exactly.
+        let plan = small_plan(14, 8);
+        let cfg = ServiceConfig {
+            latency: LatencyModel::exp(1.0),
+            omega: 9.0 / 14.0,
+            t_max: 1.1,
+            time_scale: 0.002,
+            threads: 3,
+        };
+        let mut rng = Pcg64::seed_from(21);
+        let service = run_service(&plan, &cfg, &mut rng).unwrap();
+
+        let mut rng = Pcg64::seed_from(21);
+        let delays: Vec<f64> = (0..plan.packets.len())
+            .map(|_| cfg.latency.sample_scaled(cfg.omega, &mut rng))
+            .collect();
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let handles = spawn_loopback_workers(
+            &dialer,
+            cfg.threads,
+            &WorkerConfig {
+                omega: cfg.omega,
+                time_scale: cfg.time_scale,
+                ..WorkerConfig::default()
+            },
+        );
+        let mut server = ClusterServer::new(ClusterConfig {
+            deadline: DeadlineMode::Virtual,
+            time_scale: cfg.time_scale,
+            ..ClusterConfig::default()
+        });
+        server
+            .accept_workers(&mut transport, cfg.threads, Duration::from_secs(10))
+            .unwrap();
+        let direct = server.serve_plan(&plan, cfg.t_max, Some(&delays)).unwrap();
+        server.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        assert_eq!(service.outcome.received, direct.outcome.received);
+        assert_eq!(service.late, direct.late);
+        assert_eq!(service.outcome.c_hat.data(), direct.outcome.c_hat.data());
     }
 }

@@ -91,6 +91,77 @@ impl LatencyModel {
     }
 }
 
+/// Text form used by CLI flags and config files (`--latency exp:1.0`),
+/// the inverse of [`LatencyModel`]'s `FromStr`:
+/// `exp:λ`, `det:t`, `sexp:shift:λ`, `pareto:xmin:α`.
+impl std::fmt::Display for LatencyModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LatencyModel::Exponential { lambda } => write!(f, "exp:{lambda}"),
+            LatencyModel::ShiftedExponential { shift, lambda } => {
+                write!(f, "sexp:{shift}:{lambda}")
+            }
+            LatencyModel::Deterministic { t } => write!(f, "det:{t}"),
+            LatencyModel::Pareto { x_min, alpha } => write!(f, "pareto:{x_min}:{alpha}"),
+        }
+    }
+}
+
+/// Parse the colon-separated spec format, e.g. `exp:1.0`, `det:0.5`,
+/// `sexp:0.2:1.0` (shift, rate), `pareto:1.0:2.5` (x_min, tail index).
+/// Long spellings `exponential`, `deterministic`, `shifted-exp` are
+/// accepted too; parameters must be finite and positive (the shift may
+/// be zero).
+impl std::str::FromStr for LatencyModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<LatencyModel, String> {
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        let num = |v: &str, what: &str| -> Result<f64, String> {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| format!("latency model '{s}': bad {what} '{v}'"))?;
+            if !x.is_finite() {
+                return Err(format!("latency model '{s}': {what} must be finite"));
+            }
+            Ok(x)
+        };
+        let positive = |x: f64, what: &str| -> Result<f64, String> {
+            if x > 0.0 {
+                Ok(x)
+            } else {
+                Err(format!("latency model '{s}': {what} must be > 0"))
+            }
+        };
+        match parts.as_slice() {
+            ["exp" | "exponential", l] => {
+                Ok(LatencyModel::Exponential { lambda: positive(num(l, "rate")?, "rate")? })
+            }
+            ["det" | "deterministic", t] => {
+                Ok(LatencyModel::Deterministic { t: positive(num(t, "time")?, "time")? })
+            }
+            ["sexp" | "shifted-exp", sh, l] => {
+                let shift = num(sh, "shift")?;
+                if shift < 0.0 {
+                    return Err(format!("latency model '{s}': shift must be ≥ 0"));
+                }
+                Ok(LatencyModel::ShiftedExponential {
+                    shift,
+                    lambda: positive(num(l, "rate")?, "rate")?,
+                })
+            }
+            ["pareto", xm, a] => Ok(LatencyModel::Pareto {
+                x_min: positive(num(xm, "x_min")?, "x_min")?,
+                alpha: positive(num(a, "alpha")?, "alpha")?,
+            }),
+            _ => Err(format!(
+                "unknown latency model '{s}' (expected exp:λ, det:t, \
+                 sexp:shift:λ, or pareto:xmin:α)"
+            )),
+        }
+    }
+}
+
 /// The paper's Ω (Remark 1 / Table VII): sub-products per worker.
 pub fn omega(num_subproducts: usize, workers: usize) -> f64 {
     num_subproducts as f64 / workers as f64
@@ -188,6 +259,73 @@ mod tests {
         }
         let mc = sum / trials as f64;
         assert!((analytic - mc).abs() < 0.02, "{analytic} vs {mc}");
+    }
+
+    #[test]
+    fn latency_models_parse_from_cli_specs() {
+        assert_eq!(
+            "exp:1.5".parse::<LatencyModel>().unwrap(),
+            LatencyModel::Exponential { lambda: 1.5 }
+        );
+        assert_eq!(
+            "exponential:0.5".parse::<LatencyModel>().unwrap(),
+            LatencyModel::exp(0.5)
+        );
+        assert_eq!(
+            "det:0.7".parse::<LatencyModel>().unwrap(),
+            LatencyModel::Deterministic { t: 0.7 }
+        );
+        assert_eq!(
+            "sexp:0.2:2.0".parse::<LatencyModel>().unwrap(),
+            LatencyModel::ShiftedExponential { shift: 0.2, lambda: 2.0 }
+        );
+        assert_eq!(
+            "sexp:0:1".parse::<LatencyModel>().unwrap(),
+            LatencyModel::ShiftedExponential { shift: 0.0, lambda: 1.0 }
+        );
+        assert_eq!(
+            "pareto:1.0:2.5".parse::<LatencyModel>().unwrap(),
+            LatencyModel::Pareto { x_min: 1.0, alpha: 2.5 }
+        );
+        // whitespace around fields is tolerated
+        assert_eq!(
+            " pareto : 1.0 : 2.5 ".trim().parse::<LatencyModel>().unwrap(),
+            LatencyModel::Pareto { x_min: 1.0, alpha: 2.5 }
+        );
+    }
+
+    #[test]
+    fn bad_latency_specs_are_rejected_with_context() {
+        for bad in [
+            "",
+            "exp",
+            "exp:",
+            "exp:zero",
+            "exp:-1",
+            "exp:0",
+            "exp:inf",
+            "det:0",
+            "sexp:-0.1:1",
+            "pareto:1.0",
+            "pareto:1:2:3",
+            "gauss:1.0",
+        ] {
+            let err = bad.parse::<LatencyModel>().unwrap_err();
+            assert!(!err.is_empty(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for model in [
+            LatencyModel::exp(1.0),
+            LatencyModel::Deterministic { t: 0.25 },
+            LatencyModel::ShiftedExponential { shift: 0.5, lambda: 3.0 },
+            LatencyModel::Pareto { x_min: 1.0, alpha: 2.5 },
+        ] {
+            let text = model.to_string();
+            assert_eq!(text.parse::<LatencyModel>().unwrap(), model, "{text}");
+        }
     }
 
     #[test]

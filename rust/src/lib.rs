@@ -14,12 +14,14 @@
 //!
 //! * **L3 (this crate)** — the coordinator: [`coding`], [`partition`],
 //!   [`latency`], [`analysis`], [`sim`], [`coordinator`], [`nn`],
-//!   [`experiments`].
+//!   [`experiments`], and the networked runtime [`cluster`]
+//!   (coordinator/worker agents over a wire protocol).
 //! * **L2/L1 (build time)** — `python/compile/` lowers the JAX model and
 //!   Pallas kernels to HLO text; [`runtime`] loads and executes them via
 //!   PJRT. Python never runs on the request path.
 
 pub mod analysis;
+pub mod cluster;
 pub mod coding;
 pub mod config;
 pub mod coordinator;

@@ -3,19 +3,26 @@
 //! ```text
 //! uepmm exp <name|all> [--out results] [--trials N] [--full] [--seed S]
 //! uepmm list                      # available experiments
-//! uepmm serve [...]               # threaded coordinator demo
+//! uepmm serve [...]               # cluster coordinator (TCP or loopback)
+//! uepmm worker [...]              # cluster worker agent (TCP)
 //! uepmm matmul [...]              # one coded multiplication (native/pjrt)
 //! ```
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
+use uepmm::cluster::{
+    spawn_loopback_workers, ClusterConfig, ClusterServer, CodingConfig,
+    DeadlineMode, LoopbackTransport, MatmulRequest, TcpConn, TcpTransport,
+    Transport, WorkerConfig,
+};
 use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
-use uepmm::coordinator::{run_service, Coordinator, Plan, ServiceConfig};
+use uepmm::coordinator::{Coordinator, Plan};
 use uepmm::experiments::{self, ExpContext};
 use uepmm::latency::LatencyModel;
 use uepmm::rng::Pcg64;
-use uepmm::runtime::{NativeEngine, PjrtEngine};
+use uepmm::runtime::{engine_by_name, NativeEngine, PjrtEngine};
 use uepmm::sim::StragglerSim;
 use uepmm::util::cli::Command;
 use uepmm::util::pool::available_parallelism;
@@ -48,6 +55,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         }
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "matmul" => cmd_matmul(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -65,7 +73,9 @@ fn print_usage() {
          exp <name|all>   reproduce a paper figure/table (see `uepmm list`)\n  \
          list             list available experiments\n  \
          matmul           run one coded approximate multiplication\n  \
-         serve            threaded coordinator demo (wall-clock deadline)\n  \
+         serve            cluster coordinator: serve a request stream over\n  \
+                          TCP workers (or --loopback in-process workers)\n  \
+         worker           cluster worker agent: connect to a coordinator\n  \
          help             this message"
     );
 }
@@ -171,54 +181,220 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("serve", "threaded coordinator demo")
-        .opt("code", "ew", "uncoded|rep|mds|now|ew")
-        .opt("workers", "15", "worker count")
-        .opt("tmax", "1.0", "virtual deadline")
-        .opt("lambda", "1.0", "exponential latency rate")
-        .opt("requests", "5", "number of multiplication requests")
-        .opt("time-scale", "0.02", "wall seconds per virtual time unit")
-        .opt("seed", "1", "RNG seed")
-        .opt("scale", "10", "matrix size divisor vs the paper");
+    let cmd = Command::new("serve", "cluster coordinator serving a request stream")
+        .opt("listen", "127.0.0.1:7077", "TCP listen address")
+        .flag("loopback", "run in-process loopback workers instead of TCP")
+        .opt("threads", "0", "loopback worker threads (0 = all cores)")
+        .opt("min-workers", "2", "TCP: workers to wait for before serving")
+        .opt("accept-timeout", "60", "seconds to wait for worker registration")
+        .opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
+        .opt("workers", "15", "coded packets (jobs) per request")
+        .opt("requests", "6", "number of multiplication requests")
+        .opt("tmax", "1.0", "per-request deadline(s), comma list cycled")
+        .opt("time-scale", "0.05", "wall seconds per virtual time unit")
+        .opt(
+            "latency",
+            "exp:1.0",
+            "injected straggle model for --loopback (exp:λ|det:t|sexp:s:λ|pareto:x:α)",
+        )
+        .opt("matrices", "2", "distinct A matrices cycled through the stream")
+        .opt("scale", "10", "matrix size divisor vs the paper")
+        .opt("seed", "1", "RNG seed");
     let a = cmd.parse(rest)?;
+    let loopback = a.get_bool("loopback");
     let mut spec = SyntheticSpec::fig9_rxc().scaled(a.get_usize("scale")?);
     spec.workers = a.get_usize("workers")?;
     let code = parse_code(a.get_str("code"), &spec.gamma)?;
+    let time_scale = a.get_f64("time-scale")?;
+    anyhow::ensure!(time_scale > 0.0, "--time-scale must be > 0");
+    let tmaxes = a.get_f64_list("tmax")?;
+    anyhow::ensure!(!tmaxes.is_empty(), "--tmax needs at least one deadline");
+    let requests = a.get_usize("requests")?;
+    let n_matrices = a.get_usize("matrices")?.max(1);
     let mut rng = Pcg64::seed_from(a.get_u64("seed")?);
-    let cfg = ServiceConfig {
-        latency: LatencyModel::exp(a.get_f64("lambda")?),
-        omega: spec.omega(),
-        t_max: a.get_f64("tmax")?,
-        time_scale: a.get_f64("time-scale")?,
-        threads: available_parallelism(),
+
+    // The loopback path injects seeded virtual delays and filters on the
+    // virtual deadline (deterministic); the TCP path lets workers and the
+    // transport produce real timing and cuts off at the wall deadline.
+    let coding = CodingConfig {
+        part: spec.part.clone(),
+        spec: code,
+        cm: spec.class_map(),
+        workers: spec.workers,
+        latency: if loopback { Some(a.get::<LatencyModel>("latency")?) } else { None },
     };
+    let cluster_cfg = ClusterConfig {
+        deadline: if loopback { DeadlineMode::Virtual } else { DeadlineMode::Wall },
+        time_scale,
+        ..ClusterConfig::default()
+    };
+    let mut server = ClusterServer::new(cluster_cfg);
+    let accept_timeout = Duration::from_secs_f64(a.get_f64("accept-timeout")?);
+
+    let mut loopback_handles = Vec::new();
+    let expected = if loopback {
+        let threads = match a.get_usize("threads")? {
+            0 => available_parallelism(),
+            t => t,
+        };
+        let (mut transport, dialer) = LoopbackTransport::new();
+        loopback_handles = spawn_loopback_workers(
+            &dialer,
+            threads,
+            &WorkerConfig {
+                name: "loop".to_string(),
+                omega: coding.omega(),
+                time_scale,
+                ..WorkerConfig::default()
+            },
+        );
+        drop(dialer);
+        let joined = server.accept_workers(&mut transport, threads, accept_timeout)?;
+        anyhow::ensure!(joined == threads, "only {joined}/{threads} loopback workers");
+        threads
+    } else {
+        let mut transport = TcpTransport::bind(a.get_str("listen"))?;
+        let want = a.get_usize("min-workers")?.max(1);
+        println!(
+            "coordinator listening on {} — waiting for {want} workers",
+            transport.local_addr()
+        );
+        let joined = server.accept_workers(&mut transport, want, accept_timeout)?;
+        anyhow::ensure!(
+            joined >= want,
+            "only {joined}/{want} workers registered within the accept timeout"
+        );
+        want
+    };
+    for w in server.worker_info() {
+        println!("worker {} registered: {}", w.id, w.name);
+    }
     println!(
-        "serving {} requests: {} workers, deadline {}, Ω={:.3}",
-        a.get_usize("requests")?,
-        spec.workers,
-        cfg.t_max,
-        cfg.omega
+        "serving {requests} requests: {} coded jobs over {expected} workers, \
+         Ω={:.3}, deadlines {:?}, {} deadline mode",
+        coding.workers,
+        coding.omega(),
+        tmaxes,
+        if loopback { "virtual" } else { "wall" },
     );
-    for req in 0..a.get_usize("requests")? {
-        let (ma, mb) = spec.sample_matrices(&mut rng);
-        let plan = Plan::build_with_classes(
-            &spec.part,
-            code.clone(),
-            spec.class_map(),
-            spec.workers,
-            &ma,
-            &mb,
+
+    // Pre-sample the distinct A matrices of the stream (id = index).
+    let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut rng)).collect();
+    let (mut received, mut late, mut missing, mut recovered) = (0, 0, 0, 0);
+    for req in 0..requests {
+        let a_id = (req % n_matrices) as u64;
+        let b = spec.sample_b(&mut rng);
+        let out = server.serve_request(
+            &coding,
+            &MatmulRequest {
+                a_id,
+                a: a_mats[a_id as usize].clone(),
+                b,
+                t_max: tmaxes[req % tmaxes.len()],
+                // demo/CI stream: score every request so the loss column
+                // is meaningful (production would pass false)
+                score: true,
+            },
             &mut rng,
         )?;
-        let out = run_service(&plan, &cfg, &mut rng)?;
         println!(
-            "request {req}: {} arrivals ({} late), recovered {}/9, loss {:.4}, wall {:?}",
+            "request {req} (A#{a_id}, T_max={}): {} arrivals ({} late, {} missing), \
+             recovered {}/{}, loss {:.4}, cache {}, wall {:?}",
+            tmaxes[req % tmaxes.len()],
             out.outcome.received,
             out.late,
+            out.missing(),
             out.outcome.recovered,
+            coding.part.num_products(),
             out.outcome.normalized_loss,
-            out.wall
+            if out.cache_hit == Some(true) { "hit" } else { "miss" },
+            out.wall,
         );
+        received += out.outcome.received;
+        late += out.late;
+        missing += out.missing();
+        recovered += out.outcome.recovered;
+        let evicted = server.heartbeat();
+        for id in evicted {
+            println!("worker {id} evicted (missed heartbeat)");
+        }
+        anyhow::ensure!(server.live_workers() > 0, "all workers gone; aborting stream");
     }
+    let cache = server.cache_stats();
+    println!(
+        "stream done: requests={requests} received={received} late={late} \
+         missing={missing} recovered_total={recovered} cache_hits={} \
+         cache_misses={} cache_evictions={}",
+        cache.hits, cache.misses, cache.evictions
+    );
+    // drain until every worker closes its side: a backlogged straggler
+    // must read the queued Shutdown before this process exits
+    server.shutdown_graceful(Duration::from_secs(60));
+    for h in loopback_handles {
+        match h.join() {
+            Ok(r) => {
+                r?;
+            }
+            Err(_) => anyhow::bail!("loopback worker panicked"),
+        }
+    }
+    println!("shutdown complete");
+    Ok(())
+}
+
+fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("worker", "cluster worker agent")
+        .opt("connect", "127.0.0.1:7077", "coordinator address")
+        .opt("name", "", "worker name (default worker-<pid>)")
+        .opt(
+            "latency",
+            "",
+            "self-injected straggle model (empty = real timing only)",
+        )
+        .opt("omega", "1.0", "capacity scaling for self-injected delays")
+        .opt("time-scale", "0.05", "wall seconds per virtual time unit")
+        .opt("seed", "0", "delay-sampling RNG seed")
+        .opt("engine", "native", "native|pjrt")
+        .opt("artifacts", "artifacts", "artifact dir for the pjrt engine")
+        .opt("retry", "15", "seconds to keep retrying the initial connect");
+    let a = cmd.parse(rest)?;
+    let name = match a.get_str("name") {
+        "" => format!("worker-{}", std::process::id()),
+        n => n.to_string(),
+    };
+    let latency = match a.get_str("latency") {
+        "" => None,
+        _ => Some(a.get::<LatencyModel>("latency")?),
+    };
+    let cfg = WorkerConfig {
+        name: name.clone(),
+        latency,
+        omega: a.get_f64("omega")?,
+        time_scale: a.get_f64("time-scale")?,
+        seed: a.get_u64("seed")?,
+    };
+    let engine = engine_by_name(a.get_str("engine"), a.get_str("artifacts"))?;
+    let addr = a.get_str("connect");
+    let deadline = Instant::now() + Duration::from_secs_f64(a.get_f64("retry")?);
+    let mut conn = loop {
+        match TcpConn::connect(addr) {
+            Ok(c) => break c,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("{name}: could not reach coordinator {addr}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(250));
+            }
+        }
+    };
+    println!("{name}: connected to {addr} (engine {})", engine.name());
+    let stats = uepmm::cluster::run_worker(&mut conn, &engine, &cfg)?;
+    println!(
+        "{name}: done ({}): id={} jobs={} heartbeats={}",
+        if stats.clean_shutdown { "clean shutdown" } else { "connection lost" },
+        stats.worker_id,
+        stats.jobs,
+        stats.heartbeats,
+    );
     Ok(())
 }

@@ -28,6 +28,40 @@ pub trait ExecEngine {
     fn name(&self) -> &'static str;
 }
 
+impl<E: ExecEngine + ?Sized> ExecEngine for &E {
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix> {
+        (**self).matmul(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+impl<E: ExecEngine + ?Sized> ExecEngine for Box<E> {
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix> {
+        (**self).matmul(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Resolve an engine by CLI name: `native` (always available) or `pjrt`
+/// with its artifact directory (compiles to an error message without the
+/// `pjrt` feature). Used by `uepmm worker --engine …`.
+pub fn engine_by_name(
+    name: &str,
+    artifacts: &str,
+) -> anyhow::Result<Box<dyn ExecEngine>> {
+    match name {
+        "native" => Ok(Box::new(NativeEngine::default())),
+        "pjrt" => Ok(Box::new(PjrtEngine::from_artifacts(artifacts)?)),
+        other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
+    }
+}
+
 /// Pure-Rust execution engine (blocked + thread-parallel matmul).
 #[derive(Clone, Debug)]
 pub struct NativeEngine {
@@ -61,6 +95,30 @@ impl ExecEngine for NativeEngine {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+
+    fn engine_smoke<E: ExecEngine>(eng: E) {
+        let mut rng = Pcg64::seed_from(2);
+        let a = Matrix::randn(4, 6, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let c = eng.matmul(&a, &b).unwrap();
+        assert!(c.allclose(&crate::linalg::matmul(&a, &b), 1e-12));
+    }
+
+    #[test]
+    fn engines_compose_through_refs_and_boxes() {
+        let eng = NativeEngine::serial();
+        engine_smoke(&eng);
+        let boxed: Box<dyn ExecEngine> = Box::new(eng);
+        assert_eq!(boxed.name(), "native");
+        engine_smoke(boxed);
+    }
+
+    #[test]
+    fn engine_by_name_resolves_native_and_rejects_unknown() {
+        let eng = engine_by_name("native", "unused").unwrap();
+        assert_eq!(eng.name(), "native");
+        assert!(engine_by_name("gpu3000", "unused").is_err());
+    }
 
     #[test]
     fn native_engine_matches_linalg() {

@@ -153,6 +153,20 @@ impl Args {
         self.options.get(name).map(|s| s.as_str()).unwrap_or("")
     }
 
+    /// Parse an option through any `FromStr` type (e.g.
+    /// `args.get::<LatencyModel>("latency")` for `--latency exp:1.0`).
+    /// The type's own parse error rides along in the message, so rich
+    /// diagnostics (like `LatencyModel`'s) reach the user.
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self.get_str(name);
+        s.parse().map_err(|e| {
+            CliError::InvalidValue(name.to_string(), format!("{s} ({e})"))
+        })
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
         let s = self.get_str(name);
         s.parse()
@@ -244,6 +258,22 @@ mod tests {
         let c = Command::new("c", "").opt("tmax", "0.25,0.5,1,2", "");
         let a = c.parse(&[]).unwrap();
         assert_eq!(a.get_f64_list("tmax").unwrap(), vec![0.25, 0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn generic_get_parses_fromstr_types() {
+        let a = cmd().parse(&to_vec(&["--out", "x", "--lambda", "2.5"])).unwrap();
+        assert_eq!(a.get::<f64>("lambda").unwrap(), 2.5);
+        assert_eq!(a.get::<usize>("workers").unwrap(), 30);
+        let m: crate::latency::LatencyModel = {
+            let c = Command::new("c", "").opt("latency", "exp:1.0", "");
+            c.parse(&[]).unwrap().get("latency").unwrap()
+        };
+        assert_eq!(m, crate::latency::LatencyModel::exp(1.0));
+        assert!(matches!(
+            a.get::<usize>("out"),
+            Err(CliError::InvalidValue(_, _))
+        ));
     }
 
     #[test]

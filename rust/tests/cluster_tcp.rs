@@ -1,0 +1,228 @@
+//! End-to-end TCP cluster integration: a coordinator and two worker
+//! agents on localhost, real sockets, wall-clock deadlines, and a
+//! deliberate straggler.
+//!
+//! Timing margins are deliberately huge (the straggler is 50× slower
+//! than the fast worker) so the assertions hold on a loaded CI box.
+
+use std::time::Duration;
+
+use uepmm::cluster::{
+    run_worker, ClusterConfig, ClusterServer, CodingConfig, DeadlineMode,
+    MatmulRequest, TcpConn, TcpTransport, WorkerConfig,
+};
+use uepmm::coding::{CodeKind, CodeSpec};
+use uepmm::latency::LatencyModel;
+use uepmm::linalg::Matrix;
+use uepmm::partition::{default_pair_classes, ClassMap, Partitioning};
+use uepmm::rng::Pcg64;
+use uepmm::runtime::NativeEngine;
+
+/// Wall seconds per virtual time unit in this test.
+const TIME_SCALE: f64 = 0.05;
+
+fn spawn_tcp_worker(
+    addr: String,
+    name: &str,
+    delay: f64,
+) -> std::thread::JoinHandle<uepmm::cluster::WorkerStats> {
+    let cfg = WorkerConfig {
+        name: name.to_string(),
+        latency: Some(LatencyModel::Deterministic { t: delay }),
+        omega: 1.0,
+        time_scale: TIME_SCALE,
+        seed: 0,
+    };
+    std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(&addr).expect("worker connect");
+        run_worker(&mut conn, &NativeEngine::serial(), &cfg).expect("worker loop")
+    })
+}
+
+/// The acceptance scenario: a request stream over TCP where the
+/// straggler misses tight deadlines, with the decoded loss monotone
+/// non-increasing as the deadline grows, cache hits on the repeated-`A`
+/// stream, and a clean shutdown.
+#[test]
+fn tcp_cluster_deadline_sweep_with_straggler() {
+    let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr();
+    // fast worker: 0.04 virtual (2 ms wall) per job; straggler: 2.0
+    // virtual (100 ms wall) per job
+    let fast = spawn_tcp_worker(addr.clone(), "fast", 0.04);
+    let slow = spawn_tcp_worker(addr.clone(), "slow", 2.0);
+
+    let mut server = ClusterServer::new(ClusterConfig {
+        deadline: DeadlineMode::Wall,
+        time_scale: TIME_SCALE,
+        late_drain: Duration::from_millis(20),
+        ..ClusterConfig::default()
+    });
+    let joined = server
+        .accept_workers(&mut transport, 2, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(joined, 2);
+
+    // uncoded: every received packet recovers exactly one sub-product,
+    // so recovery counts follow arrivals deterministically. With 9 jobs
+    // round-robined over 2 workers, the straggler owns 4–5 sub-products:
+    // a tight deadline gives a genuinely lossy (but nonzero) recovery.
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let pair = default_pair_classes(3);
+    let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+    let coding = CodingConfig {
+        part: part.clone(),
+        spec: CodeSpec::stacked(CodeKind::Uncoded),
+        cm,
+        workers: 9,
+        latency: None,
+    };
+    let mut mats = Pcg64::seed_from(3);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+
+    // Same (A, B) served at growing deadlines. Received sets nest: the
+    // fast worker's jobs (2 ms each) land in every window, the
+    // straggler's (100 ms each, serialized) only in the generous one.
+    //   T=1.0 (50 ms):  fast's 4–5 jobs, none of the straggler's
+    //   T=30  (1.5 s):  everything
+    let mut rng = Pcg64::seed_from(4);
+    let deadlines = [1.0, 30.0];
+    let mut outcomes = Vec::new();
+    for &t_max in &deadlines {
+        let req = MatmulRequest {
+            a_id: 0,
+            a: a.clone(),
+            b: b.clone(),
+            t_max,
+            score: true,
+        };
+        outcomes.push(server.serve_request(&coding, &req, &mut rng).unwrap());
+    }
+
+    // tight deadline: the straggler's results are not in
+    let tight = &outcomes[0];
+    assert!(
+        tight.late + tight.missing() > 0,
+        "straggler should miss the tight deadline: {tight:?}"
+    );
+    assert!(tight.outcome.received < 9);
+    // the fast worker's sub-products decode (uncoded ⇒ per-packet) …
+    assert!(tight.outcome.recovered > 0, "{tight:?}");
+    // … but the straggler's are missing, so the loss is real
+    assert!(tight.outcome.normalized_loss > 0.0);
+
+    // generous deadline: everything lands, exact product
+    let generous = &outcomes[1];
+    assert_eq!(generous.outcome.received, 9, "{generous:?}");
+    assert_eq!(generous.outcome.recovered, 9);
+    assert!(generous.outcome.normalized_loss < 1e-9);
+
+    // paper-shaped behavior: loss monotone non-increasing in the deadline
+    for w in outcomes.windows(2) {
+        assert!(
+            w[1].outcome.normalized_loss
+                <= w[0].outcome.normalized_loss + 1e-9,
+            "loss must not grow with the deadline: {} then {}",
+            w[0].outcome.normalized_loss,
+            w[1].outcome.normalized_loss
+        );
+    }
+
+    // repeated-A stream: the second request hit the encoded-block cache
+    assert_eq!(outcomes[0].cache_hit, Some(false));
+    assert_eq!(outcomes[1].cache_hit, Some(true));
+    let stats = server.cache_stats();
+    assert!(stats.hits > 0);
+
+    // clean shutdown: both workers exit via the protocol
+    server.shutdown();
+    let fast_stats = fast.join().unwrap();
+    let slow_stats = slow.join().unwrap();
+    assert!(fast_stats.clean_shutdown);
+    assert!(slow_stats.clean_shutdown);
+    assert!(fast_stats.jobs > 0);
+    // the straggler computed every job too — its results were just late
+    assert!(slow_stats.jobs > 0);
+}
+
+/// Losing a worker mid-stream must not take the service down: the
+/// registry notices the dead connection and the survivors keep serving.
+#[test]
+fn tcp_cluster_survives_worker_death() {
+    let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr();
+    let stayer = spawn_tcp_worker(addr.clone(), "stayer", 0.04);
+    // this worker dies after its first request batch: simulate by a
+    // worker thread that drops the connection after a short wait
+    let quitter_addr = addr.clone();
+    let quitter = std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(&quitter_addr).expect("connect");
+        use uepmm::cluster::{Connection, Msg};
+        conn.send(&Msg::Hello { agent: "quitter".to_string() }).unwrap();
+        match conn.recv().unwrap() {
+            Msg::Welcome { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // absorb whatever arrives for a moment, then vanish without
+        // replying to anything
+        std::thread::sleep(Duration::from_millis(80));
+        drop(conn);
+    });
+
+    let mut server = ClusterServer::new(ClusterConfig {
+        deadline: DeadlineMode::Wall,
+        time_scale: TIME_SCALE,
+        heartbeat_timeout: Duration::from_millis(200),
+        late_drain: Duration::from_millis(20),
+        ..ClusterConfig::default()
+    });
+    let joined = server
+        .accept_workers(&mut transport, 2, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(joined, 2);
+
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let pair = default_pair_classes(3);
+    let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+    let coding = CodingConfig {
+        part,
+        spec: CodeSpec::stacked(CodeKind::Uncoded),
+        cm,
+        workers: 9,
+        latency: None,
+    };
+    let mut mats = Pcg64::seed_from(9);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let mut rng = Pcg64::seed_from(10);
+
+    // let the quitter vanish, then stream; the first request may still
+    // strand jobs on the not-yet-detected dead connection, but once the
+    // registry has noticed, dispatch fails over and full recovery resumes
+    quitter.join().unwrap();
+    let mut served_after_death = 0;
+    for req in 0..3 {
+        let live_before = server.live_workers();
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        let out = server
+            .serve_request(
+                &coding,
+                &MatmulRequest { a_id: 0, a: a.clone(), b, t_max: 30.0, score: true },
+                &mut rng,
+            )
+            .unwrap();
+        let _ = server.heartbeat();
+        if live_before == 1 {
+            served_after_death += 1;
+            // every job went to the stayer, so a generous deadline fully
+            // decodes despite the lost worker
+            assert_eq!(out.outcome.recovered, 9, "req {req}: {out:?}");
+        }
+    }
+    assert!(
+        served_after_death > 0,
+        "the quitter never died from the registry's point of view"
+    );
+    server.shutdown();
+    assert!(stayer.join().unwrap().clean_shutdown);
+}
