@@ -1,65 +1,58 @@
-//! The cluster runtime end to end, in one process: a coordinator serving
-//! a request stream over the loopback transport, with per-request
-//! deadline/loss/straggler/cache stats printed.
+//! The cluster runtime end to end, in one process: a `Session` on the
+//! networked `ClusterBackend` serving a request stream over the
+//! loopback transport, with per-request deadline/loss/straggler/cache
+//! stats and the anytime progress stream printed.
 //!
 //! The stream has the DNN-training shape: two weight matrices `A#0`,
 //! `A#1` alternate across requests while the activation matrix `B` is
 //! fresh every time — so after the first lap every request hits the
-//! encoded-block cache and skips re-encoding `A`.
+//! session's encoded-block cache and skips re-encoding `A`.
 //!
 //! `cargo run --release --example cluster_service`
 
-use std::time::Duration;
-
-use uepmm::cluster::{
-    spawn_loopback_workers, ClusterConfig, ClusterServer, CodingConfig,
-    DeadlineMode, LoopbackTransport, MatmulRequest, WorkerConfig,
-};
-use uepmm::coding::{CodeKind, CodeSpec, WindowPolynomial};
+use uepmm::cluster::{ClusterConfig, DeadlineMode, WorkerConfig};
 use uepmm::config::SyntheticSpec;
-use uepmm::latency::LatencyModel;
-use uepmm::rng::Pcg64;
+use uepmm::prelude::*;
 use uepmm::util::pool::available_parallelism;
 
 fn main() -> anyhow::Result<()> {
     let spec = SyntheticSpec::fig9_rxc().scaled(10);
     let threads = available_parallelism().min(8);
-    let coding = CodingConfig {
-        part: spec.part.clone(),
-        spec: CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3())),
-        cm: spec.class_map(),
-        workers: spec.workers,
-        // seeded injected stragglers: the run is deterministic
-        latency: Some(LatencyModel::exp(1.0)),
-    };
-    println!(
-        "loopback cluster: {} coded jobs over {threads} worker threads, Ω={:.2}",
-        coding.workers,
-        coding.omega()
-    );
-
-    let (mut transport, dialer) = LoopbackTransport::new();
-    let handles = spawn_loopback_workers(
-        &dialer,
+    let backend = ClusterBackend::loopback(
         threads,
-        &WorkerConfig {
-            name: "loop".to_string(),
-            omega: coding.omega(),
+        ClusterConfig {
+            deadline: DeadlineMode::Virtual,
             time_scale: 0.002, // pace stragglers at 2 ms per virtual unit
+            cache_capacity: 0, // the session owns the cache
+            ..ClusterConfig::default()
+        },
+        WorkerConfig {
+            name: "loop".to_string(),
+            time_scale: 0.002,
             ..WorkerConfig::default()
         },
+        std::time::Duration::from_secs(30),
+    )?;
+    let mut session = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3())))
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        // seeded injected stragglers: the run is deterministic
+        .latency(LatencyModel::exp(1.0))
+        .deadline(0.6)
+        .score(true)
+        .seed(7)
+        .backend(backend)
+        .build()?;
+    println!(
+        "loopback cluster: {} coded jobs over {threads} worker threads, Ω={:.2}",
+        session.workers(),
+        session.omega_value()
     );
-    drop(dialer);
-    let mut server = ClusterServer::new(ClusterConfig {
-        deadline: DeadlineMode::Virtual,
-        time_scale: 0.002,
-        ..ClusterConfig::default()
-    });
-    let joined = server.accept_workers(&mut transport, threads, Duration::from_secs(10))?;
-    anyhow::ensure!(joined == threads, "worker registration failed");
 
     let mut rng = Pcg64::seed_from(7);
-    let weights: Vec<_> = (0..2).map(|_| spec.sample_a(&mut rng)).collect();
+    let weights: Vec<Matrix> = (0..2).map(|_| spec.sample_a(&mut rng)).collect();
     // deadlines cycle: the same A at a growing deadline shows the
     // paper's loss-vs-T_max trade-off live
     let deadlines = [0.6, 1.2, 2.4];
@@ -69,30 +62,23 @@ fn main() -> anyhow::Result<()> {
         let a_id = (req % weights.len()) as u64;
         let b = spec.sample_b(&mut rng);
         let t_max = deadlines[(req / weights.len()) % deadlines.len()];
-        let out = server.serve_request(
-            &coding,
-            &MatmulRequest {
-                a_id,
-                a: weights[a_id as usize].clone(),
-                b,
-                t_max,
-                score: true,
-            },
-            &mut rng,
+        let out = session.run(
+            Request::new(a_id, weights[a_id as usize].clone(), b).deadline(t_max),
         )?;
         total_loss += out.outcome.normalized_loss;
         println!(
             "req {req}: A#{a_id} T_max={t_max:<4} → {:>2} in time, {:>2} late \
-             → recovered {}/9, norm-loss {:.4}, cache {}, wall {:?}",
+             → recovered {}/9, norm-loss {:.4}, {} refinements, cache {}, wall {:?}",
             out.outcome.received,
             out.late,
             out.outcome.recovered,
             out.outcome.normalized_loss,
+            out.progress.refinements(),
             if out.cache_hit == Some(true) { "hit " } else { "miss" },
             out.wall,
         );
     }
-    let cache = server.cache_stats();
+    let cache = session.cache_stats();
     println!(
         "\nmean norm-loss {:.4} over {REQUESTS} requests; encoded-block cache: \
          {} hits / {} misses — re-encoding of A was skipped on every hit.",
@@ -100,9 +86,6 @@ fn main() -> anyhow::Result<()> {
         cache.hits,
         cache.misses
     );
-    server.shutdown();
-    for h in handles {
-        h.join().expect("worker thread")?;
-    }
+    session.shutdown()?;
     Ok(())
 }

@@ -1,62 +1,80 @@
-//! The deployment-shaped path: a wall-clock coordinator serving a stream
-//! of approximate-multiplication requests over a thread pool of workers
-//! with injected straggler delays (paper Fig. 2 as a running service).
+//! The deployment-shaped path: a coordinator serving a stream of
+//! approximate-multiplication requests over a thread pool of workers
+//! with injected straggler delays (paper Fig. 2 as a running service) —
+//! driven through the unified client API's `PooledBackend`.
+//!
+//! The stream alternates two weight matrices (the DNN-training shape),
+//! so after the first lap every request hits the session's
+//! encoded-block cache and skips re-encoding `A`.
 //!
 //! `cargo run --release --example coded_service`
 
-use uepmm::coding::{CodeKind, CodeSpec, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
-use uepmm::coordinator::{run_service, Plan, ServiceConfig};
-use uepmm::latency::LatencyModel;
-use uepmm::rng::Pcg64;
+use uepmm::prelude::*;
 use uepmm::util::pool::available_parallelism;
 
 fn main() -> anyhow::Result<()> {
     let spec = SyntheticSpec::fig9_rxc().scaled(10);
-    let mut rng = Pcg64::seed_from(3);
-    let cfg = ServiceConfig {
-        latency: LatencyModel::exp(1.0),
-        omega: spec.omega(),
-        t_max: 1.0,
-        time_scale: 0.01, // 1 virtual time unit = 10 ms wall
-        threads: available_parallelism().min(8),
-    };
+    let threads = available_parallelism().min(8);
+    let mut session = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3())))
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        .latency(LatencyModel::exp(1.0))
+        .deadline(1.0)
+        .score(true)
+        .seed(3)
+        .backend(PooledBackend::spawn(threads)?)
+        .build()?;
     println!(
-        "coded matmul service: {} workers on {} threads, virtual deadline {}, Ω={:.2}",
-        spec.workers, cfg.threads, cfg.t_max, cfg.omega
+        "coded matmul service: {} workers on {threads} threads, virtual deadline 1, Ω={:.2}",
+        session.workers(),
+        session.omega_value()
     );
+
+    // Two weight matrices alternate; activations are fresh per request.
+    let mut rng = Pcg64::seed_from(3);
+    let weights: Vec<Matrix> = (0..2).map(|_| spec.sample_a(&mut rng)).collect();
+    const REQUESTS: usize = 8;
+
+    // Batched submission: the whole stream is prepared (one encode per
+    // weight matrix, cache hits for the rest) before any result is read.
+    let mut reqs = Vec::new();
+    for req in 0..REQUESTS {
+        let a_id = (req % weights.len()) as u64;
+        let b = spec.sample_b(&mut rng);
+        reqs.push(Request::new(a_id, weights[a_id as usize].clone(), b));
+    }
+    let handles = session.submit_batch(reqs)?;
+
     let mut total_loss = 0.0;
     let mut total_recovered = 0usize;
-    const REQUESTS: usize = 8;
-    for req in 0..REQUESTS {
-        let (a, b) = spec.sample_matrices(&mut rng);
-        let code = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
-        let plan = Plan::build_with_classes(
-            &spec.part,
-            code,
-            spec.class_map(),
-            spec.workers,
-            &a,
-            &b,
-            &mut rng,
-        )?;
-        let out = run_service(&plan, &cfg, &mut rng)?;
+    for (req, h) in handles.into_iter().enumerate() {
+        let out = session.wait(h)?;
         total_loss += out.outcome.normalized_loss;
         total_recovered += out.outcome.recovered;
         println!(
-            "req {req}: {:>2} arrivals ({} late) → recovered {}/9, norm-loss {:.4}, wall {:?}",
+            "req {req}: {:>2} arrivals ({} late) → recovered {}/9, norm-loss {:.4}, \
+             cache {}, wall {:?}",
             out.outcome.received,
             out.late,
             out.outcome.recovered,
             out.outcome.normalized_loss,
+            if out.cache_hit == Some(true) { "hit " } else { "miss" },
             out.wall,
         );
     }
+    let cache = session.cache_stats();
     println!(
-        "\nmean normalized loss {:.4}, mean recovery {:.1}/9 — the PS never \
-         waited past its deadline; stragglers were simply cut off.",
+        "\nmean normalized loss {:.4}, mean recovery {:.1}/9; encoded-block cache \
+         {} hits / {} misses — the PS never waited past its deadline; stragglers \
+         were simply cut off.",
         total_loss / REQUESTS as f64,
-        total_recovered as f64 / REQUESTS as f64
+        total_recovered as f64 / REQUESTS as f64,
+        cache.hits,
+        cache.misses
     );
+    session.shutdown()?;
     Ok(())
 }

@@ -1,21 +1,20 @@
 //! Quickstart: one UEP-coded approximate matrix multiplication through
-//! the full three-layer stack — Rust coordinator (L3) dispatching coded
-//! worker jobs that execute the AOT-compiled JAX/Pallas matmul artifacts
-//! (L2/L1) on the PJRT CPU client.
+//! the unified client API — a `Session` on the in-process backend,
+//! dispatching coded worker jobs that execute the AOT-compiled
+//! JAX/Pallas matmul artifacts (L2/L1) on the PJRT CPU client.
+//!
+//! The in-process backend is the *streaming* one: the progress stream
+//! below is the paper's anytime story live — every absorbed arrival
+//! refines `Ĉ(t)`, with the high-norm blocks recovered first (UEP
+//! protection).
 //!
 //! Build artifacts first: `make artifacts`, then
 //! `cargo run --release --example quickstart`.
 //! (Falls back to the native engine with a notice if artifacts are
 //! missing, so the example always runs.)
 
-use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
-use uepmm::coordinator::{Coordinator, Plan};
-use uepmm::latency::LatencyModel;
-use uepmm::linalg::Matrix;
-use uepmm::partition::Partitioning;
-use uepmm::rng::Pcg64;
-use uepmm::runtime::{NativeEngine, PjrtEngine};
-use uepmm::sim::StragglerSim;
+use uepmm::prelude::*;
+use uepmm::runtime::{ExecEngine, NativeEngine, PjrtEngine};
 
 fn main() -> anyhow::Result<()> {
     // --- the problem: C = A·B with blocks of very different magnitude --
@@ -31,46 +30,55 @@ fn main() -> anyhow::Result<()> {
     let a = Matrix::vconcat(&a_blocks.iter().collect::<Vec<_>>());
     let b = Matrix::hconcat(&b_blocks.iter().collect::<Vec<_>>());
 
-    // --- the plan: classify by norm, EW-UEP encode for 15 workers ------
-    let spec = CodeSpec::new(
-        CodeKind::EwUep(WindowPolynomial::paper_table3()),
-        EncodeStyle::Stacked,
-    );
-    let plan = Plan::build(&part, spec, 3, 15, &a, &b, &mut rng)?;
-    println!(
-        "plan: 9 sub-products in {} classes (sizes {:?}), 15 coded jobs",
-        plan.cm.n_classes,
-        plan.cm.class_sizes()
-    );
-
-    // --- straggling workers (exponential latencies, Ω = 9/15) ----------
-    let sim = StragglerSim::new(15, LatencyModel::exp(1.0), 9.0 / 15.0);
-    let arrivals = sim.sample_arrivals(&mut rng);
-
-    // --- run at a sweep of deadlines on the PJRT engine ----------------
+    // --- the engine: PJRT artifacts when present, native otherwise -----
     let use_pjrt = std::path::Path::new("artifacts/manifest.json").exists();
     if !use_pjrt {
         println!("NOTE: artifacts/ missing — run `make artifacts` for the PJRT path");
     }
-    println!("\n{:>8} {:>9} {:>10} {:>16}", "T_max", "received", "recovered", "norm. loss");
-    let pjrt_coord = if use_pjrt {
-        Some(Coordinator::new(PjrtEngine::from_artifacts("artifacts")?))
+    let engine: Box<dyn ExecEngine> = if use_pjrt {
+        Box::new(PjrtEngine::from_artifacts("artifacts")?)
     } else {
-        None
+        Box::new(NativeEngine::default())
     };
-    let native_coord = Coordinator::new(NativeEngine::default());
-    for t_max in [0.25, 0.5, 1.0, 2.0, 4.0] {
-        let outcome = match &pjrt_coord {
-            Some(c) => c.run(&plan, &arrivals, t_max)?,
-            None => native_coord.run(&plan, &arrivals, t_max)?,
-        };
+
+    // --- the session: classify by norm, EW-UEP encode for 15 workers,
+    //     exponential stragglers at Ω = 9/15 (auto) ----------------------
+    let mut session = Session::builder()
+        .partitioning(part)
+        .code(CodeSpec::new(
+            CodeKind::EwUep(WindowPolynomial::paper_table3()),
+            EncodeStyle::Stacked,
+        ))
+        .auto_classes(3)
+        .workers(15)
+        .latency(LatencyModel::exp(1.0))
+        .deadline(4.0)
+        .score(true)
+        .seed(42)
+        .backend(InProcessBackend::with_engine(engine))
+        .build()?;
+
+    // --- one request, consumed as an anytime stream ---------------------
+    let report = session.run(Request::new(0, a, b))?;
+    println!(
+        "\n{:>10} {:>9} {:>10} {:>16}",
+        "arrival t", "received", "recovered", "norm. loss"
+    );
+    for e in report.progress.events() {
         println!(
-            "{:>8} {:>9} {:>10} {:>16.6}",
-            t_max, outcome.received, outcome.recovered, outcome.normalized_loss
+            "{:>10.3} {:>9} {:>10} {:>16.6}",
+            e.elapsed, e.received, e.recovered, e.normalized_loss
         );
     }
     println!(
-        "\nengine: {} — progressive refinement: more arrivals ⇒ lower loss,\n\
+        "\nfinal: received {}/15, recovered {}/9, per-class {:?}, norm-loss {:.6}",
+        report.outcome.received,
+        report.outcome.recovered,
+        report.outcome.per_class_recovered,
+        report.outcome.normalized_loss
+    );
+    println!(
+        "engine: {} — progressive refinement: more arrivals ⇒ lower loss,\n\
          with the high-norm blocks recovered first (UEP protection).",
         if use_pjrt { "pjrt (AOT JAX/Pallas artifacts)" } else { "native" }
     );

@@ -356,6 +356,66 @@ fn main() {
         });
     }
 
+    // ---------------- unified client API (Session / Backend) -----------
+    {
+        // batched vs sequential submission of a 32-request repeated-A
+        // stream: every request after the first hits the session's
+        // encoded-block cache; the cache-off row shows what each
+        // request would pay without it
+        use uepmm::api::{InProcessBackend, Request, Session};
+        let spec_api = SyntheticSpec::fig9_rxc().scaled(10);
+        let ew_api = CodeSpec::stacked(CodeKind::EwUep(spec_api.gamma.clone()));
+        let cm_api = spec_api.class_map();
+        let mut mats = Pcg64::seed_from(71);
+        let a_mat = spec_api.sample_a(&mut mats);
+        let bs: Vec<Matrix> = (0..32).map(|_| spec_api.sample_b(&mut mats)).collect();
+        let mk_session = |cache: usize| {
+            Session::builder()
+                .partitioning(spec_api.part.clone())
+                .code(ew_api.clone())
+                .classes(cm_api.clone())
+                .workers(spec_api.workers)
+                .latency(LatencyModel::exp(1.0))
+                .deadline(1.0)
+                .cache_capacity(cache)
+                .seed(9)
+                .backend(InProcessBackend::serial())
+                .build()
+                .unwrap()
+        };
+        h.bench("api/batched 32-req repeated-A stream (encode cache)", || {
+            let mut s = mk_session(8);
+            let reqs: Vec<Request> = bs
+                .iter()
+                .map(|b| Request::new(0, a_mat.clone(), b.clone()))
+                .collect();
+            let handles = s.submit_batch(reqs).unwrap();
+            let mut recovered = 0usize;
+            for hd in handles {
+                recovered += s.wait(hd).unwrap().outcome.recovered;
+            }
+            std::hint::black_box(recovered);
+        });
+        h.bench("api/sequential 32-req repeated-A stream (encode cache)", || {
+            let mut s = mk_session(8);
+            let mut recovered = 0usize;
+            for b in &bs {
+                recovered +=
+                    s.run(Request::new(0, a_mat.clone(), b.clone())).unwrap().outcome.recovered;
+            }
+            std::hint::black_box(recovered);
+        });
+        h.bench("api/sequential 32-req repeated-A stream (cache off)", || {
+            let mut s = mk_session(0);
+            let mut recovered = 0usize;
+            for b in &bs {
+                recovered +=
+                    s.run(Request::new(0, a_mat.clone(), b.clone())).unwrap().outcome.recovered;
+            }
+            std::hint::black_box(recovered);
+        });
+    }
+
     // ---------------- matmul tiers (native engine) ---------------------
     for &(m, k, n) in &[(64usize, 288usize, 64usize), (300, 900, 300)] {
         let a = Matrix::randn(m, k, 0.0, 1.0, &mut rng);

@@ -1,0 +1,663 @@
+//! The [`Backend`] trait and its three adapters — one per execution
+//! path the crate grew historically:
+//!
+//! * [`InProcessBackend`] — the virtual-time honest path
+//!   (`Coordinator::run` semantics): payloads computed through an
+//!   [`ExecEngine`] in this thread, arrivals replayed from pre-sampled
+//!   delays. The only *streaming* backend: each `poll` absorbs one
+//!   arrival, so a caller can consume `Ĉ(t)` anytime and `cancel` keeps
+//!   whatever has decoded so far.
+//! * [`PooledBackend`] — the in-process thread-pool path
+//!   (`run_service` semantics): loopback worker threads behind the
+//!   cluster wire protocol, deterministic virtual deadlines.
+//! * [`ClusterBackend`] — the networked path: any
+//!   [`ClusterServer`] (TCP workers in `Wall` mode, or loopback in
+//!   `Virtual` mode) with registry, heartbeat/eviction, and failover.
+//!
+//! All three consume the same [`PreparedRequest`] built by the
+//! [`super::Session`] and produce the same [`RunReport`], which is what
+//! makes the backend-equivalence guarantee testable: same seed, same
+//! session config ⇒ bit-identical `Outcome` across backends.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{
+    spawn_loopback_workers, ClusterConfig, ClusterServer, DeadlineMode, DecodeStep,
+    LoopbackTransport, WorkerConfig, WorkerInfo, WorkerStats,
+};
+use crate::coding::DecodeState;
+use crate::coordinator::{assemble_outcome, score_outcome, Outcome};
+use crate::linalg::{matmul, Matrix};
+use crate::runtime::{ExecEngine, NativeEngine};
+
+use super::error::{classify_cluster_error, ApiResult, UepmmError};
+use super::progress::{ProgressEvent, ProgressTracker};
+use super::session::{PreparedRequest, PreparedWork, RunReport};
+
+/// What a backend can and cannot do; checked by the session builder so
+/// misconfiguration fails up front.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Same seed ⇒ bit-identical outcome (virtual-time disciplines).
+    pub deterministic: bool,
+    /// Results cross a process/socket boundary.
+    pub networked: bool,
+    /// `poll` absorbs one arrival at a time (true anytime streaming);
+    /// non-streaming backends complete a request on its first poll.
+    pub streaming: bool,
+    /// The backend replays pre-sampled virtual delays, so the session
+    /// must carry a latency model.
+    pub needs_injected_delays: bool,
+    /// Supports coefficient-only selective compute
+    /// ([`super::Compute::Selective`]).
+    pub selective_compute: bool,
+}
+
+/// Result of one [`Backend::poll`] step.
+#[derive(Debug)]
+pub enum PollState {
+    /// Not finished; carries refinement events recorded since the last
+    /// poll (empty for backends that report everything in the final
+    /// [`RunReport::progress`]).
+    Pending(Vec<ProgressEvent>),
+    /// Finished; the handle is consumed.
+    Ready(RunReport),
+}
+
+/// Upkeep report from [`Backend::maintain`].
+#[derive(Clone, Debug, Default)]
+pub struct Maintenance {
+    /// Workers evicted by the heartbeat (networked backends).
+    pub evicted: Vec<u64>,
+    /// Live workers after upkeep, where the notion applies.
+    pub live_workers: Option<usize>,
+}
+
+/// One execution path behind the unified client API.
+pub trait Backend {
+    /// Stable name for logs and [`RunReport::backend`].
+    fn name(&self) -> &'static str;
+
+    fn capabilities(&self) -> Capabilities;
+
+    /// Enqueue one prepared request. Returns immediately; execution is
+    /// driven by `poll`.
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()>;
+
+    /// Drive execution one step for the given request id.
+    fn poll(&mut self, id: u64) -> ApiResult<PollState>;
+
+    /// Cancel a request: `Some(report)` when work had been done (a
+    /// streaming backend finalizes its partial decode — the anytime
+    /// contract), `None` when the request was dropped unstarted or the
+    /// id is unknown.
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>>;
+
+    /// Between-request upkeep (heartbeat/eviction on networked
+    /// backends). Default: no-op.
+    fn maintain(&mut self) -> ApiResult<Maintenance> {
+        Ok(Maintenance::default())
+    }
+
+    /// Orderly teardown. Default: no-op.
+    fn shutdown(&mut self) -> ApiResult<()> {
+        Ok(())
+    }
+}
+
+// ===================================================== in-process path
+
+/// The virtual-time honest path as a streaming backend. See module docs.
+pub struct InProcessBackend<E: ExecEngine = NativeEngine> {
+    engine: E,
+    active: Vec<InFlight>,
+    done: Vec<(u64, RunReport)>,
+}
+
+struct InFlight {
+    prep: PreparedRequest,
+    /// Worker indices sorted by `(delay, slot)` — the shared absorb
+    /// order of every virtual-time path.
+    order: Vec<usize>,
+    next: usize,
+    st: DecodeState,
+    received: usize,
+    tracker: ProgressTracker,
+    start: Instant,
+}
+
+impl InProcessBackend<NativeEngine> {
+    /// Thread-parallel native engine.
+    pub fn native() -> Self {
+        InProcessBackend::with_engine(NativeEngine::default())
+    }
+
+    /// Single-threaded native engine — use this when comparing against
+    /// cluster backends bit for bit (loopback workers compute serially).
+    pub fn serial() -> Self {
+        InProcessBackend::with_engine(NativeEngine::serial())
+    }
+}
+
+impl<E: ExecEngine> InProcessBackend<E> {
+    pub fn with_engine(engine: E) -> Self {
+        InProcessBackend { engine, active: Vec::new(), done: Vec::new() }
+    }
+
+    fn finalize(fl: InFlight) -> RunReport {
+        let jobs = fl.prep.jobs();
+        let prep = fl.prep;
+        // `late` means "completed past the deadline", which is knowable
+        // up front from the delays; arrivals the stream never replayed
+        // (an early cancel) are neither received nor late — they show
+        // up as missing(), like results a cluster never saw
+        let late = prep
+            .delays
+            .as_ref()
+            .map(|d| d.iter().filter(|&&t| t > prep.t_max).count())
+            .unwrap_or(0);
+        let outcome = match &prep.work {
+            PreparedWork::Encoded { .. } => match &prep.score {
+                Some(s) => {
+                    score_outcome(&prep.part, &prep.cm, &s.c_true, &fl.st, fl.received)
+                }
+                None => assemble_outcome(&prep.part, &prep.cm, &fl.st, fl.received),
+            },
+            PreparedWork::Blocks { a_blocks, b_blocks, .. } => {
+                // coefficient-only decode: compute exactly the recovered
+                // sub-products, directly from the block split
+                let mask = fl.st.recovered_mask();
+                let values: Vec<Option<Matrix>> = mask
+                    .iter()
+                    .enumerate()
+                    .map(|(u, &rec)| {
+                        rec.then(|| {
+                            let (ai, bi) = prep.part.factors_of(u);
+                            matmul(&a_blocks[ai], &b_blocks[bi])
+                        })
+                    })
+                    .collect();
+                let c_hat = prep.part.assemble(&values);
+                let mut per_class = vec![0usize; prep.cm.n_classes];
+                for (u, &rec) in mask.iter().enumerate() {
+                    if rec {
+                        per_class[prep.cm.class_of[u]] += 1;
+                    }
+                }
+                let (loss, normalized_loss) = match &prep.score {
+                    Some(s) => {
+                        let loss = s.c_true.frob_sq_diff(&c_hat);
+                        let energy = s.c_true.frob_sq();
+                        (loss, if energy > 0.0 { loss / energy } else { 0.0 })
+                    }
+                    None => (f64::NAN, f64::NAN),
+                };
+                Outcome {
+                    received: fl.received,
+                    recovered: mask.iter().filter(|&&b| b).count(),
+                    per_class_recovered: per_class,
+                    c_hat,
+                    loss,
+                    normalized_loss,
+                }
+            }
+        };
+        RunReport {
+            outcome,
+            late,
+            dispatched: jobs,
+            wall: fl.start.elapsed(),
+            cache_hit: prep.cache_hit,
+            backend: "in-process",
+            progress: fl.tracker.finish(),
+        }
+    }
+}
+
+impl<E: ExecEngine> Backend for InProcessBackend<E> {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic: true,
+            networked: false,
+            streaming: true,
+            needs_injected_delays: true,
+            selective_compute: true,
+        }
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        let Some(delays) = prep.delays.clone() else {
+            return Err(UepmmError::Config(
+                "in-process backend replays virtual delays; none were sampled"
+                    .to_string(),
+            ));
+        };
+        if delays.len() != prep.jobs() {
+            return Err(UepmmError::Config(format!(
+                "{} delays for {} jobs",
+                delays.len(),
+                prep.jobs()
+            )));
+        }
+        let mut order: Vec<usize> = (0..delays.len()).collect();
+        order.sort_by(|&x, &y| delays[x].total_cmp(&delays[y]).then(x.cmp(&y)));
+        let space = match &prep.work {
+            PreparedWork::Encoded { enc, .. } => enc.space.clone(),
+            PreparedWork::Blocks { space, .. } => space.clone(),
+        };
+        let tracker = ProgressTracker::new(&prep.part, prep.score.as_ref());
+        self.active.push(InFlight {
+            prep,
+            order,
+            next: 0,
+            st: DecodeState::new(space),
+            received: 0,
+            tracker,
+            start: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(PollState::Ready(self.done.swap_remove(pos).1));
+        }
+        let Some(idx) = self.active.iter().position(|fl| fl.prep.id == id) else {
+            return Err(UepmmError::Config(format!("unknown request id {id}")));
+        };
+        let exhausted = {
+            let fl = &self.active[idx];
+            let delays = fl.prep.delays.as_ref().expect("validated at submit");
+            fl.next >= fl.order.len() || delays[fl.order[fl.next]] > fl.prep.t_max
+        };
+        if exhausted {
+            let fl = self.active.swap_remove(idx);
+            return Ok(PollState::Ready(Self::finalize(fl)));
+        }
+        // absorb exactly one arrival: the anytime streaming step
+        let fl = &mut self.active[idx];
+        let w = fl.order[fl.next];
+        fl.next += 1;
+        let delay = fl.prep.delays.as_ref().expect("validated at submit")[w];
+        let newly = match &fl.prep.work {
+            PreparedWork::Encoded { enc, wb } => {
+                let payload = self
+                    .engine
+                    .matmul(&enc.wa[w], &wb[w])
+                    .map_err(|e| UepmmError::Compute(format!("{e:#}")))?;
+                fl.st.add_packet(&enc.packets[w], Some(payload))
+            }
+            PreparedWork::Blocks { packets, .. } => fl.st.add_packet(&packets[w], None),
+        };
+        fl.received += 1;
+        fl.tracker.record(delay, fl.received, fl.st.num_recovered(), &newly);
+        Ok(PollState::Pending(fl.tracker.take_new()))
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(Some(self.done.swap_remove(pos).1));
+        }
+        if let Some(idx) = self.active.iter().position(|fl| fl.prep.id == id) {
+            let fl = self.active.swap_remove(idx);
+            let started = fl.received > 0;
+            let report = Self::finalize(fl);
+            return Ok(if started { Some(report) } else { None });
+        }
+        Ok(None)
+    }
+}
+
+// ==================================================== cluster-backed paths
+
+/// Shared driver of the two cluster-backed backends: a [`ClusterServer`]
+/// plus the worker thread handles it may own, a FIFO request queue, and
+/// finished reports awaiting their `poll`.
+struct ClusterCore {
+    name: &'static str,
+    server: ClusterServer,
+    handles: Vec<JoinHandle<anyhow::Result<WorkerStats>>>,
+    queue: VecDeque<PreparedRequest>,
+    done: Vec<(u64, RunReport)>,
+    /// Requests that failed while being served ahead of another poll:
+    /// their error is held for their own handle instead of being
+    /// misattributed to the request that happened to drive the queue.
+    failed: Vec<(u64, UepmmError)>,
+}
+
+impl ClusterCore {
+    fn new(
+        name: &'static str,
+        server: ClusterServer,
+        handles: Vec<JoinHandle<anyhow::Result<WorkerStats>>>,
+    ) -> ClusterCore {
+        ClusterCore {
+            name,
+            server,
+            handles,
+            queue: VecDeque::new(),
+            done: Vec::new(),
+            failed: Vec::new(),
+        }
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        if matches!(prep.work, PreparedWork::Blocks { .. }) {
+            return Err(UepmmError::Config(format!(
+                "backend '{}' dispatches materialized jobs; selective compute is \
+                 in-process only",
+                self.name
+            )));
+        }
+        self.queue.push_back(prep);
+        Ok(())
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(PollState::Ready(self.done.swap_remove(pos).1));
+        }
+        if let Some(pos) = self.failed.iter().position(|(d, _)| *d == id) {
+            return Err(self.failed.swap_remove(pos).1);
+        }
+        if !self.queue.iter().any(|p| p.id == id) {
+            return Err(UepmmError::Config(format!("unknown request id {id}")));
+        }
+        // serve the queue in submission order up to (and including) the
+        // polled request — pipelined FIFO semantics; a failure of an
+        // earlier request is parked for its own handle, not reported
+        // against the one being polled
+        while let Some(prep) = self.queue.pop_front() {
+            let pid = prep.id;
+            match self.serve(prep) {
+                Ok(report) => {
+                    if pid == id {
+                        return Ok(PollState::Ready(report));
+                    }
+                    self.done.push((pid, report));
+                }
+                Err(e) => {
+                    if pid == id {
+                        return Err(e);
+                    }
+                    self.failed.push((pid, e));
+                }
+            }
+        }
+        unreachable!("request id was in the queue")
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(Some(self.done.swap_remove(pos).1));
+        }
+        if let Some(pos) = self.failed.iter().position(|(d, _)| *d == id) {
+            self.failed.swap_remove(pos);
+            return Ok(None);
+        }
+        if let Some(pos) = self.queue.iter().position(|p| p.id == id) {
+            self.queue.remove(pos);
+            return Ok(None);
+        }
+        Ok(None)
+    }
+
+    fn serve(&mut self, prep: PreparedRequest) -> ApiResult<RunReport> {
+        let PreparedRequest { part, cm, t_max, delays, work, score, cache_hit, .. } =
+            prep;
+        let (enc, wb) = match work {
+            PreparedWork::Encoded { enc, wb } => (enc, wb),
+            PreparedWork::Blocks { .. } => unreachable!("rejected at submit"),
+        };
+        // pre-validate what serve_jobs would reject, so configuration
+        // misuse is classified as Config here rather than depending on
+        // the wording of the server's internal error messages
+        if self.server.config().deadline == DeadlineMode::Wall
+            && self.server.config().time_scale <= 0.0
+        {
+            return Err(UepmmError::Config(
+                "Wall deadline mode needs time_scale > 0".to_string(),
+            ));
+        }
+        if let Some(d) = &delays {
+            if d.len() != enc.packets.len() {
+                return Err(UepmmError::Config(format!(
+                    "{} delays for {} jobs",
+                    d.len(),
+                    enc.packets.len()
+                )));
+            }
+        }
+        // cache hits hand out Arc handles: no W_A deep copy per request
+        let jobs: Vec<(Arc<Matrix>, Matrix)> =
+            enc.wa.iter().cloned().zip(wb.into_iter()).collect();
+        let mut tracker = ProgressTracker::new(&part, score.as_ref());
+        let served = {
+            let mut obs = |step: DecodeStep| {
+                tracker.record(step.delay, step.received, step.recovered, &step.newly)
+            };
+            self.server
+                .serve_jobs(
+                    &enc.space,
+                    &enc.packets,
+                    jobs,
+                    delays.as_deref(),
+                    t_max,
+                    Some(&mut obs),
+                )
+                .map_err(classify_cluster_error)?
+        };
+        let outcome = match &score {
+            Some(s) => score_outcome(&part, &cm, &s.c_true, &served.st, served.received),
+            None => assemble_outcome(&part, &cm, &served.st, served.received),
+        };
+        Ok(RunReport {
+            outcome,
+            late: served.late,
+            dispatched: served.dispatched,
+            wall: served.wall,
+            cache_hit,
+            backend: self.name,
+            progress: tracker.finish(),
+        })
+    }
+
+    fn maintain(&mut self) -> ApiResult<Maintenance> {
+        let evicted = self.server.heartbeat();
+        Ok(Maintenance {
+            evicted,
+            live_workers: Some(self.server.live_workers()),
+        })
+    }
+
+    fn shutdown(&mut self) -> ApiResult<()> {
+        self.server.shutdown_graceful(Duration::from_secs(60));
+        let mut failure: Option<String> = None;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => failure = Some(format!("worker error: {e:#}")),
+                Err(_) => failure = Some("worker thread panicked".to_string()),
+            }
+        }
+        match failure {
+            Some(m) => Err(UepmmError::Transport(m)),
+            None => Ok(()),
+        }
+    }
+}
+
+fn spawn_loopback_core(
+    name: &'static str,
+    threads: usize,
+    cluster: ClusterConfig,
+    worker: WorkerConfig,
+    accept_timeout: Duration,
+) -> ApiResult<ClusterCore> {
+    let threads = threads.max(1);
+    let (mut transport, dialer) = LoopbackTransport::new();
+    let handles = spawn_loopback_workers(&dialer, threads, &worker);
+    drop(dialer);
+    let mut server = ClusterServer::new(cluster);
+    let joined = server
+        .accept_workers(&mut transport, threads, accept_timeout)
+        .map_err(|e| UepmmError::Transport(format!("{e:#}")))?;
+    if joined != threads {
+        return Err(UepmmError::Transport(format!(
+            "only {joined}/{threads} loopback workers joined"
+        )));
+    }
+    Ok(ClusterCore::new(name, server, handles))
+}
+
+/// The in-process thread-pool path: loopback worker threads, virtual
+/// deadlines, deterministic. See module docs.
+pub struct PooledBackend {
+    core: ClusterCore,
+}
+
+impl PooledBackend {
+    /// Spawn `threads` loopback worker threads (serial native engine
+    /// each — the threads themselves are the parallelism) behind a
+    /// virtual-deadline coordinator.
+    pub fn spawn(threads: usize) -> ApiResult<PooledBackend> {
+        let core = spawn_loopback_core(
+            "pooled",
+            threads,
+            ClusterConfig {
+                deadline: DeadlineMode::Virtual,
+                time_scale: 0.0,
+                // the session owns the encoded-block cache
+                cache_capacity: 0,
+                ..ClusterConfig::default()
+            },
+            WorkerConfig { name: "pool".to_string(), ..WorkerConfig::default() },
+            Duration::from_secs(30),
+        )?;
+        Ok(PooledBackend { core })
+    }
+}
+
+impl Backend for PooledBackend {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic: true,
+            networked: false,
+            streaming: false,
+            needs_injected_delays: true,
+            selective_compute: false,
+        }
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        self.core.submit(prep)
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        self.core.poll(id)
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        self.core.cancel(id)
+    }
+
+    fn maintain(&mut self) -> ApiResult<Maintenance> {
+        self.core.maintain()
+    }
+
+    fn shutdown(&mut self) -> ApiResult<()> {
+        self.core.shutdown()
+    }
+}
+
+/// The networked path: any [`ClusterServer`] with registered workers.
+/// See module docs.
+pub struct ClusterBackend {
+    core: ClusterCore,
+}
+
+impl ClusterBackend {
+    /// Wrap a server whose workers are already registered (the TCP
+    /// deployment: bind, `accept_workers`, then hand the server here).
+    pub fn from_server(server: ClusterServer) -> ClusterBackend {
+        ClusterBackend { core: ClusterCore::new("cluster", server, Vec::new()) }
+    }
+
+    /// Spawn an in-process loopback cluster with explicit server and
+    /// worker configuration (pacing, deadline discipline, heartbeats)
+    /// and a registration deadline for the worker threads.
+    pub fn loopback(
+        threads: usize,
+        cluster: ClusterConfig,
+        worker: WorkerConfig,
+        accept_timeout: Duration,
+    ) -> ApiResult<ClusterBackend> {
+        Ok(ClusterBackend {
+            core: spawn_loopback_core(
+                "cluster",
+                threads,
+                cluster,
+                worker,
+                accept_timeout,
+            )?,
+        })
+    }
+
+    /// Registry view of the attached workers.
+    pub fn worker_info(&self) -> Vec<WorkerInfo> {
+        self.core.server.worker_info()
+    }
+
+    pub fn deadline_mode(&self) -> DeadlineMode {
+        self.core.server.config().deadline
+    }
+}
+
+impl Backend for ClusterBackend {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic: self.deadline_mode() == DeadlineMode::Virtual,
+            networked: true,
+            streaming: false,
+            // workers may self-sample or report natural timing, so a
+            // session latency model is optional here
+            needs_injected_delays: false,
+            selective_compute: false,
+        }
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        self.core.submit(prep)
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        self.core.poll(id)
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        self.core.cancel(id)
+    }
+
+    fn maintain(&mut self) -> ApiResult<Maintenance> {
+        self.core.maintain()
+    }
+
+    fn shutdown(&mut self) -> ApiResult<()> {
+        self.core.shutdown()
+    }
+}

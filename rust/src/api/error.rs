@@ -1,0 +1,103 @@
+//! The typed error of the public client API.
+//!
+//! `anyhow` remains the error currency *inside* the crate (plan
+//! preparation, wire protocol, worker loops); at the [`crate::api`]
+//! boundary every failure is classified into one [`UepmmError`] variant
+//! so callers can branch on what went wrong instead of string-matching a
+//! context chain.
+
+/// `Result` specialized to the API boundary.
+pub type ApiResult<T> = std::result::Result<T, UepmmError>;
+
+/// Everything the unified client API can fail with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum UepmmError {
+    /// Invalid session or request configuration, caught before any work
+    /// is dispatched (missing builder fields, shape mismatches, a
+    /// backend asked for a mode it does not support, unknown handles).
+    Config(String),
+    /// Plan preparation failed: splitting the operands, classifying by
+    /// norm, drawing the coded packet set, or materializing `W_A`.
+    Encode(String),
+    /// A worker's coded sub-product computation failed (engine error).
+    Compute(String),
+    /// Transport or registry failure: no live workers, dropped
+    /// connections, a worker pool that failed to assemble.
+    Transport(String),
+    /// The deadline was rejected (non-finite or negative `T_max`) or
+    /// deadline bookkeeping could not be honored.
+    Deadline(String),
+    /// Decoding or assembling `Ĉ` from the collected results failed.
+    Decode(String),
+}
+
+impl UepmmError {
+    /// The variant name, for logs and metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            UepmmError::Config(_) => "config",
+            UepmmError::Encode(_) => "encode",
+            UepmmError::Compute(_) => "compute",
+            UepmmError::Transport(_) => "transport",
+            UepmmError::Deadline(_) => "deadline",
+            UepmmError::Decode(_) => "decode",
+        }
+    }
+
+    /// The human-readable message carried by the variant.
+    pub fn message(&self) -> &str {
+        match self {
+            UepmmError::Config(m)
+            | UepmmError::Encode(m)
+            | UepmmError::Compute(m)
+            | UepmmError::Transport(m)
+            | UepmmError::Deadline(m)
+            | UepmmError::Decode(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for UepmmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for UepmmError {}
+
+/// Classify an internal `anyhow` error escaping a cluster-backed run.
+/// Validation messages stay `Config`; everything else on that path is a
+/// transport/registry failure.
+pub(crate) fn classify_cluster_error(e: anyhow::Error) -> UepmmError {
+    let msg = format!("{e:#}");
+    if msg.contains("one job per packet")
+        || msg.contains("one injected delay per job")
+        || msg.contains("time_scale")
+    {
+        UepmmError::Config(msg)
+    } else {
+        UepmmError::Transport(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_kind_and_message() {
+        let e = UepmmError::Deadline("T_max must be finite".to_string());
+        assert_eq!(e.kind(), "deadline");
+        assert_eq!(format!("{e}"), "deadline: T_max must be finite");
+    }
+
+    #[test]
+    fn cluster_errors_classify_config_vs_transport() {
+        let cfg = classify_cluster_error(anyhow::anyhow!("one job per packet"));
+        assert!(matches!(cfg, UepmmError::Config(_)));
+        let tr = classify_cluster_error(anyhow::anyhow!(
+            "no live workers registered with the coordinator"
+        ));
+        assert!(matches!(tr, UepmmError::Transport(_)));
+    }
+}

@@ -1,0 +1,180 @@
+//! The unified client API: one front door to every execution path.
+//!
+//! Historically the crate exposed three incompatible entry points —
+//! `Coordinator::run` (in-process virtual time), `run_service`
+//! (thread-pool), and `ClusterServer` (networked) — each with its own
+//! config, outcome shape, and error conventions. This module is the
+//! single public surface that replaces them:
+//!
+//! * [`Backend`] — `submit` / `poll` / `cancel` plus [`Capabilities`]
+//!   flags, with [`InProcessBackend`], [`PooledBackend`], and
+//!   [`ClusterBackend`] adapters wrapping the three paths;
+//! * [`Session`] — a builder-validated plan (partitioning, code,
+//!   classes, workers, latency, deadline) bound to one backend, owning
+//!   the encoded-block cache so a repeated-`A` stream pays one encode;
+//! * [`RequestHandle`]s with batched/pipelined submission
+//!   ([`Session::submit_batch`]);
+//! * [`Progress`] — the anytime stream: one event per decode
+//!   refinement (`recovered`, running loss, elapsed), so callers
+//!   consume `Ĉ(t)` as results trickle in rather than only the final
+//!   outcome;
+//! * [`UepmmError`] — typed errors at the boundary (`anyhow` stays
+//!   internal).
+//!
+//! The backend-equivalence guarantee: the same seed and session
+//! configuration produce a bit-identical [`crate::coordinator::Outcome`]
+//! on every deterministic backend (asserted by
+//! `rust/tests/api_backends.rs`).
+//!
+//! # Example
+//!
+//! A scored multiplication over the loopback worker pool:
+//!
+//! ```
+//! use uepmm::prelude::*;
+//!
+//! # fn main() -> Result<(), UepmmError> {
+//! let mut rng = Pcg64::seed_from(1);
+//! let part = Partitioning::rxc(3, 3, 4, 5, 4);
+//! let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+//! let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+//!
+//! let mut session = Session::builder()
+//!     .partitioning(part)
+//!     .code(CodeSpec::stacked(CodeKind::Mds))
+//!     .workers(12)
+//!     .latency(LatencyModel::exp(1.0))
+//!     .deadline(50.0)
+//!     .score(true)
+//!     .seed(7)
+//!     .backend(PooledBackend::spawn(2)?)
+//!     .build()?;
+//!
+//! let report = session.run(Request::new(0, a, b))?;
+//! assert_eq!(report.outcome.recovered, 9); // MDS: any ≥9 packets decode all
+//! assert!(report.outcome.normalized_loss < 1e-9);
+//! assert!(report.progress.loss_non_increasing());
+//! session.shutdown()?;
+//! # Ok(())
+//! # }
+//! ```
+
+mod backend;
+mod error;
+mod progress;
+mod session;
+
+pub use backend::{
+    Backend, Capabilities, ClusterBackend, InProcessBackend, Maintenance,
+    PollState, PooledBackend,
+};
+pub use error::{ApiResult, UepmmError};
+pub use progress::{Progress, ProgressEvent};
+pub use session::{
+    Classes, Compute, OmegaMode, PreparedRequest, PreparedWork, Request,
+    RequestHandle, RunReport, ScoreRef, Session, SessionBuilder,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeKind, CodeSpec};
+    use crate::latency::LatencyModel;
+    use crate::partition::Partitioning;
+
+    fn base_builder() -> SessionBuilder {
+        Session::builder()
+            .partitioning(Partitioning::rxc(3, 3, 2, 3, 2))
+            .code(CodeSpec::stacked(CodeKind::Mds))
+            .workers(6)
+            .latency(LatencyModel::exp(1.0))
+            .deadline(1.0)
+    }
+
+    #[test]
+    fn builder_rejects_missing_pieces_with_typed_errors() {
+        let e = Session::builder().build().unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+
+        let e = base_builder().build().unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "no backend: {e}");
+
+        let e = base_builder()
+            .workers(0)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+
+        let e = base_builder()
+            .deadline(f64::NAN)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Deadline(_)), "{e}");
+    }
+
+    #[test]
+    fn builder_enforces_backend_capabilities() {
+        // the in-process backend replays virtual delays: a latency
+        // model is mandatory
+        let e = Session::builder()
+            .partitioning(Partitioning::rxc(3, 3, 2, 3, 2))
+            .code(CodeSpec::stacked(CodeKind::Mds))
+            .workers(6)
+            .deadline(1.0)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+
+        // selective compute is in-process only
+        let e = base_builder()
+            .compute(Compute::Selective)
+            .backend(PooledBackend::spawn(1).unwrap())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn builder_rejects_incoherent_class_maps() {
+        let other = Partitioning::rxc(2, 2, 2, 3, 2);
+        let pair = crate::partition::default_pair_classes(2);
+        let cm = crate::partition::ClassMap::from_levels(
+            &other,
+            vec![0, 1],
+            vec![0, 1],
+            &pair,
+        );
+        let e = base_builder()
+            .classes(cm)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn submit_rejects_shape_mismatches() {
+        let mut rng = crate::rng::Pcg64::seed_from(3);
+        let mut session = base_builder()
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let a_bad = crate::linalg::Matrix::randn(5, 3, 0.0, 1.0, &mut rng);
+        let b = crate::linalg::Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let e = session.submit(Request::new(0, a_bad, b)).unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn polling_an_unknown_handle_is_a_config_error() {
+        let mut session = base_builder()
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let e = session.poll(RequestHandle { id: 99 }).unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+    }
+}

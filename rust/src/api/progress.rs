@@ -1,0 +1,197 @@
+//! The anytime result stream: one [`ProgressEvent`] per decode
+//! refinement, so callers consume a progressively improving `Ĉ(t)`
+//! instead of waiting for the final outcome.
+//!
+//! The paper's central promise is that a UEP-coded multiplication is an
+//! *anytime* approximation — the parameter server can stop at any
+//! moment with the best `Ĉ` so far. Every backend reports each absorbed
+//! in-deadline result as an event carrying the running recovered count
+//! and (for scored requests) the running residual loss, maintained
+//! incrementally through [`crate::partition::Partitioning::loss_delta_on_recover`]
+//! exactly like the Monte-Carlo sweep engine.
+
+use crate::partition::Partitioning;
+
+use super::session::ScoreRef;
+
+/// One decode refinement inside a served request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProgressEvent {
+    /// Results absorbed so far (this event's arrival included).
+    pub received: usize,
+    /// Real sub-products determined so far.
+    pub recovered: usize,
+    /// Sub-products newly determined by this arrival (0 for a
+    /// rank-redundant packet).
+    pub newly: usize,
+    /// Running residual loss `‖C − Ĉ‖²_F` (NaN for unscored requests).
+    pub loss: f64,
+    /// Running loss normalized by `‖C‖²_F` (NaN for unscored requests).
+    pub normalized_loss: f64,
+    /// Virtual completion time of this arrival (same units as `T_max`).
+    pub elapsed: f64,
+}
+
+/// The recorded refinement stream of one request.
+#[derive(Clone, Debug, Default)]
+pub struct Progress {
+    events: Vec<ProgressEvent>,
+}
+
+impl Progress {
+    /// All events, in absorption order.
+    pub fn events(&self) -> &[ProgressEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&ProgressEvent> {
+        self.events.last()
+    }
+
+    /// Events that actually refined `Ĉ` (recovered at least one new
+    /// sub-product).
+    pub fn refinements(&self) -> usize {
+        self.events.iter().filter(|e| e.newly > 0).count()
+    }
+
+    /// `true` when the running loss never increases across consecutive
+    /// scored events (vacuously true for unscored streams). For the r×c
+    /// paradigm the Gram matrix is diagonal, so this holds by
+    /// construction; for c×r it is the paper's empirical behavior.
+    pub fn loss_non_increasing(&self) -> bool {
+        self.events
+            .windows(2)
+            .filter(|w| w[0].loss.is_finite() && w[1].loss.is_finite())
+            .all(|w| w[1].loss <= w[0].loss + 1e-9 * (1.0 + w[0].loss.abs()))
+    }
+}
+
+impl IntoIterator for Progress {
+    type Item = ProgressEvent;
+    type IntoIter = std::vec::IntoIter<ProgressEvent>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.events.into_iter()
+    }
+}
+
+/// Shared event recorder used by every backend: maintains the recovered
+/// mask and the running Gram-based residual loss, and buffers events so
+/// `poll` can hand out only the ones not yet reported.
+pub(crate) struct ProgressTracker {
+    part: Partitioning,
+    gram: Option<crate::linalg::Matrix>,
+    energy: f64,
+    mask: Vec<bool>,
+    loss: f64,
+    events: Vec<ProgressEvent>,
+    reported: usize,
+}
+
+impl ProgressTracker {
+    pub(crate) fn new(part: &Partitioning, score: Option<&ScoreRef>) -> Self {
+        let k = part.num_products();
+        let (gram, energy, loss) = match score {
+            Some(s) => (Some(s.gram.clone()), s.energy, s.energy),
+            None => (None, f64::NAN, f64::NAN),
+        };
+        ProgressTracker {
+            part: part.clone(),
+            gram,
+            energy,
+            mask: vec![false; k],
+            loss,
+            events: Vec::new(),
+            reported: 0,
+        }
+    }
+
+    /// Record one absorbed in-deadline arrival.
+    pub(crate) fn record(
+        &mut self,
+        elapsed: f64,
+        received: usize,
+        recovered: usize,
+        newly: &[usize],
+    ) {
+        if let Some(gram) = &self.gram {
+            for &u in newly {
+                self.mask[u] = true;
+                self.loss -= self.part.loss_delta_on_recover(gram, &self.mask, u);
+            }
+            if recovered == self.part.num_products() {
+                // pin the fully-decoded endpoint to exactly zero,
+                // shedding running-sum rounding (as the sweep engine does)
+                self.loss = 0.0;
+            }
+        }
+        let normalized = if self.energy > 0.0 { self.loss / self.energy } else { self.loss };
+        self.events.push(ProgressEvent {
+            received,
+            recovered,
+            newly: newly.len(),
+            loss: self.loss,
+            normalized_loss: normalized,
+            elapsed,
+        });
+    }
+
+    /// Events recorded since the last `take_new` call (for streaming
+    /// `poll` consumers).
+    pub(crate) fn take_new(&mut self) -> Vec<ProgressEvent> {
+        let new = self.events[self.reported..].to_vec();
+        self.reported = self.events.len();
+        new
+    }
+
+    pub(crate) fn finish(self) -> Progress {
+        Progress { events: self.events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(received: usize, recovered: usize, newly: usize, loss: f64) -> ProgressEvent {
+        ProgressEvent {
+            received,
+            recovered,
+            newly,
+            loss,
+            normalized_loss: loss,
+            elapsed: received as f64,
+        }
+    }
+
+    #[test]
+    fn refinement_and_monotonicity_accessors() {
+        let p = Progress {
+            events: vec![ev(1, 1, 1, 0.8), ev(2, 1, 0, 0.8), ev(3, 3, 2, 0.1)],
+        };
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.refinements(), 2);
+        assert!(p.loss_non_increasing());
+        assert_eq!(p.last().unwrap().recovered, 3);
+
+        let bad = Progress { events: vec![ev(1, 1, 1, 0.2), ev(2, 2, 1, 0.5)] };
+        assert!(!bad.loss_non_increasing());
+    }
+
+    #[test]
+    fn unscored_streams_are_vacuously_monotone() {
+        let p = Progress {
+            events: vec![ev(1, 1, 1, f64::NAN), ev(2, 2, 1, f64::NAN)],
+        };
+        assert!(p.loss_non_increasing());
+        assert_eq!(p.refinements(), 2);
+    }
+}

@@ -1,0 +1,638 @@
+//! The [`Session`]: one validated client-side plan — partitioning, code,
+//! classes, worker count, latency/deadline discipline — bound to one
+//! [`Backend`], owning the encoded-block cache and the request-id space.
+//!
+//! A session is built once ([`Session::builder`]) and then serves a
+//! stream of [`Request`]s. Preparation (split, classify, packet draw,
+//! `W_A` materialization) happens on the session so that *every*
+//! backend — in-process, pooled, networked — reuses cached `A`-side
+//! encodings across a repeated-`A` stream; backends only execute and
+//! decode.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::{CacheKey, CacheStats, EncodedBlockCache};
+use crate::coding::{CodeSpec, Packet, UnknownSpace};
+use crate::coordinator::{EncodedA, Outcome};
+use crate::latency::LatencyModel;
+use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
+use crate::rng::Pcg64;
+
+use super::backend::{Backend, Maintenance, PollState};
+use super::error::{ApiResult, UepmmError};
+use super::progress::Progress;
+
+/// One multiplication request in a session's stream. `a_id` is the
+/// caller's stable identity for `A` (e.g. "layer-3 weights"): requests
+/// sharing an `a_id` share cached encodings.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub a_id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+    /// Per-request deadline override (defaults to the session deadline).
+    pub t_max: Option<f64>,
+    /// Per-request scoring override (defaults to the session setting).
+    pub score: Option<bool>,
+}
+
+impl Request {
+    pub fn new(a_id: u64, a: Matrix, b: Matrix) -> Request {
+        Request { a_id, a, b, t_max: None, score: None }
+    }
+
+    /// Override the session deadline for this request.
+    pub fn deadline(mut self, t_max: f64) -> Request {
+        self.t_max = Some(t_max);
+        self
+    }
+
+    /// Override the session's scoring setting for this request.
+    pub fn scored(mut self, score: bool) -> Request {
+        self.score = Some(score);
+        self
+    }
+}
+
+/// Handle to a submitted request; redeem it with [`Session::poll`] /
+/// [`Session::wait`] or abandon it with [`Session::cancel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RequestHandle {
+    pub id: u64,
+}
+
+/// The unified result of one served request, across every backend.
+///
+/// This supersedes the per-path result shapes (`Outcome` alone from
+/// `Coordinator::run`, `ServiceOutcome` from `run_service`,
+/// `ClusterOutcome` from `ClusterServer`): the decode [`Outcome`] plus
+/// the accounting every path shares, plus the anytime [`Progress`]
+/// stream.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Decode result: received/recovered counts, `Ĉ`, loss (NaN when
+    /// the request was not scored).
+    pub outcome: Outcome,
+    /// Results that were computed but missed the deadline.
+    pub late: usize,
+    /// Jobs handed to the execution path.
+    pub dispatched: usize,
+    /// Wall time the request took end to end.
+    pub wall: Duration,
+    /// `Some(hit)` when served through the session's encoded-block
+    /// cache (`None` in selective-compute mode, which skips `W_A`).
+    pub cache_hit: Option<bool>,
+    /// Name of the backend that served the request.
+    pub backend: &'static str,
+    /// The recorded refinement stream (one event per absorbed
+    /// in-deadline result).
+    pub progress: Progress,
+}
+
+impl RunReport {
+    /// Dispatched jobs whose results were never seen (dead workers,
+    /// lost connections, post-grace stragglers).
+    pub fn missing(&self) -> usize {
+        self.dispatched - self.outcome.received - self.late
+    }
+}
+
+/// Scoring reference for one request: the exact product and its Gram
+/// matrix, computed locally. Evaluation only — production streams skip
+/// it (`score = false`) because the local `A·B` dwarfs dispatch+decode.
+#[derive(Clone, Debug)]
+pub struct ScoreRef {
+    /// The exact product `A·B`.
+    pub c_true: Matrix,
+    /// Gram matrix `G_ij = ⟨C_i, C_j⟩_F` of the true sub-products
+    /// (drives the running progress loss).
+    pub gram: Matrix,
+    /// `‖C‖²_F` read off the Gram matrix.
+    pub energy: f64,
+}
+
+/// The work a backend receives for one request, fully prepared by the
+/// session.
+#[derive(Clone, Debug)]
+pub enum PreparedWork {
+    /// Materialized per-worker factor pairs: `wa` handles from the
+    /// (possibly cached) [`EncodedA`], plus this request's freshly
+    /// bound right factors. Honest compute: workers multiply exactly
+    /// these.
+    Encoded { enc: Arc<EncodedA>, wb: Vec<Matrix> },
+    /// Coefficient-only decode over the raw block split; recovered
+    /// sub-products are then computed exactly and directly. The
+    /// training fast path (`W_A` is never materialized) — in-process
+    /// backends only.
+    Blocks {
+        space: UnknownSpace,
+        packets: Vec<Packet>,
+        a_blocks: Vec<Matrix>,
+        b_blocks: Vec<Matrix>,
+    },
+}
+
+/// One fully prepared request as handed to a [`Backend`].
+#[derive(Clone, Debug)]
+pub struct PreparedRequest {
+    pub id: u64,
+    pub part: Partitioning,
+    pub cm: ClassMap,
+    /// Deadline in virtual time units.
+    pub t_max: f64,
+    /// Pre-sampled virtual completion times, one per packet (absent
+    /// when the session has no latency model: timing is then up to the
+    /// workers/transport).
+    pub delays: Option<Vec<f64>>,
+    pub work: PreparedWork,
+    pub score: Option<ScoreRef>,
+    /// Whether the `A`-side came out of the session cache.
+    pub cache_hit: Option<bool>,
+}
+
+impl PreparedRequest {
+    /// Coded jobs (= packets) in this request.
+    pub fn jobs(&self) -> usize {
+        match &self.work {
+            PreparedWork::Encoded { enc, .. } => enc.packets.len(),
+            PreparedWork::Blocks { packets, .. } => packets.len(),
+        }
+    }
+}
+
+/// How sub-products are classified into importance levels.
+#[derive(Clone, Debug)]
+pub enum Classes {
+    /// Estimate per request from the operands' block norms (`S` levels).
+    Auto(usize),
+    /// Pinned assignment (synthetic experiments, coherent cache keys).
+    Pinned(ClassMap),
+}
+
+/// The paper's Ω capacity scaling (Remark 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OmegaMode {
+    /// `Ω = #sub-products / workers`, recomputed from the session plan.
+    Auto,
+    Fixed(f64),
+}
+
+/// How worker payloads are produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compute {
+    /// Materialize `W_A`/`W_B` and multiply them — what real workers do.
+    Honest,
+    /// Coefficient-only decode, then compute only the recovered
+    /// sub-products exactly (the training fast path; in-process only).
+    Selective,
+}
+
+/// Builder for [`Session`]; validates the full plan up front so a
+/// misconfigured stream fails at [`SessionBuilder::build`], not on
+/// request `N`.
+pub struct SessionBuilder {
+    part: Option<Partitioning>,
+    spec: Option<CodeSpec>,
+    classes: Classes,
+    workers: Option<usize>,
+    latency: Option<LatencyModel>,
+    omega: OmegaMode,
+    deadline: Option<f64>,
+    score: bool,
+    compute: Compute,
+    cache_capacity: usize,
+    seed: u64,
+    backend: Option<Box<dyn Backend>>,
+}
+
+impl SessionBuilder {
+    fn new() -> SessionBuilder {
+        SessionBuilder {
+            part: None,
+            spec: None,
+            classes: Classes::Auto(3),
+            workers: None,
+            latency: None,
+            omega: OmegaMode::Auto,
+            deadline: None,
+            score: false,
+            compute: Compute::Honest,
+            cache_capacity: 16,
+            seed: 0,
+            backend: None,
+        }
+    }
+
+    /// Block partitioning of the operands (paper §II).
+    pub fn partitioning(mut self, part: Partitioning) -> Self {
+        self.part = Some(part);
+        self
+    }
+
+    /// The fully specified code (kind + encoding style).
+    pub fn code(mut self, spec: CodeSpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Pin the importance-class assignment.
+    pub fn classes(mut self, cm: ClassMap) -> Self {
+        self.classes = Classes::Pinned(cm);
+        self
+    }
+
+    /// Classify per request from block norms into `s_levels` levels.
+    ///
+    /// Note: an auto class map depends on each request's `B`, so the
+    /// encoded-block cache cannot apply — repeated-`A` streams that
+    /// want cache hits must pin their classes with
+    /// [`Self::classes`].
+    pub fn auto_classes(mut self, s_levels: usize) -> Self {
+        self.classes = Classes::Auto(s_levels);
+        self
+    }
+
+    /// Coded packets (= jobs) per request.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Straggle model used to pre-sample virtual completion times.
+    pub fn latency(mut self, model: LatencyModel) -> Self {
+        self.latency = Some(model);
+        self
+    }
+
+    /// Ω capacity scaling mode (default: auto, per Remark 1).
+    pub fn omega(mut self, omega: OmegaMode) -> Self {
+        self.omega = omega;
+        self
+    }
+
+    /// Default per-request deadline `T_max` (virtual time units).
+    pub fn deadline(mut self, t_max: f64) -> Self {
+        self.deadline = Some(t_max);
+        self
+    }
+
+    /// Score every request against the locally computed exact product
+    /// (evaluation streams; default off).
+    pub fn score(mut self, score: bool) -> Self {
+        self.score = score;
+        self
+    }
+
+    /// Payload production mode (default honest).
+    pub fn compute(mut self, compute: Compute) -> Self {
+        self.compute = compute;
+        self
+    }
+
+    /// Encoded-block cache capacity in entries (0 disables caching).
+    pub fn cache_capacity(mut self, entries: usize) -> Self {
+        self.cache_capacity = entries;
+        self
+    }
+
+    /// Seed of the session RNG (packet draws + delay sampling).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The execution backend serving this session.
+    pub fn backend(mut self, backend: impl Backend + 'static) -> Self {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Validate the full plan and assemble the session.
+    pub fn build(self) -> ApiResult<Session> {
+        let part = self
+            .part
+            .ok_or_else(|| UepmmError::Config("no partitioning set".to_string()))?;
+        let spec = self
+            .spec
+            .ok_or_else(|| UepmmError::Config("no code spec set".to_string()))?;
+        let backend = self
+            .backend
+            .ok_or_else(|| UepmmError::Config("no backend set".to_string()))?;
+        let workers = self
+            .workers
+            .ok_or_else(|| UepmmError::Config("no worker count set".to_string()))?;
+        if workers == 0 {
+            return Err(UepmmError::Config("need at least one worker".to_string()));
+        }
+        let deadline = self
+            .deadline
+            .ok_or_else(|| UepmmError::Config("no deadline set".to_string()))?;
+        validate_deadline(deadline)?;
+        match &self.classes {
+            Classes::Auto(s) if *s == 0 => {
+                return Err(UepmmError::Config(
+                    "need at least one importance level".to_string(),
+                ))
+            }
+            Classes::Pinned(cm) if cm.class_of.len() != part.num_products() => {
+                return Err(UepmmError::Config(format!(
+                    "class map covers {} sub-products, partitioning has {}",
+                    cm.class_of.len(),
+                    part.num_products()
+                )))
+            }
+            _ => {}
+        }
+        let caps = backend.capabilities();
+        if caps.needs_injected_delays && self.latency.is_none() {
+            return Err(UepmmError::Config(format!(
+                "backend '{}' replays pre-sampled virtual delays; set a latency model",
+                backend.name()
+            )));
+        }
+        if self.compute == Compute::Selective && !caps.selective_compute {
+            return Err(UepmmError::Config(format!(
+                "backend '{}' cannot run selective (coefficient-only) compute",
+                backend.name()
+            )));
+        }
+        Ok(Session {
+            part,
+            spec,
+            classes: self.classes,
+            workers,
+            latency: self.latency,
+            omega: self.omega,
+            deadline,
+            score: self.score,
+            compute: self.compute,
+            rng: Pcg64::seed_from(self.seed),
+            cache: EncodedBlockCache::new(self.cache_capacity),
+            backend,
+            next_id: 1,
+        })
+    }
+}
+
+fn validate_deadline(t_max: f64) -> ApiResult<()> {
+    if !t_max.is_finite() || t_max < 0.0 {
+        return Err(UepmmError::Deadline(format!(
+            "T_max must be finite and non-negative, got {t_max}"
+        )));
+    }
+    Ok(())
+}
+
+/// One validated client plan bound to one backend. See module docs.
+pub struct Session {
+    part: Partitioning,
+    spec: CodeSpec,
+    classes: Classes,
+    workers: usize,
+    latency: Option<LatencyModel>,
+    omega: OmegaMode,
+    deadline: f64,
+    score: bool,
+    compute: Compute,
+    rng: Pcg64,
+    cache: EncodedBlockCache,
+    backend: Box<dyn Backend>,
+    next_id: u64,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub fn partitioning(&self) -> &Partitioning {
+        &self.part
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The effective Ω capacity scaling.
+    pub fn omega_value(&self) -> f64 {
+        match self.omega {
+            OmegaMode::Auto => {
+                crate::latency::omega(self.part.num_products(), self.workers)
+            }
+            OmegaMode::Fixed(w) => w,
+        }
+    }
+
+    /// Hit/miss/eviction counters of the session's encoded-block cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Prepare and enqueue one request; returns immediately with a
+    /// handle. Backends pipeline queued requests in submission order.
+    pub fn submit(&mut self, req: Request) -> ApiResult<RequestHandle> {
+        let prep = self.prepare(req)?;
+        let id = prep.id;
+        self.backend.submit(prep)?;
+        Ok(RequestHandle { id })
+    }
+
+    /// Batched submission: prepare the whole stream (so a repeated-`A`
+    /// stream pays one encode and `N−1` cache hits up front) and hand
+    /// every request to the backend before any result is awaited.
+    pub fn submit_batch(
+        &mut self,
+        reqs: impl IntoIterator<Item = Request>,
+    ) -> ApiResult<Vec<RequestHandle>> {
+        let mut handles = Vec::new();
+        for req in reqs {
+            handles.push(self.submit(req)?);
+        }
+        Ok(handles)
+    }
+
+    /// One poll step. `Pending` carries the refinement events recorded
+    /// since the last poll (streaming backends absorb one arrival per
+    /// poll); `Ready` consumes the handle and yields the full report.
+    pub fn poll(&mut self, h: RequestHandle) -> ApiResult<PollState> {
+        self.backend.poll(h.id)
+    }
+
+    /// Drive the backend until the request completes.
+    pub fn wait(&mut self, h: RequestHandle) -> ApiResult<RunReport> {
+        loop {
+            match self.backend.poll(h.id)? {
+                PollState::Ready(report) => return Ok(report),
+                PollState::Pending(_) => {}
+            }
+        }
+    }
+
+    /// `submit` + `wait` in one call.
+    pub fn run(&mut self, req: Request) -> ApiResult<RunReport> {
+        let h = self.submit(req)?;
+        self.wait(h)
+    }
+
+    /// Cancel a request. An in-flight streaming request finalizes with
+    /// whatever it decoded so far (the anytime contract) — `Some`
+    /// carries that partial report; `None` means the request was
+    /// dropped before any work happened (or the handle was unknown).
+    pub fn cancel(&mut self, h: RequestHandle) -> ApiResult<Option<RunReport>> {
+        self.backend.cancel(h.id)
+    }
+
+    /// Backend upkeep between requests: heartbeat/evict dead workers on
+    /// networked backends, a no-op elsewhere.
+    pub fn maintain(&mut self) -> ApiResult<Maintenance> {
+        self.backend.maintain()
+    }
+
+    /// Orderly teardown of the backend (graceful worker shutdown on
+    /// cluster backends).
+    pub fn shutdown(mut self) -> ApiResult<()> {
+        self.backend.shutdown()
+    }
+
+    // ---------------------------------------------------------- prepare
+
+    fn prepare(&mut self, req: Request) -> ApiResult<PreparedRequest> {
+        if req.a.shape() != self.part.a_shape() {
+            return Err(UepmmError::Config(format!(
+                "A is {:?}, partitioning expects {:?}",
+                req.a.shape(),
+                self.part.a_shape()
+            )));
+        }
+        if req.b.shape() != self.part.b_shape() {
+            return Err(UepmmError::Config(format!(
+                "B is {:?}, partitioning expects {:?}",
+                req.b.shape(),
+                self.part.b_shape()
+            )));
+        }
+        let t_max = req.t_max.unwrap_or(self.deadline);
+        validate_deadline(t_max)?;
+        let cm = match &self.classes {
+            Classes::Pinned(cm) => cm.clone(),
+            Classes::Auto(s) => ClassMap::from_matrices(&self.part, &req.a, &req.b, *s),
+        };
+        let score = req.score.unwrap_or(self.score);
+        let score_ref = if score {
+            // one pass over the sub-products serves both references: the
+            // Gram matrix for the running progress loss, and the exact
+            // product (assembled from the same blocks, both paradigms)
+            // for the final honest score — no second full matmul
+            let products = self.part.true_products(&req.a, &req.b);
+            let gram = self.part.gram(&products);
+            let energy = self
+                .part
+                .loss_from_gram(&gram, &vec![false; self.part.num_products()]);
+            let c_true = self
+                .part
+                .assemble(&products.into_iter().map(Some).collect::<Vec<_>>());
+            Some(ScoreRef { c_true, gram, energy })
+        } else {
+            None
+        };
+        let (work, cache_hit) = match self.compute {
+            Compute::Honest => {
+                // the cache is only coherent under pinned classes: an
+                // auto class map depends on each request's B, so its
+                // entries could never be shared across a stream — build
+                // the encoding directly (and retain nothing) instead of
+                // silently filling the cache with dead entries
+                let cacheable = matches!(self.classes, Classes::Pinned(_));
+                let (enc, hit) = if cacheable {
+                    let key = CacheKey::new(
+                        req.a_id,
+                        &self.part,
+                        &self.spec,
+                        &cm,
+                        self.workers,
+                    );
+                    let part = &self.part;
+                    let spec = &self.spec;
+                    let workers = self.workers;
+                    let rng = &mut self.rng;
+                    let (enc, hit) = self
+                        .cache
+                        .get_or_insert_with(key, || {
+                            EncodedA::encode(
+                                part,
+                                spec.clone(),
+                                &cm,
+                                workers,
+                                &req.a,
+                                rng,
+                            )
+                        })
+                        .map_err(|e| UepmmError::Encode(format!("{e:#}")))?;
+                    (enc, Some(hit))
+                } else {
+                    let enc = EncodedA::encode(
+                        &self.part,
+                        self.spec.clone(),
+                        &cm,
+                        self.workers,
+                        &req.a,
+                        &mut self.rng,
+                    )
+                    .map_err(|e| UepmmError::Encode(format!("{e:#}")))?;
+                    (Arc::new(enc), None)
+                };
+                let b_blocks = self.part.split_b(&req.b);
+                let wb: Vec<Matrix> =
+                    (0..enc.workers()).map(|w| enc.job_b(&b_blocks, w)).collect();
+                (PreparedWork::Encoded { enc, wb }, hit)
+            }
+            Compute::Selective => {
+                // no W_A materialization and no caching: the training
+                // shape changes A every call, so cached encodings would
+                // never be coherent anyway
+                let a_blocks = self.part.split_a(&req.a);
+                let b_blocks = self.part.split_b(&req.b);
+                let packets = self.spec.generate_packets(
+                    &self.part,
+                    &cm,
+                    self.workers,
+                    &mut self.rng,
+                );
+                let space = UnknownSpace::for_code(&self.part, self.spec.style);
+                (
+                    PreparedWork::Blocks { space, packets, a_blocks, b_blocks },
+                    None,
+                )
+            }
+        };
+        let omega = self.omega_value();
+        let delays = match self.latency.clone() {
+            Some(model) => {
+                let mut d = Vec::with_capacity(self.workers);
+                for _ in 0..self.workers {
+                    d.push(model.sample_scaled(omega, &mut self.rng));
+                }
+                Some(d)
+            }
+            None => None,
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(PreparedRequest {
+            id,
+            part: self.part.clone(),
+            cm,
+            t_max,
+            delays,
+            work,
+            score: score_ref,
+            cache_hit,
+        })
+    }
+}

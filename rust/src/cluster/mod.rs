@@ -24,7 +24,10 @@
 //!
 //! Entry points: `uepmm serve` / `uepmm worker` (see `main.rs`) for the
 //! TCP deployment, [`ClusterServer`] + [`spawn_loopback_workers`] for
-//! embedded/loopback use.
+//! embedded/loopback use — or wrap either form in
+//! [`crate::api::ClusterBackend`] to drive it through the unified
+//! [`crate::api::Session`] API (progress stream, session-owned encode
+//! cache, typed errors).
 
 pub mod cache;
 pub mod server;
@@ -35,7 +38,7 @@ pub mod worker;
 pub use cache::{CacheKey, CacheStats, EncodedBlockCache};
 pub use server::{
     ClusterConfig, ClusterOutcome, ClusterServer, CodingConfig, DeadlineMode,
-    MatmulRequest, WorkerInfo,
+    DecodeStep, MatmulRequest, ServedDecode, WorkerInfo,
 };
 pub use transport::{
     loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,

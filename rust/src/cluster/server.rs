@@ -185,12 +185,29 @@ enum Poll {
     Dead,
 }
 
-struct Core {
-    st: DecodeState,
-    received: usize,
-    late: usize,
-    dispatched: usize,
-    wall: Duration,
+/// One accepted decode absorption inside a served request, reported to
+/// the observer of [`ClusterServer::serve_jobs`] — the hook behind the
+/// client API's anytime [`crate::api::Progress`] stream.
+#[derive(Clone, Debug)]
+pub struct DecodeStep {
+    /// Virtual completion time of the absorbed result.
+    pub delay: f64,
+    /// Results absorbed so far (this one included).
+    pub received: usize,
+    /// Real sub-products determined so far.
+    pub recovered: usize,
+    /// Sub-products newly determined by this absorption.
+    pub newly: Vec<usize>,
+}
+
+/// Raw dispatch/collect/decode result of one served job set, before
+/// assembly and scoring.
+pub struct ServedDecode {
+    pub st: DecodeState,
+    pub received: usize,
+    pub late: usize,
+    pub dispatched: usize,
+    pub wall: Duration,
 }
 
 /// The coordinator server. See module docs.
@@ -429,7 +446,8 @@ impl ClusterServer {
                 (Arc::new(wa), wb)
             })
             .collect();
-        let core = self.serve_core(&plan.space, &plan.packets, jobs, delays, t_max)?;
+        let core =
+            self.serve_jobs(&plan.space, &plan.packets, jobs, delays, t_max, None)?;
         let outcome =
             score_outcome(&plan.part, &plan.cm, &plan.c_true, &core.st, core.received);
         Ok(ClusterOutcome {
@@ -476,8 +494,14 @@ impl ClusterServer {
         let jobs: Vec<(Arc<Matrix>, Matrix)> = (0..enc.workers())
             .map(|w| (Arc::clone(&enc.wa[w]), enc.job_b(&b_blocks, w)))
             .collect();
-        let core =
-            self.serve_core(&enc.space, &enc.packets, jobs, delays.as_deref(), req.t_max)?;
+        let core = self.serve_jobs(
+            &enc.space,
+            &enc.packets,
+            jobs,
+            delays.as_deref(),
+            req.t_max,
+            None,
+        )?;
         let outcome = if req.score {
             let c_true = matmul(&req.a, &req.b);
             score_outcome(&coding.part, &coding.cm, &c_true, &core.st, core.received)
@@ -493,17 +517,21 @@ impl ClusterServer {
         })
     }
 
-    // ------------------------------------------------------------ internals
-
-    /// Dispatch + collect + decode for one request.
-    fn serve_core(
+    /// Dispatch + collect + decode for one prepared job set — the core
+    /// every higher-level entry point ([`Self::serve_plan`],
+    /// [`Self::serve_request`], and the client API's cluster backends)
+    /// shares. `observe` is called once per absorbed in-deadline result
+    /// in absorption order, which is what feeds the anytime progress
+    /// stream.
+    pub fn serve_jobs(
         &mut self,
         space: &UnknownSpace,
         packets: &[Packet],
         jobs: Vec<(Arc<Matrix>, Matrix)>,
         delays: Option<&[f64]>,
         t_max: f64,
-    ) -> Result<Core> {
+        mut observe: Option<&mut dyn FnMut(DecodeStep)>,
+    ) -> Result<ServedDecode> {
         anyhow::ensure!(
             self.live_workers() > 0,
             "no live workers registered with the coordinator"
@@ -605,8 +633,17 @@ impl ClusterServer {
                         continue; // corrupt slot from a broken worker
                     }
                     if r.delay <= t_max {
-                        st.add_packet(&packets[r.slot as usize], Some(r.payload));
+                        let newly =
+                            st.add_packet(&packets[r.slot as usize], Some(r.payload));
                         received += 1;
+                        if let Some(obs) = observe.as_mut() {
+                            obs(DecodeStep {
+                                delay: r.delay,
+                                received,
+                                recovered: st.num_recovered(),
+                                newly,
+                            });
+                        }
                     } else {
                         late += 1;
                     }
@@ -619,8 +656,17 @@ impl ClusterServer {
                 while outstanding > 0 && Instant::now() < deadline {
                     let polled = self.poll_round(request_id, &mut outstanding, &mut |r| {
                         if (r.slot as usize) < packets.len() {
-                            st.add_packet(&packets[r.slot as usize], Some(r.payload));
+                            let newly =
+                                st.add_packet(&packets[r.slot as usize], Some(r.payload));
                             received += 1;
+                            if let Some(obs) = observe.as_mut() {
+                                obs(DecodeStep {
+                                    delay: r.delay,
+                                    received,
+                                    recovered: st.num_recovered(),
+                                    newly,
+                                });
+                            }
                         }
                     });
                     if polled == 0 {
@@ -639,8 +685,10 @@ impl ClusterServer {
                 }
             }
         }
-        Ok(Core { st, received, late, dispatched, wall: start.elapsed() })
+        Ok(ServedDecode { st, received, late, dispatched, wall: start.elapsed() })
     }
+
+    // ------------------------------------------------------------ internals
 
     /// One poll pass over all workers with current-request jobs in
     /// flight. Results for this request are handed to `on_result`;
@@ -982,5 +1030,57 @@ mod tests {
         let mut server = ClusterServer::new(ClusterConfig::default());
         let plan = small_plan(4, 2);
         assert!(server.serve_plan(&plan, 1.0, None).is_err());
+    }
+
+    #[test]
+    fn serve_jobs_observer_sees_every_accepted_absorption_in_order() {
+        let plan = small_plan(12, 17);
+        // half the results miss the virtual deadline: the observer must
+        // see exactly the six accepted ones, in (delay, slot) order
+        let delays: Vec<f64> =
+            (0..12).map(|w| if w % 2 == 0 { 0.1 * (w + 1) as f64 } else { 9.0 }).collect();
+        let (mut server, _dialer, handles) =
+            start_cluster(3, ClusterConfig::default());
+        let jobs: Vec<(Arc<Matrix>, Matrix)> = plan
+            .packets
+            .iter()
+            .map(|p| {
+                let (wa, wb) = crate::coordinator::build_job_matrices(
+                    &plan.part,
+                    &plan.a_blocks,
+                    &plan.b_blocks,
+                    &p.recipe,
+                );
+                (Arc::new(wa), wb)
+            })
+            .collect();
+        let mut steps: Vec<DecodeStep> = Vec::new();
+        let mut obs = |s: DecodeStep| steps.push(s);
+        let served = server
+            .serve_jobs(
+                &plan.space,
+                &plan.packets,
+                jobs,
+                Some(&delays),
+                1.5,
+                Some(&mut obs),
+            )
+            .unwrap();
+        finish(server, handles);
+        assert_eq!(served.received, 6);
+        assert_eq!(served.late, 6);
+        assert_eq!(steps.len(), 6);
+        for (i, s) in steps.iter().enumerate() {
+            assert_eq!(s.received, i + 1);
+            assert!(s.delay <= 1.5);
+        }
+        // delays are absorbed in non-decreasing order
+        for w in steps.windows(2) {
+            assert!(w[0].delay <= w[1].delay);
+        }
+        // newly-determined counts accumulate to the final recovery
+        let total_newly: usize = steps.iter().map(|s| s.newly.len()).sum();
+        assert_eq!(total_newly, served.st.num_recovered());
+        assert_eq!(steps.last().unwrap().recovered, served.st.num_recovered());
     }
 }

@@ -2,6 +2,13 @@
 //! dispatches to workers, collects results until the deadline `T_max`,
 //! decodes progressively, and assembles the approximation `Ĉ`.
 //!
+//! **Entry point note:** new code should drive these paths through the
+//! unified client API ([`crate::api::Session`] +
+//! [`crate::api::Backend`]), which adds caching, batched submission,
+//! anytime progress, and typed errors on top. What remains here is the
+//! plan machinery ([`Plan`], [`EncodedA`], job building, scoring) and
+//! the *reference* virtual-time path every backend is checked against.
+//!
 //! Three execution paths, one protocol:
 //! * [`Coordinator::run`] — *virtual-time honest* path: every worker
 //!   payload is actually computed through the [`ExecEngine`] (PJRT
@@ -27,7 +34,9 @@ mod service;
 pub use plan::{
     build_job_a, build_job_b, build_job_matrices, EncodedA, Plan,
 };
-pub use service::{run_service, ServiceConfig, ServiceOutcome};
+#[allow(deprecated)]
+pub use service::run_service;
+pub use service::{ServiceConfig, ServiceOutcome};
 
 use crate::coding::DecodeState;
 use crate::linalg::Matrix;

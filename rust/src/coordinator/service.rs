@@ -1,5 +1,8 @@
 //! The in-process threaded service: a thin adapter over the cluster
-//! loopback runtime.
+//! loopback runtime. **Deprecated shim** — the unified client API
+//! ([`crate::api::Session`] with [`crate::api::PooledBackend`]) serves
+//! the same path with caching, batching, and anytime progress; this
+//! one-call form stays for callers that already hold a [`Plan`].
 //!
 //! Worker agents run on threads behind a
 //! [`LoopbackTransport`], each computing its coded product through a
@@ -72,6 +75,11 @@ pub struct ServiceOutcome {
 /// inside the worker threads; the PJRT engine is thread-confined, so the
 /// service path keeps compute native — the honest PJRT path is
 /// [`super::Coordinator::run`]).
+#[deprecated(
+    since = "0.2.0",
+    note = "drive a PooledBackend through uepmm::api::Session instead; this \
+            shim stays for plan-level callers and will not grow features"
+)]
 pub fn run_service(plan: &Plan, cfg: &ServiceConfig, rng: &mut Pcg64) -> Result<ServiceOutcome> {
     // Pre-sample delays so the run is reproducible from the seed.
     let delays: Vec<f64> = (0..plan.packets.len())
@@ -111,6 +119,7 @@ pub fn run_service(plan: &Plan, cfg: &ServiceConfig, rng: &mut Pcg64) -> Result<
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim's own contract tests keep exercising it
 mod tests {
     use super::*;
     use crate::coding::{CodeKind, CodeSpec, WindowPolynomial};

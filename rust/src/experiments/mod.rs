@@ -13,6 +13,7 @@ mod fig8;
 mod fig9;
 mod mnist;
 mod params;
+mod stream;
 
 pub use common::{mc_loss_vs_packets, mc_loss_vs_time, ExpContext};
 
@@ -39,6 +40,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "ablation-gamma",
             "window-polynomial sensitivity (paper §VI closing remark)",
             ablation::run_gamma,
+        ),
+        (
+            "api-stream",
+            "anytime client API: served loss vs deadline over a cached stream",
+            stream::run,
         ),
     ]
 }

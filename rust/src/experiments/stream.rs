@@ -1,0 +1,95 @@
+//! `api-stream`: the anytime client API as an experiment — a
+//! deterministic loopback request stream served through
+//! [`crate::api::Session`] + [`crate::api::PooledBackend`], recording
+//! per-request loss, cache behavior, and the progressive-refinement
+//! counts that make `Ĉ(t)` an anytime result.
+//!
+//! The stream has the DNN-training shape (two weight matrices cycle,
+//! activations fresh per request) and sweeps the deadline, so the CSV
+//! shows the paper's loss-vs-`T_max` trade-off *as served* (not
+//! Monte-Carlo): loss falls as the deadline grows, repeated-`A`
+//! requests hit the encoded-block cache, and every request's progress
+//! stream is non-increasing in loss.
+
+use crate::api::{PooledBackend, Request, Session};
+use crate::coding::{CodeKind, CodeSpec};
+use crate::config::SyntheticSpec;
+use crate::rng::Pcg64;
+use crate::util::csv::CsvTable;
+
+use super::common::ExpContext;
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let spec = SyntheticSpec::fig9_rxc().scaled(2 * ctx.scale_factor());
+    let code = CodeSpec::stacked(CodeKind::EwUep(spec.gamma.clone()));
+    let threads = ctx.threads.clamp(1, 8);
+    let mut session = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(code)
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        .latency(spec.latency.clone())
+        .deadline(spec.t_max)
+        .score(true)
+        .seed(ctx.seed)
+        .backend(PooledBackend::spawn(threads)?)
+        .build()?;
+
+    let deadlines = [0.3, 0.6, 1.2, 2.4];
+    let n_weights = 2usize;
+    let requests = deadlines.len() * n_weights;
+    println!(
+        "api-stream: {requests} requests, {} coded jobs over {threads} pooled \
+         workers, Ω={:.2}, deadlines {deadlines:?}",
+        session.workers(),
+        session.omega_value()
+    );
+
+    let mut mats = Pcg64::with_stream(ctx.seed, 500);
+    let weights: Vec<_> = (0..n_weights).map(|_| spec.sample_a(&mut mats)).collect();
+    let mut table = CsvTable::new(&[
+        "request", "a_id", "t_max", "received", "late", "recovered", "norm_loss",
+        "refinements", "monotone", "cache_hit",
+    ]);
+    for req in 0..requests {
+        let a_id = req % n_weights;
+        let t_max = deadlines[req / n_weights];
+        let b = spec.sample_b(&mut mats);
+        let out = session.run(
+            Request::new(a_id as u64, weights[a_id].clone(), b).deadline(t_max),
+        )?;
+        let monotone = out.progress.loss_non_increasing();
+        println!(
+            "  req {req}: A#{a_id} T_max={t_max:<4} received {:>2} recovered {}/{} \
+             norm-loss {:.4} ({} refinements, monotone {monotone}, cache {})",
+            out.outcome.received,
+            out.outcome.recovered,
+            spec.part.num_products(),
+            out.outcome.normalized_loss,
+            out.progress.refinements(),
+            if out.cache_hit == Some(true) { "hit" } else { "miss" },
+        );
+        anyhow::ensure!(monotone, "progress loss must be non-increasing (r×c)");
+        table.push_raw(vec![
+            req.to_string(),
+            a_id.to_string(),
+            t_max.to_string(),
+            out.outcome.received.to_string(),
+            out.late.to_string(),
+            out.outcome.recovered.to_string(),
+            format!("{:.6}", out.outcome.normalized_loss),
+            out.progress.refinements().to_string(),
+            monotone.to_string(),
+            (out.cache_hit == Some(true)).to_string(),
+        ]);
+    }
+    let cache = session.cache_stats();
+    println!(
+        "  cache: {} hits / {} misses over the stream (one encode per weight \
+         matrix)",
+        cache.hits, cache.misses
+    );
+    session.shutdown()?;
+    ctx.write_csv("api_stream.csv", &table)?;
+    Ok(())
+}

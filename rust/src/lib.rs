@@ -12,15 +12,30 @@
 //!
 //! ## Layer map
 //!
-//! * **L3 (this crate)** — the coordinator: [`coding`], [`partition`],
-//!   [`latency`], [`analysis`], [`sim`], [`coordinator`], [`nn`],
-//!   [`experiments`], and the networked runtime [`cluster`]
-//!   (coordinator/worker agents over a wire protocol).
+//! * **[`api`] — the public front door.** One [`api::Session`] builder
+//!   and one [`api::Backend`] trait drive all three execution paths
+//!   (in-process virtual time, loopback thread pool, networked cluster)
+//!   with batched submission, an anytime [`api::Progress`] stream, and
+//!   typed [`api::UepmmError`]s. Start here; everything below is the
+//!   engine room.
+//! * **Coding & analysis** — [`coding`] (packet generation, incremental
+//!   decode), [`partition`] (block splits, Gram-based loss),
+//!   [`latency`] (straggler models), [`analysis`] (Theorems 2/3,
+//!   decoding probabilities), [`sim`] (fast coefficient-only sweeps).
+//! * **Execution** — [`coordinator`] (plans, the virtual-time reference
+//!   path, the deprecated thread-pool shim), [`cluster`] (wire
+//!   protocol, transports, worker agents, the coordinator server the
+//!   pooled/networked backends share), [`runtime`] (native + PJRT
+//!   engines), [`linalg`] (the blocked/parallel matmul kernel).
+//! * **Workloads** — [`nn`] (coded DNN training through the client
+//!   API), [`experiments`] (paper figures + the `api-stream` demo),
+//!   [`config`] (paper presets), [`data`], [`util`].
 //! * **L2/L1 (build time)** — `python/compile/` lowers the JAX model and
 //!   Pallas kernels to HLO text; [`runtime`] loads and executes them via
 //!   PJRT. Python never runs on the request path.
 
 pub mod analysis;
+pub mod api;
 pub mod cluster;
 pub mod coding;
 pub mod config;
@@ -36,8 +51,19 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-/// Convenient re-exports of the most commonly used types.
+/// Convenient re-exports of the most commonly used types: the unified
+/// client API surface plus the handful of building blocks every caller
+/// touches (matrices, partitionings, codes, latency models, RNG).
 pub mod prelude {
+    pub use crate::api::{
+        ApiResult, Backend, Capabilities, Classes, ClusterBackend, Compute,
+        InProcessBackend, OmegaMode, PollState, PooledBackend, Progress,
+        ProgressEvent, Request, RequestHandle, RunReport, Session,
+        SessionBuilder, UepmmError,
+    };
+    pub use crate::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+    pub use crate::latency::LatencyModel;
     pub use crate::linalg::Matrix;
+    pub use crate::partition::{ClassMap, Paradigm, Partitioning};
     pub use crate::rng::Pcg64;
 }

@@ -7,24 +7,28 @@
 //! uepmm worker [...]              # cluster worker agent (TCP)
 //! uepmm matmul [...]              # one coded multiplication (native/pjrt)
 //! ```
+//!
+//! Every serving subcommand drives the unified client API
+//! (`uepmm::api::Session` over a `Backend`): `matmul` uses the
+//! in-process backend, `serve` the cluster backend (loopback worker
+//! threads or TCP worker processes), and both surface the anytime
+//! progress stream alongside the final outcome.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use uepmm::api::{ClusterBackend, InProcessBackend, Request, Session};
 use uepmm::cluster::{
-    spawn_loopback_workers, ClusterConfig, ClusterServer, CodingConfig,
-    DeadlineMode, LoopbackTransport, MatmulRequest, TcpConn, TcpTransport,
-    Transport, WorkerConfig,
+    ClusterConfig, ClusterServer, DeadlineMode, TcpConn, TcpTransport, Transport,
+    WorkerConfig,
 };
 use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
-use uepmm::coordinator::{Coordinator, Plan};
 use uepmm::experiments::{self, ExpContext};
 use uepmm::latency::LatencyModel;
 use uepmm::rng::Pcg64;
-use uepmm::runtime::{engine_by_name, NativeEngine, PjrtEngine};
-use uepmm::sim::StragglerSim;
-use uepmm::util::cli::Command;
+use uepmm::runtime::{engine_by_name, ExecEngine};
+use uepmm::util::cli::{Args, Command};
 use uepmm::util::pool::available_parallelism;
 
 fn main() {
@@ -80,28 +84,122 @@ fn print_usage() {
     );
 }
 
-fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("exp", "reproduce a paper figure/table")
-        .opt("out", "results", "output directory for CSVs")
-        .opt("trials", "400", "Monte-Carlo trials per configuration")
-        .opt("seed", "2021", "base RNG seed")
-        .opt("threads", "0", "worker threads (0 = all cores)")
-        .flag("full", "paper-scale sizes (slower)");
-    let parsed = cmd.parse(rest)?;
-    let name = parsed
-        .positional
-        .first()
-        .cloned()
-        .unwrap_or_else(|| "all".to_string());
-    let threads = parsed.get_usize("threads")?;
-    let ctx = ExpContext {
-        out: PathBuf::from(parsed.get_str("out")),
-        trials: parsed.get_usize("trials")?,
-        full: parsed.get_bool("full"),
-        seed: parsed.get_u64("seed")?,
-        threads: if threads == 0 { available_parallelism() } else { threads },
-    };
-    experiments::run(&name, &ctx)
+// ===================================================== shared option sets
+//
+// Each subcommand used to hand-roll its flag list and accessors; the
+// shared sets below are declared once and parsed once through the typed
+// `Args::get<T>` accessor, so a flag's name, default, and type live in
+// exactly one place.
+
+/// Seeding + thread-count flags (every subcommand).
+struct SharedOpts {
+    seed: u64,
+    threads: usize,
+}
+
+impl SharedOpts {
+    fn declare(cmd: Command, seed_default: &'static str) -> Command {
+        cmd.opt("seed", seed_default, "base RNG seed")
+            .opt("threads", "0", "worker threads (0 = all cores)")
+    }
+
+    fn parse(a: &Args) -> anyhow::Result<SharedOpts> {
+        Ok(SharedOpts { seed: a.get("seed")?, threads: a.get("threads")? })
+    }
+
+    fn threads(&self) -> usize {
+        if self.threads == 0 {
+            available_parallelism()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Code/geometry/deadline flags of a coded run (`matmul`, `serve`).
+struct CodedOpts {
+    code: String,
+    workers: usize,
+    tmax: Vec<f64>,
+    scale: usize,
+}
+
+impl CodedOpts {
+    fn declare(cmd: Command, scale_default: &'static str) -> Command {
+        cmd.opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
+            .opt("workers", "15", "coded packets (jobs) per request")
+            .opt("tmax", "1.0", "deadline(s) T_max, comma list cycled")
+            .opt("scale", scale_default, "matrix size divisor vs the paper")
+    }
+
+    fn parse(a: &Args) -> anyhow::Result<CodedOpts> {
+        let opts = CodedOpts {
+            code: a.get_str("code").to_string(),
+            workers: a.get("workers")?,
+            tmax: a.get_f64_list("tmax")?,
+            scale: a.get("scale")?,
+        };
+        anyhow::ensure!(!opts.tmax.is_empty(), "--tmax needs at least one deadline");
+        Ok(opts)
+    }
+
+    /// Scale the synthetic preset and resolve the code spec against its
+    /// window polynomial.
+    fn apply(&self, base: SyntheticSpec) -> anyhow::Result<(SyntheticSpec, CodeSpec)> {
+        let mut spec = base.scaled(self.scale);
+        spec.workers = self.workers;
+        let code = parse_code(&self.code, &spec.gamma)?;
+        Ok((spec, code))
+    }
+}
+
+/// Straggle-model + pacing flags (`matmul`, `serve`, `worker`).
+struct TimingOpts {
+    latency: Option<LatencyModel>,
+    time_scale: f64,
+}
+
+impl TimingOpts {
+    fn declare(
+        cmd: Command,
+        latency_default: &'static str,
+        latency_help: &'static str,
+    ) -> Command {
+        cmd.opt("latency", latency_default, latency_help)
+            .opt("time-scale", "0.05", "wall seconds per virtual time unit")
+    }
+
+    fn parse(a: &Args) -> anyhow::Result<TimingOpts> {
+        let latency = match a.get_str("latency") {
+            "" => None,
+            _ => Some(a.get::<LatencyModel>("latency")?),
+        };
+        Ok(TimingOpts { latency, time_scale: a.get("time-scale")? })
+    }
+}
+
+/// Execution-engine flags (`matmul`, `worker`).
+struct EngineOpts {
+    engine: String,
+    artifacts: String,
+}
+
+impl EngineOpts {
+    fn declare(cmd: Command) -> Command {
+        cmd.opt("engine", "native", "native|pjrt")
+            .opt("artifacts", "artifacts", "artifact dir for the pjrt engine")
+    }
+
+    fn parse(a: &Args) -> anyhow::Result<EngineOpts> {
+        Ok(EngineOpts {
+            engine: a.get_str("engine").to_string(),
+            artifacts: a.get_str("artifacts").to_string(),
+        })
+    }
+
+    fn build(&self) -> anyhow::Result<Box<dyn ExecEngine>> {
+        engine_by_name(&self.engine, &self.artifacts)
+    }
 }
 
 fn parse_code(kind: &str, gamma: &WindowPolynomial) -> anyhow::Result<CodeSpec> {
@@ -121,259 +219,283 @@ fn parse_code(kind: &str, gamma: &WindowPolynomial) -> anyhow::Result<CodeSpec> 
     })
 }
 
+// ============================================================ subcommands
+
+fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = SharedOpts::declare(
+        Command::new("exp", "reproduce a paper figure/table")
+            .opt("out", "results", "output directory for CSVs")
+            .opt("trials", "400", "Monte-Carlo trials per configuration")
+            .flag("full", "paper-scale sizes (slower)"),
+        "2021",
+    );
+    let parsed = cmd.parse(rest)?;
+    let shared = SharedOpts::parse(&parsed)?;
+    let name = parsed
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let ctx = ExpContext {
+        out: PathBuf::from(parsed.get_str("out")),
+        trials: parsed.get("trials")?,
+        full: parsed.get_bool("full"),
+        seed: shared.seed,
+        threads: shared.threads(),
+    };
+    experiments::run(&name, &ctx)
+}
+
 fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("matmul", "run one coded approximate multiplication")
-        .opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
-        .opt("paradigm", "rxc", "rxc|cxr")
-        .opt("workers", "15", "number of workers W")
-        .opt("tmax", "1.0", "deadline T_max")
-        .opt("lambda", "1.0", "exponential latency rate")
-        .opt("seed", "1", "RNG seed")
-        .opt("scale", "6", "matrix size divisor vs the paper (1 = full)")
-        .opt("engine", "native", "native|pjrt")
-        .opt("artifacts", "artifacts", "artifact dir for the pjrt engine");
+    let cmd = {
+        let c = Command::new("matmul", "run one coded approximate multiplication")
+            .opt("paradigm", "rxc", "rxc|cxr");
+        let c = CodedOpts::declare(c, "6");
+        let c = TimingOpts::declare(c, "exp:1.0", "straggle model for the virtual arrivals");
+        let c = EngineOpts::declare(c);
+        SharedOpts::declare(c, "1")
+    };
     let a = cmd.parse(rest)?;
-    let mut spec = match a.get_str("paradigm") {
+    let shared = SharedOpts::parse(&a)?;
+    let coded = CodedOpts::parse(&a)?;
+    let timing = TimingOpts::parse(&a)?;
+    let engine = EngineOpts::parse(&a)?;
+    let base = match a.get_str("paradigm") {
         "rxc" => SyntheticSpec::fig9_rxc(),
         "cxr" => SyntheticSpec::fig9_cxr(),
         other => anyhow::bail!("unknown paradigm '{other}'"),
-    }
-    .scaled(a.get_usize("scale")?);
-    spec.workers = a.get_usize("workers")?;
-    spec.latency = LatencyModel::exp(a.get_f64("lambda")?);
-    spec.t_max = a.get_f64("tmax")?;
-    let code = parse_code(a.get_str("code"), &spec.gamma)?;
-
-    let mut rng = Pcg64::seed_from(a.get_u64("seed")?);
-    let (ma, mb) = spec.sample_matrices(&mut rng);
-    let plan = Plan::build_with_classes(
-        &spec.part,
-        code,
-        spec.class_map(),
-        spec.workers,
-        &ma,
-        &mb,
-        &mut rng,
-    )?;
-    let sim = StragglerSim::new(spec.workers, spec.latency.clone(), spec.omega());
-    let arrivals = sim.sample_arrivals(&mut rng);
-    let outcome = match a.get_str("engine") {
-        "native" => Coordinator::new(NativeEngine::default())
-            .run(&plan, &arrivals, spec.t_max)?,
-        "pjrt" => {
-            let engine = PjrtEngine::from_artifacts(a.get_str("artifacts"))?;
-            println!("pjrt platform: {}", engine.platform());
-            Coordinator::new(engine).run(&plan, &arrivals, spec.t_max)?
-        }
-        other => anyhow::bail!("unknown engine '{other}'"),
     };
-    println!(
-        "received {}/{} packets by T_max={}, recovered {}/{} sub-products",
-        outcome.received,
-        spec.workers,
-        spec.t_max,
-        outcome.recovered,
-        spec.part.num_products()
-    );
-    println!("per-class recovery: {:?}", outcome.per_class_recovered);
-    println!("normalized loss ‖C−Ĉ‖²/‖C‖² = {:.6}", outcome.normalized_loss);
+    let (spec, code) = coded.apply(base)?;
+    let eng = engine.build()?;
+    println!("engine: {}", eng.name());
+
+    let mut session = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(code)
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        .latency(timing.latency.clone().unwrap_or_else(|| LatencyModel::exp(1.0)))
+        .deadline(coded.tmax[0])
+        .score(true)
+        .seed(shared.seed)
+        .backend(InProcessBackend::with_engine(eng))
+        .build()?;
+
+    let mut mats = Pcg64::with_stream(shared.seed, 1);
+    let (ma, mb) = spec.sample_matrices(&mut mats);
+    let k = spec.part.num_products();
+    // one request per deadline in the --tmax list: a served loss-vs-T_max
+    // sweep (repeat requests reuse the cached encoding of A)
+    for &t_max in &coded.tmax {
+        let report = session
+            .run(Request::new(0, ma.clone(), mb.clone()).deadline(t_max))?;
+        if coded.tmax.len() == 1 {
+            println!("anytime progress (one line per absorbed arrival):");
+            for e in report.progress.events() {
+                println!(
+                    "  t={:<7.3} received {:>2}  recovered {:>2}/{k}  norm-loss {:.6}",
+                    e.elapsed, e.received, e.recovered, e.normalized_loss
+                );
+            }
+        }
+        println!(
+            "received {}/{} packets by T_max={}, recovered {}/{} sub-products",
+            report.outcome.received,
+            spec.workers,
+            t_max,
+            report.outcome.recovered,
+            k
+        );
+        println!("per-class recovery: {:?}", report.outcome.per_class_recovered);
+        println!(
+            "normalized loss ‖C−Ĉ‖²/‖C‖² = {:.6}",
+            report.outcome.normalized_loss
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("serve", "cluster coordinator serving a request stream")
-        .opt("listen", "127.0.0.1:7077", "TCP listen address")
-        .flag("loopback", "run in-process loopback workers instead of TCP")
-        .opt("threads", "0", "loopback worker threads (0 = all cores)")
-        .opt("min-workers", "2", "TCP: workers to wait for before serving")
-        .opt("accept-timeout", "60", "seconds to wait for worker registration")
-        .opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
-        .opt("workers", "15", "coded packets (jobs) per request")
-        .opt("requests", "6", "number of multiplication requests")
-        .opt("tmax", "1.0", "per-request deadline(s), comma list cycled")
-        .opt("time-scale", "0.05", "wall seconds per virtual time unit")
-        .opt(
-            "latency",
+    let cmd = {
+        let c = Command::new("serve", "cluster coordinator serving a request stream")
+            .opt("listen", "127.0.0.1:7077", "TCP listen address")
+            .flag("loopback", "run in-process loopback workers instead of TCP")
+            .opt("min-workers", "2", "TCP: workers to wait for before serving")
+            .opt("accept-timeout", "60", "seconds to wait for worker registration")
+            .opt("requests", "6", "number of multiplication requests")
+            .opt("matrices", "2", "distinct A matrices cycled through the stream");
+        let c = CodedOpts::declare(c, "10");
+        let c = TimingOpts::declare(
+            c,
             "exp:1.0",
             "injected straggle model for --loopback (exp:λ|det:t|sexp:s:λ|pareto:x:α)",
-        )
-        .opt("matrices", "2", "distinct A matrices cycled through the stream")
-        .opt("scale", "10", "matrix size divisor vs the paper")
-        .opt("seed", "1", "RNG seed");
+        );
+        SharedOpts::declare(c, "1")
+    };
     let a = cmd.parse(rest)?;
+    let shared = SharedOpts::parse(&a)?;
+    let coded = CodedOpts::parse(&a)?;
+    let timing = TimingOpts::parse(&a)?;
     let loopback = a.get_bool("loopback");
-    let mut spec = SyntheticSpec::fig9_rxc().scaled(a.get_usize("scale")?);
-    spec.workers = a.get_usize("workers")?;
-    let code = parse_code(a.get_str("code"), &spec.gamma)?;
-    let time_scale = a.get_f64("time-scale")?;
-    anyhow::ensure!(time_scale > 0.0, "--time-scale must be > 0");
-    let tmaxes = a.get_f64_list("tmax")?;
-    anyhow::ensure!(!tmaxes.is_empty(), "--tmax needs at least one deadline");
-    let requests = a.get_usize("requests")?;
-    let n_matrices = a.get_usize("matrices")?.max(1);
-    let mut rng = Pcg64::seed_from(a.get_u64("seed")?);
+    anyhow::ensure!(timing.time_scale > 0.0, "--time-scale must be > 0");
+    let (spec, code) = coded.apply(SyntheticSpec::fig9_rxc())?;
+    let requests: usize = a.get("requests")?;
+    let n_matrices = a.get::<usize>("matrices")?.max(1);
+    let accept_timeout = Duration::from_secs_f64(a.get_f64("accept-timeout")?);
 
     // The loopback path injects seeded virtual delays and filters on the
     // virtual deadline (deterministic); the TCP path lets workers and the
     // transport produce real timing and cuts off at the wall deadline.
-    let coding = CodingConfig {
-        part: spec.part.clone(),
-        spec: code,
-        cm: spec.class_map(),
-        workers: spec.workers,
-        latency: if loopback { Some(a.get::<LatencyModel>("latency")?) } else { None },
-    };
     let cluster_cfg = ClusterConfig {
         deadline: if loopback { DeadlineMode::Virtual } else { DeadlineMode::Wall },
-        time_scale,
+        time_scale: timing.time_scale,
+        // the session owns the encoded-block cache
+        cache_capacity: 0,
         ..ClusterConfig::default()
     };
-    let mut server = ClusterServer::new(cluster_cfg);
-    let accept_timeout = Duration::from_secs_f64(a.get_f64("accept-timeout")?);
-
-    let mut loopback_handles = Vec::new();
-    let expected = if loopback {
-        let threads = match a.get_usize("threads")? {
-            0 => available_parallelism(),
-            t => t,
-        };
-        let (mut transport, dialer) = LoopbackTransport::new();
-        loopback_handles = spawn_loopback_workers(
-            &dialer,
+    let (backend, expected) = if loopback {
+        let threads = shared.threads();
+        let backend = ClusterBackend::loopback(
             threads,
-            &WorkerConfig {
+            cluster_cfg,
+            WorkerConfig {
                 name: "loop".to_string(),
-                omega: coding.omega(),
-                time_scale,
+                time_scale: timing.time_scale,
                 ..WorkerConfig::default()
             },
-        );
-        drop(dialer);
-        let joined = server.accept_workers(&mut transport, threads, accept_timeout)?;
-        anyhow::ensure!(joined == threads, "only {joined}/{threads} loopback workers");
-        threads
+            accept_timeout,
+        )?;
+        (backend, threads)
     } else {
         let mut transport = TcpTransport::bind(a.get_str("listen"))?;
-        let want = a.get_usize("min-workers")?.max(1);
+        let want = a.get::<usize>("min-workers")?.max(1);
         println!(
             "coordinator listening on {} — waiting for {want} workers",
             transport.local_addr()
         );
+        let mut server = ClusterServer::new(cluster_cfg);
         let joined = server.accept_workers(&mut transport, want, accept_timeout)?;
         anyhow::ensure!(
             joined >= want,
             "only {joined}/{want} workers registered within the accept timeout"
         );
-        want
+        (ClusterBackend::from_server(server), want)
     };
-    for w in server.worker_info() {
+    for w in backend.worker_info() {
         println!("worker {} registered: {}", w.id, w.name);
     }
+
+    let mut builder = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(code)
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        .deadline(coded.tmax[0])
+        // demo/CI stream: score every request so the loss column is
+        // meaningful (production would leave scoring off)
+        .score(true)
+        .seed(shared.seed)
+        .backend(backend);
+    if loopback {
+        if let Some(model) = timing.latency.clone() {
+            builder = builder.latency(model);
+        }
+    }
+    let mut session = builder.build()?;
     println!(
         "serving {requests} requests: {} coded jobs over {expected} workers, \
          Ω={:.3}, deadlines {:?}, {} deadline mode",
-        coding.workers,
-        coding.omega(),
-        tmaxes,
+        session.workers(),
+        session.omega_value(),
+        coded.tmax,
         if loopback { "virtual" } else { "wall" },
     );
 
     // Pre-sample the distinct A matrices of the stream (id = index).
-    let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut rng)).collect();
+    let mut mats = Pcg64::with_stream(shared.seed, 1);
+    let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut mats)).collect();
     let (mut received, mut late, mut missing, mut recovered) = (0, 0, 0, 0);
+    let (mut refinements, mut monotone) = (0usize, true);
     for req in 0..requests {
         let a_id = (req % n_matrices) as u64;
-        let b = spec.sample_b(&mut rng);
-        let out = server.serve_request(
-            &coding,
-            &MatmulRequest {
-                a_id,
-                a: a_mats[a_id as usize].clone(),
-                b,
-                t_max: tmaxes[req % tmaxes.len()],
-                // demo/CI stream: score every request so the loss column
-                // is meaningful (production would pass false)
-                score: true,
-            },
-            &mut rng,
+        let b = spec.sample_b(&mut mats);
+        let t_max = coded.tmax[req % coded.tmax.len()];
+        let out = session.run(
+            Request::new(a_id, a_mats[a_id as usize].clone(), b).deadline(t_max),
         )?;
         println!(
-            "request {req} (A#{a_id}, T_max={}): {} arrivals ({} late, {} missing), \
-             recovered {}/{}, loss {:.4}, cache {}, wall {:?}",
-            tmaxes[req % tmaxes.len()],
+            "request {req} (A#{a_id}, T_max={t_max}): {} arrivals ({} late, {} missing), \
+             recovered {}/{}, loss {:.4}, cache {}, {} refinements, wall {:?}",
             out.outcome.received,
             out.late,
             out.missing(),
             out.outcome.recovered,
-            coding.part.num_products(),
+            spec.part.num_products(),
             out.outcome.normalized_loss,
             if out.cache_hit == Some(true) { "hit" } else { "miss" },
+            out.progress.refinements(),
             out.wall,
         );
         received += out.outcome.received;
         late += out.late;
         missing += out.missing();
         recovered += out.outcome.recovered;
-        let evicted = server.heartbeat();
-        for id in evicted {
+        refinements += out.progress.refinements();
+        monotone &= out.progress.loss_non_increasing();
+        let upkeep = session.maintain()?;
+        for id in upkeep.evicted {
             println!("worker {id} evicted (missed heartbeat)");
         }
-        anyhow::ensure!(server.live_workers() > 0, "all workers gone; aborting stream");
+        anyhow::ensure!(
+            upkeep.live_workers != Some(0),
+            "all workers gone; aborting stream"
+        );
     }
-    let cache = server.cache_stats();
+    let cache = session.cache_stats();
     println!(
         "stream done: requests={requests} received={received} late={late} \
          missing={missing} recovered_total={recovered} cache_hits={} \
          cache_misses={} cache_evictions={}",
         cache.hits, cache.misses, cache.evictions
     );
+    println!("progress: refinements={refinements} monotone={monotone}");
     // drain until every worker closes its side: a backlogged straggler
     // must read the queued Shutdown before this process exits
-    server.shutdown_graceful(Duration::from_secs(60));
-    for h in loopback_handles {
-        match h.join() {
-            Ok(r) => {
-                r?;
-            }
-            Err(_) => anyhow::bail!("loopback worker panicked"),
-        }
-    }
+    session.shutdown()?;
     println!("shutdown complete");
     Ok(())
 }
 
 fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
-    let cmd = Command::new("worker", "cluster worker agent")
-        .opt("connect", "127.0.0.1:7077", "coordinator address")
-        .opt("name", "", "worker name (default worker-<pid>)")
-        .opt(
-            "latency",
+    let cmd = {
+        let c = Command::new("worker", "cluster worker agent")
+            .opt("connect", "127.0.0.1:7077", "coordinator address")
+            .opt("name", "", "worker name (default worker-<pid>)")
+            .opt("omega", "1.0", "capacity scaling for self-injected delays")
+            .opt("seed", "0", "delay-sampling RNG seed")
+            .opt("retry", "15", "seconds to keep retrying the initial connect");
+        let c = TimingOpts::declare(
+            c,
             "",
             "self-injected straggle model (empty = real timing only)",
-        )
-        .opt("omega", "1.0", "capacity scaling for self-injected delays")
-        .opt("time-scale", "0.05", "wall seconds per virtual time unit")
-        .opt("seed", "0", "delay-sampling RNG seed")
-        .opt("engine", "native", "native|pjrt")
-        .opt("artifacts", "artifacts", "artifact dir for the pjrt engine")
-        .opt("retry", "15", "seconds to keep retrying the initial connect");
+        );
+        EngineOpts::declare(c)
+    };
     let a = cmd.parse(rest)?;
+    let timing = TimingOpts::parse(&a)?;
+    let engine_opts = EngineOpts::parse(&a)?;
     let name = match a.get_str("name") {
         "" => format!("worker-{}", std::process::id()),
         n => n.to_string(),
     };
-    let latency = match a.get_str("latency") {
-        "" => None,
-        _ => Some(a.get::<LatencyModel>("latency")?),
-    };
     let cfg = WorkerConfig {
         name: name.clone(),
-        latency,
-        omega: a.get_f64("omega")?,
-        time_scale: a.get_f64("time-scale")?,
-        seed: a.get_u64("seed")?,
+        latency: timing.latency,
+        omega: a.get("omega")?,
+        time_scale: timing.time_scale,
+        seed: a.get("seed")?,
     };
-    let engine = engine_by_name(a.get_str("engine"), a.get_str("artifacts"))?;
+    let engine = engine_opts.build()?;
     let addr = a.get_str("connect");
     let deadline = Instant::now() + Duration::from_secs_f64(a.get_f64("retry")?);
     let mut conn = loop {

@@ -1,19 +1,29 @@
 //! The distributed approximate matmul hook: where the paper's system
-//! meets the training loop. Every call simulates one coded multiplication
-//! round — partition, classify by norm, encode, sample worker arrivals,
-//! decode what beat the deadline, assemble with zeros elsewhere — and
-//! returns the approximation `Ĉ` the optimizer actually consumes.
+//! meets the training loop. Every call runs one coded multiplication
+//! round through the unified client API — partition, classify by norm,
+//! encode, sample worker arrivals, decode what beat the deadline,
+//! assemble with zeros elsewhere — and returns the approximation `Ĉ`
+//! the optimizer actually consumes.
+//!
+//! The round is served by an [`InProcessBackend`] in
+//! [`Compute::Selective`] mode: the decode runs coefficient-only and
+//! then exactly the *recovered* sub-products are computed, so training
+//! never pays for materializing `W_A`/`W_B` or for sub-products the
+//! deadline discarded. Caching is off — the weights matrix changes
+//! every step, so no two requests could share an encoding anyway.
 //!
 //! Operand dimensions rarely divide the block counts, so operands are
 //! zero-padded up to the next multiple (zero rows/columns contribute
 //! nothing to the product) and the result is cropped back.
 
-use crate::coding::{CodeSpec, DecodeState, UnknownSpace};
+use crate::api::{
+    Compute, InProcessBackend, OmegaMode, Request, Session,
+};
+use crate::coding::CodeSpec;
 use crate::latency::LatencyModel;
 use crate::linalg::{matmul, Matrix};
-use crate::partition::{ClassMap, Paradigm, Partitioning};
+use crate::partition::{Paradigm, Partitioning};
 use crate::rng::Pcg64;
-use crate::sim::StragglerSim;
 
 /// How a training-loop matmul is executed.
 #[derive(Clone, Debug)]
@@ -112,40 +122,32 @@ impl DistributedMatmul {
                 (a_pad, b_pad, part)
             }
         };
-        // --- classify, encode, simulate arrivals, decode ------------------
-        let cm = ClassMap::from_matrices(&part, &a_pad, &b_pad, cfg.s_levels);
-        let packets =
-            cfg.spec.generate_packets(&part, &cm, cfg.workers, &mut self.rng);
-        let omega = if cfg.auto_omega {
-            part.num_products() as f64 / cfg.workers as f64
-        } else {
-            1.0
-        };
-        let sim = StragglerSim::new(cfg.workers, cfg.latency.clone(), omega);
-        let arrivals = sim.sample_arrivals(&mut self.rng);
-        let space = UnknownSpace::for_code(&part, cfg.spec.style);
-        let mut st = DecodeState::new(space);
-        for (w, p) in packets.iter().enumerate() {
-            if arrivals[w] <= cfg.t_max {
-                st.add_packet(p, None);
-            }
-        }
-        let mask = st.recovered_mask();
-        // --- assemble recovered sub-products exactly (linearity) ----------
-        let a_blocks = part.split_a(&a_pad);
-        let b_blocks = part.split_b(&b_pad);
-        let recovered: Vec<Option<Matrix>> = (0..part.num_products())
-            .map(|u| {
-                mask[u].then(|| {
-                    let (ai, bi) = part.factors_of(u);
-                    matmul(&a_blocks[ai], &b_blocks[bi])
-                })
+        // --- classify, encode, decode, assemble: one API round ------------
+        let num_products = part.num_products();
+        let mut session = Session::builder()
+            .partitioning(part)
+            .code(cfg.spec.clone())
+            .auto_classes(cfg.s_levels)
+            .workers(cfg.workers)
+            .latency(cfg.latency.clone())
+            .omega(if cfg.auto_omega {
+                OmegaMode::Auto
+            } else {
+                OmegaMode::Fixed(1.0)
             })
-            .collect();
-        self.total_products += part.num_products();
-        self.total_recovered += mask.iter().filter(|&&m| m).count();
-        let c_pad = part.assemble(&recovered);
-        c_pad.block(0, 0, orig_m, orig_n)
+            .deadline(cfg.t_max)
+            .compute(Compute::Selective)
+            .cache_capacity(0)
+            .seed(self.rng.next_u64())
+            .backend(InProcessBackend::serial())
+            .build()
+            .expect("coded-matmul session config is validated by construction");
+        let report = session
+            .run(Request::new(0, a_pad, b_pad))
+            .expect("in-process selective round cannot fail");
+        self.total_products += num_products;
+        self.total_recovered += report.outcome.recovered;
+        report.outcome.c_hat.block(0, 0, orig_m, orig_n)
     }
 }
 

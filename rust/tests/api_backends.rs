@@ -1,0 +1,300 @@
+//! The unified client API's core guarantees, asserted end to end:
+//!
+//! * **backend equivalence** — the same seed and session configuration
+//!   produce a *bit-identical* `Outcome` (recovered set, per-block
+//!   values, loss bits) across `InProcessBackend`, `PooledBackend`,
+//!   and a loopback `ClusterBackend`;
+//! * **anytime progress** — the `Progress` stream is per-arrival,
+//!   monotone in recovered count, non-increasing in loss (r×c), and
+//!   consistent with the final outcome;
+//! * **batched ≡ sequential** — pipelined `submit_batch` + out-of-order
+//!   `wait` reproduces one-at-a-time `run` exactly;
+//! * **selective ≡ honest** — the coefficient-only training fast path
+//!   recovers the same set and assembles the same blocks (to fp
+//!   tolerance) as honest job compute.
+
+use uepmm::api::{
+    Backend, ClusterBackend, Compute, InProcessBackend, PollState, PooledBackend,
+    Request, RunReport, Session, UepmmError,
+};
+use uepmm::cluster::{ClusterConfig, DeadlineMode, WorkerConfig};
+use uepmm::coding::{CodeKind, CodeSpec, WindowPolynomial};
+use uepmm::linalg::Matrix;
+use uepmm::partition::{ClassMap, Partitioning};
+use uepmm::rng::Pcg64;
+
+const WORKERS: usize = 14;
+
+fn part() -> Partitioning {
+    Partitioning::rxc(3, 3, 4, 5, 4)
+}
+
+fn code() -> CodeSpec {
+    CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()))
+}
+
+/// Pinned classes: with auto-classification the class map would depend
+/// on each request's fresh `B`, which would split the cache key across
+/// a repeated-`A` stream and make hit/miss assertions seed-dependent.
+fn pinned_cm() -> ClassMap {
+    let pair = uepmm::partition::default_pair_classes(3);
+    ClassMap::from_levels(&part(), vec![0, 1, 2], vec![0, 1, 2], &pair)
+}
+
+fn session_with(backend: impl Backend + 'static, seed: u64) -> Session {
+    Session::builder()
+        .partitioning(part())
+        .code(code())
+        .classes(pinned_cm())
+        .workers(WORKERS)
+        .latency(uepmm::latency::LatencyModel::exp(1.0))
+        .deadline(1.1)
+        .score(true)
+        .seed(seed)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+/// The repeated-`A` stream every equivalence check runs: two weight
+/// matrices, fresh activations per request, one guaranteed cache hit.
+fn run_stream(mut session: Session) -> Vec<RunReport> {
+    let mut mats = Pcg64::with_stream(99, 0);
+    let a0 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let a1 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let stream = [(0u64, &a0), (0, &a0), (1, &a1), (0, &a0)];
+    let mut reports = Vec::new();
+    for &(a_id, a) in &stream {
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        reports.push(session.run(Request::new(a_id, a.clone(), b)).unwrap());
+    }
+    session.shutdown().unwrap();
+    reports
+}
+
+fn assert_outcomes_bit_identical(x: &RunReport, y: &RunReport, ctx: &str) {
+    assert_eq!(x.outcome.received, y.outcome.received, "{ctx}: received");
+    assert_eq!(x.outcome.recovered, y.outcome.recovered, "{ctx}: recovered");
+    assert_eq!(
+        x.outcome.per_class_recovered, y.outcome.per_class_recovered,
+        "{ctx}: per-class"
+    );
+    assert_eq!(x.outcome.c_hat.data(), y.outcome.c_hat.data(), "{ctx}: c_hat");
+    assert_eq!(
+        x.outcome.loss.to_bits(),
+        y.outcome.loss.to_bits(),
+        "{ctx}: loss bits"
+    );
+    assert_eq!(
+        x.outcome.normalized_loss.to_bits(),
+        y.outcome.normalized_loss.to_bits(),
+        "{ctx}: normalized loss bits"
+    );
+}
+
+#[test]
+fn backends_produce_bit_identical_outcomes() {
+    let seed = 21;
+    let inproc = run_stream(session_with(InProcessBackend::serial(), seed));
+    let pooled = run_stream(session_with(PooledBackend::spawn(2).unwrap(), seed));
+    let cluster = run_stream(session_with(
+        ClusterBackend::loopback(
+            3,
+            ClusterConfig {
+                deadline: DeadlineMode::Virtual,
+                time_scale: 0.0,
+                cache_capacity: 0,
+                ..ClusterConfig::default()
+            },
+            WorkerConfig::default(),
+            std::time::Duration::from_secs(30),
+        )
+        .unwrap(),
+        seed,
+    ));
+    assert_eq!(inproc.len(), 4);
+    for i in 0..inproc.len() {
+        assert_outcomes_bit_identical(&inproc[i], &pooled[i], &format!("req {i} pooled"));
+        assert_outcomes_bit_identical(
+            &inproc[i],
+            &cluster[i],
+            &format!("req {i} cluster"),
+        );
+        // the repeated-A stream must hit the session cache identically
+        let want_hit = i != 0 && i != 2;
+        for r in [&inproc[i], &pooled[i], &cluster[i]] {
+            assert_eq!(r.cache_hit, Some(want_hit), "req {i} cache on {}", r.backend);
+        }
+    }
+    // sanity: a partial deadline actually cut something off somewhere,
+    // otherwise the equivalence above is vacuous
+    assert!(
+        inproc.iter().any(|r| r.outcome.received < WORKERS),
+        "deadline never binding: raise workers or lower t_max"
+    );
+    assert!(inproc.iter().any(|r| r.outcome.recovered > 0));
+}
+
+#[test]
+fn progress_stream_is_monotone_and_matches_the_outcome() {
+    for seed in 1..=8u64 {
+        let mut session = session_with(InProcessBackend::serial(), seed);
+        let mut mats = Pcg64::with_stream(7 + seed, 0);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        let report = session.run(Request::new(0, a, b)).unwrap();
+        let p = &report.progress;
+        assert_eq!(p.len(), report.outcome.received, "seed {seed}: one event per arrival");
+        assert!(p.loss_non_increasing(), "seed {seed}");
+        let mut prev_recovered = 0;
+        let mut prev_t = 0.0;
+        for (i, e) in p.events().iter().enumerate() {
+            assert_eq!(e.received, i + 1, "seed {seed}");
+            assert!(e.recovered >= prev_recovered, "seed {seed}");
+            assert!(e.elapsed >= prev_t, "seed {seed}: absorb order is by arrival");
+            assert!(e.elapsed <= 1.1 + 1e-12, "seed {seed}: event past deadline");
+            assert!(
+                e.normalized_loss <= 1.0 + 1e-9,
+                "seed {seed}: running loss above energy"
+            );
+            prev_recovered = e.recovered;
+            prev_t = e.elapsed;
+        }
+        if let Some(last) = p.last() {
+            assert_eq!(last.recovered, report.outcome.recovered, "seed {seed}");
+            // Gram-based running loss vs honest ‖C − Ĉ‖²: same quantity,
+            // different accumulation — equal to fp tolerance
+            assert!(
+                (last.loss - report.outcome.loss).abs()
+                    <= 1e-6 * (1.0 + report.outcome.loss),
+                "seed {seed}: progress loss {} vs outcome loss {}",
+                last.loss,
+                report.outcome.loss
+            );
+        }
+    }
+}
+
+#[test]
+fn in_process_polling_streams_one_arrival_at_a_time_and_cancel_is_anytime() {
+    let mut session = session_with(InProcessBackend::serial(), 5);
+    let mut mats = Pcg64::with_stream(55, 0);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+
+    // a generous per-request deadline guarantees every arrival is
+    // in-deadline, so two polls absorb exactly two arrivals
+    let h = session.submit(Request::new(0, a, b).deadline(50.0)).unwrap();
+    let mut events = 0;
+    for _ in 0..2 {
+        match session.poll(h).unwrap() {
+            PollState::Pending(new) => events += new.len(),
+            PollState::Ready(_) => panic!("finished after two polls?"),
+        }
+    }
+    assert_eq!(events, 2, "one event per poll step");
+    let partial = session.cancel(h).unwrap().expect("work had started");
+    assert_eq!(partial.outcome.received, 2);
+    assert_eq!(partial.progress.len(), 2);
+    assert!(partial.outcome.recovered <= 2, "two equations determine at most two");
+    assert_eq!(
+        partial.outcome.per_class_recovered.iter().sum::<usize>(),
+        partial.outcome.recovered
+    );
+    // the canceled handle is consumed
+    assert!(matches!(session.poll(h), Err(UepmmError::Config(_))));
+}
+
+#[test]
+fn batched_submission_is_equivalent_to_sequential_runs() {
+    let sequential = run_stream(session_with(PooledBackend::spawn(2).unwrap(), 31));
+
+    let mut session = session_with(PooledBackend::spawn(2).unwrap(), 31);
+    let mut mats = Pcg64::with_stream(99, 0);
+    let a0 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let a1 = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let stream = [(0u64, &a0), (0, &a0), (1, &a1), (0, &a0)];
+    let reqs: Vec<Request> = stream
+        .iter()
+        .map(|&(a_id, a)| {
+            let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+            Request::new(a_id, a.clone(), b)
+        })
+        .collect();
+    let handles = session.submit_batch(reqs).unwrap();
+    // wait out of order: the FIFO pipeline must still serve in
+    // submission order, keeping the RNG-replay deterministic
+    let mut batched: Vec<Option<RunReport>> = (0..handles.len()).map(|_| None).collect();
+    for &i in &[2usize, 0, 3, 1] {
+        batched[i] = Some(session.wait(handles[i]).unwrap());
+    }
+    session.shutdown().unwrap();
+    for (i, (seq, bat)) in sequential.iter().zip(batched.iter()).enumerate() {
+        assert_outcomes_bit_identical(
+            seq,
+            bat.as_ref().unwrap(),
+            &format!("batched req {i}"),
+        );
+    }
+}
+
+#[test]
+fn selective_compute_matches_honest_jobs() {
+    let build = |compute| {
+        Session::builder()
+            .partitioning(part())
+            .code(code())
+            .auto_classes(3)
+            .workers(WORKERS)
+            .latency(uepmm::latency::LatencyModel::exp(1.0))
+            .deadline(0.9)
+            .score(true)
+            .compute(compute)
+            .cache_capacity(0)
+            .seed(13)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap()
+    };
+    let mut mats = Pcg64::with_stream(42, 0);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+    // same seed ⇒ same packet draw and same delays in both modes (the
+    // encode path consumes no extra RNG beyond the packet draw)
+    let honest = build(Compute::Honest)
+        .run(Request::new(0, a.clone(), b.clone()))
+        .unwrap();
+    let selective = build(Compute::Selective).run(Request::new(0, a, b)).unwrap();
+    assert_eq!(honest.outcome.received, selective.outcome.received);
+    assert_eq!(honest.outcome.recovered, selective.outcome.recovered);
+    assert_eq!(
+        honest.outcome.per_class_recovered,
+        selective.outcome.per_class_recovered
+    );
+    // honest values go through the decoder's elimination; selective ones
+    // are computed directly — identical up to fp tolerance
+    assert!(
+        honest.outcome.c_hat.allclose(&selective.outcome.c_hat, 1e-9),
+        "selective assembly diverged from honest decode"
+    );
+    assert!((honest.outcome.loss - selective.outcome.loss).abs() <= 1e-6 * (1.0 + honest.outcome.loss));
+    assert_eq!(selective.cache_hit, None, "selective mode bypasses the cache");
+}
+
+#[test]
+fn unscored_requests_have_nan_loss_but_full_progress_counts() {
+    let mut session = session_with(PooledBackend::spawn(2).unwrap(), 77);
+    let mut mats = Pcg64::with_stream(11, 0);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+    let report = session
+        .run(Request::new(0, a, b).scored(false).deadline(50.0))
+        .unwrap();
+    session.shutdown().unwrap();
+    assert!(report.outcome.loss.is_nan());
+    assert!(report.outcome.normalized_loss.is_nan());
+    assert_eq!(report.progress.len(), report.outcome.received);
+    assert!(report.progress.loss_non_increasing(), "vacuous on NaN losses");
+    assert!(report.progress.refinements() > 0);
+    assert!(report.outcome.recovered > 0);
+}

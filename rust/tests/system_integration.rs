@@ -1,5 +1,9 @@
 //! System-level integration: full multi-module flows exercised together
 //! (no PJRT required — see pjrt_integration.rs for the artifact path).
+//! The deprecated `run_service` shim is exercised on purpose: its
+//! contract (bit-compatibility with the virtual-time path) must hold
+//! until the shim is removed. New-API flows live in api_backends.rs.
+#![allow(deprecated)]
 
 use uepmm::analysis::{now_decode_prob, TheoremLoss, UepStrategy};
 use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle};
