@@ -321,11 +321,12 @@ fn main() {
         let msg = Msg::Result(ResultMsg {
             request_id: 1,
             slot: 0,
+            attempt: 0,
             delay: 0.5,
             payload,
         });
         h.bench("cluster/wire: encode+decode 50x50 result frame", || {
-            let bytes = wire::encode(&msg);
+            let bytes = wire::encode(&msg).unwrap();
             std::hint::black_box(wire::decode_frame(&bytes).unwrap());
         });
 

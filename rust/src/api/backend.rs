@@ -74,6 +74,15 @@ pub struct Maintenance {
     pub evicted: Vec<u64>,
     /// Live workers after upkeep, where the notion applies.
     pub live_workers: Option<usize>,
+    /// In-flight result frames the heartbeat read while waiting for
+    /// acks and routed into worker inboxes instead of being dropped.
+    /// The next served request drains them through the normal result
+    /// classifier (current-request frames absorb with full accounting;
+    /// completed-request frames are discarded only once provably
+    /// stale), and the frames credit liveness so a backlogged straggler
+    /// is not mis-evicted — a stream interleaved with `maintain()`
+    /// calls reports bit-identically to one without.
+    pub buffered_results: usize,
 }
 
 /// One execution path behind the unified client API.
@@ -209,6 +218,9 @@ impl<E: ExecEngine> InProcessBackend<E> {
             outcome,
             late,
             dispatched: jobs,
+            // in-process execution has no workers to lose or go rogue
+            retries: 0,
+            corrupt: 0,
             wall: fl.start.elapsed(),
             cache_hit: prep.cache_hit,
             backend: "in-process",
@@ -297,7 +309,7 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
             PreparedWork::Blocks { packets, .. } => fl.st.add_packet(&packets[w], None),
         };
         fl.received += 1;
-        fl.tracker.record(delay, fl.received, fl.st.num_recovered(), &newly);
+        fl.tracker.record(delay, fl.received, fl.st.num_recovered(), &newly, 0);
         Ok(PollState::Pending(fl.tracker.take_new()))
     }
 
@@ -436,12 +448,18 @@ impl ClusterCore {
             }
         }
         // cache hits hand out Arc handles: no W_A deep copy per request
-        let jobs: Vec<(Arc<Matrix>, Matrix)> =
-            enc.wa.iter().cloned().zip(wb.into_iter()).collect();
+        let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> =
+            enc.wa.iter().cloned().zip(wb.into_iter().map(Arc::new)).collect();
         let mut tracker = ProgressTracker::new(&part, score.as_ref());
         let served = {
             let mut obs = |step: DecodeStep| {
-                tracker.record(step.delay, step.received, step.recovered, &step.newly)
+                tracker.record(
+                    step.delay,
+                    step.received,
+                    step.recovered,
+                    &step.newly,
+                    step.attempt,
+                )
             };
             self.server
                 .serve_jobs(
@@ -462,6 +480,8 @@ impl ClusterCore {
             outcome,
             late: served.late,
             dispatched: served.dispatched,
+            retries: served.retries,
+            corrupt: served.corrupt,
             wall: served.wall,
             cache_hit,
             backend: self.name,
@@ -470,10 +490,11 @@ impl ClusterCore {
     }
 
     fn maintain(&mut self) -> ApiResult<Maintenance> {
-        let evicted = self.server.heartbeat();
+        let hb = self.server.heartbeat();
         Ok(Maintenance {
-            evicted,
+            evicted: hb.evicted,
             live_workers: Some(self.server.live_workers()),
+            buffered_results: hb.buffered_results,
         })
     }
 

@@ -24,6 +24,10 @@ pub struct ProgressEvent {
     /// Sub-products newly determined by this arrival (0 for a
     /// rank-redundant packet).
     pub newly: usize,
+    /// Dispatch attempt that produced this arrival: 0 for a first send,
+    /// `n` for the `n`-th re-dispatch after a worker death (always 0 on
+    /// in-process backends, which have no workers to lose).
+    pub attempt: u32,
     /// Running residual loss `‖C − Ĉ‖²_F` (NaN for unscored requests).
     pub loss: f64,
     /// Running loss normalized by `‖C‖²_F` (NaN for unscored requests).
@@ -121,6 +125,7 @@ impl ProgressTracker {
         received: usize,
         recovered: usize,
         newly: &[usize],
+        attempt: u32,
     ) {
         if let Some(gram) = &self.gram {
             for &u in newly {
@@ -138,6 +143,7 @@ impl ProgressTracker {
             received,
             recovered,
             newly: newly.len(),
+            attempt,
             loss: self.loss,
             normalized_loss: normalized,
             elapsed,
@@ -166,6 +172,7 @@ mod tests {
             received,
             recovered,
             newly,
+            attempt: 0,
             loss,
             normalized_loss: loss,
             elapsed: received as f64,

@@ -79,6 +79,13 @@ pub struct RunReport {
     pub late: usize,
     /// Jobs handed to the execution path.
     pub dispatched: usize,
+    /// Re-dispatches of jobs stranded on workers that died mid-request
+    /// (cluster-backed paths; always 0 in-process). A failure costs
+    /// latency, not work: retried slots still land as `received`.
+    pub retries: usize,
+    /// Result frames naming a slot outside the request's job set (a
+    /// broken worker; the sender is evicted and its work re-dispatched).
+    pub corrupt: usize,
     /// Wall time the request took end to end.
     pub wall: Duration,
     /// `Some(hit)` when served through the session's encoded-block
@@ -92,8 +99,9 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Dispatched jobs whose results were never seen (dead workers,
-    /// lost connections, post-grace stragglers).
+    /// Dispatched jobs whose results were never seen: slots written off
+    /// after exhausting their re-dispatch budget (every holder died),
+    /// and post-grace stragglers in wall-deadline mode.
     pub fn missing(&self) -> usize {
         self.dispatched - self.outcome.received - self.late
     }

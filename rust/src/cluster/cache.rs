@@ -11,7 +11,7 @@
 //! counters are surfaced through [`CacheStats`] in the server's
 //! per-request stats.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::coding::CodeSpec;
@@ -84,10 +84,17 @@ pub struct CacheStats {
 
 /// An LRU cache of encoded `A`-sides. Capacity 0 disables caching (every
 /// lookup is a miss and nothing is stored).
+///
+/// Recency is a monotone tick stamped on every access, so the hot path
+/// (a hit on a repeated-`A` stream) is one hash lookup plus a counter
+/// store — the earlier `VecDeque` re-ordering made every hit an O(n)
+/// scan. Eviction scans for the minimum tick, which is O(n) only on the
+/// rare capacity overflow.
 pub struct EncodedBlockCache {
-    map: HashMap<CacheKey, Arc<EncodedA>>,
-    /// Keys from least- to most-recently used.
-    order: VecDeque<CacheKey>,
+    /// Entry plus the tick of its most recent use.
+    map: HashMap<CacheKey, (Arc<EncodedA>, u64)>,
+    /// Monotone access counter (the recency clock).
+    tick: u64,
     capacity: usize,
     stats: CacheStats,
 }
@@ -96,7 +103,7 @@ impl EncodedBlockCache {
     pub fn new(capacity: usize) -> Self {
         EncodedBlockCache {
             map: HashMap::new(),
-            order: VecDeque::new(),
+            tick: 0,
             capacity,
             stats: CacheStats::default(),
         }
@@ -116,7 +123,6 @@ impl EncodedBlockCache {
 
     pub fn clear(&mut self) {
         self.map.clear();
-        self.order.clear();
     }
 
     /// Fetch the encoding for `key`, building (and storing) it on a
@@ -126,11 +132,11 @@ impl EncodedBlockCache {
         key: CacheKey,
         build: impl FnOnce() -> anyhow::Result<EncodedA>,
     ) -> anyhow::Result<(Arc<EncodedA>, bool)> {
-        if let Some(entry) = self.map.get(&key) {
+        self.tick += 1;
+        if let Some((entry, used)) = self.map.get_mut(&key) {
             self.stats.hits += 1;
-            let entry = Arc::clone(entry);
-            self.touch(&key);
-            return Ok((entry, true));
+            *used = self.tick;
+            return Ok((Arc::clone(entry), true));
         }
         self.stats.misses += 1;
         let entry = Arc::new(build()?);
@@ -138,25 +144,22 @@ impl EncodedBlockCache {
             return Ok((entry, false));
         }
         while self.map.len() >= self.capacity {
-            match self.order.pop_front() {
-                Some(oldest) => {
-                    self.map.remove(&oldest);
+            // evict the least recently used entry (minimum tick)
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
                     self.stats.evictions += 1;
                 }
                 None => break,
             }
         }
-        self.map.insert(key.clone(), Arc::clone(&entry));
-        self.order.push_back(key);
+        self.map.insert(key, (Arc::clone(&entry), self.tick));
         Ok((entry, false))
-    }
-
-    /// Move `key` to the most-recently-used end.
-    fn touch(&mut self, key: &CacheKey) {
-        if let Some(pos) = self.order.iter().position(|k| k == key) {
-            let k = self.order.remove(pos).unwrap();
-            self.order.push_back(k);
-        }
     }
 }
 

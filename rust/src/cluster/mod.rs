@@ -16,11 +16,44 @@
 //! * [`worker`] — the worker agent loop computing coded sub-products
 //!   through any [`crate::runtime::ExecEngine`];
 //! * [`server`] — the coordinator: worker registry with
-//!   heartbeat/eviction, round-robin dispatch with failover, per-request
-//!   deadlines, progressive decode, scoring;
+//!   heartbeat/eviction and rejoin, least-outstanding dispatch with
+//!   failover and bounded re-dispatch, per-request deadlines,
+//!   progressive decode, scoring;
 //! * [`cache`] — the encoded-block cache reusing the `B`-independent
 //!   half of plan preparation across a request stream (the DNN-training
 //!   shape: same weights `A`, fresh activations `B`).
+//!
+//! # Recovery semantics
+//!
+//! The paper treats stragglers as erasures to be coded around, never as
+//! work to be thrown away. The runtime honors that end to end:
+//!
+//! * **No dropped results.** A [`Msg::Result`] frame read out of turn —
+//!   by [`ClusterServer::heartbeat`] while it waits for acks, or by a
+//!   poll that outlived its request — is buffered in the owning
+//!   worker's inbox (current request) or dropped only once it is
+//!   provably stale (earlier request id). A run with interleaved
+//!   [`ClusterServer::heartbeat`] calls therefore decodes
+//!   bit-identically to one without.
+//! * **Bounded re-dispatch.** Every dispatched payload stays in the
+//!   request's job table until its result lands. When a worker dies —
+//!   send failure, receive failure, protocol violation, or a corrupt
+//!   result slot — its unresolved jobs requeue onto surviving workers,
+//!   at most [`ClusterConfig::max_job_retries`] re-sends per slot
+//!   (then the slot is written off and surfaces as `missing`). In
+//!   `Wall` mode nothing is re-sent after the deadline: a re-dispatch
+//!   could not land in time.
+//! * **Idempotent results.** A slot settles on its first accepted
+//!   result; duplicates (a re-dispatched job whose original holder
+//!   delivered after all) are absorbed exactly once.
+//! * **Rejoin.** A previously evicted agent that re-`Hello`s under its
+//!   name revives its registry slot in place — same worker id,
+//!   cumulative `jobs_done` — and is immediately eligible for new and
+//!   requeued work.
+//! * **Informed dispatch.** Jobs go to the live worker with the fewest
+//!   in-flight jobs, ties broken by the lowest EWMA straggle score
+//!   (then registry order, keeping selection deterministic), so slow
+//!   workers shed load instead of accumulating it.
 //!
 //! Entry points: `uepmm serve` / `uepmm worker` (see `main.rs`) for the
 //! TCP deployment, [`ClusterServer`] + [`spawn_loopback_workers`] for
@@ -38,7 +71,7 @@ pub mod worker;
 pub use cache::{CacheKey, CacheStats, EncodedBlockCache};
 pub use server::{
     ClusterConfig, ClusterOutcome, ClusterServer, CodingConfig, DeadlineMode,
-    DecodeStep, MatmulRequest, ServedDecode, WorkerInfo,
+    DecodeStep, HeartbeatReport, MatmulRequest, ServedDecode, WorkerInfo,
 };
 pub use transport::{
     loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,

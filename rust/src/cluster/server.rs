@@ -4,13 +4,22 @@
 //! Responsibilities:
 //! * **registry** — accept worker connections (any [`Transport`]),
 //!   handshake, track liveness, evict workers that stop answering
-//!   heartbeats or whose connections fail;
+//!   heartbeats or whose connections fail, and let a previously evicted
+//!   agent **rejoin** by re-registering under its name;
 //! * **request pipeline** — serve a stream of multiplication requests,
-//!   each with its own deadline: dispatch coded jobs round-robin across
-//!   live workers (failing over when a send hits a dead connection),
-//!   feed arriving results into the incremental
+//!   each with its own deadline: dispatch coded jobs to the live worker
+//!   with the fewest outstanding jobs (ties broken by the lowest EWMA
+//!   straggle score), feed arriving results into the incremental
 //!   [`DecodeState`], stop at the deadline, and score the decoded
 //!   approximation;
+//! * **resilient job lifecycle** — every dispatched payload is retained
+//!   in a per-request job table until its result lands, so jobs
+//!   stranded on a worker that dies mid-request are **re-dispatched**
+//!   onto survivors (bounded by [`ClusterConfig::max_job_retries`]);
+//!   result frames read out of turn (by [`ClusterServer::heartbeat`] or
+//!   a stale poll) are buffered in a per-worker **inbox** instead of
+//!   being dropped, and duplicate results for a slot are absorbed
+//!   exactly once — a failure costs latency, never accepted work;
 //! * **encoded-block cache** — reuse the `B`-independent half of plan
 //!   preparation across requests that multiply the same `A`
 //!   (see [`super::cache`]).
@@ -41,9 +50,11 @@ use crate::linalg::{matmul, Matrix};
 use crate::partition::{ClassMap, Partitioning};
 use crate::rng::Pcg64;
 
+use std::collections::VecDeque;
+
 use super::cache::{CacheKey, CacheStats, EncodedBlockCache};
 use super::transport::{Connection, Transport};
-use super::wire::{JobMsg, Msg, ResultMsg};
+use super::wire::{JobMsg, Msg, ResultMsg, WireError};
 
 /// Per-connection poll slice while multiplexing receives.
 const POLL_SLICE: Duration = Duration::from_millis(1);
@@ -51,6 +62,9 @@ const POLL_SLICE: Duration = Duration::from_millis(1);
 /// the request deadline — sleeping much past the deadline only wastes
 /// wall time on results that will be counted late anyway.
 const SLEEP_CAP_FACTOR: f64 = 1.05;
+/// Smoothing factor of the per-worker EWMA straggle score: each
+/// accepted result's reported delay moves the score by this fraction.
+const STRAGGLE_EWMA_ALPHA: f64 = 0.2;
 
 /// How request deadlines are enforced (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -77,6 +91,10 @@ pub struct ClusterConfig {
     pub late_drain: Duration,
     /// Encoded-block cache capacity in entries (0 disables caching).
     pub cache_capacity: usize,
+    /// How many times a job slot stranded on a dead worker may be
+    /// re-dispatched onto a survivor before it is written off (0
+    /// disables re-dispatch entirely: the pre-resilience behavior).
+    pub max_job_retries: usize,
 }
 
 impl Default for ClusterConfig {
@@ -88,6 +106,7 @@ impl Default for ClusterConfig {
             collect_timeout: Duration::from_secs(60),
             late_drain: Duration::from_millis(50),
             cache_capacity: 16,
+            max_job_retries: 2,
         }
     }
 }
@@ -141,6 +160,11 @@ pub struct ClusterOutcome {
     pub late: usize,
     /// Jobs successfully handed to a worker connection.
     pub dispatched: usize,
+    /// Re-dispatches of jobs stranded on workers that died mid-request.
+    pub retries: usize,
+    /// Result frames naming a slot outside the request's packet set
+    /// (a broken worker; see [`ServedDecode::corrupt`]).
+    pub corrupt: usize,
     /// Wall time the request took end to end.
     pub wall: Duration,
     /// `Some(hit)` when served through the encoded-block cache.
@@ -149,10 +173,13 @@ pub struct ClusterOutcome {
 
 impl ClusterOutcome {
     /// Dispatched jobs whose results were never seen for this request:
-    /// dead workers and lost connections, but in `Wall` mode also any
-    /// straggler result arriving after the post-deadline grace window
-    /// (the worker may be perfectly healthy — its result is simply
-    /// counted against the request it missed).
+    /// jobs written off after exhausting their re-dispatch budget (every
+    /// holder died), but in `Wall` mode also any straggler result
+    /// arriving after the post-deadline grace window (the worker may be
+    /// perfectly healthy — its result is simply counted against the
+    /// request it missed). Always `dispatched − received − late`;
+    /// `corrupt` counts garbage *frames*, not slots, and sits outside
+    /// this balance.
     pub fn missing(&self) -> usize {
         self.dispatched - self.outcome.received - self.late
     }
@@ -165,6 +192,21 @@ pub struct WorkerInfo {
     pub name: String,
     pub alive: bool,
     pub jobs_done: u64,
+    /// EWMA of the worker's reported result delays (virtual time units);
+    /// `None` until its first accepted result. Low = fast, high =
+    /// straggler — the dispatch tie-breaker.
+    pub straggle: Option<f64>,
+}
+
+/// What a [`ClusterServer::heartbeat`] round did.
+#[derive(Clone, Debug, Default)]
+pub struct HeartbeatReport {
+    /// Workers evicted this round (send failure or missed ack).
+    pub evicted: Vec<u64>,
+    /// In-flight [`Msg::Result`] frames read while waiting for acks and
+    /// routed into the owning worker's inbox — never dropped; the next
+    /// serve poll drains them with full accounting.
+    pub buffered_results: usize,
 }
 
 struct WorkerSlot {
@@ -175,14 +217,66 @@ struct WorkerSlot {
     /// heartbeat acks flip this; there is no passive staleness timer.
     alive: bool,
     jobs_done: u64,
-    /// In-flight jobs of the *current* request.
-    pending: usize,
+    /// Job slots of the *current* request dispatched to this worker and
+    /// not yet resolved — the requeue set if the worker dies.
+    in_flight: Vec<u32>,
+    /// Result frames read out of turn (by [`ClusterServer::heartbeat`]
+    /// while waiting for acks): buffered here and drained by the next
+    /// serve poll instead of being dropped.
+    inbox: VecDeque<ResultMsg>,
+    /// EWMA straggle score over reported result delays (see
+    /// [`WorkerInfo::straggle`]).
+    straggle: Option<f64>,
 }
 
-enum Poll {
-    Result(ResultMsg),
-    Idle,
-    Dead,
+impl WorkerSlot {
+    fn note_result_delay(&mut self, delay: f64) {
+        self.straggle = Some(match self.straggle {
+            None => delay,
+            Some(e) => STRAGGLE_EWMA_ALPHA * delay + (1.0 - STRAGGLE_EWMA_ALPHA) * e,
+        });
+    }
+}
+
+/// Per-request collection state shared by dispatch, polling, and the
+/// requeue path: which slots have settled (result accepted, counted
+/// late, or written off), which await re-dispatch, and how many are
+/// still outstanding on live workers.
+struct Collect {
+    request_id: u64,
+    n_slots: usize,
+    /// A settled slot will neither be re-dispatched nor decrement
+    /// `outstanding` again — the duplicate-result guard.
+    settled: Vec<bool>,
+    /// Slots stranded on dead workers, awaiting re-dispatch.
+    requeue: Vec<u32>,
+    outstanding: usize,
+    corrupt: usize,
+}
+
+impl Collect {
+    fn new(request_id: u64, n_slots: usize) -> Collect {
+        Collect {
+            request_id,
+            n_slots,
+            settled: vec![false; n_slots],
+            requeue: Vec::new(),
+            outstanding: 0,
+            corrupt: 0,
+        }
+    }
+
+    /// Write off every queued slot (no re-dispatch): used when nothing
+    /// requeued could make its deadline anyway.
+    fn write_off_queued(&mut self) {
+        while let Some(slot) = self.requeue.pop() {
+            let s = slot as usize;
+            if !self.settled[s] {
+                self.settled[s] = true;
+                self.outstanding -= 1;
+            }
+        }
+    }
 }
 
 /// One accepted decode absorption inside a served request, reported to
@@ -192,6 +286,9 @@ enum Poll {
 pub struct DecodeStep {
     /// Virtual completion time of the absorbed result.
     pub delay: f64,
+    /// Dispatch attempt that produced the result (0 = first send, `n` =
+    /// the `n`-th re-dispatch after a worker death).
+    pub attempt: u32,
     /// Results absorbed so far (this one included).
     pub received: usize,
     /// Real sub-products determined so far.
@@ -201,12 +298,26 @@ pub struct DecodeStep {
 }
 
 /// Raw dispatch/collect/decode result of one served job set, before
-/// assembly and scoring.
+/// assembly and scoring. The accounting invariant is
+/// `received + late + written-off == dispatched` (written-off being the
+/// caller's `missing`); `retries`, `corrupt`, and `attempts` are
+/// diagnostics on top of that balance.
 pub struct ServedDecode {
     pub st: DecodeState,
     pub received: usize,
     pub late: usize,
+    /// Distinct job slots successfully handed to a worker at least once.
     pub dispatched: usize,
+    /// Re-dispatch sends beyond each slot's first (bounded by
+    /// [`ClusterConfig::max_job_retries`] per slot).
+    pub retries: usize,
+    /// Result frames naming a slot outside the request's packet set.
+    /// Such a frame identifies no real slot, so the sender is evicted
+    /// as broken and its in-flight jobs are re-dispatched.
+    pub corrupt: usize,
+    /// Per-slot send counts: `attempts[s]` is how many times slot `s`
+    /// went out (1 = first dispatch only, 0 = never sent).
+    pub attempts: Vec<u32>,
     pub wall: Duration,
 }
 
@@ -250,6 +361,7 @@ impl ClusterServer {
                 name: w.name.clone(),
                 alive: w.alive,
                 jobs_done: w.jobs_done,
+                straggle: w.straggle,
             })
             .collect()
     }
@@ -259,6 +371,18 @@ impl ClusterServer {
     }
 
     /// Handshake one incoming connection into the registry.
+    ///
+    /// A `Hello` whose agent name matches a previously evicted worker is
+    /// a **rejoin**: the dead slot is revived in place (same worker id,
+    /// cumulative `jobs_done`, fresh connection and straggle score) and
+    /// the agent is immediately eligible for dispatch — including work
+    /// requeued from other failures.
+    ///
+    /// Only slots already *observed* dead are matched: an agent that
+    /// crashes and reconnects before the coordinator has touched its old
+    /// connection registers as a new slot (names are not required to be
+    /// unique, so a live slot is never displaced). The stale slot is
+    /// evicted on its next contact and revived by a later rejoin.
     pub fn register(
         &mut self,
         mut conn: Box<dyn Connection>,
@@ -266,6 +390,25 @@ impl ClusterServer {
     ) -> Result<u64> {
         match conn.recv_timeout(Some(timeout)) {
             Ok(Some(Msg::Hello { agent })) => {
+                if let Some(wi) = self
+                    .workers
+                    .iter()
+                    .position(|w| !w.alive && w.name == agent)
+                {
+                    let id = self.workers[wi].id;
+                    conn.send(&Msg::Welcome { worker_id: id }).map_err(|e| {
+                        anyhow::anyhow!("welcome to rejoining {agent} failed: {e}")
+                    })?;
+                    let w = &mut self.workers[wi];
+                    w.conn = conn;
+                    w.alive = true;
+                    // anything in flight or buffered belongs to the old
+                    // incarnation's requests and can only be stale now
+                    w.in_flight.clear();
+                    w.inbox.clear();
+                    w.straggle = None;
+                    return Ok(id);
+                }
                 let id = self.next_worker_id;
                 self.next_worker_id += 1;
                 conn.send(&Msg::Welcome { worker_id: id })
@@ -276,7 +419,9 @@ impl ClusterServer {
                     conn,
                     alive: true,
                     jobs_done: 0,
-                    pending: 0,
+                    in_flight: Vec::new(),
+                    inbox: VecDeque::new(),
+                    straggle: None,
                 });
                 Ok(id)
             }
@@ -327,14 +472,25 @@ impl ClusterServer {
     }
 
     /// Ping every live worker and evict the ones that do not ack within
-    /// the heartbeat timeout (or whose connection fails). Returns the
-    /// evicted worker ids.
-    pub fn heartbeat(&mut self) -> Vec<u64> {
+    /// the heartbeat timeout (or whose connection fails).
+    ///
+    /// Any in-flight [`Msg::Result`] frame read while waiting for acks
+    /// is routed into the owning worker's inbox — never consumed and
+    /// dropped. The next serve poll drains the inbox through the same
+    /// classifier as a fresh receive: a frame for the request then being
+    /// served absorbs with full `received`/`jobs_done` accounting, while
+    /// one from an already-completed request is dropped only once it is
+    /// provably stale. Either way the frame also credits liveness here,
+    /// so a healthy backlogged straggler is not mis-evicted — and a run
+    /// interleaved with heartbeats decodes bit-identically to one
+    /// without.
+    pub fn heartbeat(&mut self) -> HeartbeatReport {
         let alive_at_entry: Vec<usize> = (0..self.workers.len())
             .filter(|&wi| self.workers[wi].alive)
             .collect();
         let nonce = self.next_nonce;
         self.next_nonce += 1;
+        let mut buffered = 0usize;
         let mut waiting = Vec::new();
         for &wi in &alive_at_entry {
             match self.workers[wi].conn.send(&Msg::Heartbeat { nonce }) {
@@ -356,14 +512,19 @@ impl ClusterServer {
                     continue;
                 }
                 match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
-                    Ok(Some(Msg::HeartbeatAck { nonce: n })) if n == nonce => {
+                    Ok(Some(Msg::HeartbeatAck { .. })) => {
+                        // any ack (even a stale nonce) proves liveness
                         acked[wi] = true;
                     }
-                    // any frame from the worker proves it is alive and
-                    // making progress — a paced straggler's ack can sit
-                    // behind its whole job backlog, and evicting it for
-                    // that would throw away healthy capacity
-                    Ok(Some(Msg::Result(_))) | Ok(Some(Msg::HeartbeatAck { .. })) => {
+                    // a result frame equally proves the worker is alive
+                    // and making progress — a paced straggler's ack can
+                    // sit behind its whole job backlog, and evicting it
+                    // for that would throw away healthy capacity. The
+                    // payload is buffered, not discarded: it is accepted
+                    // work the serve path still has to account for.
+                    Ok(Some(Msg::Result(r))) => {
+                        self.workers[wi].inbox.push_back(r);
+                        buffered += 1;
                         acked[wi] = true;
                     }
                     Ok(Some(_)) => self.workers[wi].alive = false,
@@ -381,7 +542,7 @@ impl ClusterServer {
                 evicted.push(self.workers[wi].id);
             }
         }
-        evicted
+        HeartbeatReport { evicted, buffered_results: buffered }
     }
 
     /// Send every worker a shutdown (best effort, including evicted
@@ -433,7 +594,7 @@ impl ClusterServer {
         t_max: f64,
         delays: Option<&[f64]>,
     ) -> Result<ClusterOutcome> {
-        let jobs: Vec<(Arc<Matrix>, Matrix)> = plan
+        let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> = plan
             .packets
             .iter()
             .map(|p| {
@@ -443,7 +604,7 @@ impl ClusterServer {
                     &plan.b_blocks,
                     &p.recipe,
                 );
-                (Arc::new(wa), wb)
+                (Arc::new(wa), Arc::new(wb))
             })
             .collect();
         let core =
@@ -454,6 +615,8 @@ impl ClusterServer {
             outcome,
             late: core.late,
             dispatched: core.dispatched,
+            retries: core.retries,
+            corrupt: core.corrupt,
             wall: core.wall,
             cache_hit: None,
         })
@@ -491,8 +654,8 @@ impl ClusterServer {
         });
         let b_blocks = coding.part.split_b(&req.b);
         // cache hits hand out Arc handles: no W_A deep copy per request
-        let jobs: Vec<(Arc<Matrix>, Matrix)> = (0..enc.workers())
-            .map(|w| (Arc::clone(&enc.wa[w]), enc.job_b(&b_blocks, w)))
+        let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> = (0..enc.workers())
+            .map(|w| (Arc::clone(&enc.wa[w]), Arc::new(enc.job_b(&b_blocks, w))))
             .collect();
         let core = self.serve_jobs(
             &enc.space,
@@ -512,6 +675,8 @@ impl ClusterServer {
             outcome,
             late: core.late,
             dispatched: core.dispatched,
+            retries: core.retries,
+            corrupt: core.corrupt,
             wall: core.wall,
             cache_hit: Some(hit),
         })
@@ -523,11 +688,17 @@ impl ClusterServer {
     /// shares. `observe` is called once per absorbed in-deadline result
     /// in absorption order, which is what feeds the anytime progress
     /// stream.
+    ///
+    /// The job table (`jobs` plus per-slot attempt counters) retains
+    /// every dispatched payload until its result lands: a worker death
+    /// requeues its unresolved slots onto survivors (bounded by
+    /// [`ClusterConfig::max_job_retries`]), so a failure costs latency
+    /// instead of losing the work.
     pub fn serve_jobs(
         &mut self,
         space: &UnknownSpace,
         packets: &[Packet],
-        jobs: Vec<(Arc<Matrix>, Matrix)>,
+        jobs: Vec<(Arc<Matrix>, Arc<Matrix>)>,
         delays: Option<&[f64]>,
         t_max: f64,
         mut observe: Option<&mut dyn FnMut(DecodeStep)>,
@@ -550,46 +721,24 @@ impl ClusterServer {
         self.next_request_id += 1;
         // in-flight tracking is per request
         for w in &mut self.workers {
-            w.pending = 0;
+            w.in_flight.clear();
         }
         let start = Instant::now();
-
-        // ---- dispatch round-robin with failover --------------------------
         let pace = self.cfg.time_scale;
+        let n = jobs.len();
+        let mut ctx = Collect::new(request_id, n);
+        let mut attempts: Vec<u32> = vec![0; n];
         let mut dispatched = 0usize;
-        let mut rr = 0usize;
-        for (slot, (wa, wb)) in jobs.into_iter().enumerate() {
-            let injected = delays.map(|d| d[slot]);
-            let sleep_secs = match injected {
-                Some(d) if pace > 0.0 => d.min(t_max * SLEEP_CAP_FACTOR) * pace,
-                _ => 0.0,
-            };
-            let msg = Msg::Job(JobMsg {
-                request_id,
-                slot: slot as u32,
-                injected_delay: injected,
-                sleep_secs,
-                wa,
-                wb,
-            });
-            let mut sent = false;
-            for _ in 0..self.workers.len() {
-                let wi = rr % self.workers.len();
-                rr += 1;
-                if !self.workers[wi].alive {
-                    continue;
-                }
-                match self.workers[wi].conn.send(&msg) {
-                    Ok(()) => {
-                        self.workers[wi].pending += 1;
-                        dispatched += 1;
-                        sent = true;
-                        break;
-                    }
-                    Err(_) => self.workers[wi].alive = false,
-                }
-            }
-            if !sent {
+        let mut retries = 0usize;
+
+        // ---- dispatch: least-outstanding with failover -------------------
+        for slot in 0..n {
+            let msg = job_msg(request_id, slot as u32, 0, &jobs[slot], delays, t_max, pace);
+            if self.dispatch_one(&msg, slot as u32, &mut ctx)? {
+                attempts[slot] = 1;
+                dispatched += 1;
+                ctx.outstanding += 1;
+            } else {
                 // every worker died mid-dispatch; whatever already went
                 // out may still decode something
                 break;
@@ -597,17 +746,9 @@ impl ClusterServer {
         }
 
         // ---- collect -----------------------------------------------------
-        // Jobs stranded on workers that died *during* dispatch (accepted
-        // an earlier send, then failed a later one) will never arrive:
-        // write them off now or the collect loop would wait for them
-        // until the hard timeout.
-        let mut outstanding = dispatched;
-        for w in &mut self.workers {
-            if !w.alive && w.pending > 0 {
-                outstanding -= w.pending;
-                w.pending = 0;
-            }
-        }
+        // Each round first flushes the requeue (slots stranded on workers
+        // that died during dispatch or the previous poll are re-sent to
+        // survivors), then polls every worker with work in flight.
         let mut st = DecodeState::new(space.clone());
         let mut received = 0usize;
         let mut late = 0usize;
@@ -616,12 +757,21 @@ impl ClusterServer {
                 // deterministic: gather everything, then absorb in
                 // (delay, slot) order and apply the virtual deadline
                 let hard = start + self.cfg.collect_timeout;
-                let mut results: Vec<ResultMsg> = Vec::with_capacity(outstanding);
-                while outstanding > 0 && Instant::now() < hard {
-                    let polled = self.poll_round(request_id, &mut outstanding, &mut |r| {
-                        results.push(r)
-                    });
-                    if polled == 0 {
+                let mut results: Vec<ResultMsg> = Vec::with_capacity(ctx.outstanding);
+                loop {
+                    retries += self.flush_requeue(
+                        &mut ctx,
+                        &mut attempts,
+                        &jobs,
+                        delays,
+                        t_max,
+                    )?;
+                    if ctx.outstanding == 0 || Instant::now() >= hard {
+                        break;
+                    }
+                    let polled =
+                        self.poll_round(&mut ctx, &mut |r| results.push(r));
+                    if polled == 0 && ctx.requeue.is_empty() {
                         break; // nothing left that could deliver
                     }
                 }
@@ -629,9 +779,7 @@ impl ClusterServer {
                     x.delay.total_cmp(&y.delay).then(x.slot.cmp(&y.slot))
                 });
                 for r in results {
-                    if (r.slot as usize) >= packets.len() {
-                        continue; // corrupt slot from a broken worker
-                    }
+                    // accept_frame guarantees in-range, deduplicated slots
                     if r.delay <= t_max {
                         let newly =
                             st.add_packet(&packets[r.slot as usize], Some(r.payload));
@@ -639,6 +787,7 @@ impl ClusterServer {
                         if let Some(obs) = observe.as_mut() {
                             obs(DecodeStep {
                                 delay: r.delay,
+                                attempt: r.attempt,
                                 received,
                                 recovered: st.num_recovered(),
                                 newly,
@@ -651,110 +800,298 @@ impl ClusterServer {
             }
             DeadlineMode::Wall => {
                 // the paper's protocol: decode whatever arrives by the
-                // wall deadline, cut off the rest
+                // wall deadline, cut off the rest. The deadline gate
+                // sits *before* the requeue flush: a slot stranded by a
+                // death detected in the final poll is never re-sent
+                // past the deadline (it could not land in time anyway).
                 let deadline = start + Duration::from_secs_f64(t_max * pace);
-                while outstanding > 0 && Instant::now() < deadline {
-                    let polled = self.poll_round(request_id, &mut outstanding, &mut |r| {
-                        if (r.slot as usize) < packets.len() {
-                            let newly =
-                                st.add_packet(&packets[r.slot as usize], Some(r.payload));
-                            received += 1;
-                            if let Some(obs) = observe.as_mut() {
-                                obs(DecodeStep {
-                                    delay: r.delay,
-                                    received,
-                                    recovered: st.num_recovered(),
-                                    newly,
-                                });
-                            }
+                loop {
+                    if ctx.outstanding == 0 || Instant::now() >= deadline {
+                        break;
+                    }
+                    retries += self.flush_requeue(
+                        &mut ctx,
+                        &mut attempts,
+                        &jobs,
+                        delays,
+                        t_max,
+                    )?;
+                    if ctx.outstanding == 0 {
+                        break; // write-offs may have settled the rest
+                    }
+                    let polled = self.poll_round(&mut ctx, &mut |r| {
+                        let newly =
+                            st.add_packet(&packets[r.slot as usize], Some(r.payload));
+                        received += 1;
+                        if let Some(obs) = observe.as_mut() {
+                            obs(DecodeStep {
+                                delay: r.delay,
+                                attempt: r.attempt,
+                                received,
+                                recovered: st.num_recovered(),
+                                newly,
+                            });
                         }
                     });
-                    if polled == 0 {
+                    if polled == 0 && ctx.requeue.is_empty() {
                         break; // nothing left that could deliver
                     }
                 }
+                // past the deadline a re-dispatch could never land in
+                // time: write the queue off instead of resending
+                ctx.write_off_queued();
                 // grace drain: count (and discard) stragglers so they do
                 // not pollute the next request's collection
                 let grace = Instant::now() + self.cfg.late_drain;
-                while outstanding > 0 && Instant::now() < grace {
-                    let polled =
-                        self.poll_round(request_id, &mut outstanding, &mut |_| late += 1);
+                while ctx.outstanding > 0 && Instant::now() < grace {
+                    let polled = self.poll_round(&mut ctx, &mut |_| late += 1);
+                    ctx.write_off_queued(); // deaths during the drain
                     if polled == 0 {
                         break;
                     }
                 }
             }
         }
-        Ok(ServedDecode { st, received, late, dispatched, wall: start.elapsed() })
+        Ok(ServedDecode {
+            st,
+            received,
+            late,
+            dispatched,
+            retries,
+            corrupt: ctx.corrupt,
+            attempts,
+            wall: start.elapsed(),
+        })
     }
 
     // ------------------------------------------------------------ internals
 
-    /// One poll pass over all workers with current-request jobs in
-    /// flight. Results for this request are handed to `on_result`;
-    /// `outstanding` is decremented per delivered result and per job
-    /// stranded on a worker that died. Returns how many workers were
-    /// pollable — 0 means nothing outstanding can ever arrive.
+    /// The live worker dispatch prefers: fewest jobs in flight, then the
+    /// lowest EWMA straggle score, then the lowest registry index (which
+    /// keeps selection deterministic). A worker with no history scores
+    /// 0 — new capacity gets work immediately.
+    fn pick_worker(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (wi, w) in self.workers.iter().enumerate() {
+            if !w.alive {
+                continue;
+            }
+            best = match best {
+                None => Some(wi),
+                Some(b) => {
+                    let cur = (
+                        self.workers[b].in_flight.len(),
+                        self.workers[b].straggle.unwrap_or(0.0),
+                    );
+                    let cand = (w.in_flight.len(), w.straggle.unwrap_or(0.0));
+                    if cand.0 < cur.0 || (cand.0 == cur.0 && cand.1 < cur.1) {
+                        Some(wi)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    /// Hand one job to the best live worker, failing over on send
+    /// errors (the failed worker is marked dead and its in-flight slots
+    /// are requeued). Returns `false` when no live worker could take
+    /// the job; `Err` only for a job no worker can ever accept (its
+    /// payload does not fit the wire format).
+    fn dispatch_one(
+        &mut self,
+        msg: &Msg,
+        slot: u32,
+        ctx: &mut Collect,
+    ) -> Result<bool> {
+        loop {
+            let Some(wi) = self.pick_worker() else {
+                return Ok(false);
+            };
+            match self.workers[wi].conn.send(msg) {
+                Ok(()) => {
+                    self.workers[wi].in_flight.push(slot);
+                    return Ok(true);
+                }
+                Err(e @ (WireError::Oversize { .. } | WireError::Oversized { .. })) => {
+                    anyhow::bail!("job for slot {slot} cannot be encoded: {e}")
+                }
+                Err(_) => self.kill_worker(wi, ctx),
+            }
+        }
+    }
+
+    /// Re-dispatch requeued slots onto surviving workers. A slot whose
+    /// retry budget is exhausted — or that no live worker can take — is
+    /// written off (it surfaces as `missing`). Returns how many
+    /// re-dispatch sends went out.
+    fn flush_requeue(
+        &mut self,
+        ctx: &mut Collect,
+        attempts: &mut [u32],
+        jobs: &[(Arc<Matrix>, Arc<Matrix>)],
+        delays: Option<&[f64]>,
+        t_max: f64,
+    ) -> Result<usize> {
+        let mut sent = 0usize;
+        while let Some(slot) = ctx.requeue.pop() {
+            let s = slot as usize;
+            if ctx.settled[s] {
+                continue; // its result landed before the worker died
+            }
+            if attempts[s] as usize > self.cfg.max_job_retries {
+                // retry budget exhausted: written off, counts as missing
+                ctx.settled[s] = true;
+                ctx.outstanding -= 1;
+                continue;
+            }
+            let msg = job_msg(
+                ctx.request_id,
+                slot,
+                attempts[s],
+                &jobs[s],
+                delays,
+                t_max,
+                self.cfg.time_scale,
+            );
+            if self.dispatch_one(&msg, slot, ctx)? {
+                attempts[s] += 1;
+                sent += 1;
+            } else {
+                ctx.settled[s] = true;
+                ctx.outstanding -= 1;
+            }
+        }
+        Ok(sent)
+    }
+
+    /// One poll pass: drain every worker's inbox (frames buffered by a
+    /// heartbeat are real data even if the worker has since died), then
+    /// read one frame from each live worker with work in flight. Worker
+    /// deaths requeue their unresolved slots into `ctx.requeue` for the
+    /// caller's next [`Self::flush_requeue`]. Returns how many workers
+    /// were pollable — 0 with an empty requeue means nothing
+    /// outstanding can ever arrive.
     fn poll_round(
         &mut self,
-        request_id: u64,
-        outstanding: &mut usize,
+        ctx: &mut Collect,
         on_result: &mut dyn FnMut(ResultMsg),
     ) -> usize {
         let mut pollable = 0;
         for wi in 0..self.workers.len() {
-            if !self.workers[wi].alive || self.workers[wi].pending == 0 {
+            while let Some(r) = self.workers[wi].inbox.pop_front() {
+                self.accept_frame(wi, r, ctx, on_result);
+            }
+            if !self.workers[wi].alive || self.workers[wi].in_flight.is_empty() {
                 continue;
             }
             pollable += 1;
-            match self.poll_worker(wi, request_id) {
-                Poll::Result(r) => {
-                    *outstanding -= 1;
-                    on_result(r);
+            match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
+                Ok(Some(Msg::Result(r))) => self.accept_frame(wi, r, ctx, on_result),
+                Ok(Some(Msg::HeartbeatAck { .. })) => {}
+                Ok(Some(_)) => {
+                    // protocol violation: only workers speak here
+                    self.kill_worker(wi, ctx);
                 }
-                Poll::Idle => {}
-                Poll::Dead => {
-                    *outstanding -= self.workers[wi].pending;
-                    self.workers[wi].pending = 0;
-                }
+                Ok(None) => {}
+                Err(_) => self.kill_worker(wi, ctx),
             }
         }
         pollable
     }
 
-    fn poll_worker(&mut self, wi: usize, request_id: u64) -> Poll {
+    /// Classify one result frame from worker `wi`:
+    /// * stale (another request) — dropped quietly;
+    /// * corrupt slot (outside the packet set, or an unsettled slot the
+    ///   sender was never dispatched) — counted, and the sender is
+    ///   evicted as broken (its in-flight work requeues);
+    /// * duplicate (slot already settled) — absorbed exactly once, the
+    ///   extra frame is dropped without touching the accounting;
+    /// * otherwise — the slot settles, the worker's books update, and
+    ///   the frame is handed to the caller.
+    fn accept_frame(
+        &mut self,
+        wi: usize,
+        r: ResultMsg,
+        ctx: &mut Collect,
+        on_result: &mut dyn FnMut(ResultMsg),
+    ) {
+        if r.request_id != ctx.request_id {
+            return; // straggler from an earlier request: drop
+        }
+        let slot = r.slot as usize;
+        if slot < ctx.n_slots && ctx.settled[slot] {
+            return; // duplicate (an earlier attempt already landed)
+        }
+        // a result only settles a slot the sender actually holds: a
+        // frame naming a slot outside the packet set — or one this
+        // worker was never dispatched (it would absorb a foreign
+        // payload into the wrong packet, and could underflow
+        // `outstanding` for a never-dispatched slot) — marks the
+        // sender broken
+        let held = self.workers[wi].in_flight.iter().position(|&s| s == r.slot);
+        let Some(pos) = held else {
+            ctx.corrupt += 1;
+            self.kill_worker(wi, ctx);
+            return;
+        };
+        ctx.settled[slot] = true;
+        ctx.outstanding -= 1;
         let w = &mut self.workers[wi];
-        match w.conn.recv_timeout(Some(POLL_SLICE)) {
-            Ok(Some(Msg::Result(r))) => {
-                if r.request_id == request_id && w.pending > 0 {
-                    w.pending -= 1;
-                    w.jobs_done += 1;
-                    Poll::Result(r)
-                } else {
-                    // straggler from an earlier request: drop
-                    Poll::Idle
-                }
-            }
-            Ok(Some(Msg::HeartbeatAck { .. })) => Poll::Idle,
-            Ok(Some(_)) => {
-                // protocol violation: only workers speak here
-                w.alive = false;
-                Poll::Dead
-            }
-            Ok(None) => Poll::Idle,
-            Err(_) => {
-                w.alive = false;
-                Poll::Dead
+        w.in_flight.swap_remove(pos);
+        w.jobs_done += 1;
+        w.note_result_delay(r.delay);
+        on_result(r);
+    }
+
+    /// Mark worker `wi` dead and requeue its unresolved in-flight slots.
+    fn kill_worker(&mut self, wi: usize, ctx: &mut Collect) {
+        self.workers[wi].alive = false;
+        let stranded = std::mem::take(&mut self.workers[wi].in_flight);
+        for slot in stranded {
+            if !ctx.settled[slot as usize] {
+                ctx.requeue.push(slot);
             }
         }
     }
+}
+
+/// Build the wire message for one (re-)dispatch of `slot`. Payloads are
+/// `Arc` handles out of the job table, so this never copies a matrix.
+fn job_msg(
+    request_id: u64,
+    slot: u32,
+    attempt: u32,
+    job: &(Arc<Matrix>, Arc<Matrix>),
+    delays: Option<&[f64]>,
+    t_max: f64,
+    pace: f64,
+) -> Msg {
+    let injected = delays.map(|d| d[slot as usize]);
+    let sleep_secs = match injected {
+        Some(d) if pace > 0.0 => d.min(t_max * SLEEP_CAP_FACTOR) * pace,
+        _ => 0.0,
+    };
+    Msg::Job(JobMsg {
+        request_id,
+        slot,
+        attempt,
+        injected_delay: injected,
+        sleep_secs,
+        wa: Arc::clone(&job.0),
+        wb: Arc::clone(&job.1),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::transport::{LoopbackDialer, LoopbackTransport};
-    use crate::cluster::worker::{spawn_loopback_workers, WorkerConfig, WorkerStats};
+    use crate::cluster::worker::{
+        run_worker, spawn_loopback_workers, WorkerConfig, WorkerStats,
+    };
     use crate::coding::CodeKind;
     use crate::coordinator::Coordinator;
     use crate::runtime::NativeEngine;
@@ -942,11 +1279,11 @@ mod tests {
     }
 
     #[test]
-    fn jobs_stranded_on_a_mid_dispatch_death_are_written_off() {
-        // A worker that accepts at least one job and then vanishes must
-        // not stall collection until the hard timeout: its in-flight
-        // jobs are written off (at dispatch or on the recv error) and
-        // the request finishes promptly with consistent accounting.
+    fn jobs_stranded_on_a_mid_request_death_are_redispatched() {
+        // A worker that accepts jobs and then vanishes must not cost
+        // the request any work: its in-flight slots requeue onto the
+        // survivor (well before the 60 s collect timeout) and the MDS
+        // plan still fully decodes.
         let (mut transport, dialer) = LoopbackTransport::new();
         let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
         let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
@@ -976,12 +1313,60 @@ mod tests {
         ghost.join().unwrap();
         // far below the 60 s collect_timeout: no spin on stranded jobs
         assert!(t0.elapsed() < Duration::from_secs(10), "{:?}", t0.elapsed());
-        assert!(out.missing() > 0, "ghost jobs must be written off: {out:?}");
+        // every slot the ghost was holding was re-dispatched and landed
+        assert!(out.retries > 0, "ghost jobs must be re-dispatched: {out:?}");
+        assert_eq!(out.missing(), 0, "no work may be lost: {out:?}");
+        assert_eq!(out.outcome.received, 12);
+        assert_eq!(out.outcome.recovered, 9);
+        assert!(out.outcome.normalized_loss < 1e-9);
         assert_eq!(
             out.outcome.received + out.late + out.missing(),
             out.dispatched
         );
         assert_eq!(server.live_workers(), 1);
+        finish(server, handles);
+    }
+
+    #[test]
+    fn retry_budget_bounds_redispatch_and_writes_off_cleanly() {
+        // With re-dispatch disabled (max_job_retries = 0) the old
+        // write-off semantics apply: stranded jobs surface as missing,
+        // accounting stays balanced, and the request still returns
+        // promptly.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let ghost_conn = dialer.dial("ghost").unwrap();
+        let ghost = std::thread::spawn(move || {
+            let mut conn = ghost_conn;
+            conn.send(&Msg::Hello { agent: "ghost".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            loop {
+                match conn.recv().unwrap() {
+                    Msg::Job(_) => break,
+                    _ => continue,
+                }
+            }
+        });
+        let cfg = ClusterConfig { max_job_retries: 0, ..ClusterConfig::default() };
+        let mut server = ClusterServer::new(cfg);
+        let n = server
+            .accept_workers(&mut transport, 2, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(n, 2);
+
+        let plan = small_plan(12, 6);
+        let delays = vec![0.1; 12];
+        let t0 = Instant::now();
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        ghost.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(10), "{:?}", t0.elapsed());
+        assert_eq!(out.retries, 0);
+        assert!(out.missing() > 0, "ghost jobs must be written off: {out:?}");
+        assert_eq!(
+            out.outcome.received + out.late + out.missing(),
+            out.dispatched
+        );
         finish(server, handles);
     }
 
@@ -1010,8 +1395,9 @@ mod tests {
             .find(|w| w.name == "silent")
             .unwrap()
             .id;
-        let evicted = server.heartbeat();
-        assert_eq!(evicted, vec![silent_id]);
+        let hb = server.heartbeat();
+        assert_eq!(hb.evicted, vec![silent_id]);
+        assert_eq!(hb.buffered_results, 0);
         assert_eq!(server.live_workers(), 1);
 
         // the stream keeps serving on the survivor
@@ -1041,7 +1427,7 @@ mod tests {
             (0..12).map(|w| if w % 2 == 0 { 0.1 * (w + 1) as f64 } else { 9.0 }).collect();
         let (mut server, _dialer, handles) =
             start_cluster(3, ClusterConfig::default());
-        let jobs: Vec<(Arc<Matrix>, Matrix)> = plan
+        let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> = plan
             .packets
             .iter()
             .map(|p| {
@@ -1051,7 +1437,7 @@ mod tests {
                     &plan.b_blocks,
                     &p.recipe,
                 );
-                (Arc::new(wa), wb)
+                (Arc::new(wa), Arc::new(wb))
             })
             .collect();
         let mut steps: Vec<DecodeStep> = Vec::new();
@@ -1082,5 +1468,244 @@ mod tests {
         let total_newly: usize = steps.iter().map(|s| s.newly.len()).sum();
         assert_eq!(total_newly, served.st.num_recovered());
         assert_eq!(steps.last().unwrap().recovered, served.st.num_recovered());
+    }
+
+    #[test]
+    fn heartbeat_buffers_in_flight_results_instead_of_dropping() {
+        // Regression for the result-drop bug: a heartbeat that reads a
+        // result frame while waiting for acks must route it into the
+        // worker's inbox, where the next serve poll absorbs it with
+        // full accounting — not consume and discard it.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let mut agent = dialer.dial("agent").unwrap();
+        agent.send(&Msg::Hello { agent: "agent".to_string() }).unwrap();
+        let cfg = ClusterConfig {
+            heartbeat_timeout: Duration::from_millis(100),
+            collect_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let mut server = ClusterServer::new(cfg);
+        assert_eq!(
+            server.accept_workers(&mut transport, 1, Duration::from_secs(10)).unwrap(),
+            1
+        );
+        assert!(matches!(agent.recv().unwrap(), Msg::Welcome { .. }));
+
+        // the honest payload for the one job of the upcoming request
+        // (id 1), already in flight when the heartbeat runs
+        let plan = small_plan(1, 21);
+        let (wa, wb) = crate::coordinator::build_job_matrices(
+            &plan.part,
+            &plan.a_blocks,
+            &plan.b_blocks,
+            &plan.packets[0].recipe,
+        );
+        agent
+            .send(&Msg::Result(ResultMsg {
+                request_id: 1,
+                slot: 0,
+                attempt: 0,
+                delay: 0.1,
+                payload: matmul(&wa, &wb),
+            }))
+            .unwrap();
+        let hb = server.heartbeat();
+        // the frame proves liveness (no eviction) and is buffered
+        assert!(hb.evicted.is_empty(), "{hb:?}");
+        assert_eq!(hb.buffered_results, 1);
+
+        // the buffered frame satisfies the request even though the
+        // agent never answers the job send itself
+        let out = server.serve_plan(&plan, 1.0, Some(&[0.1])).unwrap();
+        assert_eq!(out.dispatched, 1);
+        assert_eq!(out.outcome.received, 1);
+        assert_eq!(out.missing(), 0);
+        drop(agent);
+    }
+
+    #[test]
+    fn evicted_worker_rejoins_with_its_id_and_serves_again() {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        // an agent that registers but never answers: evicted by heartbeat
+        let mut silent = dialer.dial("flaky").unwrap();
+        silent.send(&Msg::Hello { agent: "flaky".to_string() }).unwrap();
+        let cfg = ClusterConfig {
+            heartbeat_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let mut server = ClusterServer::new(cfg);
+        assert_eq!(
+            server.accept_workers(&mut transport, 2, Duration::from_secs(10)).unwrap(),
+            2
+        );
+        let flaky_id = server
+            .worker_info()
+            .iter()
+            .find(|w| w.name == "flaky")
+            .unwrap()
+            .id;
+        let hb = server.heartbeat();
+        assert_eq!(hb.evicted, vec![flaky_id]);
+        assert_eq!(server.live_workers(), 1);
+
+        // the same agent rejoins under its name: the dead slot revives
+        // in place instead of growing the registry
+        let dialer2 = dialer.clone();
+        let rejoin = std::thread::spawn(move || {
+            let mut conn = dialer2.dial("flaky").unwrap();
+            let cfg = WorkerConfig { name: "flaky".to_string(), ..Default::default() };
+            run_worker(&mut conn, &NativeEngine::serial(), &cfg).unwrap()
+        });
+        assert_eq!(
+            server.accept_workers(&mut transport, 1, Duration::from_secs(10)).unwrap(),
+            1
+        );
+        assert_eq!(server.live_workers(), 2);
+        let info = server.worker_info();
+        assert_eq!(info.len(), 2, "rejoin must not duplicate the slot");
+        let flaky = info.iter().find(|w| w.name == "flaky").unwrap();
+        assert_eq!(flaky.id, flaky_id);
+        assert!(flaky.alive);
+
+        // … and it is eligible for (and receives) dispatched work
+        let plan = small_plan(8, 11);
+        let delays = vec![0.2; 8];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert_eq!(out.outcome.received, 8);
+        assert_eq!(out.missing(), 0);
+        let flaky_after = server
+            .worker_info()
+            .into_iter()
+            .find(|w| w.name == "flaky")
+            .unwrap();
+        assert!(flaky_after.jobs_done > 0, "rejoined worker must get work");
+        drop(silent);
+        server.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        let stats = rejoin.join().unwrap();
+        assert!(stats.clean_shutdown);
+        assert_eq!(stats.worker_id, flaky_id);
+    }
+
+    #[test]
+    fn duplicate_results_are_absorbed_exactly_once() {
+        // Two results for the same (request, slot) under different
+        // attempts: the coordinator must settle the slot on the first
+        // and drop the second without touching the accounting.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let agent_conn = dialer.dial("dup").unwrap();
+        let agent = std::thread::spawn(move || {
+            let mut conn = agent_conn;
+            conn.send(&Msg::Hello { agent: "dup".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            let mut served = 0;
+            while served < 2 {
+                match conn.recv().unwrap() {
+                    Msg::Job(job) => {
+                        let payload = matmul(&job.wa, &job.wb);
+                        let reply = |attempt: u32| {
+                            Msg::Result(ResultMsg {
+                                request_id: job.request_id,
+                                slot: job.slot,
+                                attempt,
+                                delay: job.injected_delay.unwrap_or(0.1),
+                                payload: payload.clone(),
+                            })
+                        };
+                        conn.send(&reply(job.attempt)).unwrap();
+                        if job.slot == 0 {
+                            conn.send(&reply(job.attempt + 1)).unwrap();
+                        }
+                        served += 1;
+                    }
+                    Msg::Shutdown => return,
+                    _ => {}
+                }
+            }
+            // drain to the orderly goodbye
+            loop {
+                match conn.recv() {
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        assert_eq!(
+            server.accept_workers(&mut transport, 1, Duration::from_secs(10)).unwrap(),
+            1
+        );
+        let plan = small_plan(2, 23);
+        let delays = vec![0.1; 2];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert_eq!(out.dispatched, 2);
+        assert_eq!(
+            out.outcome.received, 2,
+            "a duplicate must not double-count: {out:?}"
+        );
+        assert_eq!(out.late, 0);
+        assert_eq!(out.missing(), 0);
+        server.shutdown();
+        agent.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_slot_results_are_counted_and_the_work_requeued() {
+        // A worker naming a slot outside the packet set is broken: the
+        // frame is counted in `corrupt`, the sender evicted, and its
+        // jobs re-dispatched — the books always balance.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "live".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let broken_conn = dialer.dial("broken").unwrap();
+        let broken = std::thread::spawn(move || {
+            let mut conn = broken_conn;
+            conn.send(&Msg::Hello { agent: "broken".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            loop {
+                match conn.recv() {
+                    Ok(Msg::Job(job)) => {
+                        let r = Msg::Result(ResultMsg {
+                            request_id: job.request_id,
+                            slot: 999, // far outside the packet set
+                            attempt: job.attempt,
+                            delay: 0.1,
+                            payload: matmul(&job.wa, &job.wb),
+                        });
+                        if conn.send(&r).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        assert_eq!(
+            server.accept_workers(&mut transport, 2, Duration::from_secs(10)).unwrap(),
+            2
+        );
+        let plan = small_plan(10, 27);
+        let delays = vec![0.1; 10];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert!(out.corrupt >= 1, "corrupt frames must be counted: {out:?}");
+        assert_eq!(server.live_workers(), 1, "the broken worker is evicted");
+        assert!(out.retries > 0, "its jobs must be re-dispatched: {out:?}");
+        assert_eq!(out.outcome.received, 10);
+        assert_eq!(out.outcome.recovered, 9);
+        assert_eq!(
+            out.outcome.received + out.late + out.missing(),
+            out.dispatched
+        );
+        server.shutdown();
+        let _ = broken.join();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
     }
 }

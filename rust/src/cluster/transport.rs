@@ -124,7 +124,9 @@ impl TcpConn {
 
 impl Connection for TcpConn {
     fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
-        let frame = wire::encode(msg);
+        // encode is fallible: a payload that does not fit the wire
+        // format surfaces as `Oversize` here instead of truncating
+        let frame = wire::encode(msg)?;
         self.stream.write_all(&frame).map_err(io_to_wire)?;
         Ok(())
     }
@@ -251,7 +253,7 @@ impl LoopbackConn {
 
 impl Connection for LoopbackConn {
     fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
-        self.tx.send(wire::encode(msg)).map_err(|_| WireError::Closed)
+        self.tx.send(wire::encode(msg)?).map_err(|_| WireError::Closed)
     }
 
     fn recv_timeout(
@@ -410,7 +412,7 @@ mod tests {
         // a frame delivered in two TCP segments must decode once complete
         let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
         let addr = transport.local_addr();
-        let frame = wire::encode(&Msg::Welcome { worker_id: 3 });
+        let frame = wire::encode(&Msg::Welcome { worker_id: 3 }).unwrap();
         let (first, rest) = frame.split_at(5);
         let (first, rest) = (first.to_vec(), rest.to_vec());
         let handle = std::thread::spawn(move || {

@@ -8,7 +8,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "UEPW"
-//!      4     2  protocol version (currently 1)
+//!      4     2  protocol version (currently 2)
 //!      6     1  message type tag
 //!      7     1  reserved (0)
 //!      8     4  payload length in bytes
@@ -27,8 +27,10 @@ use crate::linalg::Matrix;
 
 /// Frame magic: distinguishes the protocol from stray TCP traffic.
 pub const MAGIC: [u8; 4] = *b"UEPW";
-/// Protocol version carried in every frame header.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in every frame header. Version 2 added the
+/// `attempt` counter to job and result frames (re-dispatch of jobs
+/// stranded on dead workers).
+pub const VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Hard ceiling on a single frame's payload (guards against a corrupt
@@ -55,6 +57,11 @@ pub struct JobMsg {
     pub request_id: u64,
     /// Packet slot in the request's job set (indexes `plan.packets`).
     pub slot: u32,
+    /// Zero-based dispatch attempt for this slot: `0` for the first
+    /// send, `n` for the `n`-th re-dispatch after the previous holder
+    /// died. Workers echo it back in the result so the coordinator can
+    /// attribute duplicates.
+    pub attempt: u32,
     pub injected_delay: Option<f64>,
     pub sleep_secs: f64,
     /// Shared left factor: on the coordinator this is usually a handle
@@ -62,16 +69,24 @@ pub struct JobMsg {
     /// deep-copies `W_A` (the wire codec serializes straight from the
     /// shared buffer).
     pub wa: Arc<Matrix>,
-    pub wb: Matrix,
+    /// Shared right factor: the coordinator's job table retains a handle
+    /// to every dispatched payload until its result lands, so a
+    /// re-dispatch onto a surviving worker resends the same buffer
+    /// instead of rebuilding (or deep-copying) it.
+    pub wb: Arc<Matrix>,
 }
 
 /// A computed sub-product streaming back to the coordinator. `delay` is
 /// the worker's virtual completion time (injected, self-sampled, or
 /// measured), which the coordinator checks against the request deadline.
+/// `attempt` echoes the job's dispatch attempt: two results for the same
+/// `(request_id, slot)` under different attempts are duplicates, and the
+/// coordinator absorbs exactly one.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResultMsg {
     pub request_id: u64,
     pub slot: u32,
+    pub attempt: u32,
     pub delay: f64,
     pub payload: Matrix,
 }
@@ -131,6 +146,11 @@ pub enum WireError {
     UnknownType(u8),
     /// Declared payload length exceeds [`MAX_PAYLOAD`].
     Oversized { len: usize, max: usize },
+    /// Encode-side: a length or dimension does not fit its wire-format
+    /// field. Casting (`as u32`) would silently truncate and produce a
+    /// structurally valid frame describing the *wrong* data, so the
+    /// encoder refuses instead.
+    Oversize { what: &'static str, value: usize, max: usize },
     /// The buffer ends before the frame does.
     Truncated { need: usize, have: usize },
     /// Structurally invalid payload (bad lengths, trailing bytes, …).
@@ -150,6 +170,9 @@ impl std::fmt::Display for WireError {
             WireError::UnknownType(t) => write!(f, "unknown message type {t}"),
             WireError::Oversized { len, max } => {
                 write!(f, "frame payload of {len} bytes exceeds cap {max}")
+            }
+            WireError::Oversize { what, value, max } => {
+                write!(f, "{what} of {value} does not fit the wire format (max {max})")
             }
             WireError::Truncated { need, have } => {
                 write!(f, "truncated frame: need {need} bytes, have {have}")
@@ -177,6 +200,18 @@ impl From<std::io::Error> for WireError {
 
 // ---------------------------------------------------------------- encode
 
+/// Checked conversion into a `u32` wire field. The unchecked `as u32`
+/// cast this replaces would silently truncate a ≥ 4 GiB length or a
+/// ≥ 2³² dimension into a small number that decodes "successfully" into
+/// garbage; refusing at encode time keeps the fault at its source.
+pub(crate) fn wire_u32(what: &'static str, value: usize) -> Result<u32, WireError> {
+    u32::try_from(value).map_err(|_| WireError::Oversize {
+        what,
+        value,
+        max: u32::MAX as usize,
+    })
+}
+
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -189,9 +224,10 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    put_u32(out, s.len() as u32);
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<(), WireError> {
+    put_u32(out, wire_u32("string length", s.len())?);
     out.extend_from_slice(s.as_bytes());
+    Ok(())
 }
 
 fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
@@ -204,13 +240,14 @@ fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
     }
 }
 
-fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
-    put_u32(out, m.rows() as u32);
-    put_u32(out, m.cols() as u32);
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) -> Result<(), WireError> {
+    put_u32(out, wire_u32("matrix rows", m.rows())?);
+    put_u32(out, wire_u32("matrix cols", m.cols())?);
     out.reserve(m.data().len() * 8);
     for &x in m.data() {
         out.extend_from_slice(&x.to_le_bytes());
     }
+    Ok(())
 }
 
 /// Wire size of a matrix payload (shape header + elements).
@@ -222,38 +259,45 @@ fn matrix_wire_len(m: &Matrix) -> usize {
 /// Job/result frames carry megabytes at paper scale and encoding sits
 /// inside the request's deadline budget, so the payload buffer is sized
 /// exactly upfront — no doubling reallocations on the dispatch path.
-pub fn encode(msg: &Msg) -> Vec<u8> {
+/// Lengths and dimensions that do not fit their wire fields (and
+/// payloads past [`MAX_PAYLOAD`]) report [`WireError::Oversize`] /
+/// [`WireError::Oversized`] instead of truncating.
+pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
     let capacity = match msg {
         Msg::Hello { agent } => 4 + agent.len(),
-        // 8 request_id + 4 slot + 9 option tag+f64 + 8 sleep_secs
-        Msg::Job(j) => 29 + matrix_wire_len(&j.wa) + matrix_wire_len(&j.wb),
-        Msg::Result(r) => 20 + matrix_wire_len(&r.payload),
+        // 8 request_id + 4 slot + 4 attempt + 9 option tag+f64 + 8 sleep
+        Msg::Job(j) => 33 + matrix_wire_len(&j.wa) + matrix_wire_len(&j.wb),
+        Msg::Result(r) => 24 + matrix_wire_len(&r.payload),
         _ => 8,
     };
     let mut payload = Vec::with_capacity(capacity);
     match msg {
-        Msg::Hello { agent } => put_str(&mut payload, agent),
+        Msg::Hello { agent } => put_str(&mut payload, agent)?,
         Msg::Welcome { worker_id } => put_u64(&mut payload, *worker_id),
         Msg::Job(j) => {
             put_u64(&mut payload, j.request_id);
             put_u32(&mut payload, j.slot);
+            put_u32(&mut payload, j.attempt);
             put_opt_f64(&mut payload, j.injected_delay);
             put_f64(&mut payload, j.sleep_secs);
-            put_matrix(&mut payload, &j.wa);
-            put_matrix(&mut payload, &j.wb);
+            put_matrix(&mut payload, &j.wa)?;
+            put_matrix(&mut payload, &j.wb)?;
         }
         Msg::Result(r) => {
             put_u64(&mut payload, r.request_id);
             put_u32(&mut payload, r.slot);
+            put_u32(&mut payload, r.attempt);
             put_f64(&mut payload, r.delay);
-            put_matrix(&mut payload, &r.payload);
+            put_matrix(&mut payload, &r.payload)?;
         }
         Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => {
             put_u64(&mut payload, *nonce)
         }
         Msg::Shutdown => {}
     }
-    assert!(payload.len() <= MAX_PAYLOAD, "outgoing frame exceeds MAX_PAYLOAD");
+    if payload.len() > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len: payload.len(), max: MAX_PAYLOAD });
+    }
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
@@ -261,7 +305,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
     out.push(0); // reserved
     put_u32(&mut out, payload.len() as u32);
     out.extend_from_slice(&payload);
-    out
+    Ok(out)
 }
 
 // ---------------------------------------------------------------- decode
@@ -379,14 +423,16 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
         TAG_JOB => Msg::Job(JobMsg {
             request_id: rd.u64()?,
             slot: rd.u32()?,
+            attempt: rd.u32()?,
             injected_delay: rd.opt_f64()?,
             sleep_secs: rd.f64()?,
             wa: Arc::new(rd.matrix()?),
-            wb: rd.matrix()?,
+            wb: Arc::new(rd.matrix()?),
         }),
         TAG_RESULT => Msg::Result(ResultMsg {
             request_id: rd.u64()?,
             slot: rd.u32()?,
+            attempt: rd.u32()?,
             delay: rd.f64()?,
             payload: rd.matrix()?,
         }),
@@ -427,22 +473,25 @@ mod tests {
             Msg::Job(JobMsg {
                 request_id: 7,
                 slot: 3,
+                attempt: 0,
                 injected_delay: Some(0.25),
                 sleep_secs: 0.001,
                 wa: Arc::new(sample_matrix(1, 4, 6)),
-                wb: sample_matrix(2, 6, 5),
+                wb: Arc::new(sample_matrix(2, 6, 5)),
             }),
             Msg::Job(JobMsg {
                 request_id: 8,
                 slot: 0,
+                attempt: 2,
                 injected_delay: None,
                 sleep_secs: 0.0,
                 wa: Arc::new(sample_matrix(3, 1, 1)),
-                wb: sample_matrix(4, 1, 1),
+                wb: Arc::new(sample_matrix(4, 1, 1)),
             }),
             Msg::Result(ResultMsg {
                 request_id: 7,
                 slot: 3,
+                attempt: 1,
                 delay: 1.75,
                 payload: sample_matrix(5, 4, 5),
             }),
@@ -455,7 +504,7 @@ mod tests {
     #[test]
     fn every_message_round_trips_bit_identically() {
         for msg in all_messages() {
-            let bytes = encode(&msg);
+            let bytes = encode(&msg).unwrap();
             let (back, used) = decode_frame(&bytes).unwrap();
             assert_eq!(used, bytes.len(), "{}", msg.name());
             assert_eq!(back, msg, "{}", msg.name());
@@ -483,9 +532,11 @@ mod tests {
         let full = encode(&Msg::Result(ResultMsg {
             request_id: 1,
             slot: 0,
+            attempt: 0,
             delay: 0.5,
             payload: sample_matrix(6, 3, 3),
-        }));
+        }))
+        .unwrap();
         for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN, full.len() - 1] {
             match decode_frame(&full[..cut]) {
                 Err(WireError::Truncated { need, have }) => {
@@ -500,8 +551,32 @@ mod tests {
     }
 
     #[test]
+    fn encode_side_casts_are_checked_not_truncating() {
+        // Anything that fits a u32 passes through exactly…
+        assert_eq!(wire_u32("len", 0).unwrap(), 0);
+        assert_eq!(wire_u32("len", u32::MAX as usize).unwrap(), u32::MAX);
+        // …and anything larger refuses instead of silently truncating.
+        // (The old `as u32` cast would have mapped 1 << 33 to 0 and
+        // produced a structurally valid frame describing no data.)
+        #[cfg(target_pointer_width = "64")]
+        {
+            let big = (u32::MAX as usize) + 1;
+            match wire_u32("matrix rows", big) {
+                Err(WireError::Oversize { what, value, max }) => {
+                    assert_eq!(what, "matrix rows");
+                    assert_eq!(value, big);
+                    assert_eq!(max, u32::MAX as usize);
+                }
+                other => panic!("expected Oversize, got {other:?}"),
+            }
+            let err = wire_u32("string length", 1usize << 33).unwrap_err();
+            assert!(err.to_string().contains("does not fit the wire format"));
+        }
+    }
+
+    #[test]
     fn oversized_length_field_is_rejected_before_allocation() {
-        let mut frame = encode(&Msg::Shutdown);
+        let mut frame = encode(&Msg::Shutdown).unwrap();
         let huge = (MAX_PAYLOAD as u32) + 1;
         frame[8..12].copy_from_slice(&huge.to_le_bytes());
         match decode_frame(&frame) {
@@ -517,7 +592,7 @@ mod tests {
 
     #[test]
     fn bad_magic_version_and_type_are_rejected() {
-        let good = encode(&Msg::Heartbeat { nonce: 5 });
+        let good = encode(&Msg::Heartbeat { nonce: 5 }).unwrap();
 
         let mut bad = good.clone();
         bad[0] = b'X';
@@ -535,7 +610,7 @@ mod tests {
     #[test]
     fn trailing_bytes_inside_payload_are_malformed() {
         // declare a payload one byte longer than the heartbeat body
-        let mut frame = encode(&Msg::Heartbeat { nonce: 1 });
+        let mut frame = encode(&Msg::Heartbeat { nonce: 1 }).unwrap();
         frame.push(0xEE);
         let len = 9u32; // 8-byte nonce + 1 junk byte
         frame[8..12].copy_from_slice(&len.to_le_bytes());
@@ -550,8 +625,14 @@ mod tests {
             vec![f64::MIN_POSITIVE, -0.0, 1.0 / 3.0, f64::MAX],
         );
         let msg =
-            Msg::Result(ResultMsg { request_id: 0, slot: 0, delay: 0.0, payload: m });
-        let (back, _) = decode_frame(&encode(&msg)).unwrap();
+            Msg::Result(ResultMsg {
+            request_id: 0,
+            slot: 0,
+            attempt: 0,
+            delay: 0.0,
+            payload: m,
+        });
+        let (back, _) = decode_frame(&encode(&msg).unwrap()).unwrap();
         if let Msg::Result(r) = back {
             if let Msg::Result(orig) = &msg {
                 for (a, b) in r.payload.data().iter().zip(orig.payload.data()) {

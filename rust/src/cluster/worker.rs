@@ -129,6 +129,9 @@ pub fn run_worker<E: ExecEngine>(
                 let reply = Msg::Result(ResultMsg {
                     request_id: job.request_id,
                     slot: job.slot,
+                    // echo the dispatch attempt so the coordinator can
+                    // attribute duplicates of a re-dispatched slot
+                    attempt: job.attempt,
                     delay,
                     payload,
                 });
@@ -219,16 +222,18 @@ mod tests {
         ps.send(&Msg::Job(JobMsg {
             request_id: 9,
             slot: 2,
+            attempt: 3,
             injected_delay: Some(0.75),
             sleep_secs: 0.0,
             wa: std::sync::Arc::new(wa.clone()),
-            wb: wb.clone(),
+            wb: std::sync::Arc::new(wb.clone()),
         }))
         .unwrap();
         match ps.recv().unwrap() {
             Msg::Result(r) => {
                 assert_eq!(r.request_id, 9);
                 assert_eq!(r.slot, 2);
+                assert_eq!(r.attempt, 3, "the dispatch attempt must be echoed");
                 assert_eq!(r.delay, 0.75);
                 assert!(r.payload.allclose(&matmul(&wa, &wb), 1e-12));
             }
@@ -284,10 +289,11 @@ mod tests {
             ps.send(&Msg::Job(JobMsg {
                 request_id: 1,
                 slot,
+                attempt: 0,
                 injected_delay: None,
                 sleep_secs: 0.0,
                 wa: std::sync::Arc::new(m.clone()),
-                wb: m.clone(),
+                wb: std::sync::Arc::new(m.clone()),
             }))
             .unwrap();
             let want = model.sample_scaled(0.5, &mut expect_rng);

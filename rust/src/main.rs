@@ -415,6 +415,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let mut mats = Pcg64::with_stream(shared.seed, 1);
     let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut mats)).collect();
     let (mut received, mut late, mut missing, mut recovered) = (0, 0, 0, 0);
+    let (mut retries, mut corrupt) = (0usize, 0usize);
     let (mut refinements, mut monotone) = (0usize, true);
     for req in 0..requests {
         let a_id = (req % n_matrices) as u64;
@@ -425,12 +426,13 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         )?;
         println!(
             "request {req} (A#{a_id}, T_max={t_max}): {} arrivals ({} late, {} missing), \
-             recovered {}/{}, loss {:.4}, cache {}, {} refinements, wall {:?}",
+             recovered {}/{}, {} retries, loss {:.4}, cache {}, {} refinements, wall {:?}",
             out.outcome.received,
             out.late,
             out.missing(),
             out.outcome.recovered,
             spec.part.num_products(),
+            out.retries,
             out.outcome.normalized_loss,
             if out.cache_hit == Some(true) { "hit" } else { "miss" },
             out.progress.refinements(),
@@ -440,11 +442,19 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         late += out.late;
         missing += out.missing();
         recovered += out.outcome.recovered;
+        retries += out.retries;
+        corrupt += out.corrupt;
         refinements += out.progress.refinements();
         monotone &= out.progress.loss_non_increasing();
         let upkeep = session.maintain()?;
         for id in upkeep.evicted {
             println!("worker {id} evicted (missed heartbeat)");
+        }
+        if upkeep.buffered_results > 0 {
+            println!(
+                "heartbeat buffered {} in-flight result frame(s)",
+                upkeep.buffered_results
+            );
         }
         anyhow::ensure!(
             upkeep.live_workers != Some(0),
@@ -452,9 +462,12 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         );
     }
     let cache = session.cache_stats();
+    // every request fully decoded despite stragglers/failures?
+    let full_recovery = recovered == requests * spec.part.num_products();
     println!(
         "stream done: requests={requests} received={received} late={late} \
-         missing={missing} recovered_total={recovered} cache_hits={} \
+         missing={missing} recovered_total={recovered} retries={retries} \
+         corrupt={corrupt} full_recovery={full_recovery} cache_hits={} \
          cache_misses={} cache_evictions={}",
         cache.hits, cache.misses, cache.evictions
     );

@@ -1,0 +1,326 @@
+//! Fault-injection integration tests for the resilient job lifecycle:
+//! worker death mid-request (TCP), eviction followed by rejoin, and the
+//! maintenance-interleaving regression — a request stream with
+//! `maintain()` calls woven through it must report bit-identically to
+//! one without, because no result frame is ever dropped.
+
+use std::time::Duration;
+
+use uepmm::api::{ClusterBackend, Request, RunReport, Session};
+use uepmm::cluster::{
+    run_worker, ClusterConfig, ClusterServer, Connection, DeadlineMode, Msg,
+    ResultMsg, TcpConn, TcpTransport, Transport, WorkerConfig,
+};
+use uepmm::coding::{CodeKind, CodeSpec};
+use uepmm::coordinator::Plan;
+use uepmm::latency::LatencyModel;
+use uepmm::linalg::{matmul, Matrix};
+use uepmm::partition::{default_pair_classes, ClassMap, Partitioning};
+use uepmm::rng::Pcg64;
+use uepmm::runtime::NativeEngine;
+
+fn spawn_tcp_worker(
+    addr: String,
+    name: &str,
+) -> std::thread::JoinHandle<uepmm::cluster::WorkerStats> {
+    let cfg = WorkerConfig { name: name.to_string(), ..Default::default() };
+    std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(&addr).expect("worker connect");
+        run_worker(&mut conn, &NativeEngine::serial(), &cfg).expect("worker loop")
+    })
+}
+
+/// MDS keeps full-decode assertions seed-independent: any ≥ 9 received
+/// packets recover all 9 sub-products.
+fn mds_plan(workers: usize, seed: u64) -> Plan {
+    let mut rng = Pcg64::seed_from(seed);
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+    let spec = CodeSpec::stacked(CodeKind::Mds);
+    Plan::build(&part, spec, 3, workers, &a, &b, &mut rng).unwrap()
+}
+
+/// Killing one of three workers mid-request must not lose its slots:
+/// they re-dispatch onto the survivors and the MDS plan fully decodes.
+#[test]
+fn killing_a_tcp_worker_mid_request_redispatches_all_its_slots() {
+    let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr();
+    let w1 = spawn_tcp_worker(addr.clone(), "healthy-1");
+    let w2 = spawn_tcp_worker(addr.clone(), "healthy-2");
+    // the victim computes exactly one job honestly, then vanishes with
+    // the rest of its backlog unanswered — at the socket level that is
+    // what a SIGKILL'd worker process looks like to the coordinator
+    let victim_addr = addr.clone();
+    let victim = std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(&victim_addr).expect("victim connect");
+        conn.send(&Msg::Hello { agent: "victim".to_string() }).unwrap();
+        assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+        let mut replied = false;
+        loop {
+            match conn.recv().unwrap() {
+                Msg::Job(job) if !replied => {
+                    let payload = matmul(&job.wa, &job.wb);
+                    conn.send(&Msg::Result(ResultMsg {
+                        request_id: job.request_id,
+                        slot: job.slot,
+                        attempt: job.attempt,
+                        delay: job.injected_delay.unwrap_or(0.1),
+                        payload,
+                    }))
+                    .unwrap();
+                    replied = true;
+                }
+                Msg::Job(_) => break, // die holding the second job
+                _ => {}
+            }
+        }
+    });
+
+    let mut server = ClusterServer::new(ClusterConfig::default());
+    let joined = server
+        .accept_workers(&mut transport, 3, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(joined, 3);
+
+    let plan = mds_plan(12, 41);
+    let delays = vec![0.1; 12];
+    let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+    victim.join().unwrap();
+
+    // every slot stranded on the victim was re-dispatched and landed
+    assert!(out.retries > 0, "victim's jobs must be re-dispatched: {out:?}");
+    assert_eq!(out.missing(), 0, "no dispatched work may be lost: {out:?}");
+    assert_eq!(out.outcome.received, 12);
+    assert_eq!(out.outcome.recovered, 9, "the MDS plan must fully decode");
+    assert!(out.outcome.normalized_loss < 1e-9);
+    assert_eq!(server.live_workers(), 2);
+
+    server.shutdown();
+    assert!(w1.join().unwrap().clean_shutdown);
+    assert!(w2.join().unwrap().clean_shutdown);
+}
+
+/// An agent whose connection died is evicted — and a fresh connection
+/// re-registering under the same name revives its slot (same worker id)
+/// and serves again.
+#[test]
+fn tcp_worker_rejoins_after_eviction_and_serves() {
+    let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr();
+    let stayer = spawn_tcp_worker(addr.clone(), "stayer");
+    // first incarnation of "phoenix": registers, then drops dead
+    let phoenix_addr = addr.clone();
+    let phoenix1 = std::thread::spawn(move || {
+        let mut conn = TcpConn::connect(&phoenix_addr).expect("phoenix connect");
+        conn.send(&Msg::Hello { agent: "phoenix".to_string() }).unwrap();
+        assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+        drop(conn);
+    });
+    let mut server = ClusterServer::new(ClusterConfig::default());
+    let joined = server
+        .accept_workers(&mut transport, 2, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(joined, 2);
+    phoenix1.join().unwrap();
+    let phoenix_id = server
+        .worker_info()
+        .iter()
+        .find(|w| w.name == "phoenix")
+        .unwrap()
+        .id;
+
+    // serving discovers the dead connection; the stayer carries the load
+    let plan = mds_plan(10, 43);
+    let out = server.serve_plan(&plan, 1.0, Some(&vec![0.1; 10])).unwrap();
+    assert_eq!(out.outcome.received, 10);
+    assert_eq!(out.missing(), 0);
+    assert_eq!(server.live_workers(), 1);
+
+    // second incarnation dials in under the same name: the dead slot
+    // revives in place instead of growing the registry
+    let rejoin = spawn_tcp_worker(addr.clone(), "phoenix");
+    let joined = server
+        .accept_workers(&mut transport, 1, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(joined, 1);
+    assert_eq!(server.live_workers(), 2);
+    let info = server.worker_info();
+    assert_eq!(info.len(), 2, "rejoin must not duplicate the slot");
+    let phoenix = info.iter().find(|w| w.name == "phoenix").unwrap();
+    assert_eq!(phoenix.id, phoenix_id);
+    assert!(phoenix.alive);
+
+    // … and the rejoined worker takes dispatched work again
+    let plan = mds_plan(10, 44);
+    let out = server.serve_plan(&plan, 1.0, Some(&vec![0.1; 10])).unwrap();
+    assert_eq!(out.outcome.received, 10);
+    assert_eq!(out.missing(), 0);
+    let phoenix = server
+        .worker_info()
+        .into_iter()
+        .find(|w| w.name == "phoenix")
+        .unwrap();
+    assert!(phoenix.jobs_done > 0, "rejoined worker must get work");
+
+    server.shutdown();
+    assert!(stayer.join().unwrap().clean_shutdown);
+    assert!(rejoin.join().unwrap().clean_shutdown);
+}
+
+// ---------------------------------------------------------------------
+// maintenance-interleaving regression
+
+fn streamed_reports(maintain: bool) -> Vec<RunReport> {
+    let backend = ClusterBackend::loopback(
+        3,
+        ClusterConfig {
+            deadline: DeadlineMode::Virtual,
+            time_scale: 0.0,
+            cache_capacity: 0,
+            ..ClusterConfig::default()
+        },
+        WorkerConfig::default(),
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let pair = default_pair_classes(3);
+    let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+    let mut session = Session::builder()
+        .partitioning(part)
+        .code(CodeSpec::stacked(CodeKind::Mds))
+        .classes(cm)
+        .workers(12)
+        .latency(LatencyModel::exp(1.0))
+        // tight enough that some arrivals are late: the late/received
+        // split must also be invariant under maintenance
+        .deadline(0.9)
+        .score(true)
+        .seed(5)
+        .backend(backend)
+        .build()
+        .unwrap();
+    let mut mats = Pcg64::with_stream(5, 1);
+    let mut reports = Vec::new();
+    for req in 0..4u64 {
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        let handle = session.submit(Request::new(req, a, b)).unwrap();
+        if maintain {
+            // heartbeat while the request is in flight: must not evict
+            // anyone or swallow any frame
+            let m = session.maintain().unwrap();
+            assert!(m.evicted.is_empty(), "healthy pool evicted: {m:?}");
+        }
+        reports.push(session.wait(handle).unwrap());
+        if maintain {
+            session.maintain().unwrap();
+        }
+    }
+    session.shutdown().unwrap();
+    reports
+}
+
+/// Wall-mode result-drop regression through the public API: after a
+/// tight-deadline request, the paced workers' results are still in
+/// flight when `maintain()` runs its heartbeat. The heartbeat must
+/// buffer every frame it reads while waiting for acks (proving the
+/// workers alive), and the buffered backlog must not disturb the next
+/// request's accounting.
+#[test]
+fn maintain_buffers_straggler_frames_between_wall_requests() {
+    let backend = ClusterBackend::loopback(
+        2,
+        ClusterConfig {
+            deadline: DeadlineMode::Wall,
+            time_scale: 0.02,
+            late_drain: Duration::from_millis(1),
+            heartbeat_timeout: Duration::from_secs(5),
+            cache_capacity: 0,
+            ..ClusterConfig::default()
+        },
+        WorkerConfig {
+            name: "paced".to_string(),
+            // self-sampled pacing: 2.0 virtual × 0.02 = 40 ms per job
+            latency: Some(LatencyModel::Deterministic { t: 2.0 }),
+            time_scale: 0.02,
+            ..WorkerConfig::default()
+        },
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let pair = default_pair_classes(3);
+    let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+    let mut session = Session::builder()
+        .partitioning(part)
+        .code(CodeSpec::stacked(CodeKind::Mds))
+        .classes(cm)
+        .workers(12)
+        // 10 ms wall deadline: every 40 ms-paced result is in flight
+        // when the request returns
+        .deadline(0.5)
+        .score(true)
+        .seed(9)
+        .backend(backend)
+        .build()
+        .unwrap();
+    let mut mats = Pcg64::with_stream(9, 1);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+    let first = session.run(Request::new(0, a.clone(), b)).unwrap();
+    assert!(first.missing() > 0, "nothing can land in 10 ms: {first:?}");
+
+    let m = session.maintain().unwrap();
+    assert!(m.evicted.is_empty(), "paced workers are healthy: {m:?}");
+    assert!(
+        m.buffered_results > 0,
+        "in-flight result frames must be buffered, not dropped: {m:?}"
+    );
+
+    // a generous follow-up request drains the stale backlog quietly and
+    // decodes fully — the buffered frames poisoned nothing
+    let b2 = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+    let second = session.run(Request::new(0, a, b2).deadline(100.0)).unwrap();
+    assert_eq!(second.outcome.recovered, 9, "{second:?}");
+    assert_eq!(second.missing(), 0);
+    session.shutdown().unwrap();
+}
+
+/// The result-drop regression: a stream with `maintain()` interleaved
+/// (heartbeats racing the request pipeline) must produce bit-identical
+/// reports to an undisturbed run — no frame dropped, no count shifted.
+#[test]
+fn maintain_interleaved_stream_reports_bit_identically() {
+    let plain = streamed_reports(false);
+    let maintained = streamed_reports(true);
+    assert_eq!(plain.len(), maintained.len());
+    for (i, (x, y)) in plain.iter().zip(&maintained).enumerate() {
+        assert_eq!(x.outcome.received, y.outcome.received, "req {i}: received");
+        assert_eq!(x.late, y.late, "req {i}: late");
+        assert_eq!(x.dispatched, y.dispatched, "req {i}: dispatched");
+        assert_eq!(x.retries, y.retries, "req {i}: retries");
+        assert_eq!(x.corrupt, y.corrupt, "req {i}: corrupt");
+        assert_eq!(
+            x.outcome.recovered, y.outcome.recovered,
+            "req {i}: recovered"
+        );
+        assert_eq!(
+            x.outcome.c_hat.data(),
+            y.outcome.c_hat.data(),
+            "req {i}: c_hat bits"
+        );
+        assert_eq!(
+            x.outcome.loss.to_bits(),
+            y.outcome.loss.to_bits(),
+            "req {i}: loss bits"
+        );
+        assert_eq!(
+            x.progress.events(),
+            y.progress.events(),
+            "req {i}: progress stream"
+        );
+    }
+}
