@@ -154,7 +154,7 @@ fn loss_trace_reference(
     let space = UnknownSpace::for_code(part, spec.style);
     let mut st = DecodeState::new(space);
     let mut order: Vec<usize> = (0..arrivals.len()).collect();
-    order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+    order.sort_by(|&a, &b| arrivals[a].total_cmp(&arrivals[b]));
     let mut mask = vec![false; part.num_products()];
     let mut trace = vec![LossTracePoint {
         time: 0.0,
@@ -323,6 +323,7 @@ fn main() {
             slot: 0,
             attempt: 0,
             delay: 0.5,
+            compute_secs: 0.0,
             payload,
         });
         h.bench("cluster/wire: encode+decode 50x50 result frame", || {

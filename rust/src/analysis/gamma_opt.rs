@@ -100,6 +100,7 @@ pub fn optimize_gamma(
 mod tests {
     use super::*;
     use crate::latency::LatencyModel;
+    use crate::util::prop::{gen, prop_check, PropConfig};
 
     fn base() -> TheoremLoss {
         TheoremLoss {
@@ -136,6 +137,91 @@ mod tests {
             opt.gamma[0] > 0.40,
             "expected Γ₁ to grow, got {:?}",
             opt.gamma
+        );
+    }
+
+    /// Property: across random configurations (window count, class
+    /// sizes, energies, starting polynomial, deadline, strategy) the
+    /// optimizer's result always stays on the probability simplex and
+    /// never does worse than its starting point.
+    #[test]
+    fn prop_result_on_simplex_and_never_worse_than_start() {
+        prop_check(
+            "gamma_opt simplex + improvement",
+            PropConfig { cases: 16, ..Default::default() },
+            |rng, _case| {
+                let l = gen::usize_in(rng, 2, 3);
+                let th = TheoremLoss {
+                    u: gen::usize_in(rng, 2, 20),
+                    h: gen::usize_in(rng, 2, 40),
+                    q: gen::usize_in(rng, 2, 20),
+                    k: (0..l).map(|_| gen::usize_in(rng, 1, 3)).collect(),
+                    sigma2: (0..l).map(|_| gen::f64_in(rng, 0.01, 50.0)).collect(),
+                    gamma: gen::simplex(rng, l),
+                    workers: gen::usize_in(rng, 4, 16),
+                    latency: LatencyModel::exp(gen::f64_in(rng, 0.2, 3.0)),
+                    omega: gen::f64_in(rng, 0.2, 1.5),
+                    cxr_bound_factor: 1,
+                };
+                let strategy = if gen::usize_in(rng, 0, 1) == 0 {
+                    UepStrategy::Now
+                } else {
+                    UepStrategy::Ew
+                };
+                let t_star = gen::f64_in(rng, 0.1, 2.0);
+                let opt = optimize_gamma(&th, strategy, t_star, 3);
+                let sum: f64 = opt.gamma.iter().sum();
+                if (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("left the simplex: sum {sum}"));
+                }
+                if let Some(&g) = opt.gamma.iter().find(|&&g| g < -1e-12) {
+                    return Err(format!("negative probability {g}"));
+                }
+                if opt.loss > opt.initial_loss + 1e-9 {
+                    return Err(format!(
+                        "worse than start: {} > {} ({strategy:?}, t*={t_star})",
+                        opt.loss, opt.initial_loss
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Hand-computable 2-window instance: under NOW coding a window only
+    /// ever decodes its own class, and here class 1 carries zero energy
+    /// (σ² = 0) — so any mass spent on window 1 is provably wasted and
+    /// the unique optimum is Γ = (1, 0). The optimizer must find it from
+    /// a start that wastes most of its mass.
+    #[test]
+    fn recovers_known_two_window_optimum() {
+        let th = TheoremLoss {
+            u: 4,
+            h: 8,
+            q: 4,
+            k: vec![2, 2],
+            sigma2: vec![1.0, 0.0],
+            gamma: vec![0.2, 0.8],
+            workers: 12,
+            latency: LatencyModel::exp(1.0),
+            omega: 4.0 / 12.0,
+            cxr_bound_factor: 1,
+        };
+        let opt = optimize_gamma(&th, UepStrategy::Now, 0.8, 8);
+        assert!(
+            opt.gamma[0] > 0.999,
+            "optimum is Γ = (1, 0), got {:?}",
+            opt.gamma
+        );
+        assert!(opt.loss <= opt.initial_loss);
+        // and the found optimum matches the closed-form value: only
+        // class 0 contributes, with decode probability P[Bin(w, 1) ≥ 2]
+        // marginalized over arrivals
+        let best = th.with_gamma(vec![1.0, 0.0]).normalized_loss(UepStrategy::Now, 0.8);
+        assert!(
+            (opt.loss - best).abs() < 1e-5,
+            "found {} vs closed-form optimum {best}",
+            opt.loss
         );
     }
 

@@ -38,6 +38,48 @@ pub struct TheoremLoss {
 }
 
 impl TheoremLoss {
+    /// Assemble the Theorem 2/3 inputs from a *live* plan: partition
+    /// geometry, the importance classification actually in force, the
+    /// (estimated) per-class variance products, and a latency model —
+    /// typically one fitted from observed timings by a
+    /// [`crate::latency::LatencyEstimator`]. This is the bridge the
+    /// adaptive replanner ([`crate::api::Replanner`]) crosses from
+    /// telemetry to the `optimize_gamma` objective.
+    pub fn for_plan(
+        part: &crate::partition::Partitioning,
+        cm: &crate::partition::ClassMap,
+        sigma2: Vec<f64>,
+        gamma: Vec<f64>,
+        workers: usize,
+        latency: LatencyModel,
+        omega: f64,
+    ) -> TheoremLoss {
+        assert_eq!(sigma2.len(), cm.n_classes, "one σ² per class");
+        assert_eq!(gamma.len(), cm.n_classes, "one Γ per window");
+        TheoremLoss {
+            u: part.u,
+            h: part.h,
+            q: part.q,
+            k: cm.class_sizes(),
+            sigma2,
+            gamma,
+            workers,
+            latency,
+            omega,
+            cxr_bound_factor: match part.paradigm {
+                crate::partition::Paradigm::RowTimesCol => 1,
+                crate::partition::Paradigm::ColTimesRow => part.m,
+            },
+        }
+    }
+
+    /// The same configuration under a different window polynomial (the
+    /// shape `optimize_gamma` iterates over).
+    pub fn with_gamma(&self, gamma: Vec<f64>) -> TheoremLoss {
+        assert_eq!(gamma.len(), self.gamma.len(), "window count is fixed");
+        TheoremLoss { gamma, ..self.clone() }
+    }
+
     /// Eq. (19): probability that exactly `w` of `W` workers respond by
     /// time `t`.
     pub fn arrival_pmf(&self, w: usize, t: f64) -> f64 {

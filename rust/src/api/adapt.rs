@@ -1,0 +1,345 @@
+//! The adaptive planning loop: live timing telemetry → fitted latency
+//! model → window-polynomial re-optimization.
+//!
+//! The paper closes §VI noting the window selection distributions are
+//! chosen "arbitrarily" and "can be optimized to minimize the loss" —
+//! [`crate::analysis::optimize_gamma`] implements that optimization, but
+//! against an *assumed* [`LatencyModel`]. This module feeds it reality:
+//! a [`Replanner`] folds the per-job round-trip times every served
+//! request reports ([`super::RunReport::timings`]) into a
+//! [`FleetEstimator`], periodically fits the model the cluster is
+//! actually exhibiting, and re-runs the optimizer against it under the
+//! live importance classification. An adaptive [`super::Session`]
+//! (opt-in via [`super::SessionBuilder::adaptive`]) swaps the winning Γ
+//! into its code spec between requests and reports each decision as a
+//! [`ReplanEvent`] in the next request's [`super::Progress`] stream.
+//!
+//! The optimizer consumes the *fleet-wide* fit: the Theorem 2/3 loss
+//! formulas model i.i.d. workers, and the pooled per-job sample already
+//! reflects a heterogeneous fleet's mixture. The per-worker scale
+//! offsets the [`FleetEstimator`] also maintains are operator telemetry
+//! ([`super::Session::worker_scales`]) — shedding load from individual
+//! stragglers is the cluster dispatcher's job, which keys on the same
+//! EWMA server-side.
+//!
+//! Determinism: a replan decision is a pure function of the observed
+//! timing stream, so `Virtual`-time sessions replan bit-identically
+//! across runs and thread counts.
+
+use crate::analysis::{optimize_gamma, GammaOpt, TheoremLoss, UepStrategy};
+use crate::latency::{FleetEstimator, LatencyModel};
+use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
+
+/// When and how an adaptive session re-optimizes its plan.
+#[derive(Clone, Debug)]
+pub struct ReplanPolicy {
+    /// Re-optimize after every `every` completed requests (≥ 1).
+    pub every: usize,
+    /// Do not fit before this many timing samples have been observed
+    /// (an early fit over two or three arrivals is noise).
+    pub min_samples: u64,
+    /// Optimizer sweeps per replan (see
+    /// [`crate::analysis::optimize_gamma`]; the objective is
+    /// low-dimensional, a handful suffices).
+    pub sweeps: usize,
+    /// Deadline the window polynomial is optimized for; `None` uses the
+    /// session's default deadline.
+    pub t_star: Option<f64>,
+    /// Also re-classify pinned importance classes from the next
+    /// request's actual block norms (sessions with auto classes already
+    /// re-classify per request). A changed class map purges the encode
+    /// cache — an unchanged one leaves it untouched.
+    pub reband: bool,
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy {
+            every: 4,
+            min_samples: 8,
+            sweeps: 4,
+            t_star: None,
+            reband: false,
+        }
+    }
+}
+
+impl ReplanPolicy {
+    /// Policy that replans after every `every` completed requests.
+    pub fn every(every: usize) -> ReplanPolicy {
+        ReplanPolicy { every: every.max(1), ..ReplanPolicy::default() }
+    }
+}
+
+/// One replan decision, surfaced in the progress stream of the first
+/// request served under the new plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplanEvent {
+    /// Completed requests when the decision was taken.
+    pub after_requests: usize,
+    /// Timing samples the fit was based on.
+    pub samples: u64,
+    /// The fitted latency model that drove the decision.
+    pub model: LatencyModel,
+    pub gamma_before: Vec<f64>,
+    pub gamma_after: Vec<f64>,
+    /// Predicted normalized loss at the target deadline under the old /
+    /// new window polynomial (Theorem 2/3 under the fitted model).
+    pub predicted_before: f64,
+    pub predicted_after: f64,
+    /// Whether re-banding changed the importance-class assignment (and
+    /// therefore purged the encode cache).
+    pub classes_changed: bool,
+}
+
+/// The stateful half of the adaptive loop: telemetry in, re-optimized
+/// window polynomials out. Owned by an adaptive [`super::Session`]; also
+/// usable standalone by anything that holds
+/// [`crate::cluster::JobTiming`] records.
+pub struct Replanner {
+    policy: ReplanPolicy,
+    strategy: UepStrategy,
+    fleet: FleetEstimator,
+    completed: usize,
+    since_replan: usize,
+    replans: usize,
+}
+
+impl Replanner {
+    /// `strategy` follows the session's code kind (NOW vs EW); `omega`
+    /// is the Ω the observed delays are scaled by.
+    pub fn new(policy: ReplanPolicy, strategy: UepStrategy, omega: f64) -> Replanner {
+        Replanner {
+            policy,
+            strategy,
+            fleet: FleetEstimator::new(omega),
+            completed: 0,
+            since_replan: 0,
+            replans: 0,
+        }
+    }
+
+    /// Fold in one per-job timing record (late results are completion
+    /// times too — stragglers are exactly the signal). `Wall`-mode
+    /// streams never see post-grace stragglers, so their fit is
+    /// right-censored; `Virtual` streams observe everything.
+    pub fn observe_timing(&mut self, worker: u64, delay: f64) {
+        self.fleet.observe(worker, delay);
+    }
+
+    /// Absorb a registry straggle snapshot
+    /// (see [`super::Maintenance::straggle`]).
+    pub fn observe_straggle(&mut self, snapshot: &[(u64, Option<f64>)]) {
+        self.fleet.absorb_straggle(snapshot);
+    }
+
+    /// Count one completed request toward the replan cadence.
+    pub fn note_completed(&mut self) {
+        self.completed += 1;
+        self.since_replan += 1;
+    }
+
+    /// Whether the next prepared request should replan first.
+    pub fn due(&self) -> bool {
+        self.since_replan >= self.policy.every.max(1)
+            && self.fleet.observations() >= self.policy.min_samples
+    }
+
+    pub fn policy(&self) -> &ReplanPolicy {
+        &self.policy
+    }
+
+    pub fn fleet(&self) -> &FleetEstimator {
+        &self.fleet
+    }
+
+    /// The latency model currently fitted to the observed timings.
+    pub fn fitted(&self) -> Option<LatencyModel> {
+        self.fleet.fleet().fit()
+    }
+
+    /// Replans performed so far.
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Requests observed so far.
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Run one replan: fit the model, rebuild the Theorem 2/3 objective
+    /// under the live classification and estimated per-class variances,
+    /// and re-optimize Γ for `t_star`. Returns `None` when no model can
+    /// be fitted yet. Resets the cadence either way.
+    pub fn replan(
+        &mut self,
+        part: &Partitioning,
+        cm: &ClassMap,
+        sigma2: Vec<f64>,
+        gamma: Vec<f64>,
+        workers: usize,
+        omega: f64,
+        t_star: f64,
+    ) -> Option<(LatencyModel, GammaOpt)> {
+        self.since_replan = 0;
+        let model = self.fitted()?;
+        let th = TheoremLoss::for_plan(
+            part,
+            cm,
+            sigma2,
+            gamma,
+            workers,
+            model.clone(),
+            omega,
+        );
+        let opt = optimize_gamma(&th, self.strategy, t_star, self.policy.sweeps);
+        self.replans += 1;
+        Some((model, opt))
+    }
+}
+
+/// Estimate the per-class variance products `σ²_{l,A}·σ²_{l,B}` from the
+/// operands' actual block norms: under Assumption 1,
+/// `E‖A_i‖²_F = numel·σ²_A`, so the per-entry mean square of each factor
+/// block estimates its variance and the class estimate averages the
+/// products over the class members. This is the "live importance
+/// classification" side of the replan objective — no reference product
+/// is computed.
+pub fn estimate_class_sigma2(
+    part: &Partitioning,
+    cm: &ClassMap,
+    a: &Matrix,
+    b: &Matrix,
+) -> Vec<f64> {
+    let a_norms: Vec<f64> = part.split_a(a).iter().map(|m| m.frob_sq()).collect();
+    let b_norms: Vec<f64> = part.split_b(b).iter().map(|m| m.frob_sq()).collect();
+    class_sigma2_from_norms(
+        part,
+        cm,
+        &a_norms,
+        &b_norms,
+        (a.rows() * a.cols() / a_norms.len()) as f64,
+        (b.rows() * b.cols() / b_norms.len()) as f64,
+    )
+}
+
+/// [`estimate_class_sigma2`] from already-computed per-block Frobenius
+/// norms (callers that also classify by norm split each operand once
+/// and feed both consumers). `a_numel`/`b_numel` are the entries per
+/// factor block — blocks of a side share a shape in both paradigms.
+pub fn class_sigma2_from_norms(
+    part: &Partitioning,
+    cm: &ClassMap,
+    a_norms: &[f64],
+    b_norms: &[f64],
+    a_numel: f64,
+    b_numel: f64,
+) -> Vec<f64> {
+    cm.members
+        .iter()
+        .map(|members| {
+            let sum: f64 = members
+                .iter()
+                .map(|&u| {
+                    let (ai, bi) = part.factors_of(u);
+                    (a_norms[ai] / a_numel) * (b_norms[bi] / b_numel)
+                })
+                .sum();
+            sum / members.len().max(1) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn cadence_waits_for_samples_and_resets_on_replan() {
+        let policy = ReplanPolicy { every: 2, min_samples: 4, ..Default::default() };
+        let mut rp = Replanner::new(policy, UepStrategy::Ew, 1.0);
+        rp.note_completed();
+        rp.note_completed();
+        assert!(!rp.due(), "no samples yet");
+        for w in 0..4u64 {
+            rp.observe_timing(w, 0.5 + w as f64 * 0.1);
+        }
+        assert!(rp.due());
+
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let pair = crate::partition::default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        let got = rp.replan(
+            &part,
+            &cm,
+            vec![40.0, 1.0, 0.07],
+            vec![0.4, 0.35, 0.25],
+            30,
+            0.3,
+            0.5,
+        );
+        assert!(got.is_some());
+        assert_eq!(rp.replans(), 1);
+        assert!(!rp.due(), "cadence must reset after a replan");
+    }
+
+    #[test]
+    fn replanning_under_a_slower_fitted_model_shifts_mass_to_window_zero() {
+        // Feed timings drawn from a much slower fleet than the paper's
+        // Exp(1): the fitted model should push the optimizer to protect
+        // the heavy class harder than Table III does.
+        let mut rp = Replanner::new(ReplanPolicy::every(1), UepStrategy::Ew, 0.3);
+        let slow = LatencyModel::exp(0.3);
+        let mut rng = Pcg64::seed_from(5);
+        for i in 0..400u64 {
+            rp.observe_timing(i % 30, slow.sample_scaled(0.3, &mut rng));
+        }
+        rp.note_completed();
+        assert!(rp.due());
+        let part = Partitioning::rxc(3, 3, 50, 150, 50);
+        let pair = crate::partition::default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        let (model, opt) = rp
+            .replan(
+                &part,
+                &cm,
+                vec![40.0, 1.0, 0.07],
+                vec![0.40, 0.35, 0.25],
+                30,
+                0.3,
+                0.5,
+            )
+            .unwrap();
+        match model {
+            LatencyModel::Exponential { lambda } => {
+                assert!((lambda - 0.3).abs() < 0.05, "fitted λ {lambda}")
+            }
+            other => panic!("expected an exponential fit, got {other:?}"),
+        }
+        assert!(opt.loss <= opt.initial_loss + 1e-12);
+        assert!(
+            opt.gamma[0] > 0.40,
+            "scarcer arrivals must favor window 0: {:?}",
+            opt.gamma
+        );
+    }
+
+    #[test]
+    fn sigma2_estimate_tracks_the_planted_level_variances() {
+        let spec = crate::config::SyntheticSpec::fig9_rxc().scaled(6);
+        let mut rng = Pcg64::seed_from(9);
+        let (a, b) = spec.sample_matrices(&mut rng);
+        let cm = spec.class_map();
+        let est = estimate_class_sigma2(&spec.part, &cm, &a, &b);
+        let truth = spec.class_sigma2(); // [40, 1, 0.07] per class merge
+        for (e, t) in est.iter().zip(truth.iter()) {
+            assert!(
+                (e / t - 1.0).abs() < 0.35,
+                "estimate {e} vs planted {t} (all: {est:?} vs {truth:?})"
+            );
+        }
+    }
+}

@@ -7,9 +7,9 @@
 //!   delays. The only *streaming* backend: each `poll` absorbs one
 //!   arrival, so a caller can consume `Ĉ(t)` anytime and `cancel` keeps
 //!   whatever has decoded so far.
-//! * [`PooledBackend`] — the in-process thread-pool path
-//!   (`run_service` semantics): loopback worker threads behind the
-//!   cluster wire protocol, deterministic virtual deadlines.
+//! * [`PooledBackend`] — the in-process thread-pool path: loopback
+//!   worker threads behind the cluster wire protocol, deterministic
+//!   virtual deadlines.
 //! * [`ClusterBackend`] — the networked path: any
 //!   [`ClusterServer`] (TCP workers in `Wall` mode, or loopback in
 //!   `Virtual` mode) with registry, heartbeat/eviction, and failover.
@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::{
     spawn_loopback_workers, ClusterConfig, ClusterServer, DeadlineMode, DecodeStep,
-    LoopbackTransport, WorkerConfig, WorkerInfo, WorkerStats,
+    JobTiming, LoopbackTransport, WorkerConfig, WorkerInfo, WorkerStats,
 };
 use crate::coding::DecodeState;
 use crate::coordinator::{assemble_outcome, score_outcome, Outcome};
@@ -83,6 +83,11 @@ pub struct Maintenance {
     /// is not mis-evicted — a stream interleaved with `maintain()`
     /// calls reports bit-identically to one without.
     pub buffered_results: usize,
+    /// Registry snapshot of each worker's EWMA straggle score
+    /// (`(worker id, score)`; `None` before a worker's first accepted
+    /// result). Networked backends only; the adaptive session feeds
+    /// this into its [`crate::latency::FleetEstimator`].
+    pub straggle: Vec<(u64, Option<f64>)>,
 }
 
 /// One execution path behind the unified client API.
@@ -158,6 +163,7 @@ impl<E: ExecEngine> InProcessBackend<E> {
 
     fn finalize(fl: InFlight) -> RunReport {
         let jobs = fl.prep.jobs();
+        let replayed = fl.next;
         let prep = fl.prep;
         // `late` means "completed past the deadline", which is knowable
         // up front from the delays; arrivals the stream never replayed
@@ -168,6 +174,28 @@ impl<E: ExecEngine> InProcessBackend<E> {
             .as_ref()
             .map(|d| d.iter().filter(|&&t| t > prep.t_max).count())
             .unwrap_or(0);
+        // timing telemetry mirrors the accounting above: one record per
+        // replayed arrival plus every knowable-late one, in absorption
+        // order; the virtual "worker" of slot s is s itself
+        let timings: Vec<JobTiming> = match prep.delays.as_ref() {
+            Some(delays) => fl
+                .order
+                .iter()
+                .enumerate()
+                .filter_map(|(idx, &slot)| {
+                    let is_late = delays[slot] > prep.t_max;
+                    (idx < replayed || is_late).then(|| JobTiming {
+                        slot: slot as u32,
+                        worker: slot as u64,
+                        attempt: 0,
+                        delay: delays[slot],
+                        compute_secs: 0.0,
+                        late: is_late,
+                    })
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         let outcome = match &prep.work {
             PreparedWork::Encoded { .. } => match &prep.score {
                 Some(s) => {
@@ -224,6 +252,7 @@ impl<E: ExecEngine> InProcessBackend<E> {
             wall: fl.start.elapsed(),
             cache_hit: prep.cache_hit,
             backend: "in-process",
+            timings,
             progress: fl.tracker.finish(),
         }
     }
@@ -264,7 +293,8 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
             PreparedWork::Encoded { enc, .. } => enc.space.clone(),
             PreparedWork::Blocks { space, .. } => space.clone(),
         };
-        let tracker = ProgressTracker::new(&prep.part, prep.score.as_ref());
+        let mut tracker = ProgressTracker::new(&prep.part, prep.score.as_ref());
+        tracker.seed_replans(&prep.replans);
         self.active.push(InFlight {
             prep,
             order,
@@ -422,8 +452,9 @@ impl ClusterCore {
     }
 
     fn serve(&mut self, prep: PreparedRequest) -> ApiResult<RunReport> {
-        let PreparedRequest { part, cm, t_max, delays, work, score, cache_hit, .. } =
-            prep;
+        let PreparedRequest {
+            part, cm, t_max, delays, work, score, cache_hit, replans, ..
+        } = prep;
         let (enc, wb) = match work {
             PreparedWork::Encoded { enc, wb } => (enc, wb),
             PreparedWork::Blocks { .. } => unreachable!("rejected at submit"),
@@ -451,6 +482,7 @@ impl ClusterCore {
         let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> =
             enc.wa.iter().cloned().zip(wb.into_iter().map(Arc::new)).collect();
         let mut tracker = ProgressTracker::new(&part, score.as_ref());
+        tracker.seed_replans(&replans);
         let served = {
             let mut obs = |step: DecodeStep| {
                 tracker.record(
@@ -485,6 +517,7 @@ impl ClusterCore {
             wall: served.wall,
             cache_hit,
             backend: self.name,
+            timings: served.timings,
             progress: tracker.finish(),
         })
     }
@@ -495,6 +528,12 @@ impl ClusterCore {
             evicted: hb.evicted,
             live_workers: Some(self.server.live_workers()),
             buffered_results: hb.buffered_results,
+            straggle: self
+                .server
+                .worker_info()
+                .iter()
+                .map(|w| (w.id, w.straggle))
+                .collect(),
         })
     }
 

@@ -1,10 +1,10 @@
 //! The unified client API: one front door to every execution path.
 //!
 //! Historically the crate exposed three incompatible entry points —
-//! `Coordinator::run` (in-process virtual time), `run_service`
-//! (thread-pool), and `ClusterServer` (networked) — each with its own
-//! config, outcome shape, and error conventions. This module is the
-//! single public surface that replaces them:
+//! `Coordinator::run` (in-process virtual time), the threaded service
+//! shim, and `ClusterServer` (networked) — each with its own config,
+//! outcome shape, and error conventions. This module is the single
+//! public surface that replaces them:
 //!
 //! * [`Backend`] — `submit` / `poll` / `cancel` plus [`Capabilities`]
 //!   flags, with [`InProcessBackend`], [`PooledBackend`], and
@@ -18,6 +18,11 @@
 //!   refinement (`recovered`, running loss, elapsed), so callers
 //!   consume `Ĉ(t)` as results trickle in rather than only the final
 //!   outcome;
+//! * [`Replanner`] / [`ReplanPolicy`] — the straggle-adaptive planning
+//!   loop ([`SessionBuilder::adaptive`]): per-job timing telemetry
+//!   ([`RunReport::timings`]) feeds a fitted latency model, which feeds
+//!   [`crate::analysis::optimize_gamma`], which re-tunes the window
+//!   polynomial between requests;
 //! * [`UepmmError`] — typed errors at the boundary (`anyhow` stays
 //!   internal).
 //!
@@ -58,12 +63,61 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! # Adaptive example
+//!
+//! The same stream with the adaptive planning loop switched on: the
+//! session observes every request's per-job timings, and once the
+//! policy's cadence is reached it fits a latency model to them and
+//! re-optimizes the EW window polynomial — the decision shows up as a
+//! replan event in the next request's progress stream.
+//!
+//! ```
+//! use uepmm::prelude::*;
+//! use uepmm::api::ReplanPolicy;
+//!
+//! # fn main() -> Result<(), UepmmError> {
+//! let mut rng = Pcg64::seed_from(2);
+//! let part = Partitioning::rxc(3, 3, 4, 5, 4);
+//! let pair = uepmm::partition::default_pair_classes(3);
+//! let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+//! let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+//!
+//! let mut session = Session::builder()
+//!     .partitioning(part)
+//!     .code(CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3())))
+//!     .classes(cm)
+//!     .workers(12)
+//!     .latency(LatencyModel::exp(1.0)) // the *assumed* model
+//!     .deadline(1.0)
+//!     .seed(7)
+//!     .adaptive(ReplanPolicy { every: 2, min_samples: 4, ..Default::default() })
+//!     .backend(InProcessBackend::serial())
+//!     .build()?;
+//!
+//! let mut replans = 0;
+//! for _ in 0..6 {
+//!     let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+//!     let report = session.run(Request::new(0, a.clone(), b))?;
+//!     replans += report.progress.replans().len();
+//! }
+//! assert!(replans >= 1, "the cadence must have triggered a replan");
+//! assert_eq!(session.replan_count(), replans);
+//! assert!(session.fitted_latency().is_some());
+//! # Ok(())
+//! # }
+//! ```
 
+mod adapt;
 mod backend;
 mod error;
 mod progress;
 mod session;
 
+pub use adapt::{
+    class_sigma2_from_norms, estimate_class_sigma2, ReplanEvent, ReplanPolicy,
+    Replanner,
+};
 pub use backend::{
     Backend, Capabilities, ClusterBackend, InProcessBackend, Maintenance,
     PollState, PooledBackend,

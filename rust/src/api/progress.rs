@@ -12,6 +12,7 @@
 
 use crate::partition::Partitioning;
 
+use super::adapt::ReplanEvent;
 use super::session::ScoreRef;
 
 /// One decode refinement inside a served request.
@@ -40,12 +41,21 @@ pub struct ProgressEvent {
 #[derive(Clone, Debug, Default)]
 pub struct Progress {
     events: Vec<ProgressEvent>,
+    replans: Vec<ReplanEvent>,
 }
 
 impl Progress {
     /// All events, in absorption order.
     pub fn events(&self) -> &[ProgressEvent] {
         &self.events
+    }
+
+    /// Replan decisions taken between the previous request and this one
+    /// (adaptive sessions only; see [`super::SessionBuilder::adaptive`]).
+    /// The plan this request was served under is the result of the last
+    /// event here.
+    pub fn replans(&self) -> &[ReplanEvent] {
+        &self.replans
     }
 
     pub fn len(&self) -> usize {
@@ -97,6 +107,7 @@ pub(crate) struct ProgressTracker {
     mask: Vec<bool>,
     loss: f64,
     events: Vec<ProgressEvent>,
+    replans: Vec<ReplanEvent>,
     reported: usize,
 }
 
@@ -114,8 +125,16 @@ impl ProgressTracker {
             mask: vec![false; k],
             loss,
             events: Vec::new(),
+            replans: Vec::new(),
             reported: 0,
         }
+    }
+
+    /// Attach the replan decisions this request was prepared under (the
+    /// session drains its pending events into the prepared request; the
+    /// backend seeds its tracker with them here).
+    pub(crate) fn seed_replans(&mut self, replans: &[ReplanEvent]) {
+        self.replans.extend_from_slice(replans);
     }
 
     /// Record one absorbed in-deadline arrival.
@@ -159,7 +178,7 @@ impl ProgressTracker {
     }
 
     pub(crate) fn finish(self) -> Progress {
-        Progress { events: self.events }
+        Progress { events: self.events, replans: self.replans }
     }
 }
 
@@ -183,13 +202,17 @@ mod tests {
     fn refinement_and_monotonicity_accessors() {
         let p = Progress {
             events: vec![ev(1, 1, 1, 0.8), ev(2, 1, 0, 0.8), ev(3, 3, 2, 0.1)],
+            replans: Vec::new(),
         };
         assert_eq!(p.len(), 3);
         assert_eq!(p.refinements(), 2);
         assert!(p.loss_non_increasing());
         assert_eq!(p.last().unwrap().recovered, 3);
 
-        let bad = Progress { events: vec![ev(1, 1, 1, 0.2), ev(2, 2, 1, 0.5)] };
+        let bad = Progress {
+            events: vec![ev(1, 1, 1, 0.2), ev(2, 2, 1, 0.5)],
+            replans: Vec::new(),
+        };
         assert!(!bad.loss_non_increasing());
     }
 
@@ -197,6 +220,7 @@ mod tests {
     fn unscored_streams_are_vacuously_monotone() {
         let p = Progress {
             events: vec![ev(1, 1, 1, f64::NAN), ev(2, 2, 1, f64::NAN)],
+            replans: Vec::new(),
         };
         assert!(p.loss_non_increasing());
         assert_eq!(p.refinements(), 2);

@@ -12,14 +12,16 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cluster::{CacheKey, CacheStats, EncodedBlockCache};
-use crate::coding::{CodeSpec, Packet, UnknownSpace};
+use crate::analysis::UepStrategy;
+use crate::cluster::{CacheKey, CacheStats, EncodedBlockCache, JobTiming};
+use crate::coding::{CodeKind, CodeSpec, Packet, UnknownSpace, WindowPolynomial};
 use crate::coordinator::{EncodedA, Outcome};
 use crate::latency::LatencyModel;
 use crate::linalg::Matrix;
 use crate::partition::{ClassMap, Partitioning};
 use crate::rng::Pcg64;
 
+use super::adapt::{class_sigma2_from_norms, ReplanEvent, ReplanPolicy, Replanner};
 use super::backend::{Backend, Maintenance, PollState};
 use super::error::{ApiResult, UepmmError};
 use super::progress::Progress;
@@ -36,11 +38,16 @@ pub struct Request {
     pub t_max: Option<f64>,
     /// Per-request scoring override (defaults to the session setting).
     pub score: Option<bool>,
+    /// Explicit virtual completion times, one per coded job — overrides
+    /// sampling from the session's latency model. This is how scenario
+    /// experiments inject *actual* (possibly drifting, heterogeneous)
+    /// straggle while the session plans under its assumed/fitted model.
+    pub delays: Option<Vec<f64>>,
 }
 
 impl Request {
     pub fn new(a_id: u64, a: Matrix, b: Matrix) -> Request {
-        Request { a_id, a, b, t_max: None, score: None }
+        Request { a_id, a, b, t_max: None, score: None, delays: None }
     }
 
     /// Override the session deadline for this request.
@@ -52,6 +59,13 @@ impl Request {
     /// Override the session's scoring setting for this request.
     pub fn scored(mut self, score: bool) -> Request {
         self.score = Some(score);
+        self
+    }
+
+    /// Inject explicit virtual completion times (one per coded job)
+    /// instead of sampling from the session's latency model.
+    pub fn delays(mut self, delays: Vec<f64>) -> Request {
+        self.delays = Some(delays);
         self
     }
 }
@@ -66,7 +80,7 @@ pub struct RequestHandle {
 /// The unified result of one served request, across every backend.
 ///
 /// This supersedes the per-path result shapes (`Outcome` alone from
-/// `Coordinator::run`, `ServiceOutcome` from `run_service`,
+/// `Coordinator::run`, the threaded service's `ServiceOutcome`,
 /// `ClusterOutcome` from `ClusterServer`): the decode [`Outcome`] plus
 /// the accounting every path shares, plus the anytime [`Progress`]
 /// stream.
@@ -93,6 +107,10 @@ pub struct RunReport {
     pub cache_hit: Option<bool>,
     /// Name of the backend that served the request.
     pub backend: &'static str,
+    /// Per-job round-trip telemetry (one record per classified result,
+    /// in-deadline or late, in absorption order) — the raw material of
+    /// the latency estimators behind [`super::SessionBuilder::adaptive`].
+    pub timings: Vec<JobTiming>,
     /// The recorded refinement stream (one event per absorbed
     /// in-deadline result).
     pub progress: Progress,
@@ -158,6 +176,9 @@ pub struct PreparedRequest {
     pub score: Option<ScoreRef>,
     /// Whether the `A`-side came out of the session cache.
     pub cache_hit: Option<bool>,
+    /// Replan decisions taken while preparing this request (adaptive
+    /// sessions; surfaced in the request's [`Progress`] stream).
+    pub replans: Vec<ReplanEvent>,
 }
 
 impl PreparedRequest {
@@ -212,6 +233,7 @@ pub struct SessionBuilder {
     compute: Compute,
     cache_capacity: usize,
     seed: u64,
+    adaptive: Option<ReplanPolicy>,
     backend: Option<Box<dyn Backend>>,
 }
 
@@ -229,6 +251,7 @@ impl SessionBuilder {
             compute: Compute::Honest,
             cache_capacity: 16,
             seed: 0,
+            adaptive: None,
             backend: None,
         }
     }
@@ -311,6 +334,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Opt into the straggle-adaptive planning loop: the session folds
+    /// every report's per-job timings into a latency estimator and,
+    /// on the policy's cadence, re-runs the window-polynomial optimizer
+    /// against the fitted model — swapping the re-optimized Γ into the
+    /// code spec between requests. Requires a NOW/EW UEP code (only they
+    /// carry a window polynomial). Each decision is surfaced as a
+    /// [`ReplanEvent`] in the next request's [`Progress`] stream; the
+    /// encode cache is purged only when re-banding actually changes the
+    /// class map (a Γ swap re-keys cache entries on its own).
+    pub fn adaptive(mut self, policy: ReplanPolicy) -> Self {
+        self.adaptive = Some(policy);
+        self
+    }
+
     /// The execution backend serving this session.
     pub fn backend(mut self, backend: impl Backend + 'static) -> Self {
         self.backend = Some(Box::new(backend));
@@ -366,6 +403,32 @@ impl SessionBuilder {
                 backend.name()
             )));
         }
+        let adaptive = match self.adaptive {
+            None => None,
+            Some(policy) => {
+                let strategy = match &spec.kind {
+                    CodeKind::NowUep(_) => UepStrategy::Now,
+                    CodeKind::EwUep(_) => UepStrategy::Ew,
+                    other => {
+                        return Err(UepmmError::Config(format!(
+                            "adaptive replanning optimizes a window polynomial; \
+                             code '{}' has none",
+                            other.name()
+                        )))
+                    }
+                };
+                let omega = match self.omega {
+                    OmegaMode::Auto => {
+                        crate::latency::omega(part.num_products(), workers)
+                    }
+                    OmegaMode::Fixed(w) => w,
+                };
+                Some(AdaptiveState {
+                    replanner: Replanner::new(policy, strategy, omega),
+                    pending: Vec::new(),
+                })
+            }
+        };
         Ok(Session {
             part,
             spec,
@@ -378,6 +441,7 @@ impl SessionBuilder {
             compute: self.compute,
             rng: Pcg64::seed_from(self.seed),
             cache: EncodedBlockCache::new(self.cache_capacity),
+            adaptive,
             backend,
             next_id: 1,
         })
@@ -393,6 +457,14 @@ fn validate_deadline(t_max: f64) -> ApiResult<()> {
     Ok(())
 }
 
+/// Session-side state of the adaptive planning loop: the [`Replanner`]
+/// plus the decisions not yet surfaced through a request's progress
+/// stream.
+struct AdaptiveState {
+    replanner: Replanner,
+    pending: Vec<ReplanEvent>,
+}
+
 /// One validated client plan bound to one backend. See module docs.
 pub struct Session {
     part: Partitioning,
@@ -406,6 +478,7 @@ pub struct Session {
     compute: Compute,
     rng: Pcg64,
     cache: EncodedBlockCache,
+    adaptive: Option<AdaptiveState>,
     backend: Box<dyn Backend>,
     next_id: u64,
 }
@@ -442,12 +515,65 @@ impl Session {
         self.cache.stats()
     }
 
+    /// The window polynomial currently in force (UEP codes only) — under
+    /// [`SessionBuilder::adaptive`] this is the latest re-optimized Γ.
+    pub fn current_gamma(&self) -> Option<&WindowPolynomial> {
+        match &self.spec.kind {
+            CodeKind::NowUep(g) | CodeKind::EwUep(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    /// The latency model currently fitted from observed timings
+    /// (adaptive sessions with enough samples; `None` otherwise).
+    pub fn fitted_latency(&self) -> Option<LatencyModel> {
+        self.adaptive.as_ref().and_then(|a| a.replanner.fitted())
+    }
+
+    /// Per-worker straggle scale offsets observed so far (`(worker id,
+    /// scale)`, 1.0 = fleet average), sorted by id. Operator telemetry:
+    /// the Γ objective itself uses the fleet-wide fit (Theorems 2/3
+    /// model i.i.d. workers), while the cluster's dispatch already
+    /// sheds load from high-EWMA workers server-side.
+    pub fn worker_scales(&self) -> Vec<(u64, f64)> {
+        self.adaptive
+            .as_ref()
+            .map_or_else(Vec::new, |a| a.replanner.fleet().scales())
+    }
+
+    /// Replans performed so far (0 for non-adaptive sessions).
+    pub fn replan_count(&self) -> usize {
+        self.adaptive.as_ref().map_or(0, |a| a.replanner.replans())
+    }
+
+    /// Fold one finished report's telemetry into the adaptive loop.
+    fn note_report(&mut self, report: &RunReport) {
+        if let Some(adapt) = self.adaptive.as_mut() {
+            for t in &report.timings {
+                adapt.replanner.observe_timing(t.worker, t.delay);
+            }
+            adapt.replanner.note_completed();
+        }
+    }
+
     /// Prepare and enqueue one request; returns immediately with a
     /// handle. Backends pipeline queued requests in submission order.
     pub fn submit(&mut self, req: Request) -> ApiResult<RequestHandle> {
-        let prep = self.prepare(req)?;
+        let mut prep = self.prepare(req)?;
+        // pending replan decisions ride on the first request the backend
+        // actually accepts; a failed prepare/submit leaves them pending
+        // so no decision ever goes unreported
+        if let Some(adapt) = self.adaptive.as_mut() {
+            prep.replans = std::mem::take(&mut adapt.pending);
+        }
         let id = prep.id;
-        self.backend.submit(prep)?;
+        let replans = prep.replans.clone();
+        if let Err(e) = self.backend.submit(prep) {
+            if let Some(adapt) = self.adaptive.as_mut() {
+                adapt.pending = replans;
+            }
+            return Err(e);
+        }
         Ok(RequestHandle { id })
     }
 
@@ -469,13 +595,17 @@ impl Session {
     /// since the last poll (streaming backends absorb one arrival per
     /// poll); `Ready` consumes the handle and yields the full report.
     pub fn poll(&mut self, h: RequestHandle) -> ApiResult<PollState> {
-        self.backend.poll(h.id)
+        let state = self.backend.poll(h.id)?;
+        if let PollState::Ready(report) = &state {
+            self.note_report(report);
+        }
+        Ok(state)
     }
 
     /// Drive the backend until the request completes.
     pub fn wait(&mut self, h: RequestHandle) -> ApiResult<RunReport> {
         loop {
-            match self.backend.poll(h.id)? {
+            match self.poll(h)? {
                 PollState::Ready(report) => return Ok(report),
                 PollState::Pending(_) => {}
             }
@@ -493,13 +623,22 @@ impl Session {
     /// carries that partial report; `None` means the request was
     /// dropped before any work happened (or the handle was unknown).
     pub fn cancel(&mut self, h: RequestHandle) -> ApiResult<Option<RunReport>> {
-        self.backend.cancel(h.id)
+        let report = self.backend.cancel(h.id)?;
+        if let Some(report) = &report {
+            self.note_report(report);
+        }
+        Ok(report)
     }
 
     /// Backend upkeep between requests: heartbeat/evict dead workers on
-    /// networked backends, a no-op elsewhere.
+    /// networked backends, a no-op elsewhere. Adaptive sessions also
+    /// absorb the registry's per-worker straggle snapshot here.
     pub fn maintain(&mut self) -> ApiResult<Maintenance> {
-        self.backend.maintain()
+        let m = self.backend.maintain()?;
+        if let Some(adapt) = self.adaptive.as_mut() {
+            adapt.replanner.observe_straggle(&m.straggle);
+        }
+        Ok(m)
     }
 
     /// Orderly teardown of the backend (graceful worker shutdown on
@@ -527,10 +666,28 @@ impl Session {
         }
         let t_max = req.t_max.unwrap_or(self.deadline);
         validate_deadline(t_max)?;
-        let cm = match &self.classes {
-            Classes::Pinned(cm) => cm.clone(),
-            Classes::Auto(s) => ClassMap::from_matrices(&self.part, &req.a, &req.b, *s),
+        // a due adaptive step needs per-block norms anyway: compute them
+        // once and share them between the auto classification and the
+        // replan (σ² estimate + optional re-banding)
+        let replan_due = self.adaptive.as_ref().map_or(false, |a| {
+            a.replanner.due() && a.replanner.fitted().is_some()
+        });
+        let shared_norms: Option<(Vec<f64>, Vec<f64>)> = replan_due.then(|| {
+            (
+                self.part.split_a(&req.a).iter().map(|m| m.frob_sq()).collect(),
+                self.part.split_b(&req.b).iter().map(|m| m.frob_sq()).collect(),
+            )
+        });
+        let mut cm = match (&self.classes, &shared_norms) {
+            (Classes::Pinned(cm), _) => cm.clone(),
+            (Classes::Auto(s), Some((a_norms, b_norms))) => {
+                ClassMap::from_norms(&self.part, a_norms, b_norms, *s)
+            }
+            (Classes::Auto(s), None) => {
+                ClassMap::from_matrices(&self.part, &req.a, &req.b, *s)
+            }
         };
+        self.maybe_replan(&req, &mut cm, shared_norms);
         let score = req.score.unwrap_or(self.score);
         let score_ref = if score {
             // one pass over the sub-products serves both references: the
@@ -620,15 +777,30 @@ impl Session {
             }
         };
         let omega = self.omega_value();
-        let delays = match self.latency.clone() {
-            Some(model) => {
-                let mut d = Vec::with_capacity(self.workers);
-                for _ in 0..self.workers {
-                    d.push(model.sample_scaled(omega, &mut self.rng));
+        // explicit per-request delays short-circuit model sampling (and
+        // consume no session randomness — an injected stream and a
+        // sampled stream are different RNG histories by design)
+        let delays = match &req.delays {
+            Some(d) => {
+                if d.len() != self.workers {
+                    return Err(UepmmError::Config(format!(
+                        "{} injected delays for {} coded jobs",
+                        d.len(),
+                        self.workers
+                    )));
                 }
-                Some(d)
+                Some(d.clone())
             }
-            None => None,
+            None => match self.latency.clone() {
+                Some(model) => {
+                    let mut d = Vec::with_capacity(self.workers);
+                    for _ in 0..self.workers {
+                        d.push(model.sample_scaled(omega, &mut self.rng));
+                    }
+                    Some(d)
+                }
+                None => None,
+            },
         };
         let id = self.next_id;
         self.next_id += 1;
@@ -641,6 +813,131 @@ impl Session {
             work,
             score: score_ref,
             cache_hit,
+            // pending replan decisions are attached by `submit`, once
+            // the backend is committed to serving this request
+            replans: Vec::new(),
         })
+    }
+
+    /// The adaptive step, run while preparing a request once the
+    /// replanner's cadence is due: optionally re-band pinned classes
+    /// from this request's actual block norms (purging the encode cache
+    /// only when the assignment really changed), then fit the latency
+    /// model from observed timings and re-optimize the window
+    /// polynomial against it. Decisions are buffered on the adaptive
+    /// state; `submit` attaches them to the first request the backend
+    /// accepts.
+    fn maybe_replan(
+        &mut self,
+        req: &Request,
+        cm: &mut ClassMap,
+        shared_norms: Option<(Vec<f64>, Vec<f64>)>,
+    ) {
+        let omega = self.omega_value();
+        let Some(adapt) = self.adaptive.as_mut() else {
+            return;
+        };
+        if adapt.replanner.due() {
+            // no fittable model (degenerate samples, or a policy with
+            // min_samples below the fit's own floor) ⇒ skip the whole
+            // step — leaving the cadence pending for the next prepare —
+            // rather than re-banding against a fit that will not come;
+            // every surfaced class change thus rides a ReplanEvent
+            if adapt.replanner.fitted().is_none() {
+                return;
+            }
+            // one split of each operand serves both the re-banding and
+            // the per-class σ² estimate (blocks of a side share a
+            // shape); `prepare` hands the norms down when the auto
+            // classification already computed them
+            let (a_norms, b_norms) = shared_norms.unwrap_or_else(|| {
+                (
+                    self.part.split_a(&req.a).iter().map(|m| m.frob_sq()).collect(),
+                    self.part.split_b(&req.b).iter().map(|m| m.frob_sq()).collect(),
+                )
+            });
+            let mut classes_changed = false;
+            if adapt.replanner.policy().reband {
+                if let Classes::Pinned(pinned) = &self.classes {
+                    let fresh = ClassMap::from_norms(
+                        &self.part,
+                        &a_norms,
+                        &b_norms,
+                        pinned.s_levels,
+                    );
+                    if fresh.class_of != pinned.class_of {
+                        // entries keyed under the old class map can
+                        // never be hit again; an unchanged map keeps
+                        // the cache untouched
+                        self.cache.clear();
+                        classes_changed = true;
+                        *cm = fresh.clone();
+                        self.classes = Classes::Pinned(fresh);
+                    }
+                }
+            }
+            let gamma_now: Vec<f64> = match &self.spec.kind {
+                CodeKind::NowUep(g) | CodeKind::EwUep(g) => {
+                    g.resized(cm.n_classes).probs().to_vec()
+                }
+                _ => unreachable!("adaptive sessions are validated UEP at build"),
+            };
+            let sigma2 = class_sigma2_from_norms(
+                &self.part,
+                cm,
+                &a_norms,
+                &b_norms,
+                (req.a.rows() * req.a.cols() / a_norms.len()) as f64,
+                (req.b.rows() * req.b.cols() / b_norms.len()) as f64,
+            );
+            // optimize for the deadline this stream actually runs under:
+            // an explicit policy t* wins, then the request's own
+            // deadline override, then the session default
+            let t_star = adapt
+                .replanner
+                .policy()
+                .t_star
+                .unwrap_or_else(|| req.t_max.unwrap_or(self.deadline));
+            let samples = adapt.replanner.fleet().observations();
+            let after_requests = adapt.replanner.completed();
+            if let Some((model, opt)) = adapt.replanner.replan(
+                &self.part,
+                cm,
+                sigma2,
+                gamma_now.clone(),
+                self.workers,
+                omega,
+                t_star,
+            ) {
+                let improved = opt.loss + 1e-12 < opt.initial_loss;
+                if improved {
+                    // the optimizer's mass transfers can leave an edge
+                    // weight a few ulp below zero; clamp rather than
+                    // trip WindowPolynomial's non-negativity assert
+                    let clamped: Vec<f64> =
+                        opt.gamma.iter().map(|g| g.max(0.0)).collect();
+                    let wp = WindowPolynomial::new(&clamped);
+                    self.spec.kind = match &self.spec.kind {
+                        CodeKind::NowUep(_) => CodeKind::NowUep(wp),
+                        CodeKind::EwUep(_) => CodeKind::EwUep(wp),
+                        _ => unreachable!("validated at build"),
+                    };
+                }
+                adapt.pending.push(ReplanEvent {
+                    after_requests,
+                    samples,
+                    model,
+                    gamma_after: if improved {
+                        opt.gamma.clone()
+                    } else {
+                        gamma_now.clone()
+                    },
+                    gamma_before: gamma_now,
+                    predicted_before: opt.initial_loss,
+                    predicted_after: if improved { opt.loss } else { opt.initial_loss },
+                    classes_changed,
+                });
+            }
+        }
     }
 }

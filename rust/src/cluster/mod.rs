@@ -1,11 +1,11 @@
 //! The networked coordinator/worker runtime: the paper's protocol
 //! (Fig. 2) across process and socket boundaries.
 //!
-//! The virtual-time simulator ([`crate::sim`]) and the threaded service
-//! ([`crate::coordinator::run_service`]) model stragglers; this
-//! subsystem *has* them: workers are separate agents behind a
-//! transport, results arrive when they arrive, connections drop, and
-//! the coordinator decodes whatever made it by the deadline.
+//! The virtual-time simulator ([`crate::sim`]) and the in-process
+//! backends of [`crate::api`] model stragglers; this subsystem *has*
+//! them: workers are separate agents behind a transport, results arrive
+//! when they arrive, connections drop, and the coordinator decodes
+//! whatever made it by the deadline.
 //!
 //! Layers:
 //! * [`wire`] — length-prefixed binary frames (versioned header, f64
@@ -71,7 +71,8 @@ pub mod worker;
 pub use cache::{CacheKey, CacheStats, EncodedBlockCache};
 pub use server::{
     ClusterConfig, ClusterOutcome, ClusterServer, CodingConfig, DeadlineMode,
-    DecodeStep, HeartbeatReport, MatmulRequest, ServedDecode, WorkerInfo,
+    DecodeStep, HeartbeatReport, JobTiming, MatmulRequest, ServedDecode,
+    WorkerInfo,
 };
 pub use transport::{
     loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,

@@ -297,6 +297,28 @@ pub struct DecodeStep {
     pub newly: Vec<usize>,
 }
 
+/// Per-job round-trip record of one served request — the raw material
+/// of the latency estimators ([`crate::latency::LatencyEstimator`],
+/// [`crate::latency::FleetEstimator`]). One record per classified
+/// result frame, in-deadline or late, in absorption order (deterministic
+/// in `Virtual` mode).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobTiming {
+    /// Job slot the result settled.
+    pub slot: u32,
+    /// Registry id of the worker that delivered it (in-process backends
+    /// use the slot index — one virtual worker per job).
+    pub worker: u64,
+    /// Dispatch attempt that produced the result.
+    pub attempt: u32,
+    /// Reported virtual completion time (same units as `T_max`).
+    pub delay: f64,
+    /// Worker-measured wall compute seconds (0 where not measured).
+    pub compute_secs: f64,
+    /// Whether the result missed the request deadline.
+    pub late: bool,
+}
+
 /// Raw dispatch/collect/decode result of one served job set, before
 /// assembly and scoring. The accounting invariant is
 /// `received + late + written-off == dispatched` (written-off being the
@@ -318,6 +340,9 @@ pub struct ServedDecode {
     /// Per-slot send counts: `attempts[s]` is how many times slot `s`
     /// went out (1 = first dispatch only, 0 = never sent).
     pub attempts: Vec<u32>,
+    /// Per-job round-trip telemetry, in absorption order (one record per
+    /// classified result, including late ones).
+    pub timings: Vec<JobTiming>,
     pub wall: Duration,
 }
 
@@ -752,12 +777,14 @@ impl ClusterServer {
         let mut st = DecodeState::new(space.clone());
         let mut received = 0usize;
         let mut late = 0usize;
+        let mut timings: Vec<JobTiming> = Vec::new();
         match self.cfg.deadline {
             DeadlineMode::Virtual => {
                 // deterministic: gather everything, then absorb in
                 // (delay, slot) order and apply the virtual deadline
                 let hard = start + self.cfg.collect_timeout;
-                let mut results: Vec<ResultMsg> = Vec::with_capacity(ctx.outstanding);
+                let mut results: Vec<(u64, ResultMsg)> =
+                    Vec::with_capacity(ctx.outstanding);
                 loop {
                     retries += self.flush_requeue(
                         &mut ctx,
@@ -770,17 +797,26 @@ impl ClusterServer {
                         break;
                     }
                     let polled =
-                        self.poll_round(&mut ctx, &mut |r| results.push(r));
+                        self.poll_round(&mut ctx, &mut |w, r| results.push((w, r)));
                     if polled == 0 && ctx.requeue.is_empty() {
                         break; // nothing left that could deliver
                     }
                 }
                 results.sort_by(|x, y| {
-                    x.delay.total_cmp(&y.delay).then(x.slot.cmp(&y.slot))
+                    x.1.delay.total_cmp(&y.1.delay).then(x.1.slot.cmp(&y.1.slot))
                 });
-                for r in results {
+                for (worker, r) in results {
                     // accept_frame guarantees in-range, deduplicated slots
-                    if r.delay <= t_max {
+                    let is_late = r.delay > t_max;
+                    timings.push(JobTiming {
+                        slot: r.slot,
+                        worker,
+                        attempt: r.attempt,
+                        delay: r.delay,
+                        compute_secs: r.compute_secs,
+                        late: is_late,
+                    });
+                    if !is_late {
                         let newly =
                             st.add_packet(&packets[r.slot as usize], Some(r.payload));
                         received += 1;
@@ -819,7 +855,15 @@ impl ClusterServer {
                     if ctx.outstanding == 0 {
                         break; // write-offs may have settled the rest
                     }
-                    let polled = self.poll_round(&mut ctx, &mut |r| {
+                    let polled = self.poll_round(&mut ctx, &mut |worker, r| {
+                        timings.push(JobTiming {
+                            slot: r.slot,
+                            worker,
+                            attempt: r.attempt,
+                            delay: r.delay,
+                            compute_secs: r.compute_secs,
+                            late: false,
+                        });
                         let newly =
                             st.add_packet(&packets[r.slot as usize], Some(r.payload));
                         received += 1;
@@ -844,7 +888,17 @@ impl ClusterServer {
                 // not pollute the next request's collection
                 let grace = Instant::now() + self.cfg.late_drain;
                 while ctx.outstanding > 0 && Instant::now() < grace {
-                    let polled = self.poll_round(&mut ctx, &mut |_| late += 1);
+                    let polled = self.poll_round(&mut ctx, &mut |worker, r| {
+                        timings.push(JobTiming {
+                            slot: r.slot,
+                            worker,
+                            attempt: r.attempt,
+                            delay: r.delay,
+                            compute_secs: r.compute_secs,
+                            late: true,
+                        });
+                        late += 1;
+                    });
                     ctx.write_off_queued(); // deaths during the drain
                     if polled == 0 {
                         break;
@@ -860,6 +914,7 @@ impl ClusterServer {
             retries,
             corrupt: ctx.corrupt,
             attempts,
+            timings,
             wall: start.elapsed(),
         })
     }
@@ -971,13 +1026,14 @@ impl ClusterServer {
     /// heartbeat are real data even if the worker has since died), then
     /// read one frame from each live worker with work in flight. Worker
     /// deaths requeue their unresolved slots into `ctx.requeue` for the
-    /// caller's next [`Self::flush_requeue`]. Returns how many workers
-    /// were pollable — 0 with an empty requeue means nothing
-    /// outstanding can ever arrive.
+    /// caller's next [`Self::flush_requeue`]. Accepted results reach
+    /// `on_result` with the delivering worker's registry id (timing
+    /// attribution). Returns how many workers were pollable — 0 with an
+    /// empty requeue means nothing outstanding can ever arrive.
     fn poll_round(
         &mut self,
         ctx: &mut Collect,
-        on_result: &mut dyn FnMut(ResultMsg),
+        on_result: &mut dyn FnMut(u64, ResultMsg),
     ) -> usize {
         let mut pollable = 0;
         for wi in 0..self.workers.len() {
@@ -1016,7 +1072,7 @@ impl ClusterServer {
         wi: usize,
         r: ResultMsg,
         ctx: &mut Collect,
-        on_result: &mut dyn FnMut(ResultMsg),
+        on_result: &mut dyn FnMut(u64, ResultMsg),
     ) {
         if r.request_id != ctx.request_id {
             return; // straggler from an earlier request: drop
@@ -1043,7 +1099,7 @@ impl ClusterServer {
         w.in_flight.swap_remove(pos);
         w.jobs_done += 1;
         w.note_result_delay(r.delay);
-        on_result(r);
+        on_result(w.id, r);
     }
 
     /// Mark worker `wi` dead and requeue its unresolved in-flight slots.
@@ -1506,6 +1562,7 @@ mod tests {
                 slot: 0,
                 attempt: 0,
                 delay: 0.1,
+                compute_secs: 0.0,
                 payload: matmul(&wa, &wb),
             }))
             .unwrap();
@@ -1613,6 +1670,7 @@ mod tests {
                                 slot: job.slot,
                                 attempt,
                                 delay: job.injected_delay.unwrap_or(0.1),
+                                compute_secs: 0.0,
                                 payload: payload.clone(),
                             })
                         };
@@ -1674,6 +1732,7 @@ mod tests {
                             slot: 999, // far outside the packet set
                             attempt: job.attempt,
                             delay: 0.1,
+                            compute_secs: 0.0,
                             payload: matmul(&job.wa, &job.wb),
                         });
                         if conn.send(&r).is_err() {

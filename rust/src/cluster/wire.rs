@@ -8,7 +8,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "UEPW"
-//!      4     2  protocol version (currently 2)
+//!      4     2  protocol version (currently 3)
 //!      6     1  message type tag
 //!      7     1  reserved (0)
 //!      8     4  payload length in bytes
@@ -29,8 +29,10 @@ use crate::linalg::Matrix;
 pub const MAGIC: [u8; 4] = *b"UEPW";
 /// Protocol version carried in every frame header. Version 2 added the
 /// `attempt` counter to job and result frames (re-dispatch of jobs
-/// stranded on dead workers).
-pub const VERSION: u16 = 2;
+/// stranded on dead workers); version 3 added `compute_secs` timing
+/// telemetry to result frames (worker-measured wall compute time,
+/// feeding the coordinator's latency estimators).
+pub const VERSION: u16 = 3;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Hard ceiling on a single frame's payload (guards against a corrupt
@@ -88,6 +90,11 @@ pub struct ResultMsg {
     pub slot: u32,
     pub attempt: u32,
     pub delay: f64,
+    /// Wall seconds the worker spent on the matmul itself (protocol v3
+    /// timing telemetry): the straggle-free compute floor, which lets
+    /// the coordinator's latency estimators separate "slow because
+    /// straggling" from "slow because the job is big".
+    pub compute_secs: f64,
     pub payload: Matrix,
 }
 
@@ -267,7 +274,8 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
         Msg::Hello { agent } => 4 + agent.len(),
         // 8 request_id + 4 slot + 4 attempt + 9 option tag+f64 + 8 sleep
         Msg::Job(j) => 33 + matrix_wire_len(&j.wa) + matrix_wire_len(&j.wb),
-        Msg::Result(r) => 24 + matrix_wire_len(&r.payload),
+        // 8 request_id + 4 slot + 4 attempt + 8 delay + 8 compute_secs
+        Msg::Result(r) => 32 + matrix_wire_len(&r.payload),
         _ => 8,
     };
     let mut payload = Vec::with_capacity(capacity);
@@ -288,6 +296,7 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
             put_u32(&mut payload, r.slot);
             put_u32(&mut payload, r.attempt);
             put_f64(&mut payload, r.delay);
+            put_f64(&mut payload, r.compute_secs);
             put_matrix(&mut payload, &r.payload)?;
         }
         Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => {
@@ -434,6 +443,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
             slot: rd.u32()?,
             attempt: rd.u32()?,
             delay: rd.f64()?,
+            compute_secs: rd.f64()?,
             payload: rd.matrix()?,
         }),
         TAG_HEARTBEAT => Msg::Heartbeat { nonce: rd.u64()? },
@@ -493,6 +503,7 @@ mod tests {
                 slot: 3,
                 attempt: 1,
                 delay: 1.75,
+                compute_secs: 0.004,
                 payload: sample_matrix(5, 4, 5),
             }),
             Msg::Heartbeat { nonce: u64::MAX },
@@ -534,6 +545,7 @@ mod tests {
             slot: 0,
             attempt: 0,
             delay: 0.5,
+            compute_secs: 0.0,
             payload: sample_matrix(6, 3, 3),
         }))
         .unwrap();
@@ -630,6 +642,7 @@ mod tests {
             slot: 0,
             attempt: 0,
             delay: 0.0,
+            compute_secs: 0.0,
             payload: m,
         });
         let (back, _) = decode_frame(&encode(&msg).unwrap()).unwrap();

@@ -133,6 +133,9 @@ pub fn run_worker<E: ExecEngine>(
                     // attribute duplicates of a re-dispatched slot
                     attempt: job.attempt,
                     delay,
+                    // measured compute floor, separate from any modelled
+                    // straggle above — coordinator-side telemetry
+                    compute_secs: elapsed,
                     payload,
                 });
                 match conn.send(&reply) {

@@ -145,21 +145,16 @@ impl SyntheticSpec {
     /// loss formula for this spec.
     pub fn theorem(&self) -> TheoremLoss {
         let cm = self.class_map();
-        TheoremLoss {
-            u: self.part.u,
-            h: self.part.h,
-            q: self.part.q,
-            k: cm.class_sizes(),
-            sigma2: self.class_sigma2(),
-            gamma: self.gamma.resized(cm.n_classes).probs().to_vec(),
-            workers: self.workers,
-            latency: self.latency.clone(),
-            omega: self.omega(),
-            cxr_bound_factor: match self.part.paradigm {
-                Paradigm::RowTimesCol => 1,
-                Paradigm::ColTimesRow => self.part.m,
-            },
-        }
+        let gamma = self.gamma.resized(cm.n_classes).probs().to_vec();
+        TheoremLoss::for_plan(
+            &self.part,
+            &cm,
+            self.class_sigma2(),
+            gamma,
+            self.workers,
+            self.latency.clone(),
+            self.omega(),
+        )
     }
 }
 

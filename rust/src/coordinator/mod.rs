@@ -15,12 +15,11 @@
 //!   artifacts or native matmul), arrival times come from the straggler
 //!   simulator, and `Ĉ` is decoded from the payloads. The reference
 //!   semantics every other path is checked against.
-//! * [`run_service`] — *in-process threaded* path: worker agents run on
-//!   threads and stream results back over the cluster loopback
-//!   transport with seeded injected delays; a thin adapter over
-//!   [`crate::cluster::ClusterServer`] kept for its simple
-//!   one-call API. Deterministic: same plan + seed ⇒ bit-identical
-//!   outcome.
+//! * [`crate::api::PooledBackend`] — *in-process threaded* path: worker
+//!   agents run on threads and stream results back over the cluster
+//!   loopback transport with seeded injected delays, driven through a
+//!   [`crate::api::Session`]. Deterministic: same plan + seed ⇒
+//!   bit-identical outcome.
 //! * [`crate::cluster`] — *networked* path: `uepmm serve` coordinates
 //!   `uepmm worker` processes over TCP with the same wire protocol the
 //!   loopback path uses; straggling is a property of the transport and
@@ -80,7 +79,7 @@ impl<E: ExecEngine> Coordinator<E> {
     pub fn run(&self, plan: &Plan, arrivals: &[f64], t_max: f64) -> anyhow::Result<Outcome> {
         assert_eq!(arrivals.len(), plan.packets.len(), "one arrival per worker");
         let mut order: Vec<usize> = (0..arrivals.len()).collect();
-        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        order.sort_by(|&a, &b| arrivals[a].total_cmp(&arrivals[b]));
         let mut st = DecodeState::new(plan.space.clone());
         let mut received = 0;
         for &w in &order {

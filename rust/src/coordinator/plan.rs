@@ -12,8 +12,8 @@
 //! 2. **bind** — split the per-request `B` and build the right factors
 //!    `W_B` ([`build_job_b`]);
 //! 3. **dispatch** — hand `(W_A, W_B)` pairs to whatever executes them
-//!    (virtual-time [`super::Coordinator::run`], the threaded
-//!    [`super::run_service`], or a [`crate::cluster::ClusterServer`]).
+//!    (virtual-time [`super::Coordinator::run`], any
+//!    [`crate::api::Backend`], or a [`crate::cluster::ClusterServer`]).
 
 use std::sync::Arc;
 

@@ -4,6 +4,7 @@
 //! rendition of the figure plus a summary of the headline comparisons.
 
 mod ablation;
+mod adaptive;
 mod common;
 mod fig1;
 mod fig10;
@@ -45,6 +46,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "api-stream",
             "anytime client API: served loss vs deadline over a cached stream",
             stream::run,
+        ),
+        (
+            "adaptive",
+            "static-Γ vs adaptive-Γ served loss under drifting heterogeneous straggle",
+            adaptive::run,
         ),
     ]
 }

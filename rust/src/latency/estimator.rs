@@ -1,0 +1,406 @@
+//! Online latency estimation: fit a [`LatencyModel`] (and per-worker
+//! scale offsets) from observed job round-trip times.
+//!
+//! The planning formulas (Theorems 2/3, [`crate::analysis::TheoremLoss`])
+//! and the window-polynomial optimizer
+//! ([`crate::analysis::optimize_gamma`]) take a latency model as an
+//! *input*; until now that model was always assumed. The estimators here
+//! close the loop: every served request reports per-job completion times
+//! ([`crate::api::RunReport::timings`]), the estimator folds them into
+//! running moments, and [`LatencyEstimator::fit`] produces the
+//! maximum-moment-match model of the observed fleet — which the
+//! [`crate::api::Replanner`] then feeds back into `optimize_gamma`.
+//!
+//! Everything here is deterministic: fits are pure functions of the
+//! observed sample stream, so a `Virtual`-time run replans
+//! bit-identically across repetitions and thread counts.
+
+use std::collections::BTreeMap;
+
+use super::LatencyModel;
+
+/// Numerically stable running moments (Welford) plus extremes.
+#[derive(Clone, Debug)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for OnlineStats {
+    fn default() -> Self {
+        OnlineStats::new()
+    }
+}
+
+impl OnlineStats {
+    pub fn new() -> OnlineStats {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+
+    /// Fold one observation in. Non-finite or negative values are
+    /// ignored (a completion time is a duration).
+    pub fn push(&mut self, x: f64) {
+        if !x.is_finite() || x < 0.0 {
+            return;
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Unbiased sample variance (0 for fewer than two observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fits a [`LatencyModel`] to observed completion times by the method of
+/// moments, with a deterministic family-selection rule.
+///
+/// Observed delays are in *scaled* time (what workers report under the
+/// paper's Ω capacity scaling: `T' = T/Ω`); the estimator multiplies by
+/// `omega` internally so the fitted model lives in the same unscaled
+/// units as the assumed model it replaces — `fit()` composes directly
+/// with [`LatencyModel::cdf_scaled`] and
+/// [`crate::analysis::TheoremLoss`].
+#[derive(Clone, Debug)]
+pub struct LatencyEstimator {
+    omega: f64,
+    stats: OnlineStats,
+}
+
+impl LatencyEstimator {
+    /// `omega` is the Ω the observed delays were scaled by (use 1.0 for
+    /// raw unscaled observations).
+    pub fn new(omega: f64) -> LatencyEstimator {
+        assert!(omega > 0.0, "omega must be positive");
+        LatencyEstimator { omega, stats: OnlineStats::new() }
+    }
+
+    /// Fold one observed (scaled) completion time in.
+    pub fn observe(&mut self, scaled_delay: f64) {
+        self.stats.push(scaled_delay * self.omega);
+    }
+
+    /// Observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    /// Running stats over the *unscaled* observations.
+    pub fn stats(&self) -> &OnlineStats {
+        &self.stats
+    }
+
+    /// Method-of-moments fit over the observed sample, `None` until at
+    /// least two observations have landed. Family selection, in order:
+    ///
+    /// * coefficient of variation `cv < 0.05` → [`LatencyModel::Deterministic`]
+    ///   at the mean (no spread ⇒ no stragglers);
+    /// * sample support bounded away from zero (`min > 0.2·mean`) — only
+    ///   then are the shifted families honest, since both put zero mass
+    ///   below their onset:
+    ///   * `cv² > 1.5` → [`LatencyModel::Pareto`]
+    ///     (heavier-than-exponential tail; `α` from `cv² = 1/(α(α−2))`,
+    ///     `x_min` from the mean),
+    ///   * else → [`LatencyModel::ShiftedExponential`] (constant setup +
+    ///     exp tail: `shift = min`, `λ = 1/(mean−min)`);
+    /// * otherwise → [`LatencyModel::Exponential`] with `λ = 1/mean`
+    ///   (the paper's model — and the right mean-matching default for
+    ///   zero-supported heterogeneous mixtures, which must *not* be
+    ///   mistaken for a distribution that forbids early arrivals).
+    pub fn fit(&self) -> Option<LatencyModel> {
+        let s = &self.stats;
+        if s.count() < 2 {
+            return None;
+        }
+        let mean = s.mean();
+        if !(mean > 0.0) {
+            return None;
+        }
+        let sd = s.variance().sqrt();
+        let cv = sd / mean;
+        if cv < 0.05 {
+            return Some(LatencyModel::Deterministic { t: mean });
+        }
+        let cv2 = cv * cv;
+        if s.min() > 0.2 * mean && mean > s.min() {
+            if cv2 > 1.5 {
+                // Pareto(x_min, α): mean = αx/(α−1), var/mean² =
+                // 1/(α(α−2)) ⇒ α = 1 + sqrt(1 + 1/cv²), always > 2
+                let alpha = 1.0 + (1.0 + 1.0 / cv2).sqrt();
+                let x_min = mean * (alpha - 1.0) / alpha;
+                if alpha.is_finite() && x_min > 0.0 {
+                    return Some(LatencyModel::Pareto { x_min, alpha });
+                }
+            }
+            return Some(LatencyModel::ShiftedExponential {
+                shift: s.min(),
+                lambda: 1.0 / (mean - s.min()),
+            });
+        }
+        Some(LatencyModel::Exponential { lambda: 1.0 / mean })
+    }
+}
+
+/// Per-worker telemetry on top of a fleet-wide [`LatencyEstimator`]:
+/// running moments per worker id, exposed as multiplicative *scale
+/// offsets* against the fleet mean (1.0 = average, 3.0 = three times
+/// slower). `BTreeMap` keeps iteration order — and therefore any
+/// decision derived from a snapshot — deterministic.
+#[derive(Clone, Debug)]
+pub struct FleetEstimator {
+    fleet: LatencyEstimator,
+    per_worker: BTreeMap<u64, OnlineStats>,
+    /// Latest EWMA straggle score per worker, as reported by cluster
+    /// registry snapshots ([`crate::api::Maintenance::straggle`]) — an
+    /// alternative scale source when per-job attribution is unavailable.
+    ewma: BTreeMap<u64, f64>,
+}
+
+impl FleetEstimator {
+    pub fn new(omega: f64) -> FleetEstimator {
+        FleetEstimator {
+            fleet: LatencyEstimator::new(omega),
+            per_worker: BTreeMap::new(),
+            ewma: BTreeMap::new(),
+        }
+    }
+
+    /// Fold in one observed (scaled) completion time attributed to
+    /// `worker`.
+    pub fn observe(&mut self, worker: u64, scaled_delay: f64) {
+        self.fleet.observe(scaled_delay);
+        self.per_worker.entry(worker).or_default().push(scaled_delay);
+    }
+
+    /// Absorb a registry EWMA snapshot (`(worker id, straggle score)`).
+    pub fn absorb_straggle(&mut self, snapshot: &[(u64, Option<f64>)]) {
+        for &(id, s) in snapshot {
+            if let Some(s) = s {
+                self.ewma.insert(id, s);
+            }
+        }
+    }
+
+    /// The fleet-wide estimator (fit the common [`LatencyModel`] here).
+    pub fn fleet(&self) -> &LatencyEstimator {
+        &self.fleet
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.fleet.count()
+    }
+
+    /// Scale offset of `worker` against the fleet mean: per-job moments
+    /// when available, the EWMA snapshot otherwise, `None` when the
+    /// worker (or the fleet) has no history.
+    pub fn scale_of(&self, worker: u64) -> Option<f64> {
+        if let Some(st) = self.per_worker.get(&worker) {
+            let fleet_mean = self.fleet.stats().mean() / self.fleet.omega;
+            if st.count() > 0 && fleet_mean > 0.0 {
+                return Some(st.mean() / fleet_mean);
+            }
+        }
+        let s = *self.ewma.get(&worker)?;
+        let n = self.ewma.len();
+        let mean: f64 = self.ewma.values().sum::<f64>() / n as f64;
+        (mean > 0.0).then(|| s / mean)
+    }
+
+    /// All known scale offsets, sorted by worker id.
+    pub fn scales(&self) -> Vec<(u64, f64)> {
+        let mut ids: Vec<u64> =
+            self.per_worker.keys().chain(self.ewma.keys()).copied().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.into_iter()
+            .filter_map(|id| self.scale_of(id).map(|s| (id, s)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn feed(est: &mut LatencyEstimator, model: &LatencyModel, omega: f64, n: usize, seed: u64) {
+        let mut rng = Pcg64::seed_from(seed);
+        for _ in 0..n {
+            est.observe(model.sample_scaled(omega, &mut rng));
+        }
+    }
+
+    #[test]
+    fn online_stats_match_closed_form() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        // garbage is ignored, not absorbed
+        s.push(f64::NAN);
+        s.push(-1.0);
+        assert_eq!(s.count(), 4);
+    }
+
+    #[test]
+    fn recovers_exponential_rate_under_omega_scaling() {
+        let omega = 0.3;
+        let truth = LatencyModel::exp(0.4);
+        let mut est = LatencyEstimator::new(omega);
+        feed(&mut est, &truth, omega, 4000, 1);
+        match est.fit().unwrap() {
+            LatencyModel::Exponential { lambda } => {
+                assert!((lambda - 0.4).abs() < 0.03, "fitted λ = {lambda}")
+            }
+            other => panic!("expected exponential, fitted {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recovers_deterministic_and_shifted_families() {
+        let mut est = LatencyEstimator::new(1.0);
+        feed(&mut est, &LatencyModel::Deterministic { t: 0.7 }, 1.0, 50, 2);
+        assert_eq!(est.fit().unwrap(), LatencyModel::Deterministic { t: 0.7 });
+
+        let truth = LatencyModel::ShiftedExponential { shift: 2.0, lambda: 2.0 };
+        let mut est = LatencyEstimator::new(1.0);
+        feed(&mut est, &truth, 1.0, 4000, 3);
+        match est.fit().unwrap() {
+            LatencyModel::ShiftedExponential { shift, lambda } => {
+                assert!((shift - 2.0).abs() < 0.05, "shift {shift}");
+                assert!((lambda - 2.0).abs() < 0.2, "λ {lambda}");
+            }
+            other => panic!("expected shifted-exp, fitted {other:?}"),
+        }
+    }
+
+    #[test]
+    fn heavy_tails_fit_pareto() {
+        // α = 2.05 has cv² = 1/(α(α−2)) ≈ 9.8, far above the 1.5
+        // family boundary even though sample cv² of a heavy tail
+        // converges from below
+        let truth = LatencyModel::Pareto { x_min: 1.0, alpha: 2.05 };
+        let mut est = LatencyEstimator::new(1.0);
+        feed(&mut est, &truth, 1.0, 200_000, 4);
+        match est.fit().unwrap() {
+            LatencyModel::Pareto { x_min, alpha } => {
+                // moment fits on heavy tails are noisy; the point is the
+                // family and the right ballpark
+                assert!((alpha - 2.05).abs() < 0.5, "α {alpha}");
+                assert!((x_min - 1.0).abs() < 0.3, "x_min {x_min}");
+            }
+            other => panic!("expected pareto, fitted {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_supported_heterogeneous_mixtures_stay_exponential() {
+        // A fast/slow fleet mixture has a huge cv² but support down to
+        // zero: fitting a Pareto (zero mass below x_min) would predict
+        // no arrivals before the deadline at all. The support guard must
+        // route this to the mean-matching exponential instead.
+        let mut est = LatencyEstimator::new(1.0);
+        let mut rng = Pcg64::seed_from(11);
+        let fast = LatencyModel::exp(1.0);
+        let slow = LatencyModel::exp(0.05); // mean 20: extreme stragglers
+        for i in 0..6000 {
+            let m = if i % 3 == 0 { &slow } else { &fast };
+            est.observe(m.sample(&mut rng));
+        }
+        let true_mean = (2.0 * 1.0 + 20.0) / 3.0;
+        match est.fit().unwrap() {
+            LatencyModel::Exponential { lambda } => {
+                assert!(
+                    (1.0 / lambda - true_mean).abs() < 0.8,
+                    "mean-matched λ {lambda}"
+                )
+            }
+            other => panic!("mixture must fit exponential, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fit_is_deterministic_in_the_sample_stream() {
+        let truth = LatencyModel::exp(1.0);
+        let mut a = LatencyEstimator::new(0.5);
+        let mut b = LatencyEstimator::new(0.5);
+        feed(&mut a, &truth, 0.5, 500, 9);
+        feed(&mut b, &truth, 0.5, 500, 9);
+        assert_eq!(a.fit(), b.fit());
+    }
+
+    #[test]
+    fn too_few_samples_fit_nothing() {
+        let mut est = LatencyEstimator::new(1.0);
+        assert_eq!(est.fit(), None);
+        est.observe(1.0);
+        assert_eq!(est.fit(), None);
+        est.observe(2.0);
+        assert!(est.fit().is_some());
+    }
+
+    #[test]
+    fn fleet_scales_identify_the_straggler() {
+        let mut fleet = FleetEstimator::new(1.0);
+        let mut rng = Pcg64::seed_from(7);
+        let fast = LatencyModel::exp(2.0); // mean 0.5
+        let slow = LatencyModel::exp(0.5); // mean 2.0
+        for _ in 0..2000 {
+            fleet.observe(1, fast.sample(&mut rng));
+            fleet.observe(2, fast.sample(&mut rng));
+            fleet.observe(3, slow.sample(&mut rng));
+        }
+        let s1 = fleet.scale_of(1).unwrap();
+        let s3 = fleet.scale_of(3).unwrap();
+        assert!(s1 < 0.7, "fast worker scale {s1}");
+        assert!(s3 > 1.6, "slow worker scale {s3}");
+        assert_eq!(fleet.scales().len(), 3);
+        assert_eq!(fleet.scale_of(99), None);
+    }
+
+    #[test]
+    fn ewma_snapshots_back_fill_scales() {
+        let mut fleet = FleetEstimator::new(1.0);
+        fleet.absorb_straggle(&[(1, Some(0.5)), (2, Some(1.5)), (3, None)]);
+        assert!((fleet.scale_of(1).unwrap() - 0.5).abs() < 1e-12);
+        assert!((fleet.scale_of(2).unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(fleet.scale_of(3), None);
+    }
+}

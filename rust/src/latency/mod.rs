@@ -1,10 +1,15 @@
-//! Worker-latency models (paper §II eq. 8, Remark 1) and order-statistic
-//! analytics (§III-A eqs. 13–14).
+//! Worker-latency models (paper §II eq. 8, Remark 1), order-statistic
+//! analytics (§III-A eqs. 13–14), and online estimators that fit a model
+//! back from observed completion times ([`estimator`]).
 //!
 //! Worker completion times are i.i.d. `T_w ~ F`. For fair comparisons
 //! across coding schemes with different worker counts, the paper scales
 //! time as `F(Ω·t)` with `Ω = (#sub-products)/W` — total service capacity
 //! stays constant as `W` changes.
+
+pub mod estimator;
+
+pub use estimator::{FleetEstimator, LatencyEstimator, OnlineStats};
 
 use crate::rng::{Exponential, Pareto, Pcg64, Sample};
 
@@ -254,7 +259,7 @@ mod tests {
         let mut sum = 0.0;
         for _ in 0..trials {
             let mut ts: Vec<f64> = (0..w).map(|_| m.sample(&mut rng)).collect();
-            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ts.sort_by(|a, b| a.total_cmp(b));
             sum += ts[k - 1];
         }
         let mc = sum / trials as f64;

@@ -15,13 +15,16 @@
 //! * **[`api`] — the public front door.** One [`api::Session`] builder
 //!   and one [`api::Backend`] trait drive all three execution paths
 //!   (in-process virtual time, loopback thread pool, networked cluster)
-//!   with batched submission, an anytime [`api::Progress`] stream, and
-//!   typed [`api::UepmmError`]s. Start here; everything below is the
-//!   engine room.
+//!   with batched submission, an anytime [`api::Progress`] stream,
+//!   typed [`api::UepmmError`]s, and an opt-in straggle-adaptive
+//!   planning loop ([`api::SessionBuilder::adaptive`]): observed
+//!   per-job timings → fitted latency model → re-optimized window
+//!   polynomial. Start here; everything below is the engine room.
 //! * **Coding & analysis** — [`coding`] (packet generation, incremental
 //!   decode), [`partition`] (block splits, Gram-based loss),
-//!   [`latency`] (straggler models), [`analysis`] (Theorems 2/3,
-//!   decoding probabilities), [`sim`] (fast coefficient-only sweeps).
+//!   [`latency`] (straggler models + online estimators), [`analysis`]
+//!   (Theorems 2/3, decoding probabilities, the Γ optimizer), [`sim`]
+//!   (fast coefficient-only sweeps).
 //! * **Execution** — [`coordinator`] (plans, the virtual-time reference
 //!   path, the deprecated thread-pool shim), [`cluster`] (wire
 //!   protocol, transports, worker agents, the coordinator server the
@@ -58,8 +61,8 @@ pub mod prelude {
     pub use crate::api::{
         ApiResult, Backend, Capabilities, Classes, ClusterBackend, Compute,
         InProcessBackend, OmegaMode, PollState, PooledBackend, Progress,
-        ProgressEvent, Request, RequestHandle, RunReport, Session,
-        SessionBuilder, UepmmError,
+        ProgressEvent, ReplanEvent, ReplanPolicy, Request, RequestHandle,
+        RunReport, Session, SessionBuilder, UepmmError,
     };
     pub use crate::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
     pub use crate::latency::LatencyModel;

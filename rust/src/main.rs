@@ -17,7 +17,10 @@
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use uepmm::api::{ClusterBackend, InProcessBackend, Request, Session};
+use uepmm::api::{
+    ClusterBackend, InProcessBackend, ReplanPolicy, Request, RunReport, Session,
+    SessionBuilder,
+};
 use uepmm::cluster::{
     ClusterConfig, ClusterServer, DeadlineMode, TcpConn, TcpTransport, Transport,
     WorkerConfig,
@@ -178,6 +181,61 @@ impl TimingOpts {
     }
 }
 
+/// Straggle-adaptive planning flags (`matmul`, `serve`).
+struct AdaptiveOpts {
+    adaptive: bool,
+    replan_every: usize,
+}
+
+impl AdaptiveOpts {
+    fn declare(cmd: Command) -> Command {
+        cmd.flag(
+            "adaptive",
+            "fit a latency model from observed timings and re-optimize Γ \
+             (NOW/EW codes only)",
+        )
+        .opt("replan-every", "4", "completed requests between replans")
+    }
+
+    fn parse(a: &Args) -> anyhow::Result<AdaptiveOpts> {
+        Ok(AdaptiveOpts {
+            adaptive: a.get_bool("adaptive"),
+            replan_every: a.get("replan-every")?,
+        })
+    }
+
+    /// Attach the adaptive policy to a session builder when enabled.
+    fn apply(&self, builder: SessionBuilder) -> SessionBuilder {
+        if self.adaptive {
+            builder.adaptive(ReplanPolicy::every(self.replan_every))
+        } else {
+            builder
+        }
+    }
+
+    /// Print the replan events a request's progress stream carried.
+    fn print_replans(report: &RunReport) {
+        let fmt_gamma = |g: &[f64]| {
+            let parts: Vec<String> = g.iter().map(|x| format!("{x:.3}")).collect();
+            format!("[{}]", parts.join(", "))
+        };
+        for ev in report.progress.replans() {
+            println!(
+                "replan after {} requests ({} samples): fitted {}, \
+                 Γ {} → {}, predicted norm-loss {:.4} → {:.4}{}",
+                ev.after_requests,
+                ev.samples,
+                ev.model,
+                fmt_gamma(&ev.gamma_before),
+                fmt_gamma(&ev.gamma_after),
+                ev.predicted_before,
+                ev.predicted_after,
+                if ev.classes_changed { " (classes re-banded)" } else { "" },
+            );
+        }
+    }
+}
+
 /// Execution-engine flags (`matmul`, `worker`).
 struct EngineOpts {
     engine: String,
@@ -253,6 +311,7 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
         let c = CodedOpts::declare(c, "6");
         let c = TimingOpts::declare(c, "exp:1.0", "straggle model for the virtual arrivals");
         let c = EngineOpts::declare(c);
+        let c = AdaptiveOpts::declare(c);
         SharedOpts::declare(c, "1")
     };
     let a = cmd.parse(rest)?;
@@ -260,6 +319,7 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
     let coded = CodedOpts::parse(&a)?;
     let timing = TimingOpts::parse(&a)?;
     let engine = EngineOpts::parse(&a)?;
+    let adaptive = AdaptiveOpts::parse(&a)?;
     let base = match a.get_str("paradigm") {
         "rxc" => SyntheticSpec::fig9_rxc(),
         "cxr" => SyntheticSpec::fig9_cxr(),
@@ -269,7 +329,7 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
     let eng = engine.build()?;
     println!("engine: {}", eng.name());
 
-    let mut session = Session::builder()
+    let builder = Session::builder()
         .partitioning(spec.part.clone())
         .code(code)
         .classes(spec.class_map())
@@ -278,8 +338,8 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
         .deadline(coded.tmax[0])
         .score(true)
         .seed(shared.seed)
-        .backend(InProcessBackend::with_engine(eng))
-        .build()?;
+        .backend(InProcessBackend::with_engine(eng));
+    let mut session = adaptive.apply(builder).build()?;
 
     let mut mats = Pcg64::with_stream(shared.seed, 1);
     let (ma, mb) = spec.sample_matrices(&mut mats);
@@ -289,6 +349,7 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
     for &t_max in &coded.tmax {
         let report = session
             .run(Request::new(0, ma.clone(), mb.clone()).deadline(t_max))?;
+        AdaptiveOpts::print_replans(&report);
         if coded.tmax.len() == 1 {
             println!("anytime progress (one line per absorbed arrival):");
             for e in report.progress.events() {
@@ -312,6 +373,12 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
             report.outcome.normalized_loss
         );
     }
+    if let Some(model) = session.fitted_latency() {
+        println!(
+            "fitted latency model after the sweep: {model} ({} replan(s))",
+            session.replan_count()
+        );
+    }
     Ok(())
 }
 
@@ -330,12 +397,14 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             "exp:1.0",
             "injected straggle model for --loopback (exp:λ|det:t|sexp:s:λ|pareto:x:α)",
         );
+        let c = AdaptiveOpts::declare(c);
         SharedOpts::declare(c, "1")
     };
     let a = cmd.parse(rest)?;
     let shared = SharedOpts::parse(&a)?;
     let coded = CodedOpts::parse(&a)?;
     let timing = TimingOpts::parse(&a)?;
+    let adaptive = AdaptiveOpts::parse(&a)?;
     let loopback = a.get_bool("loopback");
     anyhow::ensure!(timing.time_scale > 0.0, "--time-scale must be > 0");
     let (spec, code) = coded.apply(SyntheticSpec::fig9_rxc())?;
@@ -401,6 +470,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             builder = builder.latency(model);
         }
     }
+    builder = adaptive.apply(builder);
     let mut session = builder.build()?;
     println!(
         "serving {requests} requests: {} coded jobs over {expected} workers, \
@@ -424,6 +494,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         let out = session.run(
             Request::new(a_id, a_mats[a_id as usize].clone(), b).deadline(t_max),
         )?;
+        AdaptiveOpts::print_replans(&out);
         println!(
             "request {req} (A#{a_id}, T_max={t_max}): {} arrivals ({} late, {} missing), \
              recovered {}/{}, {} retries, loss {:.4}, cache {}, {} refinements, wall {:?}",
@@ -472,6 +543,18 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         cache.hits, cache.misses, cache.evictions
     );
     println!("progress: refinements={refinements} monotone={monotone}");
+    if let Some(model) = session.fitted_latency() {
+        let scales: Vec<String> = session
+            .worker_scales()
+            .iter()
+            .map(|(id, s)| format!("w{id}:{s:.2}"))
+            .collect();
+        println!(
+            "adaptive: fitted {model}, {} replan(s), worker scales [{}]",
+            session.replan_count(),
+            scales.join(", "),
+        );
+    }
     // drain until every worker closes its side: a backlogged straggler
     // must read the queued Shutdown before this process exits
     session.shutdown()?;

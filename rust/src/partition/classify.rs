@@ -8,10 +8,16 @@ use crate::linalg::Matrix;
 /// Classify values into `s` importance levels by descending magnitude:
 /// index 0 = most important. Groups are as equal-sized as possible
 /// (paper §VII-C: "divided into three groups of (roughly) equal size").
+///
+/// The sort is total (`f64::total_cmp`), so non-finite norms cannot
+/// panic the production classification path: a NaN norm — e.g. a block
+/// containing NaN entries from an upstream numerical blow-up — orders
+/// above `+∞` and lands in the most-protected level, which is the
+/// conservative choice for data we cannot reason about.
 pub fn classify_by_norm(norms: &[f64], s: usize) -> Vec<usize> {
     assert!(s >= 1 && s <= norms.len(), "need 1 ≤ S ≤ #blocks");
     let mut order: Vec<usize> = (0..norms.len()).collect();
-    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    order.sort_by(|&i, &j| norms[j].total_cmp(&norms[i]));
     let mut classes = vec![0usize; norms.len()];
     let n = norms.len();
     for (rank, &idx) in order.iter().enumerate() {
@@ -131,8 +137,21 @@ impl ClassMap {
             part.split_a(a).iter().map(|m| m.frob_sq()).collect();
         let b_norms: Vec<f64> =
             part.split_b(b).iter().map(|m| m.frob_sq()).collect();
-        let a_level = classify_by_norm(&a_norms, s);
-        let b_level = classify_by_norm(&b_norms, s);
+        ClassMap::from_norms(part, &a_norms, &b_norms, s)
+    }
+
+    /// [`Self::from_matrices`] from already-computed per-block Frobenius
+    /// norms — the one home of the norm-classification recipe, shared by
+    /// callers that need the norms for other purposes too (the adaptive
+    /// session's σ² estimate and re-banding).
+    pub fn from_norms(
+        part: &Partitioning,
+        a_norms: &[f64],
+        b_norms: &[f64],
+        s: usize,
+    ) -> Self {
+        let a_level = classify_by_norm(a_norms, s);
+        let b_level = classify_by_norm(b_norms, s);
         let pair = default_pair_classes(s);
         ClassMap::from_levels(part, a_level, b_level, &pair)
     }
@@ -173,6 +192,22 @@ mod tests {
     fn classify_single_class() {
         let c = classify_by_norm(&[3.0, 2.0, 1.0], 1);
         assert_eq!(c, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn classify_survives_nan_norms_ranking_them_most_important() {
+        // Regression: the old partial_cmp(..).unwrap() sort panicked on
+        // any NaN norm. The total order must classify without panicking
+        // and put the NaN block in level 0 (above +∞).
+        let c = classify_by_norm(&[1.0, f64::NAN, 2.0, f64::INFINITY, 0.5, 3.0], 3);
+        assert_eq!(c.len(), 6);
+        assert_eq!(c[1], 0, "NaN ranks most important: {c:?}");
+        assert_eq!(c[3], 0, "+∞ ranks directly below NaN: {c:?}");
+        assert_eq!(c[4], 2, "the smallest finite norm ranks last: {c:?}");
+        // every level is populated with near-equal sizes
+        for lvl in 0..3 {
+            assert_eq!(c.iter().filter(|&&x| x == lvl).count(), 2, "{c:?}");
+        }
     }
 
     #[test]

@@ -188,7 +188,7 @@ mod tests {
         assert!(xs.iter().all(|&x| x >= 1.0));
         let median_analytic = 1.0 * 2f64.powf(1.0 / 2.0);
         let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let emp_median = sorted[xs.len() / 2];
         assert!((emp_median - median_analytic).abs() < 0.03);
     }

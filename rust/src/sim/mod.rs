@@ -48,7 +48,7 @@ impl StragglerSim {
             .enumerate()
             .map(|(w, t)| (t, w))
             .collect();
-        ev.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ev.sort_by(|a, b| a.0.total_cmp(&b.0));
         ev
     }
 

@@ -95,7 +95,7 @@ pub fn loss_trace_packets_scratch(
     scratch.order.extend(0..arrivals.len());
     scratch
         .order
-        .sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        .sort_by(|&a, &b| arrivals[a].total_cmp(&arrivals[b]));
     let k = part.num_products();
     scratch.mask.clear();
     scratch.mask.resize(k, false);
@@ -209,7 +209,7 @@ mod tests {
         let space = UnknownSpace::for_code(part, spec.style);
         let mut st = DecodeState::new(space);
         let mut order: Vec<usize> = (0..arrivals.len()).collect();
-        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        order.sort_by(|&a, &b| arrivals[a].total_cmp(&arrivals[b]));
         let mut mask = vec![false; part.num_products()];
         let mut trace = vec![LossTracePoint {
             time: 0.0,

@@ -80,7 +80,7 @@ impl Running {
 /// Sorts a copy; use [`quantile_sorted`] when data is already sorted.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     quantile_sorted(&v, q)
 }
 

@@ -67,6 +67,7 @@ fn killing_a_tcp_worker_mid_request_redispatches_all_its_slots() {
                         slot: job.slot,
                         attempt: job.attempt,
                         delay: job.injected_delay.unwrap_or(0.1),
+                        compute_secs: 0.0,
                         payload,
                     }))
                     .unwrap();
