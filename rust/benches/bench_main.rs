@@ -356,6 +356,26 @@ fn main() {
             assert!(hit);
             std::hint::black_box(enc.workers());
         });
+
+        // Freivalds result verification: the O(n²) per-result probe the
+        // coordinator runs on every arrival vs the O(n³) recompute it
+        // replaces (the gap is the price of turning verification on)
+        use std::sync::Arc;
+        use uepmm::coordinator::Verifier;
+        use uepmm::linalg::matmul;
+        let wa = Matrix::randn(50, 30, 0.0, 1.0, &mut r);
+        let wb = Matrix::randn(30, 50, 0.0, 1.0, &mut r);
+        let honest = matmul(&wa, &wb);
+        let jobs = vec![(Arc::new(wa.clone()), Arc::new(wb.clone()))];
+        let mut vr = Pcg64::seed_from(17);
+        let verifier = Verifier::new(&jobs, &mut vr);
+        h.bench("cluster/verify: Freivalds check 50x30x50 result", || {
+            assert!(verifier.check(0, &honest));
+        });
+        h.bench("cluster/verify: full recompute 50x30x50 (reference)", || {
+            let exact = matmul(&wa, &wb);
+            std::hint::black_box(honest.allclose(&exact, 1e-9));
+        });
     }
 
     // ---------------- unified client API (Session / Backend) -----------

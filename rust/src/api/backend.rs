@@ -88,6 +88,14 @@ pub struct Maintenance {
     /// result). Networked backends only; the adaptive session feeds
     /// this into its [`crate::latency::FleetEstimator`].
     pub straggle: Vec<(u64, Option<f64>)>,
+    /// Registry snapshot of per-worker Freivalds verification strikes
+    /// (`(worker id, strikes)`), workers with zero strikes included.
+    /// Networked backends only.
+    pub verify_failures: Vec<(u64, u32)>,
+    /// Workers currently quarantined (evicted for lying and barred from
+    /// rejoin until `ClusterServer::reset_quarantine`). Networked
+    /// backends only.
+    pub quarantined: Vec<u64>,
 }
 
 /// One execution path behind the unified client API.
@@ -249,6 +257,8 @@ impl<E: ExecEngine> InProcessBackend<E> {
             // in-process execution has no workers to lose or go rogue
             retries: 0,
             corrupt: 0,
+            verify_failures: 0,
+            quarantined: 0,
             wall: fl.start.elapsed(),
             cache_hit: prep.cache_hit,
             backend: "in-process",
@@ -508,12 +518,15 @@ impl ClusterCore {
             Some(s) => score_outcome(&part, &cm, &s.c_true, &served.st, served.received),
             None => assemble_outcome(&part, &cm, &served.st, served.received),
         };
+        let quarantined = self.server.quarantined_workers().len();
         Ok(RunReport {
             outcome,
             late: served.late,
             dispatched: served.dispatched,
             retries: served.retries,
             corrupt: served.corrupt,
+            verify_failures: served.verify_failures,
+            quarantined,
             wall: served.wall,
             cache_hit,
             backend: self.name,
@@ -524,16 +537,14 @@ impl ClusterCore {
 
     fn maintain(&mut self) -> ApiResult<Maintenance> {
         let hb = self.server.heartbeat();
+        let info = self.server.worker_info();
         Ok(Maintenance {
             evicted: hb.evicted,
             live_workers: Some(self.server.live_workers()),
             buffered_results: hb.buffered_results,
-            straggle: self
-                .server
-                .worker_info()
-                .iter()
-                .map(|w| (w.id, w.straggle))
-                .collect(),
+            straggle: info.iter().map(|w| (w.id, w.straggle)).collect(),
+            verify_failures: info.iter().map(|w| (w.id, w.verify_failures)).collect(),
+            quarantined: self.server.quarantined_workers(),
         })
     }
 

@@ -29,6 +29,9 @@ pub enum UepmmError {
     Deadline(String),
     /// Decoding or assembling `Ĉ` from the collected results failed.
     Decode(String),
+    /// Result integrity violated: a quarantined worker tried to rejoin,
+    /// or verification bookkeeping could not be honored.
+    Integrity(String),
 }
 
 impl UepmmError {
@@ -41,6 +44,7 @@ impl UepmmError {
             UepmmError::Transport(_) => "transport",
             UepmmError::Deadline(_) => "deadline",
             UepmmError::Decode(_) => "decode",
+            UepmmError::Integrity(_) => "integrity",
         }
     }
 
@@ -52,7 +56,8 @@ impl UepmmError {
             | UepmmError::Compute(m)
             | UepmmError::Transport(m)
             | UepmmError::Deadline(m)
-            | UepmmError::Decode(m) => m,
+            | UepmmError::Decode(m)
+            | UepmmError::Integrity(m) => m,
         }
     }
 }
@@ -75,6 +80,8 @@ pub(crate) fn classify_cluster_error(e: anyhow::Error) -> UepmmError {
         || msg.contains("time_scale")
     {
         UepmmError::Config(msg)
+    } else if msg.contains("quarantin") {
+        UepmmError::Integrity(msg)
     } else {
         UepmmError::Transport(msg)
     }
@@ -99,5 +106,14 @@ mod tests {
             "no live workers registered with the coordinator"
         ));
         assert!(matches!(tr, UepmmError::Transport(_)));
+    }
+
+    #[test]
+    fn quarantine_refusals_classify_as_integrity() {
+        let e = classify_cluster_error(anyhow::anyhow!(
+            "agent byz is quarantined (worker 3): rejoin refused until reset_quarantine"
+        ));
+        assert!(matches!(e, UepmmError::Integrity(_)));
+        assert_eq!(e.kind(), "integrity");
     }
 }

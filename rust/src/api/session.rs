@@ -98,8 +98,17 @@ pub struct RunReport {
     /// latency, not work: retried slots still land as `received`.
     pub retries: usize,
     /// Result frames naming a slot outside the request's job set (a
-    /// broken worker; the sender is evicted and its work re-dispatched).
+    /// broken worker; the sender is evicted and its work re-dispatched)
+    /// plus checksum-damaged frames (the sender keeps its slots; the
+    /// affected work requeues).
     pub corrupt: usize,
+    /// Arriving results that failed Freivalds verification (tampered or
+    /// miscomputed payloads); the slot requeues and the sender earns a
+    /// strike. Networked backends only — always 0 in-process.
+    pub verify_failures: usize,
+    /// Workers quarantined (struck out on verification) as of this
+    /// request's completion.
+    pub quarantined: usize,
     /// Wall time the request took end to end.
     pub wall: Duration,
     /// `Some(hit)` when served through the session's encoded-block

@@ -1,0 +1,506 @@
+//! Deterministic fault injection for the cluster wire: wrap any
+//! [`Connection`] (or a whole [`Transport`]) in a chaos layer driven by
+//! a seeded [`FaultPlan`], and every fault mode — dropped, bit-flipped,
+//! duplicated, delayed, reordered frames, a scripted hang, and
+//! Byzantine payload tampering — becomes reproducible in-process and
+//! over TCP.
+//!
+//! Design rules:
+//!
+//! * **Send-side injection.** Faults hit frames as they leave the
+//!   wrapped peer (the usual deployment: a worker on a bad link). The
+//!   receive path passes through untouched, so one chaotic worker never
+//!   perturbs what the coordinator hears from the others.
+//! * **Data plane only.** [`Msg::Job`] and [`Msg::Result`] frames are
+//!   faultable; the control plane (`Hello`/`Welcome`/`Heartbeat`/
+//!   `HeartbeatAck`/`Shutdown`) is exempt, so a chaos run exercises the
+//!   *result-integrity* machinery rather than degenerating into
+//!   registration flakes.
+//! * **Corruption is detectable by construction.** Bit flips land at
+//!   byte indices `>= HEADER_LEN` (payload or CRC trailer), so a
+//!   damaged frame always surfaces as
+//!   [`super::wire::WireError::BadChecksum`] — never as a desynced
+//!   header that would force the peer to kill the connection.
+//! * **Tampering is *not* wire-detectable.** The lying-worker mode
+//!   perturbs a [`Msg::Result`] payload *before* encoding, so the frame
+//!   carries a valid checksum and only Freivalds verification
+//!   ([`crate::coordinator::Verifier`]) can catch it.
+//! * **Determinism.** Each connection draws from its own
+//!   [`crate::rng::Pcg64`] stream seeded from the plan, and fault rolls
+//!   are consumed in a fixed per-frame order — same plan, same traffic,
+//!   same faults.
+
+use std::str::FromStr;
+use std::time::Duration;
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+use super::transport::{Connection, Transport};
+use super::wire::{self, Msg, ResultMsg, WireError, HEADER_LEN};
+
+/// Seeded per-frame fault probabilities and scripted faults. Parse one
+/// from a `key=value,...` spec (the `uepmm worker --chaos` syntax):
+///
+/// ```
+/// use uepmm::cluster::FaultPlan;
+/// let plan: FaultPlan = "drop=0.05,corrupt=0.1,seed=7".parse().unwrap();
+/// assert_eq!(plan.drop, 0.05);
+/// assert_eq!(plan.corrupt, 0.1);
+/// assert_eq!(plan.seed, 7);
+/// ```
+///
+/// Keys: `drop`, `corrupt`, `dup`, `delay`, `reorder`, `tamper`
+/// (probabilities in `[0, 1]`), `delay-ms` (pause length), `seed`, and
+/// `hang` (swallow every data frame after the N-th).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed for every probabilistic roll.
+    pub seed: u64,
+    /// Probability a data frame is silently dropped.
+    pub drop: f64,
+    /// Probability a data frame gets one bit flipped in its payload or
+    /// checksum trailer (detected at the receiver as `BadChecksum`).
+    pub corrupt: f64,
+    /// Probability a data frame is sent twice.
+    pub duplicate: f64,
+    /// Probability the sender pauses [`FaultPlan::delay_ms`] before a
+    /// data frame goes out.
+    pub delay: f64,
+    /// Pause length for delay faults.
+    pub delay_ms: u64,
+    /// Probability a data frame is held back and sent *after* the next
+    /// one (pairwise reorder).
+    pub reorder: f64,
+    /// Probability a [`Msg::Result`] payload is perturbed before
+    /// encoding — the Byzantine worker. The frame is wire-perfect;
+    /// only Freivalds verification catches it.
+    pub tamper: f64,
+    /// Scripted hang: swallow every data frame after this many have
+    /// been offered for sending (`None` = never hang).
+    pub hang_after: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop: 0.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+            delay: 0.0,
+            delay_ms: 20,
+            reorder: 0.0,
+            tamper: 0.0,
+            hang_after: None,
+        }
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for item in s.split(',').filter(|t| !t.trim().is_empty()) {
+            let (key, value) = item
+                .split_once('=')
+                .ok_or_else(|| format!("chaos spec item '{item}' is not key=value"))?;
+            let key = key.trim();
+            let value = value.trim();
+            let prob = |slot: &mut f64| -> Result<(), String> {
+                let p: f64 = value
+                    .parse()
+                    .map_err(|_| format!("chaos {key}: '{value}' is not a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("chaos {key}: {p} is not in [0, 1]"));
+                }
+                *slot = p;
+                Ok(())
+            };
+            match key {
+                "drop" => prob(&mut plan.drop)?,
+                "corrupt" => prob(&mut plan.corrupt)?,
+                "dup" => prob(&mut plan.duplicate)?,
+                "delay" => prob(&mut plan.delay)?,
+                "reorder" => prob(&mut plan.reorder)?,
+                "tamper" => prob(&mut plan.tamper)?,
+                "delay-ms" => {
+                    plan.delay_ms = value.parse().map_err(|_| {
+                        format!("chaos delay-ms: '{value}' is not an integer")
+                    })?;
+                }
+                "seed" => {
+                    plan.seed = value.parse().map_err(|_| {
+                        format!("chaos seed: '{value}' is not an integer")
+                    })?;
+                }
+                "hang" => {
+                    plan.hang_after = Some(value.parse().map_err(|_| {
+                        format!("chaos hang: '{value}' is not an integer")
+                    })?);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown chaos key '{other}' (expected drop, corrupt, dup, \
+                         delay, delay-ms, reorder, tamper, seed, hang)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Only the data plane is faultable (see module docs).
+fn is_data(msg: &Msg) -> bool {
+    matches!(msg, Msg::Job(_) | Msg::Result(_))
+}
+
+/// A [`Connection`] whose *sends* pass through a seeded fault layer.
+pub struct ChaosConn {
+    inner: Box<dyn Connection>,
+    plan: FaultPlan,
+    rng: Pcg64,
+    /// A frame held back by a reorder fault, sent after the next one.
+    held: Option<Vec<u8>>,
+    /// Data frames offered for sending so far (the hang counter).
+    faulted: u64,
+}
+
+impl ChaosConn {
+    /// Wrap `inner`, seeding the fault RNG from the plan.
+    pub fn new(inner: Box<dyn Connection>, plan: &FaultPlan) -> ChaosConn {
+        ChaosConn {
+            inner,
+            plan: plan.clone(),
+            rng: Pcg64::seed_from(plan.seed),
+            held: None,
+            faulted: 0,
+        }
+    }
+
+    /// Wrap `inner` on an explicit RNG stream — a fleet of chaotic
+    /// workers from one plan gets independent fault sequences.
+    pub fn with_stream(
+        inner: Box<dyn Connection>,
+        plan: &FaultPlan,
+        stream: u64,
+    ) -> ChaosConn {
+        ChaosConn {
+            inner,
+            plan: plan.clone(),
+            rng: Pcg64::with_stream(plan.seed, stream),
+            held: None,
+            faulted: 0,
+        }
+    }
+
+    fn flush_held(&mut self) -> Result<(), WireError> {
+        if let Some(frame) = self.held.take() {
+            self.inner.send_frame(&frame)?;
+        }
+        Ok(())
+    }
+
+    /// Put one encoded data frame on the wire through the fault layer.
+    /// Roll order is fixed (drop, corrupt, delay, dup, reorder) so a
+    /// given seed produces the same fault sequence for the same traffic.
+    fn put(&mut self, mut frame: Vec<u8>) -> Result<(), WireError> {
+        if self.rng.bernoulli(self.plan.drop) {
+            return Ok(()); // vanished in flight
+        }
+        if self.rng.bernoulli(self.plan.corrupt) {
+            // flip one bit past the header: always a checksum miss at
+            // the receiver, never a desynced parse
+            let span = (frame.len() - HEADER_LEN) as u64;
+            let idx = HEADER_LEN + self.rng.next_bounded(span) as usize;
+            frame[idx] ^= 1 << self.rng.next_bounded(8);
+        }
+        if self.rng.bernoulli(self.plan.delay) {
+            std::thread::sleep(Duration::from_millis(self.plan.delay_ms));
+        }
+        let dup = self.rng.bernoulli(self.plan.duplicate);
+        if self.held.is_none() && self.rng.bernoulli(self.plan.reorder) {
+            self.held = Some(frame);
+            return Ok(()); // goes out after the next frame
+        }
+        self.inner.send_frame(&frame)?;
+        if dup {
+            self.inner.send_frame(&frame)?;
+        }
+        self.flush_held()
+    }
+}
+
+impl Connection for ChaosConn {
+    fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
+        if !is_data(msg) {
+            // control plane: anything reordered before it goes first
+            self.flush_held()?;
+            return self.inner.send(msg);
+        }
+        if let Some(n) = self.plan.hang_after {
+            if self.faulted >= n {
+                return Ok(()); // scripted hang: swallow silently
+            }
+        }
+        self.faulted += 1;
+        // Byzantine tamper happens before encoding: the frame checksums
+        // clean and only result verification can catch it
+        let tampered;
+        let msg = match msg {
+            Msg::Result(r) if self.rng.bernoulli(self.plan.tamper) => {
+                let mut data = r.payload.data().to_vec();
+                let idx = self.rng.next_bounded(data.len() as u64) as usize;
+                data[idx] += 1.0 + 0.5 * r.payload.max_abs();
+                tampered = Msg::Result(ResultMsg {
+                    payload: Matrix::from_vec(
+                        r.payload.rows(),
+                        r.payload.cols(),
+                        data,
+                    ),
+                    ..r.clone()
+                });
+                &tampered
+            }
+            _ => msg,
+        };
+        let frame = wire::encode(msg)?;
+        self.put(frame)
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        // pre-encoded frames bypass injection (the escape hatch is for
+        // tests that build their own damage)
+        self.inner.send_frame(frame)
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Msg>, WireError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn peer(&self) -> &str {
+        self.inner.peer()
+    }
+}
+
+/// A [`Transport`] that wraps every accepted connection in a
+/// [`ChaosConn`], each on its own RNG stream — coordinator-side chaos
+/// for soak tests that damage *outbound* job frames too.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    accepted: u64,
+}
+
+impl ChaosTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: &FaultPlan) -> ChaosTransport {
+        ChaosTransport { inner, plan: plan.clone(), accepted: 0 }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn accept_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Box<dyn Connection>>, WireError> {
+        match self.inner.accept_timeout(timeout)? {
+            Some(conn) => {
+                let stream = self.accepted;
+                self.accepted += 1;
+                Ok(Some(Box::new(ChaosConn::with_stream(
+                    conn,
+                    &self.plan,
+                    stream,
+                ))))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.inner.local_addr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::loopback_pair;
+    use crate::linalg::matmul;
+
+    fn result_msg(slot: u32) -> Msg {
+        let mut rng = Pcg64::seed_from(slot as u64 + 100);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 4, 0.0, 1.0, &mut rng);
+        Msg::Result(ResultMsg {
+            request_id: 1,
+            slot,
+            attempt: 0,
+            delay: 0.1,
+            compute_secs: 0.0,
+            payload: matmul(&a, &b),
+        })
+    }
+
+    fn chaos_pair(plan: FaultPlan) -> (ChaosConn, Box<dyn Connection>) {
+        let (a, b) = loopback_pair("chaos", "peer");
+        (ChaosConn::new(Box::new(a), &plan), Box::new(b))
+    }
+
+    const WAIT: Duration = Duration::from_millis(50);
+
+    #[test]
+    fn spec_parsing_round_trips_and_rejects_garbage() {
+        let plan: FaultPlan =
+            "drop=0.1,corrupt=0.2,dup=0.3,delay=0.4,delay-ms=5,reorder=0.5,\
+             tamper=1,seed=9,hang=3"
+                .parse()
+                .unwrap();
+        assert_eq!(plan.drop, 0.1);
+        assert_eq!(plan.corrupt, 0.2);
+        assert_eq!(plan.duplicate, 0.3);
+        assert_eq!(plan.delay, 0.4);
+        assert_eq!(plan.delay_ms, 5);
+        assert_eq!(plan.reorder, 0.5);
+        assert_eq!(plan.tamper, 1.0);
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.hang_after, Some(3));
+        assert_eq!("".parse::<FaultPlan>().unwrap(), FaultPlan::default());
+        assert!("drop=1.5".parse::<FaultPlan>().is_err(), "out-of-range prob");
+        assert!("drop".parse::<FaultPlan>().is_err(), "missing value");
+        assert!("explode=1".parse::<FaultPlan>().is_err(), "unknown key");
+        assert!("seed=x".parse::<FaultPlan>().is_err(), "non-integer seed");
+    }
+
+    #[test]
+    fn tampered_results_decode_cleanly_but_payloads_differ() {
+        let plan = FaultPlan { tamper: 1.0, seed: 3, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        let sent = result_msg(0);
+        chaos.send(&sent).unwrap();
+        // the frame is wire-perfect — it decodes without any error …
+        let got = peer.recv_timeout(Some(WAIT)).unwrap().unwrap();
+        let (Msg::Result(s), Msg::Result(g)) = (&sent, &got) else {
+            panic!("expected results");
+        };
+        assert_eq!(g.slot, s.slot);
+        // … but the payload is a lie
+        assert_ne!(g.payload.data(), s.payload.data());
+    }
+
+    #[test]
+    fn corrupted_frames_surface_as_bad_checksum() {
+        let plan = FaultPlan { corrupt: 1.0, seed: 4, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&result_msg(0)).unwrap();
+        assert!(matches!(
+            peer.recv_timeout(Some(WAIT)),
+            Err(WireError::BadChecksum { .. })
+        ));
+        // the connection survives: an intact follow-up still lands
+        let clean = FaultPlan::default();
+        let mut honest = ChaosConn { plan: clean, ..chaos };
+        honest.send(&result_msg(1)).unwrap();
+        let got = honest_recv(&mut peer);
+        assert!(matches!(got, Msg::Result(r) if r.slot == 1));
+    }
+
+    fn honest_recv(peer: &mut Box<dyn Connection>) -> Msg {
+        peer.recv_timeout(Some(WAIT)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn dropped_frames_never_arrive() {
+        let plan = FaultPlan { drop: 1.0, seed: 5, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&result_msg(0)).unwrap();
+        assert!(peer.recv_timeout(Some(WAIT)).unwrap().is_none());
+    }
+
+    #[test]
+    fn duplicated_frames_arrive_twice() {
+        let plan = FaultPlan { duplicate: 1.0, seed: 6, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&result_msg(0)).unwrap();
+        for _ in 0..2 {
+            assert!(matches!(honest_recv(&mut peer), Msg::Result(r) if r.slot == 0));
+        }
+        assert!(peer.recv_timeout(Some(WAIT)).unwrap().is_none());
+    }
+
+    #[test]
+    fn reordering_swaps_adjacent_data_frames() {
+        let plan = FaultPlan { reorder: 1.0, seed: 7, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&result_msg(0)).unwrap(); // held
+        chaos.send(&result_msg(1)).unwrap(); // goes first, flushes 0
+        let first = honest_recv(&mut peer);
+        let second = honest_recv(&mut peer);
+        assert!(matches!(first, Msg::Result(r) if r.slot == 1));
+        assert!(matches!(second, Msg::Result(r) if r.slot == 0));
+    }
+
+    #[test]
+    fn control_plane_is_exempt_and_flushes_held_frames() {
+        let plan =
+            FaultPlan { drop: 1.0, reorder: 1.0, seed: 8, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        // data frames all drop under drop=1 …
+        chaos.send(&result_msg(0)).unwrap();
+        assert!(peer.recv_timeout(Some(WAIT)).unwrap().is_none());
+        // … but the control plane always gets through
+        chaos.send(&Msg::HeartbeatAck { nonce: 7 }).unwrap();
+        assert!(matches!(
+            honest_recv(&mut peer),
+            Msg::HeartbeatAck { nonce: 7 }
+        ));
+    }
+
+    #[test]
+    fn scripted_hang_swallows_data_after_the_count() {
+        let plan = FaultPlan { hang_after: Some(1), ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&result_msg(0)).unwrap(); // the one allowed frame
+        chaos.send(&result_msg(1)).unwrap(); // hung
+        chaos.send(&result_msg(2)).unwrap(); // hung
+        assert!(matches!(honest_recv(&mut peer), Msg::Result(r) if r.slot == 0));
+        assert!(peer.recv_timeout(Some(WAIT)).unwrap().is_none());
+        // control still flows while the data plane hangs
+        chaos.send(&Msg::HeartbeatAck { nonce: 1 }).unwrap();
+        assert!(matches!(honest_recv(&mut peer), Msg::HeartbeatAck { nonce: 1 }));
+    }
+
+    #[test]
+    fn same_seed_same_faults() {
+        // a mixed plan applied twice to the same traffic produces the
+        // same arrivals (count and content)
+        let plan: FaultPlan =
+            "drop=0.3,corrupt=0.3,dup=0.3,tamper=0.3,seed=11".parse().unwrap();
+        let observe = || {
+            let (mut chaos, mut peer) = chaos_pair(plan.clone());
+            let mut log: Vec<String> = Vec::new();
+            for slot in 0..20 {
+                chaos.send(&result_msg(slot)).unwrap();
+                loop {
+                    match peer.recv_timeout(Some(Duration::from_millis(5))) {
+                        Ok(Some(Msg::Result(r))) => log.push(format!(
+                            "slot={} sum={:.12e}",
+                            r.slot,
+                            r.payload.data().iter().sum::<f64>()
+                        )),
+                        Ok(Some(_)) => log.push("other".to_string()),
+                        Ok(None) => break,
+                        Err(e) => log.push(format!("err={e}")),
+                    }
+                }
+            }
+            log
+        };
+        assert_eq!(observe(), observe());
+    }
+}

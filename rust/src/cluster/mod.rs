@@ -21,7 +21,26 @@
 //!   progressive decode, scoring;
 //! * [`cache`] — the encoded-block cache reusing the `B`-independent
 //!   half of plan preparation across a request stream (the DNN-training
-//!   shape: same weights `A`, fresh activations `B`).
+//!   shape: same weights `A`, fresh activations `B`);
+//! * [`chaos`] — seeded fault injection ([`ChaosConn`] /
+//!   [`ChaosTransport`] over any transport, driven by a [`FaultPlan`])
+//!   that makes every fault mode below reproducible in tests and soaks.
+//!
+//! # Fault model
+//!
+//! The paper's straggler model assumes honest-but-slow workers; its own
+//! premise — poor channel conditions — also implies corrupted frames
+//! and wrong answers. The runtime distinguishes three fault classes:
+//!
+//! | Fault | Example | Detected by | Recovery | Cost |
+//! |---|---|---|---|---|
+//! | **Crash / hang** | worker killed, socket reset, silent stall | send/recv failure, missed heartbeats ([`ClusterConfig::evict_after`]), `Virtual`-mode stall timer | eviction; unresolved slots re-dispatch onto survivors (bounded by [`ClusterConfig::max_job_retries`]); agent may rejoin | latency; slots written off as `missing` once the retry budget is spent |
+//! | **Corrupt frame** | bit flips on a lossy link | CRC32 on every frame ([`WireError::BadChecksum`]); the connection resyncs past the damaged frame | the frame is counted `corrupt`, the *sender keeps its slots* (channel fault ≠ worker fault), and affected slots requeue | one round trip per damaged frame |
+//! | **Byzantine payload** | tampered or miscomputed sub-product with a valid checksum | Freivalds verification of every arriving result ([`crate::coordinator::Verifier`], O(n²) per packet, seeded ⇒ bit-reproducible) | the result is rejected and the slot requeued; after [`ClusterConfig::max_verify_failures`] strikes the worker is **quarantined** — evicted and barred from re-`Hello` until [`ClusterServer::reset_quarantine`] | at most `max_verify_failures + 1` wasted slot-attempts per liar, plus the O(n²) verify per result |
+//!
+//! What is *not* recovered: work written off after the retry budget
+//! (surfaces as `missing`), and — by design — nothing is silently
+//! accepted: a result is either verified in, counted late, or requeued.
 //!
 //! # Recovery semantics
 //!
@@ -63,12 +82,14 @@
 //! cache, typed errors).
 
 pub mod cache;
+pub mod chaos;
 pub mod server;
 pub mod transport;
 pub mod wire;
 pub mod worker;
 
 pub use cache::{CacheKey, CacheStats, EncodedBlockCache};
+pub use chaos::{ChaosConn, ChaosTransport, FaultPlan};
 pub use server::{
     ClusterConfig, ClusterOutcome, ClusterServer, CodingConfig, DeadlineMode,
     DecodeStep, HeartbeatReport, JobTiming, MatmulRequest, ServedDecode,
@@ -79,4 +100,7 @@ pub use transport::{
     TcpConn, TcpTransport, Transport,
 };
 pub use wire::{JobMsg, Msg, ResultMsg, WireError};
-pub use worker::{run_worker, spawn_loopback_workers, WorkerConfig, WorkerStats};
+pub use worker::{
+    run_worker, spawn_chaos_loopback_worker, spawn_loopback_workers, WorkerConfig,
+    WorkerStats,
+};

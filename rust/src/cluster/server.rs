@@ -44,6 +44,7 @@ use anyhow::Result;
 use crate::coding::{CodeSpec, DecodeState, Packet, UnknownSpace};
 use crate::coordinator::{
     assemble_outcome, build_job_matrices, score_outcome, EncodedA, Outcome, Plan,
+    Verifier,
 };
 use crate::latency::LatencyModel;
 use crate::linalg::{matmul, Matrix};
@@ -95,6 +96,32 @@ pub struct ClusterConfig {
     /// re-dispatched onto a survivor before it is written off (0
     /// disables re-dispatch entirely: the pre-resilience behavior).
     pub max_job_retries: usize,
+    /// How many heartbeat rounds a worker may miss consecutively before
+    /// eviction (1 = evict on the first miss, the pre-PR-6 behavior).
+    /// Send failures still evict immediately — a dead connection proves
+    /// itself.
+    pub evict_after: u32,
+    /// Freivalds-verify every arriving sub-product against the request's
+    /// job set (see [`crate::coordinator::Verifier`]). O(n²) per result
+    /// vs the O(n³) of the product itself; catches Byzantine (tampered)
+    /// payloads that pass the frame checksum.
+    pub verify: bool,
+    /// Verification strikes a worker may accumulate before it is
+    /// **quarantined**: evicted and barred from re-[`Msg::Hello`] rejoin
+    /// under the same agent name until [`ClusterServer::reset_quarantine`].
+    pub max_verify_failures: u32,
+    /// Seed of the Freivalds probe RNG. Probes are drawn from
+    /// `(verify_seed, request_id)` on a stream disjoint from delay
+    /// sampling, so toggling [`ClusterConfig::verify`] never shifts any
+    /// other random draw: honest-run outcomes stay bit-identical.
+    pub verify_seed: u64,
+    /// `Virtual`-mode stall recovery: if no result arrives and nothing is
+    /// requeued for this long while jobs are outstanding, every
+    /// unresolved in-flight slot is requeued (the holder may have
+    /// dropped the result frame on a lossy channel). Bounded by
+    /// [`ClusterConfig::max_job_retries`] per slot, so a truly dead slot
+    /// is eventually written off rather than respun forever.
+    pub stall_timeout: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -107,6 +134,11 @@ impl Default for ClusterConfig {
             late_drain: Duration::from_millis(50),
             cache_capacity: 16,
             max_job_retries: 2,
+            evict_after: 1,
+            verify: true,
+            max_verify_failures: 3,
+            verify_seed: 0xf7e1_5eed,
+            stall_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -163,8 +195,12 @@ pub struct ClusterOutcome {
     /// Re-dispatches of jobs stranded on workers that died mid-request.
     pub retries: usize,
     /// Result frames naming a slot outside the request's packet set
-    /// (a broken worker; see [`ServedDecode::corrupt`]).
+    /// (a broken worker) plus frames that arrived checksum-damaged
+    /// (see [`ServedDecode::corrupt`]).
     pub corrupt: usize,
+    /// Arriving results that failed Freivalds verification (tampered or
+    /// miscomputed payloads; see [`ServedDecode::verify_failures`]).
+    pub verify_failures: usize,
     /// Wall time the request took end to end.
     pub wall: Duration,
     /// `Some(hit)` when served through the encoded-block cache.
@@ -196,6 +232,11 @@ pub struct WorkerInfo {
     /// `None` until its first accepted result. Low = fast, high =
     /// straggler — the dispatch tie-breaker.
     pub straggle: Option<f64>,
+    /// Freivalds verification strikes accumulated by this worker.
+    pub verify_failures: u32,
+    /// Whether the worker is quarantined (evicted for lying, barred from
+    /// rejoin until [`ClusterServer::reset_quarantine`]).
+    pub quarantined: bool,
 }
 
 /// What a [`ClusterServer::heartbeat`] round did.
@@ -227,6 +268,16 @@ struct WorkerSlot {
     /// EWMA straggle score over reported result delays (see
     /// [`WorkerInfo::straggle`]).
     straggle: Option<f64>,
+    /// Consecutive heartbeat rounds this worker failed to ack; reset by
+    /// any ack or buffered result, evicts at
+    /// [`ClusterConfig::evict_after`].
+    missed_heartbeats: u32,
+    /// Freivalds verification strikes (survives eviction and rejoin —
+    /// the strike record belongs to the agent, not the connection).
+    verify_failures: u32,
+    /// Quarantined workers are dead *and* refused re-registration under
+    /// their name until [`ClusterServer::reset_quarantine`].
+    quarantined: bool,
 }
 
 impl WorkerSlot {
@@ -252,6 +303,7 @@ struct Collect {
     requeue: Vec<u32>,
     outstanding: usize,
     corrupt: usize,
+    verify_failures: usize,
 }
 
 impl Collect {
@@ -263,6 +315,7 @@ impl Collect {
             requeue: Vec::new(),
             outstanding: 0,
             corrupt: 0,
+            verify_failures: 0,
         }
     }
 
@@ -333,10 +386,16 @@ pub struct ServedDecode {
     /// Re-dispatch sends beyond each slot's first (bounded by
     /// [`ClusterConfig::max_job_retries`] per slot).
     pub retries: usize,
-    /// Result frames naming a slot outside the request's packet set.
-    /// Such a frame identifies no real slot, so the sender is evicted
-    /// as broken and its in-flight jobs are re-dispatched.
+    /// Result frames naming a slot outside the request's packet set
+    /// (the sender is evicted as broken and its in-flight jobs
+    /// re-dispatched) plus frames that arrived checksum-damaged (a
+    /// channel fault: the sender keeps its slots and the damaged
+    /// deliveries are requeued).
     pub corrupt: usize,
+    /// Arriving results that failed Freivalds verification. Each strikes
+    /// the sender (quarantine at
+    /// [`ClusterConfig::max_verify_failures`]) and requeues the slot.
+    pub verify_failures: usize,
     /// Per-slot send counts: `attempts[s]` is how many times slot `s`
     /// went out (1 = first dispatch only, 0 = never sent).
     pub attempts: Vec<u32>,
@@ -387,8 +446,34 @@ impl ClusterServer {
                 alive: w.alive,
                 jobs_done: w.jobs_done,
                 straggle: w.straggle,
+                verify_failures: w.verify_failures,
+                quarantined: w.quarantined,
             })
             .collect()
+    }
+
+    /// Registry ids of every quarantined worker.
+    pub fn quarantined_workers(&self) -> Vec<u64> {
+        self.workers
+            .iter()
+            .filter(|w| w.quarantined)
+            .map(|w| w.id)
+            .collect()
+    }
+
+    /// Operator reset: clear a quarantined worker's strike record and
+    /// make its agent name eligible for rejoin again. Returns whether
+    /// the id named a quarantined worker. The agent must still
+    /// re-register — this lifts the bar, it does not revive the slot.
+    pub fn reset_quarantine(&mut self, id: u64) -> bool {
+        match self.workers.iter_mut().find(|w| w.id == id && w.quarantined) {
+            Some(w) => {
+                w.quarantined = false;
+                w.verify_failures = 0;
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -415,6 +500,15 @@ impl ClusterServer {
     ) -> Result<u64> {
         match conn.recv_timeout(Some(timeout)) {
             Ok(Some(Msg::Hello { agent })) => {
+                if let Some(q) =
+                    self.workers.iter().find(|w| w.quarantined && w.name == agent)
+                {
+                    anyhow::bail!(
+                        "agent {agent} is quarantined (worker {}): rejoin refused \
+                         until reset_quarantine",
+                        q.id
+                    );
+                }
                 if let Some(wi) = self
                     .workers
                     .iter()
@@ -432,6 +526,7 @@ impl ClusterServer {
                     w.in_flight.clear();
                     w.inbox.clear();
                     w.straggle = None;
+                    w.missed_heartbeats = 0;
                     return Ok(id);
                 }
                 let id = self.next_worker_id;
@@ -447,6 +542,9 @@ impl ClusterServer {
                     in_flight: Vec::new(),
                     inbox: VecDeque::new(),
                     straggle: None,
+                    missed_heartbeats: 0,
+                    verify_failures: 0,
+                    quarantined: false,
                 });
                 Ok(id)
             }
@@ -554,14 +652,26 @@ impl ClusterServer {
                     }
                     Ok(Some(_)) => self.workers[wi].alive = false,
                     Ok(None) => {}
+                    // a checksum-damaged frame is a channel fault: it
+                    // neither proves liveness (keep waiting for the ack)
+                    // nor condemns the worker
+                    Err(WireError::BadChecksum { .. }) => {}
                     Err(_) => self.workers[wi].alive = false,
                 }
             }
         }
         let mut evicted = Vec::new();
         for &wi in &alive_at_entry {
-            if self.workers[wi].alive && !acked[wi] && waiting.contains(&wi) {
-                self.workers[wi].alive = false;
+            if acked[wi] {
+                self.workers[wi].missed_heartbeats = 0;
+            } else if self.workers[wi].alive && waiting.contains(&wi) {
+                // missed acks evict only after `evict_after` consecutive
+                // silent rounds; send/recv failures (alive already false)
+                // evict immediately
+                self.workers[wi].missed_heartbeats += 1;
+                if self.workers[wi].missed_heartbeats >= self.cfg.evict_after {
+                    self.workers[wi].alive = false;
+                }
             }
             if !self.workers[wi].alive {
                 evicted.push(self.workers[wi].id);
@@ -642,6 +752,7 @@ impl ClusterServer {
             dispatched: core.dispatched,
             retries: core.retries,
             corrupt: core.corrupt,
+            verify_failures: core.verify_failures,
             wall: core.wall,
             cache_hit: None,
         })
@@ -702,6 +813,7 @@ impl ClusterServer {
             dispatched: core.dispatched,
             retries: core.retries,
             corrupt: core.corrupt,
+            verify_failures: core.verify_failures,
             wall: core.wall,
             cache_hit: Some(hit),
         })
@@ -744,6 +856,15 @@ impl ClusterServer {
         }
         let request_id = self.next_request_id;
         self.next_request_id += 1;
+        // Freivalds verifier: probes come from a stream keyed by
+        // (verify_seed, request_id), disjoint from every other draw, so
+        // toggling verification never shifts an honest run
+        let verifier = if self.cfg.verify {
+            let mut vrng = Pcg64::with_stream(self.cfg.verify_seed, request_id);
+            Some(Verifier::new(&jobs, &mut vrng))
+        } else {
+            None
+        };
         // in-flight tracking is per request
         for w in &mut self.workers {
             w.in_flight.clear();
@@ -785,21 +906,38 @@ impl ClusterServer {
                 let hard = start + self.cfg.collect_timeout;
                 let mut results: Vec<(u64, ResultMsg)> =
                     Vec::with_capacity(ctx.outstanding);
+                let mut last_progress = Instant::now();
                 loop {
-                    retries += self.flush_requeue(
+                    let flushed = self.flush_requeue(
                         &mut ctx,
                         &mut attempts,
                         &jobs,
                         delays,
                         t_max,
                     )?;
+                    retries += flushed;
                     if ctx.outstanding == 0 || Instant::now() >= hard {
                         break;
                     }
-                    let polled =
-                        self.poll_round(&mut ctx, &mut |w, r| results.push((w, r)));
+                    let before = results.len();
+                    let polled = self.poll_round(
+                        &mut ctx,
+                        verifier.as_ref(),
+                        &mut |w, r| results.push((w, r)),
+                    );
                     if polled == 0 && ctx.requeue.is_empty() {
                         break; // nothing left that could deliver
+                    }
+                    if results.len() > before || flushed > 0 || !ctx.requeue.is_empty()
+                    {
+                        last_progress = Instant::now();
+                    } else if last_progress.elapsed() >= self.cfg.stall_timeout {
+                        // nothing moved for the stall window: a result
+                        // frame may have been dropped on a lossy channel,
+                        // so respin every unresolved slot (bounded by the
+                        // per-slot retry budget; duplicates absorb once)
+                        self.requeue_stalled(&mut ctx);
+                        last_progress = Instant::now();
                     }
                 }
                 results.sort_by(|x, y| {
@@ -855,7 +993,10 @@ impl ClusterServer {
                     if ctx.outstanding == 0 {
                         break; // write-offs may have settled the rest
                     }
-                    let polled = self.poll_round(&mut ctx, &mut |worker, r| {
+                    let polled = self.poll_round(
+                        &mut ctx,
+                        verifier.as_ref(),
+                        &mut |worker, r| {
                         timings.push(JobTiming {
                             slot: r.slot,
                             worker,
@@ -888,7 +1029,10 @@ impl ClusterServer {
                 // not pollute the next request's collection
                 let grace = Instant::now() + self.cfg.late_drain;
                 while ctx.outstanding > 0 && Instant::now() < grace {
-                    let polled = self.poll_round(&mut ctx, &mut |worker, r| {
+                    let polled = self.poll_round(
+                        &mut ctx,
+                        verifier.as_ref(),
+                        &mut |worker, r| {
                         timings.push(JobTiming {
                             slot: r.slot,
                             worker,
@@ -913,6 +1057,7 @@ impl ClusterServer {
             dispatched,
             retries,
             corrupt: ctx.corrupt,
+            verify_failures: ctx.verify_failures,
             attempts,
             timings,
             wall: start.elapsed(),
@@ -1033,25 +1178,45 @@ impl ClusterServer {
     fn poll_round(
         &mut self,
         ctx: &mut Collect,
+        verifier: Option<&Verifier>,
         on_result: &mut dyn FnMut(u64, ResultMsg),
     ) -> usize {
         let mut pollable = 0;
         for wi in 0..self.workers.len() {
             while let Some(r) = self.workers[wi].inbox.pop_front() {
-                self.accept_frame(wi, r, ctx, on_result);
+                self.accept_frame(wi, r, ctx, verifier, on_result);
             }
             if !self.workers[wi].alive || self.workers[wi].in_flight.is_empty() {
                 continue;
             }
             pollable += 1;
             match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
-                Ok(Some(Msg::Result(r))) => self.accept_frame(wi, r, ctx, on_result),
+                Ok(Some(Msg::Result(r))) => {
+                    self.accept_frame(wi, r, ctx, verifier, on_result)
+                }
                 Ok(Some(Msg::HeartbeatAck { .. })) => {}
                 Ok(Some(_)) => {
                     // protocol violation: only workers speak here
                     self.kill_worker(wi, ctx);
                 }
                 Ok(None) => {}
+                // a checksum-damaged frame is a channel fault, not a
+                // worker fault: the connection resynced past it, but the
+                // lost frame may have carried a result — requeue the
+                // worker's unresolved slots (it keeps them in flight; if
+                // the damaged frame was something else, the eventual
+                // honest results absorb and the requeued duplicates are
+                // dropped by the settled guard)
+                Err(WireError::BadChecksum { .. }) => {
+                    ctx.corrupt += 1;
+                    let held = self.workers[wi].in_flight.clone();
+                    for slot in held {
+                        if !ctx.settled[slot as usize] && !ctx.requeue.contains(&slot)
+                        {
+                            ctx.requeue.push(slot);
+                        }
+                    }
+                }
                 Err(_) => self.kill_worker(wi, ctx),
             }
         }
@@ -1065,6 +1230,9 @@ impl ClusterServer {
     ///   evicted as broken (its in-flight work requeues);
     /// * duplicate (slot already settled) — absorbed exactly once, the
     ///   extra frame is dropped without touching the accounting;
+    /// * failed Freivalds check (tampered or miscomputed payload) — the
+    ///   sender is struck (quarantined past
+    ///   [`ClusterConfig::max_verify_failures`]) and the slot requeues;
     /// * otherwise — the slot settles, the worker's books update, and
     ///   the frame is handed to the caller.
     fn accept_frame(
@@ -1072,6 +1240,7 @@ impl ClusterServer {
         wi: usize,
         r: ResultMsg,
         ctx: &mut Collect,
+        verifier: Option<&Verifier>,
         on_result: &mut dyn FnMut(u64, ResultMsg),
     ) {
         if r.request_id != ctx.request_id {
@@ -1093,6 +1262,24 @@ impl ClusterServer {
             self.kill_worker(wi, ctx);
             return;
         };
+        // Freivalds gate: the worker definitively answered this slot
+        // (drop it from in-flight either way), but a payload that is
+        // not W_A·W_B never settles the slot — it requeues, and the
+        // sender accumulates a strike
+        if let Some(v) = verifier {
+            if !v.check(slot, &r.payload) {
+                ctx.verify_failures += 1;
+                self.workers[wi].in_flight.swap_remove(pos);
+                self.workers[wi].verify_failures += 1;
+                if !ctx.requeue.contains(&r.slot) {
+                    ctx.requeue.push(r.slot);
+                }
+                if self.workers[wi].verify_failures > self.cfg.max_verify_failures {
+                    self.quarantine(wi, ctx);
+                }
+                return;
+            }
+        }
         ctx.settled[slot] = true;
         ctx.outstanding -= 1;
         let w = &mut self.workers[wi];
@@ -1109,6 +1296,28 @@ impl ClusterServer {
         for slot in stranded {
             if !ctx.settled[slot as usize] {
                 ctx.requeue.push(slot);
+            }
+        }
+    }
+
+    /// Evict worker `wi` *and* bar its agent name from rejoin: the
+    /// Byzantine response. Lifted only by [`Self::reset_quarantine`].
+    fn quarantine(&mut self, wi: usize, ctx: &mut Collect) {
+        self.workers[wi].quarantined = true;
+        self.kill_worker(wi, ctx);
+    }
+
+    /// `Virtual`-mode stall recovery: requeue every unresolved in-flight
+    /// slot without killing anyone — the holder may simply have had its
+    /// result frame dropped on a lossy channel. Duplicate absorption
+    /// keeps an over-requeue harmless; the per-slot retry budget keeps
+    /// it finite.
+    fn requeue_stalled(&mut self, ctx: &mut Collect) {
+        for w in &self.workers {
+            for &slot in &w.in_flight {
+                if !ctx.settled[slot as usize] && !ctx.requeue.contains(&slot) {
+                    ctx.requeue.push(slot);
+                }
             }
         }
     }
@@ -1763,6 +1972,275 @@ mod tests {
         );
         server.shutdown();
         let _ = broken.join();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn lying_worker_is_struck_quarantined_and_barred_from_rejoin() {
+        // A Byzantine worker computes the product and then perturbs it:
+        // the frame is wire-perfect (valid CRC), so only the Freivalds
+        // gate can catch it. Every lie strikes; past the budget the
+        // worker is quarantined and its name refused at re-Hello until
+        // the operator resets it.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "honest".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let liar_conn = dialer.dial("liar").unwrap();
+        let liar = std::thread::spawn(move || {
+            let mut conn = liar_conn;
+            conn.send(&Msg::Hello { agent: "liar".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            loop {
+                match conn.recv() {
+                    Ok(Msg::Job(job)) => {
+                        let honest = matmul(&job.wa, &job.wb);
+                        let mut data = honest.data().to_vec();
+                        data[0] += 1.0 + 0.5 * honest.max_abs();
+                        let forged =
+                            Matrix::from_vec(honest.rows(), honest.cols(), data);
+                        let r = Msg::Result(ResultMsg {
+                            request_id: job.request_id,
+                            slot: job.slot,
+                            attempt: job.attempt,
+                            delay: job.injected_delay.unwrap_or(0.1),
+                            compute_secs: 0.0,
+                            payload: forged,
+                        });
+                        if conn.send(&r).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let cfg = ClusterConfig {
+            max_verify_failures: 0, // the first lie quarantines
+            max_job_retries: 5,
+            ..ClusterConfig::default()
+        };
+        let mut server = ClusterServer::new(cfg);
+        assert_eq!(
+            server.accept_workers(&mut transport, 2, Duration::from_secs(10)).unwrap(),
+            2
+        );
+        let liar_id =
+            server.worker_info().iter().find(|w| w.name == "liar").unwrap().id;
+
+        let plan = small_plan(10, 33);
+        let delays = vec![0.1; 10];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert!(out.verify_failures >= 1, "the lie must be caught: {out:?}");
+        assert_eq!(server.quarantined_workers(), vec![liar_id]);
+        assert_eq!(server.live_workers(), 1);
+        // the forged slots were requeued onto the honest worker
+        assert_eq!(out.outcome.received, 10);
+        assert_eq!(out.outcome.recovered, 9);
+        assert_eq!(out.missing(), 0, "{out:?}");
+        let info = server.worker_info();
+        let liar_info = info.iter().find(|w| w.name == "liar").unwrap();
+        assert!(liar_info.quarantined);
+        assert!(liar_info.verify_failures >= 1);
+
+        // a quarantined name is refused at the Hello handshake
+        let mut retry = dialer.dial("liar").unwrap();
+        retry.send(&Msg::Hello { agent: "liar".to_string() }).unwrap();
+        assert_eq!(
+            server
+                .accept_workers(&mut transport, 1, Duration::from_millis(300))
+                .unwrap(),
+            0,
+            "quarantined agent must not rejoin"
+        );
+        drop(retry);
+
+        // operator reset lifts the bar; the agent rejoins and serves
+        assert!(server.reset_quarantine(liar_id));
+        assert!(!server.reset_quarantine(liar_id), "already reset");
+        let dialer2 = dialer.clone();
+        let reformed = std::thread::spawn(move || {
+            let mut conn = dialer2.dial("liar").unwrap();
+            let cfg = WorkerConfig { name: "liar".to_string(), ..Default::default() };
+            run_worker(&mut conn, &NativeEngine::serial(), &cfg).unwrap()
+        });
+        assert_eq!(
+            server.accept_workers(&mut transport, 1, Duration::from_secs(10)).unwrap(),
+            1
+        );
+        assert_eq!(server.live_workers(), 2);
+        let out2 = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert_eq!(out2.verify_failures, 0);
+        assert_eq!(out2.missing(), 0);
+        server.shutdown();
+        let _ = liar.join();
+        let stats = reformed.join().unwrap();
+        assert!(stats.clean_shutdown);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn honest_runs_are_bit_identical_with_verification_on_and_off() {
+        // the Freivalds probes come from their own RNG stream keyed by
+        // (verify_seed, request_id), so toggling verification must not
+        // move a single bit of an honest run's outcome
+        let plan = small_plan(14, 35);
+        let mut drng = Pcg64::seed_from(36);
+        let delays: Vec<f64> = (0..14)
+            .map(|_| LatencyModel::exp(1.0).sample_scaled(0.5, &mut drng))
+            .collect();
+        let run = |verify: bool| {
+            let cfg = ClusterConfig { verify, ..ClusterConfig::default() };
+            let (mut server, _dialer, handles) = start_cluster(3, cfg);
+            let out = server.serve_plan(&plan, 0.8, Some(&delays)).unwrap();
+            finish(server, handles);
+            out
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.verify_failures, 0);
+        assert_eq!(on.outcome.received, off.outcome.received);
+        assert_eq!(on.late, off.late);
+        assert_eq!(on.outcome.c_hat.data(), off.outcome.c_hat.data());
+        assert_eq!(on.outcome.loss.to_bits(), off.outcome.loss.to_bits());
+    }
+
+    #[test]
+    fn corrupt_frames_are_tolerated_and_the_work_recovered() {
+        // A checksum-damaged frame is a channel fault: the connection
+        // resyncs past it, the sender is NOT killed, and the work still
+        // lands (here via the sender's own follow-up honest frame).
+        use crate::cluster::wire::{self, HEADER_LEN};
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "clean".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let noisy_conn = dialer.dial("noisy").unwrap();
+        let noisy = std::thread::spawn(move || {
+            let mut conn = noisy_conn;
+            conn.send(&Msg::Hello { agent: "noisy".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            let mut first = true;
+            loop {
+                match conn.recv() {
+                    Ok(Msg::Job(job)) => {
+                        let r = Msg::Result(ResultMsg {
+                            request_id: job.request_id,
+                            slot: job.slot,
+                            attempt: job.attempt,
+                            delay: job.injected_delay.unwrap_or(0.1),
+                            compute_secs: 0.0,
+                            payload: matmul(&job.wa, &job.wb),
+                        });
+                        if first {
+                            // the channel damages the first delivery in
+                            // flight; the worker then resends it intact
+                            first = false;
+                            let mut frame = wire::encode(&r).unwrap();
+                            frame[HEADER_LEN] ^= 0x01;
+                            if conn.send_frame(&frame).is_err() {
+                                break;
+                            }
+                        }
+                        if conn.send(&r).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let mut server = ClusterServer::new(ClusterConfig::default());
+        assert_eq!(
+            server.accept_workers(&mut transport, 2, Duration::from_secs(10)).unwrap(),
+            2
+        );
+        let plan = small_plan(10, 37);
+        let delays = vec![0.1; 10];
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert!(out.corrupt >= 1, "the damaged frame must be counted: {out:?}");
+        assert_eq!(out.verify_failures, 0);
+        assert_eq!(
+            server.live_workers(),
+            2,
+            "a noisy channel is not a dead worker"
+        );
+        assert_eq!(out.outcome.received, 10);
+        assert_eq!(out.outcome.recovered, 9);
+        assert_eq!(out.missing(), 0, "{out:?}");
+        server.shutdown();
+        let _ = noisy.join();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn dropped_result_frames_recover_via_stall_requeue() {
+        // A worker whose first result frame vanishes entirely (lossy
+        // channel): nothing tells the coordinator the slot is dead, so
+        // the stall timer must respin it onto the fleet instead of
+        // sitting out the full collect timeout.
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let wcfg = WorkerConfig { name: "ok".to_string(), ..Default::default() };
+        let handles = spawn_loopback_workers(&dialer, 1, &wcfg);
+        let lossy_conn = dialer.dial("lossy").unwrap();
+        let lossy = std::thread::spawn(move || {
+            let mut conn = lossy_conn;
+            conn.send(&Msg::Hello { agent: "lossy".to_string() }).unwrap();
+            assert!(matches!(conn.recv().unwrap(), Msg::Welcome { .. }));
+            let mut dropped = false;
+            loop {
+                match conn.recv() {
+                    Ok(Msg::Job(job)) => {
+                        if !dropped {
+                            dropped = true; // the channel ate this result
+                            continue;
+                        }
+                        let r = Msg::Result(ResultMsg {
+                            request_id: job.request_id,
+                            slot: job.slot,
+                            attempt: job.attempt,
+                            delay: job.injected_delay.unwrap_or(0.1),
+                            compute_secs: 0.0,
+                            payload: matmul(&job.wa, &job.wb),
+                        });
+                        if conn.send(&r).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let cfg = ClusterConfig {
+            stall_timeout: Duration::from_millis(100),
+            ..ClusterConfig::default()
+        };
+        let mut server = ClusterServer::new(cfg);
+        assert_eq!(
+            server.accept_workers(&mut transport, 2, Duration::from_secs(10)).unwrap(),
+            2
+        );
+        let plan = small_plan(10, 39);
+        let delays = vec![0.1; 10];
+        let t0 = Instant::now();
+        let out = server.serve_plan(&plan, 1.0, Some(&delays)).unwrap();
+        assert!(out.retries > 0, "the eaten slot must be respun: {out:?}");
+        assert_eq!(out.outcome.received, 10);
+        assert_eq!(out.missing(), 0, "{out:?}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "stall recovery must beat the 60 s collect timeout: {:?}",
+            t0.elapsed()
+        );
+        server.shutdown();
+        let _ = lossy.join();
         for h in handles {
             h.join().unwrap().unwrap();
         }

@@ -52,6 +52,12 @@ pub trait Connection: Send {
     /// Send one message (blocking until the frame is written out).
     fn send(&mut self, msg: &Msg) -> Result<(), WireError>;
 
+    /// Send one pre-encoded frame verbatim. This is the byte-level
+    /// escape hatch the chaos layer uses to put *deliberately damaged*
+    /// frames on the wire ([`super::chaos::ChaosConn`]); normal callers
+    /// should use [`Connection::send`].
+    fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError>;
+
     /// Receive the next message. `timeout = None` blocks until a message
     /// arrives or the peer closes; `Some(d)` returns `Ok(None)` if no
     /// complete frame arrived within `d`.
@@ -127,7 +133,11 @@ impl Connection for TcpConn {
         // encode is fallible: a payload that does not fit the wire
         // format surfaces as `Oversize` here instead of truncating
         let frame = wire::encode(msg)?;
-        self.stream.write_all(&frame).map_err(io_to_wire)?;
+        self.send_frame(&frame)
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        self.stream.write_all(frame).map_err(io_to_wire)?;
         Ok(())
     }
 
@@ -138,9 +148,25 @@ impl Connection for TcpConn {
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut chunk = [0u8; 64 * 1024];
         loop {
-            if let Some((msg, used)) = wire::try_decode(&self.buf)? {
-                self.buf.drain(..used);
-                return Ok(Some(msg));
+            match wire::try_decode(&self.buf) {
+                Ok(Some((msg, used))) => {
+                    self.buf.drain(..used);
+                    return Ok(Some(msg));
+                }
+                Ok(None) => {}
+                Err(e @ WireError::BadChecksum { .. }) => {
+                    // a corrupt frame, but its extent is known from the
+                    // validated header: drain exactly that frame so the
+                    // stream stays in sync, surface the error once, and
+                    // the next call resumes at the following frame —
+                    // one damaged frame must not kill the connection
+                    let total = wire::frame_len(&self.buf)
+                        .unwrap_or(self.buf.len())
+                        .min(self.buf.len());
+                    self.buf.drain(..total);
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
             }
             match deadline {
                 None => self.set_io_timeout(None)?,
@@ -254,6 +280,10 @@ impl LoopbackConn {
 impl Connection for LoopbackConn {
     fn send(&mut self, msg: &Msg) -> Result<(), WireError> {
         self.tx.send(wire::encode(msg)?).map_err(|_| WireError::Closed)
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        self.tx.send(frame.to_vec()).map_err(|_| WireError::Closed)
     }
 
     fn recv_timeout(
@@ -405,6 +435,63 @@ mod tests {
         let got = server.recv_timeout(Some(Duration::from_millis(20))).unwrap();
         assert!(got.is_none());
         assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    /// One corrupted frame must surface as `BadChecksum` and then leave
+    /// the connection usable: the next (intact) frame decodes normally.
+    #[test]
+    fn tcp_connection_survives_a_corrupt_frame() {
+        let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = transport.local_addr();
+        let mut bad = wire::encode(&Msg::Heartbeat { nonce: 1 }).unwrap();
+        bad[wire::HEADER_LEN] ^= 0xFF; // flip a payload bit in flight
+        let good = wire::encode(&Msg::Heartbeat { nonce: 2 }).unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(&bad).unwrap();
+            s.write_all(&good).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let mut server =
+            transport.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        // the damaged frame surfaces exactly once…
+        let err = loop {
+            match server.recv_timeout(Some(Duration::from_millis(10))) {
+                Ok(None) => continue, // still reading
+                Ok(Some(m)) => panic!("corrupt frame decoded: {m:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, WireError::BadChecksum { .. }), "{err}");
+        // …and the parse loop stays alive: the next frame is intact
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(m) =
+                server.recv_timeout(Some(Duration::from_millis(5))).unwrap()
+            {
+                got = Some(m);
+                break;
+            }
+        }
+        assert!(matches!(got, Some(Msg::Heartbeat { nonce: 2 })), "{got:?}");
+        handle.join().unwrap();
+    }
+
+    /// Same resync contract on the loopback transport: a corrupt frame
+    /// surfaces once, the following frame decodes.
+    #[test]
+    fn loopback_connection_survives_a_corrupt_frame() {
+        let (mut a, mut b) = loopback_pair("a", "b");
+        let mut bad = wire::encode(&Msg::Heartbeat { nonce: 7 }).unwrap();
+        bad[wire::HEADER_LEN + 3] ^= 0x20;
+        a.send_frame(&bad).unwrap();
+        a.send(&Msg::Heartbeat { nonce: 8 }).unwrap();
+        match b.recv() {
+            Err(WireError::BadChecksum { .. }) => {}
+            other => panic!("expected BadChecksum, got {other:?}"),
+        }
+        assert!(matches!(b.recv().unwrap(), Msg::Heartbeat { nonce: 8 }));
     }
 
     #[test]

@@ -8,11 +8,12 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "UEPW"
-//!      4     2  protocol version (currently 3)
+//!      4     2  protocol version (currently 4)
 //!      6     1  message type tag
 //!      7     1  reserved (0)
 //!      8     4  payload length in bytes
 //!     12     n  payload (per-type encoding below)
+//!   12+n     4  CRC32 of header + payload (v4 integrity trailer)
 //! ```
 //!
 //! Matrix payloads are `rows: u32, cols: u32, rows·cols × f64` — raw
@@ -31,10 +32,15 @@ pub const MAGIC: [u8; 4] = *b"UEPW";
 /// `attempt` counter to job and result frames (re-dispatch of jobs
 /// stranded on dead workers); version 3 added `compute_secs` timing
 /// telemetry to result frames (worker-measured wall compute time,
-/// feeding the coordinator's latency estimators).
-pub const VERSION: u16 = 3;
+/// feeding the coordinator's latency estimators); version 4 added the
+/// CRC32 integrity trailer after every payload, so channel corruption
+/// is detected ([`WireError::BadChecksum`]) instead of silently
+/// poisoning the decode.
+pub const VERSION: u16 = 4;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
+/// Size of the CRC32 trailer appended after every payload (v4).
+pub const TRAILER_LEN: usize = 4;
 /// Hard ceiling on a single frame's payload (guards against a corrupt
 /// or hostile length field allocating unbounded memory).
 pub const MAX_PAYLOAD: usize = 1 << 28;
@@ -47,6 +53,43 @@ const TAG_RESULT: u8 = 4;
 const TAG_HEARTBEAT: u8 = 5;
 const TAG_HEARTBEAT_ACK: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+
+/// Is `tag` one of the known message type tags? Checked before the CRC
+/// so an unknown type reports [`WireError::UnknownType`] rather than the
+/// (also true, but less specific) checksum mismatch.
+fn tag_known(tag: u8) -> bool {
+    (TAG_HELLO..=TAG_SHUTDOWN).contains(&tag)
+}
+
+// ---------------------------------------------------------------- crc32
+
+/// Table for the reflected CRC-32 (IEEE 802.3 polynomial 0xEDB88320) —
+/// hand-rolled and built at compile time; no dependency needed.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes` — the checksum carried in every v4 frame
+/// trailer, computed over header + payload.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
 
 /// A coded job dispatched to one worker: the two factor matrices it must
 /// multiply, plus straggle bookkeeping. `injected_delay` is the virtual
@@ -158,6 +201,12 @@ pub enum WireError {
     /// structurally valid frame describing the *wrong* data, so the
     /// encoder refuses instead.
     Oversize { what: &'static str, value: usize, max: usize },
+    /// The frame's CRC32 trailer does not match its bytes: the frame was
+    /// corrupted in flight. The header survived its own field checks, so
+    /// the frame's extent is known — transports drain the bad frame and
+    /// keep the connection parse loop alive (see
+    /// [`frame_len`]).
+    BadChecksum { got: u32, want: u32 },
     /// The buffer ends before the frame does.
     Truncated { need: usize, have: usize },
     /// Structurally invalid payload (bad lengths, trailing bytes, …).
@@ -180,6 +229,9 @@ impl std::fmt::Display for WireError {
             }
             WireError::Oversize { what, value, max } => {
                 write!(f, "{what} of {value} does not fit the wire format (max {max})")
+            }
+            WireError::BadChecksum { got, want } => {
+                write!(f, "frame checksum mismatch: got {got:#010x}, want {want:#010x}")
             }
             WireError::Truncated { need, have } => {
                 write!(f, "truncated frame: need {need} bytes, have {have}")
@@ -307,13 +359,17 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
     if payload.len() > MAX_PAYLOAD {
         return Err(WireError::Oversized { len: payload.len(), max: MAX_PAYLOAD });
     }
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(msg.tag());
     out.push(0); // reserved
     put_u32(&mut out, payload.len() as u32);
     out.extend_from_slice(&payload);
+    // v4 integrity trailer: CRC32 over everything written so far
+    // (header + payload), so any in-flight bit flip is detected
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
     Ok(out)
 }
 
@@ -401,9 +457,32 @@ impl<'a> Rd<'a> {
     }
 }
 
+/// Length a complete frame would occupy at the front of `buf`, from its
+/// header alone: `Some(header + payload + trailer)` once the 12 header
+/// bytes are present and carry valid magic/version, `None` otherwise.
+/// This is what lets a transport *resync* after
+/// [`WireError::BadChecksum`]: the header's own fields were already
+/// validated, so the corrupt frame's extent is trustworthy — drain that
+/// many bytes and the next frame parses normally.
+pub fn frame_len(buf: &[u8]) -> Option<usize> {
+    if buf.len() < HEADER_LEN
+        || buf[..4] != MAGIC
+        || u16::from_le_bytes([buf[4], buf[5]]) != VERSION
+    {
+        return None;
+    }
+    let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return None;
+    }
+    Some(HEADER_LEN + len + TRAILER_LEN)
+}
+
 /// Decode one complete frame from the front of `buf`. Returns the message
 /// and the number of bytes consumed. An incomplete frame reports
-/// [`WireError::Truncated`]; corrupt headers report their specific error.
+/// [`WireError::Truncated`]; corrupt headers report their specific error;
+/// a CRC mismatch reports [`WireError::BadChecksum`] (checked before the
+/// payload is parsed, so corrupted bytes never reach the decoder).
 pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
     if buf.len() < HEADER_LEN {
         return Err(WireError::Truncated { need: HEADER_LEN, have: buf.len() });
@@ -417,15 +496,29 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
         return Err(WireError::BadVersion(version));
     }
     let tag = buf[6];
+    if !tag_known(tag) {
+        return Err(WireError::UnknownType(tag));
+    }
     let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
     if len > MAX_PAYLOAD {
         return Err(WireError::Oversized { len, max: MAX_PAYLOAD });
     }
-    let total = HEADER_LEN + len;
+    let total = HEADER_LEN + len + TRAILER_LEN;
     if buf.len() < total {
         return Err(WireError::Truncated { need: total, have: buf.len() });
     }
-    let mut rd = Rd::new(&buf[HEADER_LEN..total]);
+    let body_end = HEADER_LEN + len;
+    let want = u32::from_le_bytes([
+        buf[body_end],
+        buf[body_end + 1],
+        buf[body_end + 2],
+        buf[body_end + 3],
+    ]);
+    let got = crc32(&buf[..body_end]);
+    if got != want {
+        return Err(WireError::BadChecksum { got, want });
+    }
+    let mut rd = Rd::new(&buf[HEADER_LEN..body_end]);
     let msg = match tag {
         TAG_HELLO => Msg::Hello { agent: rd.string()? },
         TAG_WELCOME => Msg::Welcome { worker_id: rd.u64()? },
@@ -527,7 +620,7 @@ mod tests {
         let msgs = all_messages();
         let mut stream = Vec::new();
         for m in &msgs {
-            stream.extend_from_slice(&encode(m));
+            stream.extend_from_slice(&encode(m).unwrap());
         }
         let mut at = 0;
         for want in &msgs {
@@ -619,14 +712,132 @@ mod tests {
         assert!(matches!(decode_frame(&bad), Err(WireError::UnknownType(200))));
     }
 
+    /// Re-seal a hand-patched frame: recompute the CRC trailer over the
+    /// (modified) header + payload so structural tests reach the parser
+    /// instead of stopping at `BadChecksum`.
+    fn reseal(frame: &mut Vec<u8>) {
+        let body_end = frame.len() - TRAILER_LEN;
+        let crc = crc32(&frame[..body_end]);
+        frame[body_end..].copy_from_slice(&crc.to_le_bytes());
+    }
+
     #[test]
     fn trailing_bytes_inside_payload_are_malformed() {
-        // declare a payload one byte longer than the heartbeat body
+        // declare a payload one byte longer than the heartbeat body (the
+        // junk byte goes before the trailer, which is then re-sealed so
+        // the structural check — not the checksum — is what trips)
         let mut frame = encode(&Msg::Heartbeat { nonce: 1 }).unwrap();
-        frame.push(0xEE);
+        let body_end = frame.len() - TRAILER_LEN;
+        frame.insert(body_end, 0xEE);
         let len = 9u32; // 8-byte nonce + 1 junk byte
         frame[8..12].copy_from_slice(&len.to_le_bytes());
+        reseal(&mut frame);
         assert!(matches!(decode_frame(&frame), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        // the canonical IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_corrupted_byte_is_caught_by_the_checksum() {
+        let frame = encode(&Msg::Result(ResultMsg {
+            request_id: 3,
+            slot: 1,
+            attempt: 0,
+            delay: 0.25,
+            compute_secs: 0.001,
+            payload: sample_matrix(8, 3, 4),
+        }))
+        .unwrap();
+        // flip one bit in every payload byte (and the reserved header
+        // byte): each single corruption must surface as BadChecksum
+        let mut positions: Vec<usize> = (HEADER_LEN..frame.len() - TRAILER_LEN).collect();
+        positions.push(7); // reserved byte: parsed by nothing, covered by CRC
+        for pos in positions {
+            let mut bad = frame.clone();
+            bad[pos] ^= 0x10;
+            match decode_frame(&bad) {
+                Err(WireError::BadChecksum { got, want }) => {
+                    assert_ne!(got, want, "pos={pos}")
+                }
+                other => panic!("pos={pos}: expected BadChecksum, got {other:?}"),
+            }
+            // not recoverable by waiting for more bytes
+            assert!(try_decode(&bad).is_err(), "pos={pos}");
+        }
+        // a corrupted trailer itself is also a checksum mismatch
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadChecksum { .. })));
+    }
+
+    #[test]
+    fn frame_len_reports_the_corrupt_frames_extent() {
+        let frame = encode(&Msg::Heartbeat { nonce: 9 }).unwrap();
+        assert_eq!(frame_len(&frame), Some(frame.len()));
+        // corrupt payload: frame_len still knows the extent (that is the
+        // resync contract — the header's own fields were validated)
+        let mut bad = frame.clone();
+        bad[HEADER_LEN] ^= 0xFF;
+        assert_eq!(frame_len(&bad), Some(frame.len()));
+        // headerless / foreign bytes: no extent
+        assert_eq!(frame_len(&frame[..HEADER_LEN - 1]), None);
+        let mut alien = frame;
+        alien[0] = b'X';
+        assert_eq!(frame_len(&alien), None);
+    }
+
+    /// Satellite: `decode_frame` must never panic on adversarial bytes —
+    /// arbitrary truncations and bit flips of every frame type,
+    /// including the v4 checksum trailer.
+    #[test]
+    fn decode_never_panics_on_truncations_or_bit_flips() {
+        use crate::util::prop::{gen, prop_check, PropConfig};
+        let frames: Vec<Vec<u8>> =
+            all_messages().iter().map(|m| encode(m).unwrap()).collect();
+        prop_check(
+            "decode_frame survives adversarial bytes",
+            PropConfig { cases: 256, ..PropConfig::default() },
+            |rng, case| {
+                let frame = &frames[case % frames.len()];
+                let mut bytes = frame.clone();
+                if rng.bernoulli(0.5) {
+                    // random truncation: must report Truncated (or parse
+                    // an earlier complete frame — impossible here, one
+                    // frame only), never panic
+                    let cut = gen::usize_in(rng, 0, bytes.len());
+                    bytes.truncate(cut);
+                    if cut < frame.len() {
+                        match decode_frame(&bytes) {
+                            Err(_) => {}
+                            Ok(_) => {
+                                return Err(format!("truncated to {cut} decoded"))
+                            }
+                        }
+                    }
+                } else {
+                    // 1–4 random bit flips anywhere in the frame
+                    // (header, payload, or trailer): decode must return
+                    // an error or a changed message — never panic, never
+                    // hand back the original bytes' message
+                    let flips = gen::usize_in(rng, 1, 4);
+                    for _ in 0..flips {
+                        let pos = gen::usize_in(rng, 0, bytes.len() - 1);
+                        let bit = gen::usize_in(rng, 0, 7);
+                        bytes[pos] ^= 1 << bit;
+                    }
+                    if bytes != *frame {
+                        let _ = decode_frame(&bytes); // must not panic
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

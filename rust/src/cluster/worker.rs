@@ -199,6 +199,30 @@ pub fn spawn_loopback_workers(
         .collect()
 }
 
+/// Spawn one loopback worker whose *sends* pass through the seeded
+/// chaos layer (see [`super::chaos`]): a deterministic lossy, lying, or
+/// hanging peer for soak tests. The worker itself stays honest — the
+/// faults live in the connection.
+pub fn spawn_chaos_loopback_worker(
+    dialer: &LoopbackDialer,
+    cfg: &WorkerConfig,
+    plan: &super::chaos::FaultPlan,
+) -> JoinHandle<Result<WorkerStats>> {
+    let dialer = dialer.clone();
+    let cfg = cfg.clone();
+    let plan = plan.clone();
+    std::thread::Builder::new()
+        .name(format!("uepmm-chaos-{}", cfg.name))
+        .spawn(move || {
+            let conn = dialer
+                .dial(&cfg.name)
+                .map_err(|e| anyhow::anyhow!("{}: dial failed: {e}", cfg.name))?;
+            let mut conn = super::chaos::ChaosConn::new(Box::new(conn), &plan);
+            run_worker(&mut conn, &NativeEngine::serial(), &cfg)
+        })
+        .expect("spawn chaos worker thread")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -31,7 +31,7 @@ mod plan;
 mod service;
 
 pub use plan::{
-    build_job_a, build_job_b, build_job_matrices, EncodedA, Plan,
+    build_job_a, build_job_b, build_job_matrices, EncodedA, Plan, Verifier,
 };
 #[allow(deprecated)]
 pub use service::run_service;

@@ -239,6 +239,63 @@ pub fn build_job_matrices(
     (build_job_a(part, a_blocks, recipe), build_job_b(part, b_blocks, recipe))
 }
 
+/// Freivalds verifier for one request's job set: a cheap probabilistic
+/// check that an arriving sub-product really is `W_A · W_B`.
+///
+/// At build time it draws one Gaussian probe vector `r` per slot and
+/// precomputes the reference `v = W_A · (W_B · r)` — two matrix-vector
+/// products, O(n²) per slot. Checking a payload is a single
+/// matrix-vector product `payload · r` compared against `v`, again
+/// O(n²), versus the O(n³) of recomputing `W_A · W_B` outright. A
+/// tampered payload passes only if its error lies in the probe's null
+/// space — probability 0 for a Gaussian probe under real perturbations.
+///
+/// The probe RNG is supplied by the caller (the cluster server seeds it
+/// from `(verify_seed, request_id)` on a stream disjoint from delay
+/// sampling), so enabling or disabling verification never shifts any
+/// other random draw and honest-run outcomes stay bit-identical.
+#[derive(Clone, Debug)]
+pub struct Verifier {
+    probes: Vec<Matrix>,
+    refs: Vec<Matrix>,
+}
+
+impl Verifier {
+    /// Draw one probe per job and precompute the references.
+    pub fn new(jobs: &[(Arc<Matrix>, Arc<Matrix>)], rng: &mut Pcg64) -> Verifier {
+        let mut probes = Vec::with_capacity(jobs.len());
+        let mut refs = Vec::with_capacity(jobs.len());
+        for (wa, wb) in jobs {
+            let r = Matrix::randn(wb.cols(), 1, 0.0, 1.0, rng);
+            let v = matmul(wa, &matmul(wb, &r));
+            probes.push(r);
+            refs.push(v);
+        }
+        Verifier { probes, refs }
+    }
+
+    /// Number of slots this verifier covers.
+    pub fn slots(&self) -> usize {
+        self.probes.len()
+    }
+
+    /// Check one arriving payload against slot `slot`'s probe. Returns
+    /// `false` for wrong shapes or a product that misses the reference
+    /// beyond relative tolerance.
+    pub fn check(&self, slot: usize, payload: &Matrix) -> bool {
+        let (r, v) = match (self.probes.get(slot), self.refs.get(slot)) {
+            (Some(r), Some(v)) => (r, v),
+            _ => return false,
+        };
+        if payload.rows() != v.rows() || payload.cols() != r.rows() {
+            return false;
+        }
+        let pr = matmul(payload, r);
+        let scale = v.max_abs().max(pr.max_abs()).max(1.0);
+        pr.sub(v).max_abs() <= 1e-6 * scale
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,6 +401,51 @@ mod tests {
             assert!(enc.wa[w].allclose(&wa, 0.0));
             assert!(enc.job_b(&b_blocks, w).allclose(&wb, 0.0));
         }
+    }
+
+    #[test]
+    fn verifier_accepts_honest_products_and_rejects_tampered_ones() {
+        let mut rng = Pcg64::seed_from(31);
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let cm = crate::partition::ClassMap::from_matrices(&part, &a, &b, 3);
+        let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> = spec
+            .generate_packets(&part, &cm, 10, &mut rng)
+            .iter()
+            .map(|p| {
+                let (wa, wb) =
+                    build_job_matrices(&part, &a_blocks, &b_blocks, &p.recipe);
+                (Arc::new(wa), Arc::new(wb))
+            })
+            .collect();
+        let mut vrng = Pcg64::with_stream(99, 1);
+        let v = Verifier::new(&jobs, &mut vrng);
+        assert_eq!(v.slots(), 10);
+        for (s, (wa, wb)) in jobs.iter().enumerate() {
+            let honest = matmul(wa, wb);
+            assert!(v.check(s, &honest), "honest payload rejected at slot {s}");
+            // Byzantine worker: perturb one entry well above float noise
+            let mut data = honest.data().to_vec();
+            data[0] += 1.0 + 0.5 * honest.max_abs();
+            let forged = Matrix::from_vec(honest.rows(), honest.cols(), data);
+            assert!(!v.check(s, &forged), "forged payload accepted at slot {s}");
+        }
+    }
+
+    #[test]
+    fn verifier_rejects_wrong_shapes_and_unknown_slots() {
+        let mut rng = Pcg64::seed_from(32);
+        let wa = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let wb = Matrix::randn(3, 5, 0.0, 1.0, &mut rng);
+        let jobs = vec![(Arc::new(wa.clone()), Arc::new(wb.clone()))];
+        let v = Verifier::new(&jobs, &mut Pcg64::seed_from(7));
+        assert!(v.check(0, &matmul(&wa, &wb)));
+        assert!(!v.check(0, &Matrix::zeros(5, 5)), "wrong shape must fail");
+        assert!(!v.check(1, &matmul(&wa, &wb)), "out-of-range slot must fail");
     }
 
     #[test]

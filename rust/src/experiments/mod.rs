@@ -5,6 +5,7 @@
 
 mod ablation;
 mod adaptive;
+mod chaos;
 mod common;
 mod fig1;
 mod fig10;
@@ -51,6 +52,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "adaptive",
             "static-Γ vs adaptive-Γ served loss under drifting heterogeneous straggle",
             adaptive::run,
+        ),
+        (
+            "chaos",
+            "Byzantine-tolerance soak: lossy + lying workers, quarantine, bit-identical recovery",
+            chaos::run,
         ),
     ]
 }

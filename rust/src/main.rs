@@ -22,8 +22,8 @@ use uepmm::api::{
     SessionBuilder,
 };
 use uepmm::cluster::{
-    ClusterConfig, ClusterServer, DeadlineMode, TcpConn, TcpTransport, Transport,
-    WorkerConfig,
+    ChaosConn, ClusterConfig, ClusterServer, DeadlineMode, FaultPlan, TcpConn,
+    TcpTransport, Transport, WorkerConfig,
 };
 use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
@@ -390,7 +390,14 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             .opt("min-workers", "2", "TCP: workers to wait for before serving")
             .opt("accept-timeout", "60", "seconds to wait for worker registration")
             .opt("requests", "6", "number of multiplication requests")
-            .opt("matrices", "2", "distinct A matrices cycled through the stream");
+            .opt("matrices", "2", "distinct A matrices cycled through the stream")
+            .opt("heartbeat-secs", "2", "per-worker heartbeat ack timeout, seconds")
+            .opt(
+                "evict-after",
+                "1",
+                "consecutive missed heartbeats before a worker is evicted",
+            )
+            .flag("no-verify", "skip Freivalds verification of arriving results");
         let c = CodedOpts::declare(c, "10");
         let c = TimingOpts::declare(
             c,
@@ -411,6 +418,10 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let requests: usize = a.get("requests")?;
     let n_matrices = a.get::<usize>("matrices")?.max(1);
     let accept_timeout = Duration::from_secs_f64(a.get_f64("accept-timeout")?);
+    let heartbeat_secs = a.get_f64("heartbeat-secs")?;
+    anyhow::ensure!(heartbeat_secs > 0.0, "--heartbeat-secs must be > 0");
+    let evict_after: u32 = a.get("evict-after")?;
+    anyhow::ensure!(evict_after >= 1, "--evict-after must be >= 1");
 
     // The loopback path injects seeded virtual delays and filters on the
     // virtual deadline (deterministic); the TCP path lets workers and the
@@ -420,6 +431,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         time_scale: timing.time_scale,
         // the session owns the encoded-block cache
         cache_capacity: 0,
+        heartbeat_timeout: Duration::from_secs_f64(heartbeat_secs),
+        evict_after,
+        verify: !a.get_bool("no-verify"),
         ..ClusterConfig::default()
     };
     let (backend, expected) = if loopback {
@@ -486,6 +500,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut mats)).collect();
     let (mut received, mut late, mut missing, mut recovered) = (0, 0, 0, 0);
     let (mut retries, mut corrupt) = (0usize, 0usize);
+    let (mut verify_failures, mut quarantined) = (0usize, 0usize);
     let (mut refinements, mut monotone) = (0usize, true);
     for req in 0..requests {
         let a_id = (req % n_matrices) as u64;
@@ -515,12 +530,18 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         recovered += out.outcome.recovered;
         retries += out.retries;
         corrupt += out.corrupt;
+        verify_failures += out.verify_failures;
+        quarantined = quarantined.max(out.quarantined);
+        let upkeep = session.maintain()?;
         refinements += out.progress.refinements();
         monotone &= out.progress.loss_non_increasing();
-        let upkeep = session.maintain()?;
         for id in upkeep.evicted {
             println!("worker {id} evicted (missed heartbeat)");
         }
+        for id in &upkeep.quarantined {
+            println!("worker {id} quarantined (failed verification)");
+        }
+        quarantined = quarantined.max(upkeep.quarantined.len());
         if upkeep.buffered_results > 0 {
             println!(
                 "heartbeat buffered {} in-flight result frame(s)",
@@ -538,7 +559,8 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     println!(
         "stream done: requests={requests} received={received} late={late} \
          missing={missing} recovered_total={recovered} retries={retries} \
-         corrupt={corrupt} full_recovery={full_recovery} cache_hits={} \
+         corrupt={corrupt} verify_failures={verify_failures} \
+         quarantined={quarantined} full_recovery={full_recovery} cache_hits={} \
          cache_misses={} cache_evictions={}",
         cache.hits, cache.misses, cache.evictions
     );
@@ -569,7 +591,13 @@ fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
             .opt("name", "", "worker name (default worker-<pid>)")
             .opt("omega", "1.0", "capacity scaling for self-injected delays")
             .opt("seed", "0", "delay-sampling RNG seed")
-            .opt("retry", "15", "seconds to keep retrying the initial connect");
+            .opt("retry", "15", "seconds to keep retrying the initial connect")
+            .opt(
+                "chaos",
+                "",
+                "fault-injection spec: drop=P,corrupt=P,dup=P,delay=P,\
+                 delay-ms=N,reorder=P,tamper=P,seed=N,hang=N (empty = off)",
+            );
         let c = TimingOpts::declare(
             c,
             "",
@@ -591,22 +619,45 @@ fn cmd_worker(rest: &[String]) -> anyhow::Result<()> {
         time_scale: timing.time_scale,
         seed: a.get("seed")?,
     };
+    let chaos = match a.get_str("chaos") {
+        "" => None,
+        _ => Some(a.get::<FaultPlan>("chaos")?),
+    };
     let engine = engine_opts.build()?;
     let addr = a.get_str("connect");
     let deadline = Instant::now() + Duration::from_secs_f64(a.get_f64("retry")?);
+    // Exponential backoff with deterministic jitter: a cohort of workers
+    // launched together (same script, staggered names) fans out instead
+    // of hammering the coordinator in lockstep every 250ms.
+    let mut jitter = Pcg64::with_stream(
+        cfg.seed,
+        name.bytes()
+            .fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(u64::from(b))),
+    );
+    let mut backoff = Duration::from_millis(50);
     let mut conn = loop {
         match TcpConn::connect(addr) {
             Ok(c) => break c,
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     anyhow::bail!("{name}: could not reach coordinator {addr}: {e}");
                 }
-                std::thread::sleep(Duration::from_millis(250));
+                let wait = backoff.mul_f64(0.5 + 0.5 * jitter.next_f64());
+                std::thread::sleep(wait.min(deadline.duration_since(now)));
+                backoff = (backoff * 2).min(Duration::from_secs(2));
             }
         }
     };
     println!("{name}: connected to {addr} (engine {})", engine.name());
-    let stats = uepmm::cluster::run_worker(&mut conn, &engine, &cfg)?;
+    let stats = match chaos {
+        Some(plan) => {
+            println!("{name}: chaos injection on: {plan:?}");
+            let mut conn = ChaosConn::new(Box::new(conn), &plan);
+            uepmm::cluster::run_worker(&mut conn, &engine, &cfg)?
+        }
+        None => uepmm::cluster::run_worker(&mut conn, &engine, &cfg)?,
+    };
     println!(
         "{name}: done ({}): id={} jobs={} heartbeats={}",
         if stats.clean_shutdown { "clean shutdown" } else { "connection lost" },
