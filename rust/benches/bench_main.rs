@@ -331,6 +331,57 @@ fn main() {
             std::hint::black_box(wire::decode_frame(&bytes).unwrap());
         });
 
+        // rateless family: seeded coefficient derivation, one packet
+        // payload, a full stream decode to rank K, and the per-packet
+        // result frame codec
+        use uepmm::cluster::wire::RatelessResultMsg;
+        use uepmm::coding::RatelessSpec;
+        use uepmm::coordinator::RatelessPlan;
+        let spec_rl = SyntheticSpec::fig9_rxc().scaled(10).with_blocks(6);
+        let mut r2 = rng.split();
+        let (ra, rb) = spec_rl.sample_matrices(&mut r2);
+        let rplan = RatelessPlan::build_with_classes(
+            &spec_rl.part,
+            RatelessSpec::new(0.05, 0.1, spec_rl.gamma.clone()),
+            spec_rl.class_map(),
+            &ra,
+            &rb,
+        )
+        .unwrap();
+        h.bench("cluster/rateless-encode: derive 36 seeded packets", || {
+            for k in 0..36u32 {
+                std::hint::black_box(rplan.packet(1, 0, k));
+            }
+        });
+        let pkt0 = rplan.packet(1, 0, 0);
+        h.bench("cluster/rateless-encode: one packet payload (K=36)", || {
+            std::hint::black_box(rplan.payload(&pkt0));
+        });
+        h.bench("cluster/rateless-decode: absorb one stream to rank 36", || {
+            let mut st = DecodeState::new(rplan.space.clone());
+            let mut k = 0u32;
+            while !st.is_complete() && k < 200 {
+                let p = rplan.packet(1, 0, k);
+                st.add_packet(&p, None);
+                k += 1;
+            }
+            std::hint::black_box(st.num_recovered());
+        });
+        let rmsg = Msg::RatelessResult(RatelessResultMsg {
+            request_id: 1,
+            stream: 0,
+            seq: 0,
+            attempt: 0,
+            delay: 0.5,
+            compute_secs: 0.0,
+            more: true,
+            payload: rplan.payload(&pkt0),
+        });
+        h.bench("cluster/wire: encode+decode rateless result frame", || {
+            let bytes = wire::encode(&rmsg).unwrap();
+            std::hint::black_box(wire::decode_frame(&bytes).unwrap());
+        });
+
         // encoded-block cache: the per-request A-side cost a miss pays
         // (split + packet draw + every W_A) vs the hit's lookup
         let (a2, _) = spec_rxc.sample_matrices(&mut r);

@@ -141,14 +141,23 @@ pub struct InProcessBackend<E: ExecEngine = NativeEngine> {
 
 struct InFlight {
     prep: PreparedRequest,
-    /// Worker indices sorted by `(delay, slot)` — the shared absorb
-    /// order of every virtual-time path.
-    order: Vec<usize>,
-    next: usize,
+    mode: Mode,
     st: DecodeState,
     received: usize,
     tracker: ProgressTracker,
     start: Instant,
+}
+
+/// How one in-flight request replays its virtual arrivals.
+enum Mode {
+    /// Fixed-rate: worker indices sorted by `(delay, slot)` — the shared
+    /// absorb order of every virtual-time path — plus the replay cursor.
+    Fixed { order: Vec<usize>, next: usize },
+    /// Rateless: the merged in-deadline `(time, stream, seq)` events of
+    /// every stream's schedule, sorted by arrival, plus each stream's
+    /// in-deadline packet budget and the replay cursor. The stream stops
+    /// at decode completion, not at a packet count.
+    Rateless { events: Vec<(f64, usize, u32)>, budgets: Vec<usize>, next: usize },
 }
 
 impl InProcessBackend<NativeEngine> {
@@ -171,46 +180,90 @@ impl<E: ExecEngine> InProcessBackend<E> {
 
     fn finalize(fl: InFlight) -> RunReport {
         let jobs = fl.prep.jobs();
-        let replayed = fl.next;
         let prep = fl.prep;
-        // `late` means "completed past the deadline", which is knowable
-        // up front from the delays; arrivals the stream never replayed
-        // (an early cancel) are neither received nor late — they show
-        // up as missing(), like results a cluster never saw
-        let late = prep
-            .delays
-            .as_ref()
-            .map(|d| d.iter().filter(|&&t| t > prep.t_max).count())
-            .unwrap_or(0);
-        // timing telemetry mirrors the accounting above: one record per
-        // replayed arrival plus every knowable-late one, in absorption
-        // order; the virtual "worker" of slot s is s itself
-        let timings: Vec<JobTiming> = match prep.delays.as_ref() {
-            Some(delays) => fl
-                .order
-                .iter()
-                .enumerate()
-                .filter_map(|(idx, &slot)| {
-                    let is_late = delays[slot] > prep.t_max;
-                    (idx < replayed || is_late).then(|| JobTiming {
-                        slot: slot as u32,
-                        worker: slot as u64,
-                        attempt: 0,
-                        delay: delays[slot],
-                        compute_secs: 0.0,
-                        late: is_late,
-                    })
-                })
-                .collect(),
-            None => Vec::new(),
-        };
-        let outcome = match &prep.work {
-            PreparedWork::Encoded { .. } => match &prep.score {
-                Some(s) => {
-                    score_outcome(&prep.part, &prep.cm, &s.c_true, &fl.st, fl.received)
+        // accounting and telemetry are mode-shaped: a fixed-rate request
+        // knows its late arrivals up front from the delays (arrivals the
+        // stream never replayed — an early cancel — are neither received
+        // nor late: they show up as missing(), like results a cluster
+        // never saw); a rateless request schedules nothing past the
+        // deadline, and "dispatched" is what the stream actually
+        // generated before the decode completed
+        let (late, dispatched, timings, worker_packets, partial_packets) =
+            match &fl.mode {
+                Mode::Fixed { order, next } => {
+                    let replayed = *next;
+                    let late = prep
+                        .delays
+                        .as_ref()
+                        .map(|d| d.iter().filter(|&&t| t > prep.t_max).count())
+                        .unwrap_or(0);
+                    // one record per replayed arrival plus every
+                    // knowable-late one, in absorption order; the
+                    // virtual "worker" of slot s is s itself
+                    let timings: Vec<JobTiming> = match prep.delays.as_ref() {
+                        Some(delays) => order
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(idx, &slot)| {
+                                let is_late = delays[slot] > prep.t_max;
+                                (idx < replayed || is_late).then(|| JobTiming {
+                                    slot: slot as u32,
+                                    worker: slot as u64,
+                                    attempt: 0,
+                                    delay: delays[slot],
+                                    compute_secs: 0.0,
+                                    late: is_late,
+                                })
+                            })
+                            .collect(),
+                        None => Vec::new(),
+                    };
+                    (late, jobs, timings, Vec::new(), 0)
                 }
-                None => assemble_outcome(&prep.part, &prep.cm, &fl.st, fl.received),
-            },
+                Mode::Rateless { events, budgets, next } => {
+                    let replayed = &events[..*next];
+                    let timings: Vec<JobTiming> = replayed
+                        .iter()
+                        .map(|&(t, s, k)| JobTiming {
+                            slot: k,
+                            worker: s as u64,
+                            attempt: 0,
+                            delay: t,
+                            compute_secs: 0.0,
+                            late: false,
+                        })
+                        .collect();
+                    let mut credit = vec![0usize; budgets.len()];
+                    for &(_, s, _) in replayed {
+                        credit[s] += 1;
+                    }
+                    let worker_packets: Vec<(u64, usize)> =
+                        credit.iter().enumerate().map(|(s, &c)| (s as u64, c)).collect();
+                    let partial = budgets
+                        .iter()
+                        .zip(&credit)
+                        .filter(|(&b, _)| b > 0)
+                        .map(|(_, &c)| c)
+                        .min()
+                        .unwrap_or(0);
+                    (0, *next, timings, worker_packets, partial)
+                }
+            };
+        let outcome = match &prep.work {
+            PreparedWork::Encoded { .. } | PreparedWork::Rateless { .. } => {
+                match &prep.score {
+                    Some(s) => score_outcome(
+                        &prep.part,
+                        &prep.cm,
+                        &s.c_true,
+                        &fl.st,
+                        fl.received,
+                    ),
+                    None => {
+                        assemble_outcome(&prep.part, &prep.cm, &fl.st, fl.received)
+                    }
+                }
+            }
             PreparedWork::Blocks { a_blocks, b_blocks, .. } => {
                 // coefficient-only decode: compute exactly the recovered
                 // sub-products, directly from the block split
@@ -253,7 +306,7 @@ impl<E: ExecEngine> InProcessBackend<E> {
         RunReport {
             outcome,
             late,
-            dispatched: jobs,
+            dispatched,
             // in-process execution has no workers to lose or go rogue
             retries: 0,
             corrupt: 0,
@@ -263,6 +316,8 @@ impl<E: ExecEngine> InProcessBackend<E> {
             cache_hit: prep.cache_hit,
             backend: "in-process",
             timings,
+            worker_packets,
+            partial_packets,
             progress: fl.tracker.finish(),
         }
     }
@@ -284,31 +339,58 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
     }
 
     fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
-        let Some(delays) = prep.delays.clone() else {
-            return Err(UepmmError::Config(
-                "in-process backend replays virtual delays; none were sampled"
-                    .to_string(),
-            ));
+        let mode = match &prep.work {
+            PreparedWork::Rateless { schedules, .. } => {
+                // merge every stream's in-deadline completions into one
+                // arrival-ordered event list; ties replay in (stream,
+                // seq) order, mirroring the cluster server's schedule
+                let mut events: Vec<(f64, usize, u32)> = Vec::new();
+                let mut budgets = vec![0usize; schedules.len()];
+                for (s, sched) in schedules.iter().enumerate() {
+                    for (k, &t) in sched.iter().enumerate() {
+                        if t <= prep.t_max {
+                            events.push((t, s, k as u32));
+                            budgets[s] += 1;
+                        }
+                    }
+                }
+                events.sort_by(|a, b| {
+                    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+                });
+                Mode::Rateless { events, budgets, next: 0 }
+            }
+            _ => {
+                let Some(delays) = prep.delays.clone() else {
+                    return Err(UepmmError::Config(
+                        "in-process backend replays virtual delays; none were \
+                         sampled"
+                            .to_string(),
+                    ));
+                };
+                if delays.len() != prep.jobs() {
+                    return Err(UepmmError::Config(format!(
+                        "{} delays for {} jobs",
+                        delays.len(),
+                        prep.jobs()
+                    )));
+                }
+                let mut order: Vec<usize> = (0..delays.len()).collect();
+                order.sort_by(|&x, &y| {
+                    delays[x].total_cmp(&delays[y]).then(x.cmp(&y))
+                });
+                Mode::Fixed { order, next: 0 }
+            }
         };
-        if delays.len() != prep.jobs() {
-            return Err(UepmmError::Config(format!(
-                "{} delays for {} jobs",
-                delays.len(),
-                prep.jobs()
-            )));
-        }
-        let mut order: Vec<usize> = (0..delays.len()).collect();
-        order.sort_by(|&x, &y| delays[x].total_cmp(&delays[y]).then(x.cmp(&y)));
         let space = match &prep.work {
             PreparedWork::Encoded { enc, .. } => enc.space.clone(),
             PreparedWork::Blocks { space, .. } => space.clone(),
+            PreparedWork::Rateless { plan, .. } => plan.space.clone(),
         };
         let mut tracker = ProgressTracker::new(&prep.part, prep.score.as_ref());
         tracker.seed_replans(&prep.replans);
         self.active.push(InFlight {
             prep,
-            order,
-            next: 0,
+            mode,
             st: DecodeState::new(space),
             received: 0,
             tracker,
@@ -326,8 +408,19 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
         };
         let exhausted = {
             let fl = &self.active[idx];
-            let delays = fl.prep.delays.as_ref().expect("validated at submit");
-            fl.next >= fl.order.len() || delays[fl.order[fl.next]] > fl.prep.t_max
+            match &fl.mode {
+                Mode::Fixed { order, next } => {
+                    let delays =
+                        fl.prep.delays.as_ref().expect("validated at submit");
+                    *next >= order.len()
+                        || delays[order[*next]] > fl.prep.t_max
+                }
+                // a rateless stream is open-ended: it stops when the
+                // decode completes (or the deadline admits no more)
+                Mode::Rateless { events, next, .. } => {
+                    *next >= events.len() || fl.st.is_complete()
+                }
+            }
         };
         if exhausted {
             let fl = self.active.swap_remove(idx);
@@ -335,18 +428,39 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
         }
         // absorb exactly one arrival: the anytime streaming step
         let fl = &mut self.active[idx];
-        let w = fl.order[fl.next];
-        fl.next += 1;
-        let delay = fl.prep.delays.as_ref().expect("validated at submit")[w];
-        let newly = match &fl.prep.work {
-            PreparedWork::Encoded { enc, wb } => {
-                let payload = self
-                    .engine
-                    .matmul(&enc.wa[w], &wb[w])
-                    .map_err(|e| UepmmError::Compute(format!("{e:#}")))?;
-                fl.st.add_packet(&enc.packets[w], Some(payload))
+        let (delay, newly) = match &mut fl.mode {
+            Mode::Fixed { order, next } => {
+                let w = order[*next];
+                *next += 1;
+                let delay =
+                    fl.prep.delays.as_ref().expect("validated at submit")[w];
+                let newly = match &fl.prep.work {
+                    PreparedWork::Encoded { enc, wb } => {
+                        let payload = self
+                            .engine
+                            .matmul(&enc.wa[w], &wb[w])
+                            .map_err(|e| UepmmError::Compute(format!("{e:#}")))?;
+                        fl.st.add_packet(&enc.packets[w], Some(payload))
+                    }
+                    PreparedWork::Blocks { packets, .. } => {
+                        fl.st.add_packet(&packets[w], None)
+                    }
+                    PreparedWork::Rateless { .. } => {
+                        unreachable!("rateless requests run in Mode::Rateless")
+                    }
+                };
+                (delay, newly)
             }
-            PreparedWork::Blocks { packets, .. } => fl.st.add_packet(&packets[w], None),
+            Mode::Rateless { events, next, .. } => {
+                let (t, s, k) = events[*next];
+                *next += 1;
+                let PreparedWork::Rateless { plan, .. } = &fl.prep.work else {
+                    unreachable!("Mode::Rateless implies rateless work")
+                };
+                let pkt = plan.packet(fl.prep.id, s as u64, k);
+                let payload = plan.payload(&pkt);
+                (t, fl.st.add_packet(&pkt, Some(payload)))
+            }
         };
         fl.received += 1;
         fl.tracker.record(delay, fl.received, fl.st.num_recovered(), &newly, 0);
@@ -465,11 +579,7 @@ impl ClusterCore {
         let PreparedRequest {
             part, cm, t_max, delays, work, score, cache_hit, replans, ..
         } = prep;
-        let (enc, wb) = match work {
-            PreparedWork::Encoded { enc, wb } => (enc, wb),
-            PreparedWork::Blocks { .. } => unreachable!("rejected at submit"),
-        };
-        // pre-validate what serve_jobs would reject, so configuration
+        // pre-validate what the server would reject, so configuration
         // misuse is classified as Config here rather than depending on
         // the wording of the server's internal error messages
         if self.server.config().deadline == DeadlineMode::Wall
@@ -479,6 +589,70 @@ impl ClusterCore {
                 "Wall deadline mode needs time_scale > 0".to_string(),
             ));
         }
+        let (enc, wb) = match work {
+            PreparedWork::Encoded { enc, wb } => (enc, wb),
+            PreparedWork::Blocks { .. } => unreachable!("rejected at submit"),
+            PreparedWork::Rateless { plan, schedules } => {
+                let virt = self.server.config().deadline == DeadlineMode::Virtual;
+                if virt && schedules.len() != self.server.live_workers() {
+                    return Err(UepmmError::Config(format!(
+                        "{} stream schedules for {} live workers",
+                        schedules.len(),
+                        self.server.live_workers()
+                    )));
+                }
+                let mut tracker = ProgressTracker::new(&part, score.as_ref());
+                tracker.seed_replans(&replans);
+                let served = {
+                    let mut obs = |step: DecodeStep| {
+                        tracker.record(
+                            step.delay,
+                            step.received,
+                            step.recovered,
+                            &step.newly,
+                            step.attempt,
+                        )
+                    };
+                    // wall-clock servers pace their own workers; only
+                    // virtual-time servers replay the session's schedules
+                    self.server
+                        .serve_rateless(
+                            &plan,
+                            t_max,
+                            virt.then(|| schedules.as_slice()),
+                            Some(&mut obs),
+                        )
+                        .map_err(classify_cluster_error)?
+                };
+                let outcome = match &score {
+                    Some(s) => score_outcome(
+                        &part,
+                        &cm,
+                        &s.c_true,
+                        &served.st,
+                        served.received,
+                    ),
+                    None => assemble_outcome(&part, &cm, &served.st, served.received),
+                };
+                let quarantined = self.server.quarantined_workers().len();
+                return Ok(RunReport {
+                    outcome,
+                    late: served.late,
+                    dispatched: served.dispatched,
+                    retries: served.retries,
+                    corrupt: served.corrupt,
+                    verify_failures: served.verify_failures,
+                    quarantined,
+                    wall: served.wall,
+                    cache_hit,
+                    backend: self.name,
+                    timings: served.timings,
+                    worker_packets: served.worker_packets,
+                    partial_packets: served.partial_packets,
+                    progress: tracker.finish(),
+                });
+            }
+        };
         if let Some(d) = &delays {
             if d.len() != enc.packets.len() {
                 return Err(UepmmError::Config(format!(
@@ -531,6 +705,8 @@ impl ClusterCore {
             cache_hit,
             backend: self.name,
             timings: served.timings,
+            worker_packets: served.worker_packets,
+            partial_packets: served.partial_packets,
             progress: tracker.finish(),
         })
     }

@@ -231,4 +231,134 @@ mod tests {
         let e = session.poll(RequestHandle { id: 99 }).unwrap_err();
         assert!(matches!(e, UepmmError::Config(_)), "{e}");
     }
+
+    fn rateless_builder() -> SessionBuilder {
+        use crate::coding::RatelessSpec;
+        Session::builder()
+            .partitioning(Partitioning::rxc(3, 3, 4, 5, 4))
+            .code(CodeSpec::stacked(CodeKind::Rateless(RatelessSpec::paper_default())))
+            .workers(4)
+            .latency(LatencyModel::exp(1.0))
+            .deadline(100.0)
+            .score(true)
+            .seed(7)
+    }
+
+    fn rateless_operands() -> (crate::linalg::Matrix, crate::linalg::Matrix) {
+        let mut rng = crate::rng::Pcg64::seed_from(11);
+        let a = crate::linalg::Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = crate::linalg::Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+        (a, b)
+    }
+
+    #[test]
+    fn rateless_session_decodes_exactly_and_reruns_bit_identically() {
+        let run = || {
+            let (a, b) = rateless_operands();
+            let mut session = rateless_builder()
+                .backend(InProcessBackend::serial())
+                .build()
+                .unwrap();
+            session.run(Request::new(0, a, b)).unwrap()
+        };
+        let x = run();
+        assert_eq!(x.outcome.recovered, 9);
+        assert!(x.outcome.normalized_loss < 1e-9, "{}", x.outcome.normalized_loss);
+        assert!(x.cache_hit.is_none(), "rateless requests bypass the encode cache");
+        assert_eq!(x.worker_packets.len(), 4);
+        let credited: usize = x.worker_packets.iter().map(|&(_, c)| c).sum();
+        assert_eq!(credited, x.outcome.received);
+        assert_eq!(x.dispatched, x.outcome.received, "stream stops at completion");
+        assert!(x.progress.loss_non_increasing());
+        let y = run();
+        assert_eq!(x.outcome.c_hat.data(), y.outcome.c_hat.data());
+        assert_eq!(x.outcome.received, y.outcome.received);
+        assert_eq!(x.partial_packets, y.partial_packets);
+    }
+
+    #[test]
+    fn rateless_straggler_stream_earns_partial_credit_in_process() {
+        // three fast streams carry only two packets each (6 < 9
+        // unknowns), so the decode cannot finish without the straggler's
+        // slow-but-steady stream
+        let schedules = vec![
+            vec![0.1, 0.2],
+            vec![0.1, 0.2],
+            vec![0.1, 0.2],
+            (1..=60).map(|k| k as f64).collect(),
+        ];
+        let (a, b) = rateless_operands();
+        let mut session = rateless_builder()
+            .deadline(1000.0)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let report =
+            session.run(Request::new(0, a, b).schedules(schedules)).unwrap();
+        assert_eq!(report.outcome.recovered, 9);
+        assert!(report.outcome.normalized_loss < 1e-9);
+        assert!(report.partial_packets > 0, "slowest stream must be credited");
+        assert!(report.worker_packets[3].1 >= 3, "{:?}", report.worker_packets);
+    }
+
+    #[test]
+    fn rateless_session_over_pooled_backend_decodes_exactly() {
+        let schedules = vec![
+            vec![0.1, 0.2],
+            vec![0.1, 0.2],
+            vec![0.1, 0.2],
+            (1..=60).map(|k| k as f64).collect(),
+        ];
+        let (a, b) = rateless_operands();
+        let mut session = rateless_builder()
+            .deadline(1000.0)
+            .backend(PooledBackend::spawn(4).unwrap())
+            .build()
+            .unwrap();
+        let report =
+            session.run(Request::new(0, a, b).schedules(schedules)).unwrap();
+        assert_eq!(report.outcome.recovered, 9);
+        assert!(report.outcome.normalized_loss < 1e-9);
+        assert!(report.partial_packets > 0);
+        assert_eq!(report.verify_failures, 0);
+        session.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rateless_misuse_is_rejected_with_config_errors() {
+        // schedules on a fixed-rate code
+        let (a, b) = rateless_operands();
+        let mut fixed = Session::builder()
+            .partitioning(Partitioning::rxc(3, 3, 4, 5, 4))
+            .code(CodeSpec::stacked(CodeKind::Mds))
+            .workers(4)
+            .latency(LatencyModel::exp(1.0))
+            .deadline(10.0)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let e = fixed
+            .submit(Request::new(0, a.clone(), b.clone()).schedules(vec![vec![]; 4]))
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+
+        // selective compute under a rateless code
+        let mut sel = rateless_builder()
+            .compute(Compute::Selective)
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let e = sel.submit(Request::new(0, a.clone(), b.clone())).unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+
+        // wrong schedule count
+        let mut rl = rateless_builder()
+            .backend(InProcessBackend::serial())
+            .build()
+            .unwrap();
+        let e = rl
+            .submit(Request::new(0, a, b).schedules(vec![vec![0.5]; 3]))
+            .unwrap_err();
+        assert!(matches!(e, UepmmError::Config(_)), "{e}");
+    }
 }

@@ -15,7 +15,7 @@ use std::time::Duration;
 use crate::analysis::UepStrategy;
 use crate::cluster::{CacheKey, CacheStats, EncodedBlockCache, JobTiming};
 use crate::coding::{CodeKind, CodeSpec, Packet, UnknownSpace, WindowPolynomial};
-use crate::coordinator::{EncodedA, Outcome};
+use crate::coordinator::{EncodedA, Outcome, RatelessPlan};
 use crate::latency::LatencyModel;
 use crate::linalg::Matrix;
 use crate::partition::{ClassMap, Partitioning};
@@ -42,12 +42,21 @@ pub struct Request {
     /// sampling from the session's latency model. This is how scenario
     /// experiments inject *actual* (possibly drifting, heterogeneous)
     /// straggle while the session plans under its assumed/fitted model.
+    /// Under a rateless code the entries are per-*stream* pacing bases:
+    /// stream `s` completes its `k`-th packet at `(k+1)·delays[s]`.
     pub delays: Option<Vec<f64>>,
+    /// Rateless codes only: explicit per-stream cumulative packet
+    /// completion schedules (`schedules[s][k]` = virtual time stream `s`
+    /// finishes its `k`-th packet; non-decreasing per stream). Overrides
+    /// both `delays`-based pacing and latency-model sampling — this is
+    /// how experiments inject *drifting* per-packet straggle that a
+    /// single base delay cannot express.
+    pub schedules: Option<Vec<Vec<f64>>>,
 }
 
 impl Request {
     pub fn new(a_id: u64, a: Matrix, b: Matrix) -> Request {
-        Request { a_id, a, b, t_max: None, score: None, delays: None }
+        Request { a_id, a, b, t_max: None, score: None, delays: None, schedules: None }
     }
 
     /// Override the session deadline for this request.
@@ -66,6 +75,13 @@ impl Request {
     /// instead of sampling from the session's latency model.
     pub fn delays(mut self, delays: Vec<f64>) -> Request {
         self.delays = Some(delays);
+        self
+    }
+
+    /// Inject explicit per-stream packet completion schedules (rateless
+    /// codes only; see [`Request::schedules`]).
+    pub fn schedules(mut self, schedules: Vec<Vec<f64>>) -> Request {
+        self.schedules = Some(schedules);
         self
     }
 }
@@ -112,8 +128,19 @@ pub struct RunReport {
     /// Wall time the request took end to end.
     pub wall: Duration,
     /// `Some(hit)` when served through the session's encoded-block
-    /// cache (`None` in selective-compute mode, which skips `W_A`).
+    /// cache (`None` in selective-compute mode, which skips `W_A`, and
+    /// for rateless requests, which derive packets instead of caching
+    /// encodings).
     pub cache_hit: Option<bool>,
+    /// Rateless requests: packets absorbed into the decode, by the id of
+    /// the worker (or virtual stream) that delivered them — one entry
+    /// per dispatched stream. Empty for fixed-rate requests.
+    pub worker_packets: Vec<(u64, usize)>,
+    /// Rateless partial credit: the minimum, over streams that had any
+    /// packets scheduled, of packets credited to the stream's owner.
+    /// `> 0` means even the slowest worker contributed decoded work.
+    /// Always 0 for fixed-rate requests.
+    pub partial_packets: usize,
     /// Name of the backend that served the request.
     pub backend: &'static str,
     /// Per-job round-trip telemetry (one record per classified result,
@@ -167,6 +194,12 @@ pub enum PreparedWork {
         a_blocks: Vec<Matrix>,
         b_blocks: Vec<Matrix>,
     },
+    /// Rateless stream: the deterministic [`RatelessPlan`] from which
+    /// any `(stream, seq)` packet — and its honest payload — derives,
+    /// plus the per-stream cumulative completion schedules that pace it
+    /// in virtual time (ignored by wall-clock backends, where pacing is
+    /// a property of the workers).
+    Rateless { plan: Arc<RatelessPlan>, schedules: Vec<Vec<f64>> },
 }
 
 /// One fully prepared request as handed to a [`Backend`].
@@ -191,11 +224,16 @@ pub struct PreparedRequest {
 }
 
 impl PreparedRequest {
-    /// Coded jobs (= packets) in this request.
+    /// Coded jobs (= packets) in this request. For a rateless request
+    /// this is the *scheduled* packet count — the decode typically stops
+    /// well short of it.
     pub fn jobs(&self) -> usize {
         match &self.work {
             PreparedWork::Encoded { enc, .. } => enc.packets.len(),
             PreparedWork::Blocks { packets, .. } => packets.len(),
+            PreparedWork::Rateless { schedules, .. } => {
+                schedules.iter().map(|s| s.len()).sum()
+            }
         }
     }
 }
@@ -715,6 +753,52 @@ impl Session {
         } else {
             None
         };
+        // a rateless code has no fixed packet set to materialize or
+        // cache: the prepared work is the deterministic plan (coder +
+        // blocks) plus the virtual pacing of each worker's stream
+        let rateless_spec = match &self.spec.kind {
+            CodeKind::Rateless(r) => Some(r.clone()),
+            _ => None,
+        };
+        if let Some(rspec) = rateless_spec {
+            if self.compute == Compute::Selective {
+                return Err(UepmmError::Config(
+                    "selective compute is fixed-rate only; rateless streams \
+                     already decode packet by packet"
+                        .to_string(),
+                ));
+            }
+            let plan = RatelessPlan::build_with_classes(
+                &self.part,
+                rspec,
+                cm.clone(),
+                &req.a,
+                &req.b,
+            )
+            .map_err(|e| UepmmError::Encode(format!("{e:#}")))?;
+            let schedules =
+                self.rateless_schedules(&req, t_max, plan.num_unknowns())?;
+            let id = self.next_id;
+            self.next_id += 1;
+            return Ok(PreparedRequest {
+                id,
+                part: self.part.clone(),
+                cm,
+                t_max,
+                delays: None,
+                work: PreparedWork::Rateless { plan: Arc::new(plan), schedules },
+                score: score_ref,
+                cache_hit: None,
+                replans: Vec::new(),
+            });
+        }
+        if req.schedules.is_some() {
+            return Err(UepmmError::Config(
+                "per-stream schedules apply to rateless codes only; \
+                 fixed-rate requests inject per-job delays"
+                    .to_string(),
+            ));
+        }
         let (work, cache_hit) = match self.compute {
             Compute::Honest => {
                 // the cache is only coherent under pinned classes: an
@@ -826,6 +910,88 @@ impl Session {
             // the backend is committed to serving this request
             replans: Vec::new(),
         })
+    }
+
+    /// Build the per-stream packet pacing of one rateless request:
+    /// explicit injected schedules win, then `delays`-based linear
+    /// pacing (stream `s` finishes packet `k` at `(k+1)·delays[s]`),
+    /// then pacing bases sampled from the session's latency model.
+    /// Derived schedules stop at the deadline and are capped at
+    /// `2·K + 16` packets per stream — enough for any single stream to
+    /// carry the whole decode (robust-soliton overhead is `o(K)`).
+    fn rateless_schedules(
+        &mut self,
+        req: &Request,
+        t_max: f64,
+        unknowns: usize,
+    ) -> ApiResult<Vec<Vec<f64>>> {
+        if let Some(scheds) = &req.schedules {
+            if scheds.len() != self.workers {
+                return Err(UepmmError::Config(format!(
+                    "{} injected schedules for {} worker streams",
+                    scheds.len(),
+                    self.workers
+                )));
+            }
+            for (s, sched) in scheds.iter().enumerate() {
+                for (k, &t) in sched.iter().enumerate() {
+                    let ok = t.is_finite()
+                        && t >= 0.0
+                        && (k == 0 || t >= sched[k - 1]);
+                    if !ok {
+                        return Err(UepmmError::Config(format!(
+                            "schedule of stream {s} must be finite, \
+                             non-negative, and non-decreasing"
+                        )));
+                    }
+                }
+            }
+            return Ok(scheds.clone());
+        }
+        let omega = self.omega_value();
+        let bases: Vec<f64> = match &req.delays {
+            Some(d) => {
+                if d.len() != self.workers {
+                    return Err(UepmmError::Config(format!(
+                        "{} injected pacing bases for {} worker streams",
+                        d.len(),
+                        self.workers
+                    )));
+                }
+                if d.iter().any(|b| !b.is_finite() || *b <= 0.0) {
+                    return Err(UepmmError::Config(
+                        "rateless pacing bases must be finite and positive"
+                            .to_string(),
+                    ));
+                }
+                d.clone()
+            }
+            None => match self.latency.clone() {
+                Some(model) => (0..self.workers)
+                    .map(|_| model.sample_scaled(omega, &mut self.rng))
+                    .collect(),
+                None => {
+                    return Err(UepmmError::Config(
+                        "rateless pacing needs injected delays/schedules or \
+                         a session latency model"
+                            .to_string(),
+                    ))
+                }
+            },
+        };
+        let cap = 2 * unknowns + 16;
+        Ok(bases
+            .iter()
+            .map(|&b| {
+                let mut sched = Vec::with_capacity(cap.min(64));
+                let mut t = b;
+                while t <= t_max && sched.len() < cap {
+                    sched.push(t);
+                    t += b;
+                }
+                sched
+            })
+            .collect())
     }
 
     /// The adaptive step, run while preparing a request once the

@@ -37,7 +37,7 @@ use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 
 use super::transport::{Connection, Transport};
-use super::wire::{self, Msg, ResultMsg, WireError, HEADER_LEN};
+use super::wire::{self, Msg, RatelessResultMsg, ResultMsg, WireError, HEADER_LEN};
 
 /// Seeded per-frame fault probabilities and scripted faults. Parse one
 /// from a `key=value,...` spec (the `uepmm worker --chaos` syntax):
@@ -152,9 +152,24 @@ impl FromStr for FaultPlan {
     }
 }
 
-/// Only the data plane is faultable (see module docs).
+/// Only the data plane is faultable (see module docs). The rateless
+/// frames (`RatelessJob`/`RatelessResult`) are data; `Drain`/`Redo` are
+/// stream control and stay exempt like the heartbeat plane.
 fn is_data(msg: &Msg) -> bool {
-    matches!(msg, Msg::Job(_) | Msg::Result(_))
+    matches!(
+        msg,
+        Msg::Job(_) | Msg::Result(_) | Msg::RatelessJob(_) | Msg::RatelessResult(_)
+    )
+}
+
+/// One Byzantine perturbation: bump a random entry by more than the
+/// payload's own magnitude, so the lie is numerically unmissable for a
+/// verifier yet wire-perfect.
+fn perturb(payload: &Matrix, rng: &mut Pcg64) -> Matrix {
+    let mut data = payload.data().to_vec();
+    let idx = rng.next_bounded(data.len() as u64) as usize;
+    data[idx] += 1.0 + 0.5 * payload.max_abs();
+    Matrix::from_vec(payload.rows(), payload.cols(), data)
 }
 
 /// A [`Connection`] whose *sends* pass through a seeded fault layer.
@@ -251,15 +266,15 @@ impl Connection for ChaosConn {
         let tampered;
         let msg = match msg {
             Msg::Result(r) if self.rng.bernoulli(self.plan.tamper) => {
-                let mut data = r.payload.data().to_vec();
-                let idx = self.rng.next_bounded(data.len() as u64) as usize;
-                data[idx] += 1.0 + 0.5 * r.payload.max_abs();
                 tampered = Msg::Result(ResultMsg {
-                    payload: Matrix::from_vec(
-                        r.payload.rows(),
-                        r.payload.cols(),
-                        data,
-                    ),
+                    payload: perturb(&r.payload, &mut self.rng),
+                    ..r.clone()
+                });
+                &tampered
+            }
+            Msg::RatelessResult(r) if self.rng.bernoulli(self.plan.tamper) => {
+                tampered = Msg::RatelessResult(RatelessResultMsg {
+                    payload: perturb(&r.payload, &mut self.rng),
                     ..r.clone()
                 });
                 &tampered
@@ -344,6 +359,20 @@ mod tests {
             delay: 0.1,
             compute_secs: 0.0,
             payload: matmul(&a, &b),
+        })
+    }
+
+    fn rateless_msg(seq: u32) -> Msg {
+        let mut rng = Pcg64::seed_from(seq as u64 + 200);
+        Msg::RatelessResult(RatelessResultMsg {
+            request_id: 1,
+            stream: 0,
+            seq,
+            attempt: 0,
+            delay: 0.1,
+            compute_secs: 0.0,
+            more: true,
+            payload: Matrix::randn(4, 4, 0.0, 1.0, &mut rng),
         })
     }
 
@@ -473,6 +502,30 @@ mod tests {
         // control still flows while the data plane hangs
         chaos.send(&Msg::HeartbeatAck { nonce: 1 }).unwrap();
         assert!(matches!(honest_recv(&mut peer), Msg::HeartbeatAck { nonce: 1 }));
+    }
+
+    #[test]
+    fn rateless_result_frames_are_data_plane_but_drain_is_control() {
+        // tamper perturbs the packet payload yet the frame stays
+        // wire-perfect — only Freivalds can catch it
+        let plan = FaultPlan { tamper: 1.0, seed: 12, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        let sent = rateless_msg(0);
+        chaos.send(&sent).unwrap();
+        let got = honest_recv(&mut peer);
+        let (Msg::RatelessResult(s), Msg::RatelessResult(g)) = (&sent, &got)
+        else {
+            panic!("expected rateless results");
+        };
+        assert_eq!(g.seq, s.seq);
+        assert_ne!(g.payload.data(), s.payload.data());
+        // drop swallows packet frames; Drain (stream control) still flows
+        let plan = FaultPlan { drop: 1.0, seed: 13, ..FaultPlan::default() };
+        let (mut chaos, mut peer) = chaos_pair(plan);
+        chaos.send(&rateless_msg(1)).unwrap();
+        assert!(peer.recv_timeout(Some(WAIT)).unwrap().is_none());
+        chaos.send(&Msg::Drain { request_id: 1 }).unwrap();
+        assert!(matches!(honest_recv(&mut peer), Msg::Drain { request_id: 1 }));
     }
 
     #[test]

@@ -74,6 +74,40 @@
 //!   (then registry order, keeping selection deterministic), so slow
 //!   workers shed load instead of accumulating it.
 //!
+//! # Rateless streams (wire v5)
+//!
+//! The fixed-rate protocol above ships `n` pre-drawn jobs and waits;
+//! the rateless family ([`crate::coding::CodeKind::Rateless`]) has no
+//! `n`. Wire v5 adds a second, fountain-shaped data plane:
+//!
+//! * **Multi-packet jobs.** One [`Msg::RatelessJob`] per worker opens a
+//!   *stream*: the worker derives packet `seq = 0, 1, 2, …` itself —
+//!   coefficients are seeded per `(request_id, stream, seq)`, so the
+//!   coordinator reconstructs every row without the rows ever crossing
+//!   the wire — and keeps emitting until told to stop.
+//! * **Per-packet result frames.** Each [`Msg::RatelessResult`] carries
+//!   its `seq` and a `more` flag (the worker's own claim that further
+//!   packets follow). Frames are data plane: CRC32-checked, Freivalds-
+//!   verified, chaos-injectable ([`chaos`]) exactly like fixed-rate
+//!   results; a dropped or damaged frame costs that packet, never the
+//!   stream — in `Virtual` mode the stall timer flags the gap and a
+//!   [`Msg::Redo`] (control plane) re-requests from the flagged `seq`.
+//! * **Drain on completion.** The moment the decoder reaches full rank
+//!   the coordinator broadcasts [`Msg::Drain`] (control plane) and
+//!   absorbs stragglers' in-flight frames instead of discarding them:
+//!   a slow worker's partial stream still contributes every packet it
+//!   landed.
+//!
+//! **Partial credit** is the accounting contract that makes the last
+//! point auditable: [`ServedDecode::worker_packets`] reports, per
+//! stream, how many of its packets the decoder actually absorbed, and
+//! [`ServedDecode::partial_packets`] is the minimum credit across
+//! contributing streams — `> 0` means *no* worker was cut out of the
+//! decode, i.e. straggler work was recovered rather than raced to
+//! death. `uepmm serve --code rateless` prints both per request and a
+//! stream-wide `partial_packets=` summary that the CI rateless smoke
+//! asserts against a 10× straggler.
+//!
 //! Entry points: `uepmm serve` / `uepmm worker` (see `main.rs`) for the
 //! TCP deployment, [`ClusterServer`] + [`spawn_loopback_workers`] for
 //! embedded/loopback use — or wrap either form in
@@ -99,7 +133,9 @@ pub use transport::{
     loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,
     TcpConn, TcpTransport, Transport,
 };
-pub use wire::{JobMsg, Msg, ResultMsg, WireError};
+pub use wire::{
+    JobMsg, Msg, RatelessJobMsg, RatelessResultMsg, ResultMsg, WireError,
+};
 pub use worker::{
     run_worker, spawn_chaos_loopback_worker, spawn_loopback_workers, WorkerConfig,
     WorkerStats,

@@ -41,10 +41,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coding::{CodeSpec, DecodeState, Packet, UnknownSpace};
+use crate::coding::{CodeSpec, DecodeState, JobRecipe, Packet, UnknownSpace};
 use crate::coordinator::{
     assemble_outcome, build_job_matrices, score_outcome, EncodedA, Outcome, Plan,
-    Verifier,
+    RatelessPlan, RatelessVerifier, Verifier,
 };
 use crate::latency::LatencyModel;
 use crate::linalg::{matmul, Matrix};
@@ -55,7 +55,9 @@ use std::collections::VecDeque;
 
 use super::cache::{CacheKey, CacheStats, EncodedBlockCache};
 use super::transport::{Connection, Transport};
-use super::wire::{JobMsg, Msg, ResultMsg, WireError};
+use super::wire::{
+    JobMsg, Msg, RatelessJobMsg, RatelessResultMsg, ResultMsg, WireError,
+};
 
 /// Per-connection poll slice while multiplexing receives.
 const POLL_SLICE: Duration = Duration::from_millis(1);
@@ -265,6 +267,8 @@ struct WorkerSlot {
     /// while waiting for acks): buffered here and drained by the next
     /// serve poll instead of being dropped.
     inbox: VecDeque<ResultMsg>,
+    /// Same buffer for per-packet rateless result frames (protocol v5).
+    rateless_inbox: VecDeque<RatelessResultMsg>,
     /// EWMA straggle score over reported result delays (see
     /// [`WorkerInfo::straggle`]).
     straggle: Option<f64>,
@@ -327,6 +331,81 @@ impl Collect {
             if !self.settled[s] {
                 self.settled[s] = true;
                 self.outstanding -= 1;
+            }
+        }
+    }
+}
+
+/// Per-(stream, seq) collection record of one rateless request.
+struct PacketSlot {
+    payload: Option<Matrix>,
+    absorbed: bool,
+    written_off: bool,
+    /// Flagged for regeneration via [`Msg::Redo`] (end-of-stream gap,
+    /// verify failure, or stall).
+    redo_now: bool,
+    /// Redo sends so far (bounded by [`ClusterConfig::max_job_retries`]).
+    redos: u32,
+    /// Registry id of the delivering worker.
+    src: u64,
+    compute_secs: f64,
+    /// Reported virtual completion time (Wall-mode absorption records
+    /// it; Virtual mode absorbs on the injected schedule instead).
+    delay: f64,
+}
+
+/// Rateless counterpart of [`Collect`]: dedup, end-of-stream tracking,
+/// and redo flags per `(stream, seq)` packet.
+struct RatelessCollect {
+    request_id: u64,
+    /// `slots[stream][seq]`, sized by the per-stream budgets.
+    slots: Vec<Vec<PacketSlot>>,
+    /// Whether each stream's final frame (`more == false`) was seen —
+    /// after it, missing packets of the stream only arrive via Redo.
+    eos: Vec<bool>,
+    /// Packets neither delivered nor written off yet.
+    outstanding: usize,
+    corrupt: usize,
+    verify_failures: usize,
+}
+
+impl RatelessCollect {
+    fn new(request_id: u64, budgets: &[u32]) -> RatelessCollect {
+        let slots: Vec<Vec<PacketSlot>> = budgets
+            .iter()
+            .map(|&b| {
+                (0..b)
+                    .map(|_| PacketSlot {
+                        payload: None,
+                        absorbed: false,
+                        written_off: false,
+                        redo_now: false,
+                        redos: 0,
+                        src: 0,
+                        compute_secs: 0.0,
+                        delay: 0.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        let outstanding = budgets.iter().map(|&b| b as usize).sum();
+        RatelessCollect {
+            request_id,
+            slots,
+            eos: vec![false; budgets.len()],
+            outstanding,
+            corrupt: 0,
+            verify_failures: 0,
+        }
+    }
+
+    /// Stall recovery: flag every undelivered packet for regeneration.
+    fn flag_all_missing(&mut self) {
+        for stream in &mut self.slots {
+            for sl in stream {
+                if sl.payload.is_none() && !sl.absorbed && !sl.written_off {
+                    sl.redo_now = true;
+                }
             }
         }
     }
@@ -402,6 +481,17 @@ pub struct ServedDecode {
     /// Per-job round-trip telemetry, in absorption order (one record per
     /// classified result, including late ones).
     pub timings: Vec<JobTiming>,
+    /// Rateless partial credit: packets absorbed into the decode, by the
+    /// registry id of the worker that delivered them (one entry per
+    /// worker the request was dispatched to). Empty for fixed-rate
+    /// requests.
+    pub worker_packets: Vec<(u64, usize)>,
+    /// Rateless partial credit: the minimum, over every worker that was
+    /// dispatched a non-empty packet stream, of packets credited to the
+    /// stream's owner. `> 0` means even the slowest worker contributed
+    /// decoded work — the straggler-exploitation claim the rateless code
+    /// exists to make. Always 0 for fixed-rate requests.
+    pub partial_packets: usize,
     pub wall: Duration,
 }
 
@@ -525,6 +615,7 @@ impl ClusterServer {
                     // incarnation's requests and can only be stale now
                     w.in_flight.clear();
                     w.inbox.clear();
+                    w.rateless_inbox.clear();
                     w.straggle = None;
                     w.missed_heartbeats = 0;
                     return Ok(id);
@@ -541,6 +632,7 @@ impl ClusterServer {
                     jobs_done: 0,
                     in_flight: Vec::new(),
                     inbox: VecDeque::new(),
+                    rateless_inbox: VecDeque::new(),
                     straggle: None,
                     missed_heartbeats: 0,
                     verify_failures: 0,
@@ -647,6 +739,11 @@ impl ClusterServer {
                     // work the serve path still has to account for.
                     Ok(Some(Msg::Result(r))) => {
                         self.workers[wi].inbox.push_back(r);
+                        buffered += 1;
+                        acked[wi] = true;
+                    }
+                    Ok(Some(Msg::RatelessResult(r))) => {
+                        self.workers[wi].rateless_inbox.push_back(r);
                         buffered += 1;
                         acked[wi] = true;
                     }
@@ -1060,6 +1157,306 @@ impl ClusterServer {
             verify_failures: ctx.verify_failures,
             attempts,
             timings,
+            worker_packets: Vec::new(),
+            partial_packets: 0,
+            wall: start.elapsed(),
+        })
+    }
+
+    /// Serve one rateless request (protocol v5): every live worker gets
+    /// an open-ended packet stream keyed by `(request_id, stream, seq)`,
+    /// the coordinator derives the identical coefficient rows from the
+    /// plan's [`RatelessCoder`], and decoding stops the streams with a
+    /// [`Msg::Drain`] the moment the unknowns are determined.
+    ///
+    /// * [`DeadlineMode::Virtual`] — `delays` is required: one cumulative
+    ///   (non-decreasing) per-packet arrival schedule per live worker.
+    ///   The coordinator first replays the k-way merge of those schedules
+    ///   through a coefficient-only decode to find the exact packet set
+    ///   the deadline admits, dispatches precisely those budgets, heals
+    ///   losses with [`Msg::Redo`] (any worker holding the request
+    ///   context can regenerate any `(stream, seq)`), and finally absorbs
+    ///   payloads in schedule order — bit-identical across reruns, worker
+    ///   thread counts, chaos, and verify on/off.
+    /// * [`DeadlineMode::Wall`] — workers stream under a generous budget
+    ///   until the decode completes or the wall deadline passes; whatever
+    ///   physically arrives in time is absorbed in arrival order.
+    ///
+    /// The returned [`ServedDecode`] carries rateless partial credit:
+    /// [`ServedDecode::worker_packets`] and
+    /// [`ServedDecode::partial_packets`]. `dispatched` counts *packets*
+    /// (the virtual schedule's size; in `Wall` mode the packets actually
+    /// classified), not streams, so the
+    /// `received + late + missing == dispatched` balance holds per
+    /// packet.
+    pub fn serve_rateless(
+        &mut self,
+        plan: &RatelessPlan,
+        t_max: f64,
+        delays: Option<&[Vec<f64>]>,
+        mut observe: Option<&mut dyn FnMut(DecodeStep)>,
+    ) -> Result<ServedDecode> {
+        anyhow::ensure!(
+            self.live_workers() > 0,
+            "no live workers registered with the coordinator"
+        );
+        if self.cfg.deadline == DeadlineMode::Wall {
+            anyhow::ensure!(
+                self.cfg.time_scale > 0.0,
+                "Wall deadline mode needs time_scale > 0"
+            );
+        }
+        let request_id = self.next_request_id;
+        self.next_request_id += 1;
+        let verifier = if self.cfg.verify {
+            let mut vrng = Pcg64::with_stream(self.cfg.verify_seed, request_id);
+            Some(RatelessVerifier::new(plan, &mut vrng))
+        } else {
+            None
+        };
+        for w in &mut self.workers {
+            w.in_flight.clear();
+        }
+        let start = Instant::now();
+        let pace = self.cfg.time_scale;
+        let live: Vec<usize> = (0..self.workers.len())
+            .filter(|&wi| self.workers[wi].alive)
+            .collect();
+        let owners: Vec<u64> = live.iter().map(|&wi| self.workers[wi].id).collect();
+
+        // ---- budgets (+ the deterministic schedule in Virtual mode) ----
+        let (budgets, schedule) = match self.cfg.deadline {
+            DeadlineMode::Virtual => {
+                let d = delays.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "Virtual-mode rateless serving needs one injected \
+                         per-packet delay schedule per live worker"
+                    )
+                })?;
+                anyhow::ensure!(
+                    d.len() == live.len(),
+                    "one delay schedule per live worker ({} workers, {} schedules)",
+                    live.len(),
+                    d.len()
+                );
+                for s in d {
+                    anyhow::ensure!(
+                        s.windows(2).all(|w| w[0] <= w[1]),
+                        "per-packet delay schedules must be non-decreasing"
+                    );
+                }
+                rateless_schedule(plan, request_id, d, t_max)
+            }
+            DeadlineMode::Wall => {
+                // generous per-stream budget: any single worker could
+                // carry the whole decode alone (robust-Soliton overhead
+                // is K + O(√K·ln²) ≪ 2K), with slack for strikes
+                let k = plan.num_unknowns() as u32;
+                (vec![2 * k + 16; live.len()], Vec::new())
+            }
+        };
+
+        // ---- dispatch one stream context to every live worker ----------
+        // A worker whose schedule needs no packets still gets the context
+        // (budget 0): it can then serve Redo frames for other streams.
+        let mut retries = 0usize;
+        for (s, &wi) in live.iter().enumerate() {
+            let stream_delays = match (self.cfg.deadline, delays) {
+                (DeadlineMode::Virtual, Some(d)) => {
+                    d[s][..(budgets[s] as usize).min(d[s].len())].to_vec()
+                }
+                _ => Vec::new(),
+            };
+            let rj = Msg::RatelessJob(RatelessJobMsg {
+                request_id,
+                stream: s as u64,
+                budget: budgets[s],
+                delta: plan.spec.delta,
+                c: plan.spec.c,
+                gamma: plan.spec.gamma.probs().to_vec(),
+                class_of: plan.class_of(),
+                factors: plan.factors(),
+                delays: stream_delays,
+                t_max,
+                pace,
+                a_blocks: plan.a_blocks.clone(),
+                b_blocks: plan.b_blocks.clone(),
+            });
+            match self.workers[wi].conn.send(&rj) {
+                Ok(()) => {}
+                Err(e @ (WireError::Oversize { .. } | WireError::Oversized { .. })) => {
+                    anyhow::bail!("rateless job for stream {s} cannot be encoded: {e}")
+                }
+                Err(_) => self.workers[wi].alive = false,
+            }
+        }
+        anyhow::ensure!(
+            self.live_workers() > 0,
+            "every worker died while dispatching the rateless job"
+        );
+
+        let mut rc = RatelessCollect::new(request_id, &budgets);
+        let mut st = DecodeState::new(plan.space.clone());
+        let mut received = 0usize;
+        let mut late = 0usize;
+        let mut timings: Vec<JobTiming> = Vec::new();
+        let dispatched;
+        match self.cfg.deadline {
+            DeadlineMode::Virtual => {
+                dispatched = schedule.len();
+                let hard = start + self.cfg.collect_timeout;
+                let mut last_progress = Instant::now();
+                while rc.outstanding > 0 && Instant::now() < hard {
+                    let progressed =
+                        self.rateless_poll(&mut rc, plan, verifier.as_ref(), &budgets);
+                    let sent = self.redo_flagged(&mut rc);
+                    retries += sent;
+                    if progressed || sent > 0 {
+                        last_progress = Instant::now();
+                    } else if self.live_workers() == 0 {
+                        break; // nothing outstanding can ever arrive
+                    } else if last_progress.elapsed() >= self.cfg.stall_timeout {
+                        // nothing moved for the stall window: a frame may
+                        // have been dropped on a lossy channel — flag every
+                        // missing packet for regeneration (bounded by the
+                        // per-packet retry budget; duplicates absorb once)
+                        rc.flag_all_missing();
+                        last_progress = Instant::now();
+                    }
+                }
+                // stop the streams and drop the worker-side contexts
+                self.drain_rateless(request_id);
+                // deterministic absorb: schedule order, schedule times
+                for &(t, s, k) in &schedule {
+                    let sl = &mut rc.slots[s][k as usize];
+                    let Some(payload) = sl.payload.take() else { continue };
+                    let pkt = plan.packet(request_id, s as u64, k);
+                    let newly = st.add_packet(&pkt, Some(payload));
+                    sl.absorbed = true;
+                    received += 1;
+                    timings.push(JobTiming {
+                        slot: k,
+                        worker: sl.src,
+                        attempt: sl.redos,
+                        delay: t,
+                        compute_secs: sl.compute_secs,
+                        late: false,
+                    });
+                    if let Some(obs) = observe.as_mut() {
+                        obs(DecodeStep {
+                            delay: t,
+                            attempt: sl.redos,
+                            received,
+                            recovered: st.num_recovered(),
+                            newly,
+                        });
+                    }
+                }
+            }
+            DeadlineMode::Wall => {
+                let deadline = start + Duration::from_secs_f64(t_max * pace);
+                while !st.is_complete() && Instant::now() < deadline {
+                    let progressed =
+                        self.rateless_poll(&mut rc, plan, verifier.as_ref(), &budgets);
+                    // absorb whatever this round delivered, in stream order
+                    for s in 0..rc.slots.len() {
+                        for k in 0..rc.slots[s].len() {
+                            let sl = &mut rc.slots[s][k];
+                            let Some(payload) = sl.payload.take() else { continue };
+                            let pkt = plan.packet(request_id, s as u64, k as u32);
+                            let newly = st.add_packet(&pkt, Some(payload));
+                            sl.absorbed = true;
+                            received += 1;
+                            timings.push(JobTiming {
+                                slot: k as u32,
+                                worker: sl.src,
+                                attempt: sl.redos,
+                                delay: sl.delay,
+                                compute_secs: sl.compute_secs,
+                                late: false,
+                            });
+                            if let Some(obs) = observe.as_mut() {
+                                obs(DecodeStep {
+                                    delay: sl.delay,
+                                    attempt: sl.redos,
+                                    received,
+                                    recovered: st.num_recovered(),
+                                    newly,
+                                });
+                            }
+                        }
+                    }
+                    if !progressed && self.live_workers() == 0 {
+                        break;
+                    }
+                }
+                self.drain_rateless(request_id);
+                // grace drain: count (and discard) in-flight stragglers so
+                // they do not pollute the next request's collection
+                let grace = Instant::now() + self.cfg.late_drain;
+                while Instant::now() < grace {
+                    let mut got = false;
+                    for wi in 0..self.workers.len() {
+                        if !self.workers[wi].alive {
+                            continue;
+                        }
+                        match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
+                            Ok(Some(Msg::RatelessResult(r)))
+                                if r.request_id == request_id =>
+                            {
+                                late += 1;
+                                got = true;
+                            }
+                            Ok(Some(_)) | Ok(None) => {}
+                            Err(WireError::BadChecksum { .. }) => {}
+                            Err(_) => self.workers[wi].alive = false,
+                        }
+                    }
+                    if !got {
+                        break;
+                    }
+                }
+                dispatched = received + late;
+            }
+        }
+        // partial credit: packets absorbed into the decode, by deliverer
+        let mut worker_packets: Vec<(u64, usize)> =
+            owners.iter().map(|&id| (id, 0)).collect();
+        for stream in &rc.slots {
+            for sl in stream {
+                if !sl.absorbed {
+                    continue;
+                }
+                match worker_packets.iter_mut().find(|e| e.0 == sl.src) {
+                    Some(e) => e.1 += 1,
+                    None => worker_packets.push((sl.src, 1)),
+                }
+            }
+        }
+        let partial_packets = live
+            .iter()
+            .enumerate()
+            .filter(|&(s, _)| budgets[s] > 0)
+            .map(|(s, _)| {
+                worker_packets
+                    .iter()
+                    .find(|e| e.0 == owners[s])
+                    .map_or(0, |e| e.1)
+            })
+            .min()
+            .unwrap_or(0);
+        Ok(ServedDecode {
+            st,
+            received,
+            late,
+            dispatched,
+            retries,
+            corrupt: rc.corrupt,
+            verify_failures: rc.verify_failures,
+            attempts: Vec::new(),
+            timings,
+            worker_packets,
+            partial_packets,
             wall: start.elapsed(),
         })
     }
@@ -1195,6 +1592,10 @@ impl ClusterServer {
                     self.accept_frame(wi, r, ctx, verifier, on_result)
                 }
                 Ok(Some(Msg::HeartbeatAck { .. })) => {}
+                // a rateless frame here is a straggler from an earlier
+                // rateless request on the same stream: stale, not a
+                // protocol violation
+                Ok(Some(Msg::RatelessResult(_))) => {}
                 Ok(Some(_)) => {
                     // protocol violation: only workers speak here
                     self.kill_worker(wi, ctx);
@@ -1307,6 +1708,185 @@ impl ClusterServer {
         self.kill_worker(wi, ctx);
     }
 
+    /// One rateless poll pass: drain every worker's rateless inbox, then
+    /// read one frame from each live worker. Unlike the fixed-rate
+    /// [`Self::poll_round`], *every* live worker is polled — a stream
+    /// context lives on each of them, and a Redo reply may come from a
+    /// worker other than the stream's owner. Returns whether any frame
+    /// was classified (the stall-clock signal).
+    fn rateless_poll(
+        &mut self,
+        rc: &mut RatelessCollect,
+        plan: &RatelessPlan,
+        verifier: Option<&RatelessVerifier>,
+        budgets: &[u32],
+    ) -> bool {
+        let mut progressed = false;
+        for wi in 0..self.workers.len() {
+            while let Some(r) = self.workers[wi].rateless_inbox.pop_front() {
+                progressed |=
+                    self.accept_rateless(wi, r, rc, plan, verifier, budgets);
+            }
+            if !self.workers[wi].alive {
+                continue;
+            }
+            match self.workers[wi].conn.recv_timeout(Some(POLL_SLICE)) {
+                Ok(Some(Msg::RatelessResult(r))) => {
+                    progressed |=
+                        self.accept_rateless(wi, r, rc, plan, verifier, budgets);
+                }
+                Ok(Some(Msg::HeartbeatAck { .. })) => {}
+                // a fixed-rate result here is a straggler from an earlier
+                // request: buffer it for the fixed-rate classifier, which
+                // drops it once provably stale
+                Ok(Some(Msg::Result(r))) => self.workers[wi].inbox.push_back(r),
+                Ok(Some(_)) => self.workers[wi].alive = false,
+                Ok(None) => {}
+                Err(WireError::BadChecksum { .. }) => rc.corrupt += 1,
+                Err(_) => self.workers[wi].alive = false,
+            }
+        }
+        progressed
+    }
+
+    /// Classify one rateless result frame from worker `wi`. Returns
+    /// whether the frame belonged to this request (progress for the
+    /// stall clock), regardless of whether it was ultimately stored.
+    fn accept_rateless(
+        &mut self,
+        wi: usize,
+        r: RatelessResultMsg,
+        rc: &mut RatelessCollect,
+        plan: &RatelessPlan,
+        verifier: Option<&RatelessVerifier>,
+        budgets: &[u32],
+    ) -> bool {
+        if r.request_id != rc.request_id {
+            return false; // straggler from an earlier request: drop
+        }
+        let s = r.stream as usize;
+        if s >= budgets.len() || r.seq >= budgets[s] {
+            // outside the dispatched stream/budget space: a broken sender
+            rc.corrupt += 1;
+            self.workers[wi].alive = false;
+            return false;
+        }
+        // end of stream: the owner sends nothing more on its own, so any
+        // still-missing packet of this stream must come via Redo
+        if !r.more && !rc.eos[s] {
+            rc.eos[s] = true;
+            for sl in &mut rc.slots[s] {
+                if sl.payload.is_none() && !sl.absorbed && !sl.written_off {
+                    sl.redo_now = true;
+                }
+            }
+        }
+        let k = r.seq as usize;
+        {
+            let sl = &rc.slots[s][k];
+            if sl.payload.is_some() || sl.absorbed || sl.written_off {
+                return true; // duplicate (a redo raced the original)
+            }
+        }
+        // Freivalds gate: a payload that is not the packet's coefficient
+        // combination never lands — it is flagged for regeneration and
+        // the sender accumulates a strike
+        if let Some(v) = verifier {
+            let pkt = plan.packet(rc.request_id, r.stream, r.seq);
+            let JobRecipe::Stacked { terms } = &pkt.recipe else {
+                unreachable!("rateless packets are always stacked")
+            };
+            if !v.check(terms, &r.payload) {
+                rc.verify_failures += 1;
+                rc.slots[s][k].redo_now = true;
+                self.workers[wi].verify_failures += 1;
+                if self.workers[wi].verify_failures > self.cfg.max_verify_failures {
+                    self.workers[wi].quarantined = true;
+                    self.workers[wi].alive = false;
+                }
+                return true; // the lie still resets the stall clock
+            }
+        }
+        let sl = &mut rc.slots[s][k];
+        sl.payload = Some(r.payload);
+        sl.src = self.workers[wi].id;
+        sl.compute_secs = r.compute_secs;
+        sl.delay = r.delay;
+        sl.redo_now = false;
+        rc.outstanding -= 1;
+        let w = &mut self.workers[wi];
+        w.jobs_done += 1;
+        w.note_result_delay(r.delay);
+        true
+    }
+
+    /// Send a [`Msg::Redo`] for every packet flagged `redo_now`, to the
+    /// least-loaded live worker (any worker holding the request context
+    /// can regenerate any `(stream, seq)`). A packet whose retry budget
+    /// is exhausted — or that no live worker can take — is written off.
+    /// Returns how many redo sends went out.
+    fn redo_flagged(&mut self, rc: &mut RatelessCollect) -> usize {
+        let mut sent = 0usize;
+        for s in 0..rc.slots.len() {
+            for k in 0..rc.slots[s].len() {
+                {
+                    let sl = &rc.slots[s][k];
+                    if !sl.redo_now
+                        || sl.payload.is_some()
+                        || sl.absorbed
+                        || sl.written_off
+                    {
+                        continue;
+                    }
+                }
+                if rc.slots[s][k].redos as usize >= self.cfg.max_job_retries {
+                    let sl = &mut rc.slots[s][k];
+                    sl.written_off = true;
+                    sl.redo_now = false;
+                    rc.outstanding -= 1;
+                    continue;
+                }
+                let attempt = rc.slots[s][k].redos + 1;
+                let msg = Msg::Redo {
+                    request_id: rc.request_id,
+                    stream: s as u64,
+                    seq: k as u32,
+                    attempt,
+                };
+                loop {
+                    let Some(wi) = self.pick_worker() else {
+                        let sl = &mut rc.slots[s][k];
+                        sl.written_off = true;
+                        sl.redo_now = false;
+                        rc.outstanding -= 1;
+                        break;
+                    };
+                    match self.workers[wi].conn.send(&msg) {
+                        Ok(()) => {
+                            let sl = &mut rc.slots[s][k];
+                            sl.redos = attempt;
+                            sl.redo_now = false;
+                            sent += 1;
+                            break;
+                        }
+                        Err(_) => self.workers[wi].alive = false,
+                    }
+                }
+            }
+        }
+        sent
+    }
+
+    /// Best-effort [`Msg::Drain`]: stop every live worker's stream for
+    /// this request and drop their contexts.
+    fn drain_rateless(&mut self, request_id: u64) {
+        for w in &mut self.workers {
+            if w.alive && w.conn.send(&Msg::Drain { request_id }).is_err() {
+                w.alive = false;
+            }
+        }
+    }
+
     /// `Virtual`-mode stall recovery: requeue every unresolved in-flight
     /// slot without killing anyone — the holder may simply have had its
     /// result frame dropped on a lossy channel. Duplicate absorption
@@ -1321,6 +1901,49 @@ impl ClusterServer {
             }
         }
     }
+}
+
+/// Virtual-mode planning for one rateless request: merge the per-stream
+/// cumulative arrival schedules, keep the events the deadline admits,
+/// and replay them through a coefficient-only decode to find the exact
+/// packet set needed. Returns each stream's budget (the needed prefix
+/// length — arrivals are cumulative, so the needed set of a stream is
+/// always a contiguous `0..budget` prefix) and the absorb schedule in
+/// deterministic `(t, stream, seq)` order.
+fn rateless_schedule(
+    plan: &RatelessPlan,
+    request_id: u64,
+    delays: &[Vec<f64>],
+    t_max: f64,
+) -> (Vec<u32>, Vec<(f64, usize, u32)>) {
+    let mut events: Vec<(f64, usize, u32)> = Vec::new();
+    for (s, sched) in delays.iter().enumerate() {
+        for (k, &t) in sched.iter().enumerate() {
+            if t > t_max {
+                break; // cumulative ⇒ every later packet is later still
+            }
+            events.push((t, s, k as u32));
+        }
+    }
+    events.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    // coefficient-only replay: stop at the first event that completes
+    // the decode — everything after it is work nobody needs to do
+    let mut st = DecodeState::new(plan.space.clone());
+    let mut taken: Vec<(f64, usize, u32)> = Vec::new();
+    for &(t, s, k) in &events {
+        taken.push((t, s, k));
+        st.add_packet(&plan.packet(request_id, s as u64, k), None);
+        if st.is_complete() {
+            break;
+        }
+    }
+    let mut budgets = vec![0u32; delays.len()];
+    for &(_, s, k) in &taken {
+        budgets[s] = budgets[s].max(k + 1);
+    }
+    (budgets, taken)
 }
 
 /// Build the wire message for one (re-)dispatch of `slot`. Payloads are
@@ -2177,6 +2800,125 @@ mod tests {
         for h in handles {
             h.join().unwrap().unwrap();
         }
+    }
+
+    fn rateless_setup(seed: u64) -> (RatelessPlan, Matrix) {
+        let mut rng = Pcg64::seed_from(seed);
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let plan = RatelessPlan::build(
+            &part,
+            crate::coding::RatelessSpec::paper_default(),
+            3,
+            &a,
+            &b,
+        )
+        .unwrap();
+        (plan, c)
+    }
+
+    fn rateless_chat(plan: &RatelessPlan, served: &ServedDecode) -> Matrix {
+        assemble_outcome(&plan.part, &plan.cm, &served.st, served.received).c_hat
+    }
+
+    #[test]
+    fn rateless_virtual_is_deterministic_and_decodes_exactly() {
+        let (plan, c_true) = rateless_setup(51);
+        // four streams, linearly slower bases, all cumulative
+        let schedules: Vec<Vec<f64>> = (0..4)
+            .map(|s| {
+                let base = 0.1 * (s + 1) as f64;
+                (0..40).map(|k| base * (k + 1) as f64).collect()
+            })
+            .collect();
+        let run = |verify: bool| {
+            let cfg = ClusterConfig { verify, ..ClusterConfig::default() };
+            let (mut server, _dialer, handles) = start_cluster(4, cfg);
+            let served = server
+                .serve_rateless(&plan, 6.0, Some(schedules.as_slice()), None)
+                .unwrap();
+            finish(server, handles);
+            served
+        };
+        let a1 = run(true);
+        let a2 = run(true);
+        let off = run(false);
+        assert!(a1.st.is_complete(), "generous deadline must decode fully");
+        assert_eq!(a1.received, a1.dispatched, "{a1:?}",);
+        assert_eq!(a1.late, 0);
+        assert_eq!(a1.retries, 0, "honest run needs no redo");
+        assert_eq!(a1.verify_failures, 0);
+        // every absorbed packet is credited to exactly one worker
+        let credited: usize = a1.worker_packets.iter().map(|&(_, n)| n).sum();
+        assert_eq!(credited, a1.received);
+        // absorption order follows the injected schedule
+        for w in a1.timings.windows(2) {
+            assert!(w[0].delay <= w[1].delay);
+        }
+        let c1 = rateless_chat(&plan, &a1);
+        assert!(c1.allclose(&c_true, 1e-9));
+        // rerun and verify-off are bit-identical
+        for other in [&a2, &off] {
+            assert_eq!(a1.received, other.received);
+            assert_eq!(c1.data(), rateless_chat(&plan, other).data());
+        }
+    }
+
+    #[test]
+    fn rateless_straggler_stream_earns_partial_credit() {
+        let (plan, c_true) = rateless_setup(53);
+        // three fast workers with only two in-deadline packets each: the
+        // decode cannot complete without the straggler's stream
+        let mut schedules: Vec<Vec<f64>> = (0..3)
+            .map(|s| vec![0.1 + 0.01 * s as f64, 0.2 + 0.01 * s as f64])
+            .collect();
+        schedules.push((0..120).map(|k| (k + 1) as f64).collect());
+        let (mut server, _dialer, handles) =
+            start_cluster(4, ClusterConfig::default());
+        let mut steps = 0usize;
+        let mut obs = |step: DecodeStep| {
+            steps += 1;
+            assert_eq!(step.received, steps);
+        };
+        let served = server
+            .serve_rateless(&plan, 1e6, Some(schedules.as_slice()), Some(&mut obs))
+            .unwrap();
+        finish(server, handles);
+        assert!(served.st.is_complete());
+        assert_eq!(steps, served.received);
+        assert!(
+            served.partial_packets > 0,
+            "the straggler must contribute decoded packets: {:?}",
+            served.worker_packets
+        );
+        // the straggler's stream carries most of the work here
+        let straggler_credit =
+            served.worker_packets.iter().map(|&(_, n)| n).max().unwrap();
+        assert!(straggler_credit > 2, "{:?}", served.worker_packets);
+        assert!(rateless_chat(&plan, &served).allclose(&c_true, 1e-9));
+    }
+
+    #[test]
+    fn rateless_wall_mode_completes_and_drains() {
+        let (plan, c_true) = rateless_setup(55);
+        let cfg = ClusterConfig {
+            deadline: DeadlineMode::Wall,
+            time_scale: 1.0,
+            ..ClusterConfig::default()
+        };
+        let (mut server, _dialer, handles) = start_cluster(3, cfg);
+        let served = server.serve_rateless(&plan, 10.0, None, None).unwrap();
+        finish(server, handles);
+        assert!(
+            served.st.is_complete(),
+            "only {} packets arrived",
+            served.received
+        );
+        assert!(rateless_chat(&plan, &served).allclose(&c_true, 1e-9));
+        assert_eq!(served.dispatched, served.received + served.late);
+        assert!(served.partial_packets <= served.received);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "UEPW"
-//!      4     2  protocol version (currently 4)
+//!      4     2  protocol version (currently 5)
 //!      6     1  message type tag
 //!      7     1  reserved (0)
 //!      8     4  payload length in bytes
@@ -35,8 +35,12 @@ pub const MAGIC: [u8; 4] = *b"UEPW";
 /// feeding the coordinator's latency estimators); version 4 added the
 /// CRC32 integrity trailer after every payload, so channel corruption
 /// is detected ([`WireError::BadChecksum`]) instead of silently
-/// poisoning the decode.
-pub const VERSION: u16 = 4;
+/// poisoning the decode; version 5 added the rateless multi-packet
+/// frames — [`RatelessJobMsg`] (one job, a whole packet stream),
+/// [`RatelessResultMsg`] (`seq` + `more` per packet), `Drain` (stop a
+/// stream on decode completion) and `Redo` (regenerate one lost
+/// packet).
+pub const VERSION: u16 = 5;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Size of the CRC32 trailer appended after every payload (v4).
@@ -53,12 +57,16 @@ const TAG_RESULT: u8 = 4;
 const TAG_HEARTBEAT: u8 = 5;
 const TAG_HEARTBEAT_ACK: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+const TAG_RATELESS_JOB: u8 = 8;
+const TAG_RATELESS_RESULT: u8 = 9;
+const TAG_DRAIN: u8 = 10;
+const TAG_REDO: u8 = 11;
 
 /// Is `tag` one of the known message type tags? Checked before the CRC
 /// so an unknown type reports [`WireError::UnknownType`] rather than the
 /// (also true, but less specific) checksum mismatch.
 fn tag_known(tag: u8) -> bool {
-    (TAG_HELLO..=TAG_SHUTDOWN).contains(&tag)
+    (TAG_HELLO..=TAG_REDO).contains(&tag)
 }
 
 // ---------------------------------------------------------------- crc32
@@ -141,6 +149,72 @@ pub struct ResultMsg {
     pub payload: Matrix,
 }
 
+/// One rateless job (protocol v5): instead of a single `(W_A, W_B)`
+/// pair, the worker receives everything needed to *derive* an entire
+/// packet stream — the raw factor blocks, the unknown→(a, b) factor
+/// table, the per-unknown class vector, and the robust-Soliton/window
+/// parameters. Coefficients never cross the wire: both ends run the
+/// same [`crate::coding::RatelessCoder`] seeded per
+/// `(request_id, stream, seq)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatelessJobMsg {
+    pub request_id: u64,
+    /// Packet-stream selector (the worker's slot in the request). Any
+    /// worker holding this job context can regenerate any stream's
+    /// packets — that is what makes `Redo` cheap.
+    pub stream: u64,
+    /// How many packets to generate and send (`seq = 0..budget`).
+    /// `0` = context only: hold the job for `Redo` requests.
+    pub budget: u32,
+    /// Robust-Soliton failure parameter δ.
+    pub delta: f64,
+    /// Robust-Soliton spike constant c.
+    pub c: f64,
+    /// Window-sampling weights Γ (already resized to the class count).
+    pub gamma: Vec<f64>,
+    /// Class of each unknown — the worker rebuilds the expanding
+    /// windows from this.
+    pub class_of: Vec<u32>,
+    /// `factors[u] = (a_idx, b_idx)`: which factor blocks unknown `u`
+    /// multiplies.
+    pub factors: Vec<(u32, u32)>,
+    /// Injected cumulative virtual arrival time per `seq`
+    /// (deterministic runs). Empty = the worker self-paces from its own
+    /// straggle model or measured time.
+    pub delays: Vec<f64>,
+    /// Request deadline (virtual seconds) — caps wall sleeping.
+    pub t_max: f64,
+    /// Virtual→wall pacing factor for sleeps.
+    pub pace: f64,
+    /// The raw split blocks of `A` (shared handles, serialized from the
+    /// shared buffers).
+    pub a_blocks: Vec<Arc<Matrix>>,
+    /// The raw split blocks of `B`.
+    pub b_blocks: Vec<Arc<Matrix>>,
+}
+
+/// One packet of a rateless result stream (protocol v5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatelessResultMsg {
+    pub request_id: u64,
+    /// Which packet stream this payload belongs to (usually the sending
+    /// worker's own slot; a `Redo` reply carries the original stream).
+    pub stream: u64,
+    /// Packet sequence number within the stream.
+    pub seq: u32,
+    /// `0` for the in-order stream, `n` for the `n`-th regeneration.
+    pub attempt: u32,
+    /// Virtual completion time of this packet.
+    pub delay: f64,
+    /// Worker-measured wall compute seconds for this packet.
+    pub compute_secs: f64,
+    /// More packets follow in this stream? `false` on the last budgeted
+    /// packet, so the coordinator can immediately re-request anything
+    /// missing instead of waiting out a stall timeout.
+    pub more: bool,
+    pub payload: Matrix,
+}
+
 /// Every message that crosses a cluster connection.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -158,6 +232,17 @@ pub enum Msg {
     HeartbeatAck { nonce: u64 },
     /// Coordinator → worker: drain and exit cleanly.
     Shutdown,
+    /// Coordinator → worker: derive and stream a rateless packet
+    /// sequence (v5).
+    RatelessJob(RatelessJobMsg),
+    /// Worker → coordinator: one packet of a rateless stream (v5).
+    RatelessResult(RatelessResultMsg),
+    /// Coordinator → worker: the request decoded — stop streaming
+    /// packets for it and drop the job context (v5).
+    Drain { request_id: u64 },
+    /// Coordinator → worker: regenerate one specific packet of one
+    /// stream (lost/corrupt frame healing; v5).
+    Redo { request_id: u64, stream: u64, seq: u32, attempt: u32 },
 }
 
 impl Msg {
@@ -170,6 +255,10 @@ impl Msg {
             Msg::Heartbeat { .. } => TAG_HEARTBEAT,
             Msg::HeartbeatAck { .. } => TAG_HEARTBEAT_ACK,
             Msg::Shutdown => TAG_SHUTDOWN,
+            Msg::RatelessJob(_) => TAG_RATELESS_JOB,
+            Msg::RatelessResult(_) => TAG_RATELESS_RESULT,
+            Msg::Drain { .. } => TAG_DRAIN,
+            Msg::Redo { .. } => TAG_REDO,
         }
     }
 
@@ -183,6 +272,10 @@ impl Msg {
             Msg::Heartbeat { .. } => "heartbeat",
             Msg::HeartbeatAck { .. } => "heartbeat-ack",
             Msg::Shutdown => "shutdown",
+            Msg::RatelessJob(_) => "rateless-job",
+            Msg::RatelessResult(_) => "rateless-result",
+            Msg::Drain { .. } => "drain",
+            Msg::Redo { .. } => "redo",
         }
     }
 }
@@ -309,9 +402,47 @@ fn put_matrix(out: &mut Vec<u8>, m: &Matrix) -> Result<(), WireError> {
     Ok(())
 }
 
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) -> Result<(), WireError> {
+    put_u32(out, wire_u32("f64 vector length", xs.len())?);
+    for &x in xs {
+        put_f64(out, x);
+    }
+    Ok(())
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) -> Result<(), WireError> {
+    put_u32(out, wire_u32("u32 vector length", xs.len())?);
+    for &x in xs {
+        put_u32(out, x);
+    }
+    Ok(())
+}
+
+fn put_pairs(out: &mut Vec<u8>, xs: &[(u32, u32)]) -> Result<(), WireError> {
+    put_u32(out, wire_u32("pair vector length", xs.len())?);
+    for &(a, b) in xs {
+        put_u32(out, a);
+        put_u32(out, b);
+    }
+    Ok(())
+}
+
+fn put_matrices(out: &mut Vec<u8>, ms: &[Arc<Matrix>]) -> Result<(), WireError> {
+    put_u32(out, wire_u32("matrix vector length", ms.len())?);
+    for m in ms {
+        put_matrix(out, m)?;
+    }
+    Ok(())
+}
+
 /// Wire size of a matrix payload (shape header + elements).
 fn matrix_wire_len(m: &Matrix) -> usize {
     8 + m.data().len() * 8
+}
+
+/// Wire size of a length-prefixed matrix vector.
+fn matrices_wire_len(ms: &[Arc<Matrix>]) -> usize {
+    4 + ms.iter().map(|m| matrix_wire_len(m)).sum::<usize>()
 }
 
 /// Serialize one message as a complete frame (header + payload).
@@ -328,6 +459,21 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
         Msg::Job(j) => 33 + matrix_wire_len(&j.wa) + matrix_wire_len(&j.wb),
         // 8 request_id + 4 slot + 4 attempt + 8 delay + 8 compute_secs
         Msg::Result(r) => 32 + matrix_wire_len(&r.payload),
+        // 8 request + 8 stream + 4 budget + 8 delta + 8 c + 8 t_max +
+        // 8 pace + length-prefixed vectors
+        Msg::RatelessJob(j) => {
+            52 + (4 + j.gamma.len() * 8)
+                + (4 + j.class_of.len() * 4)
+                + (4 + j.factors.len() * 8)
+                + (4 + j.delays.len() * 8)
+                + matrices_wire_len(&j.a_blocks)
+                + matrices_wire_len(&j.b_blocks)
+        }
+        // 8 request + 8 stream + 4 seq + 4 attempt + 8 delay +
+        // 8 compute_secs + 1 more flag
+        Msg::RatelessResult(r) => 41 + matrix_wire_len(&r.payload),
+        // 8 request + 8 stream + 4 seq + 4 attempt
+        Msg::Redo { .. } => 24,
         _ => 8,
     };
     let mut payload = Vec::with_capacity(capacity);
@@ -355,6 +501,38 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
             put_u64(&mut payload, *nonce)
         }
         Msg::Shutdown => {}
+        Msg::RatelessJob(j) => {
+            put_u64(&mut payload, j.request_id);
+            put_u64(&mut payload, j.stream);
+            put_u32(&mut payload, j.budget);
+            put_f64(&mut payload, j.delta);
+            put_f64(&mut payload, j.c);
+            put_f64s(&mut payload, &j.gamma)?;
+            put_u32s(&mut payload, &j.class_of)?;
+            put_pairs(&mut payload, &j.factors)?;
+            put_f64s(&mut payload, &j.delays)?;
+            put_f64(&mut payload, j.t_max);
+            put_f64(&mut payload, j.pace);
+            put_matrices(&mut payload, &j.a_blocks)?;
+            put_matrices(&mut payload, &j.b_blocks)?;
+        }
+        Msg::RatelessResult(r) => {
+            put_u64(&mut payload, r.request_id);
+            put_u64(&mut payload, r.stream);
+            put_u32(&mut payload, r.seq);
+            put_u32(&mut payload, r.attempt);
+            put_f64(&mut payload, r.delay);
+            put_f64(&mut payload, r.compute_secs);
+            payload.push(r.more as u8);
+            put_matrix(&mut payload, &r.payload)?;
+        }
+        Msg::Drain { request_id } => put_u64(&mut payload, *request_id),
+        Msg::Redo { request_id, stream, seq, attempt } => {
+            put_u64(&mut payload, *request_id);
+            put_u64(&mut payload, *stream);
+            put_u32(&mut payload, *seq);
+            put_u32(&mut payload, *attempt);
+        }
     }
     if payload.len() > MAX_PAYLOAD {
         return Err(WireError::Oversized { len: payload.len(), max: MAX_PAYLOAD });
@@ -427,6 +605,69 @@ impl<'a> Rd<'a> {
         let bytes = self.take(len)?;
         String::from_utf8(bytes.to_vec())
             .map_err(|_| WireError::Malformed("non-UTF-8 string"))
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bad bool tag")),
+        }
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = len
+            .checked_mul(8)
+            .ok_or(WireError::Malformed("f64 vector length overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = len
+            .checked_mul(4)
+            .ok_or(WireError::Malformed("u32 vector length overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn pairs(&mut self) -> Result<Vec<(u32, u32)>, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = len
+            .checked_mul(8)
+            .ok_or(WireError::Malformed("pair vector length overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                (
+                    u32::from_le_bytes(c[..4].try_into().unwrap()),
+                    u32::from_le_bytes(c[4..].try_into().unwrap()),
+                )
+            })
+            .collect())
+    }
+
+    fn matrices(&mut self) -> Result<Vec<Arc<Matrix>>, WireError> {
+        let len = self.u32()? as usize;
+        // one matrix is ≥ 8 bytes of shape header: cheap sanity bound
+        // before reserving
+        if len > self.buf.len().saturating_sub(self.pos) / 8 {
+            return Err(WireError::Malformed("matrix vector longer than payload"));
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(Arc::new(self.matrix()?));
+        }
+        Ok(out)
     }
 
     fn matrix(&mut self) -> Result<Matrix, WireError> {
@@ -542,6 +783,38 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
         TAG_HEARTBEAT => Msg::Heartbeat { nonce: rd.u64()? },
         TAG_HEARTBEAT_ACK => Msg::HeartbeatAck { nonce: rd.u64()? },
         TAG_SHUTDOWN => Msg::Shutdown,
+        TAG_RATELESS_JOB => Msg::RatelessJob(RatelessJobMsg {
+            request_id: rd.u64()?,
+            stream: rd.u64()?,
+            budget: rd.u32()?,
+            delta: rd.f64()?,
+            c: rd.f64()?,
+            gamma: rd.f64s()?,
+            class_of: rd.u32s()?,
+            factors: rd.pairs()?,
+            delays: rd.f64s()?,
+            t_max: rd.f64()?,
+            pace: rd.f64()?,
+            a_blocks: rd.matrices()?,
+            b_blocks: rd.matrices()?,
+        }),
+        TAG_RATELESS_RESULT => Msg::RatelessResult(RatelessResultMsg {
+            request_id: rd.u64()?,
+            stream: rd.u64()?,
+            seq: rd.u32()?,
+            attempt: rd.u32()?,
+            delay: rd.f64()?,
+            compute_secs: rd.f64()?,
+            more: rd.bool()?,
+            payload: rd.matrix()?,
+        }),
+        TAG_DRAIN => Msg::Drain { request_id: rd.u64()? },
+        TAG_REDO => Msg::Redo {
+            request_id: rd.u64()?,
+            stream: rd.u64()?,
+            seq: rd.u32()?,
+            attempt: rd.u32()?,
+        },
         other => return Err(WireError::UnknownType(other)),
     };
     rd.finish()?;
@@ -602,6 +875,65 @@ mod tests {
             Msg::Heartbeat { nonce: u64::MAX },
             Msg::HeartbeatAck { nonce: 0 },
             Msg::Shutdown,
+            Msg::RatelessJob(RatelessJobMsg {
+                request_id: 9,
+                stream: 2,
+                budget: 17,
+                delta: 0.05,
+                c: 0.1,
+                gamma: vec![0.4, 0.35, 0.25],
+                class_of: vec![0, 0, 1, 1, 2, 2],
+                factors: vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)],
+                delays: vec![0.25, 0.5, 0.75],
+                t_max: 2.0,
+                pace: 0.001,
+                a_blocks: vec![
+                    Arc::new(sample_matrix(11, 2, 3)),
+                    Arc::new(sample_matrix(12, 2, 3)),
+                    Arc::new(sample_matrix(13, 2, 3)),
+                ],
+                b_blocks: vec![
+                    Arc::new(sample_matrix(14, 3, 2)),
+                    Arc::new(sample_matrix(15, 3, 2)),
+                ],
+            }),
+            Msg::RatelessJob(RatelessJobMsg {
+                request_id: 10,
+                stream: 0,
+                budget: 0,
+                delta: 0.5,
+                c: 0.9,
+                gamma: vec![1.0],
+                class_of: vec![0],
+                factors: vec![(0, 0)],
+                delays: Vec::new(),
+                t_max: 1.0,
+                pace: 0.0,
+                a_blocks: vec![Arc::new(sample_matrix(16, 1, 1))],
+                b_blocks: vec![Arc::new(sample_matrix(17, 1, 1))],
+            }),
+            Msg::RatelessResult(RatelessResultMsg {
+                request_id: 9,
+                stream: 2,
+                seq: 5,
+                attempt: 1,
+                delay: 0.625,
+                compute_secs: 0.002,
+                more: true,
+                payload: sample_matrix(18, 2, 2),
+            }),
+            Msg::RatelessResult(RatelessResultMsg {
+                request_id: 9,
+                stream: 2,
+                seq: 16,
+                attempt: 0,
+                delay: 2.0,
+                compute_secs: 0.001,
+                more: false,
+                payload: sample_matrix(19, 2, 2),
+            }),
+            Msg::Drain { request_id: 9 },
+            Msg::Redo { request_id: 9, stream: 1, seq: 3, attempt: 2 },
         ]
     }
 

@@ -13,17 +13,21 @@
 //!   wall time of the computation: straggling is whatever the host and
 //!   transport actually do.
 
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coding::{JobRecipe, RatelessCoder, StackTerm, UepWindows, WindowPolynomial};
 use crate::latency::LatencyModel;
+use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 use crate::runtime::{ExecEngine, NativeEngine};
 
 use super::transport::{Connection, LoopbackDialer};
-use super::wire::{Msg, ResultMsg, WireError};
+use super::wire::{Msg, RatelessJobMsg, RatelessResultMsg, ResultMsg, WireError};
 
 /// Configuration of one worker agent.
 #[derive(Clone, Debug)]
@@ -61,9 +65,112 @@ pub struct WorkerStats {
     pub worker_id: u64,
     pub jobs: u64,
     pub heartbeats: u64,
+    /// Rateless packets computed and sent (stream + redo; protocol v5).
+    pub packets: u64,
     /// `true` when the coordinator sent an explicit shutdown (clean
     /// exit), `false` when the connection dropped.
     pub clean_shutdown: bool,
+}
+
+/// Everything a worker keeps per rateless request: the deterministic
+/// coder plus the raw blocks, so it can derive and compute *any*
+/// `(stream, seq)` packet on demand (its own budget or a `Redo`).
+struct RatelessCtx {
+    request_id: u64,
+    stream: u64,
+    budget: u32,
+    coder: RatelessCoder,
+    factors: Vec<(u32, u32)>,
+    delays: Vec<f64>,
+    t_max: f64,
+    pace: f64,
+    a_blocks: Vec<Arc<Matrix>>,
+    b_blocks: Vec<Arc<Matrix>>,
+}
+
+impl RatelessCtx {
+    fn build(rj: RatelessJobMsg) -> Result<RatelessCtx> {
+        anyhow::ensure!(!rj.gamma.is_empty(), "rateless job with empty gamma");
+        anyhow::ensure!(!rj.class_of.is_empty(), "rateless job with no unknowns");
+        anyhow::ensure!(
+            rj.factors.len() == rj.class_of.len(),
+            "rateless job factor table length mismatch"
+        );
+        for &(ai, bi) in &rj.factors {
+            anyhow::ensure!(
+                (ai as usize) < rj.a_blocks.len() && (bi as usize) < rj.b_blocks.len(),
+                "rateless job factor index out of range"
+            );
+        }
+        let coder = RatelessCoder::new(
+            rj.delta,
+            rj.c,
+            &WindowPolynomial::new(&rj.gamma),
+            UepWindows::from_class_of(&rj.class_of),
+        );
+        Ok(RatelessCtx {
+            request_id: rj.request_id,
+            stream: rj.stream,
+            budget: rj.budget,
+            coder,
+            factors: rj.factors,
+            delays: rj.delays,
+            t_max: rj.t_max,
+            pace: rj.pace,
+            a_blocks: rj.a_blocks,
+            b_blocks: rj.b_blocks,
+        })
+    }
+
+    /// Derive packet `(stream, seq)` and materialize its job factors —
+    /// the worker-side mirror of [`crate::coordinator::build_job_matrices`],
+    /// driven by the shipped factor table instead of a `Partitioning`.
+    fn job_matrices(&self, stream: u64, seq: u32) -> (Matrix, Matrix) {
+        let pkt = self.coder.packet(self.request_id, stream, seq);
+        let JobRecipe::Stacked { terms } = &pkt.recipe else {
+            unreachable!("rateless packets are always stacked");
+        };
+        stack_from_factors(terms, &self.factors, &self.a_blocks, &self.b_blocks)
+    }
+}
+
+/// Build `(W_A, W_B)` for a stacked recipe from an explicit
+/// unknown→(a, b) factor table.
+fn stack_from_factors(
+    terms: &[StackTerm],
+    factors: &[(u32, u32)],
+    a_blocks: &[Arc<Matrix>],
+    b_blocks: &[Arc<Matrix>],
+) -> (Matrix, Matrix) {
+    assert!(!terms.is_empty(), "empty stacked rateless job");
+    let scaled_a: Vec<Matrix> = terms
+        .iter()
+        .map(|t| {
+            let (ai, _) = factors[t.unknown];
+            let mut m = (*a_blocks[ai as usize]).clone();
+            m.scale(t.coeff);
+            m
+        })
+        .collect();
+    let wa = Matrix::hconcat(&scaled_a.iter().collect::<Vec<_>>());
+    let b_parts: Vec<&Matrix> = terms
+        .iter()
+        .map(|t| &*b_blocks[factors[t.unknown].1 as usize])
+        .collect();
+    let wb = Matrix::vconcat(&b_parts);
+    (wa, wb)
+}
+
+/// How a rateless streaming loop ended.
+enum Flow {
+    /// Keep the job context (stream finished or never started).
+    Continue,
+    /// Coordinator drained this request — drop the context.
+    Drained,
+    /// Coordinator asked the whole worker to shut down.
+    Shutdown,
+    /// The connection died mid-stream.
+    Closed,
 }
 
 /// Run the worker loop until shutdown or disconnect. Registers, then
@@ -85,6 +192,7 @@ pub fn run_worker<E: ExecEngine>(
         worker_id,
         jobs: 0,
         heartbeats: 0,
+        packets: 0,
         clean_shutdown: false,
     };
     // Set once a send hits a closed peer: the coordinator stopped
@@ -92,12 +200,22 @@ pub fn run_worker<E: ExecEngine>(
     // backlog), so stop computing and drain the receive side looking for
     // the orderly goodbye.
     let mut sink_closed = false;
+    // Rateless job contexts, kept past their budgeted stream so `Redo`
+    // can regenerate any packet until the coordinator drains the request.
+    let mut ratelesses: HashMap<u64, RatelessCtx> = HashMap::new();
+    // Frames that arrived while a rateless stream was polling for
+    // control messages; replayed through the main loop in order.
+    let mut pending: VecDeque<Msg> = VecDeque::new();
     loop {
-        let msg = match conn.recv_timeout(None) {
-            Ok(Some(m)) => m,
-            Ok(None) => continue,
-            Err(WireError::Closed) => break,
-            Err(e) => return Err(anyhow::anyhow!("{}: receive failed: {e}", cfg.name)),
+        let msg = if let Some(m) = pending.pop_front() {
+            m
+        } else {
+            match conn.recv_timeout(None) {
+                Ok(Some(m)) => m,
+                Ok(None) => continue,
+                Err(WireError::Closed) => break,
+                Err(e) => return Err(anyhow::anyhow!("{}: receive failed: {e}", cfg.name)),
+            }
         };
         match msg {
             Msg::Job(job) => {
@@ -162,6 +280,38 @@ pub fn run_worker<E: ExecEngine>(
                 stats.clean_shutdown = true;
                 break;
             }
+            Msg::RatelessJob(rj) => {
+                let ctx = RatelessCtx::build(rj)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", cfg.name))?;
+                match stream_rateless(
+                    conn, engine, cfg, &mut rng, &ctx, &mut pending, &mut stats,
+                    &mut sink_closed,
+                )? {
+                    Flow::Continue => {
+                        ratelesses.insert(ctx.request_id, ctx);
+                    }
+                    Flow::Drained => {} // context dropped with the request
+                    Flow::Shutdown => {
+                        stats.clean_shutdown = true;
+                        break;
+                    }
+                    Flow::Closed => break,
+                }
+            }
+            Msg::Redo { request_id, stream, seq, attempt } => {
+                // a Redo for an unknown request races with nothing (the
+                // connection is FIFO) but a worker that never held the
+                // context simply cannot help — ignore rather than die
+                if let Some(ctx) = ratelesses.get(&request_id) {
+                    serve_redo(
+                        conn, engine, cfg, ctx, stream, seq, attempt, &mut stats,
+                        &mut sink_closed,
+                    )?;
+                }
+            }
+            Msg::Drain { request_id } => {
+                ratelesses.remove(&request_id);
+            }
             // coordinator-only messages arriving here are a protocol
             // violation; drop the connection rather than guessing
             other => {
@@ -170,6 +320,148 @@ pub fn run_worker<E: ExecEngine>(
         }
     }
     Ok(stats)
+}
+
+/// Stream `ctx.budget` packets for a rateless job, polling for control
+/// frames (`Drain`, `Redo`, heartbeats, shutdown) between packets so the
+/// coordinator can stop the stream the moment its decode completes.
+#[allow(clippy::too_many_arguments)]
+fn stream_rateless<E: ExecEngine>(
+    conn: &mut dyn Connection,
+    engine: &E,
+    cfg: &WorkerConfig,
+    rng: &mut Pcg64,
+    ctx: &RatelessCtx,
+    pending: &mut VecDeque<Msg>,
+    stats: &mut WorkerStats,
+    sink_closed: &mut bool,
+) -> Result<Flow> {
+    let mut prev_virtual = 0.0f64;
+    let mut cum_measured = 0.0f64;
+    for seq in 0..ctx.budget {
+        loop {
+            match conn.recv_timeout(Some(Duration::ZERO)) {
+                Ok(Some(Msg::Drain { request_id })) if request_id == ctx.request_id => {
+                    return Ok(Flow::Drained)
+                }
+                Ok(Some(Msg::Heartbeat { nonce })) => {
+                    if !*sink_closed {
+                        match conn.send(&Msg::HeartbeatAck { nonce }) {
+                            Ok(()) => stats.heartbeats += 1,
+                            Err(WireError::Closed) => *sink_closed = true,
+                            Err(e) => anyhow::bail!("{}: send failed: {e}", cfg.name),
+                        }
+                    }
+                }
+                Ok(Some(Msg::Redo { request_id, stream, seq: rseq, attempt }))
+                    if request_id == ctx.request_id =>
+                {
+                    serve_redo(conn, engine, cfg, ctx, stream, rseq, attempt, stats, sink_closed)?;
+                }
+                Ok(Some(Msg::Shutdown)) => return Ok(Flow::Shutdown),
+                Ok(Some(other)) => pending.push_back(other),
+                Ok(None) => break,
+                Err(WireError::Closed) => return Ok(Flow::Closed),
+                Err(e) => anyhow::bail!("{}: receive failed: {e}", cfg.name),
+            }
+        }
+        if *sink_closed {
+            continue;
+        }
+        let t0 = Instant::now();
+        let (wa, wb) = ctx.job_matrices(ctx.stream, seq);
+        let payload = engine.matmul(&wa, &wb)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        // per-packet completion time, cumulative across the stream, with
+        // the same precedence as fixed-rate jobs: coordinator-injected >
+        // self-modelled > measured
+        let (delay, sleep_secs) = if !ctx.delays.is_empty() {
+            let d = ctx.delays[(seq as usize).min(ctx.delays.len() - 1)];
+            let inc = (d - prev_virtual).max(0.0);
+            (d, inc.min(ctx.t_max) * ctx.pace)
+        } else if let Some(model) = &cfg.latency {
+            let inc = model.sample_scaled(cfg.omega, rng);
+            (prev_virtual + inc, inc * cfg.time_scale)
+        } else {
+            cum_measured += elapsed;
+            let d = if cfg.time_scale > 0.0 {
+                cum_measured / cfg.time_scale
+            } else {
+                cum_measured
+            };
+            (d, 0.0)
+        };
+        prev_virtual = delay;
+        if sleep_secs > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(sleep_secs - elapsed));
+        }
+        let reply = Msg::RatelessResult(RatelessResultMsg {
+            request_id: ctx.request_id,
+            stream: ctx.stream,
+            seq,
+            attempt: 0,
+            delay,
+            compute_secs: elapsed,
+            more: seq + 1 < ctx.budget,
+            payload,
+        });
+        match conn.send(&reply) {
+            Ok(()) => stats.packets += 1,
+            Err(WireError::Closed) => *sink_closed = true,
+            Err(e) => anyhow::bail!("{}: send failed: {e}", cfg.name),
+        }
+    }
+    Ok(Flow::Continue)
+}
+
+/// Regenerate one packet of one stream on request. Any worker holding
+/// the request's context can serve any stream's packet — the coder is a
+/// pure function of `(request, stream, seq)`.
+#[allow(clippy::too_many_arguments)]
+fn serve_redo<E: ExecEngine>(
+    conn: &mut dyn Connection,
+    engine: &E,
+    cfg: &WorkerConfig,
+    ctx: &RatelessCtx,
+    stream: u64,
+    seq: u32,
+    attempt: u32,
+    stats: &mut WorkerStats,
+    sink_closed: &mut bool,
+) -> Result<()> {
+    if *sink_closed {
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let (wa, wb) = ctx.job_matrices(stream, seq);
+    let payload = engine.matmul(&wa, &wb)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    // report the original injected arrival time when this is our own
+    // stream (deterministic runs order decode by the precomputed
+    // schedule, not this value); otherwise report measured time
+    let delay = if stream == ctx.stream && (seq as usize) < ctx.delays.len() {
+        ctx.delays[seq as usize]
+    } else if cfg.time_scale > 0.0 {
+        elapsed / cfg.time_scale
+    } else {
+        elapsed
+    };
+    let reply = Msg::RatelessResult(RatelessResultMsg {
+        request_id: ctx.request_id,
+        stream,
+        seq,
+        attempt,
+        delay,
+        compute_secs: elapsed,
+        more: true,
+        payload,
+    });
+    match conn.send(&reply) {
+        Ok(()) => stats.packets += 1,
+        Err(WireError::Closed) => *sink_closed = true,
+        Err(e) => anyhow::bail!("{}: send failed: {e}", cfg.name),
+    }
+    Ok(())
 }
 
 /// Spawn `n` loopback worker threads dialed into `dialer`, each with its
@@ -274,8 +566,109 @@ mod tests {
         let stats = handle.join().unwrap();
         assert_eq!(
             stats,
-            WorkerStats { worker_id: 4, jobs: 1, heartbeats: 1, clean_shutdown: true }
+            WorkerStats {
+                worker_id: 4,
+                jobs: 1,
+                heartbeats: 1,
+                packets: 0,
+                clean_shutdown: true
+            }
         );
+    }
+
+    #[test]
+    fn worker_streams_rateless_packets_serves_redo_and_drains() {
+        use crate::cluster::wire::RatelessJobMsg;
+        use crate::coding::{RatelessCoder, UepWindows};
+        use std::sync::Arc;
+
+        let (mut ps, mut wk) = loopback_pair("ps", "wk");
+        let handle = std::thread::spawn(move || {
+            let cfg = WorkerConfig { name: "rl".to_string(), ..Default::default() };
+            run_worker(&mut wk, &NativeEngine::serial(), &cfg).unwrap()
+        });
+        assert!(matches!(ps.recv().unwrap(), Msg::Hello { .. }));
+        ps.send(&Msg::Welcome { worker_id: 1 }).unwrap();
+
+        // 2 a-blocks × 2 b-blocks, 4 unknowns in 2 classes
+        let mut rng = Pcg64::seed_from(3);
+        let a_blocks: Vec<Arc<Matrix>> = (0..2)
+            .map(|_| Arc::new(Matrix::randn(2, 3, 0.0, 1.0, &mut rng)))
+            .collect();
+        let b_blocks: Vec<Arc<Matrix>> = (0..2)
+            .map(|_| Arc::new(Matrix::randn(3, 2, 0.0, 1.0, &mut rng)))
+            .collect();
+        let class_of = vec![0u32, 0, 1, 1];
+        let factors = vec![(0u32, 0u32), (0, 1), (1, 0), (1, 1)];
+        let rj = RatelessJobMsg {
+            request_id: 77,
+            stream: 0,
+            budget: 3,
+            delta: 0.05,
+            c: 0.1,
+            gamma: vec![0.6, 0.4],
+            class_of: class_of.clone(),
+            factors: factors.clone(),
+            delays: vec![0.5, 1.0, 1.5],
+            t_max: 2.0,
+            pace: 0.0,
+            a_blocks: a_blocks.clone(),
+            b_blocks: b_blocks.clone(),
+        };
+        ps.send(&Msg::RatelessJob(rj)).unwrap();
+
+        // the reference coder must predict every payload exactly
+        let coder = RatelessCoder::new(
+            0.05,
+            0.1,
+            &crate::coding::WindowPolynomial::new(&[0.6, 0.4]),
+            UepWindows::from_class_of(&class_of),
+        );
+        let expect_payload = |stream: u64, seq: u32| {
+            let pkt = coder.packet(77, stream, seq);
+            let crate::coding::JobRecipe::Stacked { terms } = &pkt.recipe else {
+                panic!("not stacked");
+            };
+            let (wa, wb) =
+                super::stack_from_factors(terms, &factors, &a_blocks, &b_blocks);
+            matmul(&wa, &wb)
+        };
+        for seq in 0..3u32 {
+            match ps.recv().unwrap() {
+                Msg::RatelessResult(r) => {
+                    assert_eq!((r.request_id, r.stream, r.seq), (77, 0, seq));
+                    assert_eq!(r.attempt, 0);
+                    assert_eq!(r.more, seq < 2, "seq {seq}");
+                    assert_eq!(r.delay, 0.5 * (seq + 1) as f64);
+                    assert!(r.payload.allclose(&expect_payload(0, seq), 1e-12));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+
+        // redo: a packet of a *different* stream, from the kept context
+        ps.send(&Msg::Redo { request_id: 77, stream: 5, seq: 2, attempt: 1 })
+            .unwrap();
+        match ps.recv().unwrap() {
+            Msg::RatelessResult(r) => {
+                assert_eq!((r.stream, r.seq, r.attempt), (5, 2, 1));
+                assert!(r.payload.allclose(&expect_payload(5, 2), 1e-12));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // drain drops the context; a later redo for it is ignored and
+        // the worker keeps serving (heartbeat still answered)
+        ps.send(&Msg::Drain { request_id: 77 }).unwrap();
+        ps.send(&Msg::Redo { request_id: 77, stream: 0, seq: 0, attempt: 2 })
+            .unwrap();
+        ps.send(&Msg::Heartbeat { nonce: 8 }).unwrap();
+        assert!(matches!(ps.recv().unwrap(), Msg::HeartbeatAck { nonce: 8 }));
+
+        ps.send(&Msg::Shutdown).unwrap();
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.packets, 4);
+        assert!(stats.clean_shutdown);
     }
 
     #[test]

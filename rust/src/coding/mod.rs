@@ -11,6 +11,11 @@
 //!   Gaussian coefficients are MDS with probability 1).
 //! * **Repetition** — each sub-product replicated `⌈W/K⌉` times.
 //! * **Uncoded** — one worker per sub-product.
+//! * **Rateless UEP** — LT/fountain packets with a robust-Soliton degree
+//!   distribution over expanding windows sampled from `Γ(ξ)`; no fixed
+//!   `n`, packets derived deterministically per `(request, stream, seq)`
+//!   so both ends of a connection generate identical coefficient rows
+//!   (see [`RatelessCoder`]).
 //!
 //! Encoding styles (see DESIGN.md §2 — the paper under-specifies this):
 //! * [`EncodeStyle::Stacked`] — exact RLC via block concatenation: the
@@ -22,10 +27,12 @@
 //!   pairs) that are not part of `C`.
 
 mod decode;
+mod rateless;
 mod scheme;
 mod window;
 
 pub use decode::DecodeState;
+pub use rateless::{robust_soliton, RatelessCoder, RatelessSpec, UepWindows};
 pub use scheme::{
     CodeKind, CodeSpec, EncodeStyle, JobRecipe, Packet, StackTerm, UnknownSpace,
 };

@@ -1,0 +1,437 @@
+//! Rateless (LT/fountain) UEP encoding — the `CodeKind::Rateless` family.
+//!
+//! Fixed-rate codes (MDS/NOW/EW) draw the whole packet set at plan time,
+//! so a worker that finishes 3 of its 4 jobs before the deadline
+//! contributes nothing. LT codes have no fixed `n`: every worker derives
+//! an endless stream of coded packets and the coordinator decodes as
+//! soon as the arrivals span the unknown space, so a straggler's partial
+//! stream is real progress instead of a write-off.
+//!
+//! The UEP twist keeps the paper's unequal protection: each packet first
+//! samples an *expanding window* `l` (classes `0..=l`) from the window
+//! polynomial `Γ(ξ)`, then a degree from a robust-Soliton distribution
+//! over that window's size, then that many distinct unknowns uniformly
+//! inside the window. Class-0 unknowns belong to every window, so the
+//! most important sub-products appear in the most packets.
+//!
+//! Determinism is the load-bearing trick: a packet is a pure function of
+//! `(request_id, stream, seq)` — both ends run the same
+//! [`RatelessCoder`] and derive identical coefficient rows, so the wire
+//! carries only matrix payloads, never coefficients, and *any* worker
+//! can regenerate *any* lost packet (the `Redo` path).
+
+use crate::partition::ClassMap;
+use crate::rng::{Normal, Pcg64};
+
+use super::{JobRecipe, Packet, StackTerm, WindowPolynomial};
+
+/// Stream-selector namespace for packet derivation: packet `seq` of a
+/// rateless stream draws from `Pcg64::with_stream(mix(request, stream),
+/// BASE ^ seq)`, keeping packet streams disjoint from every other RNG
+/// consumer (delays, probes, chaos) by construction.
+const RATELESS_STREAM_BASE: u64 = 0x5EED_17C0_4A7E_1E55;
+
+/// Parameters of the rateless family: the robust-Soliton knobs
+/// `(δ, c)` and the UEP window polynomial `Γ(ξ)` (resized to the class
+/// map at coder construction, exactly like the fixed-rate UEP codes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatelessSpec {
+    /// Robust-Soliton failure parameter `δ ∈ (0, 1)`.
+    pub delta: f64,
+    /// Robust-Soliton spike constant `c > 0`.
+    pub c: f64,
+    /// Window-sampling weights (window 0 = most important classes).
+    pub gamma: WindowPolynomial,
+}
+
+impl RatelessSpec {
+    pub fn new(delta: f64, c: f64, gamma: WindowPolynomial) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1)");
+        assert!(c > 0.0, "c must be positive");
+        RatelessSpec { delta, c, gamma }
+    }
+
+    /// The defaults used by `--code rateless`: `δ = 0.05`, `c = 0.1`,
+    /// the paper's Table III window polynomial.
+    pub fn paper_default() -> Self {
+        RatelessSpec::new(0.05, 0.1, WindowPolynomial::paper_table3())
+    }
+}
+
+/// The expanding windows a coder samples from: `windows[l]` holds the
+/// unknown indices of classes `0..=l`, in ascending index order.
+///
+/// Both constructors produce identical windows for the same
+/// classification — [`UepWindows::from_class_map`] is the coordinator
+/// path, [`UepWindows::from_class_of`] rebuilds them worker-side from
+/// the per-unknown class vector shipped in the rateless job frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UepWindows {
+    windows: Vec<Vec<usize>>,
+}
+
+impl UepWindows {
+    pub fn from_class_map(cm: &ClassMap) -> Self {
+        let class_of: Vec<u32> = cm.class_of.iter().map(|&c| c as u32).collect();
+        Self::from_class_of(&class_of)
+    }
+
+    /// Rebuild from a per-unknown class vector (wire form). Windows are
+    /// filled in ascending unknown order so the worker derives exactly
+    /// the coordinator's windows.
+    pub fn from_class_of(class_of: &[u32]) -> Self {
+        assert!(!class_of.is_empty(), "empty class vector");
+        let n_classes = *class_of.iter().max().unwrap() as usize + 1;
+        let windows = (0..n_classes)
+            .map(|l| {
+                (0..class_of.len())
+                    .filter(|&u| (class_of[u] as usize) <= l)
+                    .collect::<Vec<usize>>()
+            })
+            .collect::<Vec<_>>();
+        assert!(!windows[0].is_empty(), "window 0 has no unknowns");
+        UepWindows { windows }
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn window(&self, l: usize) -> &[usize] {
+        &self.windows[l]
+    }
+
+    /// Total unknowns (the size of the widest window).
+    pub fn num_unknowns(&self) -> usize {
+        self.windows.last().map_or(0, |w| w.len())
+    }
+}
+
+/// Robust-Soliton probability mass over degrees `1..=k` (returned as a
+/// `Vec` with `pmf[i]` = probability of degree `i+1`).
+///
+/// Ideal part `ρ(1) = 1/k`, `ρ(i) = 1/(i(i−1))`; spike part
+/// `τ(i) = R/(ik)` for `i < ⌊k/R⌋`, `τ(⌊k/R⌋) = R·ln(R/δ)/k` with
+/// `R = c·ln(k/δ)·√k` (clamped to `≥ 1` so tiny windows stay valid);
+/// normalized sum. `k = 1` degenerates to certain degree 1.
+pub fn robust_soliton(k: usize, delta: f64, c: f64) -> Vec<f64> {
+    assert!(k >= 1);
+    if k == 1 {
+        return vec![1.0];
+    }
+    let kf = k as f64;
+    let r = (c * (kf / delta).ln() * kf.sqrt()).max(1.0);
+    let spike = ((kf / r).floor() as usize).clamp(1, k);
+    let mut pmf = vec![0.0; k];
+    pmf[0] = 1.0 / kf;
+    for i in 2..=k {
+        pmf[i - 1] = 1.0 / (i as f64 * (i as f64 - 1.0));
+    }
+    for (i, p) in pmf.iter_mut().enumerate().take(spike - 1) {
+        *p += r / ((i + 1) as f64 * kf);
+    }
+    pmf[spike - 1] += (r * (r / delta).ln() / kf).max(0.0);
+    let total: f64 = pmf.iter().sum();
+    for p in &mut pmf {
+        *p /= total;
+    }
+    pmf
+}
+
+/// Sample an index from a CDF (inverse-transform with binary search).
+fn sample_cdf(cdf: &[f64], rng: &mut Pcg64) -> usize {
+    let u = rng.next_f64();
+    cdf.partition_point(|&x| x <= u).min(cdf.len() - 1)
+}
+
+/// Mix a request id and a stream selector into one seed (splitmix64
+/// finalizer over their combination, so nearby ids land far apart).
+fn mix(request_id: u64, stream: u64) -> u64 {
+    let mut z = request_id
+        ^ stream.rotate_left(32)
+        ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A deterministic rateless packet generator. Construction precomputes
+/// one robust-Soliton CDF per window; [`RatelessCoder::packet`] is then
+/// a pure function of `(request_id, stream, seq)` — the property the
+/// whole v5 protocol leans on (coefficients never cross the wire).
+#[derive(Clone, Debug)]
+pub struct RatelessCoder {
+    gamma: WindowPolynomial,
+    windows: UepWindows,
+    /// `cdfs[l][d-1]` = P(degree ≤ d) inside window `l`.
+    cdfs: Vec<Vec<f64>>,
+}
+
+impl RatelessCoder {
+    pub fn new(delta: f64, c: f64, gamma: &WindowPolynomial, windows: UepWindows) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1)");
+        assert!(c > 0.0, "c must be positive");
+        let gamma = gamma.resized(windows.num_windows());
+        let cdfs = (0..windows.num_windows())
+            .map(|l| {
+                let pmf = robust_soliton(windows.window(l).len(), delta, c);
+                let mut acc = 0.0;
+                pmf.iter()
+                    .map(|p| {
+                        acc += p;
+                        acc
+                    })
+                    .collect::<Vec<f64>>()
+            })
+            .collect();
+        RatelessCoder { gamma, windows, cdfs }
+    }
+
+    /// Build from a spec and a class map (coordinator side).
+    pub fn from_class_map(spec: &RatelessSpec, cm: &ClassMap) -> Self {
+        Self::new(spec.delta, spec.c, &spec.gamma, UepWindows::from_class_map(cm))
+    }
+
+    pub fn num_unknowns(&self) -> usize {
+        self.windows.num_unknowns()
+    }
+
+    pub fn windows(&self) -> &UepWindows {
+        &self.windows
+    }
+
+    /// Window-selection probabilities actually in use (post-resize).
+    pub fn gamma(&self) -> &WindowPolynomial {
+        &self.gamma
+    }
+
+    /// Derive packet `seq` of stream `stream` for `request_id`. Pure and
+    /// stateless: every call with the same arguments yields the same
+    /// packet on any host, thread count, or transport.
+    pub fn packet(&self, request_id: u64, stream: u64, seq: u32) -> Packet {
+        let mut rng = Pcg64::with_stream(
+            mix(request_id, stream),
+            RATELESS_STREAM_BASE ^ seq as u64,
+        );
+        let l = self.gamma.sample(&mut rng);
+        let window = self.windows.window(l);
+        let d = sample_cdf(&self.cdfs[l], &mut rng) + 1;
+        // d distinct unknowns via partial Fisher–Yates on a scratch copy
+        let mut pool = window.to_vec();
+        let mut terms = Vec::with_capacity(d);
+        for i in 0..d {
+            let j = i + rng.next_bounded((pool.len() - i) as u64) as usize;
+            pool.swap(i, j);
+            terms.push(StackTerm { unknown: pool[i], coeff: Normal::standard(&mut rng) });
+        }
+        Packet {
+            worker: stream as usize,
+            window: l,
+            recipe: JobRecipe::Stacked { terms },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{DecodeState, UnknownSpace};
+    use crate::linalg::{matmul, Matrix};
+    use crate::partition::{default_pair_classes, ClassMap, Partitioning};
+    use crate::util::prop::{gen, prop_check, PropConfig};
+
+    fn paper_setup() -> (Partitioning, ClassMap) {
+        let part = Partitioning::rxc(3, 3, 2, 2, 2);
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, vec![0, 1, 2], vec![0, 1, 2], &pair);
+        (part, cm)
+    }
+
+    #[test]
+    fn robust_soliton_is_a_distribution() {
+        for k in [1usize, 2, 3, 9, 40, 200] {
+            let pmf = robust_soliton(k, 0.05, 0.1);
+            assert_eq!(pmf.len(), k);
+            assert!(pmf.iter().all(|&p| p >= 0.0), "k={k}: negative mass");
+            let total: f64 = pmf.iter().sum();
+            assert!((total - 1.0).abs() < 1e-12, "k={k}: sums to {total}");
+            // degree 1 must have positive mass (decoding can start)
+            assert!(pmf[0] > 0.0, "k={k}: no degree-1 packets");
+        }
+    }
+
+    #[test]
+    fn robust_soliton_spike_dominates_its_ideal_neighbourhood() {
+        // the τ spike at ⌊k/R⌋ must lift that degree above the bare
+        // ideal-Soliton mass 1/(i(i−1))
+        let k = 100usize;
+        let delta = 0.05;
+        let c = 0.1;
+        let pmf = robust_soliton(k, delta, c);
+        let kf = k as f64;
+        let r = (c * (kf / delta).ln() * kf.sqrt()).max(1.0);
+        let spike = ((kf / r).floor() as usize).clamp(1, k);
+        assert!(spike > 2 && spike < k, "test wants an interior spike, got {spike}");
+        // the spiked degree towers over both neighbours (τ ≫ ρ there)
+        assert!(pmf[spike - 1] > 10.0 * pmf[spike - 2], "spike at {spike} not visible");
+        assert!(pmf[spike - 1] > 10.0 * pmf[spike], "spike at {spike} not visible");
+    }
+
+    #[test]
+    fn windows_expand_and_match_across_constructors() {
+        let (_, cm) = paper_setup();
+        let w1 = UepWindows::from_class_map(&cm);
+        let wire: Vec<u32> = cm.class_of.iter().map(|&c| c as u32).collect();
+        let w2 = UepWindows::from_class_of(&wire);
+        assert_eq!(w1, w2, "coordinator and worker windows must agree");
+        for l in 1..w1.num_windows() {
+            let prev = w1.window(l - 1);
+            assert!(w1.window(l).len() >= prev.len());
+            for u in prev {
+                assert!(w1.window(l).contains(u), "window {l} lost unknown {u}");
+            }
+        }
+        assert_eq!(w1.num_unknowns(), cm.class_of.len());
+    }
+
+    #[test]
+    fn packets_are_a_pure_function_of_request_stream_seq() {
+        let (_, cm) = paper_setup();
+        let spec = RatelessSpec::paper_default();
+        let coder = RatelessCoder::from_class_map(&spec, &cm);
+        let coder2 = RatelessCoder::from_class_map(&spec, &cm);
+        for stream in 0..4u64 {
+            for seq in 0..50u32 {
+                let p1 = coder.packet(0xABCD, stream, seq);
+                let p2 = coder2.packet(0xABCD, stream, seq);
+                assert_eq!(p1, p2, "stream {stream} seq {seq} diverged");
+            }
+        }
+        // different coordinates give different draws
+        let a = coder.packet(1, 0, 0);
+        let b = coder.packet(1, 0, 1);
+        let c = coder.packet(1, 1, 0);
+        let d = coder.packet(2, 0, 0);
+        assert!(a != b && a != c && a != d, "packet streams collide");
+    }
+
+    #[test]
+    fn packet_terms_are_distinct_and_inside_the_window() {
+        let (_, cm) = paper_setup();
+        let spec = RatelessSpec::paper_default();
+        let coder = RatelessCoder::from_class_map(&spec, &cm);
+        for seq in 0..400u32 {
+            let p = coder.packet(7, 0, seq);
+            let JobRecipe::Stacked { terms } = &p.recipe else {
+                panic!("rateless packets must be stacked");
+            };
+            assert!(!terms.is_empty());
+            let window = coder.windows().window(p.window);
+            let mut seen = Vec::new();
+            for t in terms {
+                assert!(window.contains(&t.unknown), "unknown escaped window");
+                assert!(!seen.contains(&t.unknown), "duplicate unknown in packet");
+                assert!(t.coeff != 0.0);
+                seen.push(t.unknown);
+            }
+        }
+    }
+
+    /// An endless stream from a handful of workers must decode the full
+    /// product, and the recovered values must match the true
+    /// sub-products.
+    #[test]
+    fn rateless_stream_decodes_to_the_true_product() {
+        let (part, cm) = paper_setup();
+        let mut mrng = Pcg64::seed_from(42);
+        let a = Matrix::randn(part.a_shape().0, part.a_shape().1, 0.0, 1.0, &mut mrng);
+        let b = Matrix::randn(part.b_shape().0, part.b_shape().1, 0.0, 1.0, &mut mrng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let truth = part.true_products(&a, &b);
+        let spec = RatelessSpec::paper_default();
+        let coder = RatelessCoder::from_class_map(&spec, &cm);
+        let space = UnknownSpace::for_code(&part, crate::coding::EncodeStyle::Stacked);
+        let mut st = DecodeState::new(space);
+        'outer: for seq in 0..200u32 {
+            for stream in 0..3u64 {
+                let p = coder.packet(99, stream, seq);
+                let (wa, wb) = crate::coordinator::build_job_matrices(
+                    &part, &a_blocks, &b_blocks, &p.recipe,
+                );
+                st.add_packet(&p, Some(matmul(&wa, &wb)));
+                if st.is_complete() {
+                    break 'outer;
+                }
+            }
+        }
+        assert!(st.is_complete(), "stream never decoded");
+        for (u, v) in st.recover_values().into_iter().enumerate() {
+            let got = v.expect("complete decode must value every unknown");
+            assert!(got.allclose(&truth[u], 1e-6), "unknown {u} wrong");
+        }
+    }
+
+    /// Satellite property: the UEP degree distribution includes class-0
+    /// unknowns at least as often as class-L unknowns — class 0 belongs
+    /// to every expanding window, the last class only to the widest.
+    #[test]
+    fn class0_unknowns_are_sampled_at_least_as_often_as_class_last() {
+        prop_check(
+            "class-0 inclusion dominates class-L",
+            PropConfig { cases: 8, seed: 714 },
+            |rng, _case| {
+                let (_, cm) = paper_setup();
+                // random (positive) window weights each case
+                let weights: Vec<f64> =
+                    (0..3).map(|_| 0.05 + rng.next_f64()).collect();
+                let spec = RatelessSpec::new(
+                    0.01 + 0.5 * rng.next_f64(),
+                    0.02 + 0.5 * rng.next_f64(),
+                    WindowPolynomial::new(&weights),
+                );
+                let coder = RatelessCoder::from_class_map(&spec, &cm);
+                let request = gen::usize_in(rng, 1, 1 << 30) as u64;
+                let mut hits = vec![0usize; cm.class_of.len()];
+                let n = 1200u32;
+                for seq in 0..n {
+                    let p = coder.packet(request, 0, seq);
+                    if let JobRecipe::Stacked { terms } = &p.recipe {
+                        for t in terms {
+                            hits[t.unknown] += 1;
+                        }
+                    }
+                }
+                let mean_hits = |class: usize| {
+                    let members = &cm.members[class];
+                    members.iter().map(|&u| hits[u]).sum::<usize>() as f64
+                        / members.len() as f64
+                };
+                let c0 = mean_hits(0);
+                let cl = mean_hits(cm.n_classes - 1);
+                // allow a small sampling slack; the expectation gap is
+                // strict whenever Γ puts any mass below the last window
+                if c0 + 3.0 * (c0.max(1.0)).sqrt() < cl {
+                    return Err(format!("class0 mean {c0} < classL mean {cl}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn coder_resizes_gamma_to_the_class_count() {
+        // 2-class map with the 3-window paper polynomial must not panic
+        let part = Partitioning::cxr(4, 2, 2, 2);
+        let lv = vec![0, 0, 2, 2];
+        let pair = default_pair_classes(3);
+        let cm = ClassMap::from_levels(&part, lv.clone(), lv, &pair);
+        assert_eq!(cm.n_classes, 2);
+        let coder = RatelessCoder::from_class_map(&RatelessSpec::paper_default(), &cm);
+        assert_eq!(coder.gamma().num_windows(), 2);
+        for seq in 0..50 {
+            let p = coder.packet(3, 0, seq);
+            assert!(p.window < 2);
+        }
+    }
+}

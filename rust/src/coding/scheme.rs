@@ -3,7 +3,7 @@
 use crate::partition::{ClassMap, Paradigm, Partitioning};
 use crate::rng::{Normal, Pcg64};
 
-use super::WindowPolynomial;
+use super::{RatelessCoder, RatelessSpec, WindowPolynomial};
 
 /// The coding scheme (paper §IV + baselines from §VI–VII).
 #[derive(Clone, Debug, PartialEq)]
@@ -21,6 +21,12 @@ pub enum CodeKind {
     NowUep(WindowPolynomial),
     /// Expanding Window UEP: window `l` = classes `0..=l`.
     EwUep(WindowPolynomial),
+    /// Rateless LT/fountain UEP: no fixed `n` — workers stream packets
+    /// derived per `(request, stream, seq)` until the decoder completes
+    /// (see [`crate::coding::RatelessCoder`]). Under the fixed-rate
+    /// [`CodeSpec::generate_packets`] entry point this degenerates to
+    /// one seq-0 packet per worker.
+    Rateless(RatelessSpec),
 }
 
 impl CodeKind {
@@ -31,6 +37,7 @@ impl CodeKind {
             CodeKind::Mds => "mds",
             CodeKind::NowUep(_) => "now-uep",
             CodeKind::EwUep(_) => "ew-uep",
+            CodeKind::Rateless(_) => "rateless",
         }
     }
 }
@@ -66,6 +73,100 @@ impl CodeSpec {
             EncodeStyle::RankOne => "rank1",
         };
         format!("{}/{}", self.kind.name(), style)
+    }
+}
+
+/// CLI token form: `uncoded`, `rep`, `mds`, `now`, `ew` (each with an
+/// optional `-rank1` suffix) and `rateless[:delta=0.05,c=0.1]`. Window
+/// codes print without their polynomial — the token form always means
+/// the paper's Table III Γ, which is also what [`CodeSpec::from_str`]
+/// reconstructs (callers with a custom Γ substitute it after parsing).
+impl std::fmt::Display for CodeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let head = match &self.kind {
+            CodeKind::Uncoded => "uncoded",
+            CodeKind::Repetition => "rep",
+            CodeKind::Mds => "mds",
+            CodeKind::NowUep(_) => "now",
+            CodeKind::EwUep(_) => "ew",
+            CodeKind::Rateless(_) => "rateless",
+        };
+        f.write_str(head)?;
+        if self.style == EncodeStyle::RankOne {
+            f.write_str("-rank1")?;
+        }
+        if let CodeKind::Rateless(sp) = &self.kind {
+            write!(f, ":delta={},c={}", sp.delta, sp.c)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for CodeSpec {
+    type Err = String;
+
+    /// Parse the token form accepted by `--code` (see [`CodeSpec`]'s
+    /// `Display`). Examples: `ew`, `now-rank1`, `rateless`,
+    /// `rateless:delta=0.05,c=0.1`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        let (head, params) = match s.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (s, None),
+        };
+        let (base, style) = match head.strip_suffix("-rank1") {
+            Some(b) => (b, EncodeStyle::RankOne),
+            None => (head, EncodeStyle::Stacked),
+        };
+        if params.is_some() && base != "rateless" {
+            return Err(format!("code `{base}` takes no parameters"));
+        }
+        let gamma = WindowPolynomial::paper_table3;
+        let kind = match base {
+            "uncoded" => CodeKind::Uncoded,
+            "rep" | "repetition" => CodeKind::Repetition,
+            "mds" => CodeKind::Mds,
+            "now" | "now-uep" => CodeKind::NowUep(gamma()),
+            "ew" | "ew-uep" => CodeKind::EwUep(gamma()),
+            "rateless" => {
+                if style == EncodeStyle::RankOne {
+                    return Err("rateless has no rank-1 form".to_string());
+                }
+                let mut spec = RatelessSpec::paper_default();
+                for kv in params.unwrap_or("").split(',').filter(|p| !p.trim().is_empty()) {
+                    let (key, val) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("bad rateless parameter `{kv}` (want key=value)"))?;
+                    let val: f64 = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad rateless value in `{kv}`"))?;
+                    match key.trim() {
+                        "delta" => spec.delta = val,
+                        "c" => spec.c = val,
+                        other => {
+                            return Err(format!(
+                                "unknown rateless parameter `{other}` (know delta, c)"
+                            ))
+                        }
+                    }
+                }
+                if !(spec.delta > 0.0 && spec.delta < 1.0) {
+                    return Err(format!("rateless delta {} outside (0,1)", spec.delta));
+                }
+                if spec.c <= 0.0 {
+                    return Err(format!("rateless c {} must be positive", spec.c));
+                }
+                CodeKind::Rateless(spec)
+            }
+            other => {
+                return Err(format!(
+                    "unknown code `{other}` (know uncoded, rep, mds, now, ew, \
+                     rateless[:delta=..,c=..]; `-rank1` suffix for the rank-one style)"
+                ))
+            }
+        };
+        Ok(CodeSpec { kind, style })
     }
 }
 
@@ -254,6 +355,15 @@ impl CodeSpec {
                         }
                     })
                     .collect()
+            }
+            CodeKind::Rateless(spec) => {
+                // fixed-rate entry point: one seq-0 packet per worker
+                // under a fresh request base, so every fixed-n consumer
+                // (Plan, EncodedA, the encode cache) stays valid. True
+                // open-ended streams go through RatelessCoder directly.
+                let coder = RatelessCoder::from_class_map(spec, cm);
+                let base = rng.next_u64();
+                (0..workers).map(|w| coder.packet(base, w as u64, 0)).collect()
             }
         }
     }
@@ -552,6 +662,72 @@ mod tests {
         let spec = CodeSpec::stacked(CodeKind::NowUep(WindowPolynomial::paper_table3()));
         let pkts = spec.generate_packets(&part, &cm, 20, &mut rng);
         assert!(pkts.iter().all(|p| p.window < 2));
+    }
+
+    #[test]
+    fn rateless_fixed_rate_entry_point_generates_valid_stacked_packets() {
+        let (part, cm) = paper_rxc();
+        let mut rng = Pcg64::seed_from(9);
+        let spec = CodeSpec::stacked(CodeKind::Rateless(
+            crate::coding::RatelessSpec::paper_default(),
+        ));
+        let space = UnknownSpace::for_code(&part, EncodeStyle::Stacked);
+        let pkts = spec.generate_packets(&part, &cm, 12, &mut rng);
+        assert_eq!(pkts.len(), 12);
+        for (w, p) in pkts.iter().enumerate() {
+            assert_eq!(p.worker, w);
+            assert!(matches!(p.recipe, JobRecipe::Stacked { .. }));
+            // every supported unknown sits inside the packet's window
+            for (u, &c) in p.coeff_row(&space).iter().enumerate() {
+                if c != 0.0 {
+                    assert!(cm.class_of[u] <= p.window);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_spec_tokens_round_trip_through_fromstr_and_display() {
+        for token in
+            ["uncoded", "rep", "mds", "now", "ew", "now-rank1", "ew-rank1",
+             "rateless:delta=0.05,c=0.1"]
+        {
+            let spec: CodeSpec = token.parse().unwrap();
+            assert_eq!(spec.to_string(), token, "token {token}");
+            let again: CodeSpec = spec.to_string().parse().unwrap();
+            assert_eq!(again, spec, "token {token}");
+        }
+        // bare `rateless` carries the documented defaults
+        let spec: CodeSpec = "rateless".parse().unwrap();
+        match &spec.kind {
+            CodeKind::Rateless(sp) => {
+                assert_eq!(sp.delta, 0.05);
+                assert_eq!(sp.c, 0.1);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // parameters override the defaults
+        let spec: CodeSpec = "rateless:c=0.2".parse().unwrap();
+        match &spec.kind {
+            CodeKind::Rateless(sp) => assert_eq!(sp.c, 0.2),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn code_spec_parser_rejects_malformed_input() {
+        for bad in [
+            "",
+            "nope",
+            "ew:delta=1",
+            "rateless-rank1",
+            "rateless:delta=2",
+            "rateless:c=-1",
+            "rateless:spikes=3",
+            "rateless:delta",
+        ] {
+            assert!(bad.parse::<CodeSpec>().is_err(), "`{bad}` should not parse");
+        }
     }
 
     #[test]

@@ -68,6 +68,30 @@ impl SyntheticSpec {
         s
     }
 
+    /// Same spec with `blocks×blocks` factor blocks per side
+    /// (`K = blocks²` sub-products): importance levels are spread evenly
+    /// across the blocks and per-block dims rescaled so the total
+    /// operand shapes stay put. r×c only — the c×r paradigm ties its
+    /// block count to `M`.
+    pub fn with_blocks(&self, blocks: usize) -> Self {
+        assert!(blocks >= 1, "need at least one block per side");
+        assert!(
+            matches!(self.part.paradigm, Paradigm::RowTimesCol),
+            "with_blocks applies to the r×c paradigm"
+        );
+        let mut s = self.clone();
+        let levels = self.level_sds.len();
+        let total_u = self.part.n * self.part.u;
+        let total_q = self.part.p * self.part.q;
+        s.part.n = blocks;
+        s.part.p = blocks;
+        s.part.u = (total_u / blocks).max(1);
+        s.part.q = (total_q / blocks).max(1);
+        s.a_levels = (0..blocks).map(|i| i * levels / blocks).collect();
+        s.b_levels = s.a_levels.clone();
+        s
+    }
+
     /// The paper's Ω fairness scaling (Remark 1).
     pub fn omega(&self) -> f64 {
         self.part.num_products() as f64 / self.workers as f64
@@ -220,6 +244,17 @@ mod tests {
         // norm-based classification must recover the pinned levels
         assert_eq!(cm_est.a_level, spec.a_levels);
         assert_eq!(cm_est.b_level, spec.b_levels);
+    }
+
+    #[test]
+    fn with_blocks_rescales_geometry_and_levels() {
+        let base = SyntheticSpec::fig9_rxc().scaled(10);
+        let spec = base.with_blocks(6);
+        assert_eq!(spec.part.num_products(), 36);
+        assert_eq!(spec.part.a_shape(), base.part.a_shape());
+        assert_eq!(spec.part.b_shape(), base.part.b_shape());
+        assert_eq!(spec.a_levels, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(spec.class_map().class_of.len(), 36);
     }
 
     #[test]

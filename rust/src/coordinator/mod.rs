@@ -31,7 +31,8 @@ mod plan;
 mod service;
 
 pub use plan::{
-    build_job_a, build_job_b, build_job_matrices, EncodedA, Plan, Verifier,
+    build_job_a, build_job_b, build_job_matrices, EncodedA, Plan, RatelessPlan,
+    RatelessVerifier, Verifier,
 };
 #[allow(deprecated)]
 pub use service::run_service;

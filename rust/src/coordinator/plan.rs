@@ -19,7 +19,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coding::{CodeSpec, JobRecipe, Packet, UnknownSpace};
+use crate::coding::{
+    CodeSpec, EncodeStyle, JobRecipe, Packet, RatelessCoder, RatelessSpec,
+    StackTerm, UnknownSpace,
+};
 use crate::linalg::{matmul, Matrix};
 use crate::partition::{ClassMap, Partitioning};
 use crate::rng::Pcg64;
@@ -239,6 +242,182 @@ pub fn build_job_matrices(
     (build_job_a(part, a_blocks, recipe), build_job_b(part, b_blocks, recipe))
 }
 
+/// The rateless counterpart of [`Plan`]: instead of a fixed packet set
+/// it holds the deterministic [`RatelessCoder`] from which *any*
+/// `(request, stream, seq)` packet can be derived — by the PS when it
+/// absorbs a result, or by a worker when it generates one. No
+/// coefficients ever cross the wire.
+///
+/// Blocks are kept behind `Arc` because a single plan is shared between
+/// the dispatch path (ships the blocks to workers inside a
+/// `RatelessJob` frame) and the verify path (precomputes Freivalds
+/// references from the same blocks).
+#[derive(Clone, Debug)]
+pub struct RatelessPlan {
+    pub part: Partitioning,
+    pub cm: ClassMap,
+    pub spec: RatelessSpec,
+    pub space: UnknownSpace,
+    pub coder: RatelessCoder,
+    pub a_blocks: Vec<Arc<Matrix>>,
+    pub b_blocks: Vec<Arc<Matrix>>,
+}
+
+impl RatelessPlan {
+    /// Split, classify into `s_levels` by Frobenius norm, and build the
+    /// deterministic coder.
+    pub fn build(
+        part: &Partitioning,
+        spec: RatelessSpec,
+        s_levels: usize,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<RatelessPlan> {
+        let cm = ClassMap::from_matrices(part, a, b, s_levels);
+        Self::build_with_classes(part, spec, cm, a, b)
+    }
+
+    /// Build with an explicit class map (synthetic experiments pin the
+    /// levels instead of estimating them from norms).
+    pub fn build_with_classes(
+        part: &Partitioning,
+        spec: RatelessSpec,
+        cm: ClassMap,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<RatelessPlan> {
+        anyhow::ensure!(
+            cm.class_of.len() == part.num_products(),
+            "class map covers {} unknowns, partitioning has {}",
+            cm.class_of.len(),
+            part.num_products()
+        );
+        let coder = RatelessCoder::from_class_map(&spec, &cm);
+        let space = UnknownSpace::for_code(part, EncodeStyle::Stacked);
+        let a_blocks = part.split_a(a).into_iter().map(Arc::new).collect();
+        let b_blocks = part.split_b(b).into_iter().map(Arc::new).collect();
+        Ok(RatelessPlan { part: part.clone(), cm, spec, space, coder, a_blocks, b_blocks })
+    }
+
+    /// Number of real unknowns (sub-products of `C`).
+    pub fn num_unknowns(&self) -> usize {
+        self.part.num_products()
+    }
+
+    /// The class index of each unknown, in wire form (`RatelessJob`
+    /// ships this so workers rebuild the identical coder).
+    pub fn class_of(&self) -> Vec<u32> {
+        self.cm.class_of.iter().map(|&c| c as u32).collect()
+    }
+
+    /// The `(a block, b block)` factor pair of each unknown, in wire
+    /// form (ships alongside [`Self::class_of`]).
+    pub fn factors(&self) -> Vec<(u32, u32)> {
+        (0..self.part.num_products())
+            .map(|u| {
+                let (ai, bi) = self.part.factors_of(u);
+                (ai as u32, bi as u32)
+            })
+            .collect()
+    }
+
+    /// Derive the packet for `(request_id, stream, seq)` — identical to
+    /// what the worker holding that stream generates.
+    pub fn packet(&self, request_id: u64, stream: u64, seq: u32) -> Packet {
+        self.coder.packet(request_id, stream, seq)
+    }
+
+    /// The honest payload of a packet: `W_A · W_B` materialized from the
+    /// plan's own blocks (loopback backends and tests use this instead
+    /// of round-tripping matrices through a worker).
+    pub fn payload(&self, pkt: &Packet) -> Matrix {
+        let JobRecipe::Stacked { terms } = &pkt.recipe else {
+            panic!("rateless packets are always stacked");
+        };
+        let scaled: Vec<Matrix> = terms
+            .iter()
+            .map(|t| {
+                let (ai, _) = self.part.factors_of(t.unknown);
+                let mut m = (*self.a_blocks[ai]).clone();
+                m.scale(t.coeff);
+                m
+            })
+            .collect();
+        let wa = Matrix::hconcat(&scaled.iter().collect::<Vec<_>>());
+        let b_parts: Vec<&Matrix> = terms
+            .iter()
+            .map(|t| {
+                let (_, bi) = self.part.factors_of(t.unknown);
+                &*self.b_blocks[bi]
+            })
+            .collect();
+        matmul(&wa, &Matrix::vconcat(&b_parts))
+    }
+
+    /// The true sub-products (reference for loss traces in experiments).
+    pub fn true_products(&self) -> Vec<Matrix> {
+        (0..self.part.num_products())
+            .map(|u| {
+                let (ai, bi) = self.part.factors_of(u);
+                matmul(&self.a_blocks[ai], &self.b_blocks[bi])
+            })
+            .collect()
+    }
+}
+
+/// Freivalds verifier for a rateless stream. Fixed-rate [`Verifier`]
+/// precomputes one reference per *slot*; a rateless stream has no slot
+/// bound, so this one precomputes one reference per *unknown*:
+/// `z_u = A_{a(u)} · (B_{b(u)} · r)` for a single Gaussian probe `r`.
+/// Any packet's reference is then the coefficient combination
+/// `Σ_j c_j · z_{u_j}` — O(U·d) per check regardless of how many
+/// packets the stream ends up carrying.
+///
+/// As with [`Verifier`], the probe RNG is supplied by the caller on a
+/// stream disjoint from delay sampling, so toggling verification never
+/// shifts any other draw.
+#[derive(Clone, Debug)]
+pub struct RatelessVerifier {
+    probe: Matrix,
+    z: Vec<Matrix>,
+}
+
+impl RatelessVerifier {
+    /// Draw the probe and precompute one reference column per unknown.
+    pub fn new(plan: &RatelessPlan, rng: &mut Pcg64) -> RatelessVerifier {
+        let q = plan.b_blocks[0].cols();
+        let probe = Matrix::randn(q, 1, 0.0, 1.0, rng);
+        let z = (0..plan.num_unknowns())
+            .map(|u| {
+                let (ai, bi) = plan.part.factors_of(u);
+                matmul(&plan.a_blocks[ai], &matmul(&plan.b_blocks[bi], &probe))
+            })
+            .collect();
+        RatelessVerifier { probe, z }
+    }
+
+    /// Check one arriving payload against the packet's coefficient
+    /// terms. Returns `false` for wrong shapes, out-of-range unknowns,
+    /// or a product that misses the combined reference beyond relative
+    /// tolerance.
+    pub fn check(&self, terms: &[StackTerm], payload: &Matrix) -> bool {
+        let Some(first) = self.z.first() else { return false };
+        if payload.rows() != first.rows() || payload.cols() != self.probe.rows() {
+            return false;
+        }
+        let mut v = Matrix::zeros(first.rows(), 1);
+        for t in terms {
+            match self.z.get(t.unknown) {
+                Some(z) => v.axpy(t.coeff, z),
+                None => return false,
+            }
+        }
+        let pr = matmul(payload, &self.probe);
+        let scale = v.max_abs().max(pr.max_abs()).max(1.0);
+        pr.sub(&v).max_abs() <= 1e-6 * scale
+    }
+}
+
 /// Freivalds verifier for one request's job set: a cheap probabilistic
 /// check that an arriving sub-product really is `W_A · W_B`.
 ///
@@ -446,6 +625,68 @@ mod tests {
         assert!(v.check(0, &matmul(&wa, &wb)));
         assert!(!v.check(0, &Matrix::zeros(5, 5)), "wrong shape must fail");
         assert!(!v.check(1, &matmul(&wa, &wb)), "out-of-range slot must fail");
+    }
+
+    #[test]
+    fn rateless_plan_payload_matches_coefficient_combination() {
+        let mut rng = Pcg64::seed_from(41);
+        let part = Partitioning::rxc(3, 3, 2, 3, 2);
+        let a = Matrix::randn(6, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 0.0, 1.0, &mut rng);
+        let plan =
+            RatelessPlan::build(&part, RatelessSpec::paper_default(), 3, &a, &b)
+                .unwrap();
+        assert_eq!(plan.num_unknowns(), 9);
+        assert_eq!(plan.factors().len(), 9);
+        assert_eq!(plan.class_of().len(), 9);
+        let prods = plan.true_products();
+        for (stream, seq) in [(0u64, 0u32), (2, 5), (7, 31)] {
+            let pkt = plan.packet(123, stream, seq);
+            let JobRecipe::Stacked { terms } = &pkt.recipe else {
+                panic!("not stacked")
+            };
+            let mut want = Matrix::zeros(prods[0].rows(), prods[0].cols());
+            for t in terms {
+                want.axpy(t.coeff, &prods[t.unknown]);
+            }
+            assert!(plan.payload(&pkt).allclose(&want, 1e-10));
+        }
+    }
+
+    #[test]
+    fn rateless_verifier_accepts_honest_and_rejects_forged_packets() {
+        let mut rng = Pcg64::seed_from(42);
+        let part = Partitioning::rxc(3, 3, 4, 5, 4);
+        let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+        let plan =
+            RatelessPlan::build(&part, RatelessSpec::paper_default(), 3, &a, &b)
+                .unwrap();
+        let v = RatelessVerifier::new(&plan, &mut Pcg64::with_stream(99, 1));
+        for seq in 0..8u32 {
+            let pkt = plan.packet(5, 1, seq);
+            let JobRecipe::Stacked { terms } = &pkt.recipe else {
+                panic!("not stacked")
+            };
+            let honest = plan.payload(&pkt);
+            assert!(v.check(terms, &honest), "honest packet rejected at {seq}");
+            let mut data = honest.data().to_vec();
+            data[0] += 1.0 + 0.5 * honest.max_abs();
+            let forged = Matrix::from_vec(honest.rows(), honest.cols(), data);
+            assert!(!v.check(terms, &forged), "forged packet accepted at {seq}");
+            // a packet's payload never verifies against different terms
+            let other = plan.packet(5, 1, seq + 100);
+            let JobRecipe::Stacked { terms: ot } = &other.recipe else {
+                panic!("not stacked")
+            };
+            if ot != terms {
+                assert!(!v.check(ot, &honest), "cross-packet check passed");
+            }
+        }
+        assert!(!v.check(
+            &[StackTerm { unknown: 999, coeff: 1.0 }],
+            &plan.payload(&plan.packet(5, 1, 0))
+        ));
     }
 
     #[test]

@@ -16,10 +16,11 @@ use std::time::Duration;
 use crate::cluster::{
     run_worker, spawn_chaos_loopback_worker, spawn_loopback_workers,
     ClusterConfig, ClusterOutcome, ClusterServer, DeadlineMode, FaultPlan,
-    LoopbackTransport, TcpConn, TcpTransport, Transport, WorkerConfig,
+    LoopbackTransport, ServedDecode, TcpConn, TcpTransport, Transport,
+    WorkerConfig,
 };
-use crate::coding::{CodeKind, CodeSpec};
-use crate::coordinator::Plan;
+use crate::coding::{CodeKind, CodeSpec, RatelessSpec};
+use crate::coordinator::{Plan, RatelessPlan};
 use crate::latency::LatencyModel;
 use crate::linalg::Matrix;
 use crate::partition::Partitioning;
@@ -182,6 +183,106 @@ fn run_tcp(seed: u64, requests: usize) -> anyhow::Result<Vec<ClusterOutcome>> {
     Ok(outs)
 }
 
+/// Same operands and geometry as [`small_plan`], under the rateless
+/// family (paper-default robust-Soliton knobs, Table III windows).
+fn small_rateless_plan(seed: u64) -> RatelessPlan {
+    let mut rng = Pcg64::seed_from(seed);
+    let part = Partitioning::rxc(3, 3, 4, 5, 4);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut rng);
+    let b = Matrix::randn(5, 12, 0.0, 1.0, &mut rng);
+    RatelessPlan::build(&part, RatelessSpec::paper_default(), 3, &a, &b).unwrap()
+}
+
+/// Seeded per-stream cumulative packet completion times: `packets`
+/// strictly increasing arrivals per stream, all well inside `T_MAX`.
+fn rateless_schedules(
+    seed: u64,
+    req: u64,
+    streams: usize,
+    packets: usize,
+) -> Vec<Vec<f64>> {
+    let model = LatencyModel::exp(1.0);
+    (0..streams as u64)
+        .map(|s| {
+            let mut rng = Pcg64::with_stream(seed, 8000 + req * 64 + s);
+            let mut t = 0.0;
+            (0..packets)
+                .map(|_| {
+                    t += 0.1 + 0.2 * model.sample_scaled(1.0, &mut rng);
+                    t
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Rateless arm: the same lossy channel aimed at the *per-packet*
+/// result frames. Three workers stream packets through chaos layers
+/// that drop and reorder; the coordinator's per-`(stream, seq)` dedup,
+/// stall timer, and `Redo` regeneration must still deliver a complete,
+/// deterministic decode.
+fn run_rateless_soak(
+    seed: u64,
+    requests: usize,
+    chaos: bool,
+) -> anyhow::Result<Vec<ServedDecode>> {
+    let (mut transport, dialer) = LoopbackTransport::new();
+    let mut server = ClusterServer::new(soak_config());
+    let mut handles = Vec::new();
+    for i in 0..3u64 {
+        let cfg = WorkerConfig {
+            name: format!("lossy-{i}"),
+            ..WorkerConfig::default()
+        };
+        if chaos {
+            let plan = FaultPlan {
+                seed: seed ^ (200 + i),
+                drop: 0.1,
+                reorder: 0.2,
+                ..FaultPlan::default()
+            };
+            handles.push(spawn_chaos_loopback_worker(&dialer, &cfg, &plan));
+        } else {
+            handles.extend(spawn_loopback_workers(&dialer, 1, &cfg));
+        }
+        anyhow::ensure!(
+            server.accept_workers(&mut transport, 1, Duration::from_secs(10))? == 1,
+            "lossy-{i} failed to register"
+        );
+    }
+    let mut outs = Vec::new();
+    for req in 0..requests {
+        let plan = small_rateless_plan(seed.wrapping_add(req as u64));
+        let schedules = rateless_schedules(seed, req as u64, 3, 12);
+        outs.push(server.serve_rateless(
+            &plan,
+            T_MAX,
+            Some(schedules.as_slice()),
+            None,
+        )?);
+    }
+    server.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(outs)
+}
+
+/// Recovered unknowns of two rateless arms must agree bit for bit.
+fn rateless_bits_identical(a: &[ServedDecode], b: &[ServedDecode]) -> bool {
+    let values = |outs: &[ServedDecode]| -> Vec<Vec<u64>> {
+        outs.iter()
+            .flat_map(|o| o.st.recover_values())
+            .map(|v| {
+                v.map_or(Vec::new(), |m| {
+                    m.data().iter().map(|x| x.to_bits()).collect()
+                })
+            })
+            .collect()
+    };
+    a.len() == b.len() && values(a) == values(b)
+}
+
 /// Every request must have fully recovered: nothing late, nothing
 /// missing, all sub-products decoded.
 fn assert_full_recovery(outs: &[ClusterOutcome], arm: &str) -> anyhow::Result<()> {
@@ -283,12 +384,39 @@ pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
         "faulted and honest streams must decode identically at full recovery"
     );
 
+    // rateless arm: drop/reorder the per-packet result frames and
+    // demand the same complete, deterministic decode as a clean channel
+    let rl_chaos = run_rateless_soak(seed, requests, true)?;
+    let rl_clean = run_rateless_soak(seed, requests, false)?;
+    let rl_rerun = run_rateless_soak(seed, requests, true)?;
+    let mut rl_retries = 0usize;
+    for (req, out) in rl_chaos.iter().enumerate() {
+        anyhow::ensure!(
+            out.st.is_complete(),
+            "rateless request {req}: only {}/9 unknowns recovered under \
+             drop/reorder",
+            out.st.num_recovered()
+        );
+        rl_retries += out.retries;
+    }
+    let rl_rerun_identical = rateless_bits_identical(&rl_chaos, &rl_rerun);
+    let rl_clean_identical = rateless_bits_identical(&rl_chaos, &rl_clean);
+    anyhow::ensure!(rl_rerun_identical, "rateless soak rerun must decode bit-identically");
+    anyhow::ensure!(
+        rl_clean_identical,
+        "lossy and clean rateless channels must decode identically"
+    );
+
     let full_recovery = true; // asserted above, per request
     println!(
         "chaos soak: requests={requests} verify_failures={verify_failures} \
          corrupt={corrupt} retries={retries} quarantined={quarantined} \
          full_recovery={full_recovery} rerun_identical={rerun_identical} \
          verify_off_identical={verify_off_identical} tcp_identical={tcp_identical}"
+    );
+    println!(
+        "rateless soak: requests={requests} redo_retries={rl_retries} \
+         rerun_identical={rl_rerun_identical} clean_identical={rl_clean_identical}"
     );
     ctx.write_csv("chaos_soak.csv", &table)?;
     Ok(())
@@ -308,5 +436,20 @@ mod tests {
         assert!(outs.iter().map(|o| o.verify_failures).sum::<usize>() >= 2);
         let (rerun, _) = run_soak(42, 2).unwrap();
         assert!(bits_identical(&outs, &rerun));
+    }
+
+    /// Reduced pin of the rateless arm: drop/reorder on the per-packet
+    /// result frames still yields a complete decode, identical to a
+    /// clean channel and to its own replay.
+    #[test]
+    fn rateless_soak_survives_drop_and_reorder() {
+        let chaos = run_rateless_soak(43, 2, true).unwrap();
+        for out in &chaos {
+            assert!(out.st.is_complete());
+        }
+        let clean = run_rateless_soak(43, 2, false).unwrap();
+        let rerun = run_rateless_soak(43, 2, true).unwrap();
+        assert!(rateless_bits_identical(&chaos, &clean));
+        assert!(rateless_bits_identical(&chaos, &rerun));
     }
 }

@@ -15,6 +15,7 @@ mod fig8;
 mod fig9;
 mod mnist;
 mod params;
+mod rateless;
 mod stream;
 
 pub use common::{mc_loss_vs_packets, mc_loss_vs_time, ExpContext};
@@ -57,6 +58,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "chaos",
             "Byzantine-tolerance soak: lossy + lying workers, quarantine, bit-identical recovery",
             chaos::run,
+        ),
+        (
+            "rateless",
+            "fixed-rate EW vs rateless UEP: time-to-loss + straggler credit under drift",
+            rateless::run,
         ),
     ]
 }

@@ -1,0 +1,362 @@
+//! `rateless`: fixed-rate EW-UEP vs the rateless UEP family under
+//! drifting heterogeneous straggle — the work-conservation experiment.
+//!
+//! Both arms serve the *identical* request stream (same `A`, same fresh
+//! `B`s) over the same six-worker fleet with the same per-packet pace:
+//! worker `w` finishes its `k`-th unit of work at `(k+1)·base_w`, where
+//! half the fleet is `SLOW_FACTOR`× slower and the whole fleet drifts
+//! 1.5× slower halfway through the stream. The fixed-rate arm
+//! pre-assigns `FIXED_JOBS` EW-UEP coded packets round-robin, so the
+//! fast workers idle once their slots are exhausted while the coded
+//! packets assigned to stragglers trickle in (or never arrive); the
+//! rateless arm streams windowed LT packets (`CodeKind::Rateless`)
+//! until the decoder drains the stream, so fast workers keep producing
+//! and every straggler's early packets still earn partial credit.
+//!
+//! Measured per request, from the anytime progress stream: the time to
+//! reach normalized loss `1e-1`, `1e-3`, and an exact decode (censored
+//! at `T_max`), plus the straggler share of absorbed packets. Asserted:
+//! the rateless arm reaches `1e-3` no later than fixed-rate EW on
+//! average, the slowest workers contribute packets to every rateless
+//! decode, and the decode is bit-identical across a rerun, across
+//! in-process vs loopback-cluster serving, and with Freivalds
+//! verification on vs off.
+
+use std::time::Duration;
+
+use crate::api::{ClusterBackend, InProcessBackend, Request, RunReport, Session};
+use crate::cluster::{ClusterConfig, DeadlineMode, WorkerConfig};
+use crate::coding::{CodeKind, CodeSpec, RatelessSpec};
+use crate::config::SyntheticSpec;
+use crate::latency::LatencyModel;
+use crate::rng::Pcg64;
+use crate::util::csv::CsvTable;
+
+use super::common::ExpContext;
+
+/// Physical workers (= rateless streams).
+const STREAMS: usize = 6;
+/// Workers `SLOW_FROM..STREAMS` are the heterogeneous stragglers.
+const SLOW_FROM: usize = 3;
+/// The stragglers' per-packet pace multiplier.
+const SLOW_FACTOR: f64 = 4.0;
+/// Fleet-wide slowdown from the drift point on.
+const DRIFT_FACTOR: f64 = 1.5;
+/// Coded packets of the fixed-rate arm (Ω = 36/45 = 0.8).
+const FIXED_JOBS: usize = 45;
+/// Deadline in virtual time units (≈ 40 fast-worker packet periods).
+const T_MAX: f64 = 40.0;
+
+struct Scenario {
+    spec: SyntheticSpec,
+    requests: usize,
+    seed: u64,
+}
+
+impl Scenario {
+    /// `blocks = 6` per side: `K = 36` sub-products, so the decoder
+    /// provably cannot finish on the fast workers' packets alone before
+    /// every straggler delivers — by any straggler's first packet
+    /// (≤ 4.6 fast periods for any jitter draw) the three fast streams
+    /// have produced at most 15 < 36 packets.
+    fn new(scale: usize, requests: usize, seed: u64) -> Scenario {
+        Scenario {
+            spec: SyntheticSpec::fig9_rxc().scaled(scale).with_blocks(6),
+            requests,
+            seed,
+        }
+    }
+
+    /// Per-worker packet pace of request `r`: unit base with a seeded
+    /// ±15% jitter, `SLOW_FACTOR`× on the straggler half, and the
+    /// fleet-wide drift from the midpoint on.
+    fn bases(&self, r: usize) -> Vec<f64> {
+        let drift = if r >= self.requests / 2 { DRIFT_FACTOR } else { 1.0 };
+        let mut rng = Pcg64::with_stream(self.seed, 900 + r as u64);
+        (0..STREAMS)
+            .map(|w| {
+                let jitter = 0.85 + 0.3 * rng.next_f64();
+                let het = if w >= SLOW_FROM { SLOW_FACTOR } else { 1.0 };
+                drift * jitter * het
+            })
+            .collect()
+    }
+
+    /// Fixed-rate completion times: slot `i` is the `(i/STREAMS)`-th
+    /// sequential job of worker `i % STREAMS`.
+    fn fixed_delays(&self, bases: &[f64]) -> Vec<f64> {
+        (0..FIXED_JOBS)
+            .map(|i| bases[i % STREAMS] * ((i / STREAMS) as f64 + 1.0))
+            .collect()
+    }
+}
+
+/// Per-request record of one arm.
+#[derive(Clone, Debug, PartialEq)]
+struct Served {
+    tau_coarse: f64,
+    tau_fine: f64,
+    tau_exact: f64,
+    received: usize,
+    recovered: usize,
+    norm_loss: f64,
+    /// Fewest packets credited to any straggler stream (0 for the
+    /// fixed-rate arm's report, which carries no per-stream credit).
+    slow_packets: usize,
+    /// Packets credited to the straggler half in total.
+    slow_total: usize,
+    /// Decode bits, for identity assertions across arms and reruns.
+    c_bits: Vec<u64>,
+}
+
+/// First progress-event times at which the decode crosses each target
+/// (censored at `T_MAX` when never reached).
+fn served(report: &RunReport, k: usize) -> Served {
+    let (mut tc, mut tf, mut te) = (T_MAX, T_MAX, T_MAX);
+    for e in report.progress.events() {
+        if e.normalized_loss <= 1e-1 {
+            tc = tc.min(e.elapsed);
+        }
+        if e.normalized_loss <= 1e-3 {
+            tf = tf.min(e.elapsed);
+        }
+        if e.recovered == k {
+            te = te.min(e.elapsed);
+        }
+    }
+    let slow: Vec<usize> = report.worker_packets[SLOW_FROM.min(report.worker_packets.len())..]
+        .iter()
+        .map(|&(_, c)| c)
+        .collect();
+    Served {
+        tau_coarse: tc,
+        tau_fine: tf,
+        tau_exact: te,
+        received: report.outcome.received,
+        recovered: report.outcome.recovered,
+        norm_loss: report.outcome.normalized_loss,
+        slow_packets: slow.iter().copied().min().unwrap_or(0),
+        slow_total: slow.iter().sum(),
+        c_bits: report.outcome.c_hat.data().iter().map(|x| x.to_bits()).collect(),
+    }
+}
+
+/// Serve the whole stream through one in-process session arm.
+fn run_arm(sc: &Scenario, rateless: bool) -> anyhow::Result<Vec<Served>> {
+    let code = if rateless {
+        CodeSpec::stacked(CodeKind::Rateless(RatelessSpec::new(
+            0.05,
+            0.1,
+            sc.spec.gamma.clone(),
+        )))
+    } else {
+        CodeSpec::stacked(CodeKind::EwUep(sc.spec.gamma.clone()))
+    };
+    let workers = if rateless { STREAMS } else { FIXED_JOBS };
+    let mut session = Session::builder()
+        .partitioning(sc.spec.part.clone())
+        .code(code)
+        .classes(sc.spec.class_map())
+        .workers(workers)
+        .latency(LatencyModel::exp(1.0))
+        .deadline(T_MAX)
+        .score(true)
+        .seed(sc.seed)
+        .backend(InProcessBackend::serial())
+        .build()?;
+    serve_stream(sc, &mut session)
+}
+
+/// Rateless arm over the loopback cluster (Virtual deadline mode, the
+/// injected pacing replayed deterministically), with Freivalds
+/// verification on or off.
+fn run_cluster_arm(sc: &Scenario, verify: bool) -> anyhow::Result<Vec<Served>> {
+    let backend = ClusterBackend::loopback(
+        STREAMS,
+        ClusterConfig {
+            deadline: DeadlineMode::Virtual,
+            cache_capacity: 0,
+            verify,
+            ..ClusterConfig::default()
+        },
+        WorkerConfig { name: "loop".to_string(), ..WorkerConfig::default() },
+        Duration::from_secs(10),
+    )?;
+    let mut session = Session::builder()
+        .partitioning(sc.spec.part.clone())
+        .code(CodeSpec::stacked(CodeKind::Rateless(RatelessSpec::new(
+            0.05,
+            0.1,
+            sc.spec.gamma.clone(),
+        ))))
+        .classes(sc.spec.class_map())
+        .workers(STREAMS)
+        .latency(LatencyModel::exp(1.0))
+        .deadline(T_MAX)
+        .score(true)
+        .seed(sc.seed)
+        .backend(backend)
+        .build()?;
+    let rows = serve_stream(sc, &mut session)?;
+    session.shutdown()?;
+    Ok(rows)
+}
+
+/// The shared request loop: identical operands and pacing in every arm.
+/// Fixed-rate sessions take the expanded per-slot delays; rateless
+/// sessions take the per-stream bases (the session expands stream `s`
+/// to completions `(k+1)·base_s`).
+fn serve_stream(sc: &Scenario, session: &mut Session) -> anyhow::Result<Vec<Served>> {
+    let rateless = session.workers() == STREAMS;
+    let k = sc.spec.part.num_products();
+    let mut mats = Pcg64::with_stream(sc.seed, 800);
+    let a = sc.spec.sample_a(&mut mats);
+    let mut rows = Vec::with_capacity(sc.requests);
+    for r in 0..sc.requests {
+        let b = sc.spec.sample_b(&mut mats);
+        let bases = sc.bases(r);
+        let delays = if rateless { bases } else { sc.fixed_delays(&bases) };
+        let out = session.run(
+            Request::new(0, a.clone(), b).deadline(T_MAX).delays(delays),
+        )?;
+        anyhow::ensure!(
+            out.progress.loss_non_increasing(),
+            "anytime loss must be non-increasing"
+        );
+        rows.push(served(&out, k));
+    }
+    Ok(rows)
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+fn bits_identical(a: &[Served], b: &[Served]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b.iter()).all(|(x, y)| x.c_bits == y.c_bits)
+}
+
+/// Core comparison, shared by the CLI experiment and the regression
+/// test: serve both arms plus the identity reruns and check every
+/// acceptance property.
+fn compare(sc: &Scenario) -> anyhow::Result<(Vec<Served>, Vec<Served>)> {
+    let fixed = run_arm(sc, false)?;
+    let rl = run_arm(sc, true)?;
+    let again = run_arm(sc, true)?;
+    anyhow::ensure!(
+        rl == again,
+        "the rateless arm must be bit-reproducible across reruns"
+    );
+    let on = run_cluster_arm(sc, true)?;
+    let off = run_cluster_arm(sc, false)?;
+    anyhow::ensure!(
+        bits_identical(&on, &off),
+        "Freivalds verification on/off must not change the decode"
+    );
+    anyhow::ensure!(
+        bits_identical(&rl, &on),
+        "in-process and loopback-cluster rateless serving must decode \
+         identically"
+    );
+    for (r, row) in rl.iter().enumerate() {
+        anyhow::ensure!(
+            row.slow_packets > 0,
+            "request {r}: a straggler stream earned no rateless packet credit"
+        );
+    }
+    let fx_fine = mean(fixed.iter().map(|s| s.tau_fine));
+    let rl_fine = mean(rl.iter().map(|s| s.tau_fine));
+    anyhow::ensure!(
+        rl_fine <= fx_fine + 1e-9,
+        "rateless must reach 1e-3 loss no later than fixed-rate EW: \
+         rateless {rl_fine:.3} vs fixed {fx_fine:.3}"
+    );
+    Ok((fixed, rl))
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let sc = Scenario::new(2 * ctx.scale_factor(), 12, ctx.seed);
+    println!(
+        "rateless: {} requests, K={} sub-products, {STREAMS} workers \
+         ({} stragglers at {SLOW_FACTOR}x pace, fleet {DRIFT_FACTOR}x \
+         slower from request {}), fixed-rate arm {FIXED_JOBS} EW packets, \
+         T_max={T_MAX}",
+        sc.requests,
+        sc.spec.part.num_products(),
+        STREAMS - SLOW_FROM,
+        sc.requests / 2,
+    );
+    let (fixed, rl) = compare(&sc)?;
+
+    let mut table = CsvTable::new(&[
+        "arm", "request", "drifted", "tau_1e1", "tau_1e3", "tau_exact",
+        "received", "recovered", "norm_loss", "slow_min_packets",
+        "slow_fraction",
+    ]);
+    for (arm, rows) in [("fixed-ew", &fixed), ("rateless", &rl)] {
+        for (r, s) in rows.iter().enumerate() {
+            table.push_raw(vec![
+                arm.to_string(),
+                r.to_string(),
+                (r >= sc.requests / 2).to_string(),
+                format!("{:.4}", s.tau_coarse),
+                format!("{:.4}", s.tau_fine),
+                format!("{:.4}", s.tau_exact),
+                s.received.to_string(),
+                s.recovered.to_string(),
+                format!("{:.6}", s.norm_loss),
+                s.slow_packets.to_string(),
+                format!("{:.4}", s.slow_total as f64 / s.received.max(1) as f64),
+            ]);
+        }
+    }
+    let half = sc.requests / 2;
+    for (label, lo, hi) in
+        [("pre-drift", 0, half), ("post-drift", half, sc.requests)]
+    {
+        println!(
+            "  {label:<10} mean time-to-loss (1e-1 / 1e-3 / exact): \
+             fixed {:.2} / {:.2} / {:.2}   rateless {:.2} / {:.2} / {:.2}",
+            mean(fixed[lo..hi].iter().map(|s| s.tau_coarse)),
+            mean(fixed[lo..hi].iter().map(|s| s.tau_fine)),
+            mean(fixed[lo..hi].iter().map(|s| s.tau_exact)),
+            mean(rl[lo..hi].iter().map(|s| s.tau_coarse)),
+            mean(rl[lo..hi].iter().map(|s| s.tau_fine)),
+            mean(rl[lo..hi].iter().map(|s| s.tau_exact)),
+        );
+    }
+    println!(
+        "  straggler credit: {:.3} of absorbed rateless packets on average \
+         (min {} per straggler per request); decode bit-identical across \
+         rerun, in-process vs cluster, and verify on/off",
+        mean(rl.iter().map(|s| s.slow_total as f64 / s.received.max(1) as f64)),
+        rl.iter().map(|s| s.slow_packets).min().unwrap_or(0),
+    );
+    ctx.write_csv("rateless.csv", &table)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance properties at test scale: rateless reaches 1e-3
+    /// no later than fixed-rate EW under the drifting heterogeneous
+    /// scenario, every straggler earns packet credit, and the decode is
+    /// bit-identical across reruns, backends, and the verify toggle
+    /// (all asserted inside `compare`).
+    #[test]
+    fn rateless_beats_fixed_rate_and_credits_the_stragglers() {
+        let sc = Scenario::new(20, 4, 2021);
+        let (fixed, rl) = compare(&sc).unwrap();
+        assert_eq!(fixed.len(), sc.requests);
+        assert_eq!(rl.len(), sc.requests);
+        // every rateless request decodes exactly within the deadline
+        for row in &rl {
+            assert_eq!(row.recovered, sc.spec.part.num_products());
+            assert!(row.tau_exact < T_MAX);
+        }
+    }
+}

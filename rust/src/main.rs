@@ -25,7 +25,7 @@ use uepmm::cluster::{
     ChaosConn, ClusterConfig, ClusterServer, DeadlineMode, FaultPlan, TcpConn,
     TcpTransport, Transport, WorkerConfig,
 };
-use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use uepmm::coding::{CodeKind, CodeSpec, RatelessSpec, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
 use uepmm::experiments::{self, ExpContext};
 use uepmm::latency::LatencyModel;
@@ -129,7 +129,11 @@ struct CodedOpts {
 
 impl CodedOpts {
     fn declare(cmd: Command, scale_default: &'static str) -> Command {
-        cmd.opt("code", "ew", "uncoded|rep|mds|now|ew|now-rank1|ew-rank1")
+        cmd.opt(
+            "code",
+            "ew",
+            "uncoded|rep|mds|now|ew|now-rank1|ew-rank1|rateless[:delta=D,c=C]",
+        )
             .opt("workers", "15", "coded packets (jobs) per request")
             .opt("tmax", "1.0", "deadline(s) T_max, comma list cycled")
             .opt("scale", scale_default, "matrix size divisor vs the paper")
@@ -260,21 +264,20 @@ impl EngineOpts {
     }
 }
 
+/// Parse `--code` through [`CodeSpec`]'s `FromStr` and substitute the
+/// preset's window polynomial for the parser's Table III default (the
+/// rateless family keeps its parsed `δ`/`c` knobs and swaps only `Γ`).
 fn parse_code(kind: &str, gamma: &WindowPolynomial) -> anyhow::Result<CodeSpec> {
-    Ok(match kind {
-        "uncoded" => CodeSpec::stacked(CodeKind::Uncoded),
-        "rep" => CodeSpec::stacked(CodeKind::Repetition),
-        "mds" => CodeSpec::stacked(CodeKind::Mds),
-        "now" => CodeSpec::stacked(CodeKind::NowUep(gamma.clone())),
-        "ew" => CodeSpec::stacked(CodeKind::EwUep(gamma.clone())),
-        "now-rank1" => {
-            CodeSpec::new(CodeKind::NowUep(gamma.clone()), EncodeStyle::RankOne)
+    let mut spec: CodeSpec = kind.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    spec.kind = match spec.kind {
+        CodeKind::NowUep(_) => CodeKind::NowUep(gamma.clone()),
+        CodeKind::EwUep(_) => CodeKind::EwUep(gamma.clone()),
+        CodeKind::Rateless(r) => {
+            CodeKind::Rateless(RatelessSpec::new(r.delta, r.c, gamma.clone()))
         }
-        "ew-rank1" => {
-            CodeSpec::new(CodeKind::EwUep(gamma.clone()), EncodeStyle::RankOne)
-        }
-        other => anyhow::bail!("unknown code '{other}'"),
-    })
+        k => k,
+    };
+    Ok(spec)
 }
 
 // ============================================================ subcommands
@@ -368,6 +371,14 @@ fn cmd_matmul(rest: &[String]) -> anyhow::Result<()> {
             k
         );
         println!("per-class recovery: {:?}", report.outcome.per_class_recovered);
+        if !report.worker_packets.is_empty() {
+            let per: Vec<String> = report
+                .worker_packets
+                .iter()
+                .map(|(id, c)| format!("w{id}:{c}"))
+                .collect();
+            println!("rateless packet credit: [{}]", per.join(", "));
+        }
         println!(
             "normalized loss ‖C−Ĉ‖²/‖C‖² = {:.6}",
             report.outcome.normalized_loss
@@ -397,7 +408,13 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 "1",
                 "consecutive missed heartbeats before a worker is evicted",
             )
-            .flag("no-verify", "skip Freivalds verification of arriving results");
+            .flag("no-verify", "skip Freivalds verification of arriving results")
+            .opt(
+                "blocks",
+                "3",
+                "factor blocks per side (K = blocks²; raise for finer \
+                 rateless packet credit)",
+            );
         let c = CodedOpts::declare(c, "10");
         let c = TimingOpts::declare(
             c,
@@ -414,7 +431,13 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let adaptive = AdaptiveOpts::parse(&a)?;
     let loopback = a.get_bool("loopback");
     anyhow::ensure!(timing.time_scale > 0.0, "--time-scale must be > 0");
-    let (spec, code) = coded.apply(SyntheticSpec::fig9_rxc())?;
+    let (mut spec, code) = coded.apply(SyntheticSpec::fig9_rxc())?;
+    let blocks: usize = a.get("blocks")?;
+    anyhow::ensure!(blocks >= 1, "--blocks must be >= 1");
+    if blocks != 3 {
+        spec = spec.with_blocks(blocks);
+    }
+    let rateless = matches!(code.kind, CodeKind::Rateless(_));
     let requests: usize = a.get("requests")?;
     let n_matrices = a.get::<usize>("matrices")?.max(1);
     let accept_timeout = Duration::from_secs_f64(a.get_f64("accept-timeout")?);
@@ -467,6 +490,11 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     for w in backend.worker_info() {
         println!("worker {} registered: {}", w.id, w.name);
     }
+    if rateless {
+        // One rateless stream per live worker: required for the virtual
+        // schedule replay, and the natural shape for wall self-pacing.
+        spec.workers = expected;
+    }
 
     let mut builder = Session::builder()
         .partitioning(spec.part.clone())
@@ -479,7 +507,10 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .score(true)
         .seed(shared.seed)
         .backend(backend);
-    if loopback {
+    // Rateless pacing needs the session model even over TCP: the wall
+    // server lets workers self-pace, but `prepare()` derives the stream
+    // budgets from the model.
+    if loopback || rateless {
         if let Some(model) = timing.latency.clone() {
             builder = builder.latency(model);
         }
@@ -500,6 +531,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let a_mats: Vec<_> = (0..n_matrices).map(|_| spec.sample_a(&mut mats)).collect();
     let (mut received, mut late, mut missing, mut recovered) = (0, 0, 0, 0);
     let (mut retries, mut corrupt) = (0usize, 0usize);
+    // Worst per-request partial credit: min over requests of the fewest
+    // packets any contributing stream decoded (rateless runs only).
+    let mut rateless_partial: Option<usize> = None;
     let (mut verify_failures, mut quarantined) = (0usize, 0usize);
     let (mut refinements, mut monotone) = (0usize, true);
     for req in 0..requests {
@@ -524,6 +558,25 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             out.progress.refinements(),
             out.wall,
         );
+        if !out.worker_packets.is_empty() {
+            let total: usize = out.worker_packets.iter().map(|(_, c)| *c).sum();
+            let per: Vec<String> = out
+                .worker_packets
+                .iter()
+                .map(|(id, c)| format!("w{id}:{c}"))
+                .collect();
+            let slowest =
+                out.worker_packets.iter().map(|(_, c)| *c).min().unwrap_or(0);
+            println!(
+                "  rateless credit: {total} packets decoded [{}], \
+                 slowest stream {slowest}",
+                per.join(", ")
+            );
+            rateless_partial = Some(
+                rateless_partial
+                    .map_or(out.partial_packets, |p| p.min(out.partial_packets)),
+            );
+        }
         received += out.outcome.received;
         late += out.late;
         missing += out.missing();
@@ -560,9 +613,12 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         "stream done: requests={requests} received={received} late={late} \
          missing={missing} recovered_total={recovered} retries={retries} \
          corrupt={corrupt} verify_failures={verify_failures} \
-         quarantined={quarantined} full_recovery={full_recovery} cache_hits={} \
-         cache_misses={} cache_evictions={}",
-        cache.hits, cache.misses, cache.evictions
+         quarantined={quarantined} full_recovery={full_recovery} \
+         partial_packets={} cache_hits={} cache_misses={} cache_evictions={}",
+        rateless_partial.unwrap_or(0),
+        cache.hits,
+        cache.misses,
+        cache.evictions
     );
     println!("progress: refinements={refinements} monotone={monotone}");
     if let Some(model) = session.fitted_latency() {
