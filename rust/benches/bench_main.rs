@@ -55,11 +55,15 @@ impl Harness {
         Harness { filters, results: Vec::new() }
     }
 
+    /// True when `name` passes the CLI filters.
+    fn wants(&self, name: &str) -> bool {
+        self.filters.is_empty()
+            || self.filters.iter().any(|filt| name.contains(filt.as_str()))
+    }
+
     /// Time `f`, autoscaling iterations to ~25 ms per sample, 9 samples.
     fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
-        if !self.filters.is_empty()
-            && !self.filters.iter().any(|filt| name.contains(filt.as_str()))
-        {
+        if !self.wants(name) {
             return;
         }
         // warmup + calibration
@@ -100,6 +104,28 @@ impl Harness {
             mad,
             samples,
             iters_per_sample: iters,
+        });
+    }
+
+    /// Record an externally measured latency point (e.g. a served-request
+    /// percentile from a concurrent run) so it lands in the same CSV/JSON
+    /// perf trajectory as the timed benches. `samples` is the number of
+    /// observations the point was taken over.
+    fn record(&mut self, name: &str, value: Duration, samples: usize) {
+        if !self.wants(name) {
+            return;
+        }
+        println!(
+            "{name:<52} {:>12} ±{:>10}  (1 iters × {samples} samples)",
+            fmt_dur(value),
+            fmt_dur(Duration::ZERO),
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            median: value,
+            mad: Duration::ZERO,
+            samples,
+            iters_per_sample: 1,
         });
     }
 
@@ -393,7 +419,7 @@ fn main() {
             );
         });
         let mut cache = EncodedBlockCache::new(4);
-        let key = CacheKey::new(0, &spec_rxc.part, &ew, &cm, 30);
+        let key = CacheKey::new(0, 0, &spec_rxc.part, &ew, &cm, 30);
         let mut rr = Pcg64::seed_from(5);
         cache
             .get_or_insert_with(key.clone(), || {
@@ -487,6 +513,97 @@ fn main() {
             }
             std::hint::black_box(recovered);
         });
+    }
+
+    // ---------------- multi-tenant serve plane --------------------------
+    if h.wants("service/served-request p50 (3 tenants, shared fleet)") {
+        // three concurrent tenants stream repeated-A requests through one
+        // loopback ServePlane over a 3-worker fleet; the recorded points
+        // are the p50/p99 of every served request's client-observed wall
+        // time — the PR-8 headline the CI regression gate watches
+        use std::thread;
+        use uepmm::api::{ClusterBackend, Request, Session};
+        use uepmm::cluster::{
+            spawn_loopback_workers, Connection, LoopbackTransport, ServePlane,
+            ServiceConfig, WorkerConfig,
+        };
+        use uepmm::coding::WindowPolynomial;
+        use uepmm::partition::{default_pair_classes, ClassMap};
+
+        const TENANTS: usize = 3;
+        const REQUESTS: usize = 8;
+        let part_srv = Partitioning::rxc(3, 3, 4, 5, 4);
+        let cm_srv = ClassMap::from_levels(
+            &part_srv,
+            vec![0, 1, 2],
+            vec![0, 1, 2],
+            &default_pair_classes(3),
+        );
+        let code_srv =
+            CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
+
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let plane = thread::spawn(move || {
+            ServePlane::new(ServiceConfig::default()).run(&mut transport, TENANTS)
+        });
+        let workers = spawn_loopback_workers(&dialer, 3, &WorkerConfig::default());
+        let handles: Vec<_> = (0..TENANTS)
+            .map(|i| {
+                let dialer = dialer.clone();
+                let part = part_srv.clone();
+                let cm = cm_srv.clone();
+                let code = code_srv.clone();
+                thread::spawn(move || {
+                    let name = format!("bench-{i}");
+                    let conn: Box<dyn Connection> =
+                        Box::new(dialer.dial(&name).unwrap());
+                    let backend =
+                        ClusterBackend::connect_over(conn, &name).unwrap();
+                    let mut s = Session::builder()
+                        .partitioning(part)
+                        .code(code)
+                        .classes(cm)
+                        .workers(14)
+                        .latency(LatencyModel::exp(1.0))
+                        .deadline(50.0)
+                        .seed(900 + i as u64)
+                        .backend(backend)
+                        .build()
+                        .unwrap();
+                    let mut mats = Pcg64::with_stream(900 + i as u64, 1);
+                    let a_t = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+                    let mut walls = Vec::with_capacity(REQUESTS);
+                    for _ in 0..REQUESTS {
+                        let b_t = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+                        walls.push(
+                            s.run(Request::new(0, a_t.clone(), b_t)).unwrap().wall,
+                        );
+                    }
+                    s.shutdown().unwrap();
+                    walls
+                })
+            })
+            .collect();
+        let mut walls: Vec<Duration> = handles
+            .into_iter()
+            .flat_map(|jh| jh.join().unwrap())
+            .collect();
+        plane.join().unwrap();
+        for jh in workers {
+            jh.join().unwrap().unwrap();
+        }
+        walls.sort();
+        let pct = |q: f64| walls[((walls.len() - 1) as f64 * q).round() as usize];
+        h.record(
+            "service/served-request p50 (3 tenants, shared fleet)",
+            pct(0.5),
+            walls.len(),
+        );
+        h.record(
+            "service/served-request p99 (3 tenants, shared fleet)",
+            pct(0.99),
+            walls.len(),
+        );
     }
 
     // ---------------- matmul tiers (native engine) ---------------------

@@ -24,6 +24,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cluster::transport::{Connection, TcpConn};
+use crate::cluster::wire::{ClientResultMsg, Msg, SubmitMsg, WireError};
 use crate::cluster::{
     spawn_loopback_workers, ClusterConfig, ClusterServer, DeadlineMode, DecodeStep,
     JobTiming, LoopbackTransport, WorkerConfig, WorkerInfo, WorkerStats,
@@ -31,11 +33,12 @@ use crate::cluster::{
 use crate::coding::DecodeState;
 use crate::coordinator::{assemble_outcome, score_outcome, Outcome};
 use crate::linalg::{matmul, Matrix};
+use crate::partition::Paradigm;
 use crate::runtime::{ExecEngine, NativeEngine};
 
 use super::error::{classify_cluster_error, ApiResult, UepmmError};
-use super::progress::{ProgressEvent, ProgressTracker};
-use super::session::{PreparedRequest, PreparedWork, RunReport};
+use super::progress::{Progress, ProgressEvent, ProgressTracker};
+use super::session::{PreparedRequest, PreparedWork, RunReport, ScoreRef};
 
 /// What a backend can and cannot do; checked by the session builder so
 /// misconfiguration fails up front.
@@ -96,6 +99,11 @@ pub struct Maintenance {
     /// rejoin until `ClusterServer::reset_quarantine`). Networked
     /// backends only.
     pub quarantined: Vec<u64>,
+    /// Per-tenant encoded-block cache accounting, `(tenant, hits,
+    /// misses)` sorted by tenant id. Populated by [`super::Session`]
+    /// (the cache owner) on top of whatever the backend reports; tenants
+    /// that never touched the cache are absent.
+    pub cache_tenants: Vec<(u64, u64, u64)>,
 }
 
 /// One execution path behind the unified client API.
@@ -721,6 +729,7 @@ impl ClusterCore {
             straggle: info.iter().map(|w| (w.id, w.straggle)).collect(),
             verify_failures: info.iter().map(|w| (w.id, w.verify_failures)).collect(),
             quarantined: self.server.quarantined_workers(),
+            cache_tenants: Vec::new(),
         })
     }
 
@@ -828,17 +837,39 @@ impl Backend for PooledBackend {
     }
 }
 
-/// The networked path: any [`ClusterServer`] with registered workers.
+/// The networked path, in one of two modes:
+///
+/// * **local coordinator** — this process owns a [`ClusterServer`] and
+///   drives its registered workers directly ([`ClusterBackend::from_server`],
+///   [`ClusterBackend::loopback`]);
+/// * **remote client** — this process dials a multi-tenant serve plane
+///   ([`crate::cluster::service`]) over wire-v6 client frames and never
+///   sees the worker fleet ([`ClusterBackend::connect`]). The session
+///   API is unchanged: `submit`/`poll`/`cancel` work identically, the
+///   plane streams `ProgressFrame`s back as [`ProgressEvent`]s, and
+///   admission rejections surface as [`UepmmError::Rejected`].
+///
 /// See module docs.
 pub struct ClusterBackend {
-    core: ClusterCore,
+    inner: ClusterInner,
+}
+
+enum ClusterInner {
+    Local(ClusterCore),
+    Remote(RemoteClient),
 }
 
 impl ClusterBackend {
     /// Wrap a server whose workers are already registered (the TCP
     /// deployment: bind, `accept_workers`, then hand the server here).
     pub fn from_server(server: ClusterServer) -> ClusterBackend {
-        ClusterBackend { core: ClusterCore::new("cluster", server, Vec::new()) }
+        ClusterBackend {
+            inner: ClusterInner::Local(ClusterCore::new(
+                "cluster",
+                server,
+                Vec::new(),
+            )),
+        }
     }
 
     /// Spawn an in-process loopback cluster with explicit server and
@@ -851,36 +882,80 @@ impl ClusterBackend {
         accept_timeout: Duration,
     ) -> ApiResult<ClusterBackend> {
         Ok(ClusterBackend {
-            core: spawn_loopback_core(
+            inner: ClusterInner::Local(spawn_loopback_core(
                 "cluster",
                 threads,
                 cluster,
                 worker,
                 accept_timeout,
-            )?,
+            )?),
         })
     }
 
-    /// Registry view of the attached workers.
+    /// Dial a multi-tenant serve plane at `addr` (e.g.
+    /// `127.0.0.1:7077`) and open one client session named `client`.
+    /// Speaks the wire-v6 client frames; an `OpenSession` ack carries
+    /// the assigned session id, a `Reject` surfaces as
+    /// [`UepmmError::Rejected`] with the plane's suggested backoff.
+    pub fn connect(addr: &str, client: &str) -> ApiResult<ClusterBackend> {
+        let conn = TcpConn::connect(addr)
+            .map_err(|e| UepmmError::Transport(format!("dial {addr}: {e}")))?;
+        Self::connect_over(Box::new(conn), client)
+    }
+
+    /// Open a client session over an already-established connection —
+    /// how tests run the remote client against an in-process serve
+    /// plane on the loopback transport.
+    pub fn connect_over(
+        conn: Box<dyn Connection>,
+        client: &str,
+    ) -> ApiResult<ClusterBackend> {
+        Ok(ClusterBackend {
+            inner: ClusterInner::Remote(RemoteClient::open(conn, client)?),
+        })
+    }
+
+    /// Registry view of the attached workers (empty in remote-client
+    /// mode: the fleet belongs to the serve plane).
     pub fn worker_info(&self) -> Vec<WorkerInfo> {
-        self.core.server.worker_info()
+        match &self.inner {
+            ClusterInner::Local(core) => core.server.worker_info(),
+            ClusterInner::Remote(_) => Vec::new(),
+        }
     }
 
     pub fn deadline_mode(&self) -> DeadlineMode {
-        self.core.server.config().deadline
+        match &self.inner {
+            ClusterInner::Local(core) => core.server.config().deadline,
+            // the serve plane settles requests in virtual time
+            ClusterInner::Remote(_) => DeadlineMode::Virtual,
+        }
+    }
+
+    /// The session id the serve plane assigned (remote mode only).
+    pub fn session_id(&self) -> Option<u64> {
+        match &self.inner {
+            ClusterInner::Local(_) => None,
+            ClusterInner::Remote(rc) => Some(rc.session),
+        }
     }
 }
 
 impl Backend for ClusterBackend {
     fn name(&self) -> &'static str {
-        "cluster"
+        match &self.inner {
+            ClusterInner::Local(_) => "cluster",
+            ClusterInner::Remote(_) => "cluster-remote",
+        }
     }
 
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             deterministic: self.deadline_mode() == DeadlineMode::Virtual,
             networked: true,
-            streaming: false,
+            // the remote client absorbs plane progress frames one poll
+            // at a time; the local coordinator completes on first poll
+            streaming: matches!(self.inner, ClusterInner::Remote(_)),
             // workers may self-sample or report natural timing, so a
             // session latency model is optional here
             needs_injected_delays: false,
@@ -889,22 +964,335 @@ impl Backend for ClusterBackend {
     }
 
     fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
-        self.core.submit(prep)
+        match &mut self.inner {
+            ClusterInner::Local(core) => core.submit(prep),
+            ClusterInner::Remote(rc) => rc.submit(prep),
+        }
     }
 
     fn poll(&mut self, id: u64) -> ApiResult<PollState> {
-        self.core.poll(id)
+        match &mut self.inner {
+            ClusterInner::Local(core) => core.poll(id),
+            ClusterInner::Remote(rc) => rc.poll(id),
+        }
     }
 
     fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
-        self.core.cancel(id)
+        match &mut self.inner {
+            ClusterInner::Local(core) => core.cancel(id),
+            ClusterInner::Remote(rc) => rc.cancel(id),
+        }
     }
 
     fn maintain(&mut self) -> ApiResult<Maintenance> {
-        self.core.maintain()
+        match &mut self.inner {
+            ClusterInner::Local(core) => core.maintain(),
+            // no registry view from the client side of the plane
+            ClusterInner::Remote(_) => Ok(Maintenance::default()),
+        }
     }
 
     fn shutdown(&mut self) -> ApiResult<()> {
-        self.core.shutdown()
+        match &mut self.inner {
+            ClusterInner::Local(core) => core.shutdown(),
+            ClusterInner::Remote(rc) => rc.shutdown(),
+        }
+    }
+}
+
+// ================================================== remote-client mode
+
+/// Client half of the wire-v6 serve-plane protocol: one open session,
+/// any number of in-flight requests, progress frames demultiplexed by
+/// `(session, request)`.
+struct RemoteClient {
+    conn: Box<dyn Connection>,
+    session: u64,
+    pending: Vec<RemoteRequest>,
+    done: Vec<(u64, RunReport)>,
+    /// Rejections awaiting their own handle's poll.
+    rejected: Vec<(u64, UepmmError)>,
+}
+
+/// Client-side state of one submitted request: everything the final
+/// [`RunReport`] needs that never crosses the wire (`c_true`, replan
+/// provenance, the local clock).
+struct RemoteRequest {
+    id: u64,
+    score: Option<ScoreRef>,
+    cache_hit: Option<bool>,
+    replans: Vec<super::adapt::ReplanEvent>,
+    events: Vec<ProgressEvent>,
+    reported: usize,
+    start: Instant,
+}
+
+/// How long one `poll` waits for the plane before declaring it stalled.
+const REMOTE_POLL_WAIT: Duration = Duration::from_secs(60);
+
+impl RemoteClient {
+    fn open(mut conn: Box<dyn Connection>, client: &str) -> ApiResult<RemoteClient> {
+        conn.send(&Msg::OpenSession { session: 0, client: client.to_string() })
+            .map_err(|e| UepmmError::Transport(format!("open-session: {e}")))?;
+        match conn.recv_timeout(Some(REMOTE_POLL_WAIT)) {
+            Ok(Some(Msg::OpenSession { session, .. })) => Ok(RemoteClient {
+                conn,
+                session,
+                pending: Vec::new(),
+                done: Vec::new(),
+                rejected: Vec::new(),
+            }),
+            Ok(Some(Msg::Reject { retry_after, reason, .. })) => {
+                Err(reject_error(retry_after, reason))
+            }
+            Ok(Some(other)) => Err(UepmmError::Transport(format!(
+                "serve plane answered OpenSession with {}",
+                other.name()
+            ))),
+            Ok(None) => Err(UepmmError::Transport(
+                "serve plane did not ack OpenSession".to_string(),
+            )),
+            Err(e) => Err(UepmmError::Transport(format!("open-session: {e}"))),
+        }
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        let PreparedRequest {
+            id, part, cm, t_max, delays, work, score, cache_hit, replans,
+        } = prep;
+        let (enc, wb) = match work {
+            PreparedWork::Encoded { enc, wb } => (enc, wb),
+            PreparedWork::Blocks { .. } | PreparedWork::Rateless { .. } => {
+                return Err(UepmmError::Config(
+                    "the remote serve plane accepts materialized fixed-rate \
+                     requests only (selective compute and rateless streams \
+                     are local modes)"
+                        .to_string(),
+                ))
+            }
+        };
+        if let Some(d) = &delays {
+            if d.len() != enc.packets.len() {
+                return Err(UepmmError::Config(format!(
+                    "{} delays for {} jobs",
+                    d.len(),
+                    enc.packets.len()
+                )));
+            }
+        }
+        let rows: Vec<Vec<f64>> =
+            enc.packets.iter().map(|p| p.coeff_row(&enc.space)).collect();
+        let msg = Msg::Submit(SubmitMsg {
+            session: self.session,
+            request: id,
+            t_max,
+            paradigm: match part.paradigm {
+                Paradigm::RowTimesCol => 0,
+                Paradigm::ColTimesRow => 1,
+            },
+            dims: [
+                part.n as u32,
+                part.p as u32,
+                part.m as u32,
+                part.u as u32,
+                part.h as u32,
+                part.q as u32,
+            ],
+            n_total: enc.space.n_total as u32,
+            n_classes: cm.n_classes as u32,
+            class_of: cm.class_of.iter().map(|&c| c as u32).collect(),
+            rows,
+            wa: enc.wa.clone(),
+            wb: wb.into_iter().map(Arc::new).collect(),
+            delays: delays.unwrap_or_default(),
+            gram: score.as_ref().map(|s| s.gram.clone()),
+            energy: score.as_ref().map(|s| s.energy).unwrap_or(f64::NAN),
+        });
+        self.conn
+            .send(&msg)
+            .map_err(|e| UepmmError::Transport(format!("submit: {e}")))?;
+        self.pending.push(RemoteRequest {
+            id,
+            score,
+            cache_hit,
+            replans,
+            events: Vec::new(),
+            reported: 0,
+            start: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(PollState::Ready(self.done.swap_remove(pos).1));
+        }
+        if let Some(pos) = self.rejected.iter().position(|(d, _)| *d == id) {
+            return Err(self.rejected.swap_remove(pos).1);
+        }
+        let Some(pos) = self.pending.iter().position(|r| r.id == id) else {
+            return Err(UepmmError::Config(format!("unknown request id {id}")));
+        };
+        // hand out progress buffered by another request's poll first
+        {
+            let req = &mut self.pending[pos];
+            if req.reported < req.events.len() {
+                let new = req.events[req.reported..].to_vec();
+                req.reported = req.events.len();
+                return Ok(PollState::Pending(new));
+            }
+        }
+        // absorb exactly one plane frame, demultiplexed by request id
+        let msg = match self.conn.recv_timeout(Some(REMOTE_POLL_WAIT)) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                return Err(UepmmError::Transport(
+                    "serve plane went silent mid-request".to_string(),
+                ))
+            }
+            Err(e) => return Err(UepmmError::Transport(format!("poll: {e}"))),
+        };
+        match msg {
+            Msg::ProgressFrame(p) => {
+                let ev = ProgressEvent {
+                    received: p.received as usize,
+                    recovered: p.recovered as usize,
+                    newly: p.newly as usize,
+                    attempt: p.attempt,
+                    loss: p.loss,
+                    normalized_loss: p.normalized_loss,
+                    elapsed: p.elapsed,
+                };
+                if let Some(req) =
+                    self.pending.iter_mut().find(|r| r.id == p.request)
+                {
+                    req.events.push(ev);
+                    if req.id == id {
+                        req.reported = req.events.len();
+                        return Ok(PollState::Pending(vec![ev]));
+                    }
+                }
+                Ok(PollState::Pending(Vec::new()))
+            }
+            Msg::ClientResult(res) => {
+                let rid = res.request;
+                let Some(rpos) =
+                    self.pending.iter().position(|r| r.id == rid)
+                else {
+                    return Ok(PollState::Pending(Vec::new()));
+                };
+                let req = self.pending.swap_remove(rpos);
+                let report = Self::finish(req, res);
+                if rid == id {
+                    Ok(PollState::Ready(report))
+                } else {
+                    self.done.push((rid, report));
+                    Ok(PollState::Pending(Vec::new()))
+                }
+            }
+            Msg::Reject { request, retry_after, reason, .. } => {
+                let err = reject_error(retry_after, reason);
+                if request == id {
+                    self.pending.retain(|r| r.id != id);
+                    Err(err)
+                } else {
+                    self.pending.retain(|r| r.id != request);
+                    self.rejected.push((request, err));
+                    Ok(PollState::Pending(Vec::new()))
+                }
+            }
+            other => Err(UepmmError::Transport(format!(
+                "unexpected plane frame {}",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Assemble the final report: plane accounting plus everything that
+    /// stayed local. Scored requests recompute the loss from `c_true`
+    /// exactly as `score_outcome` does, so a scored remote run reports
+    /// the same numbers as a local one.
+    fn finish(req: RemoteRequest, res: ClientResultMsg) -> RunReport {
+        let (loss, normalized_loss) = match &req.score {
+            Some(s) => {
+                let loss = s.c_true.frob_sq_diff(&res.c_hat);
+                let energy = s.c_true.frob_sq();
+                (loss, if energy > 0.0 { loss / energy } else { 0.0 })
+            }
+            None => (res.loss, res.normalized_loss),
+        };
+        let outcome = Outcome {
+            received: res.received as usize,
+            recovered: res.recovered as usize,
+            per_class_recovered: res.per_class.iter().map(|&c| c as usize).collect(),
+            c_hat: res.c_hat,
+            loss,
+            normalized_loss,
+        };
+        RunReport {
+            outcome,
+            late: res.late as usize,
+            dispatched: res.dispatched as usize,
+            retries: res.retries as usize,
+            corrupt: res.corrupt as usize,
+            verify_failures: res.verify_failures as usize,
+            // the plane quarantines fleet-side; not visible per client
+            quarantined: 0,
+            wall: req.start.elapsed(),
+            cache_hit: req.cache_hit,
+            backend: "cluster-remote",
+            // per-job timings stay plane-side (fleet telemetry)
+            timings: Vec::new(),
+            worker_packets: Vec::new(),
+            partial_packets: 0,
+            progress: Progress::from_events(req.events, req.replans),
+        }
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        if let Some(pos) = self.done.iter().position(|(d, _)| *d == id) {
+            return Ok(Some(self.done.swap_remove(pos).1));
+        }
+        if let Some(pos) = self.rejected.iter().position(|(d, _)| *d == id) {
+            self.rejected.swap_remove(pos);
+            return Ok(None);
+        }
+        // the plane settles every admitted request; "cancel" here means
+        // the client stops listening — late frames for the id are
+        // dropped by the demultiplexer once the entry is gone
+        self.pending.retain(|r| r.id != id);
+        Ok(None)
+    }
+
+    fn shutdown(&mut self) -> ApiResult<()> {
+        self.conn
+            .send(&Msg::CloseSession { session: self.session })
+            .map_err(|e| UepmmError::Transport(format!("close-session: {e}")))?;
+        // drain until the close echo so in-flight results are not cut off
+        loop {
+            match self.conn.recv_timeout(Some(REMOTE_POLL_WAIT)) {
+                Ok(Some(Msg::CloseSession { .. })) | Err(WireError::Closed) => {
+                    return Ok(())
+                }
+                Ok(Some(_)) => {}
+                Ok(None) => {
+                    return Err(UepmmError::Transport(
+                        "serve plane did not ack CloseSession".to_string(),
+                    ))
+                }
+                Err(e) => {
+                    return Err(UepmmError::Transport(format!(
+                        "close-session: {e}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+fn reject_error(retry_after: f64, reason: String) -> UepmmError {
+    UepmmError::Rejected {
+        retry_after_ms: (retry_after * 1000.0).max(0.0) as u64,
+        reason,
     }
 }

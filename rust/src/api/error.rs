@@ -32,6 +32,10 @@ pub enum UepmmError {
     /// Result integrity violated: a quarantined worker tried to rejoin,
     /// or verification bookkeeping could not be honored.
     Integrity(String),
+    /// The serve plane refused admission (session table or request
+    /// queue saturated). Back off for `retry_after_ms` and redial — the
+    /// rejection is load shedding, not a protocol fault.
+    Rejected { retry_after_ms: u64, reason: String },
 }
 
 impl UepmmError {
@@ -45,6 +49,7 @@ impl UepmmError {
             UepmmError::Deadline(_) => "deadline",
             UepmmError::Decode(_) => "decode",
             UepmmError::Integrity(_) => "integrity",
+            UepmmError::Rejected { .. } => "rejected",
         }
     }
 
@@ -58,13 +63,20 @@ impl UepmmError {
             | UepmmError::Deadline(m)
             | UepmmError::Decode(m)
             | UepmmError::Integrity(m) => m,
+            UepmmError::Rejected { reason, .. } => reason,
         }
     }
 }
 
 impl std::fmt::Display for UepmmError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}: {}", self.kind(), self.message())
+        match self {
+            UepmmError::Rejected { retry_after_ms, reason } => write!(
+                f,
+                "rejected: {reason} (retry after {retry_after_ms} ms)"
+            ),
+            _ => write!(f, "{}: {}", self.kind(), self.message()),
+        }
     }
 }
 
@@ -106,6 +118,20 @@ mod tests {
             "no live workers registered with the coordinator"
         ));
         assert!(matches!(tr, UepmmError::Transport(_)));
+    }
+
+    #[test]
+    fn rejected_carries_backoff_and_reason() {
+        let e = UepmmError::Rejected {
+            retry_after_ms: 250,
+            reason: "session table full".to_string(),
+        };
+        assert_eq!(e.kind(), "rejected");
+        assert_eq!(e.message(), "session table full");
+        assert_eq!(
+            format!("{e}"),
+            "rejected: session table full (retry after 250 ms)"
+        );
     }
 
     #[test]

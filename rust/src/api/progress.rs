@@ -45,6 +45,16 @@ pub struct Progress {
 }
 
 impl Progress {
+    /// Assemble a stream from already-shaped events — the remote-client
+    /// path, where refinements arrive as wire `ProgressFrame`s instead
+    /// of being recorded through a local [`ProgressTracker`].
+    pub(crate) fn from_events(
+        events: Vec<ProgressEvent>,
+        replans: Vec<ReplanEvent>,
+    ) -> Progress {
+        Progress { events, replans }
+    }
+
     /// All events, in absorption order.
     pub fn events(&self) -> &[ProgressEvent] {
         &self.events

@@ -280,6 +280,7 @@ pub struct SessionBuilder {
     compute: Compute,
     cache_capacity: usize,
     seed: u64,
+    tenant: u64,
     adaptive: Option<ReplanPolicy>,
     backend: Option<Box<dyn Backend>>,
 }
@@ -298,6 +299,7 @@ impl SessionBuilder {
             compute: Compute::Honest,
             cache_capacity: 16,
             seed: 0,
+            tenant: 0,
             adaptive: None,
             backend: None,
         }
@@ -378,6 +380,16 @@ impl SessionBuilder {
     /// Seed of the session RNG (packet draws + delay sampling).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Tenant id namespacing this session's caller-assigned matrix ids
+    /// (default 0). Matrix ids are only unique *within* a tenant; two
+    /// sessions sharing one encoded-block cache namespace (e.g. on the
+    /// multi-tenant serve plane) must set distinct tenants or risk
+    /// cross-tenant cache collisions.
+    pub fn tenant(mut self, tenant: u64) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -488,6 +500,7 @@ impl SessionBuilder {
             compute: self.compute,
             rng: Pcg64::seed_from(self.seed),
             cache: EncodedBlockCache::new(self.cache_capacity),
+            tenant: self.tenant,
             adaptive,
             backend,
             next_id: 1,
@@ -525,6 +538,7 @@ pub struct Session {
     compute: Compute,
     rng: Pcg64,
     cache: EncodedBlockCache,
+    tenant: u64,
     adaptive: Option<AdaptiveState>,
     backend: Box<dyn Backend>,
     next_id: u64,
@@ -681,10 +695,14 @@ impl Session {
     /// networked backends, a no-op elsewhere. Adaptive sessions also
     /// absorb the registry's per-worker straggle snapshot here.
     pub fn maintain(&mut self) -> ApiResult<Maintenance> {
-        let m = self.backend.maintain()?;
+        let mut m = self.backend.maintain()?;
         if let Some(adapt) = self.adaptive.as_mut() {
             adapt.replanner.observe_straggle(&m.straggle);
         }
+        // fold in the session-owned encode cache's per-tenant rows
+        // (remote backends may already report plane-side tenants; the
+        // session's own rows are appended after them)
+        m.cache_tenants.extend(self.cache.tenant_stats());
         Ok(m)
     }
 
@@ -809,6 +827,7 @@ impl Session {
                 let cacheable = matches!(self.classes, Classes::Pinned(_));
                 let (enc, hit) = if cacheable {
                     let key = CacheKey::new(
+                        self.tenant,
                         req.a_id,
                         &self.part,
                         &self.spec,

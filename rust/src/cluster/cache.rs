@@ -19,13 +19,18 @@ use crate::coordinator::EncodedA;
 use crate::partition::{ClassMap, Paradigm, Partitioning};
 
 /// Cache identity of one encoding. Two requests share an entry only if
-/// they multiply the same logical `A` (caller-assigned `matrix_id`)
-/// under the same partition geometry, the same fully-specified code
-/// (including the window polynomial), the same importance-class
-/// assignment (the window draw in `generate_packets` depends on it),
-/// and the same worker count.
+/// they multiply the same logical `A` (caller-assigned `matrix_id`,
+/// namespaced by the owning tenant — ids are assigned independently
+/// per session, so tenant 1's matrix #0 and tenant 2's matrix #0 are
+/// different matrices that must never collide) under the same
+/// partition geometry, the same fully-specified code (including the
+/// window polynomial), the same importance-class assignment (the
+/// window draw in `generate_packets` depends on it), and the same
+/// worker count.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
+    /// Owning tenant/session: the namespace for `matrix_id`.
+    pub tenant: u64,
     pub matrix_id: u64,
     paradigm: u8,
     n: usize,
@@ -46,6 +51,7 @@ pub struct CacheKey {
 
 impl CacheKey {
     pub fn new(
+        tenant: u64,
         matrix_id: u64,
         part: &Partitioning,
         spec: &CodeSpec,
@@ -53,6 +59,7 @@ impl CacheKey {
         workers: usize,
     ) -> CacheKey {
         CacheKey {
+            tenant,
             matrix_id,
             paradigm: match part.paradigm {
                 Paradigm::RowTimesCol => 0,
@@ -97,6 +104,9 @@ pub struct EncodedBlockCache {
     tick: u64,
     capacity: usize,
     stats: CacheStats,
+    /// Per-tenant (hits, misses): the multi-tenant accounting behind
+    /// [`EncodedBlockCache::tenant_stats`].
+    per_tenant: HashMap<u64, (u64, u64)>,
 }
 
 impl EncodedBlockCache {
@@ -106,6 +116,7 @@ impl EncodedBlockCache {
             tick: 0,
             capacity,
             stats: CacheStats::default(),
+            per_tenant: HashMap::new(),
         }
     }
 
@@ -121,6 +132,19 @@ impl EncodedBlockCache {
         self.stats
     }
 
+    /// Per-tenant `(tenant, hits, misses)` rows, sorted by tenant id so
+    /// the report is deterministic. Surfaced through
+    /// [`crate::api::Maintenance::cache_tenants`].
+    pub fn tenant_stats(&self) -> Vec<(u64, u64, u64)> {
+        let mut rows: Vec<(u64, u64, u64)> = self
+            .per_tenant
+            .iter()
+            .map(|(&t, &(h, m))| (t, h, m))
+            .collect();
+        rows.sort_unstable_by_key(|r| r.0);
+        rows
+    }
+
     pub fn clear(&mut self) {
         self.map.clear();
     }
@@ -133,12 +157,15 @@ impl EncodedBlockCache {
         build: impl FnOnce() -> anyhow::Result<EncodedA>,
     ) -> anyhow::Result<(Arc<EncodedA>, bool)> {
         self.tick += 1;
+        let tenant = self.per_tenant.entry(key.tenant).or_insert((0, 0));
         if let Some((entry, used)) = self.map.get_mut(&key) {
             self.stats.hits += 1;
+            tenant.0 += 1;
             *used = self.tick;
             return Ok((Arc::clone(entry), true));
         }
         self.stats.misses += 1;
+        tenant.1 += 1;
         let entry = Arc::new(build()?);
         if self.capacity == 0 {
             return Ok((entry, false));
@@ -203,7 +230,7 @@ mod tests {
         let (part, cm, a) = setup();
         let spec = CodeSpec::stacked(CodeKind::Mds);
         let mut cache = EncodedBlockCache::new(4);
-        let k0 = CacheKey::new(0, &part, &spec, &cm, 6);
+        let k0 = CacheKey::new(0, 0, &part, &spec, &cm, 6);
 
         let (e0, hit) =
             cache.get_or_insert_with(k0.clone(), || Ok(encode(&part, &cm, &a, 1))).unwrap();
@@ -217,7 +244,7 @@ mod tests {
         assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
 
         // a different matrix id is a different entry
-        let k1 = CacheKey::new(1, &part, &spec, &cm, 6);
+        let k1 = CacheKey::new(0, 1, &part, &spec, &cm, 6);
         let (_, hit) =
             cache.get_or_insert_with(k1, || Ok(encode(&part, &cm, &a, 2))).unwrap();
         assert!(!hit);
@@ -231,7 +258,7 @@ mod tests {
         let mds = CodeSpec::stacked(CodeKind::Mds);
         let ew = CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()));
         let key = |part: &Partitioning, spec: &CodeSpec, cm: &ClassMap, w: usize| {
-            CacheKey::new(0, part, spec, cm, w)
+            CacheKey::new(0, 0, part, spec, cm, w)
         };
         assert_ne!(key(&part, &mds, &cm, 6), key(&part, &ew, &cm, 6));
         assert_ne!(key(&part, &mds, &cm, 6), key(&part, &mds, &cm, 9));
@@ -259,7 +286,7 @@ mod tests {
         let (part, cm, a) = setup();
         let spec = CodeSpec::stacked(CodeKind::Mds);
         let mut cache = EncodedBlockCache::new(2);
-        let key = |id| CacheKey::new(id, &part, &spec, &cm, 6);
+        let key = |id| CacheKey::new(0, id, &part, &spec, &cm, 6);
         for id in 0..2 {
             cache
                 .get_or_insert_with(key(id), || Ok(encode(&part, &cm, &a, id)))
@@ -283,12 +310,50 @@ mod tests {
         assert!(!hit);
     }
 
+    /// Regression (multi-tenant serve plane): matrix ids are assigned
+    /// *per session*, so two tenants both calling their first matrix
+    /// id 0 — with different actual matrices — must land on different
+    /// cache entries. Before keys carried the tenant, tenant 2 would
+    /// have been served tenant 1's encoding.
+    #[test]
+    fn tenants_with_the_same_matrix_id_never_collide() {
+        let (part, cm, a) = setup();
+        let spec = CodeSpec::stacked(CodeKind::Mds);
+        let mut cache = EncodedBlockCache::new(4);
+        let k_t1 = CacheKey::new(1, 0, &part, &spec, &cm, 6);
+        let k_t2 = CacheKey::new(2, 0, &part, &spec, &cm, 6);
+        assert_ne!(k_t1, k_t2);
+
+        let (e1, hit) = cache
+            .get_or_insert_with(k_t1.clone(), || Ok(encode(&part, &cm, &a, 1)))
+            .unwrap();
+        assert!(!hit);
+        // tenant 2, same id, *different* encoding seed (standing in for
+        // a different matrix): must miss and build its own entry
+        let (e2, hit) = cache
+            .get_or_insert_with(k_t2, || Ok(encode(&part, &cm, &a, 2)))
+            .unwrap();
+        assert!(!hit, "cross-tenant collision: tenant 2 got tenant 1's entry");
+        assert_ne!(e1.packets, e2.packets);
+        assert_eq!(cache.len(), 2);
+
+        // tenant 1 still hits its own entry
+        let (e1b, hit) = cache
+            .get_or_insert_with(k_t1, || panic!("tenant 1's entry was lost"))
+            .unwrap();
+        assert!(hit);
+        assert_eq!(e1.packets, e1b.packets);
+
+        // and the per-tenant accounting saw all of it
+        assert_eq!(cache.tenant_stats(), vec![(1, 1, 1), (2, 0, 1)]);
+    }
+
     #[test]
     fn zero_capacity_disables_storage() {
         let (part, cm, a) = setup();
         let spec = CodeSpec::stacked(CodeKind::Mds);
         let mut cache = EncodedBlockCache::new(0);
-        let key = CacheKey::new(0, &part, &spec, &cm, 6);
+        let key = CacheKey::new(0, 0, &part, &spec, &cm, 6);
         for _ in 0..3 {
             let (_, hit) = cache
                 .get_or_insert_with(key.clone(), || Ok(encode(&part, &cm, &a, 1)))

@@ -24,7 +24,11 @@
 //!   shape: same weights `A`, fresh activations `B`);
 //! * [`chaos`] — seeded fault injection ([`ChaosConn`] /
 //!   [`ChaosTransport`] over any transport, driven by a [`FaultPlan`])
-//!   that makes every fault mode below reproducible in tests and soaks.
+//!   that makes every fault mode below reproducible in tests and soaks;
+//! * [`service`] — the multi-tenant serve plane ([`ServePlane`] /
+//!   [`FleetEngine`]): many concurrent client sessions multiplexed onto
+//!   one shared fleet behind a single front door, with deficit-round-
+//!   robin fairness, admission control, and sharded decode.
 //!
 //! # Fault model
 //!
@@ -108,16 +112,28 @@
 //! stream-wide `partial_packets=` summary that the CI rateless smoke
 //! asserts against a 10× straggler.
 //!
+//! # Multi-tenant client plane (wire v6)
+//!
+//! Wire v6 adds client-facing frames — `OpenSession`, `Submit`,
+//! `ProgressFrame`, `ClientResult`, `Reject`, `CloseSession` — on the
+//! same CRC32 framing, so one listener serves both planes and the first
+//! frame of a connection picks its role (`Hello` ⇒ worker lane,
+//! `OpenSession` ⇒ admission control). See [`service`] for the frame
+//! table, session lifecycle, and determinism contract.
+//!
 //! Entry points: `uepmm serve` / `uepmm worker` (see `main.rs`) for the
-//! TCP deployment, [`ClusterServer`] + [`spawn_loopback_workers`] for
-//! embedded/loopback use — or wrap either form in
-//! [`crate::api::ClusterBackend`] to drive it through the unified
-//! [`crate::api::Session`] API (progress stream, session-owned encode
-//! cache, typed errors).
+//! single-stream TCP deployment, `uepmm serve --service` +
+//! `uepmm client` for the multi-tenant plane, [`ClusterServer`] +
+//! [`spawn_loopback_workers`] for embedded/loopback use — or wrap
+//! either form in [`crate::api::ClusterBackend`] (local over a
+//! transport, or remote via [`crate::api::ClusterBackend::connect`]) to
+//! drive it through the unified [`crate::api::Session`] API (progress
+//! stream, session-owned encode cache, typed errors).
 
 pub mod cache;
 pub mod chaos;
 pub mod server;
+pub mod service;
 pub mod transport;
 pub mod wire;
 pub mod worker;
@@ -133,8 +149,12 @@ pub use transport::{
     loopback_pair, Connection, LoopbackConn, LoopbackDialer, LoopbackTransport,
     TcpConn, TcpTransport, Transport,
 };
+pub use service::{
+    DrrScheduler, FleetEngine, ServePlane, ServiceConfig, ServiceReport,
+};
 pub use wire::{
-    JobMsg, Msg, RatelessJobMsg, RatelessResultMsg, ResultMsg, WireError,
+    ClientResultMsg, JobMsg, Msg, ProgressMsg, RatelessJobMsg,
+    RatelessResultMsg, ResultMsg, SubmitMsg, WireError,
 };
 pub use worker::{
     run_worker, spawn_chaos_loopback_worker, spawn_loopback_workers, WorkerConfig,

@@ -503,6 +503,9 @@ pub struct ClusterServer {
     next_request_id: u64,
     next_worker_id: u64,
     next_nonce: u64,
+    /// Rotating start index for [`Self::poll_round`]: advanced every
+    /// tick so no worker's inbox is systematically drained last.
+    poll_rotor: usize,
 }
 
 impl ClusterServer {
@@ -515,6 +518,7 @@ impl ClusterServer {
             next_request_id: 1,
             next_worker_id: 1,
             next_nonce: 1,
+            poll_rotor: 0,
         }
     }
 
@@ -864,7 +868,9 @@ impl ClusterServer {
         req: &MatmulRequest,
         rng: &mut Pcg64,
     ) -> Result<ClusterOutcome> {
+        // single-stream server: one caller, so the tenant namespace is 0
         let key = CacheKey::new(
+            0,
             req.a_id,
             &coding.part,
             &coding.spec,
@@ -1572,6 +1578,27 @@ impl ClusterServer {
     /// `on_result` with the delivering worker's registry id (timing
     /// attribution). Returns how many workers were pollable — 0 with an
     /// empty requeue means nothing outstanding can ever arrive.
+    /// The worker indices one [`Self::poll_round`] pass visits, in
+    /// order: all of `0..workers`, but *starting* at a rotor that
+    /// advances by one per call. A fixed registry-order scan would let
+    /// a chatty early worker's `recv_timeout` slice systematically
+    /// delay the inbox drains of later workers (each pass spends up to
+    /// `POLL_SLICE` per pollable worker before reaching the next);
+    /// rotating the start index makes every worker first-in-line
+    /// equally often. Results themselves are absorbed
+    /// order-independently (Virtual mode sorts by delay before
+    /// applying the deadline), so rotation changes *latency
+    /// fairness*, never outcomes.
+    fn poll_order(&mut self) -> Vec<usize> {
+        let n = self.workers.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let start = self.poll_rotor % n;
+        self.poll_rotor = self.poll_rotor.wrapping_add(1);
+        (0..n).map(|i| (start + i) % n).collect()
+    }
+
     fn poll_round(
         &mut self,
         ctx: &mut Collect,
@@ -1579,7 +1606,7 @@ impl ClusterServer {
         on_result: &mut dyn FnMut(u64, ResultMsg),
     ) -> usize {
         let mut pollable = 0;
-        for wi in 0..self.workers.len() {
+        for wi in self.poll_order() {
             while let Some(r) = self.workers[wi].inbox.pop_front() {
                 self.accept_frame(wi, r, ctx, verifier, on_result);
             }
@@ -2020,6 +2047,25 @@ mod tests {
         for h in handles {
             h.join().unwrap().unwrap();
         }
+    }
+
+    /// Satellite (PR 8): the poll pass must not visit workers in fixed
+    /// registry order every tick — the start index rotates, so each
+    /// worker is first-in-line for inbox drains equally often.
+    #[test]
+    fn poll_order_rotates_its_starting_worker_every_tick() {
+        let (mut server, _dialer, handles) =
+            start_cluster(3, ClusterConfig::default());
+        assert_eq!(server.poll_order(), vec![0, 1, 2]);
+        assert_eq!(server.poll_order(), vec![1, 2, 0]);
+        assert_eq!(server.poll_order(), vec![2, 0, 1]);
+        // a full cycle returns to registry order
+        assert_eq!(server.poll_order(), vec![0, 1, 2]);
+        // every pass still visits every worker exactly once
+        let mut seen = server.poll_order();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        finish(server, handles);
     }
 
     #[test]

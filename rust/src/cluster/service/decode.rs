@@ -1,0 +1,415 @@
+//! The sharded decode pool: settled requests decode off the reactor
+//! thread.
+//!
+//! Decoding a request is the one serve-plane step whose cost scales
+//! with problem size (Gaussian elimination over the coefficient rows
+//! plus payload back-substitution). Running it inline in the reactor
+//! would stall dispatch, admission, and every other tenant's progress
+//! frames behind one large decode. Instead the engine hands each fully
+//! settled request to a small thread pool:
+//!
+//! * **One shard per request.** A request's task goes to shard
+//!   `shard_key % shards` and is decoded start-to-finish on that one
+//!   thread, so its progress events are emitted in absorption order —
+//!   per-request streams stay ordered even though shards run
+//!   concurrently.
+//! * **Deterministic outcomes.** The task carries the absorbed results
+//!   already sorted by `(delay, slot)`; the decode is a pure function
+//!   of the task, so which shard runs it (and when) cannot change any
+//!   outcome — only the interleaving of *different* requests' events,
+//!   which no client observes.
+//!
+//! Loss scoring runs plane-side from the Gram matrix the client shipped
+//! (`C_true` never crosses the wire), exactly like the API-level
+//! `ProgressTracker`: running loss starts at the total energy, each
+//! newly recovered unknown subtracts its
+//! [`Partitioning::loss_delta_on_recover`] increment, and full recovery
+//! pins the loss to exactly zero.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::coding::{DecodeState, EncodeStyle, UnknownSpace};
+use crate::coordinator::assemble_outcome;
+use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
+
+use super::super::wire::{ClientResultMsg, ProgressMsg};
+
+/// Per-request accounting the engine gathered while the request was in
+/// flight; echoed through the pool into the final [`ClientResultMsg`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestCounters {
+    pub late: u32,
+    pub dispatched: u32,
+    pub retries: u32,
+    pub corrupt: u32,
+    pub verify_failures: u32,
+    pub wall_ms: u64,
+}
+
+/// One fully settled request, ready to decode.
+#[derive(Clone, Debug)]
+pub struct DecodeTask {
+    pub session: u64,
+    pub request: u64,
+    /// Shard selector (the engine's internal request id).
+    pub shard_key: u64,
+    pub part: Partitioning,
+    pub n_classes: usize,
+    pub class_of: Vec<usize>,
+    /// Unknown-space width every coefficient row spans.
+    pub n_total: usize,
+    /// Coefficient row per slot.
+    pub rows: Vec<Vec<f64>>,
+    /// In-deadline results, sorted by `(delay, slot)`:
+    /// `(slot, delay, attempt, payload)`.
+    pub absorbed: Vec<(u32, f64, u32, Matrix)>,
+    /// Gram matrix of the true sub-products (scored requests only).
+    pub gram: Option<Matrix>,
+    /// Total signal energy normalizing the loss.
+    pub energy: f64,
+    pub counters: RequestCounters,
+}
+
+/// What a shard emits back to the reactor.
+#[derive(Clone, Debug)]
+pub enum DecodeEvent {
+    /// One decode refinement, in absorption order.
+    Step { session: u64, request: u64, msg: ProgressMsg },
+    /// The request's final report.
+    Done {
+        session: u64,
+        request: u64,
+        result: ClientResultMsg,
+        /// Every real sub-product recovered.
+        full_recovery: bool,
+    },
+}
+
+/// Decode a settled request: the pure function each shard runs.
+fn run_task(task: DecodeTask) -> (Vec<ProgressMsg>, ClientResultMsg, bool) {
+    let DecodeTask {
+        session,
+        request,
+        part,
+        n_classes,
+        class_of,
+        n_total,
+        rows,
+        absorbed,
+        gram,
+        energy,
+        counters,
+        ..
+    } = task;
+    // the unknown space rebuilds from the partitioning; a row set wider
+    // than the real product count means the rank-one (ghost-unknown)
+    // encoding of the c×r paradigm
+    let style = if n_total > part.num_products() {
+        EncodeStyle::RankOne
+    } else {
+        EncodeStyle::Stacked
+    };
+    let space = UnknownSpace::for_code(&part, style);
+    let mut st = DecodeState::new(space);
+    let n_real = part.num_products();
+    let mut mask = vec![false; n_real];
+    let mut loss = if gram.is_some() { energy } else { f64::NAN };
+    let mut steps = Vec::with_capacity(absorbed.len());
+    let mut received = 0u32;
+    for (slot, delay, attempt, payload) in absorbed {
+        let newly = st.add_equation(rows[slot as usize].clone(), Some(payload));
+        received += 1;
+        if let Some(g) = &gram {
+            for &u in &newly {
+                mask[u] = true;
+                loss -= part.loss_delta_on_recover(g, &mask, u);
+            }
+            if st.num_recovered() == n_real {
+                // pin the fully-decoded endpoint to exactly zero,
+                // shedding running-sum rounding (as ProgressTracker does)
+                loss = 0.0;
+            }
+        }
+        let normalized = if energy > 0.0 { loss / energy } else { loss };
+        steps.push(ProgressMsg {
+            session,
+            request,
+            elapsed: delay,
+            received,
+            recovered: st.num_recovered() as u32,
+            newly: newly.len() as u32,
+            attempt,
+            loss,
+            normalized_loss: normalized,
+        });
+    }
+    // a literal ClassMap: only n_classes/class_of/members feed the
+    // assembly; factor levels stayed client-side
+    let mut members = vec![Vec::new(); n_classes];
+    for (u, &c) in class_of.iter().enumerate() {
+        members[c].push(u);
+    }
+    let cm = ClassMap {
+        n_classes,
+        class_of,
+        members,
+        a_level: Vec::new(),
+        b_level: Vec::new(),
+        s_levels: 0,
+    };
+    let outcome = assemble_outcome(&part, &cm, &st, received as usize);
+    let normalized = if energy > 0.0 { loss / energy } else { loss };
+    let full = outcome.recovered == n_real;
+    let result = ClientResultMsg {
+        session,
+        request,
+        received,
+        recovered: outcome.recovered as u32,
+        per_class: outcome.per_class_recovered.iter().map(|&c| c as u32).collect(),
+        c_hat: outcome.c_hat,
+        loss,
+        normalized_loss: normalized,
+        late: counters.late,
+        dispatched: counters.dispatched,
+        retries: counters.retries,
+        corrupt: counters.corrupt,
+        verify_failures: counters.verify_failures,
+        wall_ms: counters.wall_ms,
+    };
+    (steps, result, full)
+}
+
+/// The shard pool: `shards` decode threads plus one shared event
+/// channel back to the reactor.
+pub struct DecodePool {
+    txs: Vec<mpsc::Sender<DecodeTask>>,
+    rx: mpsc::Receiver<DecodeEvent>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl DecodePool {
+    /// Spawn `shards` decode threads (min 1).
+    pub fn new(shards: usize) -> DecodePool {
+        let shards = shards.max(1);
+        let (ev_tx, ev_rx) = mpsc::channel::<DecodeEvent>();
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (tx, rx) = mpsc::channel::<DecodeTask>();
+            let ev = ev_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("uepmm-decode-{i}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        let (session, request) = (task.session, task.request);
+                        let (steps, result, full_recovery) = run_task(task);
+                        for msg in steps {
+                            // a send failure means the reactor is gone;
+                            // finish quietly
+                            if ev
+                                .send(DecodeEvent::Step { session, request, msg })
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        if ev
+                            .send(DecodeEvent::Done {
+                                session,
+                                request,
+                                result,
+                                full_recovery,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn decode shard");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        DecodePool { txs, rx: ev_rx, handles }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Hand a settled request to its shard.
+    pub fn submit(&self, task: DecodeTask) {
+        let shard = (task.shard_key as usize) % self.txs.len();
+        // a dead shard thread is unrecoverable mid-run; the reactor
+        // surfaces the stall through its own accounting
+        let _ = self.txs[shard].send(task);
+    }
+
+    /// Drain every event the shards have emitted so far (nonblocking).
+    pub fn poll(&mut self) -> Vec<DecodeEvent> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.rx.try_recv() {
+            out.push(ev);
+        }
+        out
+    }
+
+    /// Close the task channels and join the shard threads.
+    pub fn shutdown(mut self) {
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Pcg64;
+    use std::time::{Duration, Instant};
+
+    /// An identity "code": slot `u` carries exactly unknown `u`, with
+    /// the raw block pair as its job — every absorbed slot recovers
+    /// exactly one sub-product.
+    fn identity_task(session: u64, request: u64, scored: bool) -> (DecodeTask, Matrix) {
+        let mut rng = Pcg64::seed_from(5);
+        let part = Partitioning::rxc(2, 2, 2, 3, 2);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 4, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let k = part.num_products();
+        let mut rows = Vec::new();
+        let mut absorbed = Vec::new();
+        for u in 0..k {
+            let mut row = vec![0.0; k];
+            row[u] = 1.0;
+            rows.push(row);
+            let (ai, bi) = part.factors_of(u);
+            let payload = matmul(&a_blocks[ai], &b_blocks[bi]);
+            absorbed.push((u as u32, 0.1 * (u + 1) as f64, 0, payload));
+        }
+        let (gram, energy) = if scored {
+            let g = part.gram(&part.true_products(&a, &b));
+            let e = part.loss_from_gram(&g, &vec![false; k]);
+            (Some(g), e)
+        } else {
+            (None, f64::NAN)
+        };
+        let c_true = matmul(&a, &b);
+        let task = DecodeTask {
+            session,
+            request,
+            shard_key: request,
+            part,
+            n_classes: 1,
+            class_of: vec![0; k],
+            n_total: k,
+            rows,
+            absorbed,
+            gram,
+            energy,
+            counters: RequestCounters {
+                late: 1,
+                dispatched: 7,
+                ..Default::default()
+            },
+        };
+        (task, c_true)
+    }
+
+    fn collect_until_done(pool: &mut DecodePool, want_done: usize) -> Vec<DecodeEvent> {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut events = Vec::new();
+        let mut done = 0;
+        while done < want_done {
+            assert!(Instant::now() < deadline, "decode pool timed out");
+            for ev in pool.poll() {
+                if matches!(ev, DecodeEvent::Done { .. }) {
+                    done += 1;
+                }
+                events.push(ev);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        events
+    }
+
+    #[test]
+    fn sharded_decode_reproduces_the_exact_product() {
+        let (task, c_true) = identity_task(3, 40, true);
+        let mut pool = DecodePool::new(2);
+        pool.submit(task);
+        let events = collect_until_done(&mut pool, 1);
+        // steps arrive in absorption order, losses non-increasing, and
+        // the final frame carries the exact product with zero loss
+        let steps: Vec<&ProgressMsg> = events
+            .iter()
+            .filter_map(|e| match e {
+                DecodeEvent::Step { msg, .. } => Some(msg),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(steps.len(), 4);
+        for (i, s) in steps.iter().enumerate() {
+            assert_eq!((s.session, s.request), (3, 40));
+            assert_eq!(s.received, i as u32 + 1);
+            assert_eq!(s.newly, 1);
+        }
+        assert!(steps.windows(2).all(|w| w[1].loss <= w[0].loss + 1e-9));
+        match events.last().unwrap() {
+            DecodeEvent::Done { session, request, result, full_recovery } => {
+                assert_eq!((*session, *request), (3, 40));
+                assert!(full_recovery);
+                assert_eq!(result.recovered, 4);
+                assert_eq!(result.per_class, vec![4]);
+                assert_eq!(result.loss, 0.0, "full recovery pins loss to zero");
+                assert!(result.c_hat.allclose(&c_true, 1e-9));
+                // engine counters echo through untouched
+                assert_eq!((result.late, result.dispatched), (1, 7));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unscored_tasks_report_nan_loss_and_requests_stay_ordered() {
+        let (t1, c_true) = identity_task(1, 10, false);
+        let (t2, _) = identity_task(2, 11, false);
+        let mut pool = DecodePool::new(2);
+        pool.submit(t1);
+        pool.submit(t2);
+        let events = collect_until_done(&mut pool, 2);
+        // per-request step order is preserved even across shards
+        for rid in [10u64, 11] {
+            let recv: Vec<u32> = events
+                .iter()
+                .filter_map(|e| match e {
+                    DecodeEvent::Step { request, msg, .. } if *request == rid => {
+                        Some(msg.received)
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(recv, vec![1, 2, 3, 4], "request {rid}");
+        }
+        let done: Vec<&ClientResultMsg> = events
+            .iter()
+            .filter_map(|e| match e {
+                DecodeEvent::Done { result, .. } => Some(result),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done.len(), 2);
+        for r in done {
+            assert!(r.loss.is_nan(), "unscored ⇒ NaN loss");
+            assert!(r.c_hat.allclose(&c_true, 1e-9));
+        }
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,824 @@
+//! The fleet multiplexer: many sessions' requests interleaved onto one
+//! shared set of worker lanes.
+//!
+//! [`super::super::server::ClusterServer`] serves one request at a time
+//! — its dispatch, stall, and deadline logic all assume exclusive
+//! ownership of the fleet. The engine keeps the same worker *protocol*
+//! (workers are unchanged: `Welcome`, `Job`, `Result`) but replaces the
+//! one-request drive loop with a tick-based multiplexer:
+//!
+//! * **Lanes.** Each registered worker is a lane with its own framed
+//!   connection and in-flight table. Job frames go out through
+//!   [`Connection::send_vectored`] as `prefix | shared body | trailer`
+//!   ([`wire::job_prefix`]), so the encoded `(W_A, W_B)` body — built
+//!   once per slot at submit — is never re-serialized or copied for
+//!   dispatch or re-dispatch.
+//! * **Fair dispatch.** Every free fleet slot is offered to the
+//!   [`DrrScheduler`]; the winning session's oldest request dispatches
+//!   its next pending slot onto the live lane with the fewest in-flight
+//!   jobs (ties to the lowest lane id, keeping selection
+//!   deterministic).
+//! * **Collect-all settlement.** A request completes when every slot
+//!   has a result or is written off (bounded re-dispatch, exactly the
+//!   single-stream server's fault model: a dead lane's jobs requeue at
+//!   most [`super::ServiceConfig::max_job_retries`] times). Results
+//!   then sort by `(delay, slot)` and split into absorbed (`≤ t_max`)
+//!   and late — Virtual-mode semantics, so outcomes are bit-identical
+//!   across runs, lane timings, and client interleavings.
+//! * **Sharded decode.** Settled requests leave the tick loop as
+//!   [`DecodeTask`]s; progress and final frames come back through
+//!   [`FleetEngine::poll_events`].
+//!
+//! Result integrity mirrors the single-stream server where the fleet is
+//! shared: every arriving payload is Freivalds-verified against a probe
+//! stream seeded per request (`verify_seed`, engine request id), a
+//! rejected result costs a retry and a `verify_failures` count, and a
+//! checksum-damaged frame requeues the sending lane's oldest in-flight
+//! slot (the frames of a FIFO worker arrive in dispatch order, so the
+//! oldest entry is the damaged one). Lane quarantine is out of scope
+//! here — the plane process owns fleet membership policy.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::{EncodeStyle, UnknownSpace};
+use crate::coordinator::Verifier;
+use crate::linalg::Matrix;
+use crate::partition::{Paradigm, Partitioning};
+use crate::rng::Pcg64;
+
+use super::super::transport::Connection;
+use super::super::wire::{self, Msg, ResultMsg, SubmitMsg, WireError};
+use super::decode::{DecodeEvent, DecodePool, DecodeTask, RequestCounters};
+use super::scheduler::DrrScheduler;
+use super::ServiceConfig;
+
+/// Per-lane receive budget per tick; also the dispatch poll cadence.
+/// Short enough that a tick visits every lane and client promptly, long
+/// enough that an idle plane does not spin.
+pub(crate) const POLL_SLICE: Duration = Duration::from_millis(1);
+
+/// One registered worker.
+struct Lane {
+    id: u64,
+    name: String,
+    conn: Box<dyn Connection>,
+    alive: bool,
+    /// Outstanding job frames: `(engine rid, slot, attempt)`.
+    inflight: Vec<(u64, u32, u32)>,
+    jobs_done: u64,
+}
+
+/// One admitted request being served.
+struct Active {
+    session: u64,
+    /// Client-chosen request id, echoed in every frame back.
+    request: u64,
+    /// Engine-wide wire request id (`JobMsg::request_id`).
+    rid: u64,
+    part: Partitioning,
+    n_classes: usize,
+    class_of: Vec<usize>,
+    n_total: usize,
+    rows: Vec<Vec<f64>>,
+    t_max: f64,
+    gram: Option<Matrix>,
+    energy: f64,
+    /// Pre-encoded split job body per slot (shared across re-dispatch).
+    bodies: Vec<Arc<Vec<u8>>>,
+    /// Injected per-slot delays; empty = workers time themselves.
+    delays: Vec<f64>,
+    /// Slots awaiting (re-)dispatch.
+    pending: VecDeque<u32>,
+    attempts: Vec<u32>,
+    /// Slot resolved: result landed or written off.
+    settled: Vec<bool>,
+    results: Vec<Option<(f64, u32, Matrix)>>,
+    written_off: usize,
+    /// Dispatched frames on live lanes, not yet resolved.
+    outstanding: usize,
+    counters: RequestCounters,
+    verifier: Option<Verifier>,
+    start: Instant,
+}
+
+impl Active {
+    fn slots(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn complete(&self) -> bool {
+        self.pending.is_empty() && self.outstanding == 0
+    }
+}
+
+/// The multiplexed fleet engine. Single-threaded: the owning reactor
+/// calls [`FleetEngine::tick`]; only the decode shards run elsewhere.
+pub struct FleetEngine {
+    cfg: ServiceConfig,
+    lanes: Vec<Lane>,
+    /// Rotating start index for lane polling — the same latency-fairness
+    /// rotation as `ClusterServer::poll_order`.
+    rotor: usize,
+    active: Vec<Active>,
+    sched: DrrScheduler,
+    open: HashSet<u64>,
+    pool: DecodePool,
+    next_lane_id: u64,
+    next_rid: u64,
+}
+
+impl FleetEngine {
+    pub fn new(cfg: ServiceConfig) -> FleetEngine {
+        let pool = DecodePool::new(cfg.decode_shards);
+        let sched = DrrScheduler::new(cfg.quantum);
+        FleetEngine {
+            cfg,
+            lanes: Vec::new(),
+            rotor: 0,
+            active: Vec::new(),
+            sched,
+            open: HashSet::new(),
+            pool,
+            next_lane_id: 0,
+            next_rid: 0,
+        }
+    }
+
+    /// Register a worker whose `Hello` the caller already consumed;
+    /// sends the `Welcome`. Returns the lane id, or `None` when the
+    /// welcome could not be delivered.
+    pub fn add_worker(
+        &mut self,
+        mut conn: Box<dyn Connection>,
+        agent: String,
+    ) -> Option<u64> {
+        let id = self.next_lane_id;
+        if conn.send(&Msg::Welcome { worker_id: id }).is_err() {
+            return None;
+        }
+        self.next_lane_id += 1;
+        self.lanes.push(Lane {
+            id,
+            name: agent,
+            conn,
+            alive: true,
+            inflight: Vec::new(),
+            jobs_done: 0,
+        });
+        Some(id)
+    }
+
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.alive).count()
+    }
+
+    /// Admit a session into the scheduler ring.
+    pub fn open_session(&mut self, session: u64) {
+        self.open.insert(session);
+        self.sched.add_session(session, self.cfg.tenant_quota);
+    }
+
+    /// Retire a session (its in-flight requests still settle and
+    /// decode; the plane decides whether anyone is listening).
+    pub fn close_session(&mut self, session: u64) {
+        self.open.remove(&session);
+        self.sched.remove_session(session);
+    }
+
+    /// Requests currently being served (not yet handed to decode).
+    pub fn active_requests(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Per-lane `(name, jobs_done, alive)` — the shutdown log line.
+    pub fn lane_summary(&self) -> Vec<(String, u64, bool)> {
+        self.lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.jobs_done, l.alive))
+            .collect()
+    }
+
+    /// Validate and admit one submitted request.
+    pub fn add_request(&mut self, sub: SubmitMsg) -> Result<(), String> {
+        if !self.open.contains(&sub.session) {
+            return Err(format!("session {} is not open", sub.session));
+        }
+        let n = sub.rows.len();
+        if n == 0 {
+            return Err("request with no job slots".to_string());
+        }
+        if sub.wa.len() != n || sub.wb.len() != n {
+            return Err(format!(
+                "{} coefficient rows but {}/{} factor pairs",
+                n,
+                sub.wa.len(),
+                sub.wb.len()
+            ));
+        }
+        if !sub.delays.is_empty() && sub.delays.len() != n {
+            return Err(format!("{} delays for {n} jobs", sub.delays.len()));
+        }
+        if !sub.t_max.is_finite() || sub.t_max < 0.0 {
+            return Err(format!("T_max {} is not a valid deadline", sub.t_max));
+        }
+        let paradigm = match sub.paradigm {
+            0 => Paradigm::RowTimesCol,
+            1 => Paradigm::ColTimesRow,
+            other => return Err(format!("unknown paradigm tag {other}")),
+        };
+        let [pn, pp, pm, pu, ph, pq] = sub.dims;
+        let part = Partitioning {
+            paradigm,
+            n: pn as usize,
+            p: pp as usize,
+            m: pm as usize,
+            u: pu as usize,
+            h: ph as usize,
+            q: pq as usize,
+        };
+        let n_real = part.num_products();
+        let n_total = sub.n_total as usize;
+        let style = if n_total > n_real {
+            EncodeStyle::RankOne
+        } else {
+            EncodeStyle::Stacked
+        };
+        if UnknownSpace::for_code(&part, style).n_total != n_total {
+            return Err(format!(
+                "{n_total} unknowns do not fit the submitted partitioning"
+            ));
+        }
+        if sub.rows.iter().any(|r| r.len() != n_total) {
+            return Err("coefficient row width mismatch".to_string());
+        }
+        if sub.class_of.len() != n_real {
+            return Err(format!(
+                "{} class entries for {n_real} sub-products",
+                sub.class_of.len()
+            ));
+        }
+        let n_classes = (sub.n_classes as usize).max(1);
+        if sub.class_of.iter().any(|&c| c as usize >= n_classes) {
+            return Err("class index out of range".to_string());
+        }
+        // encode each slot's job body once; dispatch and re-dispatch
+        // share these buffers through the vectored send path
+        let mut bodies = Vec::with_capacity(n);
+        for (wa, wb) in sub.wa.iter().zip(&sub.wb) {
+            bodies.push(Arc::new(
+                wire::job_body(wa, wb).map_err(|e| format!("encode job: {e}"))?,
+            ));
+        }
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let verifier = if self.cfg.verify {
+            let jobs: Vec<(Arc<Matrix>, Arc<Matrix>)> =
+                sub.wa.iter().cloned().zip(sub.wb.iter().cloned()).collect();
+            let mut vrng = Pcg64::with_stream(self.cfg.verify_seed, rid);
+            Some(Verifier::new(&jobs, &mut vrng))
+        } else {
+            None
+        };
+        self.active.push(Active {
+            session: sub.session,
+            request: sub.request,
+            rid,
+            part,
+            n_classes,
+            class_of: sub.class_of.iter().map(|&c| c as usize).collect(),
+            n_total,
+            rows: sub.rows,
+            t_max: sub.t_max,
+            gram: sub.gram,
+            energy: sub.energy,
+            bodies,
+            delays: sub.delays,
+            pending: (0..n as u32).collect(),
+            attempts: vec![0; n],
+            settled: vec![false; n],
+            results: (0..n).map(|_| None).collect(),
+            written_off: 0,
+            outstanding: 0,
+            counters: RequestCounters::default(),
+            verifier,
+            start: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// One reactor turn: absorb lane traffic, dispatch freed capacity,
+    /// hand settled requests to the decode shards.
+    pub fn tick(&mut self) {
+        self.poll_lanes();
+        self.dispatch();
+        self.complete();
+    }
+
+    /// Decode-shard events emitted since the last call.
+    pub fn poll_events(&mut self) -> Vec<DecodeEvent> {
+        self.pool.poll()
+    }
+
+    /// Orderly teardown: shut the lanes down, drain the decode pool.
+    pub fn shutdown(mut self) {
+        for lane in &mut self.lanes {
+            if lane.alive {
+                let _ = lane.conn.send(&Msg::Shutdown);
+            }
+        }
+        self.pool.shutdown();
+    }
+
+    /// Drain every lane, starting from a rotating index so the same
+    /// early lane does not win the poll-order race every tick.
+    fn poll_lanes(&mut self) {
+        let n = self.lanes.len();
+        if n == 0 {
+            return;
+        }
+        let start = self.rotor % n;
+        self.rotor = self.rotor.wrapping_add(1);
+        for off in 0..n {
+            let li = (start + off) % n;
+            if !self.lanes[li].alive {
+                continue;
+            }
+            loop {
+                match self.lanes[li].conn.recv_timeout(Some(POLL_SLICE)) {
+                    Ok(Some(Msg::Result(r))) => {
+                        let lane = &mut self.lanes[li];
+                        let Some(pos) = lane
+                            .inflight
+                            .iter()
+                            .position(|&(rid, slot, _)| {
+                                rid == r.request_id && slot == r.slot
+                            })
+                        else {
+                            // a result for work this lane does not hold:
+                            // a stale duplicate or a confused worker —
+                            // nothing to resolve
+                            continue;
+                        };
+                        lane.inflight.remove(pos);
+                        lane.jobs_done += 1;
+                        absorb_result(
+                            &mut self.active,
+                            &mut self.sched,
+                            self.cfg.max_job_retries,
+                            r,
+                        );
+                    }
+                    Ok(Some(Msg::HeartbeatAck { .. })) => {}
+                    Ok(Some(_)) => {
+                        // protocol violation: this lane speaks the worker
+                        // plane only
+                        kill_lane(
+                            &mut self.lanes[li],
+                            &mut self.active,
+                            &mut self.sched,
+                            self.cfg.max_job_retries,
+                        );
+                        break;
+                    }
+                    Ok(None) => break,
+                    Err(WireError::BadChecksum { .. }) => {
+                        // channel fault, not lane fault: requeue the
+                        // oldest in-flight slot (FIFO workers answer in
+                        // dispatch order) and keep the lane
+                        if let Some((rid, slot, _)) =
+                            self.lanes[li].inflight.first().copied()
+                        {
+                            self.lanes[li].inflight.remove(0);
+                            requeue_slot(
+                                &mut self.active,
+                                &mut self.sched,
+                                self.cfg.max_job_retries,
+                                rid,
+                                slot,
+                                true,
+                            );
+                        }
+                    }
+                    Err(_) => {
+                        kill_lane(
+                            &mut self.lanes[li],
+                            &mut self.active,
+                            &mut self.sched,
+                            self.cfg.max_job_retries,
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Offer freed fleet capacity to the scheduler, one job per offer.
+    fn dispatch(&mut self) {
+        loop {
+            let inflight_total: usize =
+                self.lanes.iter().map(|l| l.inflight.len()).sum();
+            if inflight_total >= self.cfg.max_inflight_jobs {
+                return;
+            }
+            if !self.lanes.iter().any(|l| l.alive) {
+                return;
+            }
+            let ready: HashSet<u64> = self
+                .active
+                .iter()
+                .filter(|a| !a.pending.is_empty())
+                .map(|a| a.session)
+                .collect();
+            let Some(session) = self.sched.next(|s| ready.contains(&s)) else {
+                return;
+            };
+            // oldest request of the winning session (FIFO per tenant)
+            let ai = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.session == session && !a.pending.is_empty())
+                .min_by_key(|(_, a)| a.rid)
+                .map(|(i, _)| i)
+                .expect("scheduler offered a session with ready work");
+            let slot = self.active[ai].pending.pop_front().expect("ready slot");
+            let attempt = self.active[ai].attempts[slot as usize];
+            // least-outstanding live lane, ties to the lowest id
+            let li = self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.alive)
+                .min_by_key(|(_, l)| (l.inflight.len(), l.id))
+                .map(|(i, _)| i)
+                .expect("a live lane exists");
+            let prep = {
+                let act = &self.active[ai];
+                let body = Arc::clone(&act.bodies[slot as usize]);
+                let injected = (!act.delays.is_empty())
+                    .then(|| act.delays[slot as usize]);
+                wire::job_prefix(act.rid, slot, attempt, injected, 0.0, body.len())
+                    .ok()
+                    .map(|prefix| {
+                        let trailer = wire::job_trailer(&prefix, &body);
+                        (act.rid, prefix, body, trailer)
+                    })
+            };
+            let Some((rid, prefix, body, trailer)) = prep else {
+                // an unencodable frame (oversized payload) is a
+                // permanent failure of this slot, not of the lane: it
+                // was never dispatched, so only the scheduler credit
+                // needs returning
+                self.sched.note_done(session);
+                let act = &mut self.active[ai];
+                act.settled[slot as usize] = true;
+                act.written_off += 1;
+                continue;
+            };
+            let sent = self.lanes[li]
+                .conn
+                .send_vectored(&[&prefix, &body, &trailer])
+                .is_ok();
+            if sent {
+                self.lanes[li].inflight.push((rid, slot, attempt));
+                let act = &mut self.active[ai];
+                act.outstanding += 1;
+                act.counters.dispatched += 1;
+            } else {
+                // the lane died taking this frame: put the slot back at
+                // the front (no retry charged — it never left), release
+                // the scheduler credit, bury the lane
+                self.active[ai].pending.push_front(slot);
+                self.sched.note_done(session);
+                kill_lane(
+                    &mut self.lanes[li],
+                    &mut self.active,
+                    &mut self.sched,
+                    self.cfg.max_job_retries,
+                );
+            }
+        }
+    }
+
+    /// Move settled requests to the decode shards.
+    fn complete(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if !self.active[i].complete() {
+                i += 1;
+                continue;
+            }
+            let mut act = self.active.remove(i);
+            let mut absorbed: Vec<(u32, f64, u32, Matrix)> = Vec::new();
+            let mut late = 0u32;
+            for slot in 0..act.slots() {
+                if let Some((delay, attempt, payload)) = act.results[slot].take() {
+                    if delay <= act.t_max {
+                        absorbed.push((slot as u32, delay, attempt, payload));
+                    } else {
+                        late += 1;
+                    }
+                }
+            }
+            // the shared absorb order of every virtual-time path
+            absorbed.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            act.counters.late = late;
+            act.counters.wall_ms = act.start.elapsed().as_millis() as u64;
+            self.pool.submit(DecodeTask {
+                session: act.session,
+                request: act.request,
+                shard_key: act.rid,
+                part: act.part,
+                n_classes: act.n_classes,
+                class_of: act.class_of,
+                n_total: act.n_total,
+                rows: act.rows,
+                absorbed,
+                gram: act.gram,
+                energy: act.energy,
+                counters: act.counters,
+            });
+        }
+    }
+}
+
+/// Resolve one arriving result against its request: verify, then settle
+/// or requeue.
+fn absorb_result(
+    active: &mut [Active],
+    sched: &mut DrrScheduler,
+    max_retries: u32,
+    r: ResultMsg,
+) {
+    let Some(act) = active.iter_mut().find(|a| a.rid == r.request_id) else {
+        return; // stale: the request already settled and decoded
+    };
+    let slot = r.slot as usize;
+    if slot >= act.slots() {
+        return;
+    }
+    act.outstanding = act.outstanding.saturating_sub(1);
+    sched.note_done(act.session);
+    if act.settled[slot] {
+        return; // duplicate of a re-dispatched slot: absorbed once
+    }
+    if let Some(v) = &act.verifier {
+        if !v.check(slot, &r.payload) {
+            act.counters.verify_failures += 1;
+            retry_or_write_off(act, slot as u32, max_retries);
+            return;
+        }
+    }
+    act.settled[slot] = true;
+    act.results[slot] = Some((r.delay, r.attempt, r.payload));
+}
+
+/// Charge a failed attempt against a slot's retry budget.
+fn retry_or_write_off(act: &mut Active, slot: u32, max_retries: u32) {
+    let s = slot as usize;
+    act.attempts[s] += 1;
+    if act.attempts[s] > max_retries {
+        act.settled[s] = true; // resolved with no result
+        act.written_off += 1;
+    } else {
+        act.counters.retries += 1;
+        act.pending.push_back(slot);
+    }
+}
+
+/// Requeue one in-flight slot after a channel fault or send failure.
+fn requeue_slot(
+    active: &mut [Active],
+    sched: &mut DrrScheduler,
+    max_retries: u32,
+    rid: u64,
+    slot: u32,
+    corrupt: bool,
+) {
+    let Some(act) = active.iter_mut().find(|a| a.rid == rid) else {
+        return;
+    };
+    act.outstanding = act.outstanding.saturating_sub(1);
+    sched.note_done(act.session);
+    if act.settled[slot as usize] {
+        return;
+    }
+    if corrupt {
+        act.counters.corrupt += 1;
+    }
+    retry_or_write_off(act, slot, max_retries);
+}
+
+/// A lane died: bury it and requeue everything it held.
+fn kill_lane(
+    lane: &mut Lane,
+    active: &mut [Active],
+    sched: &mut DrrScheduler,
+    max_retries: u32,
+) {
+    lane.alive = false;
+    let held = std::mem::take(&mut lane.inflight);
+    for (rid, slot, _) in held {
+        requeue_slot(active, sched, max_retries, rid, slot, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::transport::loopback_pair;
+    use super::super::super::worker::{run_worker, WorkerConfig};
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::runtime::NativeEngine;
+    use std::thread::JoinHandle;
+
+    fn spawn_fleet(
+        engine: &mut FleetEngine,
+        n: usize,
+    ) -> Vec<JoinHandle<anyhow::Result<super::super::super::worker::WorkerStats>>>
+    {
+        (0..n)
+            .map(|i| {
+                let name = format!("w{i}");
+                let (coord, mut wk) = loopback_pair("engine", &name);
+                let cfg = WorkerConfig { name: name.clone(), ..Default::default() };
+                let handle = std::thread::spawn(move || {
+                    run_worker(&mut wk, &NativeEngine::serial(), &cfg)
+                });
+                let mut conn: Box<dyn Connection> = Box::new(coord);
+                // consume the Hello the worker leads with, as the plane
+                // front door does
+                match conn.recv().unwrap() {
+                    Msg::Hello { agent } => assert_eq!(agent, name),
+                    other => panic!("unexpected {other:?}"),
+                }
+                engine.add_worker(conn, name).unwrap();
+                handle
+            })
+            .collect()
+    }
+
+    /// Identity-code submit: slot `u` carries unknown `u` with the raw
+    /// block pair as its job.
+    fn identity_submit(
+        session: u64,
+        request: u64,
+        t_max: f64,
+        delays: Vec<f64>,
+        seed: u64,
+    ) -> (SubmitMsg, Matrix) {
+        let mut rng = Pcg64::seed_from(seed);
+        let part = Partitioning::rxc(2, 2, 2, 3, 2);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 4, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let k = part.num_products();
+        let mut rows = Vec::new();
+        let mut wa = Vec::new();
+        let mut wb = Vec::new();
+        for u in 0..k {
+            let mut row = vec![0.0; k];
+            row[u] = 1.0;
+            rows.push(row);
+            let (ai, bi) = part.factors_of(u);
+            wa.push(Arc::new(a_blocks[ai].clone()));
+            wb.push(Arc::new(b_blocks[bi].clone()));
+        }
+        let c_true = matmul(&a, &b);
+        let sub = SubmitMsg {
+            session,
+            request,
+            t_max,
+            paradigm: 0,
+            dims: [
+                part.n as u32,
+                part.p as u32,
+                part.m as u32,
+                part.u as u32,
+                part.h as u32,
+                part.q as u32,
+            ],
+            n_total: k as u32,
+            n_classes: 1,
+            class_of: vec![0; k],
+            rows,
+            wa,
+            wb,
+            delays,
+            gram: None,
+            energy: f64::NAN,
+        };
+        (sub, c_true)
+    }
+
+    fn drive_until_done(
+        engine: &mut FleetEngine,
+        want_done: usize,
+    ) -> Vec<DecodeEvent> {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut events = Vec::new();
+        let mut done = 0;
+        while done < want_done {
+            assert!(Instant::now() < deadline, "engine stalled");
+            engine.tick();
+            for ev in engine.poll_events() {
+                if matches!(ev, DecodeEvent::Done { .. }) {
+                    done += 1;
+                }
+                events.push(ev);
+            }
+        }
+        events
+    }
+
+    #[test]
+    fn multiplexed_requests_settle_with_injected_deadline_accounting() {
+        let mut engine = FleetEngine::new(ServiceConfig {
+            decode_shards: 1,
+            ..ServiceConfig::default()
+        });
+        let handles = spawn_fleet(&mut engine, 2);
+        engine.open_session(7);
+        // slot 3 misses the deadline: absorbed set is slots {0, 1, 2}
+        let (sub, c_true) =
+            identity_submit(7, 1, 1.0, vec![0.2, 0.4, 0.6, 5.0], 11);
+        engine.add_request(sub).unwrap();
+        let events = drive_until_done(&mut engine, 1);
+        match events.last().unwrap() {
+            DecodeEvent::Done { session, request, result, full_recovery } => {
+                assert_eq!((*session, *request), (7, 1));
+                assert!(!full_recovery, "the late slot must be missing");
+                assert_eq!(result.received, 3);
+                assert_eq!(result.recovered, 3);
+                assert_eq!(result.late, 1);
+                assert_eq!(result.dispatched, 4);
+                assert_eq!(result.verify_failures, 0);
+                assert!(!result.c_hat.allclose(&c_true, 1e-9));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        engine.close_session(7);
+        engine.shutdown();
+        for h in handles {
+            assert!(h.join().unwrap().unwrap().clean_shutdown);
+        }
+    }
+
+    #[test]
+    fn two_sessions_share_the_fleet_and_both_fully_recover() {
+        let mut engine = FleetEngine::new(ServiceConfig {
+            decode_shards: 2,
+            quantum: 1,
+            ..ServiceConfig::default()
+        });
+        let handles = spawn_fleet(&mut engine, 3);
+        engine.open_session(1);
+        engine.open_session(2);
+        let (sub1, c1) = identity_submit(1, 10, 10.0, vec![0.1; 4], 21);
+        let (sub2, c2) = identity_submit(2, 20, 10.0, vec![0.1; 4], 22);
+        engine.add_request(sub1).unwrap();
+        engine.add_request(sub2).unwrap();
+        let events = drive_until_done(&mut engine, 2);
+        let mut seen = 0;
+        for ev in &events {
+            if let DecodeEvent::Done { session, result, full_recovery, .. } = ev {
+                assert!(*full_recovery, "session {session}");
+                let want = if *session == 1 { &c1 } else { &c2 };
+                assert!(result.c_hat.allclose(want, 1e-9));
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 2);
+        engine.shutdown();
+        for h in handles {
+            assert!(h.join().unwrap().unwrap().clean_shutdown);
+        }
+    }
+
+    #[test]
+    fn add_request_validates_before_admitting() {
+        let mut engine = FleetEngine::new(ServiceConfig::default());
+        let (sub, _) = identity_submit(9, 1, 1.0, vec![], 3);
+        // unknown session
+        assert!(engine.add_request(sub.clone()).is_err());
+        engine.open_session(9);
+        assert!(engine.add_request(sub.clone()).is_ok());
+        // delay count mismatch
+        let mut bad = sub.clone();
+        bad.delays = vec![0.5];
+        assert!(engine.add_request(bad).unwrap_err().contains("delays"));
+        // row width mismatch
+        let mut bad = sub.clone();
+        bad.rows[0].push(1.0);
+        assert!(engine.add_request(bad).is_err());
+        // class table mismatch
+        let mut bad = sub;
+        bad.class_of.pop();
+        assert!(engine.add_request(bad).is_err());
+        engine.shutdown();
+    }
+}

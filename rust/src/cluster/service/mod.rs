@@ -1,0 +1,133 @@
+//! The multi-tenant serve plane: many concurrent client sessions
+//! multiplexed onto one shared worker fleet.
+//!
+//! Everything below [`crate::api::Session`] so far serves **one** caller
+//! at a time: `ClusterServer` owns its fleet for the duration of each
+//! request. This module is the missing deployment shape — a long-lived
+//! plane process (`uepmm serve --service`) that accepts *both* worker
+//! and client connections on a single front door and keeps the fleet
+//! busy across tenants:
+//!
+//! * [`plane`] — the front-door reactor ([`ServePlane`]): one listener,
+//!   per-connection state machines, admission control;
+//! * [`engine`] — the fleet multiplexer ([`FleetEngine`]): worker
+//!   lanes, deficit-round-robin dispatch across sessions, zero-copy
+//!   vectored job sends, collect-all virtual-time settlement;
+//! * [`scheduler`] — the fairness core ([`DrrScheduler`]): deficit
+//!   round robin with per-tenant in-flight quotas;
+//! * [`decode`] — the sharded decode pool ([`DecodePool`]): settled
+//!   requests decode off the reactor thread, one shard per request, so
+//!   a large decode never blocks dispatch or admission.
+//!
+//! # Wire protocol v6 — the client plane
+//!
+//! Workers keep speaking the existing frames (`Hello`/`Welcome`,
+//! `Job`/`Result`, heartbeats). v6 adds a client plane on the same
+//! framing (CRC32 trailer, resync-past-damage contract):
+//!
+//! | Frame | Direction | Purpose |
+//! |---|---|---|
+//! | `OpenSession` | client → plane, echoed back | open a session; the echo carries the assigned session id |
+//! | `Submit` | client → plane | one prepared request: coefficient rows, `W_A`/`W_B` per slot, injected delays, optional Gram matrix for plane-side loss scoring |
+//! | `ProgressFrame` | plane → client | one decode refinement (received/recovered/newly, running loss) |
+//! | `Result` (`ClientResult`) | plane → client | final report: `Ĉ`, per-class recovery, loss, accounting |
+//! | `Reject` | plane → client | admission refusal with a `retry_after` backoff hint |
+//! | `CloseSession` | client → plane, echoed back | drain in-flight requests, then part cleanly |
+//!
+//! # Session lifecycle
+//!
+//! ```text
+//! dial ── OpenSession ──▶ admission ──▶ ack (assigned id)
+//!                        │ (≥ max_sessions)
+//!                        └─▶ Reject{retry_after} + drop
+//! ack ── Submit* ──▶ queue-depth check ──▶ engine (DRR dispatch)
+//!                   │ (≥ queue_depth)
+//!                   └─▶ Reject{retry_after}
+//! engine ──▶ settle (collect-all) ──▶ decode shard ──▶ ProgressFrame* + Result
+//! CloseSession ──▶ drain ──▶ echo ──▶ close
+//! ```
+//!
+//! # Determinism
+//!
+//! The engine settles every request with collect-all virtual-time
+//! semantics: a request completes only when all of its slots have a
+//! result (or are written off), results sort by `(delay, slot)`, and
+//! the deadline splits absorbed from late — so the decoded outcome is a
+//! pure function of the submitted request, independent of wall-clock
+//! races, client arrival interleaving, and the DRR dispatch order.
+//! `rust/tests/service_plane.rs` asserts bit-identical outcomes for
+//! three concurrent clients against the same clients served one at a
+//! time.
+//!
+//! # Design note: no async runtime
+//!
+//! ROADMAP item 3 sketched this subsystem over tokio behind a feature
+//! gate. This build is offline-vendored (no tokio in the dependency
+//! tree), so the plane is a hand-rolled readiness loop instead:
+//! `std::net` nonblocking accepts plus short-deadline
+//! `recv_timeout(POLL_SLICE)` ticks driving per-connection state
+//! machines. The blocking-I/O surface stays in [`super::transport`];
+//! swapping in an async reactor later only replaces the tick loop, not
+//! the protocol or the state machines.
+
+pub mod decode;
+pub mod engine;
+pub mod plane;
+pub mod scheduler;
+
+pub use decode::{DecodeEvent, DecodePool, DecodeTask, RequestCounters};
+pub use engine::FleetEngine;
+pub use plane::{ServePlane, ServiceReport};
+pub use scheduler::DrrScheduler;
+
+/// Serve-plane sizing and admission policy.
+///
+/// Distinct from the deprecated single-stream
+/// [`crate::coordinator::ServiceConfig`] (the threaded-service shim):
+/// this one governs the multi-tenant plane.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Concurrent client sessions admitted; the `max_sessions + 1`-th
+    /// `OpenSession` gets a [`crate::cluster::wire::Msg::Reject`].
+    pub max_sessions: usize,
+    /// Fleet-wide cap on outstanding job frames (backpressure on
+    /// dispatch, not on admission).
+    pub max_inflight_jobs: usize,
+    /// Per-session requests accepted before `Submit` is rejected
+    /// (queued + being served).
+    pub queue_depth: usize,
+    /// Per-session cap on in-flight *jobs* — the DRR quota that keeps
+    /// one tenant from monopolizing the fleet.
+    pub tenant_quota: u32,
+    /// DRR quantum: consecutive job dispatches granted per scheduler
+    /// visit.
+    pub quantum: u32,
+    /// Decode pool threads; requests shard by request id.
+    pub decode_shards: usize,
+    /// Backoff hint (virtual seconds) carried in every `Reject`.
+    pub retry_after: f64,
+    /// Freivalds-verify every arriving result (seeded per request, so
+    /// honest outcomes are unchanged by toggling this).
+    pub verify: bool,
+    /// Seed of the verification probe stream.
+    pub verify_seed: u64,
+    /// Re-dispatches per slot after worker death or a rejected result.
+    pub max_job_retries: u32,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_sessions: 8,
+            max_inflight_jobs: 64,
+            queue_depth: 4,
+            tenant_quota: 4,
+            quantum: 2,
+            decode_shards: 2,
+            retry_after: 0.25,
+            verify: true,
+            verify_seed: 0xf7e1_5eed,
+            max_job_retries: 2,
+        }
+    }
+}

@@ -1,0 +1,522 @@
+//! The front-door reactor: one listener, every connection, no threads.
+//!
+//! Workers and clients dial the same [`Transport`]; the first frame
+//! disambiguates (`Hello` → worker lane handed to the [`FleetEngine`],
+//! `OpenSession` → admission control). The reactor is a single-threaded
+//! tick loop over short-deadline receives — each tick accepts at most
+//! one connection, advances every handshake, drains every client,
+//! drives the engine, and fans decode events back out. No connection
+//! ever blocks the loop for more than one [`POLL_SLICE`].
+//!
+//! Admission happens at two gates, both answered with
+//! [`Msg::Reject`] carrying the configured `retry_after` backoff hint:
+//!
+//! * **session table** — the `max_sessions + 1`-th concurrent
+//!   `OpenSession` is refused and the connection dropped;
+//! * **request queue** — a `Submit` beyond `queue_depth` outstanding
+//!   requests on its session is refused (the session stays open), as is
+//!   one that fails engine validation.
+//!
+//! Progress lines printed by the plane (`session opened:`, `served:`,
+//! `reject:`, `service shutdown complete:`) are a stable grep surface —
+//! the CI service-smoke job asserts on them.
+
+use std::time::Instant;
+
+use super::super::transport::{Connection, Transport};
+use super::super::wire::Msg;
+use super::decode::DecodeEvent;
+use super::engine::{FleetEngine, POLL_SLICE};
+use super::ServiceConfig;
+
+/// How long a dialed-in connection may sit silent before its handshake
+/// slot is reclaimed.
+const HANDSHAKE_GRACE_SECS: u64 = 10;
+
+/// One admitted client session.
+struct Client {
+    session: u64,
+    name: String,
+    conn: Box<dyn Connection>,
+    alive: bool,
+    /// Client asked to close; the plane drains in-flight requests first.
+    closing: bool,
+    /// Request ids submitted and not yet answered.
+    inflight: Vec<u64>,
+}
+
+/// What the plane did over its lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceReport {
+    /// Sessions admitted (not counting rejected dials).
+    pub sessions: u64,
+    /// Requests answered with a `ClientResult`.
+    pub served: u64,
+    /// `Reject` frames sent (admission plus queue-depth plus invalid).
+    pub rejected: u64,
+}
+
+/// The serve-plane reactor. Owns the engine, the admitted clients, and
+/// the handshake queue; [`ServePlane::run`] is the process main loop.
+pub struct ServePlane {
+    cfg: ServiceConfig,
+    engine: FleetEngine,
+    clients: Vec<Client>,
+    handshakes: Vec<(Box<dyn Connection>, Instant)>,
+    next_session: u64,
+    report: ServiceReport,
+    /// Sessions that ended (clean close or connection loss).
+    ended: u64,
+}
+
+impl ServePlane {
+    pub fn new(cfg: ServiceConfig) -> ServePlane {
+        let engine = FleetEngine::new(cfg.clone());
+        ServePlane {
+            cfg,
+            engine,
+            clients: Vec::new(),
+            handshakes: Vec::new(),
+            next_session: 1,
+            report: ServiceReport::default(),
+            ended: 0,
+        }
+    }
+
+    /// Serve until `expected_sessions` client sessions have come and
+    /// gone (however they end), then shut the fleet down cleanly.
+    ///
+    /// The expected-session count is the harness's termination contract:
+    /// a long-lived deployment would pass `usize::MAX` and be killed by
+    /// signal instead.
+    pub fn run(
+        mut self,
+        transport: &mut dyn Transport,
+        expected_sessions: usize,
+    ) -> ServiceReport {
+        println!(
+            "service listening on {} (max_sessions={} queue_depth={} quota={})",
+            transport.local_addr(),
+            self.cfg.max_sessions,
+            self.cfg.queue_depth,
+            self.cfg.tenant_quota,
+        );
+        loop {
+            self.accept_one(transport);
+            self.advance_handshakes();
+            self.drain_clients();
+            self.engine.tick();
+            let events = self.engine.poll_events();
+            for ev in events {
+                self.deliver(ev);
+            }
+            self.reap();
+            if self.ended >= expected_sessions as u64
+                && self.clients.is_empty()
+                && self.engine.active_requests() == 0
+            {
+                break;
+            }
+        }
+        for (name, jobs, alive) in self.engine.lane_summary() {
+            println!(
+                "lane {name}: jobs={jobs} ({})",
+                if alive { "alive" } else { "lost" }
+            );
+        }
+        self.engine.shutdown();
+        println!(
+            "service shutdown complete: sessions={} served={} rejected={}",
+            self.report.sessions, self.report.served, self.report.rejected,
+        );
+        self.report
+    }
+
+    fn accept_one(&mut self, transport: &mut dyn Transport) {
+        if let Ok(Some(conn)) = transport.accept_timeout(POLL_SLICE) {
+            self.handshakes.push((conn, Instant::now()));
+        }
+    }
+
+    /// First-frame disambiguation: `Hello` makes a worker lane,
+    /// `OpenSession` faces admission control.
+    fn advance_handshakes(&mut self) {
+        let mut i = 0;
+        while i < self.handshakes.len() {
+            let (conn, since) = &mut self.handshakes[i];
+            match conn.recv_timeout(Some(POLL_SLICE)) {
+                Ok(Some(Msg::Hello { agent })) => {
+                    let (conn, _) = self.handshakes.remove(i);
+                    match self.engine.add_worker(conn, agent.clone()) {
+                        Some(id) => println!("worker joined: {agent} (lane {id})"),
+                        None => println!("worker {agent} lost during welcome"),
+                    }
+                }
+                Ok(Some(Msg::OpenSession { client, .. })) => {
+                    let (conn, _) = self.handshakes.remove(i);
+                    self.admit(conn, client);
+                }
+                Ok(None) => {
+                    if since.elapsed().as_secs() >= HANDSHAKE_GRACE_SECS {
+                        self.handshakes.remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Ok(Some(_)) | Err(_) => {
+                    // spoke out of turn or died: not a peer
+                    self.handshakes.remove(i);
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, mut conn: Box<dyn Connection>, client: String) {
+        if self.clients.len() >= self.cfg.max_sessions {
+            self.report.rejected += 1;
+            println!(
+                "reject: session table full ({}/{}), client {client}",
+                self.clients.len(),
+                self.cfg.max_sessions,
+            );
+            let _ = conn.send(&Msg::Reject {
+                session: 0,
+                request: 0,
+                retry_after: self.cfg.retry_after,
+                reason: "session table full".to_string(),
+            });
+            return; // dropped: the client re-dials after the backoff
+        }
+        let session = self.next_session;
+        self.next_session += 1;
+        if conn
+            .send(&Msg::OpenSession { session, client: client.clone() })
+            .is_err()
+        {
+            return;
+        }
+        self.engine.open_session(session);
+        self.report.sessions += 1;
+        println!("session opened: {session} ({client})");
+        self.clients.push(Client {
+            session,
+            name: client,
+            conn,
+            alive: true,
+            closing: false,
+            inflight: Vec::new(),
+        });
+    }
+
+    fn drain_clients(&mut self) {
+        for ci in 0..self.clients.len() {
+            loop {
+                let client = &mut self.clients[ci];
+                if !client.alive {
+                    break;
+                }
+                match client.conn.recv_timeout(Some(POLL_SLICE)) {
+                    Ok(Some(Msg::Submit(mut sub))) => {
+                        let session = client.session;
+                        let request = sub.request;
+                        // the connection, not the frame, names the tenant
+                        sub.session = session;
+                        if client.inflight.len() >= self.cfg.queue_depth {
+                            self.reject(ci, session, request, "request queue full");
+                            continue;
+                        }
+                        match self.engine.add_request(sub) {
+                            Ok(()) => self.clients[ci].inflight.push(request),
+                            Err(reason) => {
+                                self.reject(ci, session, request, &reason)
+                            }
+                        }
+                    }
+                    Ok(Some(Msg::CloseSession { .. })) => {
+                        client.closing = true;
+                    }
+                    Ok(None) => break,
+                    Ok(Some(_)) | Err(_) => {
+                        // protocol violation or lost connection
+                        client.alive = false;
+                    }
+                }
+            }
+        }
+    }
+
+    fn reject(&mut self, ci: usize, session: u64, request: u64, reason: &str) {
+        self.report.rejected += 1;
+        println!("reject: {reason} (session={session} request={request})");
+        let sent = self.clients[ci].conn.send(&Msg::Reject {
+            session,
+            request,
+            retry_after: self.cfg.retry_after,
+            reason: reason.to_string(),
+        });
+        if sent.is_err() {
+            self.clients[ci].alive = false;
+        }
+    }
+
+    /// Fan one decode event back out to its session.
+    fn deliver(&mut self, ev: DecodeEvent) {
+        match ev {
+            DecodeEvent::Step { session, msg, .. } => {
+                if let Some(c) = self
+                    .clients
+                    .iter_mut()
+                    .find(|c| c.session == session && c.alive)
+                {
+                    if c.conn.send(&Msg::ProgressFrame(msg)).is_err() {
+                        c.alive = false;
+                    }
+                }
+            }
+            DecodeEvent::Done { session, request, result, full_recovery } => {
+                self.report.served += 1;
+                println!(
+                    "served: session={session} request={request} received={} \
+                     recovered={} loss={:.6} full_recovery={full_recovery} \
+                     wall_ms={}",
+                    result.received,
+                    result.recovered,
+                    result.normalized_loss,
+                    result.wall_ms,
+                );
+                if let Some(c) = self
+                    .clients
+                    .iter_mut()
+                    .find(|c| c.session == session && c.alive)
+                {
+                    c.inflight.retain(|&r| r != request);
+                    if c.conn.send(&Msg::ClientResult(result)).is_err() {
+                        c.alive = false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Retire sessions that finished closing or whose connection died.
+    fn reap(&mut self) {
+        let mut i = 0;
+        while i < self.clients.len() {
+            let c = &mut self.clients[i];
+            if c.alive && !(c.closing && c.inflight.is_empty()) {
+                i += 1;
+                continue;
+            }
+            if c.alive {
+                let _ = c.conn.send(&Msg::CloseSession { session: c.session });
+                println!("session closed: {} ({})", c.session, c.name);
+            } else {
+                println!("session lost: {} ({})", c.session, c.name);
+            }
+            self.engine.close_session(c.session);
+            self.ended += 1;
+            self.clients.remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::transport::LoopbackTransport;
+    use super::super::super::wire::SubmitMsg;
+    use super::super::super::worker::spawn_loopback_workers;
+    use super::super::super::worker::WorkerConfig;
+    use super::*;
+    use crate::linalg::{matmul, Matrix};
+    use crate::partition::Partitioning;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn identity_submit(request: u64, seed: u64) -> (SubmitMsg, Matrix) {
+        let mut rng = Pcg64::seed_from(seed);
+        let part = Partitioning::rxc(2, 2, 2, 3, 2);
+        let a = Matrix::randn(4, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(3, 4, 0.0, 1.0, &mut rng);
+        let a_blocks = part.split_a(&a);
+        let b_blocks = part.split_b(&b);
+        let k = part.num_products();
+        let (mut rows, mut wa, mut wb) = (Vec::new(), Vec::new(), Vec::new());
+        for u in 0..k {
+            let mut row = vec![0.0; k];
+            row[u] = 1.0;
+            rows.push(row);
+            let (ai, bi) = part.factors_of(u);
+            wa.push(Arc::new(a_blocks[ai].clone()));
+            wb.push(Arc::new(b_blocks[bi].clone()));
+        }
+        let c_true = matmul(&a, &b);
+        let sub = SubmitMsg {
+            session: 0,
+            request,
+            t_max: 10.0,
+            paradigm: 0,
+            dims: [
+                part.n as u32,
+                part.p as u32,
+                part.m as u32,
+                part.u as u32,
+                part.h as u32,
+                part.q as u32,
+            ],
+            n_total: k as u32,
+            n_classes: 1,
+            class_of: vec![0; k],
+            rows,
+            wa,
+            wb,
+            delays: vec![0.1; k],
+            gram: None,
+            energy: f64::NAN,
+        };
+        (sub, c_true)
+    }
+
+    /// End-to-end over loopback: a worker and a client dial the same
+    /// front door; the client opens, submits, gets progress and a
+    /// result, closes; the plane drains and reports.
+    #[test]
+    fn front_door_serves_a_session_end_to_end() {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let worker_handles = spawn_loopback_workers(
+            &dialer,
+            2,
+            &WorkerConfig::default(),
+        );
+        let client_dialer = dialer.clone();
+        let client = std::thread::spawn(move || {
+            let mut conn = client_dialer.dial("tenant-a").unwrap();
+            conn.send(&Msg::OpenSession {
+                session: 0,
+                client: "tenant-a".to_string(),
+            })
+            .unwrap();
+            let session = match conn.recv().unwrap() {
+                Msg::OpenSession { session, .. } => session,
+                other => panic!("expected ack, got {}", other.name()),
+            };
+            let (sub, c_true) = identity_submit(1, 5);
+            conn.send(&Msg::Submit(sub)).unwrap();
+            let mut steps = 0;
+            let result = loop {
+                match conn.recv().unwrap() {
+                    Msg::ProgressFrame(p) => {
+                        assert_eq!(p.session, session);
+                        steps += 1;
+                    }
+                    Msg::ClientResult(r) => break r,
+                    other => panic!("unexpected {}", other.name()),
+                }
+            };
+            assert_eq!(steps, 4, "one progress frame per absorbed result");
+            assert_eq!(result.received, 4);
+            assert!(result.c_hat.allclose(&c_true, 1e-9));
+            conn.send(&Msg::CloseSession { session }).unwrap();
+            match conn.recv().unwrap() {
+                Msg::CloseSession { session: s } => assert_eq!(s, session),
+                other => panic!("expected close echo, got {}", other.name()),
+            }
+        });
+        let report = ServePlane::new(ServiceConfig {
+            decode_shards: 1,
+            ..ServiceConfig::default()
+        })
+        .run(&mut transport, 1);
+        client.join().unwrap();
+        for h in worker_handles {
+            assert!(h.join().unwrap().unwrap().clean_shutdown);
+        }
+        assert_eq!(
+            report,
+            ServiceReport { sessions: 1, served: 1, rejected: 0 }
+        );
+    }
+
+    /// The session table rejects the `max_sessions + 1`-th concurrent
+    /// open, and queue depth rejects the `queue_depth + 1`-th in-flight
+    /// submit.
+    #[test]
+    fn admission_control_rejects_at_both_gates() {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        // no workers yet: request 1 cannot complete early, so the
+        // queue-depth check below is race-free
+        let client_dialer = dialer.clone();
+        let client = std::thread::spawn(move || {
+            // gate 1: with max_sessions = 1 the second open is refused
+            let mut first = client_dialer.dial("t1").unwrap();
+            first
+                .send(&Msg::OpenSession { session: 0, client: "t1".into() })
+                .unwrap();
+            let session = match first.recv().unwrap() {
+                Msg::OpenSession { session, .. } => session,
+                other => panic!("unexpected {}", other.name()),
+            };
+            let mut second = client_dialer.dial("t2").unwrap();
+            second
+                .send(&Msg::OpenSession { session: 0, client: "t2".into() })
+                .unwrap();
+            match second.recv().unwrap() {
+                Msg::Reject { retry_after, reason, .. } => {
+                    assert!(retry_after > 0.0);
+                    assert!(reason.contains("session table"), "{reason}");
+                }
+                other => panic!("expected reject, got {}", other.name()),
+            }
+            // gate 2: queue_depth = 1 — the second un-answered submit
+            // is refused, the first still completes
+            let (sub1, _) = identity_submit(1, 6);
+            let (sub2, _) = identity_submit(2, 7);
+            first.send(&Msg::Submit(sub1)).unwrap();
+            first.send(&Msg::Submit(sub2)).unwrap();
+            // request 1 is parked (no workers), so the plane must
+            // answer request 2 with the queue-depth reject first
+            match first.recv().unwrap() {
+                Msg::Reject { request, reason, .. } => {
+                    assert_eq!(request, 2);
+                    assert!(reason.contains("queue"), "{reason}");
+                }
+                other => panic!("expected reject, got {}", other.name()),
+            }
+            // only now does the fleet get a worker; request 1 completes
+            let worker_handles = spawn_loopback_workers(
+                &client_dialer,
+                1,
+                &WorkerConfig::default(),
+            );
+            let (mut rejected, mut served) = (1, 0);
+            loop {
+                match first.recv().unwrap() {
+                    Msg::ClientResult(r) => {
+                        assert_eq!(r.request, 1);
+                        served += 1;
+                        break;
+                    }
+                    Msg::ProgressFrame(_) => {}
+                    other => panic!("unexpected {}", other.name()),
+                }
+            }
+            assert_eq!((rejected, served), (1, 1));
+            first.send(&Msg::CloseSession { session }).unwrap();
+            let _ = first.recv();
+            worker_handles
+        });
+        let report = ServePlane::new(ServiceConfig {
+            max_sessions: 1,
+            queue_depth: 1,
+            decode_shards: 1,
+            ..ServiceConfig::default()
+        })
+        .run(&mut transport, 1);
+        let worker_handles = client.join().unwrap();
+        for h in worker_handles {
+            assert!(h.join().unwrap().unwrap().clean_shutdown);
+        }
+        assert_eq!(report.served, 1);
+        assert_eq!(report.rejected, 2);
+        assert_eq!(report.sessions, 1);
+    }
+}

@@ -58,6 +58,22 @@ pub trait Connection: Send {
     /// should use [`Connection::send`].
     fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError>;
 
+    /// Send one frame whose bytes live in several buffers (e.g. the
+    /// split job encoding `prefix | shared body | trailer` from
+    /// [`wire::job_prefix`]) — the serve plane's zero-copy dispatch
+    /// path. The default concatenates and delegates to
+    /// [`Connection::send_frame`] (loopback channels carry whole-frame
+    /// messages); [`TcpConn`] overrides it with a true vectored write,
+    /// so the shared megabyte body is never copied per dispatch.
+    fn send_vectored(&mut self, parts: &[&[u8]]) -> Result<(), WireError> {
+        let total = parts.iter().map(|p| p.len()).sum();
+        let mut frame = Vec::with_capacity(total);
+        for p in parts {
+            frame.extend_from_slice(p);
+        }
+        self.send_frame(&frame)
+    }
+
     /// Receive the next message. `timeout = None` blocks until a message
     /// arrives or the peer closes; `Some(d)` returns `Ok(None)` if no
     /// complete frame arrived within `d`.
@@ -138,6 +154,50 @@ impl Connection for TcpConn {
 
     fn send_frame(&mut self, frame: &[u8]) -> Result<(), WireError> {
         self.stream.write_all(frame).map_err(io_to_wire)?;
+        Ok(())
+    }
+
+    fn send_vectored(&mut self, parts: &[&[u8]]) -> Result<(), WireError> {
+        use std::io::IoSlice;
+        // write_vectored may accept only a prefix of the buffers; loop
+        // with an advancing cursor (part index + offset) until all
+        // bytes are out — the manual analogue of write_all, across
+        // buffers, without ever concatenating them
+        let mut part = 0;
+        let mut off = 0;
+        while part < parts.len() {
+            if parts[part].len() == off {
+                part += 1;
+                off = 0;
+                continue;
+            }
+            let mut slices = Vec::with_capacity(parts.len() - part);
+            slices.push(IoSlice::new(&parts[part][off..]));
+            slices.extend(parts[part + 1..].iter().map(|p| IoSlice::new(p)));
+            match self.stream.write_vectored(&slices) {
+                Ok(0) => {
+                    return Err(WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "vectored write made no progress",
+                    )))
+                }
+                Ok(mut n) => {
+                    while part < parts.len() && n > 0 {
+                        let left = parts[part].len() - off;
+                        if n >= left {
+                            n -= left;
+                            part += 1;
+                            off = 0;
+                        } else {
+                            off += n;
+                            n = 0;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(io_to_wire(e)),
+            }
+        }
         Ok(())
     }
 
@@ -492,6 +552,58 @@ mod tests {
             other => panic!("expected BadChecksum, got {other:?}"),
         }
         assert!(matches!(b.recv().unwrap(), Msg::Heartbeat { nonce: 8 }));
+    }
+
+    /// A split job frame sent as three vectored buffers must arrive as
+    /// one intact frame — bit-identical to the whole-buffer encoding —
+    /// over both transports.
+    #[test]
+    fn vectored_send_delivers_the_split_job_frame_intact() {
+        use crate::linalg::Matrix;
+        use std::sync::Arc;
+        let wa = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let wb = Matrix::from_vec(2, 1, vec![0.5, -0.5]);
+        let body = wire::job_body(&wa, &wb).unwrap();
+        let prefix =
+            wire::job_prefix(9, 4, 1, Some(0.125), 0.001, body.len()).unwrap();
+        let trailer = wire::job_trailer(&prefix, &body);
+        let want = Msg::Job(wire::JobMsg {
+            request_id: 9,
+            slot: 4,
+            attempt: 1,
+            injected_delay: Some(0.125),
+            sleep_secs: 0.001,
+            wa: Arc::new(wa),
+            wb: Arc::new(wb),
+        });
+
+        // loopback: default (concatenating) path
+        let (mut a, mut b) = loopback_pair("a", "b");
+        a.send_vectored(&[&prefix, &body, &trailer]).unwrap();
+        assert_eq!(b.recv().unwrap(), want);
+
+        // TCP: true vectored write
+        let mut transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = transport.local_addr();
+        let (p2, b2, t2) = (prefix.clone(), body.clone(), trailer);
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpConn::connect(&addr).unwrap();
+            conn.send_vectored(&[&p2, &b2, &t2]).unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+        });
+        let mut server =
+            transport.accept_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(m) =
+                server.recv_timeout(Some(Duration::from_millis(5))).unwrap()
+            {
+                got = Some(m);
+                break;
+            }
+        }
+        assert_eq!(got.as_ref(), Some(&want));
+        handle.join().unwrap();
     }
 
     #[test]

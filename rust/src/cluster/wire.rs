@@ -8,7 +8,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "UEPW"
-//!      4     2  protocol version (currently 5)
+//!      4     2  protocol version (currently 6)
 //!      6     1  message type tag
 //!      7     1  reserved (0)
 //!      8     4  payload length in bytes
@@ -39,8 +39,13 @@ pub const MAGIC: [u8; 4] = *b"UEPW";
 /// frames — [`RatelessJobMsg`] (one job, a whole packet stream),
 /// [`RatelessResultMsg`] (`seq` + `more` per packet), `Drain` (stop a
 /// stream on decode completion) and `Redo` (regenerate one lost
-/// packet).
-pub const VERSION: u16 = 5;
+/// packet); version 6 added the multi-tenant client plane — session
+/// handshake (`OpenSession`/`CloseSession`), request submission
+/// ([`SubmitMsg`]: partitioning, coefficient rows, coded factor
+/// blocks and optional scoring gram), streamed progress
+/// ([`ProgressMsg`]), the final decode report ([`ClientResultMsg`])
+/// and admission-control `Reject{retry_after}` frames.
+pub const VERSION: u16 = 6;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Size of the CRC32 trailer appended after every payload (v4).
@@ -61,12 +66,18 @@ const TAG_RATELESS_JOB: u8 = 8;
 const TAG_RATELESS_RESULT: u8 = 9;
 const TAG_DRAIN: u8 = 10;
 const TAG_REDO: u8 = 11;
+const TAG_OPEN_SESSION: u8 = 12;
+const TAG_SUBMIT: u8 = 13;
+const TAG_PROGRESS: u8 = 14;
+const TAG_CLIENT_RESULT: u8 = 15;
+const TAG_REJECT: u8 = 16;
+const TAG_CLOSE_SESSION: u8 = 17;
 
 /// Is `tag` one of the known message type tags? Checked before the CRC
 /// so an unknown type reports [`WireError::UnknownType`] rather than the
 /// (also true, but less specific) checksum mismatch.
 fn tag_known(tag: u8) -> bool {
-    (TAG_HELLO..=TAG_REDO).contains(&tag)
+    (TAG_HELLO..=TAG_CLOSE_SESSION).contains(&tag)
 }
 
 // ---------------------------------------------------------------- crc32
@@ -89,14 +100,46 @@ const CRC32_TABLE: [u32; 256] = {
     table
 };
 
+/// Incremental CRC-32 (IEEE): feed byte slices in any split and
+/// [`Crc32::finalize`] yields exactly what [`crc32`] computes over
+/// their concatenation. This is what lets the vectored-send hot path
+/// seal a frame whose header, prefix and shared payload body live in
+/// *separate* buffers without first copying them together.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
 /// CRC-32 (IEEE) of `bytes` — the checksum carried in every v4 frame
 /// trailer, computed over header + payload.
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in bytes {
-        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finalize()
 }
 
 /// A coded job dispatched to one worker: the two factor matrices it must
@@ -215,6 +258,113 @@ pub struct RatelessResultMsg {
     pub payload: Matrix,
 }
 
+/// One complete matmul request submitted by a remote client to the
+/// multi-tenant serve plane (protocol v6). The client ships everything
+/// the plane needs to dispatch, verify and decode *without* the plane
+/// ever re-deriving the code: the partitioning (all-public dims, so it
+/// reconstructs literally), the dense coefficient row of every packet
+/// (expanded client-side from the seeded generator — the plane never
+/// needs the generator), the coded factor blocks per slot, and an
+/// optional scoring gram. `C_true` deliberately never crosses the
+/// wire: approximation losses are computed plane-side from the gram
+/// alone (Remark 2's loss identities need only `WᵀW` and the total
+/// energy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitMsg {
+    /// Session id assigned by the plane's `OpenSession` ack.
+    pub session: u64,
+    /// Client-chosen request sequence number, echoed in every
+    /// `ProgressFrame`/`ClientResult`/`Reject` for this request.
+    pub request: u64,
+    /// Deadline in virtual seconds.
+    pub t_max: f64,
+    /// Partitioning paradigm: 0 = row×column, 1 = column×row.
+    pub paradigm: u8,
+    /// The six `Partitioning` dimension fields `n, p, m, u, h, q`.
+    pub dims: [u32; 6],
+    /// Total unknowns (real + virtual) — every coefficient row is this
+    /// long.
+    pub n_total: u32,
+    /// Number of UEP classes.
+    pub n_classes: u32,
+    /// Class of each *real* unknown.
+    pub class_of: Vec<u32>,
+    /// Dense coefficient row of each packet over the unknown space
+    /// (`rows[slot].len() == n_total`).
+    pub rows: Vec<Vec<f64>>,
+    /// Coded left factor per slot (shared handles; serialized straight
+    /// from the encode cache's buffers).
+    pub wa: Vec<Arc<Matrix>>,
+    /// Coded right factor per slot.
+    pub wb: Vec<Arc<Matrix>>,
+    /// Injected per-slot virtual delays (deterministic runs). Empty =
+    /// workers pace themselves.
+    pub delays: Vec<f64>,
+    /// Gram matrix `G[u][v] = <X_u, X_v>` of the true sub-products, for
+    /// plane-side loss scoring. `None` = client did not request scoring.
+    pub gram: Option<Matrix>,
+    /// Total signal energy (the all-unrecovered loss), normalizing the
+    /// reported losses.
+    pub energy: f64,
+}
+
+/// Plane → client: one decode-progress refinement for a request
+/// (protocol v6) — the serve-plane twin of
+/// [`crate::api::ProgressEvent`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgressMsg {
+    pub session: u64,
+    pub request: u64,
+    /// Virtual arrival time of the packet that caused this refinement.
+    pub elapsed: f64,
+    /// Packets absorbed so far.
+    pub received: u32,
+    /// Unknowns recovered so far.
+    pub recovered: u32,
+    /// Unknowns newly recovered by this packet.
+    pub newly: u32,
+    /// Dispatch attempt of the packet.
+    pub attempt: u32,
+    /// Absolute approximation loss after this refinement (NaN when the
+    /// request carries no gram).
+    pub loss: f64,
+    /// Loss normalized by total energy (NaN without a gram).
+    pub normalized_loss: f64,
+}
+
+/// Plane → client: the final decode report for one request (protocol
+/// v6) — everything [`crate::api::RunReport`] needs that the client
+/// cannot know locally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientResultMsg {
+    pub session: u64,
+    pub request: u64,
+    /// Packets absorbed by the deadline.
+    pub received: u32,
+    /// Unknowns recovered.
+    pub recovered: u32,
+    /// Unknowns recovered per UEP class.
+    pub per_class: Vec<u32>,
+    /// The assembled approximation (zero-filled where unrecovered).
+    pub c_hat: Matrix,
+    /// Absolute loss (NaN without a gram).
+    pub loss: f64,
+    /// Energy-normalized loss (NaN without a gram).
+    pub normalized_loss: f64,
+    /// Results that arrived after `t_max` (still absorbed, flagged late).
+    pub late: u32,
+    /// Job frames dispatched (including re-dispatches).
+    pub dispatched: u32,
+    /// Re-dispatches after worker death / verification failure.
+    pub retries: u32,
+    /// Corrupt frames survived on this request's results.
+    pub corrupt: u32,
+    /// Freivalds rejections on this request's results.
+    pub verify_failures: u32,
+    /// Plane-measured wall time serving the request, in milliseconds.
+    pub wall_ms: u64,
+}
+
 /// Every message that crosses a cluster connection.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -243,6 +393,24 @@ pub enum Msg {
     /// Coordinator → worker: regenerate one specific packet of one
     /// stream (lost/corrupt frame healing; v5).
     Redo { request_id: u64, stream: u64, seq: u32, attempt: u32 },
+    /// Client → plane: open a session (`session` = 0, `client` = a
+    /// human-readable tenant name). Plane → client: the ack, echoing
+    /// the *assigned* session id (v6).
+    OpenSession { session: u64, client: String },
+    /// Client → plane: submit one matmul request into the session (v6).
+    Submit(SubmitMsg),
+    /// Plane → client: one decode-progress refinement (v6).
+    ProgressFrame(ProgressMsg),
+    /// Plane → client: the final decode report for one request (v6).
+    ClientResult(ClientResultMsg),
+    /// Plane → client: admission control — the session (`request` = 0)
+    /// or one request was refused; retry after `retry_after` seconds
+    /// (v6).
+    Reject { session: u64, request: u64, retry_after: f64, reason: String },
+    /// Client → plane: drain and close the session; the plane echoes
+    /// the same frame back once every in-flight request has been
+    /// answered (v6).
+    CloseSession { session: u64 },
 }
 
 impl Msg {
@@ -259,6 +427,12 @@ impl Msg {
             Msg::RatelessResult(_) => TAG_RATELESS_RESULT,
             Msg::Drain { .. } => TAG_DRAIN,
             Msg::Redo { .. } => TAG_REDO,
+            Msg::OpenSession { .. } => TAG_OPEN_SESSION,
+            Msg::Submit(_) => TAG_SUBMIT,
+            Msg::ProgressFrame(_) => TAG_PROGRESS,
+            Msg::ClientResult(_) => TAG_CLIENT_RESULT,
+            Msg::Reject { .. } => TAG_REJECT,
+            Msg::CloseSession { .. } => TAG_CLOSE_SESSION,
         }
     }
 
@@ -276,6 +450,12 @@ impl Msg {
             Msg::RatelessResult(_) => "rateless-result",
             Msg::Drain { .. } => "drain",
             Msg::Redo { .. } => "redo",
+            Msg::OpenSession { .. } => "open-session",
+            Msg::Submit(_) => "submit",
+            Msg::ProgressFrame(_) => "progress",
+            Msg::ClientResult(_) => "client-result",
+            Msg::Reject { .. } => "reject",
+            Msg::CloseSession { .. } => "close-session",
         }
     }
 }
@@ -435,6 +615,25 @@ fn put_matrices(out: &mut Vec<u8>, ms: &[Arc<Matrix>]) -> Result<(), WireError> 
     Ok(())
 }
 
+fn put_opt_matrix(out: &mut Vec<u8>, m: Option<&Matrix>) -> Result<(), WireError> {
+    match m {
+        Some(m) => {
+            out.push(1);
+            put_matrix(out, m)?;
+        }
+        None => out.push(0),
+    }
+    Ok(())
+}
+
+fn put_f64_rows(out: &mut Vec<u8>, rows: &[Vec<f64>]) -> Result<(), WireError> {
+    put_u32(out, wire_u32("row vector length", rows.len())?);
+    for r in rows {
+        put_f64s(out, r)?;
+    }
+    Ok(())
+}
+
 /// Wire size of a matrix payload (shape header + elements).
 fn matrix_wire_len(m: &Matrix) -> usize {
     8 + m.data().len() * 8
@@ -474,6 +673,26 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
         Msg::RatelessResult(r) => 41 + matrix_wire_len(&r.payload),
         // 8 request + 8 stream + 4 seq + 4 attempt
         Msg::Redo { .. } => 24,
+        Msg::OpenSession { client, .. } => 12 + client.len(),
+        // 8 session + 8 request + 8 t_max + 1 paradigm + 24 dims +
+        // 4 n_total + 4 n_classes + 8 energy + length-prefixed vectors
+        Msg::Submit(s) => {
+            65 + (4 + s.class_of.len() * 4)
+                + (4 + s.rows.iter().map(|r| 4 + r.len() * 8).sum::<usize>())
+                + matrices_wire_len(&s.wa)
+                + matrices_wire_len(&s.wb)
+                + (4 + s.delays.len() * 8)
+                + (1 + s.gram.as_ref().map_or(0, matrix_wire_len))
+        }
+        // 8 session + 8 request + 8 elapsed + 4·4 counters + 2·8 losses
+        Msg::ProgressFrame(_) => 56,
+        // 8 session + 8 request + 2·4 counts + per_class + c_hat +
+        // 2·8 losses + 5·4 counters + 8 wall_ms
+        Msg::ClientResult(r) => {
+            68 + (4 + r.per_class.len() * 4) + matrix_wire_len(&r.c_hat)
+        }
+        // 8 session + 8 request + 8 retry_after + reason
+        Msg::Reject { reason, .. } => 28 + reason.len(),
         _ => 8,
     };
     let mut payload = Vec::with_capacity(capacity);
@@ -533,6 +752,62 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
             put_u32(&mut payload, *seq);
             put_u32(&mut payload, *attempt);
         }
+        Msg::OpenSession { session, client } => {
+            put_u64(&mut payload, *session);
+            put_str(&mut payload, client)?;
+        }
+        Msg::Submit(s) => {
+            put_u64(&mut payload, s.session);
+            put_u64(&mut payload, s.request);
+            put_f64(&mut payload, s.t_max);
+            payload.push(s.paradigm);
+            for &d in &s.dims {
+                put_u32(&mut payload, d);
+            }
+            put_u32(&mut payload, s.n_total);
+            put_u32(&mut payload, s.n_classes);
+            put_u32s(&mut payload, &s.class_of)?;
+            put_f64_rows(&mut payload, &s.rows)?;
+            put_matrices(&mut payload, &s.wa)?;
+            put_matrices(&mut payload, &s.wb)?;
+            put_f64s(&mut payload, &s.delays)?;
+            put_opt_matrix(&mut payload, s.gram.as_ref())?;
+            put_f64(&mut payload, s.energy);
+        }
+        Msg::ProgressFrame(p) => {
+            put_u64(&mut payload, p.session);
+            put_u64(&mut payload, p.request);
+            put_f64(&mut payload, p.elapsed);
+            put_u32(&mut payload, p.received);
+            put_u32(&mut payload, p.recovered);
+            put_u32(&mut payload, p.newly);
+            put_u32(&mut payload, p.attempt);
+            put_f64(&mut payload, p.loss);
+            put_f64(&mut payload, p.normalized_loss);
+        }
+        Msg::ClientResult(r) => {
+            put_u64(&mut payload, r.session);
+            put_u64(&mut payload, r.request);
+            put_u32(&mut payload, r.received);
+            put_u32(&mut payload, r.recovered);
+            put_u32s(&mut payload, &r.per_class)?;
+            put_matrix(&mut payload, &r.c_hat)?;
+            put_f64(&mut payload, r.loss);
+            put_f64(&mut payload, r.normalized_loss);
+            put_u32(&mut payload, r.late);
+            put_u32(&mut payload, r.dispatched);
+            put_u32(&mut payload, r.retries);
+            put_u32(&mut payload, r.corrupt);
+            put_u32(&mut payload, r.verify_failures);
+            put_u64(&mut payload, r.wall_ms);
+        }
+        Msg::Reject { session, request, retry_after, reason } => {
+            put_u64(&mut payload, *session);
+            put_u64(&mut payload, *request);
+            put_f64(&mut payload, *retry_after);
+            put_str(&mut payload, reason)?;
+        }
+        Msg::CloseSession { session } => put_u64(&mut payload, *session),
     }
     if payload.len() > MAX_PAYLOAD {
         return Err(WireError::Oversized { len: payload.len(), max: MAX_PAYLOAD });
@@ -549,6 +824,67 @@ pub fn encode(msg: &Msg) -> Result<Vec<u8>, WireError> {
     let crc = crc32(&out);
     put_u32(&mut out, crc);
     Ok(out)
+}
+
+// ------------------------------------------------- split job encoding
+//
+// The serve plane dispatches the *same* job payload body (the coded
+// `W_A`/`W_B` pair) many times: to the first holder, to re-dispatch
+// targets, across retries. Only the tiny per-dispatch prefix
+// (request id, slot, attempt, pacing) changes. Splitting the frame
+// into `prefix | shared body | trailer` lets the body bytes be
+// serialized once per slot and every dispatch go out as a vectored
+// write of three buffers — zero copies of the megabyte part.
+
+/// Serialize the shared payload *body* of a job frame — the two coded
+/// factor matrices — exactly as [`encode`] would embed them.
+pub fn job_body(wa: &Matrix, wb: &Matrix) -> Result<Vec<u8>, WireError> {
+    let mut out = Vec::with_capacity(matrix_wire_len(wa) + matrix_wire_len(wb));
+    put_matrix(&mut out, wa)?;
+    put_matrix(&mut out, wb)?;
+    Ok(out)
+}
+
+/// Serialize the frame header plus the per-dispatch payload prefix of
+/// a job frame whose body ([`job_body`]) is `body_len` bytes long.
+/// `job_prefix(..) ++ body ++ job_trailer(prefix, body)` is
+/// bit-identical to `encode(&Msg::Job(..))` (asserted by test).
+pub fn job_prefix(
+    request_id: u64,
+    slot: u32,
+    attempt: u32,
+    injected_delay: Option<f64>,
+    sleep_secs: f64,
+    body_len: usize,
+) -> Result<Vec<u8>, WireError> {
+    // 8 request_id + 4 slot + 4 attempt + option tag(+f64) + 8 sleep
+    let fields = 25 + if injected_delay.is_some() { 8 } else { 0 };
+    let payload_len = fields + body_len;
+    if payload_len > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len: payload_len, max: MAX_PAYLOAD });
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + fields);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(TAG_JOB);
+    out.push(0); // reserved
+    put_u32(&mut out, wire_u32("job payload length", payload_len)?);
+    put_u64(&mut out, request_id);
+    put_u32(&mut out, slot);
+    put_u32(&mut out, attempt);
+    put_opt_f64(&mut out, injected_delay);
+    put_f64(&mut out, sleep_secs);
+    Ok(out)
+}
+
+/// The CRC32 trailer sealing a split job frame: the checksum of
+/// `prefix ++ body`, computed incrementally so the two buffers are
+/// never concatenated.
+pub fn job_trailer(prefix: &[u8], body: &[u8]) -> [u8; 4] {
+    let mut crc = Crc32::new();
+    crc.update(prefix);
+    crc.update(body);
+    crc.finalize().to_le_bytes()
 }
 
 // ---------------------------------------------------------------- decode
@@ -668,6 +1004,28 @@ impl<'a> Rd<'a> {
             out.push(Arc::new(self.matrix()?));
         }
         Ok(out)
+    }
+
+    fn f64_rows(&mut self) -> Result<Vec<Vec<f64>>, WireError> {
+        let len = self.u32()? as usize;
+        // one row is ≥ 4 bytes of length prefix: cheap sanity bound
+        // before reserving
+        if len > self.buf.len().saturating_sub(self.pos) / 4 {
+            return Err(WireError::Malformed("row vector longer than payload"));
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64s()?);
+        }
+        Ok(out)
+    }
+
+    fn opt_matrix(&mut self) -> Result<Option<Matrix>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.matrix()?)),
+            _ => Err(WireError::Malformed("bad option tag")),
+        }
     }
 
     fn matrix(&mut self) -> Result<Matrix, WireError> {
@@ -815,6 +1173,66 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
             seq: rd.u32()?,
             attempt: rd.u32()?,
         },
+        TAG_OPEN_SESSION => Msg::OpenSession {
+            session: rd.u64()?,
+            client: rd.string()?,
+        },
+        TAG_SUBMIT => Msg::Submit(SubmitMsg {
+            session: rd.u64()?,
+            request: rd.u64()?,
+            t_max: rd.f64()?,
+            paradigm: rd.u8()?,
+            dims: {
+                let mut dims = [0u32; 6];
+                for d in &mut dims {
+                    *d = rd.u32()?;
+                }
+                dims
+            },
+            n_total: rd.u32()?,
+            n_classes: rd.u32()?,
+            class_of: rd.u32s()?,
+            rows: rd.f64_rows()?,
+            wa: rd.matrices()?,
+            wb: rd.matrices()?,
+            delays: rd.f64s()?,
+            gram: rd.opt_matrix()?,
+            energy: rd.f64()?,
+        }),
+        TAG_PROGRESS => Msg::ProgressFrame(ProgressMsg {
+            session: rd.u64()?,
+            request: rd.u64()?,
+            elapsed: rd.f64()?,
+            received: rd.u32()?,
+            recovered: rd.u32()?,
+            newly: rd.u32()?,
+            attempt: rd.u32()?,
+            loss: rd.f64()?,
+            normalized_loss: rd.f64()?,
+        }),
+        TAG_CLIENT_RESULT => Msg::ClientResult(ClientResultMsg {
+            session: rd.u64()?,
+            request: rd.u64()?,
+            received: rd.u32()?,
+            recovered: rd.u32()?,
+            per_class: rd.u32s()?,
+            c_hat: rd.matrix()?,
+            loss: rd.f64()?,
+            normalized_loss: rd.f64()?,
+            late: rd.u32()?,
+            dispatched: rd.u32()?,
+            retries: rd.u32()?,
+            corrupt: rd.u32()?,
+            verify_failures: rd.u32()?,
+            wall_ms: rd.u64()?,
+        }),
+        TAG_REJECT => Msg::Reject {
+            session: rd.u64()?,
+            request: rd.u64()?,
+            retry_after: rd.f64()?,
+            reason: rd.string()?,
+        },
+        TAG_CLOSE_SESSION => Msg::CloseSession { session: rd.u64()? },
         other => return Err(WireError::UnknownType(other)),
     };
     rd.finish()?;
@@ -934,6 +1352,83 @@ mod tests {
             }),
             Msg::Drain { request_id: 9 },
             Msg::Redo { request_id: 9, stream: 1, seq: 3, attempt: 2 },
+            Msg::OpenSession { session: 0, client: "tenant-β".to_string() },
+            Msg::OpenSession { session: 11, client: String::new() },
+            Msg::Submit(SubmitMsg {
+                session: 11,
+                request: 1,
+                t_max: 1.5,
+                paradigm: 0,
+                dims: [2, 3, 1, 6, 2, 4],
+                n_total: 8,
+                n_classes: 2,
+                class_of: vec![0, 0, 0, 1, 1, 1],
+                rows: vec![
+                    vec![1.0, 0.0, 0.5, 0.0, 0.0, 0.0, 0.25, 0.0],
+                    vec![0.0; 8],
+                ],
+                wa: vec![
+                    Arc::new(sample_matrix(21, 2, 3)),
+                    Arc::new(sample_matrix(22, 2, 3)),
+                ],
+                wb: vec![
+                    Arc::new(sample_matrix(23, 3, 2)),
+                    Arc::new(sample_matrix(24, 3, 2)),
+                ],
+                delays: vec![0.125, 0.75],
+                gram: Some(sample_matrix(25, 6, 6)),
+                energy: 12.5,
+            }),
+            Msg::Submit(SubmitMsg {
+                session: 12,
+                request: 2,
+                t_max: 0.5,
+                paradigm: 1,
+                dims: [1, 1, 4, 2, 1, 3],
+                n_total: 2,
+                n_classes: 1,
+                class_of: vec![0, 0],
+                rows: vec![vec![1.0, 1.0]],
+                wa: vec![Arc::new(sample_matrix(26, 1, 1))],
+                wb: vec![Arc::new(sample_matrix(27, 1, 1))],
+                delays: Vec::new(),
+                gram: None,
+                energy: 0.0,
+            }),
+            Msg::ProgressFrame(ProgressMsg {
+                session: 11,
+                request: 1,
+                elapsed: 0.375,
+                received: 5,
+                recovered: 4,
+                newly: 2,
+                attempt: 1,
+                loss: 0.25,
+                normalized_loss: 0.02,
+            }),
+            Msg::ClientResult(ClientResultMsg {
+                session: 11,
+                request: 1,
+                received: 6,
+                recovered: 6,
+                per_class: vec![3, 3],
+                c_hat: sample_matrix(28, 4, 4),
+                loss: 0.0,
+                normalized_loss: 0.0,
+                late: 1,
+                dispatched: 7,
+                retries: 1,
+                corrupt: 0,
+                verify_failures: 0,
+                wall_ms: 42,
+            }),
+            Msg::Reject {
+                session: 11,
+                request: 0,
+                retry_after: 0.25,
+                reason: "sessions saturated".to_string(),
+            },
+            Msg::CloseSession { session: 11 },
         ]
     }
 
@@ -1072,6 +1567,65 @@ mod tests {
         // the canonical IEEE CRC-32 check value
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn incremental_crc_matches_one_shot_for_every_split() {
+        let data = b"UEP window polynomials over straggler channels";
+        let want = crc32(data);
+        for cut in 0..=data.len() {
+            let mut c = Crc32::new();
+            c.update(&data[..cut]);
+            c.update(&data[cut..]);
+            assert_eq!(c.finalize(), want, "cut={cut}");
+        }
+        // three-way split too (the prefix|body|... shape the hot path uses)
+        let mut c = Crc32::new();
+        c.update(&data[..7]);
+        c.update(&data[7..20]);
+        c.update(&data[20..]);
+        assert_eq!(c.finalize(), want);
+    }
+
+    #[test]
+    fn split_job_frame_is_bit_identical_to_encode() {
+        for j in [
+            JobMsg {
+                request_id: 7,
+                slot: 3,
+                attempt: 2,
+                injected_delay: Some(0.25),
+                sleep_secs: 0.001,
+                wa: Arc::new(sample_matrix(31, 4, 6)),
+                wb: Arc::new(sample_matrix(32, 6, 5)),
+            },
+            JobMsg {
+                request_id: 8,
+                slot: 0,
+                attempt: 0,
+                injected_delay: None,
+                sleep_secs: 0.0,
+                wa: Arc::new(sample_matrix(33, 1, 1)),
+                wb: Arc::new(sample_matrix(34, 1, 1)),
+            },
+        ] {
+            let whole = encode(&Msg::Job(j.clone())).unwrap();
+            let body = job_body(&j.wa, &j.wb).unwrap();
+            let prefix = job_prefix(
+                j.request_id,
+                j.slot,
+                j.attempt,
+                j.injected_delay,
+                j.sleep_secs,
+                body.len(),
+            )
+            .unwrap();
+            let trailer = job_trailer(&prefix, &body);
+            let mut split = prefix;
+            split.extend_from_slice(&body);
+            split.extend_from_slice(&trailer);
+            assert_eq!(split, whole);
+        }
     }
 
     #[test]

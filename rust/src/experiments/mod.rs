@@ -17,6 +17,7 @@ mod mnist;
 mod params;
 mod rateless;
 mod stream;
+mod tenants;
 
 pub use common::{mc_loss_vs_packets, mc_loss_vs_time, ExpContext};
 
@@ -63,6 +64,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "rateless",
             "fixed-rate EW vs rateless UEP: time-to-loss + straggler credit under drift",
             rateless::run,
+        ),
+        (
+            "tenants",
+            "multi-tenant serve plane: per-tenant served latency (p50/p99) under 3-way concurrency",
+            tenants::run,
         ),
     ]
 }

@@ -1,0 +1,186 @@
+//! `tenants`: multi-tenant serve-plane fairness — three clients stream
+//! concurrently through one loopback [`ServePlane`] and the served
+//! wall-latency distribution per tenant (p50/p99) is compared against a
+//! solo baseline of the same workload on an idle plane.
+//!
+//! Not a paper figure: the paper serves one multiplication at a time.
+//! This experiment characterizes the PR-8 deployment shape — deficit-
+//! round-robin sharing of one worker fleet — and is the source of the
+//! `service_request_p50/p99` entries in the benchmark snapshot. The
+//! headline check: under 3-way concurrency no tenant's median latency
+//! collapses relative to the others' (DRR bounds the spread), and every
+//! request still fully recovers.
+
+use std::thread;
+
+use crate::api::{ClusterBackend, Request, RunReport, Session};
+use crate::cluster::{
+    spawn_loopback_workers, Connection, LoopbackDialer, LoopbackTransport,
+    ServePlane, ServiceConfig, WorkerConfig,
+};
+use crate::coding::{CodeKind, CodeSpec, WindowPolynomial};
+use crate::linalg::Matrix;
+use crate::partition::{ClassMap, Partitioning};
+use crate::rng::Pcg64;
+use crate::util::csv::CsvTable;
+
+use super::common::ExpContext;
+
+const TENANTS: usize = 3;
+const FLEET: usize = 3;
+
+fn part() -> Partitioning {
+    Partitioning::rxc(3, 3, 4, 5, 4)
+}
+
+fn pinned_cm() -> ClassMap {
+    let pair = crate::partition::default_pair_classes(3);
+    ClassMap::from_levels(&part(), vec![0, 1, 2], vec![0, 1, 2], &pair)
+}
+
+/// One tenant's stream: repeated-`A`, fresh `B` per request, a deadline
+/// far above every sampled delay so full recovery is expected.
+fn run_tenant(
+    dialer: &LoopbackDialer,
+    name: &str,
+    seed: u64,
+    requests: usize,
+) -> Vec<RunReport> {
+    let conn: Box<dyn Connection> = Box::new(dialer.dial(name).unwrap());
+    let backend = ClusterBackend::connect_over(conn, name).unwrap();
+    let mut session = Session::builder()
+        .partitioning(part())
+        .code(CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3())))
+        .classes(pinned_cm())
+        .workers(14)
+        .latency(crate::latency::LatencyModel::exp(1.0))
+        .deadline(50.0)
+        .score(true)
+        .seed(seed)
+        .backend(backend)
+        .build()
+        .unwrap();
+    let mut mats = Pcg64::with_stream(seed, 1);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let mut reports = Vec::new();
+    for _ in 0..requests {
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        reports.push(session.run(Request::new(0, a.clone(), b)).unwrap());
+    }
+    session.shutdown().unwrap();
+    reports
+}
+
+fn percentile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn stats(reports: &[RunReport]) -> (f64, f64, bool) {
+    let mut ms: Vec<f64> =
+        reports.iter().map(|r| r.wall.as_secs_f64() * 1e3).collect();
+    ms.sort_by(f64::total_cmp);
+    let k = part().num_products();
+    let full = reports.iter().all(|r| r.outcome.recovered == k);
+    (percentile_ms(&ms, 0.5), percentile_ms(&ms, 0.99), full)
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let requests = if ctx.full { 16 } else { 6 };
+    println!(
+        "tenants: {TENANTS} concurrent clients x {requests} requests over a \
+         {FLEET}-worker serve plane (+ solo baseline)"
+    );
+
+    // solo baseline: one tenant on an otherwise idle plane
+    let solo = {
+        let (mut transport, dialer) = LoopbackTransport::new();
+        let plane = thread::spawn(move || {
+            ServePlane::new(ServiceConfig::default()).run(&mut transport, 1)
+        });
+        let workers =
+            spawn_loopback_workers(&dialer, FLEET, &WorkerConfig::default());
+        let reports = run_tenant(&dialer, "solo", ctx.seed, requests);
+        plane.join().unwrap();
+        for h in workers {
+            h.join().unwrap()?;
+        }
+        reports
+    };
+
+    // concurrent: TENANTS clients share the plane and fleet
+    let (mut transport, dialer) = LoopbackTransport::new();
+    let plane = thread::spawn(move || {
+        ServePlane::new(ServiceConfig::default()).run(&mut transport, TENANTS)
+    });
+    let workers = spawn_loopback_workers(&dialer, FLEET, &WorkerConfig::default());
+    let handles: Vec<_> = (0..TENANTS)
+        .map(|i| {
+            let dialer = dialer.clone();
+            let seed = ctx.seed.wrapping_add(1 + i as u64);
+            thread::Builder::new()
+                .name(format!("tenant-{i}"))
+                .spawn(move || run_tenant(&dialer, &format!("tenant-{i}"), seed, requests))
+                .expect("spawn tenant")
+        })
+        .collect();
+    let concurrent: Vec<Vec<RunReport>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let report = plane.join().unwrap();
+    for h in workers {
+        h.join().unwrap()?;
+    }
+    anyhow::ensure!(
+        report.served == (TENANTS * requests) as u64 && report.rejected == 0,
+        "plane served {}/{} with {} rejects",
+        report.served,
+        TENANTS * requests,
+        report.rejected,
+    );
+
+    let mut table = CsvTable::new(&[
+        "tenant", "mode", "requests", "p50_ms", "p99_ms", "full_recovery",
+    ]);
+    let (p50, p99, full) = stats(&solo);
+    table.push_raw(vec![
+        "solo".into(),
+        "solo".into(),
+        requests.to_string(),
+        format!("{p50:.3}"),
+        format!("{p99:.3}"),
+        full.to_string(),
+    ]);
+    println!("  solo      p50 {p50:8.2} ms   p99 {p99:8.2} ms   full_recovery={full}");
+    let mut p50s = Vec::new();
+    let mut all_full = full;
+    for (i, reports) in concurrent.iter().enumerate() {
+        let (p50, p99, full) = stats(reports);
+        table.push_raw(vec![
+            format!("tenant-{i}"),
+            "concurrent".into(),
+            requests.to_string(),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+            full.to_string(),
+        ]);
+        println!(
+            "  tenant-{i}  p50 {p50:8.2} ms   p99 {p99:8.2} ms   full_recovery={full}"
+        );
+        p50s.push(p50);
+        all_full &= full;
+    }
+    ctx.write_csv("tenants.csv", &table)?;
+
+    let worst = p50s.iter().cloned().fold(f64::MIN, f64::max);
+    let best = p50s.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "headline: fair sharing p50 spread {:.2}x across {TENANTS} tenants, \
+         full_recovery={all_full}",
+        worst / best.max(1e-9),
+    );
+    anyhow::ensure!(all_full, "a tenant failed to fully recover");
+    Ok(())
+}

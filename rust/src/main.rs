@@ -4,7 +4,9 @@
 //! uepmm exp <name|all> [--out results] [--trials N] [--full] [--seed S]
 //! uepmm list                      # available experiments
 //! uepmm serve [...]               # cluster coordinator (TCP or loopback)
+//! uepmm serve --service [...]     # multi-tenant serve plane (wire v6)
 //! uepmm worker [...]              # cluster worker agent (TCP)
+//! uepmm client [...]              # remote client of a serve plane
 //! uepmm matmul [...]              # one coded multiplication (native/pjrt)
 //! ```
 //!
@@ -19,11 +21,11 @@ use std::time::{Duration, Instant};
 
 use uepmm::api::{
     ClusterBackend, InProcessBackend, ReplanPolicy, Request, RunReport, Session,
-    SessionBuilder,
+    SessionBuilder, UepmmError,
 };
 use uepmm::cluster::{
-    ChaosConn, ClusterConfig, ClusterServer, DeadlineMode, FaultPlan, TcpConn,
-    TcpTransport, Transport, WorkerConfig,
+    ChaosConn, ClusterConfig, ClusterServer, DeadlineMode, FaultPlan, ServePlane,
+    ServiceConfig, TcpConn, TcpTransport, Transport, WorkerConfig,
 };
 use uepmm::coding::{CodeKind, CodeSpec, RatelessSpec, WindowPolynomial};
 use uepmm::config::SyntheticSpec;
@@ -63,6 +65,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(rest),
         "worker" => cmd_worker(rest),
+        "client" => cmd_client(rest),
         "matmul" => cmd_matmul(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -81,8 +84,10 @@ fn print_usage() {
          list             list available experiments\n  \
          matmul           run one coded approximate multiplication\n  \
          serve            cluster coordinator: serve a request stream over\n  \
-                          TCP workers (or --loopback in-process workers)\n  \
+                          TCP workers (or --loopback in-process workers);\n  \
+                          --service starts the multi-tenant serve plane\n  \
          worker           cluster worker agent: connect to a coordinator\n  \
+         client           remote client of a multi-tenant serve plane\n  \
          help             this message"
     );
 }
@@ -414,7 +419,17 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 "3",
                 "factor blocks per side (K = blocks²; raise for finer \
                  rateless packet credit)",
-            );
+            )
+            .flag(
+                "service",
+                "run the multi-tenant serve plane instead of the \
+                 single-stream coordinator",
+            )
+            .opt("sessions", "3", "service: client sessions to serve, then exit")
+            .opt("max-sessions", "8", "service: concurrent session cap")
+            .opt("queue-depth", "4", "service: per-session outstanding requests")
+            .opt("quota", "4", "service: per-session in-flight job quota")
+            .opt("decode-shards", "2", "service: decode pool threads");
         let c = CodedOpts::declare(c, "10");
         let c = TimingOpts::declare(
             c,
@@ -425,6 +440,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         SharedOpts::declare(c, "1")
     };
     let a = cmd.parse(rest)?;
+    if a.get_bool("service") {
+        return run_service(&a);
+    }
     let shared = SharedOpts::parse(&a)?;
     let coded = CodedOpts::parse(&a)?;
     let timing = TimingOpts::parse(&a)?;
@@ -637,6 +655,141 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     // must read the queued Shutdown before this process exits
     session.shutdown()?;
     println!("shutdown complete");
+    Ok(())
+}
+
+/// `uepmm serve --service`: the multi-tenant serve plane. Workers and
+/// clients both dial the listen address (`uepmm worker --connect`,
+/// `uepmm client --connect`); the first frame of each connection picks
+/// its role.
+fn run_service(a: &Args) -> anyhow::Result<()> {
+    let sessions: usize = a.get("sessions")?;
+    anyhow::ensure!(sessions >= 1, "--sessions must be >= 1");
+    let cfg = ServiceConfig {
+        max_sessions: a.get("max-sessions")?,
+        queue_depth: a.get("queue-depth")?,
+        tenant_quota: a.get("quota")?,
+        decode_shards: a.get("decode-shards")?,
+        verify: !a.get_bool("no-verify"),
+        ..ServiceConfig::default()
+    };
+    anyhow::ensure!(cfg.max_sessions >= 1, "--max-sessions must be >= 1");
+    anyhow::ensure!(cfg.queue_depth >= 1, "--queue-depth must be >= 1");
+    let mut transport = TcpTransport::bind(a.get_str("listen"))?;
+    ServePlane::new(cfg).run(&mut transport, sessions);
+    Ok(())
+}
+
+/// `uepmm client`: open a session on a serve plane, stream coded
+/// requests through the unified `Session` API, and back off on rejects.
+fn cmd_client(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = {
+        let c = Command::new("client", "remote client of a multi-tenant serve plane")
+            .opt("connect", "127.0.0.1:7077", "serve-plane address")
+            .opt("name", "", "tenant name announced at open (default client-<pid>)")
+            .opt("requests", "4", "number of multiplication requests")
+            .opt(
+                "open-retries",
+                "40",
+                "redial attempts while the plane's session table is full",
+            );
+        let c = CodedOpts::declare(c, "10");
+        let c = TimingOpts::declare(
+            c,
+            "exp:1.0",
+            "injected straggle model (sampled delays travel with each submit)",
+        );
+        SharedOpts::declare(c, "1")
+    };
+    let a = cmd.parse(rest)?;
+    let shared = SharedOpts::parse(&a)?;
+    let coded = CodedOpts::parse(&a)?;
+    let timing = TimingOpts::parse(&a)?;
+    let (spec, code) = coded.apply(SyntheticSpec::fig9_rxc())?;
+    let requests: usize = a.get("requests")?;
+    let open_retries: usize = a.get("open-retries")?;
+    let name = match a.get_str("name") {
+        "" => format!("client-{}", std::process::id()),
+        n => n.to_string(),
+    };
+    let addr = a.get_str("connect");
+
+    // dial, backing off on admission rejects (the plane's retry_after
+    // hint is the wait)
+    let backend = {
+        let mut attempt = 0;
+        loop {
+            match ClusterBackend::connect(addr, &name) {
+                Ok(b) => break b,
+                Err(UepmmError::Rejected { retry_after_ms, reason })
+                    if attempt < open_retries =>
+                {
+                    attempt += 1;
+                    println!(
+                        "rejected: {reason} retry_after={retry_after_ms}ms \
+                         (redial {attempt}/{open_retries})"
+                    );
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(10)));
+                }
+                Err(e) => anyhow::bail!("{name}: connect to {addr} failed: {e}"),
+            }
+        }
+    };
+    println!(
+        "session {} open as {name} ({requests} requests to {addr})",
+        backend.session_id().unwrap_or(0),
+    );
+    let mut builder = Session::builder()
+        .partitioning(spec.part.clone())
+        .code(code)
+        .classes(spec.class_map())
+        .workers(spec.workers)
+        .deadline(coded.tmax[0])
+        .score(true)
+        .seed(shared.seed)
+        .backend(backend);
+    if let Some(model) = timing.latency.clone() {
+        builder = builder.latency(model);
+    }
+    let mut session = builder.build()?;
+    let mut mats = Pcg64::with_stream(shared.seed, 1);
+    let a_mat = spec.sample_a(&mut mats);
+    let (mut recovered, mut late_total) = (0usize, 0usize);
+    for req in 0..requests {
+        let b = spec.sample_b(&mut mats);
+        let t_max = coded.tmax[req % coded.tmax.len()];
+        let out = loop {
+            let r = session
+                .run(Request::new(0, a_mat.clone(), b.clone()).deadline(t_max));
+            match r {
+                Ok(out) => break out,
+                Err(UepmmError::Rejected { retry_after_ms, reason }) => {
+                    println!("rejected: {reason} retry_after={retry_after_ms}ms");
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(10)));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        println!(
+            "request {req} (T_max={t_max}): {} arrivals ({} late), \
+             recovered {}/{}, loss {:.4}, {} refinements, wall {:?}",
+            out.outcome.received,
+            out.late,
+            out.outcome.recovered,
+            spec.part.num_products(),
+            out.outcome.normalized_loss,
+            out.progress.refinements(),
+            out.wall,
+        );
+        recovered += out.outcome.recovered;
+        late_total += out.late;
+    }
+    let full_recovery = recovered == requests * spec.part.num_products();
+    session.shutdown()?;
+    println!(
+        "client done: requests={requests} recovered={recovered} \
+         late={late_total} full_recovery={full_recovery}"
+    );
     Ok(())
 }
 

@@ -1,0 +1,226 @@
+//! Multi-tenant serve-plane integration: three concurrent clients over
+//! one loopback front door, asserting the PR's three contracts:
+//!
+//! * **bit-identity** — each client's outcomes (recovered set, `Ĉ`
+//!   bits, loss bits, late count) are identical whether the three
+//!   sessions run concurrently interleaved or strictly one at a time,
+//!   because the engine settles every request with collect-all
+//!   virtual-time semantics;
+//! * **fairness** — deficit round robin bounds any session's
+//!   consecutive-dispatch burst by the quantum and keeps dispatch
+//!   counts of always-ready sessions within one quantum of each other;
+//! * **admission** — the `max_sessions + 1`-th concurrent open is
+//!   rejected with a positive backoff hint, and the seat frees on
+//!   close.
+
+use std::thread;
+
+use uepmm::api::{Backend, ClusterBackend, Request, RunReport, Session, UepmmError};
+use uepmm::cluster::{
+    spawn_loopback_workers, Connection, DrrScheduler, LoopbackDialer,
+    LoopbackTransport, ServePlane, ServiceConfig, ServiceReport, WorkerConfig,
+};
+use uepmm::coding::{CodeKind, CodeSpec, WindowPolynomial};
+use uepmm::linalg::Matrix;
+use uepmm::partition::{ClassMap, Partitioning};
+use uepmm::rng::Pcg64;
+
+const WORKERS: usize = 14;
+const REQUESTS: usize = 2;
+
+fn part() -> Partitioning {
+    Partitioning::rxc(3, 3, 4, 5, 4)
+}
+
+fn code() -> CodeSpec {
+    CodeSpec::stacked(CodeKind::EwUep(WindowPolynomial::paper_table3()))
+}
+
+/// Pinned classes, so the stream's cache key does not depend on each
+/// request's fresh `B` (same rationale as `tests/api_backends.rs`).
+fn pinned_cm() -> ClassMap {
+    let pair = uepmm::partition::default_pair_classes(3);
+    ClassMap::from_levels(&part(), vec![0, 1, 2], vec![0, 1, 2], &pair)
+}
+
+fn remote_session(dialer: &LoopbackDialer, name: &str, seed: u64) -> Session {
+    let conn: Box<dyn Connection> = Box::new(dialer.dial(name).unwrap());
+    let backend = ClusterBackend::connect_over(conn, name).unwrap();
+    Session::builder()
+        .partitioning(part())
+        .code(code())
+        .classes(pinned_cm())
+        .workers(WORKERS)
+        .latency(uepmm::latency::LatencyModel::exp(1.0))
+        .deadline(1.1)
+        .score(true)
+        .seed(seed)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+/// One tenant's workload: a repeated-`A` stream of `REQUESTS` requests,
+/// fully deterministic in `seed`.
+fn run_tenant(dialer: &LoopbackDialer, name: &str, seed: u64) -> Vec<RunReport> {
+    let mut session = remote_session(dialer, name, seed);
+    let mut mats = Pcg64::with_stream(seed, 1);
+    let a = Matrix::randn(12, 5, 0.0, 1.0, &mut mats);
+    let mut reports = Vec::new();
+    for _ in 0..REQUESTS {
+        let b = Matrix::randn(5, 12, 0.0, 1.0, &mut mats);
+        reports.push(session.run(Request::new(0, a.clone(), b)).unwrap());
+    }
+    session.shutdown().unwrap();
+    reports
+}
+
+fn start_plane(
+    cfg: ServiceConfig,
+    expected_sessions: usize,
+) -> (LoopbackDialer, thread::JoinHandle<ServiceReport>) {
+    let (mut transport, dialer) = LoopbackTransport::new();
+    let handle =
+        thread::spawn(move || ServePlane::new(cfg).run(&mut transport, expected_sessions));
+    (dialer, handle)
+}
+
+/// The outcome bits that must not depend on client interleaving.
+fn fingerprint(reports: &[RunReport]) -> Vec<(usize, usize, Vec<usize>, Vec<u64>, u64, usize)> {
+    reports
+        .iter()
+        .map(|r| {
+            (
+                r.outcome.received,
+                r.outcome.recovered,
+                r.outcome.per_class_recovered.clone(),
+                r.outcome.c_hat.data().iter().map(|v| v.to_bits()).collect(),
+                r.outcome.normalized_loss.to_bits(),
+                r.late,
+            )
+        })
+        .collect()
+}
+
+/// Three tenants served concurrently decode bit-identically to the same
+/// three tenants served one at a time: the serve plane's multiplexing
+/// is invisible in the results.
+#[test]
+fn concurrent_tenants_decode_bit_identically_to_sequential() {
+    let seeds: [(&str, u64); 3] = [("t-a", 101), ("t-b", 202), ("t-c", 303)];
+
+    // concurrent: three client threads share one plane and fleet
+    let (dialer, plane) = start_plane(ServiceConfig::default(), 3);
+    let workers = spawn_loopback_workers(&dialer, 3, &WorkerConfig::default());
+    let concurrent: Vec<Vec<RunReport>> = {
+        let handles: Vec<_> = seeds
+            .iter()
+            .map(|&(name, seed)| {
+                let dialer = dialer.clone();
+                thread::spawn(move || run_tenant(&dialer, name, seed))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    };
+    let report = plane.join().unwrap();
+    for h in workers {
+        assert!(h.join().unwrap().unwrap().clean_shutdown);
+    }
+    assert_eq!(report.sessions, 3);
+    assert_eq!(report.served, (3 * REQUESTS) as u64);
+    assert_eq!(report.rejected, 0);
+
+    // sequential: a fresh plane and fleet, one tenant at a time
+    let (dialer, plane) = start_plane(ServiceConfig::default(), 3);
+    let workers = spawn_loopback_workers(&dialer, 3, &WorkerConfig::default());
+    let sequential: Vec<Vec<RunReport>> = seeds
+        .iter()
+        .map(|&(name, seed)| run_tenant(&dialer, name, seed))
+        .collect();
+    plane.join().unwrap();
+    for h in workers {
+        assert!(h.join().unwrap().unwrap().clean_shutdown);
+    }
+
+    for (conc, seq) in concurrent.iter().zip(&sequential) {
+        assert!(conc.iter().all(|r| r.outcome.recovered > 0));
+        assert_eq!(fingerprint(conc), fingerprint(seq));
+    }
+    // the decode really was remote: reports carry the remote backend tag
+    assert!(concurrent
+        .iter()
+        .flatten()
+        .all(|r| r.backend == "cluster-remote"));
+}
+
+/// DRR bounds, asserted on the shared scheduler type the engine embeds:
+/// with every session always ready, (a) no session bursts more than
+/// `quantum` consecutive dispatches, (b) total dispatch counts stay
+/// within one quantum of each other at every prefix.
+#[test]
+fn drr_dispatch_counts_stay_within_one_quantum() {
+    let quantum = 3u32;
+    let mut sched = DrrScheduler::new(quantum);
+    for s in [1u64, 2, 3] {
+        sched.add_session(s, u32::MAX);
+    }
+    let order: Vec<u64> =
+        (0..90).map(|_| sched.next(|_| true).unwrap()).collect();
+    let mut counts = std::collections::HashMap::new();
+    let mut burst = 0u32;
+    let mut prev = 0u64;
+    for &s in &order {
+        burst = if s == prev { burst + 1 } else { 1 };
+        prev = s;
+        assert!(burst <= quantum, "burst of {burst} for session {s}");
+        *counts.entry(s).or_insert(0u32) += 1;
+        let max = counts.values().max().unwrap();
+        let min = [1u64, 2, 3]
+            .iter()
+            .map(|k| counts.get(k).copied().unwrap_or(0))
+            .min()
+            .unwrap();
+        assert!(
+            max - min <= quantum,
+            "unfair prefix: counts {counts:?}"
+        );
+    }
+    assert!(counts.values().all(|&c| c == 30));
+}
+
+/// The session table admits exactly `max_sessions` concurrent tenants;
+/// the next open is rejected with a positive backoff, and the seat
+/// frees the moment a tenant closes.
+#[test]
+fn session_table_rejects_then_readmits() {
+    let cfg = ServiceConfig { max_sessions: 2, ..ServiceConfig::default() };
+    let (dialer, plane) = start_plane(cfg, 3);
+    let workers = spawn_loopback_workers(&dialer, 2, &WorkerConfig::default());
+
+    let connect = |name: &str| -> Result<ClusterBackend, UepmmError> {
+        let conn: Box<dyn Connection> = Box::new(dialer.dial(name).unwrap());
+        ClusterBackend::connect_over(conn, name)
+    };
+    let mut a = connect("t-a").unwrap();
+    let mut b = connect("t-b").unwrap();
+    match connect("t-c") {
+        Err(UepmmError::Rejected { retry_after_ms, reason }) => {
+            assert!(retry_after_ms > 0);
+            assert!(reason.contains("session table"), "{reason}");
+        }
+        other => panic!("expected a reject, got {:?}", other.map(|_| "backend")),
+    }
+    // close one seat, and the rejected tenant gets in and is served
+    b.shutdown().unwrap();
+    let reports = run_tenant(&dialer, "t-c", 404);
+    assert_eq!(reports.len(), REQUESTS);
+    assert!(reports.iter().all(|r| r.outcome.recovered > 0));
+    a.shutdown().unwrap();
+    let report = plane.join().unwrap();
+    for h in workers {
+        assert!(h.join().unwrap().unwrap().clean_shutdown);
+    }
+    assert_eq!(report.sessions, 3);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.served, REQUESTS as u64);
+}
