@@ -1,0 +1,236 @@
+//! The rule engine: per-file token streams, `#[cfg(test)]` region
+//! detection (token-level brace matching), suppression resolution, and
+//! stable `(path, line, rule)`-sorted diagnostics.
+
+use crate::lexer::{lex, Directive, Token, TokenKind};
+
+/// One lexed source file plus the derived test-region map.
+pub struct SourceFile {
+    /// Path with `/` separators, as reported in diagnostics.
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+    /// Closed line ranges covered by `#[cfg(test)]` items.
+    test_regions: Vec<(u32, u32)>,
+    /// Whole file is test context (integration tests under `tests/`).
+    all_test: bool,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str, all_test: bool) -> SourceFile {
+        let lexed = lex(src);
+        let test_regions = find_test_regions(&lexed.tokens);
+        SourceFile {
+            path: path.replace('\\', "/"),
+            tokens: lexed.tokens,
+            directives: lexed.directives,
+            test_regions,
+            all_test,
+        }
+    }
+
+    /// Is `line` inside test-only code? Most rules skip such lines;
+    /// the cross-file coverage rule *searches* them.
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.all_test || self.test_regions.iter().any(|&(a, z)| (a..=z).contains(&line))
+    }
+}
+
+/// One diagnostic. The derived `Ord` is the output order: path, then
+/// line, then rule, then message — stable across runs by construction.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub path: String,
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+pub fn is_punct(t: &Token, s: &str) -> bool {
+    t.kind == TokenKind::Punct && t.text == s
+}
+
+pub fn is_ident(t: &Token, s: &str) -> bool {
+    t.kind == TokenKind::Ident && t.text == s
+}
+
+/// Do the tokens at `at..` match this exact sequence of punctuation?
+pub fn is_seq(toks: &[Token], at: usize, puncts: &[&str]) -> bool {
+    puncts
+        .iter()
+        .enumerate()
+        .all(|(k, p)| toks.get(at + k).is_some_and(|t| is_punct(t, p)))
+}
+
+/// From `at` (pointing at an `open` punct), return the index just past
+/// the matching `close`, or `toks.len()` on imbalance.
+pub fn skip_balanced(toks: &[Token], at: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut i = at;
+    while i < toks.len() {
+        if is_punct(&toks[i], open) {
+            depth += 1;
+        } else if is_punct(&toks[i], close) {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Find every `#[cfg(test)]` item and brace-match its body to a line
+/// range. Brace matching is token-level, so braces inside strings or
+/// comments cannot desynchronize it.
+fn find_test_regions(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let hit = is_punct(&toks[i], "#")
+            && is_punct(&toks[i + 1], "[")
+            && is_ident(&toks[i + 2], "cfg")
+            && is_punct(&toks[i + 3], "(")
+            && is_ident(&toks[i + 4], "test")
+            && is_punct(&toks[i + 5], ")")
+            && is_punct(&toks[i + 6], "]");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let start = toks[i].line;
+        // skip further attributes stacked on the same item
+        let mut j = i + 7;
+        while j + 1 < toks.len() && is_punct(&toks[j], "#") && is_punct(&toks[j + 1], "[") {
+            j = skip_balanced(toks, j + 1, "[", "]");
+        }
+        // the item ends at its braced body, or at a bare `;`
+        let mut end = toks.last().map(|t| t.line).unwrap_or(start);
+        let mut k = j;
+        while k < toks.len() {
+            if is_punct(&toks[k], ";") {
+                end = toks[k].line;
+                break;
+            }
+            if is_punct(&toks[k], "{") {
+                let past = skip_balanced(toks, k, "{", "}");
+                end = toks[past.saturating_sub(1).min(toks.len() - 1)].line;
+                break;
+            }
+            k += 1;
+        }
+        out.push((start, end));
+        i = j;
+    }
+    out
+}
+
+/// Run every rule over `files`, validate and apply `lint:allow`
+/// directives, and return the surviving findings sorted and deduped.
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        crate::rules::check_file(f, &mut findings);
+    }
+    crate::rules::check_cross_file(files, &mut findings);
+    // malformed directives are findings themselves — a suppression
+    // without a reason is exactly the hand-audit rot the lint replaces
+    for f in files {
+        for d in &f.directives {
+            if !crate::rules::is_known_rule(&d.rule) {
+                findings.push(Finding {
+                    path: f.path.clone(),
+                    line: d.line,
+                    rule: "lint-allow".to_string(),
+                    message: format!("lint:allow names unknown rule `{}`", d.rule),
+                });
+            } else if !d.justified {
+                findings.push(Finding {
+                    path: f.path.clone(),
+                    line: d.line,
+                    rule: "lint-allow".to_string(),
+                    message: format!(
+                        "lint:allow({}) needs a one-line justification after the `)`",
+                        d.rule
+                    ),
+                });
+            }
+        }
+    }
+    let mut kept: Vec<Finding> = findings
+        .into_iter()
+        .filter(|fd| !suppressed(files, fd))
+        .collect();
+    kept.sort();
+    kept.dedup();
+    kept
+}
+
+fn suppressed(files: &[SourceFile], fd: &Finding) -> bool {
+    if fd.rule == "lint-allow" {
+        return false; // directive hygiene findings cannot be allowed away
+    }
+    let Some(f) = files.iter().find(|f| f.path == fd.path) else {
+        return false;
+    };
+    f.directives
+        .iter()
+        .any(|d| d.rule == fd.rule && directive_target(f, d) == fd.line)
+}
+
+/// The line a directive covers: its own line for the trailing form,
+/// else the next line holding any token (stacked standalone directives
+/// above one statement therefore all target that statement).
+fn directive_target(f: &SourceFile, d: &Directive) -> u32 {
+    if d.trailing {
+        return d.line;
+    }
+    f.tokens
+        .iter()
+        .map(|t| t.line)
+        .find(|&l| l > d.line)
+        .unwrap_or(d.line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_region_spans_the_braced_mod() {
+        let src = "\
+fn live() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn helper() { let x = \"}\"; }\n\
+    #[test]\n\
+    fn t() {}\n\
+}\n\
+fn also_live() {}\n";
+        let f = SourceFile::parse("x.rs", src, false);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(4), "brace inside string must not close the mod");
+        assert!(f.is_test_line(7));
+        assert!(!f.is_test_line(8));
+    }
+
+    #[test]
+    fn stacked_attributes_still_find_the_body() {
+        let src = "\
+#[cfg(test)]\n\
+#[allow(dead_code)]\n\
+mod tests {\n\
+    fn t() {}\n\
+}\n";
+        let f = SourceFile::parse("x.rs", src, false);
+        assert!(f.is_test_line(4));
+    }
+
+    #[test]
+    fn tests_dir_files_are_all_test() {
+        let f = SourceFile::parse("rust/tests/it.rs", "fn x() {}", true);
+        assert!(f.is_test_line(1));
+    }
+}

@@ -1,0 +1,406 @@
+//! A hand-rolled Rust lexer: just enough tokenization that rule
+//! patterns can never fire inside comments, string/char literals, or
+//! raw strings — the failure mode that makes grep-based linting
+//! useless on this codebase (e.g. `partition/classify.rs` documents
+//! the PR 5 `partial_cmp` bug *in a comment*).
+//!
+//! The lexer is deliberately lossy where rules don't care: literal
+//! *contents* are discarded (only the fact that a literal occupies
+//! those lines survives), and multi-character operators arrive as
+//! single-character [`TokenKind::Punct`] tokens (`::` is two `:`
+//! tokens). Rules match token sequences, so neither loss matters.
+
+/// Classification of one token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`unwrap`, `fn`, `HashMap`, …).
+    Ident,
+    /// One punctuation character (`.`, `:`, `!`, `{`, …).
+    Punct,
+    /// String/char/byte/raw-string/numeric literal, contents elided.
+    Literal,
+    /// A lifetime (`'a`, `'static`) — distinguished from char literals.
+    Lifetime,
+}
+
+/// One token with the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `// lint:allow(<rule>) <justification>` suppression comment.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    /// Line the comment sits on.
+    pub line: u32,
+    /// Rule name between the parentheses.
+    pub rule: String,
+    /// Whether a non-empty justification follows the closing paren.
+    pub justified: bool,
+    /// True when code precedes the comment on the same line (the
+    /// trailing form, which suppresses its own line); false for a
+    /// standalone comment line (which suppresses the next code line).
+    pub trailing: bool,
+}
+
+/// The token stream and suppression directives of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes are skipped, and
+/// unterminated literals simply run to end of file.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut line_has_code = false;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                line_has_code = false;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if peek(b, i + 1) == Some(b'/') => {
+                // line comment (incl. doc comments); may carry a directive
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                if let Some(d) = parse_directive(&src[start..j], line, line_has_code) {
+                    out.directives.push(d);
+                }
+                i = j;
+            }
+            b'/' if peek(b, i + 1) == Some(b'*') => {
+                // block comment, nesting-aware
+                let mut depth = 1u32;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && peek(b, i + 1) == Some(b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && peek(b, i + 1) == Some(b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let at = line;
+                i = scan_string(b, i, &mut line);
+                out.tokens.push(Token {
+                    kind: TokenKind::Literal,
+                    text: String::from("\"\""),
+                    line: at,
+                });
+                line_has_code = true;
+            }
+            b'\'' => {
+                // lifetime (`'a` not closed by a quote) vs char literal
+                let n1 = peek(b, i + 1);
+                let n2 = peek(b, i + 2);
+                let is_lifetime = matches!(n1, Some(x) if x == b'_' || x.is_ascii_alphabetic())
+                    && n2 != Some(b'\'');
+                if is_lifetime {
+                    let s = i + 1;
+                    let mut j = s;
+                    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                    out.tokens.push(Token {
+                        kind: TokenKind::Lifetime,
+                        text: src[s..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                } else {
+                    i = scan_char(b, i);
+                    out.tokens.push(Token {
+                        kind: TokenKind::Literal,
+                        text: String::from("''"),
+                        line,
+                    });
+                }
+                line_has_code = true;
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                // `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'` are
+                // literals despite starting with an ident byte
+                if let Some((next, at)) = scan_literal_prefix(b, i, &mut line) {
+                    out.tokens.push(Token {
+                        kind: TokenKind::Literal,
+                        text: String::from("\"\""),
+                        line: at,
+                    });
+                    i = next;
+                } else {
+                    let s = i;
+                    let mut j = i;
+                    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                    out.tokens.push(Token {
+                        kind: TokenKind::Ident,
+                        text: src[s..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                }
+                line_has_code = true;
+            }
+            _ if c.is_ascii_digit() => {
+                let s = i;
+                let mut j = i + 1;
+                while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                // fractional part (`1.5`); `0..n` ranges and tuple
+                // fields stop before the dot because no digit follows
+                if j + 1 < b.len() && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                }
+                out.tokens.push(Token {
+                    kind: TokenKind::Literal,
+                    text: src[s..j].to_string(),
+                    line,
+                });
+                i = j;
+                line_has_code = true;
+            }
+            _ => {
+                if c.is_ascii() {
+                    out.tokens.push(Token {
+                        kind: TokenKind::Punct,
+                        text: (c as char).to_string(),
+                        line,
+                    });
+                    line_has_code = true;
+                }
+                // non-ASCII bytes outside literals/comments: skip
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn peek(b: &[u8], i: usize) -> Option<u8> {
+    b.get(i).copied()
+}
+
+/// From the opening `"` at `i`, return the index just past the closing
+/// quote, counting newlines into `line`.
+fn scan_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                // an escaped newline (line-continuation) still ends a
+                // source line — keep the line counter honest
+                if peek(b, i + 1) == Some(b'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// From the opening `'` at `i`, return the index just past the closing
+/// quote of a char literal.
+fn scan_char(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// If `i` starts a raw/byte string or byte-char literal (`r"`, `r#"`,
+/// `b"`, `br"`, `br#"`, `b'`), scan the whole literal and return
+/// `(index_past_literal, start_line)`. Identifiers that merely begin
+/// with `r`/`b` (`rows`, `budget`, `break`) return `None`.
+fn scan_literal_prefix(b: &[u8], i: usize, line: &mut u32) -> Option<(usize, u32)> {
+    let at = *line;
+    let mut j = i;
+    if peek(b, j) == Some(b'b') {
+        j += 1;
+    }
+    let raw = peek(b, j) == Some(b'r');
+    if raw {
+        j += 1;
+    }
+    if j == i {
+        return None; // no `b`/`r` prefix at all
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while peek(b, j) == Some(b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if peek(b, j) != Some(b'"') {
+            return None; // `r`/`br` was just the start of an identifier
+        }
+        j += 1;
+        loop {
+            match peek(b, j) {
+                None => return Some((j, at)),
+                Some(b'\n') => {
+                    *line += 1;
+                    j += 1;
+                }
+                Some(b'"') => {
+                    let mut k = j + 1;
+                    let mut seen = 0usize;
+                    while seen < hashes && peek(b, k) == Some(b'#') {
+                        seen += 1;
+                        k += 1;
+                    }
+                    if seen == hashes {
+                        return Some((k, at));
+                    }
+                    j += 1;
+                }
+                Some(_) => j += 1,
+            }
+        }
+    }
+    match peek(b, j) {
+        Some(b'"') => Some((scan_string(b, j, line), at)),
+        Some(b'\'') => Some((scan_char(b, j), at)),
+        _ => None, // plain identifier starting with `b`
+    }
+}
+
+/// Parse a `lint:allow(<rule>) <justification>` directive out of one
+/// line comment's text (everything after `//`). Leading `/` from doc
+/// comments and whitespace are tolerated.
+fn parse_directive(comment: &str, line: u32, trailing: bool) -> Option<Directive> {
+    let t = comment.trim_start_matches('/').trim_start();
+    let rest = t.strip_prefix("lint:allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let justified = !rest[close + 1..].trim().is_empty();
+    Some(Directive {
+        line,
+        rule,
+        justified,
+        trailing,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_patterns() {
+        let src = r##"
+// partial_cmp in a comment must not tokenize
+/* nested /* block */ partial_cmp */
+let s = "calls .unwrap() inside a string";
+let r = r#"raw string with Instant::now()"#;
+let real = x.unwrap();
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"partial_cmp".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert_eq!(ids.iter().filter(|t| *t == "unwrap").count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let toks = lex(src).tokens;
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokenKind::Lifetime && t.text == "a"));
+        // the char literal 'x' must not swallow the closing brace
+        assert!(toks.iter().any(|t| t.kind == TokenKind::Punct && t.text == "}"));
+        // and `str`/`char` still tokenize after the lifetime
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()) && ids.contains(&"char".to_string()));
+    }
+
+    #[test]
+    fn raw_string_hashes_must_match_to_close() {
+        let src = r###"let s = r##"inner "# quote .unwrap() "##; after()"###;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"after".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn identifiers_starting_with_r_and_b_survive() {
+        let ids = idents("let rows = budget + break_even - r2d2;");
+        for want in ["rows", "budget", "break_even", "r2d2"] {
+            assert!(ids.contains(&want.to_string()), "{ids:?}");
+        }
+    }
+
+    #[test]
+    fn directives_parse_with_and_without_justification() {
+        let src = "\
+// lint:allow(no-wallclock-in-deterministic-paths) telemetry only\n\
+let t = now();\n\
+let u = later(); // lint:allow(no-panic-in-server-loops)\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.directives.len(), 2);
+        let d0 = &lexed.directives[0];
+        assert_eq!(d0.line, 1);
+        assert_eq!(d0.rule, "no-wallclock-in-deterministic-paths");
+        assert!(d0.justified && !d0.trailing);
+        let d1 = &lexed.directives[1];
+        assert_eq!(d1.line, 3);
+        assert!(!d1.justified);
+        assert!(d1.trailing);
+    }
+
+    #[test]
+    fn lines_advance_through_multiline_literals_and_comments() {
+        let src = "let a = \"line\none\";\n/* two\nlines */\nlet b = 1;";
+        let toks = lex(src).tokens;
+        let b_tok = toks.iter().find(|t| t.text == "b").expect("b token");
+        assert_eq!(b_tok.line, 5);
+    }
+}

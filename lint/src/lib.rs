@@ -1,0 +1,16 @@
+//! `uepmm-lint` — repo-specific static analysis for the determinism
+//! invariants the UEP cluster lives on: bit-identical decodes across
+//! runs, thread counts, transports, and client interleavings.
+//!
+//! The pipeline is [`lexer`] (a string/char/comment/raw-string-aware
+//! Rust tokenizer, so rule patterns can never fire inside literals or
+//! comments) → [`rules`] (the repo-specific catalog) → [`engine`]
+//! (test-region detection, `lint:allow` suppression, stable sorted
+//! diagnostics). Dependency-free by design: it must build in the
+//! offline container next to the crate it analyzes.
+//!
+//! Run it as CI does: `cargo run -p uepmm-lint -- rust/src`.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;

@@ -1,0 +1,96 @@
+//! CLI: `uepmm-lint <file-or-dir>...` — lex every `.rs` file under the
+//! given roots, run the rule catalog, print `(path, line, rule)`-sorted
+//! diagnostics, and exit non-zero on any undiagnosed finding.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use uepmm_lint::engine::{self, SourceFile};
+use uepmm_lint::rules;
+
+fn main() -> ExitCode {
+    let roots: Vec<String> = std::env::args().skip(1).collect();
+    if roots.is_empty() {
+        eprintln!("usage: uepmm-lint <file-or-dir>...");
+        return ExitCode::from(2);
+    }
+    let mut files: Vec<SourceFile> = Vec::new();
+    for root in &roots {
+        let root_path = PathBuf::from(root);
+        let mut code = Vec::new();
+        if let Err(e) = collect(&root_path, &mut code) {
+            eprintln!("uepmm-lint: {root}: {e}");
+            return ExitCode::from(2);
+        }
+        // Pointed at a crate's `src/`, pull in the sibling `tests/`
+        // directory as test-only context: cross-file coverage rules
+        // need to *see* integration tests without linting them.
+        let mut test_ctx = Vec::new();
+        let sibling_tests = (root_path.file_name().and_then(|n| n.to_str()) == Some("src"))
+            .then(|| root_path.parent().map(|p| p.join("tests")))
+            .flatten()
+            .filter(|t| t.is_dir());
+        if let Some(tests) = sibling_tests {
+            if let Err(e) = collect(&tests, &mut test_ctx) {
+                eprintln!("uepmm-lint: {}: {e}", tests.display());
+                return ExitCode::from(2);
+            }
+        }
+        for (list, forced_test) in [(&code, false), (&test_ctx, true)] {
+            for p in list.iter() {
+                let src = match std::fs::read_to_string(p) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("uepmm-lint: {}: {e}", p.display());
+                        return ExitCode::from(2);
+                    }
+                };
+                let shown = p.to_string_lossy().replace('\\', "/");
+                let all_test =
+                    forced_test || shown.contains("/tests/") || shown.starts_with("tests/");
+                files.push(SourceFile::parse(&shown, &src, all_test));
+            }
+        }
+    }
+    let findings = engine::run(&files);
+    for fd in &findings {
+        println!("{}:{}: [{}] {}", fd.path, fd.line, fd.rule, fd.message);
+    }
+    if findings.is_empty() {
+        println!(
+            "uepmm-lint: clean — {} files, {} rules",
+            files.len(),
+            rules::RULES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("uepmm-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Gather `.rs` files under `path` (or `path` itself), sorted for
+/// deterministic scan order; `target/` and dotdirs are skipped.
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(path)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if p.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! The rule catalog. Every rule here encodes an invariant this repo
+//! has already been burned by (or nearly so) — see CONTRIBUTING.md
+//! ("Invariants and the lint") for the rationale-per-rule.
+
+use crate::engine::{is_ident, is_punct, is_seq, skip_balanced, Finding, SourceFile};
+use crate::lexer::TokenKind;
+
+pub const NO_PARTIAL_CMP: &str = "no-partial-cmp-sort";
+pub const NO_WALLCLOCK: &str = "no-wallclock-in-deterministic-paths";
+pub const NO_UNORDERED: &str = "no-unordered-iteration";
+pub const NO_PANIC: &str = "no-panic-in-server-loops";
+pub const NO_ENTROPY: &str = "no-ambient-entropy";
+pub const WIRE_COVERAGE: &str = "wire-frame-test-coverage";
+
+/// Every rule name, for directive validation and the CLI banner.
+pub const RULES: &[&str] = &[
+    NO_PARTIAL_CMP,
+    NO_WALLCLOCK,
+    NO_UNORDERED,
+    NO_PANIC,
+    NO_ENTROPY,
+    WIRE_COVERAGE,
+];
+
+pub fn is_known_rule(rule: &str) -> bool {
+    RULES.contains(&rule)
+}
+
+/// Files where wall-clock reads are legitimate by construction:
+/// Wall-mode transport deadlines, the CLI, and benches. Everything
+/// else needs a per-site `lint:allow` explaining why the read cannot
+/// reach decode/dispatch state.
+fn wallclock_exempt(path: &str) -> bool {
+    path.ends_with("cluster/transport.rs")
+        || path.ends_with("src/main.rs")
+        || path.contains("benches/")
+}
+
+/// Paths whose map iteration order can reach dispatch/decode outcomes.
+fn unordered_scope(path: &str) -> bool {
+    path.contains("cluster/") || path.contains("coordinator/") || path.contains("api/")
+}
+
+/// Long-running server-loop files where a panic kills a multi-tenant
+/// plane or a worker fleet member. Scoped to whole non-test files (a
+/// superset of the literal loop bodies): helpers called from the loops
+/// panic the same threads.
+fn panic_scope(path: &str) -> bool {
+    path.ends_with("cluster/server.rs")
+        || path.ends_with("cluster/worker.rs")
+        || path.contains("cluster/service/")
+}
+
+/// All single-file rules over one source file.
+pub fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &f.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let line = t.line;
+        let in_test = f.is_test_line(line);
+        match t.text.as_str() {
+            // flagged in tests too: a NaN-panicking comparator in a
+            // test is a flake of exactly the PR 5 class
+            "partial_cmp" => out.push(finding(
+                f,
+                line,
+                NO_PARTIAL_CMP,
+                "float comparison via `partial_cmp` panics on NaN in sort paths; use `total_cmp`",
+            )),
+            // also flagged in tests: seeded Pcg64 everywhere is what
+            // makes the bit-identity assertions meaningful
+            "from_entropy" | "thread_rng" | "OsRng" | "getrandom" => out.push(finding(
+                f,
+                line,
+                NO_ENTROPY,
+                "ambient OS entropy breaks reproducibility; draw from a seeded `Pcg64`",
+            )),
+            "Instant" | "SystemTime" if !in_test && !wallclock_exempt(&f.path) => {
+                if is_seq(toks, i + 1, &[":", ":"])
+                    && toks.get(i + 3).is_some_and(|n| is_ident(n, "now"))
+                {
+                    out.push(finding(
+                        f,
+                        line,
+                        NO_WALLCLOCK,
+                        &format!(
+                            "`{}::now()` reads the wall clock near deterministic paths; route \
+                             through virtual time, or lint:allow with why it cannot reach \
+                             decode state",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+            "HashMap" | "HashSet" if !in_test && unordered_scope(&f.path) => {
+                out.push(finding(
+                    f,
+                    line,
+                    NO_UNORDERED,
+                    &format!(
+                        "`{}` iteration order varies per process in dispatch/decode paths; \
+                         use `BTree{}` or sort before iterating",
+                        t.text,
+                        &t.text[4..]
+                    ),
+                ));
+            }
+            "unwrap" | "expect"
+                if !in_test
+                    && panic_scope(&f.path)
+                    && i > 0
+                    && is_punct(&toks[i - 1], ".")
+                    && toks.get(i + 1).is_some_and(|n| is_punct(n, "(")) =>
+            {
+                out.push(finding(
+                    f,
+                    line,
+                    NO_PANIC,
+                    &format!(
+                        "`.{}(..)` can panic a long-running server loop; propagate a typed \
+                         error instead",
+                        t.text
+                    ),
+                ));
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented"
+                if !in_test
+                    && panic_scope(&f.path)
+                    && toks.get(i + 1).is_some_and(|n| is_punct(n, "!")) =>
+            {
+                out.push(finding(
+                    f,
+                    line,
+                    NO_PANIC,
+                    &format!(
+                        "`{}!` takes down a long-running server loop; degrade gracefully \
+                         instead",
+                        t.text
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Cross-file rule: every variant of `enum Msg` in `cluster/wire.rs`
+/// must appear as `Msg::<Variant>` somewhere in test code (the wire
+/// round-trip tests, or an integration test under `tests/`).
+pub fn check_cross_file(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for wire in files.iter().filter(|f| f.path.ends_with("cluster/wire.rs")) {
+        let Some((enum_line, variants)) = msg_variants(wire) else {
+            continue;
+        };
+        for v in &variants {
+            if !files.iter().any(|f| covers_variant(f, v)) {
+                out.push(Finding {
+                    path: wire.path.clone(),
+                    line: enum_line,
+                    rule: WIRE_COVERAGE.to_string(),
+                    message: format!(
+                        "wire frame `Msg::{v}` never appears in a test; add it to the \
+                         round-trip coverage"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Parse the variant names of `enum Msg { … }` from a lexed wire.rs.
+/// Returns the line of the `enum` keyword and the names in order.
+fn msg_variants(f: &SourceFile) -> Option<(u32, Vec<String>)> {
+    let t = &f.tokens;
+    let mut i = 0usize;
+    while i + 1 < t.len() {
+        if !(is_ident(&t[i], "enum") && is_ident(&t[i + 1], "Msg")) {
+            i += 1;
+            continue;
+        }
+        let enum_line = t[i].line;
+        let mut j = i + 2;
+        while j < t.len() && !is_punct(&t[j], "{") {
+            j += 1;
+        }
+        if j >= t.len() {
+            return None;
+        }
+        let mut vars = Vec::new();
+        let mut depth = 1u32;
+        let mut expect_name = true;
+        let mut k = j + 1;
+        while k < t.len() && depth > 0 {
+            let tok = &t[k];
+            if tok.kind == TokenKind::Punct {
+                match tok.text.as_str() {
+                    "{" | "(" | "[" => depth += 1,
+                    "}" | ")" | "]" => depth = depth.saturating_sub(1),
+                    "," if depth == 1 => expect_name = true,
+                    "#" if depth == 1 => {
+                        // variant attribute: skip the whole `[...]`
+                        k = skip_balanced(t, k + 1, "[", "]");
+                        continue;
+                    }
+                    _ => {}
+                }
+            } else if tok.kind == TokenKind::Ident && depth == 1 && expect_name {
+                vars.push(tok.text.clone());
+                expect_name = false;
+            }
+            k += 1;
+        }
+        return Some((enum_line, vars));
+    }
+    None
+}
+
+/// Does `f` reference `Msg::<variant>` on a test line?
+fn covers_variant(f: &SourceFile, variant: &str) -> bool {
+    let toks = &f.tokens;
+    (0..toks.len()).any(|i| {
+        is_ident(&toks[i], "Msg")
+            && f.is_test_line(toks[i].line)
+            && is_seq(toks, i + 1, &[":", ":"])
+            && toks.get(i + 3).is_some_and(|t| is_ident(t, variant))
+    })
+}
+
+fn finding(f: &SourceFile, line: u32, rule: &str, msg: &str) -> Finding {
+    Finding {
+        path: f.path.clone(),
+        line,
+        rule: rule.to_string(),
+        message: msg.to_string(),
+    }
+}

@@ -1,0 +1,49 @@
+//! Lint fixture: a fake server-loop file. Not compiled by cargo —
+//! only lexed by the lint's integration tests.
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn hot_loop(jobs: &HashMap<u64, f64>) {
+    let t0 = Instant::now();
+    let v = jobs.get(&1).unwrap();
+    let w = jobs.get(&2).expect("present");
+    if *v > *w {
+        panic!("inverted");
+    }
+    let mut xs = vec![3.0_f64, f64::NAN, 1.0];
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let _ = (t0, xs);
+}
+
+fn negatives() {
+    // .unwrap() and Instant::now() and partial_cmp in a comment: quiet
+    /* block comment with panic! and HashMap stays quiet too */
+    let s = "string with .unwrap() and partial_cmp and Instant::now()";
+    let r = r#"raw string: HashMap::new().unwrap() SystemTime::now()"#;
+    let lifetime: &'static str = "x";
+    let fallback = Some(1_usize).unwrap_or(2);
+    let _ = s.len() + r.len() + lifetime.len() + fallback;
+}
+
+fn justified() -> f64 {
+    // lint:allow(no-wallclock-in-deterministic-paths) per-request wall telemetry; decode state never reads it
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+fn unjustified(m: &HashMap<u64, u64>) -> u64 {
+    *m.get(&1).unwrap() // lint:allow(no-panic-in-server-loops)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    #[test]
+    fn test_code_is_exempt_from_server_rules() {
+        let t = Instant::now();
+        let v = vec![1_u64];
+        assert_eq!(*v.first().unwrap(), 1);
+        assert!(t.elapsed().as_secs_f64() >= 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Lint fixture: mini wire protocol with one frame variant that no
+//! test ever constructs.
+pub enum Msg {
+    /// Worker → coordinator: register.
+    Hello { agent: String },
+    /// Coordinator → worker: one job.
+    Job(u64),
+    /// Coordinator → worker: drain and exit. (Uncovered on purpose.)
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Msg;
+
+    #[test]
+    fn round_trips() {
+        let _ = Msg::Hello { agent: String::new() };
+        let _ = Msg::Job(7);
+    }
+}

@@ -1,0 +1,10 @@
+//! Lint fixture: ambient entropy fires on any path; the server-loop
+//! and unordered-iteration rules stay quiet outside their scopes.
+use std::collections::HashMap;
+
+pub fn seed_badly() -> u64 {
+    let _rng = StdRng::from_entropy();
+    let _os = OsRng;
+    let m: HashMap<u64, u64> = HashMap::new();
+    m.get(&0).copied().unwrap_or(0)
+}

@@ -1,0 +1,181 @@
+//! Integration tests for the lint engine: known-violation fixtures,
+//! literal/comment negatives, suppression behavior, stable ordering,
+//! and the cross-file wire-coverage rule.
+
+use std::path::Path;
+
+use uepmm_lint::engine::{run, Finding, SourceFile};
+use uepmm_lint::rules;
+
+/// Load a fixture from disk under the path the rules will scope on
+/// (`fixtures/cluster/...` keeps the `cluster/` scoping live).
+fn fixture(rel: &str) -> SourceFile {
+    let disk = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(rel);
+    let src = std::fs::read_to_string(&disk)
+        .unwrap_or_else(|e| panic!("fixture {rel}: {e}"));
+    SourceFile::parse(&format!("fixtures/{rel}"), &src, false)
+}
+
+fn triples(findings: &[Finding]) -> Vec<(String, u32, String)> {
+    findings
+        .iter()
+        .map(|f| (f.path.clone(), f.line, f.rule.clone()))
+        .collect()
+}
+
+#[test]
+fn fixture_findings_are_exactly_the_expected_set() {
+    let files = vec![
+        fixture("cluster/server.rs"),
+        fixture("cluster/transport.rs"),
+        fixture("cluster/wire.rs"),
+        fixture("rng.rs"),
+    ];
+    let got = triples(&run(&files));
+    let srv = "fixtures/cluster/server.rs".to_string();
+    let want: Vec<(String, u32, String)> = vec![
+        (srv.clone(), 3, rules::NO_UNORDERED.into()),
+        (srv.clone(), 6, rules::NO_UNORDERED.into()),
+        (srv.clone(), 7, rules::NO_WALLCLOCK.into()),
+        (srv.clone(), 8, rules::NO_PANIC.into()),
+        (srv.clone(), 9, rules::NO_PANIC.into()),
+        (srv.clone(), 11, rules::NO_PANIC.into()),
+        (srv.clone(), 14, rules::NO_PANIC.into()),
+        (srv.clone(), 14, rules::NO_PARTIAL_CMP.into()),
+        (srv.clone(), 34, rules::NO_UNORDERED.into()),
+        // the trailing lint:allow on line 35 suppresses the unwrap but
+        // carries no justification — that omission is its own finding
+        (srv.clone(), 35, "lint-allow".into()),
+        ("fixtures/cluster/wire.rs".into(), 3, rules::WIRE_COVERAGE.into()),
+        ("fixtures/rng.rs".into(), 6, rules::NO_ENTROPY.into()),
+        ("fixtures/rng.rs".into(), 7, rules::NO_ENTROPY.into()),
+    ];
+    assert_eq!(got, want, "full diagnostic set drifted");
+}
+
+#[test]
+fn patterns_inside_literals_and_comments_never_fire() {
+    let src = r##"
+// partial_cmp .unwrap() Instant::now() HashMap in a line comment
+/* panic! and /* nested */ SystemTime::now() in a block comment */
+fn quiet() -> usize {
+    let s = "partial_cmp .unwrap() panic! Instant::now() HashMap";
+    let r = r#"from_entropy OsRng .expect( unreachable!"#;
+    s.len() + r.len()
+}
+"##;
+    let f = SourceFile::parse("cluster/server.rs", src, false);
+    let findings = run(&[f]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn suppression_requires_matching_rule_and_adjacent_line() {
+    // justified allow on the preceding line: suppressed, no residue
+    let ok = "\
+// lint:allow(no-wallclock-in-deterministic-paths) wall telemetry only\n\
+fn f() { let t = Instant::now(); let _ = t; }\n";
+    let f = SourceFile::parse("cluster/service/x.rs", ok, false);
+    assert!(run(&[f]).is_empty());
+
+    // an allow for a *different* rule does not suppress
+    let wrong_rule = "\
+// lint:allow(no-panic-in-server-loops) wrong rule on purpose\n\
+fn f() { let t = Instant::now(); let _ = t; }\n";
+    let f = SourceFile::parse("cluster/service/x.rs", wrong_rule, false);
+    let got = run(&[f]);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, rules::NO_WALLCLOCK);
+
+    // an allow two lines above the site does not suppress
+    let too_far = "\
+// lint:allow(no-wallclock-in-deterministic-paths) stranded allow\n\
+fn f() {\n\
+    let t = Instant::now();\n\
+    let _ = t;\n\
+}\n";
+    let f = SourceFile::parse("cluster/service/x.rs", too_far, false);
+    let got = run(&[f]);
+    assert!(
+        got.iter().any(|fd| fd.rule == rules::NO_WALLCLOCK && fd.line == 3),
+        "{got:?}"
+    );
+
+    // unknown rule names are flagged, never silently ignored
+    let unknown = "fn f() {} // lint:allow(no-such-rule) typo\n";
+    let f = SourceFile::parse("anywhere.rs", unknown, false);
+    let got = run(&[f]);
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].rule, "lint-allow");
+}
+
+#[test]
+fn output_is_stable_sorted_and_deduped() {
+    let files = || {
+        vec![
+            fixture("rng.rs"),
+            fixture("cluster/wire.rs"),
+            fixture("cluster/server.rs"),
+            fixture("cluster/transport.rs"),
+        ]
+    };
+    let a = run(&files());
+    let b = run(&files());
+    assert_eq!(a, b, "two runs over the same inputs must agree exactly");
+    let mut sorted = a.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(a, sorted, "output must arrive (path, line, rule)-sorted");
+}
+
+#[test]
+fn wire_coverage_sees_tests_in_sibling_test_files() {
+    let wire = "\
+pub enum Msg {\n\
+    Hello { agent: String },\n\
+    Shutdown,\n\
+}\n";
+    // an integration-test file (all_test = true) covering both
+    // variants clears the finding the fixture version raises
+    let its = "\
+fn roundtrip() {\n\
+    let _ = Msg::Hello { agent: String::new() };\n\
+    let _ = Msg::Shutdown;\n\
+}\n";
+    let covered = vec![
+        SourceFile::parse("cluster/wire.rs", wire, false),
+        SourceFile::parse("tests/wire_roundtrip.rs", its, true),
+    ];
+    assert!(run(&covered).is_empty());
+
+    // without the test file, both variants are uncovered
+    let bare = vec![SourceFile::parse("cluster/wire.rs", wire, false)];
+    let got = run(&bare);
+    assert_eq!(got.len(), 2, "{got:?}");
+    assert!(got.iter().all(|f| f.rule == rules::WIRE_COVERAGE && f.line == 1));
+    assert!(got.iter().any(|f| f.message.contains("Msg::Hello")));
+    assert!(got.iter().any(|f| f.message.contains("Msg::Shutdown")));
+
+    // non-test references never count as coverage
+    let live_use = vec![
+        SourceFile::parse("cluster/wire.rs", wire, false),
+        SourceFile::parse(
+            "cluster/server.rs",
+            "fn f() { let _ = Msg::Shutdown; }\n",
+            false,
+        ),
+    ];
+    let got = run(&live_use);
+    assert_eq!(got.len(), 2, "live code must not satisfy coverage: {got:?}");
+}
+
+#[test]
+fn test_context_files_are_exempt_from_code_rules() {
+    // unwraps and clocks inside an integration test are fine even
+    // under a cluster/ path-shaped name
+    let src = "fn t() { let x = vec![1].pop().unwrap(); let _ = (x, Instant::now()); }\n";
+    let f = SourceFile::parse("rust/tests/cluster_resilience.rs", src, true);
+    assert!(run(&[f]).is_empty());
+}

@@ -402,7 +402,7 @@ impl<E: ExecEngine> Backend for InProcessBackend<E> {
             st: DecodeState::new(space),
             received: 0,
             tracker,
-            start: Instant::now(),
+            start: Instant::now(), // lint:allow(no-wallclock-in-deterministic-paths) RunReport wall telemetry only; results never depend on it
         });
         Ok(())
     }
@@ -1118,7 +1118,7 @@ impl RemoteClient {
             replans,
             events: Vec::new(),
             reported: 0,
-            start: Instant::now(),
+            start: Instant::now(), // lint:allow(no-wallclock-in-deterministic-paths) RunReport wall telemetry only; results never depend on it
         });
         Ok(())
     }

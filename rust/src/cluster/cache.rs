@@ -11,7 +11,7 @@
 //! counters are surfaced through [`CacheStats`] in the server's
 //! per-request stats.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::coding::CodeSpec;
@@ -27,7 +27,7 @@ use crate::partition::{ClassMap, Paradigm, Partitioning};
 /// window polynomial), the same importance-class assignment (the
 /// window draw in `generate_packets` depends on it), and the same
 /// worker count.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CacheKey {
     /// Owning tenant/session: the namespace for `matrix_id`.
     pub tenant: u64,
@@ -98,25 +98,28 @@ pub struct CacheStats {
 /// scan. Eviction scans for the minimum tick, which is O(n) only on the
 /// rare capacity overflow.
 pub struct EncodedBlockCache {
-    /// Entry plus the tick of its most recent use.
-    map: HashMap<CacheKey, (Arc<EncodedA>, u64)>,
+    /// Entry plus the tick of its most recent use. `BTreeMap` keeps
+    /// iteration (eviction scans, debugging dumps) in key order — no
+    /// per-process hash-seed nondeterminism anywhere near the serve
+    /// path (no-unordered-iteration).
+    map: BTreeMap<CacheKey, (Arc<EncodedA>, u64)>,
     /// Monotone access counter (the recency clock).
     tick: u64,
     capacity: usize,
     stats: CacheStats,
     /// Per-tenant (hits, misses): the multi-tenant accounting behind
     /// [`EncodedBlockCache::tenant_stats`].
-    per_tenant: HashMap<u64, (u64, u64)>,
+    per_tenant: BTreeMap<u64, (u64, u64)>,
 }
 
 impl EncodedBlockCache {
     pub fn new(capacity: usize) -> Self {
         EncodedBlockCache {
-            map: HashMap::new(),
+            map: BTreeMap::new(),
             tick: 0,
             capacity,
             stats: CacheStats::default(),
-            per_tenant: HashMap::new(),
+            per_tenant: BTreeMap::new(),
         }
     }
 

@@ -662,10 +662,10 @@ impl ClusterServer {
         n: usize,
         timeout: Duration,
     ) -> Result<usize> {
-        let deadline = Instant::now() + timeout;
+        let deadline = Instant::now() + timeout; // lint:allow(no-wallclock-in-deterministic-paths) registration hang-guard; decode order never reads it
         let mut accepted = 0;
         while accepted < n {
-            let now = Instant::now();
+            let now = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) registration hang-guard; decode order never reads it
             if now >= deadline {
                 break;
             }
@@ -676,7 +676,7 @@ impl ClusterServer {
                     // deadline (a silent stray connection would otherwise
                     // stall registration for its full grace period)
                     let handshake = Duration::from_secs(10)
-                        .min(deadline.saturating_duration_since(Instant::now()))
+                        .min(deadline.saturating_duration_since(Instant::now())) // lint:allow(no-wallclock-in-deterministic-paths) caps the handshake wait, not decode
                         .max(Duration::from_millis(100));
                     match self.register(conn, handshake) {
                         Ok(_) => accepted += 1,
@@ -717,13 +717,13 @@ impl ClusterServer {
                 Err(_) => self.workers[wi].alive = false,
             }
         }
-        let deadline = Instant::now() + self.cfg.heartbeat_timeout;
+        let deadline = Instant::now() + self.cfg.heartbeat_timeout; // lint:allow(no-wallclock-in-deterministic-paths) heartbeat liveness window, not decode state
         let mut acked = vec![false; self.workers.len()];
         loop {
             let outstanding = waiting
                 .iter()
                 .any(|&wi| !acked[wi] && self.workers[wi].alive);
-            if !outstanding || Instant::now() >= deadline {
+            if !outstanding || Instant::now() >= deadline { // lint:allow(no-wallclock-in-deterministic-paths) heartbeat liveness window, not decode state
                 break;
             }
             for &wi in &waiting {
@@ -804,9 +804,9 @@ impl ClusterServer {
     /// shutdown frame — and turn a clean exit into a connection loss.
     pub fn shutdown_graceful(&mut self, timeout: Duration) {
         self.shutdown();
-        let deadline = Instant::now() + timeout;
+        let deadline = Instant::now() + timeout; // lint:allow(no-wallclock-in-deterministic-paths) shutdown drain window only
         let mut open: Vec<bool> = self.workers.iter().map(|_| true).collect();
-        while open.iter().any(|&o| o) && Instant::now() < deadline {
+        while open.iter().any(|&o| o) && Instant::now() < deadline { // lint:allow(no-wallclock-in-deterministic-paths) shutdown drain window only
             for (wi, w) in self.workers.iter_mut().enumerate() {
                 if !open[wi] {
                     continue;
@@ -972,7 +972,7 @@ impl ClusterServer {
         for w in &mut self.workers {
             w.in_flight.clear();
         }
-        let start = Instant::now();
+        let start = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) wall telemetry + Wall-mode pacing base; Virtual decode ignores it
         let pace = self.cfg.time_scale;
         let n = jobs.len();
         let mut ctx = Collect::new(request_id, n);
@@ -1009,7 +1009,7 @@ impl ClusterServer {
                 let hard = start + self.cfg.collect_timeout;
                 let mut results: Vec<(u64, ResultMsg)> =
                     Vec::with_capacity(ctx.outstanding);
-                let mut last_progress = Instant::now();
+                let mut last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall hang-guard; Virtual absorb order is (delay, slot)
                 loop {
                     let flushed = self.flush_requeue(
                         &mut ctx,
@@ -1019,7 +1019,7 @@ impl ClusterServer {
                         t_max,
                     )?;
                     retries += flushed;
-                    if ctx.outstanding == 0 || Instant::now() >= hard {
+                    if ctx.outstanding == 0 || Instant::now() >= hard { // lint:allow(no-wallclock-in-deterministic-paths) collect hang-guard only
                         break;
                     }
                     let before = results.len();
@@ -1033,14 +1033,14 @@ impl ClusterServer {
                     }
                     if results.len() > before || flushed > 0 || !ctx.requeue.is_empty()
                     {
-                        last_progress = Instant::now();
+                        last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall clock; drives recovery, not decode order
                     } else if last_progress.elapsed() >= self.cfg.stall_timeout {
                         // nothing moved for the stall window: a result
                         // frame may have been dropped on a lossy channel,
                         // so respin every unresolved slot (bounded by the
                         // per-slot retry budget; duplicates absorb once)
                         self.requeue_stalled(&mut ctx);
-                        last_progress = Instant::now();
+                        last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall clock; drives recovery, not decode order
                     }
                 }
                 results.sort_by(|x, y| {
@@ -1083,7 +1083,7 @@ impl ClusterServer {
                 // past the deadline (it could not land in time anyway).
                 let deadline = start + Duration::from_secs_f64(t_max * pace);
                 loop {
-                    if ctx.outstanding == 0 || Instant::now() >= deadline {
+                    if ctx.outstanding == 0 || Instant::now() >= deadline { // lint:allow(no-wallclock-in-deterministic-paths) Wall mode is wall-clock by definition
                         break;
                     }
                     retries += self.flush_requeue(
@@ -1130,8 +1130,8 @@ impl ClusterServer {
                 ctx.write_off_queued();
                 // grace drain: count (and discard) stragglers so they do
                 // not pollute the next request's collection
-                let grace = Instant::now() + self.cfg.late_drain;
-                while ctx.outstanding > 0 && Instant::now() < grace {
+                let grace = Instant::now() + self.cfg.late_drain; // lint:allow(no-wallclock-in-deterministic-paths) late-drain grace window only
+                while ctx.outstanding > 0 && Instant::now() < grace { // lint:allow(no-wallclock-in-deterministic-paths) late-drain grace window only
                     let polled = self.poll_round(
                         &mut ctx,
                         verifier.as_ref(),
@@ -1223,7 +1223,7 @@ impl ClusterServer {
         for w in &mut self.workers {
             w.in_flight.clear();
         }
-        let start = Instant::now();
+        let start = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) wall telemetry + Wall-mode pacing base; Virtual decode ignores it
         let pace = self.cfg.time_scale;
         let live: Vec<usize> = (0..self.workers.len())
             .filter(|&wi| self.workers[wi].alive)
@@ -1311,14 +1311,14 @@ impl ClusterServer {
             DeadlineMode::Virtual => {
                 dispatched = schedule.len();
                 let hard = start + self.cfg.collect_timeout;
-                let mut last_progress = Instant::now();
-                while rc.outstanding > 0 && Instant::now() < hard {
+                let mut last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall hang-guard; Virtual absorb uses schedule order
+                while rc.outstanding > 0 && Instant::now() < hard { // lint:allow(no-wallclock-in-deterministic-paths) collect hang-guard only
                     let progressed =
                         self.rateless_poll(&mut rc, plan, verifier.as_ref(), &budgets);
                     let sent = self.redo_flagged(&mut rc);
                     retries += sent;
                     if progressed || sent > 0 {
-                        last_progress = Instant::now();
+                        last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall clock; drives recovery, not decode order
                     } else if self.live_workers() == 0 {
                         break; // nothing outstanding can ever arrive
                     } else if last_progress.elapsed() >= self.cfg.stall_timeout {
@@ -1327,7 +1327,7 @@ impl ClusterServer {
                         // missing packet for regeneration (bounded by the
                         // per-packet retry budget; duplicates absorb once)
                         rc.flag_all_missing();
-                        last_progress = Instant::now();
+                        last_progress = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) stall clock; drives recovery, not decode order
                     }
                 }
                 // stop the streams and drop the worker-side contexts
@@ -1361,7 +1361,7 @@ impl ClusterServer {
             }
             DeadlineMode::Wall => {
                 let deadline = start + Duration::from_secs_f64(t_max * pace);
-                while !st.is_complete() && Instant::now() < deadline {
+                while !st.is_complete() && Instant::now() < deadline { // lint:allow(no-wallclock-in-deterministic-paths) Wall mode is wall-clock by definition
                     let progressed =
                         self.rateless_poll(&mut rc, plan, verifier.as_ref(), &budgets);
                     // absorb whatever this round delivered, in stream order
@@ -1399,8 +1399,8 @@ impl ClusterServer {
                 self.drain_rateless(request_id);
                 // grace drain: count (and discard) in-flight stragglers so
                 // they do not pollute the next request's collection
-                let grace = Instant::now() + self.cfg.late_drain;
-                while Instant::now() < grace {
+                let grace = Instant::now() + self.cfg.late_drain; // lint:allow(no-wallclock-in-deterministic-paths) late-drain grace window only
+                while Instant::now() < grace { // lint:allow(no-wallclock-in-deterministic-paths) late-drain grace window only
                     let mut got = false;
                     for wi in 0..self.workers.len() {
                         if !self.workers[wi].alive {
@@ -1821,7 +1821,12 @@ impl ClusterServer {
         if let Some(v) = verifier {
             let pkt = plan.packet(rc.request_id, r.stream, r.seq);
             let JobRecipe::Stacked { terms } = &pkt.recipe else {
-                unreachable!("rateless packets are always stacked")
+                // every rateless coder emits stacked recipes today; if
+                // that ever changes, treat the packet as corrupt and
+                // regenerate it rather than panicking the serve loop
+                rc.corrupt += 1;
+                rc.slots[s][k].redo_now = true;
+                return true;
             };
             if !v.check(terms, &r.payload) {
                 rc.verify_failures += 1;

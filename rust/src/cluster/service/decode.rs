@@ -228,7 +228,7 @@ impl DecodePool {
                         }
                     }
                 })
-                .expect("spawn decode shard");
+                .expect("spawn decode shard"); // lint:allow(no-panic-in-server-loops) one-time startup spawn; thread exhaustion here is fatal by design
             txs.push(tx);
             handles.push(handle);
         }

@@ -38,7 +38,7 @@
 //! oldest entry is the damaged one). Lane quarantine is out of scope
 //! here — the plane process owns fleet membership policy.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -123,7 +123,8 @@ pub struct FleetEngine {
     rotor: usize,
     active: Vec<Active>,
     sched: DrrScheduler,
-    open: HashSet<u64>,
+    // BTreeSet: iteration-order determinism per no-unordered-iteration
+    open: BTreeSet<u64>,
     pool: DecodePool,
     next_lane_id: u64,
     next_rid: u64,
@@ -139,7 +140,7 @@ impl FleetEngine {
             rotor: 0,
             active: Vec::new(),
             sched,
-            open: HashSet::new(),
+            open: BTreeSet::new(),
             pool,
             next_lane_id: 0,
             next_rid: 0,
@@ -303,7 +304,7 @@ impl FleetEngine {
             outstanding: 0,
             counters: RequestCounters::default(),
             verifier,
-            start: Instant::now(),
+            start: Instant::now(), // lint:allow(no-wallclock-in-deterministic-paths) wall_ms telemetry only; decode order never reads it
         });
         Ok(())
     }
@@ -426,7 +427,7 @@ impl FleetEngine {
             if !self.lanes.iter().any(|l| l.alive) {
                 return;
             }
-            let ready: HashSet<u64> = self
+            let ready: BTreeSet<u64> = self
                 .active
                 .iter()
                 .filter(|a| !a.pending.is_empty())
@@ -435,26 +436,41 @@ impl FleetEngine {
             let Some(session) = self.sched.next(|s| ready.contains(&s)) else {
                 return;
             };
-            // oldest request of the winning session (FIFO per tenant)
-            let ai = self
+            // oldest request of the winning session (FIFO per tenant).
+            // `ready` was derived from the same `active` list the
+            // scheduler filtered on, so these lookups succeed; if that
+            // invariant ever breaks, return the scheduler credit and
+            // stop offering instead of panicking the serve loop.
+            let Some(ai) = self
                 .active
                 .iter()
                 .enumerate()
                 .filter(|(_, a)| a.session == session && !a.pending.is_empty())
                 .min_by_key(|(_, a)| a.rid)
                 .map(|(i, _)| i)
-                .expect("scheduler offered a session with ready work");
-            let slot = self.active[ai].pending.pop_front().expect("ready slot");
+            else {
+                self.sched.note_done(session);
+                return;
+            };
+            let Some(slot) = self.active[ai].pending.pop_front() else {
+                self.sched.note_done(session);
+                return;
+            };
             let attempt = self.active[ai].attempts[slot as usize];
-            // least-outstanding live lane, ties to the lowest id
-            let li = self
+            // least-outstanding live lane, ties to the lowest id; the
+            // fleet was non-empty above, but re-check rather than panic
+            let Some(li) = self
                 .lanes
                 .iter()
                 .enumerate()
                 .filter(|(_, l)| l.alive)
                 .min_by_key(|(_, l)| (l.inflight.len(), l.id))
                 .map(|(i, _)| i)
-                .expect("a live lane exists");
+            else {
+                self.active[ai].pending.push_front(slot);
+                self.sched.note_done(session);
+                return;
+            };
             let prep = {
                 let act = &self.active[ai];
                 let body = Arc::clone(&act.bodies[slot as usize]);

@@ -134,7 +134,7 @@ impl ServePlane {
 
     fn accept_one(&mut self, transport: &mut dyn Transport) {
         if let Ok(Some(conn)) = transport.accept_timeout(POLL_SLICE) {
-            self.handshakes.push((conn, Instant::now()));
+            self.handshakes.push((conn, Instant::now())); // lint:allow(no-wallclock-in-deterministic-paths) handshake grace timer only; decode never reads it
         }
     }
 

@@ -13,7 +13,7 @@
 //!   wall time of the computation: straggling is whatever the host and
 //!   transport actually do.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -125,12 +125,19 @@ impl RatelessCtx {
     /// Derive packet `(stream, seq)` and materialize its job factors —
     /// the worker-side mirror of [`crate::coordinator::build_job_matrices`],
     /// driven by the shipped factor table instead of a `Partitioning`.
-    fn job_matrices(&self, stream: u64, seq: u32) -> (Matrix, Matrix) {
+    fn job_matrices(&self, stream: u64, seq: u32) -> Result<(Matrix, Matrix)> {
         let pkt = self.coder.packet(self.request_id, stream, seq);
         let JobRecipe::Stacked { terms } = &pkt.recipe else {
-            unreachable!("rateless packets are always stacked");
+            // every rateless coder emits stacked recipes today; if that
+            // ever changes, fail this stream instead of the process
+            anyhow::bail!("rateless packet ({stream}, {seq}) is not a stacked recipe");
         };
-        stack_from_factors(terms, &self.factors, &self.a_blocks, &self.b_blocks)
+        Ok(stack_from_factors(
+            terms,
+            &self.factors,
+            &self.a_blocks,
+            &self.b_blocks,
+        ))
     }
 }
 
@@ -202,7 +209,7 @@ pub fn run_worker<E: ExecEngine>(
     let mut sink_closed = false;
     // Rateless job contexts, kept past their budgeted stream so `Redo`
     // can regenerate any packet until the coordinator drains the request.
-    let mut ratelesses: HashMap<u64, RatelessCtx> = HashMap::new();
+    let mut ratelesses: BTreeMap<u64, RatelessCtx> = BTreeMap::new();
     // Frames that arrived while a rateless stream was polling for
     // control messages; replayed through the main loop in order.
     let mut pending: VecDeque<Msg> = VecDeque::new();
@@ -222,7 +229,7 @@ pub fn run_worker<E: ExecEngine>(
                 if sink_closed {
                     continue;
                 }
-                let t0 = Instant::now();
+                let t0 = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) measured fallback + pacing; Virtual runs ship injected delays
                 let payload = engine.matmul(&job.wa, &job.wb)?;
                 let elapsed = t0.elapsed().as_secs_f64();
                 // completion time and pacing, per the layering above
@@ -368,8 +375,8 @@ fn stream_rateless<E: ExecEngine>(
         if *sink_closed {
             continue;
         }
-        let t0 = Instant::now();
-        let (wa, wb) = ctx.job_matrices(ctx.stream, seq);
+        let t0 = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) compute_secs telemetry only; decode order never reads it
+        let (wa, wb) = ctx.job_matrices(ctx.stream, seq)?;
         let payload = engine.matmul(&wa, &wb)?;
         let elapsed = t0.elapsed().as_secs_f64();
         // per-packet completion time, cumulative across the stream, with
@@ -432,8 +439,8 @@ fn serve_redo<E: ExecEngine>(
     if *sink_closed {
         return Ok(());
     }
-    let t0 = Instant::now();
-    let (wa, wb) = ctx.job_matrices(stream, seq);
+    let t0 = Instant::now(); // lint:allow(no-wallclock-in-deterministic-paths) compute_secs telemetry only; decode order never reads it
+    let (wa, wb) = ctx.job_matrices(stream, seq)?;
     let payload = engine.matmul(&wa, &wb)?;
     let elapsed = t0.elapsed().as_secs_f64();
     // report the original injected arrival time when this is our own
@@ -486,7 +493,7 @@ pub fn spawn_loopback_workers(
                         .map_err(|e| anyhow::anyhow!("{}: dial failed: {e}", cfg.name))?;
                     run_worker(&mut conn, &NativeEngine::serial(), &cfg)
                 })
-                .expect("spawn cluster worker thread")
+                .expect("spawn cluster worker thread") // lint:allow(no-panic-in-server-loops) one-time startup spawn; thread exhaustion here is fatal by design
         })
         .collect()
 }
@@ -512,7 +519,7 @@ pub fn spawn_chaos_loopback_worker(
             let mut conn = super::chaos::ChaosConn::new(Box::new(conn), &plan);
             run_worker(&mut conn, &NativeEngine::serial(), &cfg)
         })
-        .expect("spawn chaos worker thread")
+        .expect("spawn chaos worker thread") // lint:allow(no-panic-in-server-loops) one-time startup spawn; thread exhaustion here is fatal by design
 }
 
 #[cfg(test)]

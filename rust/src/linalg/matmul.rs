@@ -294,7 +294,8 @@ mod tests {
         let a = Matrix::randn(200, 150, 0.0, 1.0, &mut rng);
         let b = Matrix::randn(150, 180, 0.0, 1.0, &mut rng);
         let serial = matmul_with(&a, &b, MatmulOpts { threads: 1, ..Default::default() });
-        let par = matmul_with(&a, &b, MatmulOpts { threads: 4, naive_below: 0, ..Default::default() });
+        let opts = MatmulOpts { threads: 4, naive_below: 0, ..Default::default() };
+        let par = matmul_with(&a, &b, opts);
         assert!(serial.allclose(&par, 1e-10));
     }
 

@@ -196,7 +196,14 @@ mod tests {
     #[test]
     fn cnn_learns_synthetic_textures() {
         let mut rng = Pcg64::seed_from(1);
-        let arch = CnnArch { side: 12, in_channels: 3, conv_channels: 4, dense1: 32, dense2: 16, classes: 10 };
+        let arch = CnnArch {
+            side: 12,
+            in_channels: 3,
+            conv_channels: 4,
+            dense1: 32,
+            dense2: 16,
+            classes: 10,
+        };
         let train = synthetic_cifar(200, 12, 3, &mut rng);
         let test = synthetic_cifar(80, 12, 5, &mut rng);
         let mut cnn = Cnn::init(arch, &mut rng);
