@@ -20,7 +20,7 @@
 //! session config ⇒ bit-identical `Outcome` across backends.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -130,6 +130,30 @@ pub trait Backend {
     /// backends). Default: no-op.
     fn maintain(&mut self) -> ApiResult<Maintenance> {
         Ok(Maintenance::default())
+    }
+
+    /// Push fitted per-worker scale offsets `(registry id, scale)` down
+    /// to the execution plane — 1.0 = fleet mean, higher = slower —
+    /// where heterogeneity-aware dispatch
+    /// ([`crate::cluster::ClusterConfig::hetero_assign`]) plans unequal
+    /// work from them. Adaptive sessions push on their `Replanner`
+    /// cadence. Default: no-op — backends without a worker fleet (and
+    /// remote clients, whose plane keeps its own per-lane estimates)
+    /// ignore it.
+    fn apply_worker_scales(&mut self, _scales: &[(u64, f64)]) -> ApiResult<()> {
+        Ok(())
+    }
+
+    /// Install per-worker *injected-delay* multipliers `(registry id,
+    /// multiplier)` on the execution plane — the deterministic
+    /// heterogeneity-injection hook for evaluation and chaos drills
+    /// (see [`crate::cluster::ClusterServer::set_straggle_injection`]).
+    /// A worker holding multiplier `m` completes injected-delay jobs as
+    /// if `m`× slower. Inert for requests without injected delays.
+    /// Default: no-op — backends without a paced worker fleet ignore
+    /// it.
+    fn inject_straggle(&mut self, _scales: &[(u64, f64)]) -> ApiResult<()> {
+        Ok(())
     }
 
     /// Orderly teardown. Default: no-op.
@@ -832,6 +856,16 @@ impl Backend for PooledBackend {
         self.core.maintain()
     }
 
+    fn apply_worker_scales(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        self.core.server.set_worker_scales(scales);
+        Ok(())
+    }
+
+    fn inject_straggle(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        self.core.server.set_straggle_injection(scales);
+        Ok(())
+    }
+
     fn shutdown(&mut self) -> ApiResult<()> {
         self.core.shutdown()
     }
@@ -989,6 +1023,29 @@ impl Backend for ClusterBackend {
             ClusterInner::Local(core) => core.maintain(),
             // no registry view from the client side of the plane
             ClusterInner::Remote(_) => Ok(Maintenance::default()),
+        }
+    }
+
+    fn apply_worker_scales(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        match &mut self.inner {
+            ClusterInner::Local(core) => {
+                core.server.set_worker_scales(scales);
+                Ok(())
+            }
+            // the plane runs its own per-lane estimates; a tenant's
+            // client-side fit does not override fleet-wide accounting
+            ClusterInner::Remote(_) => Ok(()),
+        }
+    }
+
+    fn inject_straggle(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        match &mut self.inner {
+            ClusterInner::Local(core) => {
+                core.server.set_straggle_injection(scales);
+                Ok(())
+            }
+            // one tenant cannot slow a shared plane's fleet
+            ClusterInner::Remote(_) => Ok(()),
         }
     }
 
@@ -1294,5 +1351,109 @@ fn reject_error(retry_after: f64, reason: String) -> UepmmError {
     UepmmError::Rejected {
         retry_after_ms: (retry_after * 1000.0).max(0.0) as u64,
         reason,
+    }
+}
+
+// ==================================================== shared backend
+
+/// A cloneable handle sharing one backend between several
+/// [`super::Session`]s.
+///
+/// A session is bound to one plan (partitioning, code, workers), but a
+/// DNN training loop multiplies several distinct shapes per step — one
+/// session per shape — and wants all of them riding the *same* warm
+/// worker fleet, with straggle telemetry and fitted scales accumulating
+/// across shapes instead of resetting per session. `SharedBackend` wraps
+/// any backend in a reference-counted handle implementing [`Backend`]
+/// by delegation, so each session holds a clone.
+///
+/// Teardown is explicit and single: [`Backend::shutdown`] on a *handle*
+/// is a no-op (a session consuming its clone must not kill the fleet
+/// under its siblings); call [`SharedBackend::shutdown_inner`] once
+/// when the whole training run ends.
+pub struct SharedBackend {
+    name: &'static str,
+    caps: Capabilities,
+    inner: Arc<Mutex<Box<dyn Backend>>>,
+}
+
+impl Clone for SharedBackend {
+    fn clone(&self) -> SharedBackend {
+        SharedBackend {
+            name: self.name,
+            caps: self.caps,
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl std::fmt::Debug for SharedBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedBackend").field("name", &self.name).finish()
+    }
+}
+
+impl SharedBackend {
+    pub fn new(backend: impl Backend + 'static) -> SharedBackend {
+        let name = backend.name();
+        let caps = backend.capabilities();
+        SharedBackend { name, caps, inner: Arc::new(Mutex::new(Box::new(backend))) }
+    }
+
+    /// Delegation guard; a poisoned lock (a sibling session panicked
+    /// mid-call) yields the inner state anyway — backends keep their
+    /// own invariants and the alternative is deadlocking teardown.
+    fn guard(&self) -> std::sync::MutexGuard<'_, Box<dyn Backend>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Tear down the shared backend itself (graceful worker shutdown on
+    /// cluster backends). Call once, after every session sharing the
+    /// handle is done.
+    pub fn shutdown_inner(&self) -> ApiResult<()> {
+        self.guard().shutdown()
+    }
+}
+
+impl Backend for SharedBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.caps
+    }
+
+    fn submit(&mut self, prep: PreparedRequest) -> ApiResult<()> {
+        self.guard().submit(prep)
+    }
+
+    fn poll(&mut self, id: u64) -> ApiResult<PollState> {
+        self.guard().poll(id)
+    }
+
+    fn cancel(&mut self, id: u64) -> ApiResult<Option<RunReport>> {
+        self.guard().cancel(id)
+    }
+
+    fn maintain(&mut self) -> ApiResult<Maintenance> {
+        self.guard().maintain()
+    }
+
+    fn apply_worker_scales(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        self.guard().apply_worker_scales(scales)
+    }
+
+    fn inject_straggle(&mut self, scales: &[(u64, f64)]) -> ApiResult<()> {
+        self.guard().inject_straggle(scales)
+    }
+
+    fn shutdown(&mut self) -> ApiResult<()> {
+        // a handle going away must not kill the fleet under sibling
+        // sessions; see the type docs
+        Ok(())
     }
 }

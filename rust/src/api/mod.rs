@@ -120,7 +120,7 @@ pub use adapt::{
 };
 pub use backend::{
     Backend, Capabilities, ClusterBackend, InProcessBackend, Maintenance,
-    PollState, PooledBackend,
+    PollState, PooledBackend, SharedBackend,
 };
 pub use error::{ApiResult, UepmmError};
 pub use progress::{Progress, ProgressEvent};

@@ -753,6 +753,17 @@ impl Session {
             }
         };
         self.maybe_replan(&req, &mut cm, shared_norms);
+        if replan_due {
+            // re-assignment on the replanner cadence: each time the
+            // cadence fires with a fitted model, the fresh per-worker
+            // scale offsets go down to the backend, where
+            // `ClusterConfig::hetero_assign` plans the next request's
+            // unequal slot→worker map from them (a no-op elsewhere)
+            let scales = self.worker_scales();
+            if !scales.is_empty() {
+                self.backend.apply_worker_scales(&scales)?;
+            }
+        }
         let score = req.score.unwrap_or(self.score);
         let score_ref = if score {
             // one pass over the sub-products serves both references: the

@@ -43,15 +43,15 @@ use anyhow::Result;
 
 use crate::coding::{CodeSpec, DecodeState, JobRecipe, Packet, UnknownSpace};
 use crate::coordinator::{
-    assemble_outcome, build_job_matrices, score_outcome, EncodedA, Outcome, Plan,
-    RatelessPlan, RatelessVerifier, Verifier,
+    assemble_outcome, build_job_matrices, score_outcome, Assignment, EncodedA,
+    Outcome, Plan, RatelessPlan, RatelessVerifier, Verifier,
 };
 use crate::latency::LatencyModel;
 use crate::linalg::{matmul, Matrix};
 use crate::partition::{ClassMap, Partitioning};
 use crate::rng::Pcg64;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use super::cache::{CacheKey, CacheStats, EncodedBlockCache};
 use super::transport::{Connection, Transport};
@@ -124,6 +124,20 @@ pub struct ClusterConfig {
     /// [`ClusterConfig::max_job_retries`] per slot, so a truly dead slot
     /// is eventually written off rather than respun forever.
     pub stall_timeout: Duration,
+    /// Heterogeneity-aware dispatch: plan each request's slot→worker
+    /// map up front with [`crate::coordinator::Assignment`] — slower
+    /// workers get fewer and less-critical (higher-window) slots —
+    /// instead of least-outstanding. The scale map comes from
+    /// client-pushed fitted offsets ([`ClusterServer::set_worker_scales`],
+    /// re-pushed on the session's `Replanner` cadence) with the
+    /// per-worker straggle EWMA as fallback; when neither source has
+    /// data the dispatch silently stays least-outstanding, and a plan
+    /// naming a dead worker fails over per slot. `Virtual`-mode decode
+    /// outcomes are mapping-independent (results are absorbed in
+    /// `(delay, slot)` order), so flipping this only moves *which
+    /// worker* computes a slot — wall-clock under real heterogeneity —
+    /// never a decoded value.
+    pub hetero_assign: bool,
 }
 
 impl Default for ClusterConfig {
@@ -141,6 +155,7 @@ impl Default for ClusterConfig {
             max_verify_failures: 3,
             verify_seed: 0xf7e1_5eed,
             stall_timeout: Duration::from_secs(5),
+            hetero_assign: false,
         }
     }
 }
@@ -506,6 +521,15 @@ pub struct ClusterServer {
     /// Rotating start index for [`Self::poll_round`]: advanced every
     /// tick so no worker's inbox is systematically drained last.
     poll_rotor: usize,
+    /// Client-pushed fitted per-worker scale offsets (1.0 = fleet mean,
+    /// higher = slower) — the primary source for
+    /// [`ClusterConfig::hetero_assign`] planning; see
+    /// [`Self::set_worker_scales`].
+    fitted_scales: BTreeMap<u64, f64>,
+    /// Per-worker multipliers applied to *injected* slot delays at
+    /// dispatch time (evaluation/chaos hook); see
+    /// [`Self::set_straggle_injection`].
+    straggle_injection: BTreeMap<u64, f64>,
 }
 
 impl ClusterServer {
@@ -519,7 +543,47 @@ impl ClusterServer {
             next_worker_id: 1,
             next_nonce: 1,
             poll_rotor: 0,
+            fitted_scales: BTreeMap::new(),
+            straggle_injection: BTreeMap::new(),
         }
+    }
+
+    /// Install client-fitted per-worker scale offsets (1.0 = fleet
+    /// mean, higher = slower), keyed by registry id. Replaces the
+    /// previous map wholesale — adaptive sessions re-push on their
+    /// `Replanner` cadence, so a worker dropped from the fit falls back
+    /// to its straggle EWMA. Non-finite and non-positive entries are
+    /// dropped. A no-op for dispatch unless
+    /// [`ClusterConfig::hetero_assign`] is set.
+    pub fn set_worker_scales(&mut self, scales: &[(u64, f64)]) {
+        self.fitted_scales = scales
+            .iter()
+            .copied()
+            .filter(|&(_, s)| s.is_finite() && s > 0.0)
+            .collect();
+    }
+
+    /// The fitted scale map currently installed (id-ordered).
+    pub fn worker_scales(&self) -> Vec<(u64, f64)> {
+        self.fitted_scales.iter().map(|(&id, &s)| (id, s)).collect()
+    }
+
+    /// Install per-worker *injected-delay* multipliers, keyed by
+    /// registry id (deterministic heterogeneity injection for
+    /// evaluation and chaos drills). A worker holding multiplier `m`
+    /// completes an injected-delay job as if it were `m`× slower: the
+    /// slot's base delay is multiplied at dispatch, so worker pacing,
+    /// the reported delay, virtual-time decode, and the straggle EWMA
+    /// all see the scaled value. Workers absent from the map run at
+    /// 1.0. Replaces the previous map wholesale; non-finite and
+    /// non-positive entries are dropped. Inert for requests without
+    /// injected delays.
+    pub fn set_straggle_injection(&mut self, scales: &[(u64, f64)]) {
+        self.straggle_injection = scales
+            .iter()
+            .copied()
+            .filter(|&(_, s)| s.is_finite() && s > 0.0)
+            .collect();
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -980,11 +1044,41 @@ impl ClusterServer {
         let mut dispatched = 0usize;
         let mut retries = 0usize;
 
-        // ---- dispatch: least-outstanding with failover -------------------
-        for slot in 0..n {
-            let msg = job_msg(request_id, slot as u32, 0, &jobs[slot], delays, t_max, pace);
-            if self.dispatch_one(&msg, slot as u32, &mut ctx)? {
-                attempts[slot] = 1;
+        // ---- dispatch ----------------------------------------------------
+        // Heterogeneity-aware when configured and a scale source has
+        // data (fitted offsets pushed by the client, else the straggle
+        // EWMA): plan the whole slot→worker map up front, slower
+        // workers getting fewer and less-critical slots. Falls back to
+        // least-outstanding with failover otherwise — and per slot
+        // whenever a planned worker is dead.
+        let plan = if self.cfg.hetero_assign {
+            self.assignment_scales().and_then(|scales| {
+                let windows: Vec<usize> =
+                    packets.iter().map(|p| p.window).collect();
+                Assignment::plan(&windows, &scales)
+            })
+        } else {
+            None
+        };
+        let order: Vec<(u32, Option<u64>)> = match &plan {
+            Some(a) => {
+                a.dispatch_order().iter().map(|&(s, w)| (s, Some(w))).collect()
+            }
+            None => (0..n as u32).map(|s| (s, None)).collect(),
+        };
+        for (slot, target) in order {
+            let sent = self.dispatch_job(
+                request_id,
+                slot,
+                0,
+                &jobs[slot as usize],
+                delays,
+                t_max,
+                target,
+                &mut ctx,
+            )?;
+            if sent {
+                attempts[slot as usize] = 1;
                 dispatched += 1;
                 ctx.outstanding += 1;
             } else {
@@ -1498,22 +1592,101 @@ impl ClusterServer {
         best
     }
 
-    /// Hand one job to the best live worker, failing over on send
-    /// errors (the failed worker is marked dead and its in-flight slots
-    /// are requeued). Returns `false` when no live worker could take
-    /// the job; `Err` only for a job no worker can ever accept (its
-    /// payload does not fit the wire format).
-    fn dispatch_one(
+    /// The scale map [`ClusterConfig::hetero_assign`] plans on, covering
+    /// every live worker: client-pushed fitted offsets win (workers the
+    /// fit does not cover run at 1.0 = fleet mean); otherwise the
+    /// per-worker straggle EWMA, normalized by the live fleet's mean so
+    /// it lands in the same 1.0-centered units. `None` when neither
+    /// source has any data — dispatch then stays least-outstanding.
+    fn assignment_scales(&self) -> Option<Vec<(u64, f64)>> {
+        let live: Vec<&WorkerSlot> =
+            self.workers.iter().filter(|w| w.alive).collect();
+        if live.is_empty() {
+            return None;
+        }
+        if !self.fitted_scales.is_empty() {
+            return Some(
+                live.iter()
+                    .map(|w| {
+                        (w.id, self.fitted_scales.get(&w.id).copied().unwrap_or(1.0))
+                    })
+                    .collect(),
+            );
+        }
+        let scores: Vec<f64> = live
+            .iter()
+            .filter_map(|w| w.straggle)
+            .filter(|s| s.is_finite() && *s > 0.0)
+            .collect();
+        let mean = scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+        if !(mean > 0.0) {
+            return None;
+        }
+        Some(
+            live.iter()
+                .map(|w| {
+                    let s = w
+                        .straggle
+                        .filter(|s| s.is_finite() && *s > 0.0)
+                        .map_or(1.0, |s| s / mean);
+                    (w.id, s)
+                })
+                .collect(),
+        )
+    }
+
+    /// Hand one (re-)dispatch of `slot` to a worker. When `target`
+    /// names a live worker (a heterogeneity plan from
+    /// [`Assignment::plan`]) the job goes there; a dead, quarantined,
+    /// or vanished target falls through to least-outstanding (the rest
+    /// of the plan still stands — only the orphaned slots re-spread).
+    /// The worker is chosen *before* the wire message is built so the
+    /// holder's [`Self::set_straggle_injection`] multiplier can scale
+    /// the slot's injected delay. Send errors fail over: the failed
+    /// worker is marked dead, its in-flight slots requeue, and the pick
+    /// repeats. Returns `false` when no live worker could take the job;
+    /// `Err` only for a job no worker can ever accept (its payload does
+    /// not fit the wire format).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_job(
         &mut self,
-        msg: &Msg,
+        request_id: u64,
         slot: u32,
+        attempt: u32,
+        job: &(Arc<Matrix>, Arc<Matrix>),
+        delays: Option<&[f64]>,
+        t_max: f64,
+        target: Option<u64>,
         ctx: &mut Collect,
     ) -> Result<bool> {
+        let mut target = target;
         loop {
-            let Some(wi) = self.pick_worker() else {
-                return Ok(false);
+            let wi = match target
+                .take()
+                .and_then(|id| {
+                    self.workers.iter().position(|w| w.alive && w.id == id)
+                })
+                .or_else(|| self.pick_worker())
+            {
+                Some(wi) => wi,
+                None => return Ok(false),
             };
-            match self.workers[wi].conn.send(msg) {
+            let injection = self
+                .straggle_injection
+                .get(&self.workers[wi].id)
+                .copied()
+                .unwrap_or(1.0);
+            let msg = job_msg(
+                request_id,
+                slot,
+                attempt,
+                job,
+                delays,
+                t_max,
+                self.cfg.time_scale,
+                injection,
+            );
+            match self.workers[wi].conn.send(&msg) {
                 Ok(()) => {
                     self.workers[wi].in_flight.push(slot);
                     return Ok(true);
@@ -1550,16 +1723,16 @@ impl ClusterServer {
                 ctx.outstanding -= 1;
                 continue;
             }
-            let msg = job_msg(
+            if self.dispatch_job(
                 ctx.request_id,
                 slot,
                 attempts[s],
                 &jobs[s],
                 delays,
                 t_max,
-                self.cfg.time_scale,
-            );
-            if self.dispatch_one(&msg, slot, ctx)? {
+                None,
+                ctx,
+            )? {
                 attempts[s] += 1;
                 sent += 1;
             } else {
@@ -1980,6 +2153,10 @@ fn rateless_schedule(
 
 /// Build the wire message for one (re-)dispatch of `slot`. Payloads are
 /// `Arc` handles out of the job table, so this never copies a matrix.
+/// `injection` is the holding worker's straggle-injection multiplier
+/// (1.0 = unscaled) — applied to the slot's base injected delay so the
+/// scaled value flows through pacing, the reported delay, and decode.
+#[allow(clippy::too_many_arguments)]
 fn job_msg(
     request_id: u64,
     slot: u32,
@@ -1988,8 +2165,9 @@ fn job_msg(
     delays: Option<&[f64]>,
     t_max: f64,
     pace: f64,
+    injection: f64,
 ) -> Msg {
-    let injected = delays.map(|d| d[slot as usize]);
+    let injected = delays.map(|d| d[slot as usize] * injection);
     let sleep_secs = match injected {
         Some(d) if pace > 0.0 => d.min(t_max * SLEEP_CAP_FACTOR) * pace,
         _ => 0.0,

@@ -59,12 +59,20 @@ use super::ServiceConfig;
 /// enough that an idle plane does not spin.
 pub(crate) const POLL_SLICE: Duration = Duration::from_millis(1);
 
+/// Smoothing of the per-lane result-delay EWMA behind
+/// [`ServiceConfig::hetero_lanes`] (same factor as the cluster
+/// coordinator's per-worker straggle score).
+const LANE_EWMA_ALPHA: f64 = 0.2;
+
 /// One registered worker.
 struct Lane {
     id: u64,
     name: String,
     conn: Box<dyn Connection>,
     alive: bool,
+    /// EWMA of reported result delays (virtual units); `None` until the
+    /// first result. Feeds [`ServiceConfig::hetero_lanes`] weighting.
+    delay_ewma: Option<f64>,
     /// Outstanding job frames: `(engine rid, slot, attempt)`.
     inflight: Vec<(u64, u32, u32)>,
     jobs_done: u64,
@@ -165,6 +173,7 @@ impl FleetEngine {
             name: agent,
             conn,
             alive: true,
+            delay_ewma: None,
             inflight: Vec::new(),
             jobs_done: 0,
         });
@@ -364,6 +373,15 @@ impl FleetEngine {
                         };
                         lane.inflight.remove(pos);
                         lane.jobs_done += 1;
+                        if r.delay.is_finite() && r.delay >= 0.0 {
+                            lane.delay_ewma = Some(match lane.delay_ewma {
+                                None => r.delay,
+                                Some(e) => {
+                                    LANE_EWMA_ALPHA * r.delay
+                                        + (1.0 - LANE_EWMA_ALPHA) * e
+                                }
+                            });
+                        }
                         absorb_result(
                             &mut self.active,
                             &mut self.sched,
@@ -416,6 +434,39 @@ impl FleetEngine {
         }
     }
 
+    /// The [`ServiceConfig::hetero_lanes`] scale map: `(lane index,
+    /// scale)` over the live lanes, each lane's result-delay EWMA
+    /// normalized by the live mean (no history yet ⇒ 1.0 = mean).
+    /// `None` when the feature is off or no lane has history — the
+    /// dispatch then uses plain occupancy order.
+    fn lane_scales(&self) -> Option<Vec<(usize, f64)>> {
+        if !self.cfg.hetero_lanes {
+            return None;
+        }
+        let live: Vec<(usize, Option<f64>)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive)
+            .map(|(i, l)| {
+                (i, l.delay_ewma.filter(|d| d.is_finite() && *d > 0.0))
+            })
+            .collect();
+        let known: Vec<f64> = live.iter().filter_map(|&(_, d)| d).collect();
+        if known.is_empty() {
+            return None;
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        if !(mean > 0.0) {
+            return None;
+        }
+        Some(
+            live.into_iter()
+                .map(|(i, d)| (i, d.map_or(1.0, |d| d / mean)))
+                .collect(),
+        )
+    }
+
     /// Offer freed fleet capacity to the scheduler, one job per offer.
     fn dispatch(&mut self) {
         loop {
@@ -457,16 +508,32 @@ impl FleetEngine {
                 return;
             };
             let attempt = self.active[ai].attempts[slot as usize];
-            // least-outstanding live lane, ties to the lowest id; the
-            // fleet was non-empty above, but re-check rather than panic
-            let Some(li) = self
-                .lanes
-                .iter()
-                .enumerate()
-                .filter(|(_, l)| l.alive)
-                .min_by_key(|(_, l)| (l.inflight.len(), l.id))
-                .map(|(i, _)| i)
-            else {
+            // lane pick: least-outstanding (ties to the lowest id), or
+            // under `hetero_lanes` the lane minimizing
+            // `(inflight + 1) · scale` — identical until the per-lane
+            // delay EWMAs diverge. The fleet was non-empty above, but
+            // re-check rather than panic.
+            let picked = match self.lane_scales() {
+                Some(scales) => scales
+                    .iter()
+                    .min_by(|a, b| {
+                        let ka = (self.lanes[a.0].inflight.len() as f64 + 1.0)
+                            * a.1;
+                        let kb = (self.lanes[b.0].inflight.len() as f64 + 1.0)
+                            * b.1;
+                        ka.total_cmp(&kb)
+                            .then(self.lanes[a.0].id.cmp(&self.lanes[b.0].id))
+                    })
+                    .map(|&(i, scale)| (i, scale)),
+                None => self
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.alive)
+                    .min_by_key(|(_, l)| (l.inflight.len(), l.id))
+                    .map(|(i, _)| (i, 1.0)),
+            };
+            let Some((li, lane_scale)) = picked else {
                 self.active[ai].pending.push_front(slot);
                 self.sched.note_done(session);
                 return;
@@ -503,6 +570,13 @@ impl FleetEngine {
                 let act = &mut self.active[ai];
                 act.outstanding += 1;
                 act.counters.dispatched += 1;
+                // hetero credit weighting: a job parked on a
+                // slower-than-mean lane holds fleet capacity longer, so
+                // it costs the tenant extra DRR credit (⌈scale⌉ − 1)
+                if lane_scale > 1.0 {
+                    let extra = (lane_scale.ceil() as u32).saturating_sub(1);
+                    self.sched.charge_extra(session, extra);
+                }
             } else {
                 // the lane died taking this frame: put the slot back at
                 // the front (no retry charged — it never left), release

@@ -113,6 +113,15 @@ pub struct ServiceConfig {
     pub verify_seed: u64,
     /// Re-dispatches per slot after worker death or a rejected result.
     pub max_job_retries: u32,
+    /// Heterogeneity-aware lane weighting: pick dispatch lanes by
+    /// `(inflight + 1) · scale` — an EWMA of each lane's reported
+    /// result delays, normalized by the live-lane mean — instead of
+    /// raw occupancy, and charge the owning tenant extra DRR credit
+    /// when its job lands on a slower-than-mean lane (slow capacity is
+    /// not free capacity). Identical to occupancy-order until lanes
+    /// actually diverge, and never changes decoded outcomes (results
+    /// are absorbed in virtual-time order regardless of lane).
+    pub hetero_lanes: bool,
 }
 
 impl Default for ServiceConfig {
@@ -128,6 +137,7 @@ impl Default for ServiceConfig {
             verify: true,
             verify_seed: 0xf7e1_5eed,
             max_job_retries: 2,
+            hetero_lanes: false,
         }
     }
 }

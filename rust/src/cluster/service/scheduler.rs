@@ -112,6 +112,28 @@ impl DrrScheduler {
         None
     }
 
+    /// Heterogeneity credit weighting: after the engine places a
+    /// granted job on a lane, it charges the flow the lane's relative
+    /// cost *beyond* the one credit [`Self::next`] already consumed —
+    /// `extra = ⌈scale⌉ − 1` for a lane `scale`× slower than the fleet
+    /// mean. A slow lane holds fleet capacity longer, so occupying it
+    /// eats into the tenant's burst allowance instead of being priced
+    /// like fast capacity. Saturates at zero (the dispatch itself is
+    /// never revoked); fast and mean-speed lanes cost nothing extra.
+    /// Exhausting the deficit ends the flow's current visit — the
+    /// cursor moves on, so the zero deficit reads as "spent" rather
+    /// than "fresh visit, refill me".
+    pub fn charge_extra(&mut self, session: u64, extra: u32) {
+        let n = self.ring.len();
+        if let Some(pos) = self.ring.iter().position(|f| f.session == session) {
+            let f = &mut self.ring[pos];
+            f.deficit = f.deficit.saturating_sub(extra);
+            if extra > 0 && f.deficit == 0 && self.cursor == pos {
+                self.cursor = (self.cursor + 1) % n;
+            }
+        }
+    }
+
     /// One of `session`'s jobs settled (result absorbed, written off,
     /// or the holder died and the retry was re-counted by a fresh
     /// `next`).
@@ -180,6 +202,23 @@ mod tests {
         // the two banked credits plus a refill
         let order = drain(&mut s, &[1, 2], 6);
         assert_eq!(order, vec![1, 1, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn extra_credit_charge_shortens_the_visit() {
+        let mut s = DrrScheduler::new(3);
+        s.add_session(1, 100);
+        s.add_session(2, 100);
+        // session 1's first dispatch lands on a 3× lane: +2 extra
+        // credit spends its whole visit, so session 2 runs next even
+        // though 1 had two credits banked
+        assert_eq!(s.next(|_| true), Some(1));
+        s.charge_extra(1, 2);
+        let order = drain(&mut s, &[1, 2], 4);
+        assert_eq!(order, vec![2, 2, 2, 1]);
+        // zero extra (a fast lane) changes nothing
+        s.charge_extra(1, 0);
+        assert_eq!(s.next(|_| true), Some(1));
     }
 
     #[test]

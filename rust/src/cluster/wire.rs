@@ -1726,6 +1726,182 @@ mod tests {
         );
     }
 
+    /// Deepened fuzz over the v5 rateless and v6 service frames: random
+    /// byte patches inside the payload with the CRC trailer *re-sealed*,
+    /// so corruption reaches the structural parser (length prefixes,
+    /// counts, dims, enum tags) instead of stopping at `BadChecksum`.
+    /// The parser must never panic, and any frame it does accept must be
+    /// consumed exactly to its declared extent.
+    #[test]
+    fn resealed_structural_corruption_never_panics_v5_v6_parsers() {
+        use crate::util::prop::{gen, prop_check, PropConfig};
+        let frames: Vec<Vec<u8>> = all_messages()
+            .iter()
+            .filter(|m| {
+                matches!(
+                    m,
+                    Msg::RatelessJob(_)
+                        | Msg::RatelessResult(_)
+                        | Msg::Drain { .. }
+                        | Msg::Redo { .. }
+                        | Msg::OpenSession { .. }
+                        | Msg::Submit(_)
+                        | Msg::ProgressFrame(_)
+                        | Msg::ClientResult(_)
+                        | Msg::Reject { .. }
+                        | Msg::CloseSession { .. }
+                )
+            })
+            .map(|m| encode(m).unwrap())
+            .collect();
+        prop_check(
+            "v5/v6 parsers survive resealed structural corruption",
+            PropConfig { cases: 512, ..PropConfig::default() },
+            |rng, case| {
+                let frame = &frames[case % frames.len()];
+                let mut bytes = frame.clone();
+                let lo = HEADER_LEN;
+                let hi = bytes.len() - TRAILER_LEN;
+                if hi <= lo {
+                    return Ok(()); // no payload to corrupt
+                }
+                for _ in 0..gen::usize_in(rng, 1, 8) {
+                    let pos = gen::usize_in(rng, lo, hi - 1);
+                    bytes[pos] = (rng.next_u64() & 0xFF) as u8;
+                }
+                reseal(&mut bytes);
+                if bytes == *frame {
+                    return Ok(()); // patched back to itself
+                }
+                match decode_frame(&bytes) {
+                    Err(_) => Ok(()),
+                    // a structurally-valid reinterpretation is fine, but
+                    // it must account for every payload byte (the
+                    // trailing-bytes check) — a partial consume would let
+                    // an attacker smuggle bytes past the framing
+                    Ok((_, used)) if used == bytes.len() => Ok(()),
+                    Ok((_, used)) => Err(format!(
+                        "partial consume: {used} of {} bytes",
+                        bytes.len()
+                    )),
+                }
+            },
+        );
+    }
+
+    /// Stream-resync fuzz: in a stream of mixed v1–v6 frames, corrupt
+    /// one byte of one frame's payload/trailer. A reader that skips the
+    /// corrupt frame's reported extent ([`frame_len`] — valid because
+    /// the header itself still parses) must recover *every* other frame
+    /// bit-exactly, before and after the damage.
+    #[test]
+    fn corrupt_frame_in_a_stream_resyncs_to_every_later_frame() {
+        use crate::util::prop::{gen, prop_check, PropConfig};
+        let msgs = all_messages();
+        prop_check(
+            "stream resync after mid-stream payload corruption",
+            PropConfig { cases: 128, ..PropConfig::default() },
+            |rng, _case| {
+                let n = gen::usize_in(rng, 4, 8);
+                let picks: Vec<usize> =
+                    (0..n).map(|_| gen::usize_in(rng, 0, msgs.len() - 1)).collect();
+                let frames: Vec<Vec<u8>> =
+                    picks.iter().map(|&i| encode(&msgs[i]).unwrap()).collect();
+                let offsets: Vec<usize> = frames
+                    .iter()
+                    .scan(0usize, |at, f| {
+                        let o = *at;
+                        *at += f.len();
+                        Some(o)
+                    })
+                    .collect();
+                let mut stream: Vec<u8> = frames.concat();
+                // one byte anywhere past the victim's header: a single
+                // flip can never collide CRC-32, so the victim always
+                // trips BadChecksum while its header extent stays valid
+                let victim = gen::usize_in(rng, 0, n - 2);
+                let pos = offsets[victim]
+                    + gen::usize_in(rng, HEADER_LEN, frames[victim].len() - 1);
+                stream[pos] ^= 0x20;
+
+                let mut at = 0;
+                let mut got: Vec<Msg> = Vec::new();
+                let mut skipped = 0usize;
+                while at < stream.len() {
+                    match decode_frame(&stream[at..]) {
+                        Ok((m, used)) => {
+                            got.push(m);
+                            at += used;
+                        }
+                        Err(WireError::Truncated { .. }) => {
+                            return Err(format!("stream truncated at {at}"))
+                        }
+                        Err(_) => match frame_len(&stream[at..]) {
+                            Some(len) => {
+                                skipped += 1;
+                                at += len;
+                            }
+                            None => return Err(format!("lost framing at {at}")),
+                        },
+                    }
+                }
+                if skipped != 1 {
+                    return Err(format!("skipped {skipped} frames, expected 1"));
+                }
+                let expected: Vec<&Msg> = picks
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != victim)
+                    .map(|(_, &p)| &msgs[p])
+                    .collect();
+                if got.len() != expected.len() {
+                    return Err(format!(
+                        "recovered {} frames, expected {}",
+                        got.len(),
+                        expected.len()
+                    ));
+                }
+                for (g, w) in got.iter().zip(&expected) {
+                    if g != *w {
+                        return Err(format!("recovered frame diverged: {}", g.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Header damage (the magic itself) leaves no extent to skip —
+    /// [`frame_len`] returns `None` — so a reader must fall back to a
+    /// byte-by-byte scan for the next magic. The scan re-locks on the
+    /// next genuine frame: nothing inside the damaged heartbeat frame
+    /// can masquerade as one.
+    #[test]
+    fn header_damage_resyncs_by_scanning_to_the_next_magic() {
+        let mut stream = encode(&Msg::Heartbeat { nonce: 5 }).unwrap();
+        let tail = Msg::Welcome { worker_id: 77 };
+        let tail_at = stream.len();
+        stream.extend_from_slice(&encode(&tail).unwrap());
+        stream[0] = b'X'; // kill the first frame's magic
+
+        let mut at = 0;
+        let mut got = None;
+        while at < stream.len() {
+            match decode_frame(&stream[at..]) {
+                Ok((m, used)) => {
+                    assert!(got.is_none(), "decoded more than one frame");
+                    got = Some((at, m));
+                    at += used;
+                }
+                Err(WireError::Truncated { .. }) => break,
+                Err(_) => at += frame_len(&stream[at..]).unwrap_or(1),
+            }
+        }
+        let (lock_at, msg) = got.expect("scan never re-locked");
+        assert_eq!(lock_at, tail_at, "re-locked inside the damaged frame");
+        assert_eq!(msg, tail);
+    }
+
     #[test]
     fn matrix_payload_preserves_exact_bits() {
         let m = Matrix::from_vec(

@@ -1,0 +1,169 @@
+//! Heterogeneity-aware work assignment (ROADMAP item 4).
+//!
+//! The fleet estimator fits a per-worker **scale offset** (1.0 = fleet
+//! mean, higher = slower). Least-outstanding dispatch ignores those
+//! fits except as a tie-break, so a 3× straggler still receives ~1/w of
+//! the jobs and the deadline eats its share. [`Assignment`] plans the
+//! slot→worker map *up front* from the scales instead, with two goals:
+//!
+//! * **Unequal load** — worker job counts are (inversely) proportional
+//!   to their scales, via the d'Hondt highest-averages method: slots
+//!   are handed out one at a time, each to the worker minimizing
+//!   `(assigned + 1) · scale`. A worker twice as slow ends up with
+//!   about half the slots.
+//! * **Criticality order** — slots are handed out most-critical first
+//!   (ascending packet window, then slot index; window-major packet
+//!   generation makes this the natural slot order), so the fastest
+//!   workers take the most-protected windows and a straggler's slots
+//!   are the ones the Γ design already tolerates losing.
+//!
+//! The method is deterministic (ties break on the lower worker id) and
+//! degenerates exactly to least-outstanding round-robin when every
+//! scale is equal — turning [`ClusterConfig::hetero_assign`] on for a
+//! homogeneous fleet changes nothing, which the golden-trace tests pin.
+//!
+//! [`ClusterConfig::hetero_assign`]: crate::cluster::ClusterConfig::hetero_assign
+
+use std::collections::BTreeMap;
+
+/// A planned slot→worker map for one request's packet set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// `(slot, worker id)` in dispatch order: most-critical slot first,
+    /// each paired with the worker the divider method chose for it.
+    dispatch: Vec<(u32, u64)>,
+    /// Worker id per slot, indexed by slot.
+    slot_worker: Vec<u64>,
+    /// Planned job counts per worker id (present for every worker that
+    /// was offered to the planner, including those assigned nothing).
+    counts: BTreeMap<u64, usize>,
+}
+
+impl Assignment {
+    /// Plan `slot_windows.len()` slots over the given `(worker id,
+    /// scale)` fleet. `slot_windows[s]` is the packet window of slot
+    /// `s` (lower = more critical). Entries with a non-finite or
+    /// non-positive scale are dropped; returns `None` when no usable
+    /// worker remains (callers then fall back to least-outstanding).
+    pub fn plan(slot_windows: &[usize], scales: &[(u64, f64)]) -> Option<Assignment> {
+        // ids sorted ascending so equal-scale ties resolve to the lower
+        // id regardless of the caller's ordering
+        let mut fleet: Vec<(u64, f64)> = scales
+            .iter()
+            .copied()
+            .filter(|&(_, s)| s.is_finite() && s > 0.0)
+            .collect();
+        if fleet.is_empty() {
+            return None;
+        }
+        fleet.sort_by(|a, b| a.0.cmp(&b.0));
+        fleet.dedup_by_key(|e| e.0);
+
+        // slots in criticality order: window ascending, slot ascending
+        let mut order: Vec<u32> = (0..slot_windows.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            slot_windows[a as usize]
+                .cmp(&slot_windows[b as usize])
+                .then(a.cmp(&b))
+        });
+
+        let mut assigned = vec![0usize; fleet.len()];
+        let mut dispatch = Vec::with_capacity(order.len());
+        let mut slot_worker = vec![0u64; slot_windows.len()];
+        for slot in order {
+            // d'Hondt divider: next slot to the worker minimizing
+            // (assigned + 1) * scale; ties to the lower id (fleet is
+            // id-sorted, so strict `<` keeps the earlier winner)
+            let mut best = 0usize;
+            let mut best_key = (assigned[0] as f64 + 1.0) * fleet[0].1;
+            for (wi, &(_, scale)) in fleet.iter().enumerate().skip(1) {
+                let key = (assigned[wi] as f64 + 1.0) * scale;
+                if key.total_cmp(&best_key) == std::cmp::Ordering::Less {
+                    best = wi;
+                    best_key = key;
+                }
+            }
+            assigned[best] += 1;
+            dispatch.push((slot, fleet[best].0));
+            slot_worker[slot as usize] = fleet[best].0;
+        }
+        let counts = fleet
+            .iter()
+            .zip(&assigned)
+            .map(|(&(id, _), &n)| (id, n))
+            .collect();
+        Some(Assignment { dispatch, slot_worker, counts })
+    }
+
+    /// `(slot, worker id)` pairs in dispatch order (most-critical slot
+    /// first). The divider method interleaves workers by construction,
+    /// so sending in this order keeps every queue shallow.
+    pub fn dispatch_order(&self) -> &[(u32, u64)] {
+        &self.dispatch
+    }
+
+    /// Planned worker id for a slot.
+    pub fn worker_of(&self, slot: usize) -> u64 {
+        self.slot_worker[slot]
+    }
+
+    /// Planned job counts per worker id (id-ordered; workers planned
+    /// zero slots are present with a 0).
+    pub fn counts(&self) -> &BTreeMap<u64, usize> {
+        &self.counts
+    }
+
+    /// Number of slots planned.
+    pub fn len(&self) -> usize {
+        self.slot_worker.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot_worker.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conserves_and_orders_by_criticality() {
+        // EW-style windows: 2 slots of window 0, 3 of window 1, rest 2
+        let windows = [1, 0, 2, 0, 1, 2, 1, 2, 2];
+        let a = Assignment::plan(&windows, &[(7, 1.0), (3, 2.0)]).unwrap();
+        assert_eq!(a.len(), windows.len());
+        assert_eq!(a.counts().values().sum::<usize>(), windows.len());
+        // dispatch order is window-ascending
+        let seq: Vec<usize> =
+            a.dispatch_order().iter().map(|&(s, _)| windows[s as usize]).collect();
+        let mut sorted = seq.clone();
+        sorted.sort_unstable();
+        assert_eq!(seq, sorted);
+        // the first (most critical) slot goes to the faster worker
+        assert_eq!(a.dispatch_order()[0], (1, 7));
+        // 2× slower worker gets about half the slots: 6 vs 3
+        assert_eq!(a.counts()[&7], 6);
+        assert_eq!(a.counts()[&3], 3);
+    }
+
+    #[test]
+    fn equal_scales_round_robin_by_id() {
+        let windows = vec![0usize; 8];
+        let a = Assignment::plan(&windows, &[(2, 1.0), (1, 1.0), (3, 1.0)]).unwrap();
+        for (i, &(slot, w)) in a.dispatch_order().iter().enumerate() {
+            assert_eq!(slot as usize, i);
+            assert_eq!(w, [1, 2, 3][i % 3]);
+        }
+    }
+
+    #[test]
+    fn rejects_unusable_scales() {
+        assert!(Assignment::plan(&[0, 0], &[]).is_none());
+        assert!(Assignment::plan(&[0, 0], &[(1, 0.0), (2, f64::NAN)]).is_none());
+        // one usable worker takes everything
+        let a =
+            Assignment::plan(&[0, 0], &[(1, 0.0), (2, 0.5), (3, -1.0)]).unwrap();
+        assert_eq!(a.counts()[&2], 2);
+    }
+}

@@ -27,9 +27,11 @@
 //!   (dead workers, dropped connections) are survived rather than
 //!   simulated.
 
+mod assignment;
 mod plan;
 mod service;
 
+pub use assignment::Assignment;
 pub use plan::{
     build_job_a, build_job_b, build_job_matrices, EncodedA, Plan, RatelessPlan,
     RatelessVerifier, Verifier,

@@ -1,0 +1,388 @@
+//! `dnn-cluster`: the headline end-to-end scenario — an MLP trained
+//! with its back-prop matmuls served by a *real* cluster fleet
+//! ([`crate::api::ClusterBackend`] loopback workers) under drifting
+//! heterogeneous straggle, comparing wall-clock-to-accuracy of four
+//! arms:
+//!
+//! | arm | code | dispatch |
+//! |---|---|---|
+//! | `uncoded`    | one worker per sub-product  | least-outstanding |
+//! | `mds`        | dense MDS                   | least-outstanding |
+//! | `uep`        | EW-UEP (Table III Γ)        | least-outstanding |
+//! | `uep-hetero` | EW-UEP + adaptive replan    | [`Assignment`] plan |
+//!
+//! Half the fleet is `SLOW_FACTOR`× slower at any time, and *which*
+//! half drifts every [`Scenario::rounds_per_phase`] cluster rounds (via
+//! [`crate::api::Backend::inject_straggle`] — the deterministic
+//! injection hook). The hetero arm's adaptive session fits per-worker
+//! scale offsets from job telemetry and pushes them down on the
+//! replanner cadence, where [`ClusterConfig::hetero_assign`] plans the
+//! slot→worker map so the most-protected (low-window) slots land on the
+//! fastest workers.
+//!
+//! The cost metric is *virtual* time: each training matmul costs its
+//! slowest absorbed result's delay capped at `T_max`
+//! ([`crate::nn::DistributedMatmul::total_virtual_time`]), so the
+//! comparison is bit-reproducible across machines, thread counts, and
+//! wall-clock races. Asserted: the hetero arm reaches the target train
+//! loss in no more virtual time than both the uncoded and the plain UEP
+//! arms, every arm's preflight generous-deadline round fully recovers
+//! through the real fleet, and the hetero arm is bit-identical across a
+//! rerun (fresh fleet included).
+//!
+//! [`Assignment`]: crate::coordinator::Assignment
+//! [`ClusterConfig::hetero_assign`]: crate::cluster::ClusterConfig::hetero_assign
+
+use std::time::Duration;
+
+use crate::api::{ClusterBackend, ReplanPolicy, SharedBackend};
+use crate::cluster::{ClusterConfig, DeadlineMode, WorkerConfig};
+use crate::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use crate::data::synthetic_digits;
+use crate::latency::LatencyModel;
+use crate::linalg::{matmul, Matrix};
+use crate::nn::{
+    train_mlp, ClusterMatmulCfg, CodedMatmulCfg, DistributedMatmul,
+    MatmulStrategy, Mlp, StraggleDrift, TauSchedule, TrainConfig, TrainRecord,
+};
+use crate::partition::Paradigm;
+use crate::rng::Pcg64;
+use crate::util::csv::CsvTable;
+
+use super::common::ExpContext;
+
+/// Physical loopback workers (registry ids `1..=FLEET`).
+const FLEET: usize = 6;
+/// Injected-delay multiplier of the slow half of the fleet.
+const SLOW_FACTOR: f64 = 8.0;
+/// Running train loss an arm must reach (10-class softmax starts at
+/// `ln 10 ≈ 2.30`).
+const TARGET_LOSS: f64 = 1.8;
+
+struct Scenario {
+    n_train: usize,
+    n_test: usize,
+    epochs: usize,
+    max_iters_per_epoch: usize,
+    batch: usize,
+    lr: f64,
+    /// Hidden layer widths of the MLP (input 784, output 10).
+    hidden: Vec<usize>,
+    /// Coded jobs per request for the coded arms (uncoded always uses
+    /// one job per sub-product).
+    coded_jobs: usize,
+    t_max: f64,
+    eval_every: usize,
+    /// Cluster rounds served before the slow half of the fleet drifts.
+    rounds_per_phase: usize,
+    seed: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Arm {
+    Uncoded,
+    Mds,
+    Uep,
+    UepHetero,
+}
+
+impl Arm {
+    fn name(self) -> &'static str {
+        match self {
+            Arm::Uncoded => "uncoded",
+            Arm::Mds => "mds",
+            Arm::Uep => "uep",
+            Arm::UepHetero => "uep-hetero",
+        }
+    }
+}
+
+struct ArmResult {
+    rec: TrainRecord,
+    /// Preflight generous-deadline round recovered every sub-product
+    /// bit-exactly through the real fleet.
+    full_recovery: bool,
+}
+
+impl Scenario {
+    /// The coding/deadline setup of one arm. `blocks = 3` r×c (9
+    /// sub-products, 3 importance classes as in Table III).
+    fn coded(&self, arm: Arm) -> CodedMatmulCfg {
+        let (spec, workers) = match arm {
+            Arm::Uncoded => (CodeSpec::stacked(CodeKind::Uncoded), 9),
+            Arm::Mds => (CodeSpec::stacked(CodeKind::Mds), self.coded_jobs),
+            Arm::Uep | Arm::UepHetero => (
+                CodeSpec::new(
+                    CodeKind::EwUep(WindowPolynomial::paper_table3()),
+                    EncodeStyle::Stacked,
+                ),
+                self.coded_jobs,
+            ),
+        };
+        CodedMatmulCfg {
+            paradigm: Paradigm::RowTimesCol,
+            blocks: 3,
+            spec,
+            workers,
+            latency: LatencyModel::exp(0.5),
+            auto_omega: true,
+            t_max: self.t_max,
+            s_levels: 3,
+        }
+    }
+
+    /// The drifting 3-of-6 slow fleet: which half is slow flips every
+    /// phase.
+    fn drift(&self) -> StraggleDrift {
+        StraggleDrift {
+            rounds_per_phase: self.rounds_per_phase,
+            phases: vec![
+                (1..=FLEET as u64 / 2).map(|w| (w, SLOW_FACTOR)).collect(),
+                (FLEET as u64 / 2 + 1..=FLEET as u64)
+                    .map(|w| (w, SLOW_FACTOR))
+                    .collect(),
+            ],
+        }
+    }
+
+    fn replan_policy(&self) -> ReplanPolicy {
+        ReplanPolicy {
+            every: 8,
+            min_samples: 24,
+            sweeps: 2,
+            t_star: Some(self.t_max),
+            reband: false,
+        }
+    }
+}
+
+/// Spin up one arm's private loopback fleet behind a shared handle.
+fn make_backend(hetero: bool) -> anyhow::Result<SharedBackend> {
+    let backend = ClusterBackend::loopback(
+        FLEET,
+        ClusterConfig {
+            deadline: DeadlineMode::Virtual,
+            cache_capacity: 0,
+            hetero_assign: hetero,
+            ..ClusterConfig::default()
+        },
+        WorkerConfig { name: "dnn".to_string(), ..WorkerConfig::default() },
+        Duration::from_secs(10),
+    )?;
+    Ok(SharedBackend::new(backend))
+}
+
+/// Train one arm end to end on its own fresh fleet.
+fn run_arm(sc: &Scenario, arm: Arm) -> anyhow::Result<ArmResult> {
+    let hetero = arm == Arm::UepHetero;
+    let backend = make_backend(hetero)?;
+
+    // preflight: one generous-deadline, injection-free round must
+    // recover the exact product through the real fleet — the smoke
+    // gate's `full_recovery` column
+    let full_recovery = {
+        let mut probe = DistributedMatmul::new(
+            MatmulStrategy::Cluster(ClusterMatmulCfg {
+                coded: CodedMatmulCfg { t_max: 1e6, ..sc.coded(arm) },
+                backend: backend.clone(),
+                adaptive: None,
+                delay_seed: sc.seed ^ 0x9e37,
+                drift: None,
+            }),
+            Pcg64::with_stream(sc.seed, 30),
+        );
+        let mut rng = Pcg64::with_stream(sc.seed, 31);
+        let a = Matrix::randn(12, 10, 0.0, 1.0, &mut rng);
+        let b = Matrix::randn(10, 12, 0.0, 1.0, &mut rng);
+        let got = probe.multiply(&a, &b);
+        got.allclose(&matmul(&a, &b), 1e-9)
+            && (probe.recovery_rate() - 1.0).abs() < 1e-12
+    };
+
+    let strategy = MatmulStrategy::Cluster(ClusterMatmulCfg {
+        coded: sc.coded(arm),
+        backend: backend.clone(),
+        adaptive: if hetero { Some(sc.replan_policy()) } else { None },
+        delay_seed: sc.seed ^ 0xd1f7,
+        drift: Some(sc.drift()),
+    });
+    // identical data, model init, and batch order in every arm
+    let mut rng = Pcg64::with_stream(sc.seed, 40);
+    let train = synthetic_digits(sc.n_train, 11, &mut rng);
+    let test = synthetic_digits(sc.n_test, 13, &mut rng);
+    let mut dims = vec![784];
+    dims.extend_from_slice(&sc.hidden);
+    dims.push(10);
+    let mut mlp = Mlp::new(&dims, &mut rng);
+    let cfg = TrainConfig {
+        lr: sc.lr,
+        epochs: sc.epochs,
+        batch: sc.batch,
+        strategy,
+        tau: TauSchedule::off(dims.len() - 1),
+        seed: sc.seed ^ 0xbeef,
+        eval_every: sc.eval_every,
+        max_iters_per_epoch: sc.max_iters_per_epoch,
+    };
+    let rec = train_mlp(&mut mlp, &train, &test, &cfg);
+    backend.shutdown_inner()?;
+    Ok(ArmResult { rec, full_recovery })
+}
+
+/// Virtual time at the first evaluation point reaching the target loss.
+fn time_to_target(rec: &TrainRecord) -> Option<f64> {
+    rec.points
+        .iter()
+        .find(|p| p.train_loss <= TARGET_LOSS)
+        .map(|p| p.virtual_time)
+}
+
+/// The trajectory as bits, for exact reproducibility comparison.
+fn trajectory_bits(rec: &TrainRecord) -> Vec<(u64, u64, u64)> {
+    rec.points
+        .iter()
+        .map(|p| {
+            (p.train_loss.to_bits(), p.test_acc.to_bits(), p.virtual_time.to_bits())
+        })
+        .collect()
+}
+
+/// Core comparison shared by the CLI experiment and the smoke gate:
+/// all four arms, the hetero arm twice (fresh fleet, bit-identical
+/// trajectory), headline inequalities checked.
+fn compare(sc: &Scenario) -> anyhow::Result<Vec<(Arm, ArmResult)>> {
+    let mut results = Vec::new();
+    for arm in [Arm::Uncoded, Arm::Mds, Arm::Uep, Arm::UepHetero] {
+        results.push((arm, run_arm(sc, arm)?));
+    }
+    let again = run_arm(sc, Arm::UepHetero)?;
+    let hetero = &results.last().expect("four arms").1;
+    anyhow::ensure!(
+        trajectory_bits(&hetero.rec) == trajectory_bits(&again.rec),
+        "hetero arm must be bit-reproducible on a fresh fleet"
+    );
+    for (arm, r) in &results {
+        anyhow::ensure!(
+            r.full_recovery,
+            "{}: generous-deadline preflight did not fully recover",
+            arm.name()
+        );
+    }
+    let tt = |arm: Arm| {
+        results
+            .iter()
+            .find(|(a, _)| *a == arm)
+            .and_then(|(_, r)| time_to_target(&r.rec))
+            .unwrap_or(f64::INFINITY)
+    };
+    let (t_unc, t_uep, t_het) = (tt(Arm::Uncoded), tt(Arm::Uep), tt(Arm::UepHetero));
+    anyhow::ensure!(
+        t_het.is_finite(),
+        "hetero arm never reached train loss {TARGET_LOSS}"
+    );
+    anyhow::ensure!(
+        t_het <= t_unc + 1e-9,
+        "hetero must reach loss {TARGET_LOSS} no later than uncoded: \
+         {t_het:.3} vs {t_unc:.3}"
+    );
+    anyhow::ensure!(
+        t_het <= t_uep + 1e-9,
+        "hetero must reach loss {TARGET_LOSS} no later than plain UEP: \
+         {t_het:.3} vs {t_uep:.3}"
+    );
+    Ok(results)
+}
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let sc = if ctx.full {
+        Scenario {
+            n_train: 3_840,
+            n_test: 800,
+            epochs: 3,
+            max_iters_per_epoch: 0,
+            batch: 64,
+            lr: 0.1,
+            hidden: vec![64, 32],
+            coded_jobs: 12,
+            t_max: 3.0,
+            eval_every: 10,
+            rounds_per_phase: 60,
+            seed: ctx.seed,
+        }
+    } else {
+        Scenario {
+            n_train: 640,
+            n_test: 200,
+            epochs: 2,
+            max_iters_per_epoch: 10,
+            batch: 32,
+            lr: 0.1,
+            hidden: vec![32],
+            coded_jobs: 12,
+            t_max: 3.0,
+            eval_every: 5,
+            rounds_per_phase: 25,
+            seed: ctx.seed,
+        }
+    };
+    println!(
+        "dnn-cluster: {} train / {} test, {} epochs x {} iters, {}-worker \
+         fleet, 3-of-{} slow x{} drifting every {} rounds, T_max={}",
+        sc.n_train,
+        sc.n_test,
+        sc.epochs,
+        if sc.max_iters_per_epoch == 0 {
+            sc.n_train / sc.batch
+        } else {
+            sc.max_iters_per_epoch
+        },
+        FLEET,
+        FLEET,
+        SLOW_FACTOR,
+        sc.rounds_per_phase,
+        sc.t_max,
+    );
+    let results = compare(&sc)?;
+
+    let mut table = CsvTable::new(&[
+        "arm",
+        "epoch",
+        "iter",
+        "train_loss",
+        "test_acc",
+        "virtual_time",
+        "recovery_rate",
+        "full_recovery",
+        "time_to_target",
+    ]);
+    for (arm, r) in &results {
+        let tt = time_to_target(&r.rec);
+        for p in &r.rec.points {
+            table.push_raw(vec![
+                arm.name().to_string(),
+                p.epoch.to_string(),
+                p.iter.to_string(),
+                format!("{:.6}", p.train_loss),
+                format!("{:.4}", p.test_acc),
+                format!("{:.6}", p.virtual_time),
+                format!("{:.4}", r.rec.recovery_rate),
+                r.full_recovery.to_string(),
+                tt.map_or("inf".to_string(), |t| format!("{t:.6}")),
+            ]);
+        }
+    }
+    for (arm, r) in &results {
+        println!(
+            "  {:<11} time-to-loss<={TARGET_LOSS}: {:>9}  final acc {:.3}  \
+             recovery {:.3}  total virtual time {:.1}",
+            arm.name(),
+            time_to_target(&r.rec)
+                .map_or("never".to_string(), |t| format!("{t:.1}")),
+            r.rec.final_test_acc,
+            r.rec.recovery_rate,
+            r.rec.virtual_time,
+        );
+    }
+    ctx.write_csv("dnn_cluster.csv", &table)?;
+    Ok(())
+}

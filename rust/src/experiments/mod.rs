@@ -7,6 +7,7 @@ mod ablation;
 mod adaptive;
 mod chaos;
 mod common;
+mod dnn_cluster;
 mod fig1;
 mod fig10;
 mod fig11;
@@ -69,6 +70,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&ExpContext) -> anyhow:
             "tenants",
             "multi-tenant serve plane: per-tenant served latency (p50/p99) under 3-way concurrency",
             tenants::run,
+        ),
+        (
+            "dnn-cluster",
+            "MLP wall-clock-to-accuracy on a real fleet: uncoded/MDS/UEP/UEP+hetero-assign under drift",
+            dnn_cluster::run,
         ),
     ]
 }

@@ -403,4 +403,88 @@ mod tests {
         assert!((fleet.scale_of(2).unwrap() - 1.5).abs() < 1e-12);
         assert_eq!(fleet.scale_of(3), None);
     }
+
+    /// Feed a hand-crafted sample stream with closed-form moments.
+    fn fit_of(samples: &[f64]) -> LatencyModel {
+        let mut est = LatencyEstimator::new(1.0);
+        for &x in samples {
+            est.observe(x);
+        }
+        est.fit().unwrap()
+    }
+
+    /// Every branch of the family-selection rule, pinned with exact
+    /// parameter values computed by hand from the documented formulas —
+    /// a change to any boundary constant or moment-match formula must
+    /// fail here, not just shift a convergence tolerance.
+    #[test]
+    fn family_rule_branches_pin_exact_parameters() {
+        // cv = 0 -> Deterministic at the mean, exactly.
+        assert_eq!(
+            fit_of(&[2.0, 2.0, 2.0]),
+            LatencyModel::Deterministic { t: 2.0 }
+        );
+
+        // [1, 3]: mean 2, sample var 2, cv² = 0.5 ≤ 1.5, min 1 > 0.4
+        // -> ShiftedExponential { shift = min = 1, λ = 1/(mean−min) = 1 }.
+        match fit_of(&[1.0, 3.0]) {
+            LatencyModel::ShiftedExponential { shift, lambda } => {
+                assert!((shift - 1.0).abs() < 1e-12, "shift {shift}");
+                assert!((lambda - 1.0).abs() < 1e-12, "λ {lambda}");
+            }
+            other => panic!("expected shifted-exp, fitted {other:?}"),
+        }
+
+        // [1, 1, 1, 9]: mean 3, sample var 16, cv² = 16/9 > 1.5,
+        // min 1 > 0.6 -> Pareto with α = 1 + √(1 + 9/16) = 9/4 and
+        // x_min = mean·(α−1)/α = 3·(5/4)/(9/4) = 5/3, both exact.
+        match fit_of(&[1.0, 1.0, 1.0, 9.0]) {
+            LatencyModel::Pareto { x_min, alpha } => {
+                assert!((alpha - 2.25).abs() < 1e-12, "α {alpha}");
+                assert!((x_min - 5.0 / 3.0).abs() < 1e-12, "x_min {x_min}");
+            }
+            other => panic!("expected pareto, fitted {other:?}"),
+        }
+
+        // [0.1, 10]: min = 0.1 ≤ 0.2·mean = 1.01, so the shifted
+        // families are dishonest regardless of cv -> Exponential with
+        // λ = 1/mean = 1/5.05.
+        match fit_of(&[0.1, 10.0]) {
+            LatencyModel::Exponential { lambda } => {
+                assert!((lambda - 1.0 / 5.05).abs() < 1e-12, "λ {lambda}");
+            }
+            other => panic!("expected exponential, fitted {other:?}"),
+        }
+    }
+
+    /// Scale offsets converge to per-worker-mean / fleet-mean even when
+    /// each worker draws from a *different* latency family — the
+    /// planner consumes scales, not families, so mixed fleets must
+    /// still rank correctly.
+    #[test]
+    fn fleet_scales_converge_on_mixed_families() {
+        let mut fleet = FleetEstimator::new(1.0);
+        let mut rng = Pcg64::seed_from(23);
+        let exp = LatencyModel::exp(2.0); // mean 0.5
+        let sexp = LatencyModel::ShiftedExponential { shift: 1.0, lambda: 2.0 }; // mean 1.5
+        let par = LatencyModel::Pareto { x_min: 2.0, alpha: 3.0 }; // mean 3.0
+        for _ in 0..30_000 {
+            fleet.observe(1, exp.sample(&mut rng));
+            fleet.observe(2, sexp.sample(&mut rng));
+            fleet.observe(3, par.sample(&mut rng));
+        }
+        let fleet_mean = (0.5 + 1.5 + 3.0) / 3.0;
+        for (id, true_mean) in [(1u64, 0.5), (2, 1.5), (3, 3.0)] {
+            let s = fleet.scale_of(id).unwrap();
+            let expect = true_mean / fleet_mean;
+            assert!(
+                (s - expect).abs() < 0.12 * expect,
+                "worker {id}: scale {s}, expected ≈{expect}"
+            );
+        }
+        // ranking is what hetero-assign dispatch consumes
+        let scales = fleet.scales();
+        assert_eq!(scales.len(), 3);
+        assert!(scales[0].1 < scales[1].1 && scales[1].1 < scales[2].1);
+    }
 }

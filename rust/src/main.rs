@@ -414,6 +414,12 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 "consecutive missed heartbeats before a worker is evicted",
             )
             .flag("no-verify", "skip Freivalds verification of arriving results")
+            .flag(
+                "hetero",
+                "heterogeneity-aware dispatch: plan slot assignment from \
+                 per-worker scale estimates (service: weighted lane pick + \
+                 DRR credit charging)",
+            )
             .opt(
                 "blocks",
                 "3",
@@ -475,6 +481,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         heartbeat_timeout: Duration::from_secs_f64(heartbeat_secs),
         evict_after,
         verify: !a.get_bool("no-verify"),
+        hetero_assign: a.get_bool("hetero"),
         ..ClusterConfig::default()
     };
     let (backend, expected) = if loopback {
@@ -671,6 +678,7 @@ fn run_service(a: &Args) -> anyhow::Result<()> {
         tenant_quota: a.get("quota")?,
         decode_shards: a.get("decode-shards")?,
         verify: !a.get_bool("no-verify"),
+        hetero_lanes: a.get_bool("hetero"),
         ..ServiceConfig::default()
     };
     anyhow::ensure!(cfg.max_sessions >= 1, "--max-sessions must be >= 1");

@@ -17,7 +17,8 @@
 //! nothing to the product) and the result is cropped back.
 
 use crate::api::{
-    Compute, InProcessBackend, OmegaMode, Request, Session,
+    Backend, Compute, InProcessBackend, OmegaMode, ReplanPolicy, Request,
+    Session, SharedBackend,
 };
 use crate::coding::CodeSpec;
 use crate::latency::LatencyModel;
@@ -30,8 +31,12 @@ use crate::rng::Pcg64;
 pub enum MatmulStrategy {
     /// Centralized, no stragglers (the red reference curve).
     Exact,
-    /// Distributed with coding and a deadline.
+    /// Distributed with coding and a deadline, simulated in process.
     Coded(CodedMatmulCfg),
+    /// Distributed through a real [`crate::api::ClusterBackend`] fleet
+    /// (loopback threads or TCP workers), with coding, a deadline, and
+    /// optionally adaptive replanning + heterogeneity-aware assignment.
+    Cluster(ClusterMatmulCfg),
 }
 
 /// Configuration of one coded multiplication round (Table VII).
@@ -63,6 +68,52 @@ impl CodedMatmulCfg {
     }
 }
 
+/// A deterministic straggle schedule for cluster training runs: every
+/// `rounds_per_phase` cluster rounds the fleet's injected-delay
+/// multipliers advance to the next entry of `phases` (wrapping), via
+/// [`crate::api::Backend::inject_straggle`]. Entries are
+/// `(worker registry id, multiplier)` — loopback fleets number workers
+/// `1..=threads`. An empty `phases` list injects nothing.
+#[derive(Clone, Debug)]
+pub struct StraggleDrift {
+    /// Cluster rounds served per phase before advancing (min 1).
+    pub rounds_per_phase: usize,
+    /// The cycle of per-worker multiplier maps.
+    pub phases: Vec<Vec<(u64, f64)>>,
+}
+
+/// Configuration of the cluster-served training matmul.
+///
+/// One training step multiplies several distinct shapes (forward and
+/// backward per layer); each padded shape gets its own persistent
+/// [`Session`] — so replanner/estimator state accumulates across steps
+/// instead of resetting per call — and all sessions ride the one
+/// [`SharedBackend`] fleet. Injected per-slot delays come from a
+/// dedicated seeded stream (`delay_seed`), so the decode is virtual-time
+/// deterministic regardless of fleet size or wall-clock races.
+#[derive(Clone, Debug)]
+pub struct ClusterMatmulCfg {
+    /// The coding/deadline setup, shared with the in-process path.
+    pub coded: CodedMatmulCfg,
+    /// The shared fleet handle every per-shape session clones.
+    pub backend: SharedBackend,
+    /// Straggle-adaptive replanning (UEP codes only); on the replanner
+    /// cadence the fitted per-worker scales are also pushed down to the
+    /// backend, where [`crate::cluster::ClusterConfig::hetero_assign`]
+    /// plans unequal work from them.
+    pub adaptive: Option<ReplanPolicy>,
+    /// Seed of the injected-delay stream (disjoint from the session
+    /// RNGs).
+    pub delay_seed: u64,
+    /// Optional drifting heterogeneity injected into the fleet.
+    pub drift: Option<StraggleDrift>,
+}
+
+/// Per-shape session cache key: the padded `(m, k, n)` of the operand
+/// pair (a `Vec` keyed by value — a training loop touches a handful of
+/// shapes, and iteration order never affects results).
+type ShapeKey = (usize, usize, usize);
+
 /// Stateful distributed matmul executor (owns the RNG stream so training
 /// runs are reproducible).
 pub struct DistributedMatmul {
@@ -71,11 +122,38 @@ pub struct DistributedMatmul {
     /// Cumulative stats: products attempted / recovered.
     pub total_products: usize,
     pub total_recovered: usize,
+    /// Cumulative *virtual* compute time of cluster rounds: per round,
+    /// the slowest absorbed result's reported delay capped at `T_max`
+    /// (a round that produced nothing in time still waited out the
+    /// deadline). Always 0.0 for the exact and in-process strategies.
+    pub total_virtual_time: f64,
+    /// Persistent per-padded-shape sessions (cluster strategy only).
+    sessions: Vec<(ShapeKey, Session)>,
+    /// Injected-delay stream for cluster rounds.
+    delay_rng: Pcg64,
+    /// Cluster rounds served (drives [`StraggleDrift`] phases).
+    rounds: usize,
+    /// Last drift phase installed on the backend.
+    last_phase: Option<usize>,
 }
 
 impl DistributedMatmul {
     pub fn new(strategy: MatmulStrategy, rng: Pcg64) -> Self {
-        DistributedMatmul { strategy, rng, total_products: 0, total_recovered: 0 }
+        let delay_rng = match &strategy {
+            MatmulStrategy::Cluster(cfg) => Pcg64::seed_from(cfg.delay_seed),
+            _ => Pcg64::seed_from(0),
+        };
+        DistributedMatmul {
+            strategy,
+            rng,
+            total_products: 0,
+            total_recovered: 0,
+            total_virtual_time: 0.0,
+            sessions: Vec::new(),
+            delay_rng,
+            rounds: 0,
+            last_phase: None,
+        }
     }
 
     /// Compute (an approximation of) `A·B`.
@@ -85,6 +163,10 @@ impl DistributedMatmul {
             MatmulStrategy::Coded(cfg) => {
                 let cfg = cfg.clone();
                 self.multiply_coded(a, b, &cfg)
+            }
+            MatmulStrategy::Cluster(cfg) => {
+                let cfg = cfg.clone();
+                self.multiply_cluster(a, b, &cfg)
             }
         }
     }
@@ -101,27 +183,7 @@ impl DistributedMatmul {
     fn multiply_coded(&mut self, a: &Matrix, b: &Matrix, cfg: &CodedMatmulCfg) -> Matrix {
         assert_eq!(a.cols(), b.rows());
         let (orig_m, orig_n) = (a.rows(), b.cols());
-        // --- pad to block-divisible shapes --------------------------------
-        let (a_pad, b_pad, part) = match cfg.paradigm {
-            Paradigm::RowTimesCol => {
-                let nb = cfg.blocks;
-                let m_pad = round_up(a.rows(), nb);
-                let n_pad = round_up(b.cols(), nb);
-                let a_pad = pad_to(a, m_pad, a.cols());
-                let b_pad = pad_to(b, b.rows(), n_pad);
-                let part =
-                    Partitioning::rxc(nb, nb, m_pad / nb, a.cols(), n_pad / nb);
-                (a_pad, b_pad, part)
-            }
-            Paradigm::ColTimesRow => {
-                let mb = cfg.blocks;
-                let k_pad = round_up(a.cols(), mb);
-                let a_pad = pad_to(a, a.rows(), k_pad);
-                let b_pad = pad_to(b, k_pad, b.cols());
-                let part = Partitioning::cxr(mb, a.rows(), k_pad / mb, b.cols());
-                (a_pad, b_pad, part)
-            }
-        };
+        let (a_pad, b_pad, part) = pad_and_partition(a, b, cfg);
         // --- classify, encode, decode, assemble: one API round ------------
         let num_products = part.num_products();
         let mut session = Session::builder()
@@ -148,6 +210,131 @@ impl DistributedMatmul {
         self.total_products += num_products;
         self.total_recovered += report.outcome.recovered;
         report.outcome.c_hat.block(0, 0, orig_m, orig_n)
+    }
+
+    /// One training matmul served by the shared cluster fleet. Virtual
+    /// time accounting: the round costs the slowest absorbed result's
+    /// delay, capped at (and defaulting to) `T_max`.
+    fn multiply_cluster(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        cfg: &ClusterMatmulCfg,
+    ) -> Matrix {
+        assert_eq!(a.cols(), b.rows());
+        let (orig_m, orig_n) = (a.rows(), b.cols());
+        let (a_pad, b_pad, part) = pad_and_partition(a, b, &cfg.coded);
+        let key: ShapeKey = (a_pad.rows(), a_pad.cols(), b_pad.cols());
+        let num_products = part.num_products();
+
+        // drifting heterogeneity: install this round's phase before
+        // dispatch (a no-op between phase boundaries)
+        if let Some(drift) = &cfg.drift {
+            if !drift.phases.is_empty() {
+                let phase = (self.rounds / drift.rounds_per_phase.max(1))
+                    % drift.phases.len();
+                if self.last_phase != Some(phase) {
+                    let mut handle = cfg.backend.clone();
+                    handle
+                        .inject_straggle(&drift.phases[phase])
+                        .expect("straggle injection is infallible locally");
+                    self.last_phase = Some(phase);
+                }
+            }
+        }
+
+        // per-shape persistent session: replanner and estimator state
+        // survive across training steps instead of resetting per call
+        if !self.sessions.iter().any(|(k, _)| *k == key) {
+            let mut builder = Session::builder()
+                .partitioning(part)
+                .code(cfg.coded.spec.clone())
+                .auto_classes(cfg.coded.s_levels)
+                .workers(cfg.coded.workers)
+                .latency(cfg.coded.latency.clone())
+                .omega(if cfg.coded.auto_omega {
+                    OmegaMode::Auto
+                } else {
+                    OmegaMode::Fixed(1.0)
+                })
+                .deadline(cfg.coded.t_max)
+                .cache_capacity(0)
+                .seed(self.rng.next_u64())
+                .backend(cfg.backend.clone());
+            if let Some(policy) = cfg.adaptive.clone() {
+                builder = builder.adaptive(policy);
+            }
+            let session = builder
+                .build()
+                .expect("cluster-matmul session config is validated by construction");
+            self.sessions.push((key, session));
+        }
+
+        // injected per-slot delays from the dedicated stream: the decode
+        // is virtual-time deterministic, and the server's per-worker
+        // injection multipliers are what make workers actually unequal
+        let omega = if cfg.coded.auto_omega {
+            num_products as f64 / cfg.coded.workers as f64
+        } else {
+            1.0
+        };
+        let base: Vec<f64> = (0..cfg.coded.workers)
+            .map(|_| cfg.coded.latency.sample_scaled(omega, &mut self.delay_rng))
+            .collect();
+
+        let session = self
+            .sessions
+            .iter_mut()
+            .find(|(k, _)| *k == key)
+            .map(|(_, s)| s)
+            .expect("session inserted above");
+        let report = session
+            .run(Request::new(0, a_pad, b_pad).delays(base))
+            .expect("cluster round failed (fleet unreachable or all workers dead)");
+
+        self.rounds += 1;
+        self.total_products += num_products;
+        self.total_recovered += report.outcome.recovered;
+        let slowest = report
+            .timings
+            .iter()
+            .map(|t| t.delay)
+            .fold(f64::NEG_INFINITY, f64::max);
+        self.total_virtual_time += if slowest.is_finite() {
+            slowest.min(cfg.coded.t_max)
+        } else {
+            cfg.coded.t_max
+        };
+        report.outcome.c_hat.block(0, 0, orig_m, orig_n)
+    }
+}
+
+/// Zero-pad the operands up to block-divisible shapes and build the
+/// matching partitioning (zero rows/columns contribute nothing to the
+/// product; the caller crops the result back).
+fn pad_and_partition(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &CodedMatmulCfg,
+) -> (Matrix, Matrix, Partitioning) {
+    match cfg.paradigm {
+        Paradigm::RowTimesCol => {
+            let nb = cfg.blocks;
+            let m_pad = round_up(a.rows(), nb);
+            let n_pad = round_up(b.cols(), nb);
+            let a_pad = pad_to(a, m_pad, a.cols());
+            let b_pad = pad_to(b, b.rows(), n_pad);
+            let part = Partitioning::rxc(nb, nb, m_pad / nb, a.cols(), n_pad / nb);
+            (a_pad, b_pad, part)
+        }
+        Paradigm::ColTimesRow => {
+            let mb = cfg.blocks;
+            let k_pad = round_up(a.cols(), mb);
+            let a_pad = pad_to(a, a.rows(), k_pad);
+            let b_pad = pad_to(b, k_pad, b.cols());
+            let part = Partitioning::cxr(mb, a.rows(), k_pad / mb, b.cols());
+            (a_pad, b_pad, part)
+        }
     }
 }
 

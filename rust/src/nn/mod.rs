@@ -21,7 +21,10 @@ mod train;
 pub use cnn::{Cnn, CnnArch};
 pub use conv::{col2im, im2col, Conv2D, ImageBatch, MaxPool2D};
 pub use dense::{relu, relu_backward, Dense};
-pub use distributed::{CodedMatmulCfg, DistributedMatmul, MatmulStrategy};
+pub use distributed::{
+    ClusterMatmulCfg, CodedMatmulCfg, DistributedMatmul, MatmulStrategy,
+    StraggleDrift,
+};
 pub use loss::{accuracy, softmax_xent};
 pub use mlp::{Mlp, MlpGrads};
 pub use sparsify::{sparsify, sparsity_of, TauSchedule};

@@ -49,6 +49,10 @@ pub struct EpochPoint {
     pub iter: usize,
     pub train_loss: f64,
     pub test_acc: f64,
+    /// Cumulative virtual compute time when this point was taken
+    /// (cluster strategy; 0.0 elsewhere). The x-axis of
+    /// wall-clock-to-accuracy comparisons.
+    pub virtual_time: f64,
 }
 
 /// Full record of a training run.
@@ -58,6 +62,9 @@ pub struct TrainRecord {
     pub final_test_acc: f64,
     /// Fraction of distributed sub-products recovered across the run.
     pub recovery_rate: f64,
+    /// Total virtual compute time of the run (cluster strategy; 0.0
+    /// elsewhere).
+    pub virtual_time: f64,
 }
 
 /// Train an MLP on a dataset under the given straggler strategy.
@@ -97,6 +104,7 @@ pub fn train_mlp(
                     iter,
                     train_loss: running_loss / since_eval as f64,
                     test_acc: acc,
+                    virtual_time: engine.total_virtual_time,
                 });
                 running_loss = 0.0;
                 since_eval = 0;
@@ -108,6 +116,7 @@ pub fn train_mlp(
         points,
         final_test_acc: final_acc,
         recovery_rate: engine.recovery_rate(),
+        virtual_time: engine.total_virtual_time,
     }
 }
 

@@ -1,0 +1,172 @@
+//! Property tests of the heterogeneity-aware work planner
+//! (`coordinator::Assignment`) — the invariants `ClusterConfig::
+//! hetero_assign` dispatch relies on, checked over randomized fleets
+//! and window maps:
+//!
+//! * **work conservation** — every slot is planned exactly once, and
+//!   per-worker counts sum to the slot count;
+//! * **monotonicity** — a strictly slower worker never receives more
+//!   slots than a faster one;
+//! * **degenerate fleets** — all-equal scales reproduce least-
+//!   outstanding round-robin exactly; a single usable survivor takes
+//!   everything;
+//! * **determinism** — bit-identical plans across reruns and across
+//!   concurrent planning threads.
+
+use std::collections::BTreeMap;
+
+use uepmm::coordinator::Assignment;
+use uepmm::rng::Pcg64;
+
+/// A randomized fleet: ids are sparse and unsorted, scales span two
+/// orders of magnitude.
+fn random_fleet(rng: &mut Pcg64, n: usize) -> Vec<(u64, f64)> {
+    let mut fleet: Vec<(u64, f64)> = (0..n)
+        .map(|i| {
+            let id = 1 + (rng.next_u64() % 50) + 50 * i as u64;
+            let scale = 0.1 * (1.0 + (rng.next_u64() % 200) as f64);
+            (id, scale)
+        })
+        .collect();
+    // shuffle so the planner cannot rely on caller ordering
+    for i in (1..fleet.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        fleet.swap(i, j);
+    }
+    fleet
+}
+
+fn random_windows(rng: &mut Pcg64, slots: usize, classes: usize) -> Vec<usize> {
+    (0..slots).map(|_| (rng.next_u64() % classes as u64) as usize).collect()
+}
+
+#[test]
+fn every_slot_planned_exactly_once() {
+    let mut rng = Pcg64::seed_from(11);
+    for case in 0..50 {
+        let slots = 1 + (rng.next_u64() % 40) as usize;
+        let fleet = random_fleet(&mut rng, 1 + (rng.next_u64() % 8) as usize);
+        let windows = random_windows(&mut rng, slots, 3);
+        let a = Assignment::plan(&windows, &fleet)
+            .unwrap_or_else(|| panic!("case {case}: usable fleet rejected"));
+        assert_eq!(a.len(), slots);
+        // dispatch order covers each slot once
+        let mut seen = vec![false; slots];
+        for &(slot, worker) in a.dispatch_order() {
+            assert!(!seen[slot as usize], "case {case}: slot {slot} twice");
+            seen[slot as usize] = true;
+            // per-slot lookup agrees with the dispatch pairing
+            assert_eq!(a.worker_of(slot as usize), worker, "case {case}");
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: slot unplanned");
+        // counts are consistent with the dispatch list
+        let mut tally: BTreeMap<u64, usize> = BTreeMap::new();
+        for &(_, w) in a.dispatch_order() {
+            *tally.entry(w).or_insert(0) += 1;
+        }
+        assert_eq!(a.counts().values().sum::<usize>(), slots, "case {case}");
+        for (id, n) in a.counts() {
+            assert_eq!(tally.get(id).copied().unwrap_or(0), *n, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn slower_workers_never_get_more_work() {
+    let mut rng = Pcg64::seed_from(13);
+    for case in 0..50 {
+        let slots = 1 + (rng.next_u64() % 60) as usize;
+        let fleet = random_fleet(&mut rng, 2 + (rng.next_u64() % 7) as usize);
+        let windows = random_windows(&mut rng, slots, 4);
+        let a = Assignment::plan(&windows, &fleet).unwrap();
+        for &(i, si) in &fleet {
+            for &(j, sj) in &fleet {
+                if si < sj {
+                    assert!(
+                        a.counts()[&i] >= a.counts()[&j],
+                        "case {case}: worker {i} (scale {si}) got \
+                         {} slots, strictly slower {j} (scale {sj}) got {}",
+                        a.counts()[&i],
+                        a.counts()[&j],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Least-outstanding dispatch simulated over an id-ordered fleet: each
+/// slot (in dispatch order) to the worker with the fewest assigned
+/// jobs, ties to the lower id — what `ClusterServer` does without a
+/// plan, minus failover.
+fn least_outstanding(ids: &[u64], slots: usize) -> Vec<u64> {
+    let mut sorted = ids.to_vec();
+    sorted.sort_unstable();
+    let mut load = vec![0usize; sorted.len()];
+    (0..slots)
+        .map(|_| {
+            let best = (0..sorted.len())
+                .min_by_key(|&w| (load[w], sorted[w]))
+                .unwrap();
+            load[best] += 1;
+            sorted[best]
+        })
+        .collect()
+}
+
+#[test]
+fn equal_scales_match_least_outstanding_dispatch() {
+    let mut rng = Pcg64::seed_from(17);
+    for case in 0..30 {
+        let slots = 1 + (rng.next_u64() % 40) as usize;
+        let n = 1 + (rng.next_u64() % 8) as usize;
+        let mut fleet = random_fleet(&mut rng, n);
+        for f in fleet.iter_mut() {
+            f.1 = 1.0;
+        }
+        let windows = random_windows(&mut rng, slots, 3);
+        let a = Assignment::plan(&windows, &fleet).unwrap();
+        let ids: Vec<u64> = fleet.iter().map(|&(id, _)| id).collect();
+        let expect = least_outstanding(&ids, slots);
+        let got: Vec<u64> = a.dispatch_order().iter().map(|&(_, w)| w).collect();
+        assert_eq!(got, expect, "case {case}: homogeneous plan must be \
+                    least-outstanding round-robin");
+    }
+}
+
+#[test]
+fn single_survivor_takes_everything() {
+    let windows = [2usize, 0, 1, 1, 0, 2];
+    // every other worker has an unusable scale
+    let fleet = [(9, f64::NAN), (4, 1.7), (2, 0.0), (8, -3.0), (1, f64::INFINITY)];
+    let a = Assignment::plan(&windows, &fleet).unwrap();
+    assert_eq!(a.counts()[&4], windows.len());
+    assert!(a.dispatch_order().iter().all(|&(_, w)| w == 4));
+    // nothing usable at all -> no plan (caller falls back)
+    assert!(Assignment::plan(&windows, &[(9, f64::NAN), (2, 0.0)]).is_none());
+}
+
+#[test]
+fn plans_are_bit_identical_across_reruns_and_threads() {
+    let mut rng = Pcg64::seed_from(19);
+    let fleet = random_fleet(&mut rng, 6);
+    let windows = random_windows(&mut rng, 33, 3);
+    let reference = Assignment::plan(&windows, &fleet).unwrap();
+    // rerun in-thread
+    for _ in 0..3 {
+        assert_eq!(Assignment::plan(&windows, &fleet).unwrap(), reference);
+    }
+    // rerun concurrently: planning is pure, so parallelism cannot
+    // perturb the plan
+    for threads in [2usize, 4] {
+        let plans: Vec<Assignment> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| s.spawn(|| Assignment::plan(&windows, &fleet).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in plans {
+            assert_eq!(p, reference, "threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Golden-trace pin of the DNN-on-cluster headline scenario: a tiny
+//! fixed-seed MLP trained with every matmul served by a loopback
+//! [`ClusterBackend`] fleet under UEP coding and a virtual deadline.
+//!
+//! What is asserted, in order of strength:
+//!
+//! * **structural invariants** — every evaluation point has a finite
+//!   loss, virtual time is strictly positive and non-decreasing, and
+//!   the record's total virtual time bit-matches the last point's;
+//! * **bit-identity** — the per-point `(train_loss, test_acc,
+//!   virtual_time)` trace is bit-identical across reruns, across 2- vs
+//!   4-thread fleets (injected per-slot delays, not wall clock, decide
+//!   the decode), and with `hetero_assign` toggled on a homogeneous
+//!   fleet (the plan may route slots to different workers, but with no
+//!   injected multipliers every slot's delay — and therefore the
+//!   decoded result — is unchanged);
+//! * **golden fixture** — when `tests/golden/dnn_trace.txt` holds real
+//!   bit patterns the trace must match them exactly; while the fixture
+//!   is the `UNPINNED` sentinel the test prints the computed trace in
+//!   fixture format for a maintainer to paste after one verified run.
+
+use uepmm::api::{ClusterBackend, SharedBackend};
+use uepmm::cluster::{ClusterConfig, DeadlineMode, WorkerConfig};
+use uepmm::coding::{CodeKind, CodeSpec, EncodeStyle, WindowPolynomial};
+use uepmm::data::synthetic_digits;
+use uepmm::latency::LatencyModel;
+use uepmm::nn::{
+    train_mlp, ClusterMatmulCfg, CodedMatmulCfg, MatmulStrategy, Mlp,
+    TauSchedule, TrainConfig, TrainRecord,
+};
+use uepmm::partition::Paradigm;
+use uepmm::rng::Pcg64;
+
+const FIXTURE: &str = include_str!("golden/dnn_trace.txt");
+
+/// One evaluation point of the trace, fully bit-resolved.
+type TracePoint = (usize, usize, u64, u64, u64);
+
+fn trace_of(rec: &TrainRecord) -> Vec<TracePoint> {
+    rec.points
+        .iter()
+        .map(|p| {
+            (
+                p.epoch,
+                p.iter,
+                p.train_loss.to_bits(),
+                p.test_acc.to_bits(),
+                p.virtual_time.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// `None` while the fixture is the `UNPINNED` sentinel.
+fn parse_fixture() -> Option<Vec<TracePoint>> {
+    let lines: Vec<&str> = FIXTURE
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect();
+    if lines.first() == Some(&"UNPINNED") {
+        return None;
+    }
+    Some(
+        lines
+            .iter()
+            .map(|l| {
+                let f: Vec<&str> = l.split_whitespace().collect();
+                assert_eq!(f.len(), 5, "malformed fixture line: {l}");
+                (
+                    f[0].parse().expect("epoch"),
+                    f[1].parse().expect("iter"),
+                    u64::from_str_radix(f[2], 16).expect("loss bits"),
+                    u64::from_str_radix(f[3], 16).expect("acc bits"),
+                    u64::from_str_radix(f[4], 16).expect("vt bits"),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Train the scenario MLP on a fresh loopback fleet and return the
+/// record. Everything downstream of the two fixed seeds (model/data and
+/// injected delays) is deterministic in virtual time.
+fn run_trace(threads: usize, hetero: bool) -> TrainRecord {
+    let backend = SharedBackend::new(
+        ClusterBackend::loopback(
+            threads,
+            ClusterConfig {
+                deadline: DeadlineMode::Virtual,
+                time_scale: 0.0,
+                cache_capacity: 0,
+                hetero_assign: hetero,
+                ..ClusterConfig::default()
+            },
+            WorkerConfig::default(),
+            std::time::Duration::from_secs(30),
+        )
+        .expect("loopback fleet comes up"),
+    );
+    let strategy = MatmulStrategy::Cluster(ClusterMatmulCfg {
+        coded: CodedMatmulCfg {
+            paradigm: Paradigm::RowTimesCol,
+            blocks: 3,
+            spec: CodeSpec::new(
+                CodeKind::EwUep(WindowPolynomial::paper_table3()),
+                EncodeStyle::Stacked,
+            ),
+            workers: 12,
+            latency: LatencyModel::exp(0.5),
+            auto_omega: true,
+            // tight enough that some rounds lose low-priority windows —
+            // the UEP decode path, not just full recovery, is pinned
+            t_max: 3.0,
+            s_levels: 3,
+        },
+        backend: backend.clone(),
+        adaptive: None,
+        delay_seed: 0xded1_5eed,
+        drift: None,
+    });
+    let mut rng = Pcg64::seed_from(41);
+    let train = synthetic_digits(96, 11, &mut rng);
+    let test = synthetic_digits(48, 13, &mut rng);
+    let mut mlp = Mlp::new(&[784, 16, 10], &mut rng);
+    let cfg = TrainConfig {
+        lr: 0.05,
+        epochs: 1,
+        batch: 32,
+        strategy,
+        tau: TauSchedule::off(2),
+        seed: 97,
+        eval_every: 1,
+        max_iters_per_epoch: 3,
+    };
+    let rec = train_mlp(&mut mlp, &train, &test, &cfg);
+    backend.shutdown_inner().expect("loopback fleet shuts down");
+    rec
+}
+
+#[test]
+fn dnn_cluster_trace_is_golden() {
+    let reference = run_trace(2, false);
+
+    // -- structural invariants ------------------------------------------
+    assert!(!reference.points.is_empty(), "no evaluation points");
+    let mut prev_vt = 0.0;
+    for p in &reference.points {
+        assert!(p.train_loss.is_finite(), "non-finite loss at iter {}", p.iter);
+        assert!(
+            p.virtual_time > 0.0 && p.virtual_time >= prev_vt,
+            "virtual time not monotone at iter {}: {} after {prev_vt}",
+            p.iter,
+            p.virtual_time,
+        );
+        prev_vt = p.virtual_time;
+    }
+    assert_eq!(
+        reference.virtual_time.to_bits(),
+        reference.points.last().unwrap().virtual_time.to_bits(),
+        "record total must bit-match the last point"
+    );
+    assert!(
+        reference.recovery_rate > 0.0 && reference.recovery_rate <= 1.0,
+        "recovery rate {} out of range",
+        reference.recovery_rate
+    );
+
+    // -- bit-identity across reruns, fleet sizes, hetero toggle ---------
+    let ref_trace = trace_of(&reference);
+    for (threads, hetero) in [(2usize, false), (4, false), (2, true)] {
+        let other = run_trace(threads, hetero);
+        assert_eq!(
+            trace_of(&other),
+            ref_trace,
+            "trace diverged at threads={threads} hetero={hetero}"
+        );
+        assert_eq!(
+            other.recovery_rate.to_bits(),
+            reference.recovery_rate.to_bits(),
+            "recovery rate diverged at threads={threads} hetero={hetero}"
+        );
+    }
+
+    // -- golden fixture -------------------------------------------------
+    match parse_fixture() {
+        Some(golden) => assert_eq!(
+            ref_trace, golden,
+            "trace no longer matches tests/golden/dnn_trace.txt — if the \
+             change is intentional, re-pin from the printout of an \
+             UNPINNED run"
+        ),
+        None => {
+            println!(
+                "fixture is UNPINNED; paste the following into \
+                 rust/tests/golden/dnn_trace.txt to pin:"
+            );
+            for (epoch, iter, loss, acc, vt) in &ref_trace {
+                println!("{epoch} {iter} {loss:016x} {acc:016x} {vt:016x}");
+            }
+        }
+    }
+}
